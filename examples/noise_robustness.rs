@@ -1,0 +1,56 @@
+//! Noise-robustness sweep (Mønster et al. 2017 studied CCM under noise —
+//! the paper cites it as the motivation for needing many subsamples r).
+//!
+//! ```sh
+//! cargo run --release --example noise_robustness
+//! ```
+//!
+//! Adds increasing observation noise to the coupled-logistic pair and
+//! tracks how the convergent cross-map signal degrades, using the full
+//! A5 pipeline per noise level.
+
+use std::sync::Arc;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::ccm::convergence::assess;
+use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::params::Scenario;
+use parccm::ccm::result::summarize;
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::timeseries::noise::add_gaussian;
+
+fn main() {
+    let (x0, y0) = coupled_logistic(900, CoupledLogisticParams::default());
+    let scenario = Scenario {
+        series_len: 900,
+        r: 16,
+        ls: vec![80, 300, 700],
+        es: vec![2],
+        taus: vec![1],
+        theiler: 0,
+        seed: 77,
+        partitions: 8,
+    };
+    let backend = Arc::new(NativeBackend);
+
+    let mut table = TablePrinter::new("CCM signal vs observation noise (X -> Y)");
+    for (i, sigma) in [0.0, 0.05, 0.1, 0.2, 0.4, 0.8].iter().enumerate() {
+        let x = add_gaussian(&x0, *sigma, 100 + i as u64);
+        let y = add_gaussian(&y0, *sigma, 200 + i as u64);
+        let rep = run_case(Case::A5, &scenario, &y, &x, Deploy::paper_cluster(), backend.clone());
+        let summaries = summarize(&rep.skills);
+        let v = assess(&summaries, 0.1, 0.02);
+        table.push(
+            Row::new(format!("sigma={sigma}"))
+                .cell("rho_Lmin", v.rho_min_l)
+                .cell("rho_Lmax", v.rho_max_l)
+                .cell("delta", v.delta)
+                .cell("causal", if v.causal { 1.0 } else { 0.0 }),
+        );
+    }
+    table.print();
+    let _ = table.save("results/noise_robustness.json");
+    println!("\n(skill and convergence degrade smoothly with noise; the causal\n verdict should survive moderate noise and die at extreme noise)");
+}

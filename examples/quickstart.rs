@@ -1,0 +1,63 @@
+//! Quickstart: detect causality in a coupled system in ~20 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates Sugihara's coupled logistic maps (X drives Y), runs the fully
+//! parallel CCM (Case A5: distance indexing table + asynchronous
+//! pipelines) across a library-size sweep, and prints the convergence
+//! diagnostics for both directions.
+
+use std::sync::Arc;
+
+use parccm::ccm::convergence::assess;
+use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::params::Scenario;
+use parccm::ccm::result::summarize;
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+
+fn main() {
+    // X -> Y coupling is strong (byx = 0.1), Y -> X is weak (bxy = 0.02).
+    let (x, y) = coupled_logistic(1000, CoupledLogisticParams::default());
+
+    let scenario = Scenario {
+        series_len: 1000,
+        r: 25,
+        ls: vec![100, 200, 400, 800],
+        es: vec![2],
+        taus: vec![1],
+        theiler: 0,
+        seed: 42,
+        partitions: 8,
+    };
+    let backend = Arc::new(NativeBackend);
+
+    println!("CCM on coupled logistic maps (n = 1000, r = 25)\n");
+    for (effect, cause, label) in [(&y, &x, "X -> Y"), (&x, &y, "Y -> X")] {
+        let rep = run_case(
+            Case::A5,
+            &scenario,
+            effect,
+            cause,
+            Deploy::paper_cluster(),
+            backend.clone(),
+        );
+        let summaries = summarize(&rep.skills);
+        println!("direction {label}:   (cross-map skill rho vs library size L)");
+        for s in &summaries {
+            let bar = "#".repeat((s.mean_rho.max(0.0) * 40.0) as usize);
+            println!("  L={:<5} rho={:+.4} ± {:.4}  {bar}", s.params.l, s.mean_rho, s.std_rho);
+        }
+        let v = assess(&summaries, 0.1, 0.02);
+        println!(
+            "  convergence: delta={:+.4} increasing={} => {}\n",
+            v.delta,
+            v.increasing,
+            if v.causal { "CAUSAL" } else { "not causal" }
+        );
+    }
+    println!("(strong convergent skill for X -> Y, weaker for Y -> X — Sugihara et al. 2012)");
+}

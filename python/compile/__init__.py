@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 jax graphs + L1 pallas kernels + AOT.
+
+Nothing in here runs at serving/coordination time — ``make artifacts``
+lowers the graphs to HLO text once, and the Rust binary is self-contained
+afterwards.
+"""

@@ -1,0 +1,127 @@
+"""AOT: lower the L2 graphs to HLO *text* + write artifacts/manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects; the HLO text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import BIG, EMAX, KMAX
+
+# Point-count buckets. Rust pads any (E, tau, L) workload up to the nearest
+# bucket; masks keep padding out of the numerics. The set is small to bound
+# PJRT compile time at coordinator startup.
+#
+# Cross-map buckets are RECTANGULAR (n = library rows, p = prediction rows):
+# CCM libraries (L) are typically much smaller than the prediction set (the
+# whole manifold), and a square bucket would pad the library to the manifold
+# size — 8x wasted distance work at the paper's L=500/n=4000 cell. See
+# EXPERIMENTS.md §Perf.
+CCM_BUCKETS = [
+    (256, 256),
+    (512, 512),
+    (256, 1024), (512, 1024), (1024, 1024),
+    (512, 2048), (1024, 2048), (2048, 2048),
+    (512, 4096), (1024, 4096), (2048, 4096), (4096, 4096),
+]
+DIST_BUCKETS = [256, 512, 1024, 2048, 4096]
+SIMPLEX_BUCKETS = [256, 512, 1024, 2048, 4096]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_cross_map(n, p):
+    """cross_map graph for a library bucket of n points, p prediction points.
+
+    Input order (the Rust manifest relies on this exact order):
+      0 lib[n,EMAX] 1 pred[p,EMAX] 2 lib_valid[n] 3 lib_targets[n]
+      4 pred_targets[p] 5 pred_valid[p] 6 lib_idx[n] 7 pred_idx[p]
+      8 k_mask[KMAX] 9 theiler[]            ->  (rho[], preds[p])
+    """
+    return jax.jit(model.cross_map).lower(
+        _spec(n, EMAX), _spec(p, EMAX), _spec(n), _spec(n),
+        _spec(p), _spec(p), _spec(n), _spec(p), _spec(KMAX), _spec(),
+    )
+
+
+def lower_simplex(p):
+    """simplex_tail graph. Input order:
+      0 dvals[p,KMAX] 1 tvals[p,KMAX] 2 pred_targets[p] 3 pred_valid[p]
+      4 k_mask[KMAX]                         ->  (rho[], preds[p])
+    """
+    return jax.jit(model.simplex_tail).lower(
+        _spec(p, KMAX), _spec(p, KMAX), _spec(p), _spec(p), _spec(KMAX),
+    )
+
+
+def lower_distances(p, n):
+    """distance graph. Inputs: 0 pred[p,EMAX] 1 lib[n,EMAX] -> (d[p,n],)."""
+    return jax.jit(model.distances).lower(_spec(p, EMAX), _spec(n, EMAX))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the 256 bucket (fast CI of the AOT path)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    ccm_buckets = [(256, 256)] if args.quick else CCM_BUCKETS
+    dist_buckets = [256] if args.quick else DIST_BUCKETS
+    simplex_buckets = [256] if args.quick else SIMPLEX_BUCKETS
+
+    artifacts = []
+
+    def emit(name, lowered, kind, **meta):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        artifacts.append({"name": name, "kind": kind, "file": fname, **meta})
+        print(f"  wrote {fname}  ({len(text)} chars)")
+
+    for (n, p) in ccm_buckets:
+        emit(f"ccm_n{n}_p{p}", lower_cross_map(n, p), "cross_map", n=n, p=p)
+    for n in dist_buckets:
+        emit(f"dist_n{n}", lower_distances(n, n), "distance", n=n, p=n)
+    for p in simplex_buckets:
+        emit(f"simplex_n{p}", lower_simplex(p), "simplex", n=p, p=p)
+
+    manifest = {
+        "emax": EMAX,
+        "kmax": KMAX,
+        "big": BIG,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(artifacts)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for the CCM hot path.
+
+All kernels are written TPU-shaped (MXU-friendly matmul distance expansion,
+VMEM-sized blocks expressed via BlockSpec) but lowered with interpret=True so
+the resulting HLO runs on any PJRT backend, including the Rust CPU client.
+
+Conventions shared by every kernel and by the Rust runtime:
+
+* ``EMAX = 8``   — embedding vectors are zero-padded to 8 lanes. Padding both
+  operands with zeros leaves squared distances exactly unchanged.
+* ``KMAX = 11``  — top-k always extracts 11 neighbours (E+1 <= 11 for
+  E <= 10); the simplex stage applies a ``k_mask`` so one artifact serves
+  every embedding dimension.
+* ``BIG = 1e30`` — additive mask for invalid / excluded library rows.
+"""
+
+EMAX = 8
+KMAX = 11
+BIG = 1e30

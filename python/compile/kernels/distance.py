@@ -1,0 +1,64 @@
+"""Pallas kernel: blocked pairwise squared-distance matrix.
+
+The paper's hot spot is "compute the distances from every prediction point
+to all lagged-coordinate vectors". BlockSpec expresses the HBM->VMEM
+schedule: each grid step owns a (bp x bn) output tile and streams the two
+operand slabs.
+
+Form choice (numerics over MXU): the classic accelerator trick is the
+matmul expansion ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b, which maps on the
+MXU systolic array — but it catastrophically cancels for *near* neighbours
+(exactly the ones CCM ranks), perturbing neighbour order versus an exact
+evaluation. At CCM's EMAX = 8 the direct form sum_l (a_l - b_l)^2 costs the
+same 2*P*N*EMAX FLOPs as the contraction, runs on the VPU with an
+unrolled 8-lane accumulation, and keeps neighbour ordering bit-stable with
+the Rust native backend. DESIGN.md §Hardware-Adaptation discusses the
+trade-off (for EMAX >> 8 one would tile the expansion with f32 compensated
+accumulation instead).
+
+VMEM budget per block (f32): bp*EMAX + bn*EMAX + bp*bn floats;
+at bp = bn = 128, EMAX = 8 that is ~70 KiB — far under the ~16 MiB VMEM of
+a TPU core, leaving room for double buffering (see DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import EMAX
+
+
+def _dist_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]                       # [bp, EMAX]
+    y = y_ref[...]                       # [bn, EMAX]
+    bp, bn = x.shape[0], y.shape[0]
+    acc = jnp.zeros((bp, bn), jnp.float32)
+    for l in range(EMAX):                # static unroll, 8 lanes
+        diff = x[:, l][:, None] - y[:, l][None, :]
+        acc = acc + diff * diff
+    o_ref[...] = acc
+
+
+def sq_distances(pred, lib, block_p=128, block_n=128):
+    """[P, EMAX] x [N, EMAX] -> squared distances [P, N].
+
+    P and N must be multiples of the block sizes (the AOT buckets are);
+    callers with smaller test shapes pass smaller blocks.
+    """
+    p, e = pred.shape
+    n, e2 = lib.shape
+    assert e == EMAX and e2 == EMAX, f"embedding dim must be padded to {EMAX}"
+    bp = min(block_p, p)
+    bn = min(block_n, n)
+    assert p % bp == 0 and n % bn == 0, (p, n, bp, bn)
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=(p // bp, n // bn),
+        in_specs=[
+            pl.BlockSpec((bp, EMAX), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, EMAX), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.float32),
+        interpret=True,
+    )(pred, lib)

@@ -1,0 +1,43 @@
+"""Pallas kernel: masked Pearson correlation (prediction skill).
+
+Single-block reduction: the whole [1, P] vectors live in VMEM (P <= 4096
+-> 16 KiB each). Computes the five masked moments and the correlation in
+one pass; degenerate (zero-variance) inputs return 0 like rEDM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pearson_kernel(x_ref, y_ref, v_ref, o_ref):
+    x = x_ref[...]                        # [1, P]
+    y = y_ref[...]
+    v = v_ref[...]
+    n = jnp.maximum(jnp.sum(v), 1.0)
+    mx = jnp.sum(x * v) / n
+    my = jnp.sum(y * v) / n
+    dx = (x - mx) * v
+    dy = (y - my) * v
+    cov = jnp.sum(dx * dy)
+    vx = jnp.sum(dx * dx)
+    vy = jnp.sum(dy * dy)
+    denom = jnp.sqrt(vx * vy)
+    o_ref[0, 0] = jnp.where(denom > 0.0, cov / denom, 0.0)
+
+
+def pearson(x, y, valid):
+    """Masked Pearson correlation of two [P] vectors -> scalar."""
+    p = x.shape[0]
+    out = pl.pallas_call(
+        _pearson_kernel,
+        in_specs=[
+            pl.BlockSpec((1, p), lambda: (0, 0)),
+            pl.BlockSpec((1, p), lambda: (0, 0)),
+            pl.BlockSpec((1, p), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x.reshape(1, p), y.reshape(1, p), valid.reshape(1, p))
+    return out[0, 0]

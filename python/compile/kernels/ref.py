@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for every Pallas kernel and for the composed cross-map.
+
+This module is the correctness contract: pytest checks each Pallas kernel
+against the function of the same name here, and the Rust native backend is
+cross-checked against the AOT artifacts produced from the Pallas path.
+No pallas imports here — plain jax.numpy only.
+"""
+
+import jax.numpy as jnp
+
+from . import BIG, KMAX
+
+
+def sq_distances(pred, lib):
+    """Squared euclidean distances, [P, E] x [N, E] -> [P, N].
+
+    Direct difference form (sum over lanes of (a-b)^2), matching the Pallas
+    kernel and the Rust native backend exactly — see distance.py for why
+    the matmul expansion is *not* used (cancellation perturbs neighbour
+    order for near pairs).
+    """
+    diff = pred[:, None, :] - lib[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def mask_distances(d, lib_valid, lib_idx, pred_idx, theiler):
+    """Apply validity + Theiler-window exclusion masks to a distance matrix.
+
+    * rows of ``lib`` with ``lib_valid == 0`` (bucket padding) are pushed to
+      +BIG so they are never selected as neighbours;
+    * library points within ``theiler`` time steps of the prediction point
+      are excluded — ``theiler == 0`` excludes exactly the self-match, the
+      standard CCM leave-one-out.
+    """
+    d = d + BIG * (1.0 - lib_valid)[None, :]
+    close = (jnp.abs(pred_idx[:, None] - lib_idx[None, :]) <= theiler).astype(d.dtype)
+    return d + BIG * close
+
+
+def topk_neighbors(d, lib_targets, k=KMAX):
+    """k smallest entries per row of ``d`` plus the library targets gathered
+    at those positions. Returns (dvals [P,k], tvals [P,k]) in ascending
+    distance order. Ties broken by lowest index (matches the kernel's
+    argmin semantics)."""
+    dvals = []
+    tvals = []
+    work = d
+    n = d.shape[1]
+    iota = jnp.arange(n)
+    for _ in range(k):
+        am = jnp.argmin(work, axis=1)
+        m = jnp.take_along_axis(work, am[:, None], axis=1)[:, 0]
+        dvals.append(m)
+        tvals.append(lib_targets[am])
+        onehot = (iota[None, :] == am[:, None]).astype(work.dtype)
+        work = work + onehot * BIG
+    return jnp.stack(dvals, axis=1), jnp.stack(tvals, axis=1)
+
+
+def simplex_predict(dvals, tvals, k_mask):
+    """Simplex-projection prediction from k nearest neighbours.
+
+    Weights follow Sugihara simplex / rEDM: w_j = exp(-d_j / d_1) over
+    *euclidean* (not squared) distances, floored at 1e-6, restricted to the
+    first E+1 neighbours by ``k_mask``.
+    """
+    d = jnp.sqrt(jnp.maximum(dvals, 0.0))
+    d1 = jnp.maximum(d[:, 0:1], 1e-30)
+    w = jnp.exp(-d / d1)
+    w = jnp.maximum(w, 1e-6) * k_mask[None, :]
+    return jnp.sum(w * tvals, axis=1) / jnp.sum(w, axis=1)
+
+
+def pearson(x, y, valid):
+    """Masked Pearson correlation between x and y over rows where
+    ``valid == 1``. Returns a scalar; 0 when degenerate (zero variance)."""
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    mx = jnp.sum(x * valid) / n
+    my = jnp.sum(y * valid) / n
+    dx = (x - mx) * valid
+    dy = (y - my) * valid
+    cov = jnp.sum(dx * dy)
+    vx = jnp.sum(dx * dx)
+    vy = jnp.sum(dy * dy)
+    denom = jnp.sqrt(vx * vy)
+    return jnp.where(denom > 0.0, cov / denom, 0.0)
+
+
+def cross_map(lib, pred, lib_valid, lib_targets, pred_targets, pred_valid,
+              lib_idx, pred_idx, k_mask, theiler):
+    """Composed reference cross-map skill: the oracle for the full L2 graph.
+
+    Returns (rho, preds): Pearson skill of predicting ``pred_targets`` from
+    the library manifold, and the per-point simplex predictions.
+    """
+    d = sq_distances(pred, lib)
+    d = mask_distances(d, lib_valid, lib_idx, pred_idx, theiler)
+    dvals, tvals = topk_neighbors(d, lib_targets)
+    preds = simplex_predict(dvals, tvals, k_mask)
+    rho = pearson(preds, pred_targets, pred_valid)
+    return rho, preds

@@ -1,0 +1,46 @@
+"""Pallas kernel: simplex-projection weights and prediction.
+
+Implements the Sugihara/rEDM weighting: w_j = exp(-d_j / d_1) over
+euclidean distances (inputs are *squared* distances, sqrt happens here),
+floored at 1e-6 and restricted to the first E+1 neighbours by ``k_mask``.
+Purely elementwise + tiny row reductions — one VMEM-resident block per
+grid step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import KMAX
+
+
+def _simplex_kernel(dv_ref, tv_ref, km_ref, o_ref):
+    d = jnp.sqrt(jnp.maximum(dv_ref[...], 0.0))   # [bp, KMAX]
+    d1 = jnp.maximum(d[:, 0:1], 1e-30)
+    w = jnp.exp(-d / d1)
+    w = jnp.maximum(w, 1e-6) * km_ref[...]        # [1, KMAX] mask broadcast
+    num = jnp.sum(w * tv_ref[...], axis=1)
+    den = jnp.sum(w, axis=1)
+    o_ref[...] = (num / den)[:, None]
+
+
+def simplex_predict(dvals, tvals, k_mask, block_p=256):
+    """(dvals, tvals) [P, KMAX] + k_mask [KMAX] -> predictions [P]."""
+    p, k = dvals.shape
+    assert k == KMAX
+    bp = min(block_p, p)
+    assert p % bp == 0
+    km2 = k_mask.reshape(1, KMAX)
+    out = pl.pallas_call(
+        _simplex_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, KMAX), lambda i: (i, 0)),
+            pl.BlockSpec((bp, KMAX), lambda i: (i, 0)),
+            pl.BlockSpec((1, KMAX), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        interpret=True,
+    )(dvals, tvals, km2)
+    return out[:, 0]

@@ -1,0 +1,62 @@
+"""Pallas kernel: top-k nearest neighbours by k-pass min extraction.
+
+A GPU implementation would sort each row (the paper notes "computes the
+distances ..., sorts them and finally takes the top E+1"). Sorting is a
+poor fit for the TPU vector unit; since k = E+1 <= KMAX = 11, a k-pass
+running-min extraction is O(k*N) pure vector work with no data-dependent
+control flow: per pass, argmin the row, record (distance, gathered target)
+via a one-hot contraction, then knock the winner out with +BIG.
+
+The kernel emits both the neighbour distances and the library *target
+values* gathered at the neighbour positions, so the downstream simplex
+stage never needs a gather.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BIG, KMAX
+
+
+def _topk_kernel(d_ref, t_ref, dv_ref, tv_ref):
+    d = d_ref[...]                        # [bp, N]
+    t = t_ref[...]                        # [1, N]
+    n = d.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    for k in range(KMAX):                 # static unroll, KMAX passes
+        am = jnp.argmin(d, axis=1)        # ties -> lowest index
+        onehot = (iota == am[:, None]).astype(d.dtype)
+        dv_ref[:, k] = jnp.min(d, axis=1)
+        tv_ref[:, k] = jnp.sum(onehot * t, axis=1)
+        d = d + onehot * BIG
+
+
+def topk_neighbors(d, lib_targets, block_p=128):
+    """[P, N] distances + [N] targets -> (dvals [P, KMAX], tvals [P, KMAX]).
+
+    Rows of the output are in ascending distance order. Masked entries
+    (+BIG and above) sort last; the caller's k_mask keeps them out of the
+    simplex weights.
+    """
+    p, n = d.shape
+    bp = min(block_p, p)
+    assert p % bp == 0
+    t2 = lib_targets.reshape(1, n)
+    return pl.pallas_call(
+        _topk_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, KMAX), lambda i: (i, 0)),
+            pl.BlockSpec((bp, KMAX), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, KMAX), jnp.float32),
+            jax.ShapeDtypeStruct((p, KMAX), jnp.float32),
+        ],
+        interpret=True,
+    )(d, t2)

@@ -1,0 +1,56 @@
+"""L2: the CCM compute graphs, built from the L1 Pallas kernels.
+
+Three graph families are AOT-lowered (see aot.py):
+
+* ``cross_map_fn(n, p)``   — the full per-subsample cross-map: distances ->
+  masking -> top-KMAX -> simplex -> Pearson. Used by the brute-force CCM
+  transform pipeline (paper §3.1). One call per (subsample, L, E, tau).
+* ``distance_fn(p, n)``    — raw pairwise squared distances, used by the
+  distance-indexing-table pipeline (paper §3.2) to build the broadcast
+  table over the *whole* embedded series once per (E, tau).
+* ``simplex_fn(p)``        — the table-mode tail: neighbours were already
+  found by table lookup in Rust; this evaluates simplex weights + Pearson
+  on the gathered [P, KMAX] neighbour panels.
+
+Shape policy (DESIGN.md §Artifact shape policy): embedding dim is padded
+to EMAX with zeros, point counts to the bucket size with ``*_valid`` masks,
+neighbour count is fixed at KMAX and restricted by ``k_mask``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import BIG, KMAX
+from .kernels import distance as kdistance
+from .kernels import pearson as kpearson
+from .kernels import simplex as ksimplex
+from .kernels import topk as ktopk
+
+
+def mask_distances(d, lib_valid, lib_idx, pred_idx, theiler):
+    """Validity + Theiler-window masking (cheap elementwise, fused by XLA)."""
+    d = d + BIG * (1.0 - lib_valid)[None, :]
+    close = (jnp.abs(pred_idx[:, None] - lib_idx[None, :]) <= theiler).astype(d.dtype)
+    return d + BIG * close
+
+
+def cross_map(lib, pred, lib_valid, lib_targets, pred_targets, pred_valid,
+              lib_idx, pred_idx, k_mask, theiler):
+    """Full cross-map skill for one subsample. Returns (rho, preds [P])."""
+    d = kdistance.sq_distances(pred, lib)
+    d = mask_distances(d, lib_valid, lib_idx, pred_idx, theiler)
+    dvals, tvals = ktopk.topk_neighbors(d, lib_targets)
+    preds = ksimplex.simplex_predict(dvals, tvals, k_mask)
+    rho = kpearson.pearson(preds, pred_targets, pred_valid)
+    return rho, preds
+
+
+def simplex_tail(dvals, tvals, pred_targets, pred_valid, k_mask):
+    """Table-mode tail: simplex + Pearson over pre-gathered neighbours."""
+    preds = ksimplex.simplex_predict(dvals, tvals, k_mask)
+    rho = kpearson.pearson(preds, pred_targets, pred_valid)
+    return rho, preds
+
+
+def distances(pred, lib):
+    """Raw squared-distance matrix (table construction)."""
+    return kdistance.sq_distances(pred, lib)

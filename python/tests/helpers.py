@@ -1,0 +1,43 @@
+"""Shared test data builders."""
+
+import numpy as np
+
+from compile.kernels import EMAX, KMAX
+
+
+def embed_cloud(rng, n, e):
+    """n points with e active lanes, zero-padded to EMAX."""
+    pts = np.zeros((n, EMAX), np.float32)
+    pts[:, :e] = rng.normal(size=(n, e)).astype(np.float32)
+    return pts
+
+
+def k_mask(e):
+    m = np.zeros(KMAX, np.float32)
+    m[: e + 1] = 1.0
+    return m
+
+
+def coupled_logistic(n, beta_xy=0.02, beta_yx=0.1, rx=3.8, ry=3.5,
+                     x0=0.4, y0=0.2, discard=300):
+    """Sugihara-style coupled logistic maps. beta_yx > beta_xy means X
+    drives Y more strongly than Y drives X."""
+    total = n + discard
+    x = np.empty(total)
+    y = np.empty(total)
+    x[0], y[0] = x0, y0
+    for t in range(total - 1):
+        x[t + 1] = x[t] * (rx - rx * x[t] - beta_xy * y[t])
+        y[t + 1] = y[t] * (ry - ry * y[t] - beta_yx * x[t])
+    return x[discard:].astype(np.float32), y[discard:].astype(np.float32)
+
+
+def lag_embed(series, e, tau):
+    """Lagged-coordinate embedding: row t -> [x_t, x_{t-tau}, ...,
+    x_{t-(e-1)tau}], zero-padded to EMAX. Returns (vectors, time_indices)."""
+    offset = (e - 1) * tau
+    n = len(series) - offset
+    out = np.zeros((n, EMAX), np.float32)
+    for j in range(e):
+        out[:, j] = series[offset - j * tau : offset - j * tau + n]
+    return out, np.arange(offset, len(series), dtype=np.float32)

@@ -1,0 +1,58 @@
+"""AOT lowering: HLO text well-formedness and manifest contract."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.kernels import EMAX, KMAX
+
+
+def test_cross_map_hlo_text_shape():
+    text = aot.to_hlo_text(aot.lower_cross_map(256, 256))
+    assert text.startswith("HloModule")
+    # entry layout encodes the exact input order the Rust manifest relies on
+    assert "f32[256,8]" in text
+    assert "f32[11]" in text
+    assert "(f32[], f32[256]" in text  # (rho, preds) tuple
+
+
+def test_distance_hlo_text_shape():
+    text = aot.to_hlo_text(aot.lower_distances(256, 256))
+    assert text.startswith("HloModule")
+    assert "f32[256,256]" in text
+
+
+def test_simplex_hlo_text_shape():
+    text = aot.to_hlo_text(aot.lower_simplex(256))
+    assert text.startswith("HloModule")
+    assert "f32[256,11]" in text
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--quick"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    return out
+
+
+def test_manifest_contract(quick_artifacts):
+    with open(quick_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["emax"] == EMAX
+    assert manifest["kmax"] == KMAX
+    kinds = {a["kind"] for a in manifest["artifacts"]}
+    assert kinds == {"cross_map", "distance", "simplex"}
+    for a in manifest["artifacts"]:
+        path = quick_artifacts / a["file"]
+        assert path.exists(), a
+        head = path.read_text()[:64]
+        assert head.startswith("HloModule"), a
+        assert a["n"] >= 1 and a["p"] >= 1

@@ -1,0 +1,110 @@
+"""Pallas distance kernel vs the pure-jnp oracle and a naive O(P*N*E) loop."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import EMAX, distance, ref
+from .helpers import embed_cloud
+
+
+def naive_sq_distances(pred, lib):
+    p, n = pred.shape[0], lib.shape[0]
+    out = np.zeros((p, n), np.float64)
+    for i in range(p):
+        for j in range(n):
+            out[i, j] = np.sum((pred[i].astype(np.float64) - lib[j].astype(np.float64)) ** 2)
+    return out
+
+
+def test_matches_ref_exact_shapes():
+    rng = np.random.default_rng(1)
+    pred = embed_cloud(rng, 64, 3)
+    lib = embed_cloud(rng, 128, 3)
+    got = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 32, 32))
+    want = np.asarray(ref.sq_distances(jnp.asarray(pred), jnp.asarray(lib)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matches_naive_float64():
+    rng = np.random.default_rng(2)
+    pred = embed_cloud(rng, 16, 5)
+    lib = embed_cloud(rng, 24, 5)
+    got = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 8, 8))
+    want = naive_sq_distances(pred, lib)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_padding_invariance():
+    """Extra zero lanes change nothing — the artifact-bucket contract."""
+    rng = np.random.default_rng(3)
+    pred = embed_cloud(rng, 32, 2)
+    lib = embed_cloud(rng, 32, 2)
+    d_padded = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 16, 16))
+    # recompute with only 2 active lanes via the oracle on truncated copies
+    pred8 = np.zeros_like(pred); pred8[:, :2] = pred[:, :2]
+    lib8 = np.zeros_like(lib); lib8[:, :2] = lib[:, :2]
+    d_ref = np.asarray(ref.sq_distances(jnp.asarray(pred8), jnp.asarray(lib8)))
+    # tiling may reassociate the reductions -> tiny float drift
+    np.testing.assert_allclose(d_padded, d_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_self_distance_zero_and_symmetry():
+    rng = np.random.default_rng(4)
+    pts = embed_cloud(rng, 48, 4)
+    d = np.asarray(distance.sq_distances(jnp.asarray(pts), jnp.asarray(pts), 16, 16))
+    np.testing.assert_allclose(np.diag(d), np.zeros(48), atol=1e-4)
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-5)
+
+
+def test_block_size_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(5)
+    pred = embed_cloud(rng, 64, 6)
+    lib = embed_cloud(rng, 64, 6)
+    a = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 64, 64))
+    b = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 16, 32))
+    # tiling changes XLA fusion order -> bitwise equality is too strong,
+    # but the drift must stay at reassociation scale
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_near_duplicate_points_no_cancellation():
+    """Regression test: the matmul expansion ||a||^2+||b||^2-2ab loses the
+    tiny distances between near-duplicate points to cancellation (found as
+    a 6e-4 rho divergence vs the Rust native backend), which perturbs CCM
+    neighbour ORDER. The direct-difference kernel must rank near-twins
+    exactly like a float64 reference."""
+    rng = np.random.default_rng(11)
+    base = embed_cloud(rng, 8, 4) * 10.0  # large magnitude -> cancellation zone
+    lib = np.repeat(base, 4, axis=0)  # 32 rows: 4 near-copies of each
+    lib += rng.normal(scale=1e-3, size=lib.shape).astype(np.float32)
+    pred = lib[:8].copy()
+    got = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 8, 8))
+    want = naive_sq_distances(pred, lib)
+    # relative accuracy of the *small* distances is what matters
+    small = want < 1e-3
+    assert small.any()
+    rel = np.abs(got[small] - want[small]) / np.maximum(want[small], 1e-12)
+    assert rel.max() < 1e-2, f"near-duplicate distances corrupted: {rel.max()}"
+    # neighbour order must match the float64 reference everywhere
+    np.testing.assert_array_equal(np.argsort(got, axis=1, kind="stable"),
+                                  np.argsort(want, axis=1, kind="stable"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.sampled_from([8, 16, 32]),
+    n=st.sampled_from([8, 16, 32]),
+    e=st.integers(min_value=1, max_value=EMAX),
+    seed=st.integers(min_value=0, max_value=2**16),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+)
+def test_hypothesis_matches_oracle(p, n, e, seed, scale):
+    rng = np.random.default_rng(seed)
+    pred = embed_cloud(rng, p, e) * np.float32(scale)
+    lib = embed_cloud(rng, n, e) * np.float32(scale)
+    got = np.asarray(distance.sq_distances(jnp.asarray(pred), jnp.asarray(lib), 8, 8))
+    want = naive_sq_distances(pred, lib)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * scale)
+    assert (got >= 0).all()

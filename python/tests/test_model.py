@@ -1,0 +1,165 @@
+"""L2 composed graph: oracle match, padding/masking contracts, and the
+end-to-end scientific check that CCM recovers the causal direction on
+Sugihara's coupled logistic maps."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import EMAX, KMAX, ref
+from .helpers import coupled_logistic, embed_cloud, k_mask, lag_embed
+
+
+def _args(rng, n_valid, n_bucket, e):
+    lib = embed_cloud(rng, n_bucket, e)
+    pred = lib + rng.normal(scale=0.01, size=lib.shape).astype(np.float32)
+    pred[:, e:] = 0.0
+    lv = np.zeros(n_bucket, np.float32); lv[:n_valid] = 1.0
+    pv = lv.copy()
+    lt = rng.normal(size=n_bucket).astype(np.float32)
+    pt = rng.normal(size=n_bucket).astype(np.float32)
+    idx = np.arange(n_bucket, dtype=np.float32)
+    return [lib, pred, lv, lt, pt, pv, idx, idx, k_mask(e), np.float32(0.0)]
+
+
+def test_matches_ref_oracle():
+    rng = np.random.default_rng(0)
+    args = [jnp.asarray(a) for a in _args(rng, 200, 256, 3)]
+    r1, p1 = model.cross_map(*args)
+    r2, p2 = ref.cross_map(*args)
+    np.testing.assert_allclose(float(r1), float(r2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1)[:200], np.asarray(p2)[:200],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bucket_padding_invariance():
+    """Same valid data in a bigger bucket must give the same rho — the
+    contract that lets Rust pad any workload to the nearest artifact."""
+    rng = np.random.default_rng(1)
+    args_small = _args(rng, 200, 256, 3)
+    # embed the same 200 valid rows into a 512 bucket
+    args_big = []
+    for a in args_small:
+        if np.isscalar(a) or a.ndim == 0:
+            args_big.append(a)
+        elif a.ndim == 2:
+            b = np.zeros((512, EMAX), np.float32); b[:256] = a; args_big.append(b)
+        elif a.shape[0] == KMAX:
+            args_big.append(a)
+        else:
+            b = np.zeros(512, np.float32); b[:256] = a; args_big.append(b)
+    # padded idx rows must not collide with valid ones at theiler 0:
+    args_big[6][256:] = np.arange(10_000, 10_256, dtype=np.float32)
+    args_big[7][256:] = np.arange(20_000, 20_256, dtype=np.float32)
+    r_small, p_small = model.cross_map(*[jnp.asarray(a) for a in args_small])
+    r_big, p_big = model.cross_map(*[jnp.asarray(a) for a in args_big])
+    np.testing.assert_allclose(float(r_small), float(r_big), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_small)[:200], np.asarray(p_big)[:200],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_theiler_zero_excludes_self():
+    """With lib == pred and theiler = 0 the self point (distance 0) must not
+    be its own neighbour: prediction != target even for exact overlap."""
+    rng = np.random.default_rng(2)
+    lib = embed_cloud(rng, 64, 2)
+    lv = np.ones(64, np.float32)
+    lt = rng.normal(size=64).astype(np.float32)
+    idx = np.arange(64, dtype=np.float32)
+    args = [lib, lib.copy(), lv, lt, lt.copy(), lv.copy(), idx, idx.copy(),
+            k_mask(2), np.float32(0.0)]
+    _, preds = model.cross_map(*[jnp.asarray(a) for a in args])
+    # if self were included, d1=0 -> prediction == target exactly
+    assert not np.allclose(np.asarray(preds), lt, atol=1e-6)
+
+
+def test_theiler_negative_includes_self():
+    """theiler = -1 disables exclusion: self distance 0 dominates and the
+    prediction collapses onto the target."""
+    rng = np.random.default_rng(3)
+    lib = embed_cloud(rng, 64, 2)
+    lv = np.ones(64, np.float32)
+    lt = rng.normal(size=64).astype(np.float32)
+    idx = np.arange(64, dtype=np.float32)
+    args = [lib, lib.copy(), lv, lt, lt.copy(), lv.copy(), idx, idx.copy(),
+            k_mask(2), np.float32(-1.0)]
+    rho, preds = model.cross_map(*[jnp.asarray(a) for a in args])
+    np.testing.assert_allclose(np.asarray(preds), lt, atol=1e-2)
+    assert float(rho) > 0.99
+
+
+def test_simplex_tail_matches_composition():
+    """distance+topk in the oracle, then the simplex_tail graph, must equal
+    the full cross_map graph — the table-mode equivalence the Rust
+    coordinator relies on (paper §3.2)."""
+    rng = np.random.default_rng(4)
+    args = [jnp.asarray(a) for a in _args(rng, 256, 256, 4)]
+    lib, pred, lv, lt, pt, pv, li, pi, km, th = args
+    d = ref.sq_distances(pred, lib)
+    d = ref.mask_distances(d, lv, li, pi, th)
+    dv, tv = ref.topk_neighbors(d, lt)
+    r_tail, p_tail = model.simplex_tail(dv, tv, pt, pv, km)
+    r_full, p_full = model.cross_map(*args)
+    np.testing.assert_allclose(float(r_tail), float(r_full), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_tail), np.asarray(p_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+    n_valid=st.integers(min_value=40, max_value=256),
+)
+def test_hypothesis_graph_matches_oracle(e, seed, n_valid):
+    rng = np.random.default_rng(seed)
+    args = [jnp.asarray(a) for a in _args(rng, n_valid, 256, e)]
+    r1, _ = model.cross_map(*args)
+    r2, _ = ref.cross_map(*args)
+    np.testing.assert_allclose(float(r1), float(r2), rtol=1e-3, atol=1e-4)
+
+
+def _ccm_skill(source, target, e, tau, lib_len, rng):
+    """Cross-map skill of predicting `source` from `target`'s manifold,
+    using a random library of lib_len embedded points. Pure oracle."""
+    vecs, idx = lag_embed(target, e, tau)
+    n = len(vecs)
+    sel = np.sort(rng.choice(n, size=lib_len, replace=False))
+    lib = vecs[sel]
+    src_aligned = source[idx.astype(int)]
+    lt = src_aligned[sel]
+    bucket = 256 if n <= 256 else 512 if n <= 512 else 1024
+    def pad2(a):
+        b = np.zeros((bucket, EMAX), np.float32); b[: a.shape[0]] = a; return b
+    def pad1(a, fill=0.0):
+        b = np.full(bucket, fill, np.float32); b[: a.shape[0]] = a; return b
+    lv = pad1(np.ones(lib_len, np.float32))
+    pv = pad1(np.ones(n, np.float32))
+    li = pad1(idx[sel], fill=-1e9)
+    pi = pad1(idx, fill=-2e9)
+    rho, _ = ref.cross_map(
+        jnp.asarray(pad2(lib)), jnp.asarray(pad2(vecs)), jnp.asarray(lv),
+        jnp.asarray(pad1(lt)), jnp.asarray(pad1(src_aligned)), jnp.asarray(pv),
+        jnp.asarray(li), jnp.asarray(pi), jnp.asarray(k_mask(e)),
+        jnp.asarray(np.float32(0.0)),
+    )
+    return float(rho)
+
+
+def test_ccm_recovers_causal_direction():
+    """Sugihara's headline result on coupled logistic maps: X drives Y
+    (beta_yx >> beta_xy), so cross-mapping X from M_Y is skillful and
+    improves with library size (convergence)."""
+    x, y = coupled_logistic(520, beta_xy=0.0, beta_yx=0.35)
+    rng = np.random.default_rng(7)
+    e, tau = 2, 1
+    # X -> Y causality: predict X from Y's shadow manifold
+    rho_small = np.mean([_ccm_skill(x, y, e, tau, 40, rng) for _ in range(5)])
+    rho_big = np.mean([_ccm_skill(x, y, e, tau, 400, rng) for _ in range(5)])
+    # Y does not drive X: predicting Y from X's manifold stays weak
+    rho_rev = np.mean([_ccm_skill(y, x, e, tau, 400, rng) for _ in range(5)])
+    assert rho_big > 0.9, f"cross-map skill should be high, got {rho_big}"
+    assert rho_big > rho_small + 0.03, "skill must converge (grow with L)"
+    assert rho_big > rho_rev + 0.1, (
+        f"causal asymmetry lost: X->Y {rho_big} vs Y->X {rho_rev}")

@@ -1,0 +1,71 @@
+"""Pallas Pearson kernel vs numpy corrcoef + degenerate cases."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pearson, ref
+
+
+def test_matches_numpy_full_valid():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=128).astype(np.float32)
+    y = (0.8 * x + 0.2 * rng.normal(size=128)).astype(np.float32)
+    v = np.ones(128, np.float32)
+    got = float(pearson.pearson(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v)))
+    want = np.corrcoef(x, y)[0, 1]
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_masked_rows_ignored():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=64).astype(np.float32)
+    y = rng.normal(size=64).astype(np.float32)
+    v = np.ones(64, np.float32)
+    v[40:] = 0.0
+    # poison the masked tail; result must not change
+    x2 = x.copy(); x2[40:] = 1e6
+    y2 = y.copy(); y2[40:] = -1e6
+    a = float(pearson.pearson(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v)))
+    b = float(pearson.pearson(jnp.asarray(x2), jnp.asarray(y2), jnp.asarray(v)))
+    want = np.corrcoef(x[:40], y[:40])[0, 1]
+    np.testing.assert_allclose(a, want, rtol=1e-4)
+    np.testing.assert_allclose(b, want, rtol=1e-4)
+
+
+def test_perfect_correlation():
+    x = np.linspace(-1, 1, 32, dtype=np.float32)
+    v = np.ones(32, np.float32)
+    got = float(pearson.pearson(jnp.asarray(x), jnp.asarray(2 * x + 3), jnp.asarray(v)))
+    np.testing.assert_allclose(got, 1.0, atol=1e-5)
+    got = float(pearson.pearson(jnp.asarray(x), jnp.asarray(-x), jnp.asarray(v)))
+    np.testing.assert_allclose(got, -1.0, atol=1e-5)
+
+
+def test_degenerate_variance_returns_zero():
+    x = np.ones(16, np.float32)
+    y = np.arange(16, dtype=np.float32)
+    v = np.ones(16, np.float32)
+    assert float(pearson.pearson(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v))) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 100]),
+    seed=st.integers(min_value=0, max_value=2**16),
+    nvalid=st.integers(min_value=3, max_value=8),
+)
+def test_hypothesis_matches_ref_and_numpy(n, seed, nvalid):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    v = np.zeros(n, np.float32)
+    keep = rng.choice(n, size=min(nvalid, n), replace=False)
+    v[keep] = 1.0
+    got = float(pearson.pearson(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v)))
+    want_ref = float(ref.pearson(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v)))
+    np.testing.assert_allclose(got, want_ref, rtol=1e-4, atol=1e-5)
+    sel = v > 0
+    if sel.sum() >= 2 and np.std(x[sel]) > 1e-6 and np.std(y[sel]) > 1e-6:
+        want = np.corrcoef(x[sel], y[sel])[0, 1]
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,68 @@
+"""Pallas simplex-projection kernel: oracle match + weighting invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import KMAX, ref, simplex
+from .helpers import k_mask
+
+
+def test_matches_ref():
+    rng = np.random.default_rng(0)
+    dv = np.sort(rng.uniform(size=(32, KMAX)).astype(np.float32), axis=1)
+    tv = rng.normal(size=(32, KMAX)).astype(np.float32)
+    km = k_mask(3)
+    got = np.asarray(simplex.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km), 16))
+    want = np.asarray(ref.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_prediction_is_convex_combination():
+    """Weights are positive and normalized -> prediction lies within the
+    [min, max] of the unmasked neighbour targets."""
+    rng = np.random.default_rng(1)
+    dv = np.sort(rng.uniform(0.1, 2.0, size=(64, KMAX)).astype(np.float32), axis=1)
+    tv = rng.normal(size=(64, KMAX)).astype(np.float32)
+    for e in [1, 3, 6]:
+        km = k_mask(e)
+        pred = np.asarray(simplex.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km), 64))
+        lo = tv[:, : e + 1].min(axis=1)
+        hi = tv[:, : e + 1].max(axis=1)
+        assert (pred >= lo - 1e-5).all() and (pred <= hi + 1e-5).all()
+
+
+def test_exact_match_dominates():
+    """d_1 == 0 (exact manifold revisit): nearest neighbour carries weight 1
+    while others floor at 1e-6, so the prediction ~= its target."""
+    dv = np.zeros((4, KMAX), np.float32)
+    dv[:, 1:] = np.linspace(1.0, 2.0, KMAX - 1, dtype=np.float32)
+    tv = np.full((4, KMAX), 100.0, np.float32)
+    tv[:, 0] = 7.0
+    km = k_mask(4)
+    pred = np.asarray(simplex.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km), 4))
+    np.testing.assert_allclose(pred, np.full(4, 7.0), atol=1e-2)
+
+
+def test_equidistant_neighbours_average():
+    dv = np.ones((2, KMAX), np.float32)
+    tv = np.stack([np.arange(KMAX, dtype=np.float32)] * 2)
+    km = k_mask(3)  # first 4 neighbours: targets 0,1,2,3
+    pred = np.asarray(simplex.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km), 2))
+    np.testing.assert_allclose(pred, np.full(2, 1.5), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=KMAX - 1),
+    seed=st.integers(min_value=0, max_value=2**16),
+    scale=st.floats(min_value=0.01, max_value=10.0),
+)
+def test_hypothesis_matches_ref(e, seed, scale):
+    rng = np.random.default_rng(seed)
+    dv = np.sort((rng.uniform(size=(16, KMAX)) * scale).astype(np.float32), axis=1)
+    tv = rng.normal(size=(16, KMAX)).astype(np.float32)
+    km = k_mask(e)
+    got = np.asarray(simplex.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km), 16))
+    want = np.asarray(ref.simplex_predict(jnp.asarray(dv), jnp.asarray(tv), jnp.asarray(km)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

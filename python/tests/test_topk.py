@@ -1,0 +1,88 @@
+"""Pallas top-k kernel vs oracle and vs numpy argsort semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import BIG, KMAX, ref, topk
+
+
+def numpy_topk(d, targets):
+    """Stable ascending sort -> first KMAX (ties by lowest index)."""
+    order = np.argsort(d, axis=1, kind="stable")[:, :KMAX]
+    dv = np.take_along_axis(d, order, axis=1)
+    tv = targets[order]
+    return dv, tv
+
+
+def test_matches_numpy_sort():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(size=(32, 64)).astype(np.float32)
+    t = rng.normal(size=64).astype(np.float32)
+    dv, tv = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), 16)
+    want_dv, want_tv = numpy_topk(d, t)
+    np.testing.assert_allclose(np.asarray(dv), want_dv, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tv), want_tv, rtol=1e-6)
+
+
+def test_matches_ref_oracle():
+    rng = np.random.default_rng(1)
+    d = rng.uniform(size=(16, 48)).astype(np.float32)
+    t = rng.normal(size=48).astype(np.float32)
+    dv, tv = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), 16)
+    rdv, rtv = ref.topk_neighbors(jnp.asarray(d), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(rdv), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(rtv), rtol=1e-6)
+
+
+def test_ascending_order():
+    rng = np.random.default_rng(2)
+    d = rng.uniform(size=(8, 32)).astype(np.float32)
+    t = rng.normal(size=32).astype(np.float32)
+    dv, _ = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), 8)
+    dv = np.asarray(dv)
+    assert (np.diff(dv, axis=1) >= 0).all()
+
+
+def test_masked_entries_sort_last():
+    """Entries masked with +BIG (invalid/self rows) must never displace
+    genuine neighbours."""
+    rng = np.random.default_rng(3)
+    d = rng.uniform(size=(8, 32)).astype(np.float32)
+    d[:, 20:] += np.float32(BIG)
+    t = rng.normal(size=32).astype(np.float32)
+    dv, tv = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), 8)
+    dv = np.asarray(dv)
+    # 20 real entries; first 11 < BIG
+    assert (dv[:, :KMAX] < BIG / 2).all()
+    want_dv, want_tv = numpy_topk(d, t)
+    np.testing.assert_allclose(dv, want_dv, rtol=1e-6)
+
+
+def test_tie_breaking_lowest_index():
+    d = np.full((2, 16), 5.0, np.float32)
+    d[0, 7] = 1.0
+    t = np.arange(16, dtype=np.float32)
+    dv, tv = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), 2)
+    tv = np.asarray(tv)
+    # row 0: nearest is idx 7, then ties resolved 0,1,2,...
+    assert tv[0, 0] == 7.0
+    np.testing.assert_array_equal(tv[0, 1:6], [0, 1, 2, 3, 4])
+    # row 1: all ties -> 0..10
+    np.testing.assert_array_equal(tv[1], np.arange(KMAX, dtype=np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_hypothesis_matches_numpy(p, n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(size=(p, n)).astype(np.float32)
+    t = rng.normal(size=n).astype(np.float32)
+    dv, tv = topk.topk_neighbors(jnp.asarray(d), jnp.asarray(t), p)
+    want_dv, want_tv = numpy_topk(d, t)
+    np.testing.assert_allclose(np.asarray(dv), want_dv, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tv), want_tv, rtol=1e-6)

@@ -1,0 +1,94 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. distance-table benefit as a function of L (the paper's "as the
+//!    library size L grows ... pre-building the distance indexing table
+//!    secures increasing benefit");
+//! 2. asynchronous submission benefit as a function of topology width
+//!    (the paper's "async cannot offer more parallelization when CPU
+//!    utilization already reaches full throttle");
+//! 3. partition-count sensitivity (Spark's parallelism knob);
+//! 4. broadcast cost: table ship time vs per-task shipping.
+//!
+//! Run: `cargo bench --bench ablation [-- --full]`
+
+mod common;
+
+use std::sync::Arc;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::ccm::driver::{run_case, Case};
+use parccm::engine::Deploy;
+
+fn main() {
+    let args = common::args();
+    let base = common::scenario(&args);
+    let backend = common::backend(&args);
+    let (x, y) = common::workload(&base);
+    let cluster = Deploy::Cluster { workers: 5, cores_per_worker: 4 };
+
+    // 1. table benefit vs L ---------------------------------------------
+    let mut t1 = TablePrinter::new("Ablation 1 — distance table benefit vs L (total task s)");
+    for &l in &base.ls {
+        let mut s = base.clone();
+        s.ls = vec![l];
+        s.es = vec![2];
+        s.taus = vec![1];
+        let brute = run_case(Case::A2, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        let tabled = run_case(Case::A4, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        t1.push(
+            Row::new(format!("L={l}"))
+                .cell("brute_task_s", brute.report.total_task_s)
+                .cell("table_task_s", tabled.report.total_task_s)
+                .cell("cut_pct", 100.0 * (1.0 - tabled.report.total_task_s / brute.report.total_task_s)),
+        );
+    }
+    t1.print();
+    let _ = t1.save("results/bench_ablation_table.json");
+
+    // 2. async benefit vs topology width --------------------------------
+    let mut t2 = TablePrinter::new("Ablation 2 — async benefit vs cluster width (sim makespan s)");
+    for (w, c) in [(1usize, 2usize), (2, 2), (5, 4), (10, 4)] {
+        let deploy = Deploy::Cluster { workers: w, cores_per_worker: c };
+        let sync = run_case(Case::A4, &base, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let asy = run_case(Case::A5, &base, &y, &x, deploy.clone(), Arc::clone(&backend));
+        t2.push(
+            Row::new(format!("{w}x{c} ({} cores)", w * c))
+                .cell("sync_s", sync.report.sim_makespan_s)
+                .cell("async_s", asy.report.sim_makespan_s)
+                .cell("gain_pct", 100.0 * (1.0 - asy.report.sim_makespan_s / sync.report.sim_makespan_s))
+                .cell("util_sync", sync.report.sim_utilization)
+                .cell("util_async", asy.report.sim_utilization),
+        );
+    }
+    t2.print();
+    let _ = t2.save("results/bench_ablation_async.json");
+
+    // 3. partition-count sensitivity -------------------------------------
+    let mut t3 = TablePrinter::new("Ablation 3 — partitions per job (A5, sim makespan s)");
+    for parts in [2usize, 5, 10, 20, 40, 80] {
+        let mut s = base.clone();
+        s.partitions = parts;
+        let rep = run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        t3.push(
+            Row::new(format!("partitions={parts}"))
+                .cell("sim_s", rep.report.sim_makespan_s)
+                .cell("util", rep.report.sim_utilization)
+                .cell("measured_s", rep.report.measured_wall_s),
+        );
+    }
+    t3.print();
+    let _ = t3.save("results/bench_ablation_partitions.json");
+
+    // 4. broadcast ship accounting ---------------------------------------
+    let mut t4 = TablePrinter::new("Ablation 4 — broadcast ship share (A5, 5x4)");
+    let rep = run_case(Case::A5, &base, &y, &x, cluster, Arc::clone(&backend));
+    t4.push(
+        Row::new("baseline grid")
+            .cell("sim_makespan_s", rep.report.sim_makespan_s)
+            .cell("ship_s_total", rep.report.sim_broadcast_ship_s)
+            .cell("ship_pct_of_makespan", 100.0 * rep.report.sim_broadcast_ship_s
+                / (rep.report.sim_makespan_s * 5.0).max(1e-12)),
+    );
+    t4.print();
+    let _ = t4.save("results/bench_ablation_broadcast.json");
+}

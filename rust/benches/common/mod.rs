@@ -1,0 +1,57 @@
+//! Shared bench utilities (workload + CLI conventions).
+//!
+//! All benches accept `-- --full` to run the paper-scale baseline scenario
+//! (series 4000, r 500); the default is the 1-core-scaled variant from
+//! `Scenario::scaled_baseline`. `--backend native|xla` picks the compute
+//! backend (default: xla when artifacts/ are present).
+
+use std::sync::Arc;
+
+use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::params::Scenario;
+use parccm::native::NativeBackend;
+use parccm::runtime::{artifacts_available, XlaBackend, DEFAULT_ARTIFACTS_DIR};
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::util::cli::Args;
+
+pub fn args() -> Args {
+    Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+}
+
+pub fn scenario(args: &Args) -> Scenario {
+    let mut s = if args.flag("full") {
+        Scenario::paper_baseline()
+    } else {
+        Scenario::scaled_baseline()
+    };
+    s.seed = args.get_u64("seed", s.seed);
+    s
+}
+
+pub fn workload(s: &Scenario) -> (Vec<f32>, Vec<f32>) {
+    coupled_logistic(s.series_len, CoupledLogisticParams::default())
+}
+
+/// Default to the native backend: the scheduling comparisons the paper
+/// makes (table vs brute, async vs sync, topology width) are backend-
+/// independent, and native keeps bench turnaround short on 1 core. Pass
+/// `-- --backend xla` to cost the AOT/PJRT path (microbench does both).
+pub fn backend(args: &Args) -> Arc<dyn ComputeBackend> {
+    let dir = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS_DIR).to_string();
+    let choice = args.get("backend").unwrap_or("native");
+    let _ = artifacts_available(&dir);
+    if choice == "xla" {
+        if let Ok(b) = XlaBackend::from_dir(&dir, args.get_usize("xla-pool", 1)) {
+            eprintln!("[bench] backend: xla");
+            return Arc::new(b);
+        }
+        eprintln!("[bench] xla unavailable, falling back to native");
+    } else {
+        eprintln!("[bench] backend: native");
+    }
+    Arc::new(NativeBackend)
+}
+
+pub fn repeats(args: &Args, default: usize) -> usize {
+    args.get_usize("repeats", default)
+}

@@ -1,0 +1,126 @@
+//! Fig. 4 reproduction: average computation time of implementation levels
+//! A1–A5, submitted in Local mode vs Cluster ("Yarn") mode, on the
+//! baseline scenario — plus the rEDM external comparator of §4.1.
+//!
+//! Paper shape to reproduce:
+//! * Yarn mode ≪ Local mode for the engine cases;
+//! * A5 is on the order of 1% of A1 on the cluster topology;
+//! * the distance indexing table (A4/A5 vs A2/A3) cuts > 80%;
+//! * async (A3 vs A2, A5 vs A4) helps only where cores are idle;
+//! * A5 beats the rEDM-style sequential baseline by ~an order of
+//!   magnitude on the 5x4 cluster.
+//!
+//! Run: `cargo bench --bench fig4_cases [-- --full --backend xla --repeats N]`
+
+mod common;
+
+use std::sync::Arc;
+
+use parccm::baseline::{redm_ccm, RedmConfig};
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::bench::Bencher;
+use parccm::ccm::driver::{run_case_multi, Case};
+use parccm::engine::Deploy;
+use parccm::util::stats;
+
+fn main() {
+    let args = common::args();
+    let scenario = common::scenario(&args);
+    let backend = common::backend(&args);
+    let repeats = common::repeats(&args, 3);
+    let cluster = Deploy::Cluster {
+        workers: args.get_usize("workers", 5),
+        cores_per_worker: args.get_usize("cores", 4),
+    };
+    let local = Deploy::Local { cores: args.get_usize("local-cores", 4) };
+    let (x, y) = common::workload(&scenario);
+
+    println!(
+        "fig4: series={} r={} L={:?} E={:?} tau={:?} repeats={repeats}",
+        scenario.series_len, scenario.r, scenario.ls, scenario.es, scenario.taus
+    );
+
+    let mut table = TablePrinter::new("Fig 4 — average computation time (s), Local vs Yarn");
+    let mut a1_yarn = f64::NAN;
+    let mut a2_yarn = f64::NAN;
+    for case in Case::ALL {
+        let mut local_s = Vec::new();
+        let mut yarn_s = Vec::new();
+        let mut wall_s = Vec::new();
+        for _ in 0..repeats {
+            // one real execution, two DES topologies (exact — numerics are
+            // deploy-independent)
+            let (_skills, reports) = run_case_multi(
+                case,
+                &scenario,
+                &y,
+                &x,
+                &[local.clone(), cluster.clone()],
+                Arc::clone(&backend),
+            );
+            local_s.push(reports[0].sim_makespan_s);
+            yarn_s.push(reports[1].sim_makespan_s);
+            wall_s.push(reports[1].measured_wall_s);
+        }
+        let yarn_mean = stats::mean(&yarn_s);
+        if case == Case::A1 {
+            a1_yarn = yarn_mean;
+        }
+        if case == Case::A2 {
+            a2_yarn = yarn_mean;
+        }
+        table.push(
+            Row::new(format!("{} {}", case.name(), case.description()))
+                .cell("local_s", stats::mean(&local_s))
+                .cell("yarn_s", yarn_mean)
+                .cell("yarn_std", stats::stddev(&yarn_s))
+                .cell("measured_s", stats::mean(&wall_s))
+                .cell("vs_A1", yarn_mean / a1_yarn),
+        );
+    }
+
+    // §4.1 external comparator: sequential rEDM-style run over the grid.
+    let redm = Bencher::new().quiet(true).warmup(0).samples(repeats).run("redm", || {
+        let mut total = 0usize;
+        for combo in scenario.combos() {
+            let rows = redm_ccm(
+                &y,
+                &x,
+                &RedmConfig {
+                    params: combo,
+                    r: scenario.r,
+                    theiler: scenario.theiler as f32,
+                    seed: scenario.seed,
+                },
+            );
+            total += rows.len();
+        }
+        total
+    });
+    table.push(
+        Row::new("rEDM-style sequential baseline")
+            .cell("local_s", redm.mean_s)
+            .cell("yarn_s", redm.mean_s)
+            .cell("yarn_std", redm.std_s)
+            .cell("measured_s", redm.mean_s)
+            .cell("vs_A1", redm.mean_s / a1_yarn),
+    );
+
+    table.print();
+    let _ = table.save("results/bench_fig4.json");
+
+    println!("\nshape checks (paper expectations):");
+    let a5 = table.rows[4].cells[1].1;
+    let a4 = table.rows[3].cells[1].1;
+    let a3 = table.rows[2].cells[1].1;
+    println!(
+        "  A5/A1 = {:.3}% (paper ~1.2%)   table cut (A4 vs A2) = {:.1}% (paper >80%)",
+        100.0 * a5 / a1_yarn,
+        100.0 * (1.0 - a4 / a2_yarn)
+    );
+    println!(
+        "  async gain on cluster (A3 vs A2) = {:.1}%   rEDM/A5 = {:.1}x (paper ~15x)",
+        100.0 * (1.0 - a3 / a2_yarn),
+        redm.mean_s / a5
+    );
+}

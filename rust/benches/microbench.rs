@@ -1,0 +1,79 @@
+//! Primitive-level microbenchmarks — the §Perf iteration loop measures
+//! these before/after each hot-path change (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench microbench [-- --backend xla]`
+
+mod common;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::bench::Bencher;
+use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::embedding::Embedding;
+use parccm::ccm::knn::knn_batch;
+use parccm::ccm::params::CcmParams;
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::table::{library_mask, DistanceTable};
+use parccm::native::NativeBackend;
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::util::rng::Rng;
+
+fn main() {
+    let args = common::args();
+    let n_series = args.get_usize("n", 1000);
+    let (x, y) = coupled_logistic(n_series, CoupledLogisticParams::default());
+    let emb = Embedding::new(&y, 2, 1);
+    let targets = emb.align_targets(&x);
+    let times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+    let bencher = Bencher::new().warmup(1).samples(args.get_usize("repeats", 5));
+
+    let mut table = TablePrinter::new(format!("microbench (manifold n={})", emb.n));
+
+    // library of 1/4 the manifold
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let sample =
+        &draw_samples(&Rng::new(1), CcmParams::new(2, 1, emb.n / 4), emb.n, 1)[0];
+    let input = problem.input_for(sample);
+
+    let r = bencher.run("knn_batch (brute k-NN, full manifold queries)", || {
+        knn_batch(
+            &input.pred_vecs,
+            &input.pred_times,
+            &input.lib_vecs,
+            &input.lib_targets,
+            &input.lib_times,
+            0.0,
+        )
+    });
+    table.push(Row::new("knn_batch").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+
+    let r = bencher.run("native cross_map (one subsample)", || NativeBackend.cross_map(&input));
+    table.push(Row::new("native_cross_map").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+
+    let r = bencher.run("distance table build (serial)", || DistanceTable::build(&emb));
+    table.push(Row::new("table_build").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+
+    let dt = DistanceTable::build(&emb);
+    let (mask, target_of) = library_mask(emb.n, &sample.rows, &targets);
+    let r = bencher.run("table query_all (one subsample)", || {
+        dt.query_all(&mask, &target_of, 0.0)
+    });
+    table.push(Row::new("table_query_all").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+    let _ = times;
+
+    // XLA path, when available
+    let backend = common::backend(&args);
+    if backend.name() == "xla" {
+        let r = bencher.run("xla cross_map (one subsample, incl. padding)", || {
+            backend.cross_map(&input)
+        });
+        table.push(Row::new("xla_cross_map").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+        let r = bencher.run("xla distance_matrix (manifold)", || {
+            backend.distance_matrix(&emb.vecs, emb.n)
+        });
+        table.push(Row::new("xla_distance_matrix").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+    }
+
+    table.print();
+    let _ = table.save("results/bench_micro.json");
+}

@@ -1,0 +1,87 @@
+//! Table 2 / Fig. 5 reproduction: runtime elasticity with respect to L,
+//! E and tau, single-threaded (Case A1 / B-series) vs fully parallel
+//! (Case A5).
+//!
+//! Paper shape to reproduce:
+//! * doubling L multiplies single-threaded time ~4x but parallel only
+//!   ~1.1x (the distance indexing table absorbs the L growth);
+//! * doubling E or tau is nearly free for the parallel version;
+//! * doubling tau costs ~1.13x single-threaded.
+//!
+//! Run: `cargo bench --bench table2_elasticity [-- --full --repeats N]`
+
+mod common;
+
+use std::sync::Arc;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::ccm::driver::{run_case, Case};
+use parccm::engine::Deploy;
+use parccm::util::stats;
+
+fn main() {
+    let args = common::args();
+    let base = common::scenario(&args);
+    let backend = common::backend(&args);
+    let repeats = common::repeats(&args, 3);
+    let cluster = Deploy::Cluster {
+        workers: args.get_usize("workers", 5),
+        cores_per_worker: args.get_usize("cores", 4),
+    };
+    let (x, y) = common::workload(&base);
+    let (e0, t0, l0) = (1usize, 1usize, base.ls[0]);
+
+    println!(
+        "table2: series={} r={} varying L over {:?}, E over {:?}, tau over {:?} (repeats={repeats})",
+        base.series_len, base.r, base.ls, base.es, base.taus
+    );
+
+    let mut table = TablePrinter::new("Table 2 / Fig 5 — elasticity (mean s; ratio vs smallest)");
+    let mut measure = |_label: String, e: usize, tau: usize, l: usize| -> (f64, f64) {
+        let mut s = base.clone();
+        s.es = vec![e];
+        s.taus = vec![tau];
+        s.ls = vec![l];
+        let mut single = Vec::new();
+        let mut par = Vec::new();
+        for _ in 0..repeats {
+            single.push(
+                run_case(Case::A1, &s, &y, &x, Deploy::SingleThread, Arc::clone(&backend))
+                    .report
+                    .measured_wall_s,
+            );
+            par.push(
+                run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend))
+                    .report
+                    .sim_makespan_s,
+            );
+        }
+        (stats::mean(&single), stats::mean(&par))
+    };
+
+    let sweep = |name: &str,
+                 values: &[usize],
+                 f: &mut dyn FnMut(usize) -> (f64, f64),
+                 table: &mut TablePrinter| {
+        let mut first: Option<(f64, f64)> = None;
+        for &v in values {
+            let (s, p) = f(v);
+            let (fs, fp) = *first.get_or_insert((s, p));
+            table.push(
+                Row::new(format!("{name}={v}"))
+                    .cell("single_s", s)
+                    .cell("parallel_s", p)
+                    .cell("single_ratio", s / fs)
+                    .cell("parallel_ratio", p / fp),
+            );
+        }
+    };
+
+    sweep("L", &base.ls.clone(), &mut |l| measure(format!("L{l}"), e0, t0, l), &mut table);
+    sweep("E", &base.es.clone(), &mut |e| measure(format!("E{e}"), e, t0, l0), &mut table);
+    sweep("tau", &base.taus.clone(), &mut |t| measure(format!("t{t}"), e0, t, l0), &mut table);
+
+    table.print();
+    let _ = table.save("results/bench_table2.json");
+    println!("\n(paper: L-doubling -> 4.06x single / 1.11x parallel; tau-doubling -> 1.13x single)");
+}

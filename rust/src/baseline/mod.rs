@@ -1,0 +1,9 @@
+//! Comparators from the paper's evaluation (§4.1).
+//!
+//! [`redm`] is a faithful Rust port of the sequential rEDM `ccm` loop the
+//! paper benchmarks against ("approximately 15x faster than rEDM for the
+//! baseline scenario").
+
+pub mod redm;
+
+pub use redm::{redm_ccm, RedmConfig};

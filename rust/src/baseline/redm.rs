@@ -1,0 +1,113 @@
+//! rEDM-style sequential CCM baseline.
+//!
+//! Mirrors the structure of rEDM's C++ `ccm` / `block_lnlp` path (Ye et
+//! al. 2016): a straight per-subsample loop — embed once, then for every
+//! library draw, brute-force neighbour search over the library, simplex
+//! projection, Pearson skill. No engine, no table, no parallelism: this is
+//! the external comparator of the paper's §4.1, so it deliberately shares
+//! *no* scheduling machinery with the A-cases (only the low-level math
+//! kernels, as rEDM shares BLAS with anything else).
+
+use crate::ccm::embedding::Embedding;
+use crate::ccm::knn::knn_one;
+use crate::ccm::params::CcmParams;
+use crate::ccm::result::SkillRow;
+use crate::ccm::simplex::{pearson_f32, simplex_one};
+use crate::ccm::subsample::draw_samples;
+use crate::util::rng::Rng;
+use crate::{EMAX, KMAX};
+
+/// Baseline configuration (subset of a [`crate::ccm::params::Scenario`]).
+#[derive(Clone, Debug)]
+pub struct RedmConfig {
+    pub params: CcmParams,
+    /// Number of random library draws.
+    pub r: usize,
+    pub theiler: f32,
+    pub seed: u64,
+}
+
+/// Sequential CCM: skill of cross-mapping `cause` from `effect`'s
+/// manifold, one [`SkillRow`] per library draw.
+pub fn redm_ccm(effect: &[f32], cause: &[f32], config: &RedmConfig) -> Vec<SkillRow> {
+    let emb = Embedding::new(effect, config.params.e, config.params.tau);
+    let targets = emb.align_targets(cause);
+    let times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+    let master = Rng::new(config.seed);
+    let samples = draw_samples(&master, config.params, emb.n, config.r);
+
+    let mut out = Vec::with_capacity(config.r);
+    let mut dbuf = [0.0f32; KMAX];
+    let mut tbuf = [0.0f32; KMAX];
+    for sample in samples {
+        // materialize the library (rEDM gathers lib rows the same way)
+        let l = sample.rows.len();
+        let mut lib_vecs = Vec::with_capacity(l * EMAX);
+        let mut lib_targets = Vec::with_capacity(l);
+        let mut lib_times = Vec::with_capacity(l);
+        for &row in &sample.rows {
+            lib_vecs.extend_from_slice(emb.point(row));
+            lib_targets.push(targets[row]);
+            lib_times.push(times[row]);
+        }
+        // predict at every manifold point
+        let mut preds = Vec::with_capacity(emb.n);
+        for i in 0..emb.n {
+            knn_one(
+                emb.point(i),
+                times[i],
+                &lib_vecs,
+                &lib_targets,
+                &lib_times,
+                config.theiler,
+                &mut dbuf,
+                &mut tbuf,
+            );
+            preds.push(simplex_one(&dbuf, &tbuf, config.params.e));
+        }
+        let rho = pearson_f32(&preds, &targets);
+        out.push(SkillRow { params: config.params, sample_id: sample.sample_id, rho });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::backend::ComputeBackend;
+    use crate::ccm::pipeline::CcmProblem;
+    use crate::native::NativeBackend;
+    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+
+    #[test]
+    fn matches_native_backend_exactly() {
+        // same seeds -> same libraries -> identical skills as the A-cases
+        let (x, y) = coupled_logistic(300, CoupledLogisticParams::default());
+        let config = RedmConfig { params: CcmParams::new(2, 1, 100), r: 6, theiler: 0.0, seed: 7 };
+        let redm = redm_ccm(&y, &x, &config);
+
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let master = Rng::new(7);
+        let samples = draw_samples(&master, config.params, problem.emb.n, 6);
+        for (row, sample) in redm.iter().zip(&samples) {
+            let out = NativeBackend.cross_map(&problem.input_for(sample));
+            assert!(
+                (row.rho - out.rho).abs() < 1e-6,
+                "sample {}: redm {} vs native {}",
+                sample.sample_id,
+                row.rho,
+                out.rho
+            );
+        }
+    }
+
+    #[test]
+    fn produces_r_rows_with_skill() {
+        let (x, y) = coupled_logistic(400, CoupledLogisticParams::default());
+        let config =
+            RedmConfig { params: CcmParams::new(2, 1, 200), r: 10, theiler: 0.0, seed: 1 };
+        let rows = redm_ccm(&y, &x, &config);
+        assert_eq!(rows.len(), 10);
+        assert!(rows.iter().all(|r| r.rho > 0.5));
+    }
+}

@@ -1,0 +1,133 @@
+//! Measurement core: warmup + N samples, summary statistics.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub median_s: f64,
+}
+
+impl BenchResult {
+    pub fn from_samples(name: impl Into<String>, samples: Vec<f64>) -> BenchResult {
+        let mean_s = stats::mean(&samples);
+        let std_s = stats::stddev(&samples);
+        let min_s = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let max_s = samples.iter().copied().fold(0.0f64, f64::max);
+        let median_s = stats::median(&samples);
+        BenchResult { name: name.into(), samples, mean_s, std_s, min_s, max_s, median_s }
+    }
+
+    /// `mean ± std` with adaptive units.
+    pub fn human(&self) -> String {
+        format!("{} ± {}", human_time(self.mean_s), human_time(self.std_s))
+    }
+}
+
+/// Render seconds with adaptive units.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Configurable bencher.
+pub struct Bencher {
+    warmup: usize,
+    samples: usize,
+    quiet: bool,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, samples: 5, quiet: false }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    pub fn quiet(mut self, q: bool) -> Self {
+        self.quiet = q;
+        self
+    }
+
+    /// Measure `f` (returns wall time of each sample; the closure's result
+    /// is returned through a sink to stop dead-code elimination).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            sink(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            sink(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let result = BenchResult::from_samples(name, samples);
+        if !self.quiet {
+            println!("{:<52} {}", result.name, result.human());
+        }
+        result
+    }
+}
+
+/// One-shot convenience wrapper.
+pub fn bench<T, F: FnMut() -> T>(name: &str, samples: usize, f: F) -> BenchResult {
+    Bencher::new().samples(samples).run(name, f)
+}
+
+#[inline]
+fn sink<T>(value: T) {
+    std::hint::black_box(value);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_times() {
+        let r = Bencher::new().quiet(true).warmup(0).samples(3).run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(0.002).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,8 @@
+//! criterion-lite: a small measurement harness for the `cargo bench`
+//! targets (the offline image has no criterion).
+
+pub mod harness;
+pub mod report;
+
+pub use harness::{bench, BenchResult, Bencher};
+pub use report::{Row, TablePrinter};

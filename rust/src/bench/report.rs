@@ -1,0 +1,133 @@
+//! Table rendering + JSON persistence for bench results (the printed rows
+//! mirror the paper's figures; see rust/benches/*).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One table row: a label and named numeric cells.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Row {
+        Row { label: label.into(), cells: Vec::new() }
+    }
+
+    pub fn cell(mut self, name: impl Into<String>, value: f64) -> Row {
+        self.cells.push((name.into(), value));
+        self
+    }
+}
+
+/// Fixed-width table printer + JSON dump.
+pub struct TablePrinter {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl TablePrinter {
+    pub fn new(title: impl Into<String>) -> TablePrinter {
+        TablePrinter { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        if self.rows.is_empty() {
+            println!("(no rows)");
+            return;
+        }
+        let headers: Vec<&str> = self.rows[0].cells.iter().map(|(n, _)| n.as_str()).collect();
+        print!("{:<34}", "");
+        for h in &headers {
+            print!("{h:>16}");
+        }
+        println!();
+        for row in &self.rows {
+            print!("{:<34}", truncate(&row.label, 33));
+            for (_, v) in &row.cells {
+                if v.abs() >= 1000.0 || (v.abs() < 0.01 && *v != 0.0) {
+                    print!("{v:>16.3e}");
+                } else {
+                    print!("{v:>16.4}");
+                }
+            }
+            println!();
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            let mut pairs = vec![("label", Json::Str(r.label.clone()))];
+                            let cells: Vec<(&str, Json)> = r
+                                .cells
+                                .iter()
+                                .map(|(n, v)| (n.as_str(), Json::Num(*v)))
+                                .collect();
+                            pairs.extend(cells);
+                            Json::obj(pairs)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Persist as JSON under `results/` (created if needed).
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.len() <= max {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..max - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_rows_and_json() {
+        let mut t = TablePrinter::new("demo");
+        t.push(Row::new("a").cell("x", 1.0).cell("y", 2.0));
+        t.push(Row::new("b").cell("x", 3.0).cell("y", 4.0));
+        let j = t.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("x").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let mut t = TablePrinter::new("save");
+        t.push(Row::new("r").cell("v", 5.0));
+        let path = std::env::temp_dir().join("parccm_bench_report.json");
+        t.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+}

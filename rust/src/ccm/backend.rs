@@ -1,0 +1,138 @@
+//! The compute-backend contract shared by the pure-Rust implementation
+//! ([`crate::native::NativeBackend`]) and the AOT/XLA one
+//! ([`crate::runtime::XlaBackend`]).
+//!
+//! Everything above this trait (pipelines, driver, benches) is backend-
+//! agnostic; integration tests cross-check the two implementations against
+//! each other, which is how the Rust side inherits the Pallas kernels'
+//! pytest-verified semantics.
+
+use crate::{EMAX, KMAX};
+
+/// One cross-map evaluation: predict `pred_targets` at every prediction
+/// point from the E+1 nearest library neighbours.
+///
+/// Vectors are flat row-major with EMAX-lane padding (see
+/// [`crate::ccm::embedding::Embedding`]). `*_times` carry original-series
+/// time indices for Theiler-window self-exclusion.
+#[derive(Clone, Debug)]
+pub struct CrossMapInput {
+    /// Library manifold points, `[n_lib, EMAX]` flat.
+    pub lib_vecs: Vec<f32>,
+    /// Target (cause-series) value at each library point's time.
+    pub lib_targets: Vec<f32>,
+    /// Original time index of each library point.
+    pub lib_times: Vec<f32>,
+    /// Prediction manifold points, `[n_pred, EMAX]` flat.
+    pub pred_vecs: Vec<f32>,
+    /// Observed target at each prediction point (for the skill score).
+    pub pred_targets: Vec<f32>,
+    /// Original time index of each prediction point.
+    pub pred_times: Vec<f32>,
+    /// Embedding dimension in use (k = e+1 neighbours enter the simplex).
+    pub e: usize,
+    /// Exclusion radius: library points with `|t_lib - t_pred| <= theiler`
+    /// are never neighbours. 0 = exclude exact self (rEDM default);
+    /// negative disables exclusion.
+    pub theiler: f32,
+}
+
+impl CrossMapInput {
+    pub fn n_lib(&self) -> usize {
+        self.lib_targets.len()
+    }
+
+    pub fn n_pred(&self) -> usize {
+        self.pred_targets.len()
+    }
+
+    /// Internal consistency check (used by debug asserts and tests).
+    pub fn validate(&self) {
+        assert_eq!(self.lib_vecs.len(), self.n_lib() * EMAX);
+        assert_eq!(self.lib_times.len(), self.n_lib());
+        assert_eq!(self.pred_vecs.len(), self.n_pred() * EMAX);
+        assert_eq!(self.pred_times.len(), self.n_pred());
+        assert!((1..EMAX + 1).contains(&self.e));
+        assert!(self.e + 1 <= KMAX);
+    }
+}
+
+/// Cross-map result: prediction skill and the per-point predictions.
+#[derive(Clone, Debug)]
+pub struct CrossMapOutput {
+    /// Pearson correlation between predictions and observations.
+    pub rho: f32,
+    /// Simplex predictions at each prediction point.
+    pub preds: Vec<f32>,
+}
+
+/// Pre-gathered nearest-neighbour panels (the distance-indexing-table
+/// path): squared distances and gathered targets, `[n_pred, KMAX]` flat,
+/// ascending per row, padded with `BIG`/0 when a row has fewer neighbours.
+#[derive(Clone, Debug)]
+pub struct NeighborPanels {
+    pub dvals: Vec<f32>,
+    pub tvals: Vec<f32>,
+    pub n_pred: usize,
+}
+
+/// The backend contract.
+pub trait ComputeBackend: Send + Sync {
+    /// Full cross-map (distances -> top-k -> simplex -> Pearson).
+    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput;
+
+    /// Full pairwise squared-distance matrix of `n` EMAX-padded points
+    /// (row-major `[n, n]`) — the distance-indexing-table construction
+    /// primitive (paper §3.2).
+    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32>;
+
+    /// Simplex + Pearson over pre-gathered neighbour panels — the
+    /// table-mode tail.
+    fn simplex_tail(
+        &self,
+        panels: &NeighborPanels,
+        pred_targets: &[f32],
+        e: usize,
+    ) -> CrossMapOutput;
+
+    /// Human-readable backend name (for logs/benches).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_consistent_input() {
+        let input = CrossMapInput {
+            lib_vecs: vec![0.0; 4 * EMAX],
+            lib_targets: vec![0.0; 4],
+            lib_times: vec![0.0; 4],
+            pred_vecs: vec![0.0; 2 * EMAX],
+            pred_targets: vec![0.0; 2],
+            pred_times: vec![0.0; 2],
+            e: 2,
+            theiler: 0.0,
+        };
+        input.validate();
+        assert_eq!(input.n_lib(), 4);
+        assert_eq!(input.n_pred(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn validate_rejects_mismatched_vecs() {
+        let input = CrossMapInput {
+            lib_vecs: vec![0.0; 3],
+            lib_targets: vec![0.0; 4],
+            lib_times: vec![0.0; 4],
+            pred_vecs: vec![],
+            pred_targets: vec![],
+            pred_times: vec![],
+            e: 2,
+            theiler: 0.0,
+        };
+        input.validate();
+    }
+}

@@ -1,0 +1,108 @@
+//! Convergence assessment: the "C" in CCM.
+//!
+//! A causal link X -> Y is inferred when the skill of cross-mapping X from
+//! M_Y *increases with library size and converges* (Sugihara et al. 2012).
+//! This module turns a set of [`SkillSummary`] rows (one per L) into a
+//! verdict.
+
+use crate::ccm::result::SkillSummary;
+
+/// Convergence analysis across library sizes for a fixed (E, tau).
+#[derive(Clone, Debug)]
+pub struct ConvergenceVerdict {
+    /// Mean skill at the smallest library size.
+    pub rho_min_l: f64,
+    /// Mean skill at the largest library size.
+    pub rho_max_l: f64,
+    /// rho(Lmax) - rho(Lmin).
+    pub delta: f64,
+    /// Monotone non-decreasing trend across the L sweep (tolerance for
+    /// sampling noise).
+    pub increasing: bool,
+    /// Verdict: skill is meaningfully positive and grew with L.
+    pub causal: bool,
+}
+
+/// Assess convergence from per-L summaries (must share (E, tau); sorted
+/// internally by L).
+///
+/// `min_rho` is the skill floor (default 0.1 in callers) and `min_delta`
+/// the required improvement from Lmin to Lmax.
+pub fn assess(summaries: &[SkillSummary], min_rho: f64, min_delta: f64) -> ConvergenceVerdict {
+    assert!(!summaries.is_empty(), "no summaries to assess");
+    let mut by_l: Vec<&SkillSummary> = summaries.iter().collect();
+    by_l.sort_by_key(|s| s.params.l);
+    let rho_min_l = by_l.first().unwrap().mean_rho;
+    let rho_max_l = by_l.last().unwrap().mean_rho;
+    let delta = rho_max_l - rho_min_l;
+    // allow small dips (half a std-dev of the noisier end) between steps
+    let tol = by_l.iter().map(|s| s.std_rho).fold(0.0f64, f64::max) * 0.5 + 1e-9;
+    let increasing = by_l.windows(2).all(|w| w[1].mean_rho >= w[0].mean_rho - tol);
+    ConvergenceVerdict {
+        rho_min_l,
+        rho_max_l,
+        delta,
+        increasing,
+        causal: rho_max_l >= min_rho && delta >= min_delta && increasing,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::params::CcmParams;
+
+    fn summary(l: usize, mean: f64, std: f64) -> SkillSummary {
+        SkillSummary { params: CcmParams::new(2, 1, l), n: 10, mean_rho: mean, std_rho: std, q05: 0.0, q95: 1.0 }
+    }
+
+    #[test]
+    fn converging_series_is_causal() {
+        let v = assess(
+            &[summary(50, 0.4, 0.05), summary(100, 0.7, 0.03), summary(200, 0.85, 0.02)],
+            0.1,
+            0.05,
+        );
+        assert!(v.causal);
+        assert!(v.increasing);
+        assert!((v.delta - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_weak_skill_not_causal() {
+        let v = assess(
+            &[summary(50, 0.02, 0.05), summary(100, 0.03, 0.05), summary(200, 0.01, 0.05)],
+            0.1,
+            0.05,
+        );
+        assert!(!v.causal);
+    }
+
+    #[test]
+    fn decreasing_skill_not_causal() {
+        let v = assess(
+            &[summary(50, 0.8, 0.01), summary(100, 0.5, 0.01), summary(200, 0.3, 0.01)],
+            0.1,
+            0.05,
+        );
+        assert!(!v.increasing);
+        assert!(!v.causal);
+    }
+
+    #[test]
+    fn noise_tolerance_allows_small_dips() {
+        let v = assess(
+            &[summary(50, 0.40, 0.10), summary(100, 0.39, 0.10), summary(200, 0.70, 0.05)],
+            0.1,
+            0.05,
+        );
+        assert!(v.increasing, "small dip within noise should not break the trend");
+        assert!(v.causal);
+    }
+
+    #[test]
+    #[should_panic(expected = "no summaries")]
+    fn empty_panics() {
+        assess(&[], 0.1, 0.05);
+    }
+}

@@ -1,0 +1,303 @@
+//! The experiment driver: the paper's five implementation levels
+//! (Table 1) over a [`Scenario`].
+//!
+//! | Case | Description                                               |
+//! |------|-----------------------------------------------------------|
+//! | A1   | Single-threaded CCM (no RDD & pipeline)                   |
+//! | A2   | Synchronous CCM transform pipelines                       |
+//! | A3   | Asynchronous CCM transform pipelines                      |
+//! | A4   | Synchronous distance-indexing-table + transform pipelines |
+//! | A5   | Asynchronous distance-indexing-table + transform pipelines|
+//!
+//! Each case produces identical skills for identical seeds (asserted by
+//! integration tests) — the cases differ only in *how* the work is
+//! scheduled, which is exactly what the paper's Fig. 4 measures.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::ccm::backend::ComputeBackend;
+use crate::ccm::params::Scenario;
+use crate::ccm::pipeline::{
+    ccm_transform_rdd, table_pipeline, table_transform_rdd, CcmProblem,
+};
+use crate::ccm::result::SkillRow;
+use crate::ccm::subsample::draw_samples;
+use crate::engine::{Context, Deploy, EngineConfig, ExecutionReport};
+use crate::util::rng::Rng;
+
+/// The paper's implementation levels (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Case {
+    /// Single-threaded, engine-free loop.
+    A1,
+    /// Engine, brute-force k-NN, jobs submitted synchronously.
+    A2,
+    /// Engine, brute-force k-NN, jobs submitted asynchronously.
+    A3,
+    /// Engine, distance indexing table, synchronous.
+    A4,
+    /// Engine, distance indexing table, asynchronous.
+    A5,
+}
+
+impl Case {
+    pub const ALL: [Case; 5] = [Case::A1, Case::A2, Case::A3, Case::A4, Case::A5];
+
+    /// Table 1 wording.
+    pub fn description(&self) -> &'static str {
+        match self {
+            Case::A1 => "Single-threaded CCM (no RDD & Pipeline)",
+            Case::A2 => "Synchronous CCM Transform Pipelines",
+            Case::A3 => "Asynchronous CCM Transform Pipelines",
+            Case::A4 => "Synchronous Distance Indexing Table & CCM Transform Pipelines",
+            Case::A5 => "Asynchronous Distance Indexing Table & CCM Transform Pipelines",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Case::A1 => "A1",
+            Case::A2 => "A2",
+            Case::A3 => "A3",
+            Case::A4 => "A4",
+            Case::A5 => "A5",
+        }
+    }
+
+    pub fn uses_table(&self) -> bool {
+        matches!(self, Case::A4 | Case::A5)
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, Case::A3 | Case::A5)
+    }
+}
+
+/// Outcome of one case run.
+pub struct CaseReport {
+    pub case: Case,
+    /// Per-realization skills for every (E, tau, L) combination.
+    pub skills: Vec<SkillRow>,
+    /// Measured + DES-simulated costs (for A1 the two coincide).
+    pub report: ExecutionReport,
+}
+
+/// Run `case` over `scenario`, cross-mapping `cause` from the shadow
+/// manifold of `effect` (i.e. testing cause -> effect causality).
+pub fn run_case(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploy: Deploy,
+    backend: Arc<dyn ComputeBackend>,
+) -> CaseReport {
+    match case {
+        Case::A1 => run_a1(scenario, effect, cause, backend),
+        _ => {
+            let (skills, mut reports) =
+                run_engine_case(case, scenario, effect, cause, &[deploy], backend);
+            CaseReport { case, skills, report: reports.remove(0) }
+        }
+    }
+}
+
+/// Like [`run_case`] but costs ONE real execution on MANY topologies via
+/// DES replay (numerics never depend on the deploy, so this is exact and
+/// saves re-running expensive cases per topology — e.g. Fig. 4's
+/// Local-vs-Yarn comparison).
+pub fn run_case_multi(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploys: &[Deploy],
+    backend: Arc<dyn ComputeBackend>,
+) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+    match case {
+        Case::A1 => {
+            let rep = run_a1(scenario, effect, cause, backend);
+            let reports = deploys.iter().map(|_| rep.report.clone()).collect();
+            (rep.skills, reports)
+        }
+        _ => run_engine_case(case, scenario, effect, cause, deploys, backend),
+    }
+}
+
+/// Case A1: plain sequential loop, no engine. The measured wallclock *is*
+/// the report (a single-threaded run has nothing to simulate).
+fn run_a1(
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    backend: Arc<dyn ComputeBackend>,
+) -> CaseReport {
+    let t = Instant::now();
+    let master = Rng::new(scenario.seed);
+    let mut skills = Vec::new();
+    for &e in &scenario.es {
+        for &tau in &scenario.taus {
+            let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
+            for &l in &scenario.ls {
+                let params = crate::ccm::params::CcmParams::new(e, tau, l);
+                for sample in draw_samples(&master, params, problem.emb.n, scenario.r) {
+                    let input = problem.input_for(&sample);
+                    let out = backend.cross_map(&input);
+                    skills.push(SkillRow { params, sample_id: sample.sample_id, rho: out.rho });
+                }
+            }
+        }
+    }
+    let wall = t.elapsed().as_secs_f64();
+    CaseReport {
+        case: Case::A1,
+        skills,
+        report: ExecutionReport {
+            measured_wall_s: wall,
+            total_task_s: wall,
+            sim_makespan_s: wall,
+            sim_utilization: 1.0,
+            sim_broadcast_ship_s: 0.0,
+            topology: "single-thread".to_string(),
+        },
+    }
+}
+
+/// Cases A2–A5: engine-scheduled pipelines. Executes once; returns one
+/// [`ExecutionReport`] per requested deploy (DES replays of the same log).
+fn run_engine_case(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploys: &[Deploy],
+    backend: Arc<dyn ComputeBackend>,
+) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+    let ctx = Context::new(
+        EngineConfig::new(deploys[0].clone()).with_default_parallelism(scenario.partitions),
+    );
+    let master = Rng::new(scenario.seed);
+    let mut skills = Vec::new();
+
+    // One problem + (optionally) one distance table per (E, tau); L only
+    // affects the subsample draws. In the asynchronous cases (§3.3 /
+    // Fig. 3) ALL combinations' transform jobs are submitted before any is
+    // harvested, so independent pipelines overlap across the whole grid;
+    // the synchronous cases block on every action.
+    let mut pending = Vec::new();
+    for &e in &scenario.es {
+        for &tau in &scenario.taus {
+            let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
+            let n_manifold = problem.emb.n;
+            let size = problem.size_bytes();
+            let problem_b = ctx.broadcast(problem, size);
+
+            // The distance indexing table is a hard dependency of its
+            // transform jobs: its (internally parallel) pipeline blocks the
+            // driver, exactly like the barrier in the paper's Fig. 2/3 DAG.
+            let table_b = if case.uses_table() {
+                Some(table_pipeline(&ctx, &problem_b, scenario.partitions))
+            } else {
+                None
+            };
+
+            for &l in &scenario.ls {
+                let params = crate::ccm::params::CcmParams::new(e, tau, l);
+                let samples = draw_samples(&master, params, n_manifold, scenario.r);
+                let rdd = ctx.parallelize_with(samples, scenario.partitions);
+                let skill_rdd = match &table_b {
+                    Some(table) => {
+                        table_transform_rdd(&ctx, rdd, &problem_b, table, Arc::clone(&backend))
+                    }
+                    None => ccm_transform_rdd(&ctx, rdd, &problem_b, Arc::clone(&backend)),
+                };
+                if case.is_async() {
+                    pending.push(ctx.collect_async(&skill_rdd));
+                } else {
+                    skills.extend(ctx.collect(&skill_rdd));
+                }
+            }
+        }
+    }
+    for fa in pending {
+        skills.extend(fa.get());
+    }
+
+    let reports = deploys.iter().map(|d| ctx.report_for(d.clone())).collect();
+    (skills, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::NativeBackend;
+    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+
+    fn series() -> (Vec<f32>, Vec<f32>) {
+        coupled_logistic(300, CoupledLogisticParams::default())
+    }
+
+    fn sorted_skills(mut rows: Vec<SkillRow>) -> Vec<(usize, usize, usize, usize, f32)> {
+        rows.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
+        rows.iter()
+            .map(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id, r.rho))
+            .collect()
+    }
+
+    #[test]
+    fn all_cases_agree_on_skills() {
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let deploy = Deploy::Local { cores: 2 };
+        let a1 = run_case(Case::A1, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let expected = sorted_skills(a1.skills);
+        assert_eq!(
+            expected.len(),
+            scenario.combos().len() * scenario.r,
+            "A1 skill count"
+        );
+        for case in [Case::A2, Case::A3, Case::A4, Case::A5] {
+            let rep = run_case(case, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+            let got = sorted_skills(rep.skills);
+            assert_eq!(got.len(), expected.len(), "{case:?} skill count");
+            for (a, b) in expected.iter().zip(&got) {
+                assert_eq!((a.0, a.1, a.2, a.3), (b.0, b.1, b.2, b.3), "{case:?} keys");
+                assert!(
+                    (a.4 - b.4).abs() < 1e-5,
+                    "{case:?}: rho {} vs A1 {} at {:?}",
+                    b.4,
+                    a.4,
+                    (a.0, a.1, a.2, a.3)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn case_metadata() {
+        assert!(Case::A5.uses_table() && Case::A5.is_async());
+        assert!(Case::A4.uses_table() && !Case::A4.is_async());
+        assert!(!Case::A2.uses_table() && !Case::A2.is_async());
+        assert_eq!(Case::ALL.len(), 5);
+        assert!(Case::A1.description().contains("Single-threaded"));
+    }
+
+    #[test]
+    fn engine_cases_record_jobs() {
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let rep = run_case(
+            Case::A5,
+            &scenario,
+            &y,
+            &x,
+            Deploy::paper_cluster(),
+            Arc::new(NativeBackend),
+        );
+        assert!(rep.report.sim_makespan_s > 0.0);
+        assert!(rep.report.measured_wall_s > 0.0);
+        assert_eq!(rep.report.topology, "cluster(5x4)");
+    }
+}

@@ -1,0 +1,133 @@
+//! Lagged-coordinate embedding (Takens reconstruction).
+//!
+//! Row `i` of the embedding is the vector
+//! `[y[t], y[t-tau], ..., y[t-(E-1)tau]]` with `t = (E-1)*tau + i`, i.e.
+//! every time index that has a full history. Vectors are stored flat,
+//! zero-padded to [`crate::EMAX`] lanes — the backend/artifact contract
+//! (zero padding is distance-invariant).
+
+use crate::EMAX;
+
+/// A shadow manifold: `n` points of an `e`-dimensional reconstruction,
+/// stored row-major with EMAX-lane padding.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    /// Flat `[n, EMAX]` row-major vectors.
+    pub vecs: Vec<f32>,
+    /// Number of manifold points.
+    pub n: usize,
+    /// Active embedding dimension (<= EMAX).
+    pub e: usize,
+    /// Embedding delay.
+    pub tau: usize,
+    /// Time index of row 0 in the original series (= `(e-1)*tau`).
+    pub t0: usize,
+}
+
+impl Embedding {
+    /// Embed `series` with dimension `e` and delay `tau`.
+    ///
+    /// Panics if the series is too short to produce at least one vector.
+    pub fn new(series: &[f32], e: usize, tau: usize) -> Embedding {
+        assert!((1..=EMAX).contains(&e), "E must be in 1..={EMAX}, got {e}");
+        assert!(tau >= 1, "tau must be >= 1");
+        let offset = (e - 1) * tau;
+        assert!(
+            series.len() > offset,
+            "series of length {} cannot be embedded with E={e}, tau={tau}",
+            series.len()
+        );
+        let n = series.len() - offset;
+        let mut vecs = vec![0.0f32; n * EMAX];
+        for i in 0..n {
+            let t = offset + i;
+            for j in 0..e {
+                vecs[i * EMAX + j] = series[t - j * tau];
+            }
+        }
+        Embedding { vecs, n, e, tau, t0: offset }
+    }
+
+    /// The manifold point at row `i` (EMAX lanes, zero-padded).
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.vecs[i * EMAX..(i + 1) * EMAX]
+    }
+
+    /// Original-series time index of row `i`.
+    pub fn time_of(&self, i: usize) -> usize {
+        self.t0 + i
+    }
+
+    /// Align a co-observed series to the manifold rows: `out[i]` is the
+    /// value of `other` at the time of manifold point `i`. This is the
+    /// "target" vector cross-mapping predicts.
+    pub fn align_targets(&self, other: &[f32]) -> Vec<f32> {
+        assert!(
+            other.len() >= self.t0 + self.n,
+            "target series too short: {} < {}",
+            other.len(),
+            self.t0 + self.n
+        );
+        (0..self.n).map(|i| other[self.time_of(i)]).collect()
+    }
+
+    /// Approximate in-memory size (for broadcast accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.vecs.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embeds_with_correct_lags() {
+        let series: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let emb = Embedding::new(&series, 3, 2);
+        // offset = 4; first vector at t=4: [4, 2, 0]
+        assert_eq!(emb.n, 6);
+        assert_eq!(emb.t0, 4);
+        assert_eq!(&emb.point(0)[..3], &[4.0, 2.0, 0.0]);
+        assert_eq!(&emb.point(5)[..3], &[9.0, 7.0, 5.0]);
+        // padding lanes zero
+        assert!(emb.point(0)[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn e1_is_identity() {
+        let series: Vec<f32> = vec![5.0, 6.0, 7.0];
+        let emb = Embedding::new(&series, 1, 3);
+        assert_eq!(emb.n, 3);
+        assert_eq!(emb.t0, 0);
+        assert_eq!(&emb.point(1)[..1], &[6.0]);
+    }
+
+    #[test]
+    fn align_targets_matches_times() {
+        let y: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let x: Vec<f32> = (0..10).map(|i| (i * 10) as f32).collect();
+        let emb = Embedding::new(&y, 2, 3);
+        let t = emb.align_targets(&x);
+        assert_eq!(t.len(), emb.n);
+        assert_eq!(t[0], 30.0); // t0 = 3
+        assert_eq!(t[6], 90.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be embedded")]
+    fn rejects_short_series() {
+        Embedding::new(&[1.0, 2.0], 3, 2);
+    }
+
+    #[test]
+    fn time_roundtrip() {
+        let series: Vec<f32> = (0..50).map(|i| (i as f32).sin()).collect();
+        let emb = Embedding::new(&series, 4, 2);
+        for i in 0..emb.n {
+            let t = emb.time_of(i);
+            assert_eq!(emb.point(i)[0], series[t]);
+            assert_eq!(emb.point(i)[3], series[t - 6]);
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Convergent Cross Mapping: the algorithm, its data structures, and the
+//! paper's two parallel pipelines built on the [`crate::engine`].
+//!
+//! The flow mirrors Sugihara et al. (2012) / rEDM semantics:
+//!
+//! 1. [`embedding`] — lagged-coordinate reconstruction of the shadow
+//!    manifold `M_Y` from the candidate *effect* series Y.
+//! 2. [`subsample`] — draw `r` random libraries of size `L` from `M_Y`.
+//! 3. k-NN + [`backend`] simplex projection — predict the *cause* series X
+//!    at every manifold point from each library's E+1 nearest neighbours
+//!    (self-matches excluded).
+//! 4. Pearson skill + [`convergence`] — `rho(L)` increasing and
+//!    plateauing with library size is the CCM causality signature.
+//!
+//! The paper's contributions map to:
+//! * [`pipeline::ccm_transform_pipeline`] — §3.1, the per-subsample
+//!   cross-map as an RDD transform chain;
+//! * [`table::DistanceTable`] + [`pipeline::table_pipeline`] — §3.2, the
+//!   broadcast distance indexing table that replaces per-subsample
+//!   brute-force k-NN with filtered lookups;
+//! * [`driver`] — §4/Table 1, the five implementation levels A1–A5
+//!   (sync/async x with/without the table, plus the engine-free A1).
+
+pub mod backend;
+pub mod convergence;
+pub mod driver;
+pub mod embedding;
+pub mod forecast;
+pub mod knn;
+pub mod lagmap;
+pub mod params;
+pub mod pipeline;
+pub mod result;
+pub mod select;
+pub mod simplex;
+pub mod subsample;
+pub mod surrogate;
+pub mod table;
+
+pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput};
+pub use driver::{Case, CaseReport};
+pub use embedding::Embedding;
+pub use params::{CcmParams, Scenario};
+pub use result::{SkillRow, SkillSummary};
+pub use table::DistanceTable;

@@ -1,0 +1,169 @@
+//! CCM parameters and experiment scenarios.
+
+/// One `(E, tau, L)` parameter combination — the paper's sensitivity
+/// parameters (§1): embedding dimension, embedding delay, library size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CcmParams {
+    /// Embedding dimension (1..=10; simplex uses E+1 neighbours).
+    pub e: usize,
+    /// Embedding delay.
+    pub tau: usize,
+    /// Library size: number of manifold points sampled per realization.
+    pub l: usize,
+}
+
+impl CcmParams {
+    pub fn new(e: usize, tau: usize, l: usize) -> CcmParams {
+        assert!((1..=10).contains(&e), "E must be in 1..=10, got {e}");
+        assert!(tau >= 1, "tau must be >= 1");
+        assert!(l >= e + 2, "library size {l} too small for E={e}");
+        CcmParams { e, tau, l }
+    }
+
+    /// Number of neighbours used by simplex projection.
+    pub fn k(&self) -> usize {
+        self.e + 1
+    }
+}
+
+/// A full experiment scenario: the parameter grid, the number of random
+/// realizations, and the input series length.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Input time-series length.
+    pub series_len: usize,
+    /// Number of random library subsamples per combination (paper: 500).
+    pub r: usize,
+    /// Library sizes to sweep (convergence axis).
+    pub ls: Vec<usize>,
+    /// Embedding dimensions to sweep.
+    pub es: Vec<usize>,
+    /// Embedding delays to sweep.
+    pub taus: Vec<usize>,
+    /// Theiler exclusion radius (0 = exclude self only, rEDM default).
+    pub theiler: usize,
+    /// Master RNG seed.
+    pub seed: u64,
+    /// Partitions per pipeline job (Spark default parallelism analogue).
+    pub partitions: usize,
+}
+
+impl Scenario {
+    /// The paper's baseline scenario (§4): series 4000, r = 500,
+    /// L in {500, 1000, 2000}, E and tau in {1, 2, 4}.
+    pub fn paper_baseline() -> Scenario {
+        Scenario {
+            series_len: 4000,
+            r: 500,
+            ls: vec![500, 1000, 2000],
+            es: vec![1, 2, 4],
+            taus: vec![1, 2, 4],
+            theiler: 0,
+            seed: 20190101,
+            partitions: 40,
+        }
+    }
+
+    /// A 1-core-friendly scaled version preserving the baseline's shape
+    /// (same grid structure, ~1/8 the series, 1/10 the realizations). Used
+    /// by CI and default bench runs; `--full` switches to
+    /// [`Scenario::paper_baseline`].
+    pub fn scaled_baseline() -> Scenario {
+        Scenario {
+            series_len: 1000,
+            r: 50,
+            ls: vec![125, 250, 500],
+            es: vec![1, 2, 4],
+            taus: vec![1, 2, 4],
+            theiler: 0,
+            seed: 20190101,
+            partitions: 10,
+        }
+    }
+
+    /// A tiny smoke scenario for unit/integration tests.
+    pub fn smoke() -> Scenario {
+        Scenario {
+            series_len: 300,
+            r: 8,
+            ls: vec![50, 100],
+            es: vec![2],
+            taus: vec![1],
+            theiler: 0,
+            seed: 7,
+            partitions: 4,
+        }
+    }
+
+    /// All `(E, tau, L)` combinations, L-major (the paper loops L for the
+    /// convergence axis within each (E, tau) cell).
+    pub fn combos(&self) -> Vec<CcmParams> {
+        let mut out = Vec::new();
+        for &e in &self.es {
+            for &tau in &self.taus {
+                for &l in &self.ls {
+                    out.push(CcmParams::new(e, tau, l));
+                }
+            }
+        }
+        out
+    }
+
+    /// Largest embedded-manifold size across the grid (for table sizing):
+    /// `series_len - (E-1)*tau` at the maximal (E, tau).
+    pub fn max_manifold_points(&self) -> usize {
+        self.series_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combos_cover_grid_in_order() {
+        let s = Scenario {
+            series_len: 100,
+            r: 1,
+            ls: vec![10, 20],
+            es: vec![1, 2],
+            taus: vec![1],
+            theiler: 0,
+            seed: 0,
+            partitions: 1,
+        };
+        let c = s.combos();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[0], CcmParams::new(1, 1, 10));
+        assert_eq!(c[1], CcmParams::new(1, 1, 20));
+        assert_eq!(c[2], CcmParams::new(2, 1, 10));
+    }
+
+    #[test]
+    fn paper_baseline_matches_section4() {
+        let s = Scenario::paper_baseline();
+        assert_eq!(s.series_len, 4000);
+        assert_eq!(s.r, 500);
+        assert_eq!(s.ls, vec![500, 1000, 2000]);
+        assert_eq!(s.es, vec![1, 2, 4]);
+        assert_eq!(s.taus, vec![1, 2, 4]);
+        assert_eq!(s.combos().len(), 27);
+    }
+
+    #[test]
+    #[should_panic(expected = "E must be in 1..=10")]
+    fn rejects_bad_e() {
+        CcmParams::new(11, 1, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn rejects_tiny_library() {
+        CcmParams::new(4, 1, 5);
+    }
+
+    #[test]
+    fn k_is_e_plus_one() {
+        assert_eq!(CcmParams::new(3, 2, 100).k(), 4);
+    }
+}

@@ -1,0 +1,225 @@
+//! The paper's two parallel pipelines, expressed on the engine.
+//!
+//! * [`ccm_transform_rdd`] — §3.1: transform an RDD of library subsamples
+//!   into an RDD of prediction skills (brute-force k-NN inside each task).
+//! * [`table_pipeline`] / [`table_transform_rdd`] — §3.2: build the
+//!   distance indexing table in parallel over manifold-row chunks,
+//!   broadcast it, then run the CCM transform as cheap table lookups.
+//!
+//! Both return *lazy* RDDs; the driver chooses blocking (`collect`) or
+//! asynchronous (`collect_async`) submission — §3.3.
+
+use std::sync::Arc;
+
+use crate::ccm::backend::{ComputeBackend, CrossMapInput};
+use crate::ccm::embedding::Embedding;
+use crate::ccm::result::SkillRow;
+use crate::ccm::subsample::LibrarySample;
+use crate::ccm::table::{library_mask, DistanceTable};
+use crate::engine::{Broadcast, Context, Rdd};
+use crate::EMAX;
+
+/// The cross-mapping problem shared by every task: the effect-series
+/// shadow manifold and the cause-series targets aligned to it.
+pub struct CcmProblem {
+    pub emb: Embedding,
+    /// Cause value at each manifold row's time.
+    pub targets: Vec<f32>,
+    /// Theiler exclusion radius (0 = self only).
+    pub theiler: f32,
+}
+
+impl CcmProblem {
+    pub fn new(effect: &[f32], cause: &[f32], e: usize, tau: usize, theiler: f32) -> CcmProblem {
+        let emb = Embedding::new(effect, e, tau);
+        let targets = emb.align_targets(cause);
+        CcmProblem { emb, targets, theiler }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.emb.size_bytes() + self.targets.len() * 4
+    }
+
+    /// Assemble the brute-force [`CrossMapInput`] for one library sample.
+    pub fn input_for(&self, sample: &LibrarySample) -> CrossMapInput {
+        let l = sample.rows.len();
+        let mut lib_vecs = Vec::with_capacity(l * EMAX);
+        let mut lib_targets = Vec::with_capacity(l);
+        let mut lib_times = Vec::with_capacity(l);
+        for &row in &sample.rows {
+            lib_vecs.extend_from_slice(self.emb.point(row));
+            lib_targets.push(self.targets[row]);
+            lib_times.push(self.emb.time_of(row) as f32);
+        }
+        CrossMapInput {
+            lib_vecs,
+            lib_targets,
+            lib_times,
+            pred_vecs: self.emb.vecs.clone(),
+            pred_targets: self.targets.clone(),
+            pred_times: (0..self.emb.n).map(|i| self.emb.time_of(i) as f32).collect(),
+            e: sample.params.e,
+            theiler: self.theiler,
+        }
+    }
+}
+
+/// §3.1 — the CCM transform pipeline: subsamples -> prediction skills via
+/// brute-force k-NN + simplex inside each task.
+pub fn ccm_transform_rdd(
+    _ctx: &Context,
+    samples: Rdd<LibrarySample>,
+    problem: &Broadcast<CcmProblem>,
+    backend: Arc<dyn ComputeBackend>,
+) -> Rdd<SkillRow> {
+    let problem = problem.clone();
+    samples
+        .uses_broadcast(&problem)
+        .map_partitions(move |_p, samples| {
+            let prob = problem.value();
+            samples
+                .into_iter()
+                .map(|s| {
+                    let input = prob.input_for(&s);
+                    let out = backend.cross_map(&input);
+                    SkillRow { params: s.params, sample_id: s.sample_id, rho: out.rho }
+                })
+                .collect()
+        })
+}
+
+/// §3.2 (construction) — build the distance indexing table in parallel:
+/// one task per chunk of manifold rows, each computing its rows' sorted
+/// neighbour lists; the driver assembles and broadcasts.
+///
+/// Blocking (the table is a hard dependency of its transform jobs); the
+/// asynchronous driver overlaps *different* (E, tau) tables instead.
+pub fn table_pipeline(
+    ctx: &Context,
+    problem: &Broadcast<CcmProblem>,
+    partitions: usize,
+) -> Broadcast<DistanceTable> {
+    let n = problem.value().emb.n;
+    let rows_rdd = ctx.parallelize_with((0..n).collect::<Vec<usize>>(), partitions);
+    let prob = problem.clone();
+    let sorted = rows_rdd.uses_broadcast(&prob).map_partitions(move |_p, rows| {
+        let emb = &prob.value().emb;
+        rows.into_iter()
+            .map(|i| (i, DistanceTable::sorted_row(emb, i)))
+            .collect()
+    });
+    let mut rows: Vec<(usize, Vec<u32>)> = ctx.collect(&sorted);
+    rows.sort_by_key(|(i, _)| *i);
+    let table = DistanceTable::assemble(
+        &problem.value().emb,
+        rows.into_iter().map(|(_, r)| r).collect(),
+    );
+    let size = table.size_bytes();
+    ctx.broadcast(table, size)
+}
+
+/// §3.2 (use) — the CCM transform pipeline with the broadcast table:
+/// k-NN becomes a filtered walk of the precomputed sorted lists, then the
+/// simplex/Pearson tail runs on the backend.
+pub fn table_transform_rdd(
+    _ctx: &Context,
+    samples: Rdd<LibrarySample>,
+    problem: &Broadcast<CcmProblem>,
+    table: &Broadcast<DistanceTable>,
+    backend: Arc<dyn ComputeBackend>,
+) -> Rdd<SkillRow> {
+    let problem = problem.clone();
+    let table = table.clone();
+    samples
+        .uses_broadcast(&problem)
+        .uses_broadcast(&table)
+        .map_partitions(move |_p, samples| {
+            let prob = problem.value();
+            let tab = table.value();
+            samples
+                .into_iter()
+                .map(|s| {
+                    let (mask, target_of) = library_mask(tab.n, &s.rows, &prob.targets);
+                    let panels = tab.query_all(&mask, &target_of, prob.theiler);
+                    let out = backend.simplex_tail(&panels, &prob.targets, s.params.e);
+                    SkillRow { params: s.params, sample_id: s.sample_id, rho: out.rho }
+                })
+                .collect()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::params::CcmParams;
+    use crate::ccm::subsample::draw_samples;
+    use crate::engine::{Deploy, EngineConfig};
+    use crate::native::NativeBackend;
+    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Context, Broadcast<CcmProblem>, Vec<LibrarySample>) {
+        let ctx = Context::new(
+            EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(4),
+        );
+        let (x, y) = coupled_logistic(400, CoupledLogisticParams::default());
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let size = problem.size_bytes();
+        let b = ctx.broadcast(problem, size);
+        let samples = draw_samples(&Rng::new(9), CcmParams::new(2, 1, 150), 399, 12);
+        (ctx, b, samples)
+    }
+
+    #[test]
+    fn transform_pipeline_produces_skill_rows() {
+        let (ctx, problem, samples) = setup();
+        let rdd = ctx.parallelize_with(samples, 4);
+        let skills = ctx.collect(&ccm_transform_rdd(&ctx, rdd, &problem, Arc::new(NativeBackend)));
+        assert_eq!(skills.len(), 12);
+        // coupled system: every realization should show solid skill
+        assert!(skills.iter().all(|s| s.rho > 0.5), "{:?}", skills.iter().map(|s| s.rho).collect::<Vec<_>>());
+        // sample ids all present
+        let mut ids: Vec<usize> = skills.iter().map(|s| s.sample_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn table_mode_equals_bruteforce_mode() {
+        // §3.2 is an optimization, not an approximation: identical rho.
+        let (ctx, problem, samples) = setup();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let rdd = ctx.parallelize_with(samples.clone(), 4);
+        let brute = ctx.collect(&ccm_transform_rdd(&ctx, rdd, &problem, Arc::clone(&backend)));
+
+        let table = table_pipeline(&ctx, &problem, 4);
+        let rdd2 = ctx.parallelize_with(samples, 4);
+        let tabled =
+            ctx.collect(&table_transform_rdd(&ctx, rdd2, &problem, &table, backend));
+
+        assert_eq!(brute.len(), tabled.len());
+        for (a, b) in brute.iter().zip(&tabled) {
+            assert_eq!(a.sample_id, b.sample_id);
+            assert!(
+                (a.rho - b.rho).abs() < 1e-5,
+                "sample {}: brute {} vs table {}",
+                a.sample_id,
+                a.rho,
+                b.rho
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_deps_recorded_for_des() {
+        let (ctx, problem, samples) = setup();
+        let table = table_pipeline(&ctx, &problem, 4);
+        let rdd = ctx.parallelize_with(samples, 4);
+        let out = table_transform_rdd(&ctx, rdd, &problem, &table, Arc::new(NativeBackend));
+        let _ = ctx.collect(&out);
+        let jobs = ctx.events().jobs();
+        let last = jobs.last().unwrap();
+        assert_eq!(last.broadcast_deps.len(), 2, "problem + table deps expected");
+        assert!(last.broadcast_deps.iter().any(|(id, _)| *id == table.id()));
+    }
+}

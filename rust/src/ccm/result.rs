@@ -1,0 +1,99 @@
+//! Result types: per-realization skills and per-combination summaries.
+
+use std::collections::BTreeMap;
+
+use crate::ccm::params::CcmParams;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Cross-map skill of one realization (one library subsample).
+#[derive(Clone, Copy, Debug)]
+pub struct SkillRow {
+    pub params: CcmParams,
+    pub sample_id: usize,
+    pub rho: f32,
+}
+
+/// Aggregated skill for one `(E, tau, L)` combination.
+#[derive(Clone, Debug)]
+pub struct SkillSummary {
+    pub params: CcmParams,
+    pub n: usize,
+    pub mean_rho: f64,
+    pub std_rho: f64,
+    pub q05: f64,
+    pub q95: f64,
+}
+
+/// Group skill rows by combination and summarize (sorted by (E, tau, L)).
+pub fn summarize(rows: &[SkillRow]) -> Vec<SkillSummary> {
+    let mut groups: BTreeMap<(usize, usize, usize), Vec<f64>> = BTreeMap::new();
+    for row in rows {
+        groups
+            .entry((row.params.e, row.params.tau, row.params.l))
+            .or_default()
+            .push(row.rho as f64);
+    }
+    groups
+        .into_iter()
+        .map(|((e, tau, l), rhos)| SkillSummary {
+            params: CcmParams::new(e, tau, l),
+            n: rhos.len(),
+            mean_rho: stats::mean(&rhos),
+            std_rho: stats::stddev(&rhos),
+            q05: stats::percentile(&rhos, 5.0),
+            q95: stats::percentile(&rhos, 95.0),
+        })
+        .collect()
+}
+
+impl SkillSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("e", Json::Num(self.params.e as f64)),
+            ("tau", Json::Num(self.params.tau as f64)),
+            ("l", Json::Num(self.params.l as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("mean_rho", Json::Num(self.mean_rho)),
+            ("std_rho", Json::Num(self.std_rho)),
+            ("q05", Json::Num(self.q05)),
+            ("q95", Json::Num(self.q95)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(e: usize, l: usize, sample_id: usize, rho: f32) -> SkillRow {
+        SkillRow { params: CcmParams::new(e, 1, l), sample_id, rho }
+    }
+
+    #[test]
+    fn groups_and_summarizes() {
+        let rows = vec![
+            row(2, 50, 0, 0.5),
+            row(2, 50, 1, 0.7),
+            row(2, 100, 0, 0.9),
+            row(1, 50, 0, 0.1),
+        ];
+        let s = summarize(&rows);
+        assert_eq!(s.len(), 3);
+        // sorted by (e, tau, l)
+        assert_eq!(s[0].params, CcmParams::new(1, 1, 50));
+        assert_eq!(s[1].params, CcmParams::new(2, 1, 50));
+        assert_eq!(s[1].n, 2);
+        assert!((s[1].mean_rho - 0.6).abs() < 1e-6);
+        assert_eq!(s[2].params, CcmParams::new(2, 1, 100));
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let s = summarize(&[row(2, 50, 0, 0.5)]);
+        let j = s[0].to_json();
+        for key in ["e", "tau", "l", "n", "mean_rho", "std_rho", "q05", "q95"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

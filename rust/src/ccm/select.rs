@@ -1,0 +1,227 @@
+//! Embedding-parameter selection — the methods the paper cites as the
+//! alternative to brute-force sweeps (Cao 1997 [1]; Kantz & Schreiber [4];
+//! Kugiumtzis [5]), provided so users can *choose* (E, tau) instead of
+//! (or before) sweeping them:
+//!
+//! * [`cao_e1`] / [`select_e_cao`] — Cao's minimum embedding dimension:
+//!   E1(d) saturates near 1 once d is sufficient.
+//! * [`mutual_information`] / [`select_tau_ami`] — first minimum of the
+//!   histogram average mutual information picks tau.
+//! * [`select_e_forecast`] — rEDM-style: E maximizing out-of-sample
+//!   simplex forecast skill.
+
+use crate::ccm::embedding::Embedding;
+use crate::ccm::forecast::simplex_forecast;
+use crate::EMAX;
+
+/// Cao's E1 quantity for dimensions `1..=max_e`.
+///
+/// `E1(d) = E(d+1)/E(d)` where `E(d)` is the mean expansion factor of
+/// nearest-neighbour distances when moving from a d- to a (d+1)-
+/// dimensional embedding (Cao 1997, eq. 3, maximum-norm). E1 ≈ 1 and flat
+/// means d is sufficient.
+pub fn cao_e1(series: &[f32], tau: usize, max_e: usize) -> Vec<f64> {
+    let max_e = max_e.min(EMAX - 1);
+    let mut mean_expansion = Vec::new(); // E(d) for d = 1..=max_e
+    for d in 1..=max_e {
+        let emb_d = Embedding::new(series, d, tau);
+        let emb_d1 = Embedding::new(series, d + 1, tau);
+        // align: row i of emb_{d+1} corresponds to row i + tau of emb_d
+        // (emb_{d+1} starts tau later)
+        let n = emb_d1.n;
+        let offset = emb_d.n - n;
+        let mut acc = 0.0f64;
+        let mut count = 0usize;
+        for i in 0..n {
+            // nearest neighbour of point i in d dims (max-norm, excluding self)
+            let qi = i + offset;
+            let mut best = f64::INFINITY;
+            let mut best_j = usize::MAX;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let qj = j + offset;
+                let mut dist = 0.0f64;
+                for l in 0..d {
+                    let diff = (emb_d.point(qi)[l] - emb_d.point(qj)[l]).abs() as f64;
+                    dist = dist.max(diff);
+                }
+                if dist < best {
+                    best = dist;
+                    best_j = j;
+                }
+            }
+            if best_j == usize::MAX || best <= 0.0 {
+                continue;
+            }
+            // expansion in d+1 dims with the SAME neighbour
+            let mut dist1 = 0.0f64;
+            for l in 0..=d {
+                let diff = (emb_d1.point(i)[l] - emb_d1.point(best_j)[l]).abs() as f64;
+                dist1 = dist1.max(diff);
+            }
+            acc += dist1 / best;
+            count += 1;
+        }
+        mean_expansion.push(if count > 0 { acc / count as f64 } else { f64::NAN });
+    }
+    // E1(d) = E(d+1)/E(d)
+    mean_expansion
+        .windows(2)
+        .map(|w| w[1] / w[0])
+        .collect()
+}
+
+/// Smallest d whose E1 has saturated (|E1(d) - 1| < tol) — Cao's minimum
+/// embedding dimension. Falls back to the argmax of E1 when nothing
+/// saturates within `max_e`.
+pub fn select_e_cao(series: &[f32], tau: usize, max_e: usize, tol: f64) -> usize {
+    let e1 = cao_e1(series, tau, max_e);
+    for (idx, v) in e1.iter().enumerate() {
+        if (v - 1.0).abs() < tol {
+            return idx + 1; // E1 index 0 compares d=1 vs d=2 -> E=1 sufficient
+        }
+    }
+    1 + e1
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Histogram average mutual information I(x_t; x_{t+lag}) in nats,
+/// for lags `1..=max_lag` (`bins` equal-width bins).
+pub fn mutual_information(series: &[f32], max_lag: usize, bins: usize) -> Vec<f64> {
+    assert!(bins >= 2);
+    let n = series.len();
+    let lo = series.iter().copied().fold(f32::INFINITY, f32::min) as f64;
+    let hi = series.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let width = ((hi - lo) / bins as f64).max(1e-12);
+    let bin_of = |v: f32| (((v as f64 - lo) / width) as usize).min(bins - 1);
+    (1..=max_lag)
+        .map(|lag| {
+            let m = n - lag;
+            let mut joint = vec![0.0f64; bins * bins];
+            let mut px = vec![0.0f64; bins];
+            let mut py = vec![0.0f64; bins];
+            for t in 0..m {
+                let a = bin_of(series[t]);
+                let b = bin_of(series[t + lag]);
+                joint[a * bins + b] += 1.0;
+                px[a] += 1.0;
+                py[b] += 1.0;
+            }
+            let mut mi = 0.0f64;
+            for a in 0..bins {
+                for b in 0..bins {
+                    let pj = joint[a * bins + b] / m as f64;
+                    if pj > 0.0 {
+                        mi += pj * (pj / (px[a] / m as f64 * py[b] / m as f64)).ln();
+                    }
+                }
+            }
+            mi
+        })
+        .collect()
+}
+
+/// First local minimum of the AMI curve (standard tau heuristic); falls
+/// back to the lag where AMI first drops below 1/e of its lag-1 value,
+/// then to 1.
+pub fn select_tau_ami(series: &[f32], max_lag: usize, bins: usize) -> usize {
+    let ami = mutual_information(series, max_lag, bins);
+    for i in 1..ami.len().saturating_sub(1) {
+        if ami[i] < ami[i - 1] && ami[i] <= ami[i + 1] {
+            return i + 1;
+        }
+    }
+    let threshold = ami.first().copied().unwrap_or(0.0) / std::f64::consts::E;
+    for (i, v) in ami.iter().enumerate() {
+        if *v < threshold {
+            return i + 1;
+        }
+    }
+    1
+}
+
+/// rEDM-style E selection: the dimension in `1..=max_e` with the best
+/// out-of-sample simplex forecast skill. Returns `(best_e, skills)`.
+pub fn select_e_forecast(series: &[f32], tau: usize, max_e: usize) -> (usize, Vec<f64>) {
+    let max_e = max_e.min(EMAX);
+    let skills: Vec<f64> = (1..=max_e)
+        .map(|e| simplex_forecast(series, e, tau, 1).rho as f64)
+        .collect();
+    let best = 1 + skills
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    (best, skills)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timeseries::generators::{coupled_logistic, lorenz63, CoupledLogisticParams};
+    use crate::util::rng::Rng;
+
+    fn logistic(n: usize) -> Vec<f32> {
+        coupled_logistic(n, CoupledLogisticParams { byx: 0.0, bxy: 0.0, ..Default::default() }).0
+    }
+
+    #[test]
+    fn cao_selects_small_e_for_lorenz() {
+        // Lorenz-63 embeds in E ~ 3 (Takens bound 2*2.06+1); Cao's E1
+        // saturates around d = 3-5. (The logistic *map* is deliberately
+        // not used here: Cao's method assumes invertible dynamics, and
+        // non-invertible maps keep E1 < 1 via preimage branching.)
+        let (x, _, _) = lorenz63(1500, 0.01, 3);
+        let e = select_e_cao(&x, 3, 6, 0.12);
+        assert!((3..=6).contains(&e), "Cao E for Lorenz should be 3..6, got {e}");
+    }
+
+    #[test]
+    fn cao_e1_rises_to_one_for_lorenz() {
+        let (x, _, _) = lorenz63(1500, 0.01, 3);
+        let e1 = cao_e1(&x, 3, 6);
+        assert_eq!(e1.len(), 5);
+        assert!(e1[0] < 0.5, "insufficient dimension must show E1 << 1: {e1:?}");
+        let tail = *e1.last().unwrap();
+        assert!((tail - 1.0).abs() < 0.15, "E1 tail {tail} should saturate near 1");
+        assert!(e1.windows(2).all(|w| w[1] >= w[0] - 0.1), "roughly increasing: {e1:?}");
+    }
+
+    #[test]
+    fn forecast_e_selection_prefers_low_e_for_logistic() {
+        let x = logistic(800);
+        let (best, skills) = select_e_forecast(&x, 1, 6);
+        assert!(best <= 3, "logistic map forecast-E should be <= 3: {best} {skills:?}");
+        assert!(skills[best - 1] > 0.9);
+    }
+
+    #[test]
+    fn ami_decreases_then_selects_reasonable_tau_for_lorenz() {
+        let (x, _, _) = lorenz63(3000, 0.01, 2);
+        let ami = mutual_information(&x, 40, 16);
+        assert!(ami[0] > *ami.last().unwrap(), "AMI should decay from lag 1");
+        let tau = select_tau_ami(&x, 40, 16);
+        assert!((3..=40).contains(&tau), "Lorenz AMI tau should be > a few samples: {tau}");
+    }
+
+    #[test]
+    fn ami_of_iid_noise_is_flat_and_tau_is_one() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..2000).map(|_| rng.f32()).collect();
+        let ami = mutual_information(&x, 10, 8);
+        assert!(ami.iter().all(|v| v.abs() < 0.1), "iid noise AMI ~ 0: {ami:?}");
+    }
+
+    #[test]
+    fn mi_nonnegative() {
+        let x = logistic(500);
+        assert!(mutual_information(&x, 12, 12).iter().all(|&v| v >= -1e-9));
+    }
+}

@@ -1,0 +1,148 @@
+//! Native simplex projection — identical weighting to the Pallas kernel:
+//! `w_j = exp(-d_j / d_1)` over euclidean distances (inputs are squared),
+//! floored at 1e-6, over the first `e+1` neighbours.
+
+use crate::KMAX;
+
+/// Predict one point from its neighbour panel (ascending squared
+/// distances + gathered targets, KMAX wide).
+pub fn simplex_one(dvals: &[f32], tvals: &[f32], e: usize) -> f32 {
+    debug_assert_eq!(dvals.len(), KMAX);
+    debug_assert!(e + 1 <= KMAX);
+    let d1 = dvals[0].max(0.0).sqrt().max(1e-30);
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for j in 0..=e {
+        let d = dvals[j].max(0.0).sqrt();
+        let w = (-d / d1).exp().max(1e-6);
+        num += w * tvals[j];
+        den += w;
+    }
+    num / den
+}
+
+/// Batch simplex over flat `[n, KMAX]` panels.
+pub fn simplex_batch(dvals: &[f32], tvals: &[f32], n: usize, e: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| simplex_one(&dvals[i * KMAX..(i + 1) * KMAX], &tvals[i * KMAX..(i + 1) * KMAX], e))
+        .collect()
+}
+
+/// Pearson correlation between two f32 slices (f64 accumulation), 0 when
+/// degenerate — the skill score.
+pub fn pearson_f32(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut sx = 0.0f64;
+    let mut sy = 0.0f64;
+    for i in 0..n {
+        sx += x[i] as f64;
+        sy += y[i] as f64;
+    }
+    let mx = sx / n as f64;
+    let my = sy / n as f64;
+    let mut cov = 0.0f64;
+    let mut vx = 0.0f64;
+    let mut vy = 0.0f64;
+    for i in 0..n {
+        let dx = x[i] as f64 - mx;
+        let dy = y[i] as f64 - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    let denom = (vx * vy).sqrt();
+    if denom > 0.0 {
+        (cov / denom) as f32
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::BIG;
+
+    #[test]
+    fn equidistant_neighbours_average() {
+        let d = [1.0f32; KMAX];
+        let t: Vec<f32> = (0..KMAX as u32).map(|i| i as f32).collect();
+        // e=3 -> neighbours 0..=3, mean 1.5
+        assert!((simplex_one(&d, &t, 3) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearest_dominates_with_distance() {
+        // d1 = 1, all others 100x further: their weights hit the 1e-6
+        // floor and the prediction hugs the nearest target (w0 = e^-1).
+        let mut d = [1.0e4f32; KMAX];
+        d[0] = 1.0;
+        let mut t = [50.0f32; KMAX];
+        t[0] = 5.0;
+        let p = simplex_one(&d, &t, 4);
+        assert!((p - 5.0).abs() < 0.01, "prediction {p} should hug nearest target");
+    }
+
+    #[test]
+    fn exact_match_returns_target() {
+        let mut d = [1.0f32; KMAX];
+        d[0] = 0.0;
+        let mut t = [9.0f32; KMAX];
+        t[0] = 3.0;
+        // d1 = 0 -> w0 = 1, others exp(-inf) floored to 1e-6
+        let p = simplex_one(&d, &t, 5);
+        assert!((p - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn padded_big_slots_carry_no_weight() {
+        let mut d = [BIG; KMAX];
+        let mut t = [777.0f32; KMAX];
+        d[0] = 0.04;
+        t[0] = 2.0;
+        d[1] = 0.09;
+        t[1] = 4.0;
+        // e = 4 but only 2 real neighbours: BIG slots get weight 1e-6.
+        // w0 = exp(-0.2/0.2) = e^-1, w1 = exp(-0.3/0.2) = e^-1.5.
+        let p = simplex_one(&d, &t, 4);
+        let (w0, w1, wpad) = ((-1.0f32).exp(), (-1.5f32).exp(), 1e-6f32);
+        let expected = (w0 * 2.0 + w1 * 4.0 + 3.0 * wpad * 777.0) / (w0 + w1 + 3.0 * wpad);
+        assert!((p - expected).abs() < 1e-4, "{p} vs {expected}");
+    }
+
+    #[test]
+    fn batch_matches_one() {
+        let n = 7;
+        let mut dv = vec![0.0f32; n * KMAX];
+        let mut tv = vec![0.0f32; n * KMAX];
+        for i in 0..n * KMAX {
+            dv[i] = ((i * 13) % 17) as f32 * 0.1 + 0.1;
+            tv[i] = ((i * 7) % 5) as f32;
+        }
+        // rows must be ascending for semantics; sort each row
+        for i in 0..n {
+            let row = &mut dv[i * KMAX..(i + 1) * KMAX];
+            row.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let batch = simplex_batch(&dv, &tv, n, 3);
+        for i in 0..n {
+            let one = simplex_one(&dv[i * KMAX..(i + 1) * KMAX], &tv[i * KMAX..(i + 1) * KMAX], 3);
+            assert_eq!(batch[i], one);
+        }
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        assert!((pearson_f32(&x, &y) - 1.0).abs() < 1e-6);
+        let yneg = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((pearson_f32(&x, &yneg) + 1.0).abs() < 1e-6);
+        assert_eq!(pearson_f32(&x, &[5.0; 4]), 0.0);
+        assert_eq!(pearson_f32(&[], &[]), 0.0);
+    }
+}

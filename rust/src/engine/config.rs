@@ -1,0 +1,141 @@
+//! Engine configuration: deploy topology + cost-model constants.
+
+/// Where (and how wide) jobs run.
+///
+/// The paper compares two submission modes on a Google Cloud cluster:
+/// *Local Mode* (all work on the master node) and *Yarn Mode* (1 master +
+/// 5 workers x 4 cores). This box has one physical core, so topology-level
+/// parallelism is reproduced by the discrete-event simulator ([`crate::engine::des`])
+/// replaying measured task durations against the configured topology.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Deploy {
+    /// One driver thread, no executor parallelism (paper Case A1 substrate).
+    SingleThread,
+    /// Master-node only, `cores` executor slots (paper "Local Mode").
+    Local { cores: usize },
+    /// `workers` worker nodes with `cores_per_worker` slots each
+    /// (paper "Yarn Mode"; the paper's cluster is `workers: 5,
+    /// cores_per_worker: 4`).
+    Cluster { workers: usize, cores_per_worker: usize },
+}
+
+impl Deploy {
+    /// The paper's evaluation cluster.
+    pub fn paper_cluster() -> Deploy {
+        Deploy::Cluster { workers: 5, cores_per_worker: 4 }
+    }
+
+    /// The paper's local mode (4-core master).
+    pub fn paper_local() -> Deploy {
+        Deploy::Local { cores: 4 }
+    }
+
+    /// Total executor slots in the topology.
+    pub fn total_cores(&self) -> usize {
+        match self {
+            Deploy::SingleThread => 1,
+            Deploy::Local { cores } => *cores,
+            Deploy::Cluster { workers, cores_per_worker } => workers * cores_per_worker,
+        }
+    }
+
+    /// Number of distinct nodes (broadcast ship targets).
+    pub fn nodes(&self) -> usize {
+        match self {
+            Deploy::SingleThread | Deploy::Local { .. } => 1,
+            Deploy::Cluster { workers, .. } => *workers,
+        }
+    }
+
+    /// Node id for a given core slot.
+    pub fn node_of_core(&self, core: usize) -> usize {
+        match self {
+            Deploy::SingleThread | Deploy::Local { .. } => 0,
+            Deploy::Cluster { cores_per_worker, .. } => core / cores_per_worker,
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Topology the DES replays task logs against.
+    pub deploy: Deploy,
+    /// Default number of partitions for `parallelize` when unspecified.
+    pub default_parallelism: usize,
+    /// Per-task fixed overhead in the DES (scheduler delay, serialization,
+    /// result shipping). Spark's is ~5-10 ms; ours defaults lower because
+    /// tasks carry no JVM/serde cost.
+    pub task_overhead_us: u64,
+    /// Simulated broadcast bandwidth, MB/s per node link (DES).
+    pub broadcast_mb_per_s: f64,
+    /// OS threads actually executing tasks (defaults to the machine's
+    /// available parallelism; results never depend on this).
+    pub real_threads: usize,
+    /// Maximum attempts per task before the job is failed (Spark's
+    /// `spark.task.maxFailures`, default 4 there; tasks are retried on
+    /// panic — the "resilient" in RDD).
+    pub max_task_attempts: usize,
+}
+
+impl EngineConfig {
+    pub fn new(deploy: Deploy) -> EngineConfig {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let real_threads = match deploy {
+            Deploy::SingleThread => 1,
+            _ => hw,
+        };
+        EngineConfig {
+            deploy,
+            default_parallelism: 8,
+            task_overhead_us: 500,
+            broadcast_mb_per_s: 400.0,
+            real_threads,
+            max_task_attempts: 4,
+        }
+    }
+
+    pub fn with_max_task_attempts(mut self, n: usize) -> Self {
+        self.max_task_attempts = n.max(1);
+        self
+    }
+
+    pub fn with_default_parallelism(mut self, p: usize) -> Self {
+        self.default_parallelism = p.max(1);
+        self
+    }
+
+    pub fn with_task_overhead_us(mut self, us: u64) -> Self {
+        self.task_overhead_us = us;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topologies() {
+        assert_eq!(Deploy::paper_cluster().total_cores(), 20);
+        assert_eq!(Deploy::paper_cluster().nodes(), 5);
+        assert_eq!(Deploy::paper_local().total_cores(), 4);
+        assert_eq!(Deploy::paper_local().nodes(), 1);
+    }
+
+    #[test]
+    fn node_of_core_maps_contiguously() {
+        let d = Deploy::Cluster { workers: 3, cores_per_worker: 4 };
+        assert_eq!(d.node_of_core(0), 0);
+        assert_eq!(d.node_of_core(3), 0);
+        assert_eq!(d.node_of_core(4), 1);
+        assert_eq!(d.node_of_core(11), 2);
+    }
+
+    #[test]
+    fn single_thread_uses_one_real_thread() {
+        assert_eq!(EngineConfig::new(Deploy::SingleThread).real_threads, 1);
+    }
+}

@@ -1,0 +1,377 @@
+//! The driver context: owns the executor pool and the event log, submits
+//! jobs, exposes actions (sync and async) — the `SparkContext` analogue.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::broadcast::Broadcast;
+use super::config::EngineConfig;
+use super::des;
+use super::executor::{ExecutorPool, RunnableTask};
+use super::future_action::FutureAction;
+use super::metrics::{EventLog, ExecutionReport, JobRecord, TaskRecord};
+use super::rdd::Rdd;
+
+/// Extract a readable message from a panic payload.
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+struct ContextInner {
+    config: EngineConfig,
+    pool: ExecutorPool,
+    events: EventLog,
+    t0: Instant,
+    next_job: AtomicU64,
+}
+
+/// The driver-side engine handle. Cheap to clone; dropping the last clone
+/// joins the executor threads.
+#[derive(Clone)]
+pub struct Context {
+    inner: Arc<ContextInner>,
+}
+
+impl Context {
+    pub fn new(config: EngineConfig) -> Context {
+        let pool = ExecutorPool::new(config.real_threads);
+        Context {
+            inner: Arc::new(ContextInner {
+                config,
+                pool,
+                events: EventLog::default(),
+                t0: Instant::now(),
+                next_job: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.inner.config
+    }
+
+    /// Seconds since context creation (the event-log clock).
+    pub fn now_rel(&self) -> f64 {
+        self.inner.t0.elapsed().as_secs_f64()
+    }
+
+    /// Distribute a vector across the default number of partitions.
+    pub fn parallelize<T: Clone + Send + Sync + 'static>(&self, data: Vec<T>) -> Rdd<T> {
+        Rdd::parallelize(data, self.inner.config.default_parallelism)
+    }
+
+    /// Distribute a vector across `partitions` partitions.
+    pub fn parallelize_with<T: Clone + Send + Sync + 'static>(
+        &self,
+        data: Vec<T>,
+        partitions: usize,
+    ) -> Rdd<T> {
+        Rdd::parallelize(data, partitions)
+    }
+
+    /// Create a broadcast variable (ships once per node in the DES model).
+    pub fn broadcast<T>(&self, value: T, size_bytes: usize) -> Broadcast<T> {
+        Broadcast::new(value, size_bytes)
+    }
+
+    /// Asynchronous collect — the `FutureAction` analogue (paper §3.3).
+    /// Submits one task per partition and returns immediately.
+    pub fn collect_async<T: Clone + Send + Sync + 'static>(
+        &self,
+        rdd: &Rdd<T>,
+    ) -> FutureAction<Vec<T>> {
+        let job_id = self.inner.next_job.fetch_add(1, Ordering::Relaxed);
+        let n = rdd.num_partitions();
+        let submit_rel = self.now_rel();
+        self.inner.events.record_job_submit(JobRecord {
+            job_id,
+            name: rdd.name().to_string(),
+            num_tasks: n,
+            submit_rel,
+            finish_rel: f64::NAN,
+            broadcast_deps: rdd.broadcast_deps().to_vec(),
+        });
+
+        let (tx, rx) = channel();
+        let slots: Arc<Mutex<Vec<Option<Vec<T>>>>> = Arc::new(Mutex::new(vec![None; n]));
+        let remaining = Arc::new(AtomicUsize::new(n));
+        let failed = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let max_attempts = self.inner.config.max_task_attempts;
+
+        let tasks: Vec<RunnableTask> = (0..n)
+            .map(|p| {
+                let rdd = rdd.clone();
+                let slots = Arc::clone(&slots);
+                let remaining = Arc::clone(&remaining);
+                let failed = Arc::clone(&failed);
+                let tx = tx.clone();
+                let ctx = self.clone();
+                RunnableTask {
+                    job_id,
+                    partition: p,
+                    run: Box::new(move || {
+                        if failed.load(Ordering::Acquire) {
+                            return; // job already failed: skip remaining tasks
+                        }
+                        // task retry loop — the "resilient" in RDD: a
+                        // panicking task is re-attempted up to
+                        // `max_task_attempts` times (Spark: task.maxFailures)
+                        let start_rel = ctx.now_rel();
+                        let t = Instant::now();
+                        let mut outcome = None;
+                        let mut last_err = String::new();
+                        let mut attempts = 0u32;
+                        for _ in 0..max_attempts {
+                            attempts += 1;
+                            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                rdd.compute_partition(p)
+                            })) {
+                                Ok(v) => {
+                                    outcome = Some(v);
+                                    break;
+                                }
+                                Err(e) => {
+                                    // &Box<dyn Any> would downcast as the Box
+                                    // itself — deref to the payload first
+                                    last_err = panic_message(&*e);
+                                }
+                            }
+                        }
+                        let duration = t.elapsed().as_secs_f64();
+                        match outcome {
+                            Some(result) => {
+                                ctx.inner.events.record_task(TaskRecord {
+                                    job_id,
+                                    partition: p,
+                                    start_rel,
+                                    duration,
+                                    attempts,
+                                });
+                                slots.lock().unwrap()[p] = Some(result);
+                                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    // last task assembles and publishes
+                                    ctx.inner.events.record_job_finish(job_id, ctx.now_rel());
+                                    let mut guard = slots.lock().unwrap();
+                                    let out: Vec<T> = guard
+                                        .iter_mut()
+                                        .flat_map(|s| s.take().expect("missing partition result"))
+                                        .collect();
+                                    let _ = tx.send(Ok(out));
+                                }
+                            }
+                            None => {
+                                if !failed.swap(true, Ordering::AcqRel) {
+                                    ctx.inner.events.record_job_finish(job_id, ctx.now_rel());
+                                    let _ = tx.send(Err(
+                                        crate::engine::future_action::JobFailed {
+                                            job_id,
+                                            reason: format!(
+                                                "task {p} failed {attempts} attempts: {last_err}"
+                                            ),
+                                        },
+                                    ));
+                                }
+                            }
+                        }
+                    }),
+                }
+            })
+            .collect();
+
+        if n == 0 {
+            self.inner.events.record_job_finish(job_id, self.now_rel());
+            let _ = tx.send(Ok(Vec::new()));
+        } else {
+            self.inner.pool.submit(tasks);
+        }
+        FutureAction { job_id, rx }
+    }
+
+    /// Blocking collect.
+    pub fn collect<T: Clone + Send + Sync + 'static>(&self, rdd: &Rdd<T>) -> Vec<T> {
+        self.collect_async(rdd).get()
+    }
+
+    /// Blocking count.
+    pub fn count<T: Clone + Send + Sync + 'static>(&self, rdd: &Rdd<T>) -> usize {
+        self.collect(&rdd.map(|_| 1usize)).len()
+    }
+
+    /// Blocking fold over all elements (associative `combine` required).
+    pub fn reduce<T, F>(&self, rdd: &Rdd<T>, combine: F) -> Option<T>
+    where
+        T: Clone + Send + Sync + 'static,
+        F: Fn(T, T) -> T + Send + Sync + 'static,
+    {
+        let partials = self.collect(rdd);
+        partials.into_iter().reduce(combine)
+    }
+
+    /// Snapshot of the event log (jobs, tasks).
+    pub fn events(&self) -> &EventLog {
+        &self.inner.events
+    }
+
+    /// Keyed reduction (Spark `reduceByKey`): map-side combine inside each
+    /// partition task, then a driver-side merge of the partial maps (the
+    /// single-reducer shuffle — the CCM pipelines group skills per
+    /// (E, tau, L) combo this way). Result order is unspecified.
+    pub fn reduce_by_key<K, V, F>(&self, rdd: &Rdd<(K, V)>, combine: F) -> Vec<(K, V)>
+    where
+        K: std::hash::Hash + Eq + Clone + Send + Sync + 'static,
+        V: Clone + Send + Sync + 'static,
+        F: Fn(V, V) -> V + Send + Sync + 'static,
+    {
+        use std::collections::HashMap;
+        let combine = Arc::new(combine);
+        let c2 = Arc::clone(&combine);
+        let partials = rdd.map_partitions(move |_, pairs| {
+            let mut m: HashMap<K, V> = HashMap::new();
+            for (k, v) in pairs {
+                match m.remove(&k) {
+                    Some(acc) => {
+                        let merged = c2(acc, v);
+                        m.insert(k, merged);
+                    }
+                    None => {
+                        m.insert(k, v);
+                    }
+                }
+            }
+            m.into_iter().collect::<Vec<(K, V)>>()
+        });
+        let mut out: HashMap<K, V> = HashMap::new();
+        for (k, v) in self.collect(&partials) {
+            match out.remove(&k) {
+                Some(acc) => {
+                    let merged = combine(acc, v);
+                    out.insert(k, merged);
+                }
+                None => {
+                    out.insert(k, v);
+                }
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// Keyed grouping (Spark `groupByKey`): values keep encounter order
+    /// within each partition, partitions merged in order.
+    pub fn group_by_key<K, V>(&self, rdd: &Rdd<(K, V)>) -> Vec<(K, Vec<V>)>
+    where
+        K: std::hash::Hash + Eq + Clone + Send + Sync + 'static,
+        V: Clone + Send + Sync + 'static,
+    {
+        use std::collections::HashMap;
+        let mut out: HashMap<K, Vec<V>> = HashMap::new();
+        for (k, v) in self.collect(rdd) {
+            out.entry(k).or_default().push(v);
+        }
+        out.into_iter().collect()
+    }
+
+    /// Blocking collect that surfaces job failure instead of panicking.
+    pub fn try_collect<T: Clone + Send + Sync + 'static>(
+        &self,
+        rdd: &Rdd<T>,
+    ) -> Result<Vec<T>, super::future_action::JobFailed> {
+        self.collect_async(rdd).try_get()
+    }
+
+    /// Measured + simulated execution report for everything run so far.
+    pub fn report(&self) -> ExecutionReport {
+        des::simulate(&self.inner.events, &self.inner.config)
+    }
+
+    /// Replay the same event log against a *different* topology — one real
+    /// execution can be costed on many deploys (numerics never depend on
+    /// the deploy, so this is exact, not an approximation).
+    pub fn report_for(&self, deploy: super::config::Deploy) -> ExecutionReport {
+        let mut cfg = self.inner.config.clone();
+        cfg.deploy = deploy;
+        des::simulate(&self.inner.events, &cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::config::Deploy;
+
+    fn ctx(cores: usize) -> Context {
+        Context::new(EngineConfig::new(Deploy::Local { cores }).with_default_parallelism(4))
+    }
+
+    #[test]
+    fn collect_roundtrip_order_preserved() {
+        let c = ctx(2);
+        let rdd = c.parallelize((0..1000).collect::<Vec<i64>>()).map(|x| x * 3);
+        assert_eq!(c.collect(&rdd), (0..1000).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn count_and_reduce() {
+        let c = ctx(2);
+        let rdd = c.parallelize((1..=100).collect::<Vec<u64>>());
+        assert_eq!(c.count(&rdd), 100);
+        assert_eq!(c.reduce(&rdd, |a, b| a + b), Some(5050));
+    }
+
+    #[test]
+    fn async_jobs_can_be_submitted_before_getting() {
+        let c = ctx(4);
+        let fas: Vec<_> = (0..6)
+            .map(|i| {
+                let rdd = c
+                    .parallelize_with((0..50).collect::<Vec<i64>>(), 5)
+                    .map(move |x| x + i);
+                c.collect_async(&rdd)
+            })
+            .collect();
+        for (i, fa) in fas.into_iter().enumerate() {
+            let got = fa.get();
+            assert_eq!(got.len(), 50);
+            assert_eq!(got[0], i as i64);
+        }
+        // all 6 jobs recorded, all finished
+        let jobs = c.events().jobs();
+        assert_eq!(jobs.len(), 6);
+        assert!(jobs.iter().all(|j| j.finish_rel.is_finite()));
+    }
+
+    #[test]
+    fn empty_rdd_completes() {
+        let c = ctx(1);
+        let rdd = c.parallelize(Vec::<i32>::new());
+        assert_eq!(c.collect(&rdd), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn report_has_tasks_and_makespan() {
+        let c = ctx(4);
+        let rdd = c
+            .parallelize_with((0..64).collect::<Vec<u64>>(), 8)
+            .map(|x| {
+                // non-trivial busy time so durations are measurable
+                let mut acc = x;
+                for i in 0..50_000u64 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+                }
+                acc
+            });
+        let _ = c.collect(&rdd);
+        let rep = c.report();
+        assert!(rep.total_task_s > 0.0);
+        assert!(rep.sim_makespan_s > 0.0);
+        assert!(rep.sim_makespan_s <= rep.total_task_s + 0.1);
+        assert_eq!(rep.topology, "local(4)");
+    }
+}

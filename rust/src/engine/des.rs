@@ -1,0 +1,236 @@
+//! Discrete-event simulation of the cluster scheduler.
+//!
+//! The engine executes every task for real (numerics are never simulated)
+//! and logs its busy duration. This module replays that log against a
+//! configured topology — e.g. the paper's 5-worker x 4-core Yarn cluster —
+//! to obtain the makespan such a deployment would achieve. This is the
+//! substitution that lets a 1-core CI box reproduce the *shape* of the
+//! paper's Fig. 4 (see DESIGN.md "Hardware substitutions").
+//!
+//! Model (matching Spark's FIFO scheduler at the fidelity the paper's
+//! experiments exercise):
+//!
+//! * Each job is one stage of independent tasks (narrow transforms fuse;
+//!   the CCM pipelines are shuffle-free).
+//! * Job dependency is inferred from the measured log: a job depends on
+//!   every job that *finished before it was submitted* (a driver that
+//!   blocked on `.get()` before submitting — the synchronous mode). Jobs
+//!   whose submissions overlap in measured time ran concurrently in the
+//!   driver (asynchronous mode) and may overlap in the DES too.
+//! * Tasks are assigned FIFO in partition order to the earliest-free core.
+//! * A per-task fixed overhead models scheduler/serialization latency.
+//! * The first task of a broadcast-dependent job on each node pays the
+//!   ship time `size_bytes / bandwidth` once per (broadcast, node).
+
+use std::collections::{HashMap, HashSet};
+
+use super::config::{Deploy, EngineConfig};
+use super::metrics::{EventLog, ExecutionReport};
+
+/// Replay `log` against `config.deploy`, returning the simulated report.
+pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
+    let mut jobs = log.jobs();
+    jobs.sort_by(|a, b| a.submit_rel.partial_cmp(&b.submit_rel).unwrap());
+    let tasks = log.tasks();
+    let mut tasks_by_job: HashMap<u64, Vec<(usize, f64)>> = HashMap::new();
+    for t in &tasks {
+        tasks_by_job
+            .entry(t.job_id)
+            .or_default()
+            .push((t.partition, t.duration));
+    }
+    for v in tasks_by_job.values_mut() {
+        v.sort_by_key(|(p, _)| *p);
+    }
+
+    let cores = config.deploy.total_cores();
+    let overhead = config.task_overhead_us as f64 * 1e-6;
+    let bandwidth = config.broadcast_mb_per_s * 1e6; // bytes/s
+    let mut core_free = vec![0.0f64; cores];
+    let mut node_has_broadcast: HashSet<(u64, usize)> = HashSet::new();
+    let mut node_bcast_ready: HashMap<usize, f64> = HashMap::new();
+    let mut ship_total = 0.0f64;
+    let mut des_finish: HashMap<u64, f64> = HashMap::new();
+    let mut busy = 0.0f64;
+    let mut makespan = 0.0f64;
+
+    for (ji, job) in jobs.iter().enumerate() {
+        // Inferred readiness: all jobs that measurably finished before this
+        // one was submitted must complete first in the simulation, too.
+        let mut ready = 0.0f64;
+        for prev in &jobs[..ji] {
+            if prev.finish_rel.is_finite() && prev.finish_rel <= job.submit_rel + 1e-9 {
+                if let Some(&f) = des_finish.get(&prev.job_id) {
+                    ready = ready.max(f);
+                }
+            }
+        }
+
+        let mut job_finish = ready;
+        if let Some(job_tasks) = tasks_by_job.get(&job.job_id) {
+            for &(_partition, duration) in job_tasks {
+                // earliest-free core (FIFO list scheduling)
+                let (core, _) = core_free
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let node = config.deploy.node_of_core(core);
+                let mut start = core_free[core].max(ready);
+
+                // Broadcast shipping: once per (variable, node); the node's
+                // link serializes ships.
+                for &(bid, bytes) in &job.broadcast_deps {
+                    if node_has_broadcast.insert((bid, node)) {
+                        let link_free = node_bcast_ready.get(&node).copied().unwrap_or(0.0);
+                        let ship_start = start.max(link_free);
+                        let ship = bytes as f64 / bandwidth;
+                        node_bcast_ready.insert(node, ship_start + ship);
+                        ship_total += ship;
+                        start = ship_start + ship;
+                    } else if let Some(&link) = node_bcast_ready.get(&node) {
+                        // a ship to this node may still be in flight
+                        start = start.max(link);
+                    }
+                }
+
+                let end = start + overhead + duration;
+                core_free[core] = end;
+                busy += duration;
+                job_finish = job_finish.max(end);
+            }
+        }
+        des_finish.insert(job.job_id, job_finish);
+        makespan = makespan.max(job_finish);
+    }
+
+    let utilization = if makespan > 0.0 {
+        (busy / (makespan * cores as f64)).min(1.0)
+    } else {
+        0.0
+    };
+
+    ExecutionReport {
+        measured_wall_s: log.wallclock_span(),
+        total_task_s: log.total_task_seconds(),
+        sim_makespan_s: makespan,
+        sim_utilization: utilization,
+        sim_broadcast_ship_s: ship_total,
+        topology: match config.deploy {
+            Deploy::SingleThread => "single-thread".to_string(),
+            Deploy::Local { cores } => format!("local({cores})"),
+            Deploy::Cluster { workers, cores_per_worker } => {
+                format!("cluster({workers}x{cores_per_worker})")
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::metrics::{JobRecord, TaskRecord};
+
+    fn make_log(jobs: &[(u64, f64, f64, usize, f64)]) -> EventLog {
+        // (job_id, submit, finish, ntasks, task_dur)
+        let log = EventLog::default();
+        for &(id, submit, finish, ntasks, dur) in jobs {
+            log.record_job_submit(JobRecord {
+                job_id: id,
+                name: format!("j{id}"),
+                num_tasks: ntasks,
+                submit_rel: submit,
+                finish_rel: finish,
+                broadcast_deps: vec![],
+            });
+            for p in 0..ntasks {
+                log.record_task(TaskRecord {
+                    job_id: id,
+                    partition: p,
+                    start_rel: submit,
+                    duration: dur,
+                    attempts: 1,
+                });
+            }
+        }
+        log
+    }
+
+    fn config(deploy: Deploy) -> EngineConfig {
+        let mut c = EngineConfig::new(deploy);
+        c.task_overhead_us = 0;
+        c
+    }
+
+    #[test]
+    fn perfect_scaling_for_independent_tasks() {
+        // 8 tasks x 1s on 1 core = 8s; on 4 cores = 2s.
+        let log = make_log(&[(1, 0.0, 8.0, 8, 1.0)]);
+        let one = simulate(&log, &config(Deploy::SingleThread));
+        let four = simulate(&log, &config(Deploy::Local { cores: 4 }));
+        assert!((one.sim_makespan_s - 8.0).abs() < 1e-9);
+        assert!((four.sim_makespan_s - 2.0).abs() < 1e-9);
+        assert!((four.sim_utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sequential_jobs_chain_in_sim() {
+        // job2 submitted after job1 finished (sync driver): must not overlap.
+        let log = make_log(&[(1, 0.0, 4.0, 4, 1.0), (2, 4.0, 8.0, 4, 1.0)]);
+        let rep = simulate(&log, &config(Deploy::Local { cores: 4 }));
+        assert!((rep.sim_makespan_s - 2.0).abs() < 1e-9, "1s per job on 4 cores");
+    }
+
+    #[test]
+    fn async_jobs_overlap_in_sim() {
+        // both submitted at t~0 (async driver): fill the cluster together.
+        let log = make_log(&[(1, 0.0, 4.0, 4, 1.0), (2, 0.001, 8.0, 4, 1.0)]);
+        let rep = simulate(&log, &config(Deploy::Local { cores: 8 }));
+        assert!((rep.sim_makespan_s - 1.0).abs() < 1e-9, "8 tasks on 8 cores at once");
+    }
+
+    #[test]
+    fn async_no_gain_when_saturated() {
+        // paper: async helps only when cores are idle. 2 jobs x 4 tasks on
+        // 2 cores: async and sync both take 4s.
+        let sync_log = make_log(&[(1, 0.0, 2.0, 4, 1.0), (2, 2.0, 4.0, 4, 1.0)]);
+        let async_log = make_log(&[(1, 0.0, 2.0, 4, 1.0), (2, 0.001, 4.0, 4, 1.0)]);
+        let c = config(Deploy::Local { cores: 2 });
+        let a = simulate(&sync_log, &c).sim_makespan_s;
+        let b = simulate(&async_log, &c).sim_makespan_s;
+        assert!((a - 4.0).abs() < 1e-9);
+        assert!((b - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_ships_once_per_node() {
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 8,
+            submit_rel: 0.0,
+            finish_rel: 8.0,
+            broadcast_deps: vec![(42, 400_000_000)], // 1s at 400 MB/s
+        });
+        for p in 0..8 {
+            log.record_task(TaskRecord { job_id: 1, partition: p, start_rel: 0.0, duration: 1.0, attempts: 1 });
+        }
+        let rep = simulate(
+            &log,
+            &config(Deploy::Cluster { workers: 2, cores_per_worker: 2 }),
+        );
+        // 2 nodes pay 1s ship each (in parallel), then 8 tasks over 4 cores.
+        assert!((rep.sim_broadcast_ship_s - 2.0).abs() < 1e-9);
+        assert!((rep.sim_makespan_s - 3.0).abs() < 1e-9, "{}", rep.sim_makespan_s);
+    }
+
+    #[test]
+    fn overhead_charged_per_task() {
+        let log = make_log(&[(1, 0.0, 1.0, 4, 0.0)]);
+        let mut c = config(Deploy::SingleThread);
+        c.task_overhead_us = 1_000_000; // 1s
+        let rep = simulate(&log, &c);
+        assert!((rep.sim_makespan_s - 4.0).abs() < 1e-9);
+    }
+}

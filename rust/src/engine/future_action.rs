@@ -1,0 +1,102 @@
+//! Asynchronous job handles — the analogue of Spark's `FutureAction`.
+//!
+//! `Context::collect_async` (and friends) submit a job to the scheduler
+//! and return immediately with a `FutureAction<T>`; the driver thread can
+//! submit further jobs before blocking on [`FutureAction::get`]. This is
+//! the mechanism behind the paper's §3.3: running the pipelines for many
+//! `(L, tau, E)` combinations concurrently.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+/// A failed job (a task exhausted `max_task_attempts`).
+#[derive(Clone, Debug)]
+pub struct JobFailed {
+    pub job_id: u64,
+    pub reason: String,
+}
+
+impl std::fmt::Display for JobFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {} failed: {}", self.job_id, self.reason)
+    }
+}
+
+impl std::error::Error for JobFailed {}
+
+/// A handle to a job running in the executor pool.
+pub struct FutureAction<T> {
+    pub(crate) job_id: u64,
+    pub(crate) rx: Receiver<Result<T, JobFailed>>,
+}
+
+impl<T> FutureAction<T> {
+    /// Engine-assigned job id (ties into the event log).
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Block until the job completes and take its result. Panics if the
+    /// job failed (a task exhausted its retry budget) — like Spark's
+    /// action throwing on job failure; use [`FutureAction::try_get`] to
+    /// handle failures programmatically.
+    pub fn get(self) -> T {
+        match self.try_get() {
+            Ok(v) => v,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Block until the job completes; `Err` carries the task failure.
+    pub fn try_get(self) -> Result<T, JobFailed> {
+        self.rx
+            .recv()
+            .expect("job result channel closed: executor pool shut down mid-job")
+    }
+
+    /// Block up to `timeout`; `Err(self)` if still running (handle is
+    /// returned so the caller can keep waiting).
+    pub fn get_timeout(self, timeout: Duration) -> Result<Result<T, JobFailed>, FutureAction<T>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Timeout) => Err(self),
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("job result channel closed: executor pool shut down mid-job")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn get_returns_sent_value() {
+        let (tx, rx) = channel();
+        let fa = FutureAction { job_id: 7, rx };
+        tx.send(Ok(42)).unwrap();
+        assert_eq!(fa.job_id(), 7);
+        assert_eq!(fa.get(), 42);
+    }
+
+    #[test]
+    fn timeout_returns_handle() {
+        let (tx, rx) = channel::<Result<i32, JobFailed>>();
+        let fa = FutureAction { job_id: 1, rx };
+        let fa = fa.get_timeout(Duration::from_millis(10)).unwrap_err();
+        tx.send(Ok(5)).unwrap();
+        assert_eq!(fa.get(), 5);
+    }
+
+    #[test]
+    fn try_get_surfaces_failure() {
+        let (tx, rx) = channel::<Result<i32, JobFailed>>();
+        let fa = FutureAction { job_id: 3, rx };
+        tx.send(Err(JobFailed { job_id: 3, reason: "boom".into() })).unwrap();
+        let err = fa.try_get().unwrap_err();
+        assert_eq!(err.job_id, 3);
+        assert!(err.to_string().contains("boom"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Event log + execution report: every job/task is recorded with
+//! wall-clock-relative timestamps so the DES can replay the run against an
+//! arbitrary cluster topology and the coordinator can report utilization.
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// One executed task.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub job_id: u64,
+    pub partition: usize,
+    /// Seconds since context creation when the task started executing.
+    pub start_rel: f64,
+    /// Task busy duration in seconds (pure compute, excludes queue wait;
+    /// includes retried attempts).
+    pub duration: f64,
+    /// Number of attempts it took to succeed (1 = first try).
+    pub attempts: u32,
+}
+
+/// One submitted job (every action = one job; narrow transforms fuse, so
+/// each job has exactly one stage of `num_tasks` tasks).
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub job_id: u64,
+    pub name: String,
+    pub num_tasks: usize,
+    /// Seconds since context creation at submission.
+    pub submit_rel: f64,
+    /// Seconds since context creation when the last task finished
+    /// (f64::NAN until completion).
+    pub finish_rel: f64,
+    /// Broadcast variables the job's lineage reads: (id, bytes).
+    pub broadcast_deps: Vec<(u64, usize)>,
+}
+
+/// Append-only execution history for one `Context`.
+#[derive(Default)]
+pub struct EventLog {
+    inner: Mutex<EventLogInner>,
+}
+
+#[derive(Default)]
+struct EventLogInner {
+    jobs: Vec<JobRecord>,
+    tasks: Vec<TaskRecord>,
+}
+
+impl EventLog {
+    pub fn record_job_submit(&self, job: JobRecord) {
+        self.inner.lock().unwrap().jobs.push(job);
+    }
+
+    pub fn record_job_finish(&self, job_id: u64, finish_rel: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(j) = g.jobs.iter_mut().find(|j| j.job_id == job_id) {
+            j.finish_rel = finish_rel;
+        }
+    }
+
+    pub fn record_task(&self, t: TaskRecord) {
+        self.inner.lock().unwrap().tasks.push(t);
+    }
+
+    pub fn jobs(&self) -> Vec<JobRecord> {
+        self.inner.lock().unwrap().jobs.clone()
+    }
+
+    pub fn tasks(&self) -> Vec<TaskRecord> {
+        self.inner.lock().unwrap().tasks.clone()
+    }
+
+    /// Total busy CPU-seconds across all tasks.
+    pub fn total_task_seconds(&self) -> f64 {
+        self.inner.lock().unwrap().tasks.iter().map(|t| t.duration).sum()
+    }
+
+    /// Measured wallclock span: first submit -> last finish, in seconds.
+    pub fn wallclock_span(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let start = g
+            .jobs
+            .iter()
+            .map(|j| j.submit_rel)
+            .fold(f64::INFINITY, f64::min);
+        let end = g
+            .jobs
+            .iter()
+            .map(|j| j.finish_rel)
+            .filter(|f| f.is_finite())
+            .fold(0.0f64, f64::max);
+        if start.is_finite() && end > start {
+            end - start
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::Arr(
+                    g.jobs
+                        .iter()
+                        .map(|j| {
+                            Json::obj(vec![
+                                ("job_id", Json::Num(j.job_id as f64)),
+                                ("name", Json::Str(j.name.clone())),
+                                ("num_tasks", Json::Num(j.num_tasks as f64)),
+                                ("submit_rel", Json::Num(j.submit_rel)),
+                                ("finish_rel", Json::Num(j.finish_rel)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tasks",
+                Json::Arr(
+                    g.tasks
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("job_id", Json::Num(t.job_id as f64)),
+                                ("partition", Json::Num(t.partition as f64)),
+                                ("start_rel", Json::Num(t.start_rel)),
+                                ("duration", Json::Num(t.duration)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// What a run cost: real measured time plus the DES replay on the
+/// configured topology.
+#[derive(Clone, Debug)]
+pub struct ExecutionReport {
+    /// Wallclock actually measured on this machine (first submit -> last
+    /// job finish).
+    pub measured_wall_s: f64,
+    /// Sum of task busy time (what a 1-core serial schedule would take,
+    /// modulo overheads).
+    pub total_task_s: f64,
+    /// DES makespan on the configured topology.
+    pub sim_makespan_s: f64,
+    /// Mean executor-slot utilization during the DES makespan, in [0,1].
+    pub sim_utilization: f64,
+    /// Seconds the DES spent shipping broadcast variables (summed over
+    /// nodes; overlaps with compute on other cores).
+    pub sim_broadcast_ship_s: f64,
+    /// Topology description, e.g. `cluster(5x4)`.
+    pub topology: String,
+}
+
+impl ExecutionReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("measured_wall_s", Json::Num(self.measured_wall_s)),
+            ("total_task_s", Json::Num(self.total_task_s)),
+            ("sim_makespan_s", Json::Num(self.sim_makespan_s)),
+            ("sim_utilization", Json::Num(self.sim_utilization)),
+            ("sim_broadcast_ship_s", Json::Num(self.sim_broadcast_ship_s)),
+            ("topology", Json::Str(self.topology.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, submit: f64, finish: f64) -> JobRecord {
+        JobRecord {
+            job_id: id,
+            name: format!("job{id}"),
+            num_tasks: 1,
+            submit_rel: submit,
+            finish_rel: finish,
+            broadcast_deps: vec![],
+        }
+    }
+
+    #[test]
+    fn wallclock_span_covers_all_jobs() {
+        let log = EventLog::default();
+        log.record_job_submit(job(1, 0.5, f64::NAN));
+        log.record_job_finish(1, 2.0);
+        log.record_job_submit(job(2, 1.0, f64::NAN));
+        log.record_job_finish(2, 3.5);
+        assert!((log.wallclock_span() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn task_seconds_accumulate() {
+        let log = EventLog::default();
+        log.record_task(TaskRecord { job_id: 1, partition: 0, start_rel: 0.0, duration: 0.25, attempts: 1 });
+        log.record_task(TaskRecord { job_id: 1, partition: 1, start_rel: 0.1, duration: 0.5, attempts: 1 });
+        assert!((log.total_task_seconds() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_shape() {
+        let log = EventLog::default();
+        log.record_job_submit(job(1, 0.0, 1.0));
+        let j = log.to_json();
+        assert!(j.get("jobs").unwrap().as_arr().unwrap().len() == 1);
+        assert!(j.get("tasks").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,42 @@
+//! "sparklet" — a from-scratch Spark-like execution engine.
+//!
+//! The paper implements CCM on Apache Spark using four primitives, all of
+//! which are rebuilt here:
+//!
+//! * [`rdd::Rdd`] — an immutable, lazily-evaluated, partitioned dataset.
+//!   Narrow transformations (`map`, `filter`, `flat_map`, ...) compose by
+//!   closure fusion, exactly like Spark fuses narrow dependencies into a
+//!   single stage.
+//! * [`pipeline::Pipeline`] — a named sequence of RDD transform stages
+//!   (paper §3: "each stage transforms the original RDD to another RDD").
+//! * [`broadcast::Broadcast`] — a read-only value shipped to every worker
+//!   node once (paper §3.2 ships the distance indexing table this way).
+//! * [`future_action::FutureAction`] — asynchronous job submission (paper
+//!   §3.3 uses Spark's `FutureAction` to overlap independent parameter
+//!   combinations).
+//!
+//! Jobs run on a thread-pool [`executor::ExecutorPool`]; every task's
+//! duration is recorded in the [`metrics::EventLog`], and the
+//! [`des`] discrete-event simulator replays that log against a configured
+//! cluster topology ([`config::Deploy::Cluster`]) to report the makespan a
+//! Yarn deployment would achieve. On this single-core testbed the DES is
+//! what reproduces the *shape* of the paper's Fig. 4 (see DESIGN.md
+//! "Hardware substitutions"); measured wallclock is reported alongside.
+
+pub mod broadcast;
+pub mod config;
+pub mod context;
+pub mod des;
+pub mod executor;
+pub mod future_action;
+pub mod metrics;
+pub mod pipeline;
+pub mod rdd;
+
+pub use broadcast::Broadcast;
+pub use config::{Deploy, EngineConfig};
+pub use context::Context;
+pub use future_action::FutureAction;
+pub use metrics::{EventLog, ExecutionReport};
+pub use pipeline::Pipeline;
+pub use rdd::Rdd;

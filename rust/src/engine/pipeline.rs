@@ -1,0 +1,134 @@
+//! Transform pipelines: named sequences of RDD->RDD stages (paper §3).
+//!
+//! "The pipeline is specified as a sequence of stages, and each stage
+//! transforms the original RDD to another RDD accordingly." A
+//! `Pipeline<I, O>` composes such stages while keeping their names for
+//! logging; `apply` is lazy (returns the composed RDD), `run`/`run_async`
+//! attach an action.
+
+use std::sync::Arc;
+
+use super::context::Context;
+use super::future_action::FutureAction;
+use super::rdd::Rdd;
+
+type StageFn<I, O> = Arc<dyn Fn(&Context, Rdd<I>) -> Rdd<O> + Send + Sync>;
+
+/// A named, composable RDD transformation chain.
+pub struct Pipeline<I, O> {
+    name: String,
+    stages: Vec<String>,
+    f: StageFn<I, O>,
+}
+
+impl<I, O> Clone for Pipeline<I, O> {
+    fn clone(&self) -> Self {
+        Pipeline { name: self.name.clone(), stages: self.stages.clone(), f: Arc::clone(&self.f) }
+    }
+}
+
+impl<I: Send + Sync + 'static, O: Send + Sync + 'static> Pipeline<I, O> {
+    /// A single-stage pipeline.
+    pub fn new<F>(name: impl Into<String>, stage: F) -> Pipeline<I, O>
+    where
+        F: Fn(&Context, Rdd<I>) -> Rdd<O> + Send + Sync + 'static,
+    {
+        let name = name.into();
+        Pipeline { stages: vec![name.clone()], name, f: Arc::new(stage) }
+    }
+
+    /// Append a stage, producing a longer pipeline.
+    pub fn then<P, F>(self, stage_name: impl Into<String>, stage: F) -> Pipeline<I, P>
+    where
+        P: Send + Sync + 'static,
+        F: Fn(&Context, Rdd<O>) -> Rdd<P> + Send + Sync + 'static,
+        O: Clone,
+    {
+        let stage_name = stage_name.into();
+        let mut stages = self.stages.clone();
+        stages.push(stage_name);
+        let prev = self.f;
+        Pipeline {
+            name: self.name.clone(),
+            stages,
+            f: Arc::new(move |ctx, input| stage(ctx, prev(ctx, input))),
+        }
+    }
+
+    /// Compose lazily: input RDD -> output RDD, no job submitted.
+    pub fn apply(&self, ctx: &Context, input: Rdd<I>) -> Rdd<O> {
+        (self.f)(ctx, input)
+    }
+
+    /// Apply + blocking collect.
+    pub fn run(&self, ctx: &Context, input: Rdd<I>) -> Vec<O>
+    where
+        O: Clone,
+    {
+        ctx.collect(&self.apply(ctx, input))
+    }
+
+    /// Apply + asynchronous collect (paper §3.3 — concurrent pipelines).
+    pub fn run_async(&self, ctx: &Context, input: Rdd<I>) -> FutureAction<Vec<O>>
+    where
+        O: Clone,
+    {
+        ctx.collect_async(&self.apply(ctx, input))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stage names, in order.
+    pub fn stages(&self) -> &[String] {
+        &self.stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::config::{Deploy, EngineConfig};
+
+    fn ctx() -> Context {
+        Context::new(EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(3))
+    }
+
+    #[test]
+    fn single_stage() {
+        let c = ctx();
+        let p: Pipeline<i32, i32> = Pipeline::new("double", |_, rdd| rdd.map(|x| x * 2));
+        let got = p.run(&c, c.parallelize(vec![1, 2, 3]));
+        assert_eq!(got, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn multi_stage_composition_and_names() {
+        let c = ctx();
+        let p = Pipeline::<i32, i32>::new("embed", |_, rdd| rdd.map(|x| x + 1))
+            .then("square", |_, rdd| rdd.map(|x| x * x))
+            .then("stringify", |_, rdd| rdd.map(|x| format!("v{x}")));
+        assert_eq!(p.stages(), &["embed", "square", "stringify"]);
+        let got = p.run(&c, c.parallelize(vec![1, 2]));
+        assert_eq!(got, vec!["v4".to_string(), "v9".to_string()]);
+    }
+
+    #[test]
+    fn run_async_overlaps() {
+        let c = ctx();
+        let p: Pipeline<u64, u64> = Pipeline::new("spin", |_, rdd| {
+            rdd.map(|x: u64| {
+                let mut acc = x;
+                for i in 0..10_000u64 {
+                    acc = acc.wrapping_mul(31).wrapping_add(i);
+                }
+                acc
+            })
+        });
+        let f1 = p.run_async(&c, c.parallelize((0..30).collect()));
+        let f2 = p.run_async(&c, c.parallelize((0..30).collect()));
+        assert_eq!(f1.get().len(), 30);
+        assert_eq!(f2.get().len(), 30);
+    }
+}

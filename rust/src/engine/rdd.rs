@@ -1,0 +1,387 @@
+//! Resilient-Distributed-Dataset analogue: an immutable, partitioned,
+//! lazily evaluated dataset with narrow transformations.
+//!
+//! Like Spark, narrow transformations (`map`, `filter`, `flat_map`,
+//! `map_partitions`) do **not** copy data: they compose the partition
+//! compute function, so a chain of narrow transforms fuses into a single
+//! task per partition — exactly Spark's stage-fusion behaviour. Actions
+//! live on [`super::context::Context`].
+
+use std::sync::Arc;
+
+use once_cell::sync::OnceCell;
+
+/// Broadcast dependency tag: (id, size-in-bytes). Propagated through
+/// transforms so the DES knows which jobs must ship which tables.
+pub(crate) type BroadcastDep = (u64, usize);
+
+pub(crate) struct RddInner<T> {
+    /// Number of partitions.
+    pub partitions: usize,
+    /// Compute partition `p` from scratch (pure; may run on any thread).
+    pub compute: Arc<dyn Fn(usize) -> Vec<T> + Send + Sync>,
+    /// Human-readable lineage, e.g. `parallelize.map.filter`.
+    pub name: String,
+    /// Broadcast variables this lineage reads.
+    pub broadcast_deps: Vec<BroadcastDep>,
+    /// Cache slots (filled by `cache()` + first evaluation).
+    pub cache: Option<Arc<Vec<OnceCell<Vec<T>>>>>,
+}
+
+/// An immutable, lazily evaluated, partitioned dataset.
+pub struct Rdd<T> {
+    pub(crate) inner: Arc<RddInner<T>>,
+}
+
+impl<T> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T: Send + Sync + 'static> Rdd<T> {
+    /// Build an RDD from an explicit partition compute function.
+    pub fn from_compute<F>(partitions: usize, name: impl Into<String>, compute: F) -> Rdd<T>
+    where
+        F: Fn(usize) -> Vec<T> + Send + Sync + 'static,
+    {
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions,
+                compute: Arc::new(compute),
+                name: name.into(),
+                broadcast_deps: Vec::new(),
+                cache: None,
+            }),
+        }
+    }
+
+    /// Distribute `data` over `partitions` roughly equal slices.
+    pub fn parallelize(data: Vec<T>, partitions: usize) -> Rdd<T>
+    where
+        T: Clone,
+    {
+        let partitions = partitions.max(1).min(data.len().max(1));
+        let data = Arc::new(data);
+        let n = data.len();
+        Rdd::from_compute(partitions, "parallelize", move |p| {
+            let lo = p * n / partitions;
+            let hi = (p + 1) * n / partitions;
+            data[lo..hi].to_vec()
+        })
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.inner.partitions
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Evaluate one partition (used by the scheduler; respects the cache).
+    pub(crate) fn compute_partition(&self, p: usize) -> Vec<T>
+    where
+        T: Clone,
+    {
+        if let Some(cache) = &self.inner.cache {
+            cache[p].get_or_init(|| (self.inner.compute)(p)).clone()
+        } else {
+            (self.inner.compute)(p)
+        }
+    }
+
+    fn derive<U: Send + Sync + 'static>(
+        &self,
+        suffix: &str,
+        partitions: usize,
+        compute: Arc<dyn Fn(usize) -> Vec<U> + Send + Sync>,
+    ) -> Rdd<U> {
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions,
+                compute,
+                name: format!("{}.{}", self.inner.name, suffix),
+                broadcast_deps: self.inner.broadcast_deps.clone(),
+                cache: None,
+            }),
+        }
+    }
+
+    /// Element-wise transformation.
+    pub fn map<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "map",
+            self.inner.partitions,
+            Arc::new(move |p| parent.compute_partition(p).into_iter().map(&f).collect()),
+        )
+    }
+
+    /// Keep elements matching the predicate.
+    pub fn filter<F>(&self, f: F) -> Rdd<T>
+    where
+        F: Fn(&T) -> bool + Send + Sync + 'static,
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "filter",
+            self.inner.partitions,
+            Arc::new(move |p| parent.compute_partition(p).into_iter().filter(|x| f(x)).collect()),
+        )
+    }
+
+    /// One-to-many transformation.
+    pub fn flat_map<U, I, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        I: IntoIterator<Item = U>,
+        F: Fn(T) -> I + Send + Sync + 'static,
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "flat_map",
+            self.inner.partitions,
+            Arc::new(move |p| parent.compute_partition(p).into_iter().flat_map(&f).collect()),
+        )
+    }
+
+    /// Whole-partition transformation (the workhorse for batched XLA calls:
+    /// one executable invocation can serve a whole partition).
+    pub fn map_partitions<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(usize, Vec<T>) -> Vec<U> + Send + Sync + 'static,
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "map_partitions",
+            self.inner.partitions,
+            Arc::new(move |p| f(p, parent.compute_partition(p))),
+        )
+    }
+
+    /// Deterministic Bernoulli sample of the dataset (Spark `sample`):
+    /// element kept with probability `fraction`, seeded per partition so
+    /// the result is independent of scheduling.
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T>
+    where
+        T: Clone,
+    {
+        assert!((0.0..=1.0).contains(&fraction));
+        let parent = self.clone();
+        self.derive(
+            "sample",
+            self.inner.partitions,
+            Arc::new(move |p| {
+                let mut rng = crate::util::rng::Rng::new(seed).fork(p as u64);
+                parent
+                    .compute_partition(p)
+                    .into_iter()
+                    .filter(|_| rng.f64() < fraction)
+                    .collect()
+            }),
+        )
+    }
+
+    /// Pair each element with its global index (Spark `zipWithIndex`).
+    ///
+    /// Requires a pass to size the preceding partitions, like Spark's
+    /// implementation; with a cached parent the extra pass is free.
+    pub fn zip_with_index(&self) -> Rdd<(usize, T)>
+    where
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "zip_with_index",
+            self.inner.partitions,
+            Arc::new(move |p| {
+                let offset: usize = (0..p).map(|q| parent.compute_partition(q).len()).sum();
+                parent
+                    .compute_partition(p)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, v)| (offset + i, v))
+                    .collect()
+            }),
+        )
+    }
+
+    /// Key elements by `f` — the entry point to the keyed aggregations.
+    pub fn key_by<K, F>(&self, f: F) -> Rdd<(K, T)>
+    where
+        K: Send + Sync + 'static,
+        F: Fn(&T) -> K + Send + Sync + 'static,
+        T: Clone,
+    {
+        let parent = self.clone();
+        self.derive(
+            "key_by",
+            self.inner.partitions,
+            Arc::new(move |p| {
+                parent
+                    .compute_partition(p)
+                    .into_iter()
+                    .map(|v| (f(&v), v))
+                    .collect()
+            }),
+        )
+    }
+
+    /// Concatenate two RDDs (partition lists appended, like Spark union).
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T>
+    where
+        T: Clone,
+    {
+        let a = self.clone();
+        let b = other.clone();
+        let na = a.inner.partitions;
+        let mut deps = self.inner.broadcast_deps.clone();
+        deps.extend(other.inner.broadcast_deps.iter().copied());
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions: na + b.inner.partitions,
+                compute: Arc::new(move |p| {
+                    if p < na {
+                        a.compute_partition(p)
+                    } else {
+                        b.compute_partition(p - na)
+                    }
+                }),
+                name: format!("union({},{})", self.inner.name, other.inner.name),
+                broadcast_deps: deps,
+                cache: None,
+            }),
+        }
+    }
+
+    /// Mark this lineage as reading broadcast variable `b` — metadata for
+    /// the DES cost model (ship once per node), mirroring Spark closures
+    /// capturing a `Broadcast` handle.
+    pub fn uses_broadcast<B>(&self, b: &super::broadcast::Broadcast<B>) -> Rdd<T> {
+        let mut deps = self.inner.broadcast_deps.clone();
+        if !deps.iter().any(|(id, _)| *id == b.id()) {
+            deps.push((b.id(), b.size_bytes()));
+        }
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions: self.inner.partitions,
+                compute: Arc::clone(&self.inner.compute),
+                name: self.inner.name.clone(),
+                broadcast_deps: deps,
+                cache: self.inner.cache.clone(),
+            }),
+        }
+    }
+
+    /// Materialize each partition at most once (Spark `.cache()`):
+    /// subsequent evaluations reuse the stored partitions.
+    pub fn cache(&self) -> Rdd<T> {
+        let cells = (0..self.inner.partitions).map(|_| OnceCell::new()).collect();
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions: self.inner.partitions,
+                compute: Arc::clone(&self.inner.compute),
+                name: format!("{}.cache", self.inner.name),
+                broadcast_deps: self.inner.broadcast_deps.clone(),
+                cache: Some(Arc::new(cells)),
+            }),
+        }
+    }
+
+    pub(crate) fn broadcast_deps(&self) -> &[BroadcastDep] {
+        &self.inner.broadcast_deps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn eval<T: Clone + Send + Sync + 'static>(rdd: &Rdd<T>) -> Vec<T> {
+        (0..rdd.num_partitions())
+            .flat_map(|p| rdd.compute_partition(p))
+            .collect()
+    }
+
+    #[test]
+    fn parallelize_preserves_order_and_content() {
+        let rdd = Rdd::parallelize((0..100).collect(), 7);
+        assert_eq!(rdd.num_partitions(), 7);
+        assert_eq!(eval(&rdd), (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallelize_more_partitions_than_elements() {
+        let rdd = Rdd::parallelize(vec![1, 2, 3], 10);
+        assert_eq!(rdd.num_partitions(), 3);
+        assert_eq!(eval(&rdd), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_filter_flat_map_fuse_lazily() {
+        let rdd = Rdd::parallelize((0..20).collect(), 4)
+            .map(|x| x * 2)
+            .filter(|x| x % 4 == 0)
+            .flat_map(|x| vec![x, x + 1]);
+        assert_eq!(rdd.name(), "parallelize.map.filter.flat_map");
+        let want: Vec<i32> = (0..20)
+            .map(|x| x * 2)
+            .filter(|x| x % 4 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect();
+        assert_eq!(eval(&rdd), want);
+    }
+
+    #[test]
+    fn map_partitions_sees_partition_index() {
+        let rdd = Rdd::parallelize((0..12).collect::<Vec<i32>>(), 3)
+            .map_partitions(|p, xs| vec![(p, xs.len())]);
+        assert_eq!(eval(&rdd), vec![(0, 4), (1, 4), (2, 4)]);
+    }
+
+    #[test]
+    fn union_concatenates() {
+        let a = Rdd::parallelize(vec![1, 2], 1);
+        let b = Rdd::parallelize(vec![3, 4], 2);
+        let u = a.union(&b);
+        assert_eq!(u.num_partitions(), 3);
+        assert_eq!(eval(&u), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lazy_until_evaluated() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let rdd = Rdd::parallelize((0..4).collect::<Vec<i32>>(), 2).map(|x| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert_eq!(CALLS.load(Ordering::SeqCst), 0);
+        let _ = eval(&rdd);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn cache_computes_once() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let rdd = Rdd::parallelize((0..4).collect::<Vec<i32>>(), 2)
+            .map(|x| {
+                CALLS.fetch_add(1, Ordering::SeqCst);
+                x * 10
+            })
+            .cache();
+        assert_eq!(eval(&rdd), vec![0, 10, 20, 30]);
+        assert_eq!(eval(&rdd), vec![0, 10, 20, 30]);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 4, "cached partitions recomputed");
+    }
+}

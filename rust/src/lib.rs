@@ -1,0 +1,47 @@
+//! # parccm — Parallel Convergent Cross Mapping
+//!
+//! A production-grade reproduction of *"Parallelizing Convergent Cross
+//! Mapping Using Apache Spark"* (Pu, Duan, Osgood — CS.DC 2019) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a from-scratch
+//!   Spark-like engine ([`engine`]: lazy RDD lineage, transform pipelines,
+//!   DAG scheduler, executor pools, broadcast variables, asynchronous job
+//!   futures, and a discrete-event cluster simulator), plus the CCM
+//!   driver that maps the paper's five implementation levels (Table 1,
+//!   cases A1–A5) onto it ([`ccm`]).
+//! * **L2/L1 (python/, build-time only)** — the CCM numerics as a JAX
+//!   graph over Pallas kernels (pairwise distances on the MXU, k-pass
+//!   top-k, simplex projection, Pearson skill), AOT-lowered to HLO text.
+//! * **Runtime bridge** ([`runtime`]) — a PJRT CPU client that loads the
+//!   AOT artifacts and executes them from the Rust hot path; Python never
+//!   runs after `make artifacts`.
+//!
+//! The pure-Rust [`native`] backend implements the same kernel contract
+//! and cross-checks the XLA path bit-for-bit at test time; [`baseline`]
+//! holds the single-threaded rEDM-style comparator from the paper's §4.1.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod baseline;
+pub mod bench;
+pub mod ccm;
+pub mod engine;
+pub mod native;
+pub mod runtime;
+pub mod timeseries;
+pub mod util;
+
+/// Embedding vectors are zero-padded to this many lanes in every backend
+/// and artifact (padding is distance-invariant). Must match
+/// `python/compile/kernels/__init__.py::EMAX`.
+pub const EMAX: usize = 8;
+
+/// Top-k always extracts this many neighbours; the simplex stage masks down
+/// to E+1. Must match `KMAX` on the Python side.
+pub const KMAX: usize = 11;
+
+/// Additive distance mask for invalid / excluded library rows. Must match
+/// `BIG` on the Python side.
+pub const BIG: f32 = 1e30;

@@ -1,0 +1,166 @@
+//! Pure-Rust compute backend.
+//!
+//! Implements the [`ComputeBackend`] contract with hand-written kernels
+//! ([`crate::ccm::knn`], [`crate::ccm::simplex`]). This is (a) the
+//! reference the XLA path is cross-checked against in integration tests,
+//! (b) the compute engine of the single-threaded baselines (Case A1,
+//! rEDM-style), and (c) the default backend when `artifacts/` has not
+//! been built.
+
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, CrossMapOutput, NeighborPanels};
+use crate::ccm::knn::knn_batch;
+use crate::ccm::simplex::{pearson_f32, simplex_batch};
+use crate::EMAX;
+
+/// Stateless, always-available backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput {
+        debug_assert!({
+            input.validate();
+            true
+        });
+        let (dvals, tvals) = knn_batch(
+            &input.pred_vecs,
+            &input.pred_times,
+            &input.lib_vecs,
+            &input.lib_targets,
+            &input.lib_times,
+            input.theiler,
+        );
+        let preds = simplex_batch(&dvals, &tvals, input.n_pred(), input.e);
+        let rho = pearson_f32(&preds, &input.pred_targets);
+        CrossMapOutput { rho, preds }
+    }
+
+    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(vecs.len(), n * EMAX);
+        let mut out = vec![0.0f32; n * n];
+        for i in 0..n {
+            let a = &vecs[i * EMAX..(i + 1) * EMAX];
+            // symmetric: fill upper triangle, mirror
+            for j in (i + 1)..n {
+                let b = &vecs[j * EMAX..(j + 1) * EMAX];
+                let mut d = 0.0f32;
+                for l in 0..EMAX {
+                    let diff = a[l] - b[l];
+                    d += diff * diff;
+                }
+                out[i * n + j] = d;
+                out[j * n + i] = d;
+            }
+        }
+        out
+    }
+
+    fn simplex_tail(
+        &self,
+        panels: &NeighborPanels,
+        pred_targets: &[f32],
+        e: usize,
+    ) -> CrossMapOutput {
+        let preds = simplex_batch(&panels.dvals, &panels.tvals, panels.n_pred, e);
+        let rho = pearson_f32(&preds, pred_targets);
+        CrossMapOutput { rho, preds }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::embedding::Embedding;
+    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+    use crate::util::rng::Rng;
+
+    /// Build a CrossMapInput predicting x from y's manifold with a random
+    /// library of `l` rows.
+    fn make_input(l: usize, e: usize, tau: usize, seed: u64) -> CrossMapInput {
+        let (x, y) = coupled_logistic(600, CoupledLogisticParams::default());
+        let emb = Embedding::new(&y, e, tau);
+        let targets = emb.align_targets(&x);
+        let mut rng = Rng::new(seed);
+        let rows = rng.sample_indices(emb.n, l.min(emb.n));
+        let mut lib_vecs = Vec::with_capacity(rows.len() * EMAX);
+        let mut lib_targets = Vec::with_capacity(rows.len());
+        let mut lib_times = Vec::with_capacity(rows.len());
+        for &row in &rows {
+            lib_vecs.extend_from_slice(emb.point(row));
+            lib_targets.push(targets[row]);
+            lib_times.push(emb.time_of(row) as f32);
+        }
+        CrossMapInput {
+            lib_vecs,
+            lib_targets,
+            lib_times,
+            pred_vecs: emb.vecs.clone(),
+            pred_targets: targets,
+            pred_times: (0..emb.n).map(|i| emb.time_of(i) as f32).collect(),
+            e,
+            theiler: 0.0,
+        }
+    }
+
+    #[test]
+    fn skillful_on_coupled_system() {
+        let out = NativeBackend.cross_map(&make_input(400, 2, 1, 1));
+        assert!(out.rho > 0.8, "expected high cross-map skill, got {}", out.rho);
+        assert_eq!(out.preds.len(), make_input(400, 2, 1, 1).n_pred());
+    }
+
+    #[test]
+    fn skill_grows_with_library() {
+        let small = NativeBackend.cross_map(&make_input(40, 2, 1, 2)).rho;
+        let large = NativeBackend.cross_map(&make_input(500, 2, 1, 2)).rho;
+        assert!(
+            large > small + 0.02,
+            "convergence violated: rho({}) at L=40 vs rho({}) at L=500",
+            small,
+            large
+        );
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let input = make_input(50, 3, 1, 3);
+        let n = 50;
+        let d = NativeBackend.distance_matrix(&input.lib_vecs, n);
+        for i in 0..n {
+            assert_eq!(d[i * n + i], 0.0);
+            for j in 0..n {
+                assert_eq!(d[i * n + j], d[j * n + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn simplex_tail_equals_cross_map() {
+        // gathering panels with knn then applying the tail must equal the
+        // fused path — the table-mode equivalence.
+        let input = make_input(200, 2, 1, 4);
+        let full = NativeBackend.cross_map(&input);
+        let (dvals, tvals) = crate::ccm::knn::knn_batch(
+            &input.pred_vecs,
+            &input.pred_times,
+            &input.lib_vecs,
+            &input.lib_targets,
+            &input.lib_times,
+            input.theiler,
+        );
+        let panels = NeighborPanels { dvals, tvals, n_pred: input.n_pred() };
+        let tail = NativeBackend.simplex_tail(&panels, &input.pred_targets, input.e);
+        assert_eq!(full.rho, tail.rho);
+        assert_eq!(full.preds, tail.preds);
+    }
+}

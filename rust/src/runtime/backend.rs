@@ -1,0 +1,209 @@
+//! [`XlaBackend`] — the [`ComputeBackend`] implementation that runs the
+//! AOT-lowered JAX/Pallas graphs via [`XlaService`].
+//!
+//! Workloads are padded up to the nearest artifact bucket:
+//! * embedding lanes are already EMAX-padded throughout the crate;
+//! * library/prediction rows pad with zeros + `*_valid = 0` masks (the
+//!   graph pushes masked rows past `BIG`, pytest-verified);
+//! * time indices of padded rows are large sentinels so Theiler windows
+//!   can never collide with real rows;
+//! * the neighbour count is a `k_mask` (first E+1 ones).
+//!
+//! Workloads larger than every bucket fall back to the native backend
+//! (logged once) — graceful degradation instead of a hot-path panic.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, CrossMapOutput, NeighborPanels};
+use crate::native::NativeBackend;
+use crate::runtime::manifest::ArtifactKind;
+use crate::runtime::service::XlaService;
+use crate::{EMAX, KMAX};
+
+/// XLA-offload backend (thread-safe; shares one service pool).
+pub struct XlaBackend {
+    service: XlaService,
+    fallback: NativeBackend,
+    warned_fallback: AtomicBool,
+}
+
+impl XlaBackend {
+    pub fn new(service: XlaService) -> XlaBackend {
+        XlaBackend { service, fallback: NativeBackend, warned_fallback: AtomicBool::new(false) }
+    }
+
+    /// Start a service over `dir` and wrap it.
+    pub fn from_dir(dir: &str, pool_size: usize) -> anyhow::Result<XlaBackend> {
+        Ok(XlaBackend::new(XlaService::start(dir, pool_size)?))
+    }
+
+    fn note_fallback(&self, what: &str, needed: usize) {
+        if !self.warned_fallback.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[parccm] warning: {what} needs {needed} rows, larger than every \
+                 AOT bucket; falling back to the native backend (rebuild \
+                 artifacts with bigger buckets to stay on XLA)"
+            );
+        }
+    }
+
+    fn k_mask(e: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; KMAX];
+        for v in m.iter_mut().take(e + 1) {
+            *v = 1.0;
+        }
+        m
+    }
+
+    /// Pad `[rows, EMAX]` flat vectors to `bucket` rows.
+    fn pad_vecs(vecs: &[f32], rows: usize, bucket: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; bucket * EMAX];
+        out[..rows * EMAX].copy_from_slice(&vecs[..rows * EMAX]);
+        out
+    }
+
+    /// Pad a scalar column to `bucket` with `fill`.
+    fn pad_col(col: &[f32], bucket: usize, fill: f32) -> Vec<f32> {
+        let mut out = vec![fill; bucket];
+        out[..col.len()].copy_from_slice(col);
+        out
+    }
+
+    fn valid_mask(real: usize, bucket: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; bucket];
+        for v in m.iter_mut().take(real) {
+            *v = 1.0;
+        }
+        m
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput {
+        let meta = match self.service.manifest().bucket_for_rect(
+            ArtifactKind::CrossMap,
+            input.n_lib(),
+            input.n_pred(),
+        ) {
+            Some(m) => m,
+            None => {
+                self.note_fallback("cross_map", input.n_lib().max(input.n_pred()));
+                return self.fallback.cross_map(input);
+            }
+        };
+        let (nb, pb) = (meta.n, meta.p);
+        let n = input.n_lib();
+        let p = input.n_pred();
+        let inputs = vec![
+            (Self::pad_vecs(&input.lib_vecs, n, nb), vec![nb as i64, EMAX as i64]),
+            (Self::pad_vecs(&input.pred_vecs, p, pb), vec![pb as i64, EMAX as i64]),
+            (Self::valid_mask(n, nb), vec![nb as i64]),
+            (Self::pad_col(&input.lib_targets, nb, 0.0), vec![nb as i64]),
+            (Self::pad_col(&input.pred_targets, pb, 0.0), vec![pb as i64]),
+            (Self::valid_mask(p, pb), vec![pb as i64]),
+            (Self::pad_col(&input.lib_times, nb, -1e9), vec![nb as i64]),
+            (Self::pad_col(&input.pred_times, pb, -2e9), vec![pb as i64]),
+            (Self::k_mask(input.e), vec![KMAX as i64]),
+            (vec![input.theiler], vec![]),
+        ];
+        let out = self
+            .service
+            .execute(&meta.name, inputs)
+            .expect("xla cross_map execution failed");
+        let rho = out[0][0];
+        let preds = out[1][..p].to_vec();
+        CrossMapOutput { rho, preds }
+    }
+
+    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
+        let meta = match self.service.manifest().bucket_for(ArtifactKind::Distance, n) {
+            Some(m) => m,
+            None => {
+                self.note_fallback("distance_matrix", n);
+                return self.fallback.distance_matrix(vecs, n);
+            }
+        };
+        let nb = meta.n;
+        let padded = Self::pad_vecs(vecs, n, nb);
+        let out = self
+            .service
+            .execute(
+                &meta.name,
+                vec![
+                    (padded.clone(), vec![nb as i64, EMAX as i64]),
+                    (padded, vec![nb as i64, EMAX as i64]),
+                ],
+            )
+            .expect("xla distance execution failed");
+        // extract the real [n, n] block from the padded [nb, nb] output
+        let full = &out[0];
+        let mut result = vec![0.0f32; n * n];
+        for i in 0..n {
+            result[i * n..(i + 1) * n].copy_from_slice(&full[i * nb..i * nb + n]);
+        }
+        result
+    }
+
+    fn simplex_tail(
+        &self,
+        panels: &NeighborPanels,
+        pred_targets: &[f32],
+        e: usize,
+    ) -> CrossMapOutput {
+        let p = panels.n_pred;
+        let meta = match self.service.manifest().bucket_for(ArtifactKind::Simplex, p) {
+            Some(m) => m,
+            None => {
+                self.note_fallback("simplex_tail", p);
+                return self.fallback.simplex_tail(panels, pred_targets, e);
+            }
+        };
+        let pb = meta.p;
+        // pad panels with BIG distances / zero targets; padded rows are
+        // excluded from the Pearson by pred_valid anyway.
+        let mut dv = vec![crate::BIG; pb * KMAX];
+        dv[..p * KMAX].copy_from_slice(&panels.dvals);
+        let mut tv = vec![0.0f32; pb * KMAX];
+        tv[..p * KMAX].copy_from_slice(&panels.tvals);
+        let inputs = vec![
+            (dv, vec![pb as i64, KMAX as i64]),
+            (tv, vec![pb as i64, KMAX as i64]),
+            (Self::pad_col(pred_targets, pb, 0.0), vec![pb as i64]),
+            (Self::valid_mask(p, pb), vec![pb as i64]),
+            (Self::k_mask(e), vec![KMAX as i64]),
+        ];
+        let out = self
+            .service
+            .execute(&meta.name, inputs)
+            .expect("xla simplex execution failed");
+        CrossMapOutput { rho: out[0][0], preds: out[1][..p].to_vec() }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_mask_shape() {
+        let m = XlaBackend::k_mask(3);
+        assert_eq!(m.len(), KMAX);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 4);
+        assert_eq!(m[4], 0.0);
+    }
+
+    #[test]
+    fn padding_helpers() {
+        let v = XlaBackend::pad_col(&[1.0, 2.0], 4, -9.0);
+        assert_eq!(v, vec![1.0, 2.0, -9.0, -9.0]);
+        let m = XlaBackend::valid_mask(2, 4);
+        assert_eq!(m, vec![1.0, 1.0, 0.0, 0.0]);
+        let vecs = XlaBackend::pad_vecs(&vec![7.0; 2 * EMAX], 2, 3);
+        assert_eq!(vecs.len(), 3 * EMAX);
+        assert!(vecs[2 * EMAX..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::util::json::Json;
+use crate::{EMAX, KMAX};
+
+/// Kind of lowered graph (matches `aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Full per-subsample cross-map (distances -> topk -> simplex -> rho).
+    CrossMap,
+    /// Raw pairwise squared-distance matrix.
+    Distance,
+    /// Simplex + Pearson tail over pre-gathered neighbour panels.
+    Simplex,
+}
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Library / row bucket size.
+    pub n: usize,
+    /// Prediction bucket size.
+    pub p: usize,
+    /// HLO text path.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+
+        let emax = json.get("emax").and_then(Json::as_usize).unwrap_or(0);
+        let kmax = json.get("kmax").and_then(Json::as_usize).unwrap_or(0);
+        if emax != EMAX || kmax != KMAX {
+            bail!(
+                "artifact contract mismatch: manifest EMAX={emax}/KMAX={kmax}, \
+                 binary expects {EMAX}/{KMAX} — rebuild with `make artifacts`"
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("cross_map") => ArtifactKind::CrossMap,
+                Some("distance") => ArtifactKind::Distance,
+                Some("simplex") => ArtifactKind::Simplex,
+                other => bail!("artifact {name}: unknown kind {other:?}"),
+            };
+            let n = a.get("n").and_then(Json::as_usize).context("artifact missing n")?;
+            let p = a.get("p").and_then(Json::as_usize).context("artifact missing p")?;
+            let file = a.get("file").and_then(Json::as_str).context("artifact missing file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            artifacts.push(ArtifactMeta { name, kind, n, p, path });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Smallest bucket of `kind` with `n >= needed`.
+    pub fn bucket_for(&self, kind: ArtifactKind, needed: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= needed)
+            .min_by_key(|a| a.n)
+    }
+
+    /// Cheapest rectangular bucket fitting `n_needed` library rows and
+    /// `p_needed` prediction rows (minimizing padded distance work n*p) —
+    /// cross-map buckets are rectangular, see aot.py.
+    pub fn bucket_for_rect(
+        &self,
+        kind: ArtifactKind,
+        n_needed: usize,
+        p_needed: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= n_needed && a.p >= p_needed)
+            .min_by_key(|a| a.n * a.p)
+    }
+
+    /// Largest bucket of `kind`.
+    pub fn max_bucket(&self, kind: ArtifactKind) -> Option<usize> {
+        self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.n).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("parccm_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"emax":8,"kmax":11,"big":1e30,"artifacts":[
+                {"name":"ccm_n256","kind":"cross_map","file":"ccm_n256.hlo.txt","n":256,"p":256}
+            ]}"#,
+        );
+        std::fs::write(dir.join("ccm_n256.hlo.txt"), "HloModule fake").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::CrossMap);
+        assert_eq!(m.bucket_for(ArtifactKind::CrossMap, 100).unwrap().n, 256);
+        assert!(m.bucket_for(ArtifactKind::CrossMap, 300).is_none());
+        assert_eq!(m.max_bucket(ArtifactKind::CrossMap), Some(256));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_contract_mismatch() {
+        let dir = std::env::temp_dir().join("parccm_manifest_bad");
+        write_manifest(&dir, r#"{"emax":4,"kmax":11,"artifacts":[]}"#);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("contract mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("parccm_manifest_missing");
+        write_manifest(
+            &dir,
+            r#"{"emax":8,"kmax":11,"artifacts":[
+                {"name":"x","kind":"distance","file":"nope.hlo.txt","n":256,"p":256}
+            ]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let dir = std::env::temp_dir().join("parccm_manifest_buckets");
+        write_manifest(
+            &dir,
+            r#"{"emax":8,"kmax":11,"artifacts":[
+                {"name":"a","kind":"distance","file":"a.hlo.txt","n":256,"p":256},
+                {"name":"b","kind":"distance","file":"b.hlo.txt","n":1024,"p":1024},
+                {"name":"c","kind":"distance","file":"c.hlo.txt","n":512,"p":512}
+            ]}"#,
+        );
+        for f in ["a.hlo.txt", "b.hlo.txt", "c.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(ArtifactKind::Distance, 257).unwrap().n, 512);
+        assert_eq!(m.bucket_for(ArtifactKind::Distance, 512).unwrap().n, 512);
+        assert_eq!(m.bucket_for(ArtifactKind::Distance, 1).unwrap().n, 256);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,30 @@
+//! The AOT runtime bridge: load `artifacts/*.hlo.txt` (lowered once from
+//! the JAX/Pallas graphs by `make artifacts`) and execute them on the PJRT
+//! CPU client from the Rust hot path. Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shape buckets,
+//!   EMAX/KMAX contract).
+//! * [`service`] — the `xla` crate's client is `Rc`-based (not `Send`), so
+//!   executables live on dedicated service threads; tasks talk to them
+//!   through channels. One service thread per pool slot.
+//! * [`backend`] — [`XlaBackend`] implements the
+//!   [`crate::ccm::backend::ComputeBackend`] contract by padding workloads
+//!   to the nearest artifact bucket (masks keep padding out of the
+//!   numerics — the contract verified by pytest on the Python side and by
+//!   the native/XLA equivalence tests here).
+
+pub mod backend;
+pub mod manifest;
+pub mod service;
+
+pub use backend::XlaBackend;
+pub use manifest::{ArtifactMeta, Manifest};
+pub use service::XlaService;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True if an artifacts directory with a manifest exists.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

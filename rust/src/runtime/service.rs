@@ -1,0 +1,184 @@
+//! XLA execution service threads.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and therefore `!Send`; a
+//! client and its compiled executables must stay on the thread that
+//! created them. [`XlaService`] spawns `pool_size` service threads, each
+//! owning a full set of compiled executables; callers (engine executor
+//! threads) submit [`ExecRequest`]s over a shared channel and block on a
+//! per-request reply channel. With `pool_size > 1`, independent tasks'
+//! XLA calls genuinely overlap.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use super::manifest::Manifest;
+
+/// One XLA invocation: named executable + positional inputs.
+pub struct ExecRequest {
+    /// Artifact name (e.g. `ccm_n512`).
+    pub name: String,
+    /// Positional inputs: flat f32 data + dims (empty dims = scalar).
+    pub inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    /// Reply channel: flat f32 outputs, one per tuple element.
+    pub reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Handle to the service thread pool. Cheap to clone; dropping the last
+/// handle shuts the threads down.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: Sender<ExecRequest>,
+    shared: Arc<ServiceShared>,
+}
+
+struct ServiceShared {
+    pub manifest: Manifest,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    _keep_tx: Mutex<Option<Sender<ExecRequest>>>,
+}
+
+impl XlaService {
+    /// Compile every artifact in `dir` on `pool_size` service threads.
+    pub fn start(dir: impl Into<PathBuf>, pool_size: usize) -> Result<XlaService> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = channel::<ExecRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut threads = Vec::new();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        for i in 0..pool_size.max(1) {
+            let rx = Arc::clone(&rx);
+            let manifest = manifest.clone();
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("xla-service-{i}"))
+                    .spawn(move || service_loop(manifest, rx, ready))
+                    .expect("spawning xla service thread"),
+            );
+        }
+        drop(ready_tx);
+        // wait until every thread compiled its executables (or failed)
+        for _ in 0..pool_size.max(1) {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("xla service thread died during startup"))??;
+        }
+        Ok(XlaService {
+            tx: tx.clone(),
+            shared: Arc::new(ServiceShared {
+                manifest,
+                threads: Mutex::new(threads),
+                _keep_tx: Mutex::new(Some(tx)),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.shared.manifest
+    }
+
+    /// Execute `name` with `inputs`; blocks until the reply arrives.
+    pub fn execute(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<i64>)>) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(ExecRequest { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("xla service is down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("xla service dropped the request"))?
+    }
+
+    /// Explicit shutdown (also happens on drop of the last handle).
+    pub fn shutdown(&self) {
+        self.shared._keep_tx.lock().unwrap().take();
+        let mut threads = self.shared.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn service_loop(
+    manifest: Manifest,
+    rx: Arc<Mutex<Receiver<ExecRequest>>>,
+    ready: Sender<Result<()>>,
+) {
+    // Compile everything on THIS thread (client is thread-bound).
+    let built = (|| -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&a.path)
+                .with_context(|| format!("parsing {}", a.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", a.name))?;
+            exes.insert(a.name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let (_client, exes) = match built {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        // hold the lock only while receiving, not while executing
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let req = match req {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped -> shutdown
+        };
+        let result = run_one(&exes, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<Vec<Vec<f32>>> {
+    let exe = exes
+        .get(&req.name)
+        .ok_or_else(|| anyhow!("unknown artifact '{}'", req.name))?;
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|(data, dims)| -> Result<xla::Literal> {
+            if dims.is_empty() {
+                Ok(xla::Literal::scalar(data[0]))
+            } else {
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            }
+        })
+        .collect::<Result<_>>()?;
+    let out = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: unwrap the tuple.
+    let parts = out.to_tuple()?;
+    parts
+        .into_iter()
+        .map(|lit| Ok(lit.to_vec::<f32>()?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end service tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,162 @@
+//! Synthetic dynamical systems for CCM workloads.
+
+use crate::util::rng::Rng;
+
+/// Parameters of the Sugihara et al. (2012) coupled logistic maps:
+///
+/// ```text
+/// x[t+1] = x[t] (rx - rx x[t] - bxy y[t])
+/// y[t+1] = y[t] (ry - ry y[t] - byx x[t])
+/// ```
+///
+/// `byx` is the strength with which **X drives Y**; `bxy` the reverse.
+/// The defaults give strong X->Y and weak Y->X coupling — the asymmetry
+/// CCM is expected to detect.
+#[derive(Clone, Copy, Debug)]
+pub struct CoupledLogisticParams {
+    pub rx: f64,
+    pub ry: f64,
+    pub bxy: f64,
+    pub byx: f64,
+    pub x0: f64,
+    pub y0: f64,
+    /// Transient steps discarded before recording.
+    pub discard: usize,
+}
+
+impl Default for CoupledLogisticParams {
+    fn default() -> Self {
+        CoupledLogisticParams {
+            rx: 3.8,
+            ry: 3.5,
+            bxy: 0.02,
+            byx: 0.1,
+            x0: 0.4,
+            y0: 0.2,
+            discard: 300,
+        }
+    }
+}
+
+/// Generate `n` samples of the coupled logistic system; returns `(x, y)`.
+pub fn coupled_logistic(n: usize, p: CoupledLogisticParams) -> (Vec<f32>, Vec<f32>) {
+    let total = n + p.discard;
+    let mut x = p.x0;
+    let mut y = p.y0;
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for t in 0..total {
+        if t >= p.discard {
+            xs.push(x as f32);
+            ys.push(y as f32);
+        }
+        let nx = x * (p.rx - p.rx * x - p.bxy * y);
+        let ny = y * (p.ry - p.ry * y - p.byx * x);
+        x = nx;
+        y = ny;
+    }
+    (xs, ys)
+}
+
+/// Lorenz-63 integrated with fixed-step RK4, sampled every `sample_dt`.
+/// Returns the three coordinates; CCM on (x, z) is the classic example of
+/// bidirectional coupling within one attractor.
+pub fn lorenz63(n: usize, dt: f64, sample_every: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    const SIGMA: f64 = 10.0;
+    const RHO: f64 = 28.0;
+    const BETA: f64 = 8.0 / 3.0;
+    let f = |s: [f64; 3]| {
+        [
+            SIGMA * (s[1] - s[0]),
+            s[0] * (RHO - s[2]) - s[1],
+            s[0] * s[1] - BETA * s[2],
+        ]
+    };
+    let mut s = [1.0, 1.0, 1.0];
+    // transient
+    for _ in 0..5000 {
+        s = rk4_step(&f, s, dt);
+    }
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    let mut zs = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _ in 0..sample_every.max(1) {
+            s = rk4_step(&f, s, dt);
+        }
+        xs.push(s[0] as f32);
+        ys.push(s[1] as f32);
+        zs.push(s[2] as f32);
+    }
+    (xs, ys, zs)
+}
+
+fn rk4_step<F: Fn([f64; 3]) -> [f64; 3]>(f: &F, s: [f64; 3], dt: f64) -> [f64; 3] {
+    let add = |a: [f64; 3], b: [f64; 3], c: f64| [a[0] + c * b[0], a[1] + c * b[1], a[2] + c * b[2]];
+    let k1 = f(s);
+    let k2 = f(add(s, k1, dt / 2.0));
+    let k3 = f(add(s, k2, dt / 2.0));
+    let k4 = f(add(s, k3, dt));
+    [
+        s[0] + dt / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+        s[1] + dt / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+        s[2] + dt / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+    ]
+}
+
+/// AR(1) noise process `x[t+1] = phi x[t] + eps` — a *non-coupled* control
+/// series: CCM against it should show no convergent skill.
+pub fn ar1(n: usize, phi: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut x = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        x = phi * x + rng.normal();
+        out.push(x as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coupled_logistic_stays_in_unit_interval() {
+        let (x, y) = coupled_logistic(4000, CoupledLogisticParams::default());
+        assert_eq!(x.len(), 4000);
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)), "x escaped [0,1]");
+        assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)), "y escaped [0,1]");
+        // chaotic, not constant
+        let mean = x.iter().map(|&v| v as f64).sum::<f64>() / 4000.0;
+        assert!(x.iter().any(|&v| (v as f64 - mean).abs() > 0.1));
+    }
+
+    #[test]
+    fn coupled_logistic_deterministic() {
+        let p = CoupledLogisticParams::default();
+        assert_eq!(coupled_logistic(100, p).0, coupled_logistic(100, p).0);
+    }
+
+    #[test]
+    fn lorenz_is_bounded_and_chaotic() {
+        let (x, _, z) = lorenz63(2000, 0.01, 2);
+        assert_eq!(x.len(), 2000);
+        assert!(x.iter().all(|v| v.abs() < 100.0));
+        assert!(z.iter().all(|v| v.abs() < 100.0));
+        let first = &x[..1000];
+        let second = &x[1000..];
+        let m1 = first.iter().sum::<f32>() / 1000.0;
+        assert!(second.iter().any(|&v| (v - m1).abs() > 1.0));
+    }
+
+    #[test]
+    fn ar1_moments() {
+        let xs = ar1(20_000, 0.6, 9);
+        let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        // stationary variance = 1 / (1 - phi^2) = 1.5625
+        let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((var - 1.5625).abs() < 0.2, "var {var}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny CSV reader/writer for time-series columns (no external crates).
+//!
+//! Format: optional header row, comma-separated numeric columns. Used by
+//! `parccm sweep --input series.csv` and the examples to persist runs.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context as _, Result};
+
+/// A named set of equal-length columns.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    pub names: Vec<String>,
+    pub columns: Vec<Vec<f32>>,
+}
+
+impl Table {
+    pub fn new(names: Vec<String>, columns: Vec<Vec<f32>>) -> Result<Table> {
+        if names.len() != columns.len() {
+            bail!("{} names for {} columns", names.len(), columns.len());
+        }
+        if let Some(first) = columns.first() {
+            if columns.iter().any(|c| c.len() != first.len()) {
+                bail!("ragged columns");
+            }
+        }
+        Ok(Table { names, columns })
+    }
+
+    pub fn len(&self) -> usize {
+        self.columns.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Column by name.
+    pub fn column(&self, name: &str) -> Option<&[f32]> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.columns[i].as_slice())
+    }
+}
+
+/// Parse a CSV file. If the first row has any non-numeric cell it is
+/// treated as a header; otherwise columns are named `c0`, `c1`, ...
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Table> {
+    let text = fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_csv(&text)
+}
+
+/// Parse CSV text (see [`read_csv`]).
+pub fn parse_csv(text: &str) -> Result<Table> {
+    let mut lines = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'));
+    let first = match lines.next() {
+        Some(l) => l,
+        None => return Ok(Table::default()),
+    };
+    let first_cells: Vec<&str> = first.split(',').map(str::trim).collect();
+    let ncols = first_cells.len();
+    let is_header = first_cells.iter().any(|c| c.parse::<f32>().is_err());
+    let names: Vec<String> = if is_header {
+        first_cells.iter().map(|s| s.to_string()).collect()
+    } else {
+        (0..ncols).map(|i| format!("c{i}")).collect()
+    };
+    let mut columns: Vec<Vec<f32>> = vec![Vec::new(); ncols];
+    if !is_header {
+        for (i, c) in first_cells.iter().enumerate() {
+            columns[i].push(c.parse::<f32>().unwrap());
+        }
+    }
+    for (lineno, line) in lines.enumerate() {
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() != ncols {
+            bail!("line {}: {} cells, expected {ncols}", lineno + 2, cells.len());
+        }
+        for (i, c) in cells.iter().enumerate() {
+            columns[i].push(
+                c.parse::<f32>()
+                    .with_context(|| format!("line {}: bad number '{c}'", lineno + 2))?,
+            );
+        }
+    }
+    Table::new(names, columns)
+}
+
+/// Write a table as CSV with a header row.
+pub fn write_csv(path: impl AsRef<Path>, table: &Table) -> Result<()> {
+    let mut f = fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    writeln!(f, "{}", table.names.join(","))?;
+    for row in 0..table.len() {
+        let cells: Vec<String> = table.columns.iter().map(|c| c[row].to_string()).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_with_header() {
+        let t = parse_csv("x,y\n1,2\n3.5,4\n").unwrap();
+        assert_eq!(t.names, vec!["x", "y"]);
+        assert_eq!(t.column("x").unwrap(), &[1.0, 3.5]);
+        assert_eq!(t.column("y").unwrap(), &[2.0, 4.0]);
+        assert!(t.column("z").is_none());
+    }
+
+    #[test]
+    fn parse_headerless_and_comments() {
+        let t = parse_csv("# generated\n1,2\n3,4\n").unwrap();
+        assert_eq!(t.names, vec!["c0", "c1"]);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("a,b\n1\n").is_err());
+        assert!(parse_csv("a,b\n1,x\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let t = Table::new(
+            vec!["x".into(), "y".into()],
+            vec![vec![0.25, -1.5], vec![3.0, 4.0]],
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join("parccm_io_test.csv");
+        write_csv(&path, &t).unwrap();
+        let got = read_csv(&path).unwrap();
+        assert_eq!(got, t);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = parse_csv("").unwrap();
+        assert!(t.is_empty());
+    }
+}

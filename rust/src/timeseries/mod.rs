@@ -1,0 +1,15 @@
+//! Workload substrate: synthetic dynamical systems, noise models, CSV IO,
+//! and the small real-world dataset used by the examples.
+//!
+//! The paper evaluates on generated time series of length 4000; its
+//! motivating example is a hare/lynx predator-prey system. We provide the
+//! coupled logistic maps from Sugihara et al. 2012 (the canonical CCM
+//! benchmark), a Lorenz-63 integrator for a continuous-time workload, and
+//! the 1900-1920 Hudson Bay hare/lynx record for the real-data example.
+
+pub mod data;
+pub mod generators;
+pub mod io;
+pub mod noise;
+
+pub use generators::{ar1, coupled_logistic, lorenz63, CoupledLogisticParams};

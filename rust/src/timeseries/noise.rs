@@ -1,0 +1,79 @@
+//! Observational noise models — used by the robustness example
+//! (Mønster et al. 2017 studied CCM under noise; our
+//! `examples/noise_robustness.rs` sweeps these).
+
+use crate::util::rng::Rng;
+
+/// Add zero-mean gaussian observation noise with standard deviation
+/// `sigma * std(series)` (i.e. `sigma` is a *relative* noise level).
+pub fn add_gaussian(series: &[f32], sigma_rel: f64, seed: u64) -> Vec<f32> {
+    if series.is_empty() {
+        return Vec::new();
+    }
+    let mean = series.iter().map(|&v| v as f64).sum::<f64>() / series.len() as f64;
+    let var = series
+        .iter()
+        .map(|&v| (v as f64 - mean).powi(2))
+        .sum::<f64>()
+        / series.len() as f64;
+    let sd = var.sqrt();
+    let mut rng = Rng::new(seed);
+    series
+        .iter()
+        .map(|&v| (v as f64 + rng.normal() * sigma_rel * sd) as f32)
+        .collect()
+}
+
+/// Replace a fraction `frac` of points with linear interpolation of their
+/// neighbours (simulates gap-filled sensor dropouts).
+pub fn dropout_interpolate(series: &[f32], frac: f64, seed: u64) -> Vec<f32> {
+    let mut out = series.to_vec();
+    if series.len() < 3 || frac <= 0.0 {
+        return out;
+    }
+    let mut rng = Rng::new(seed);
+    let k = ((series.len() - 2) as f64 * frac.min(1.0)) as usize;
+    let idx = rng.sample_indices(series.len() - 2, k);
+    for i in idx {
+        let i = i + 1; // keep endpoints
+        out[i] = (series[i - 1] + series[i + 1]) / 2.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_noise_scales_with_sigma() {
+        let base: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.1).sin()).collect();
+        let noisy = add_gaussian(&base, 0.5, 1);
+        let diff: f64 = base
+            .iter()
+            .zip(&noisy)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / base.len() as f64;
+        assert!(diff > 0.0);
+        let clean = add_gaussian(&base, 0.0, 1);
+        assert_eq!(clean, base);
+    }
+
+    #[test]
+    fn dropout_preserves_length_and_endpoints() {
+        let base: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let out = dropout_interpolate(&base, 0.3, 7);
+        assert_eq!(out.len(), 100);
+        assert_eq!(out[0], base[0]);
+        assert_eq!(out[99], base[99]);
+        // linear series: interpolation is exact
+        assert_eq!(out, base);
+    }
+
+    #[test]
+    fn empty_and_tiny_series_safe() {
+        assert!(add_gaussian(&[], 0.1, 0).is_empty());
+        assert_eq!(dropout_interpolate(&[1.0, 2.0], 0.5, 0), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,131 @@
+//! A small command-line argument parser (the offline image has no clap).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` — enough for the `parccm` launcher, the examples and
+//! the bench binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an explicit iterator; the first non-dash token becomes the
+    /// subcommand, later non-dash tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--l 500,1000,2000`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig4 --full --seed 42 --l=500,1000 input.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get_usize_list("l", &[]), vec![500, 1000]);
+        assert_eq!(a.positional, vec!["input.csv"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert!(!a.flag("full"));
+        assert_eq!(a.get_usize("r", 50), 50);
+        assert_eq!(a.get_f64("alpha", 0.5), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("x --verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn option_value_dash_number() {
+        let a = parse("x --k v --quiet");
+        assert_eq!(a.get("k"), Some("v"));
+        assert!(a.flag("quiet"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny dense linear algebra: solve A x = b via Gaussian elimination with
+//! partial pivoting, and a ridge-regularized least-squares for the S-map
+//! forecaster (the offline image has no LAPACK).
+
+/// Solve `A x = b` in place for square `A` (row-major, n x n). Returns
+/// `None` if the matrix is numerically singular.
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // partial pivot
+        let mut pivot = col;
+        let mut best = a[col * n + col].abs();
+        for row in (col + 1)..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                pivot = row;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if pivot != col {
+            for k in 0..n {
+                a.swap(col * n + k, pivot * n + k);
+            }
+            b.swap(col, pivot);
+        }
+        let diag = a[col * n + col];
+        for row in (col + 1)..n {
+            let factor = a[row * n + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row * n + k] -= factor * a[col * n + k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Some(x)
+}
+
+/// Weighted ridge least squares: minimize ||W^(1/2)(X beta - y)||^2 +
+/// ridge*||beta||^2 over rows of X (`rows` x `cols`, row-major), weights
+/// `w` per row. Returns beta (`cols`). Used by the S-map local linear fit.
+pub fn weighted_ridge_lstsq(
+    x: &[f64],
+    y: &[f64],
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    ridge: f64,
+) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(y.len(), rows);
+    assert_eq!(w.len(), rows);
+    // normal equations: (X^T W X + ridge I) beta = X^T W y
+    let mut ata = vec![0.0f64; cols * cols];
+    let mut atb = vec![0.0f64; cols];
+    for r in 0..rows {
+        let wr = w[r];
+        if wr == 0.0 {
+            continue;
+        }
+        let row = &x[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            let wxi = wr * row[i];
+            atb[i] += wxi * y[r];
+            for j in i..cols {
+                ata[i * cols + j] += wxi * row[j];
+            }
+        }
+    }
+    // symmetrize + ridge
+    for i in 0..cols {
+        for j in 0..i {
+            ata[i * cols + j] = ata[j * cols + i];
+        }
+        ata[i * cols + i] += ridge;
+    }
+    solve(&mut ata, &mut atb, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1; 3]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 3.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn lstsq_recovers_linear_model() {
+        // y = 3 + 2*x, exact fit with intercept column
+        let rows = 5;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..rows {
+            let xi = i as f64;
+            x.extend_from_slice(&[1.0, xi]);
+            y.push(3.0 + 2.0 * xi);
+        }
+        let w = vec![1.0; rows];
+        let beta = weighted_ridge_lstsq(&x, &y, &w, rows, 2, 0.0).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_downweight_outliers() {
+        // one wild outlier with zero weight must not affect the fit
+        let x = vec![1.0, 0.0, 1.0, 1.0, 1.0, 2.0, 1.0, 3.0];
+        let y = vec![0.0, 1.0, 2.0, 100.0];
+        let w = vec![1.0, 1.0, 1.0, 0.0];
+        let beta = weighted_ridge_lstsq(&x, &y, &w, 4, 2, 0.0).unwrap();
+        assert!((beta[0] - 0.0).abs() < 1e-9);
+        assert!((beta[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_zero() {
+        let x = vec![1.0, 1.0, 1.0, 1.0]; // 4 rows, 1 col of ones
+        let y = vec![2.0, 2.0, 2.0, 2.0];
+        let w = vec![1.0; 4];
+        let none = weighted_ridge_lstsq(&x, &y, &w, 4, 1, 0.0).unwrap();
+        let some = weighted_ridge_lstsq(&x, &y, &w, 4, 1, 4.0).unwrap();
+        assert!((none[0] - 2.0).abs() < 1e-9);
+        assert!(some[0] < none[0]); // (X'X + r)^-1 shrinks
+    }
+}

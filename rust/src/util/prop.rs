@@ -1,0 +1,69 @@
+//! A miniature property-testing harness (no proptest offline).
+//!
+//! [`check`] runs a property over `cases` seeded inputs; on failure it
+//! reports the seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla_extension rpath on
+//! # // this image (libstdc++ loader error); the same code is exercised by
+//! # // the unit tests below and rust/tests/prop_invariants.rs.
+//! use parccm::util::prop::check;
+//! use parccm::util::rng::Rng;
+//! check("sort is idempotent", 200, |rng: &mut Rng| {
+//!     let mut v: Vec<u64> = (0..rng.below(50)).map(|_| rng.next_u64()).collect();
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `property` over `cases` deterministic random cases. Panics with the
+/// failing seed on the first counterexample.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, &mut property);
+}
+
+/// Like [`check`] with an explicit base seed (use to replay a failure).
+pub fn check_seeded<F>(name: &str, cases: u64, base_seed: u64, property: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 below bound", 100, |rng| {
+            let n = 1 + rng.below(1000);
+            let x = rng.below(n);
+            if x < n {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,133 @@
+//! CCM scientific integration: the algorithm recovers the causal
+//! structure of known systems through the full engine+pipeline stack, and
+//! all five implementation levels agree.
+
+use std::sync::Arc;
+
+use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::convergence::assess;
+use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::params::Scenario;
+use parccm::ccm::result::summarize;
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::timeseries::generators::{ar1, coupled_logistic, CoupledLogisticParams};
+
+fn backend() -> Arc<dyn ComputeBackend> {
+    Arc::new(NativeBackend)
+}
+
+fn scenario(n: usize, r: usize, ls: Vec<usize>) -> Scenario {
+    Scenario {
+        series_len: n,
+        r,
+        ls,
+        es: vec![2],
+        taus: vec![1],
+        theiler: 0,
+        seed: 99,
+        partitions: 4,
+    }
+}
+
+#[test]
+fn detects_unidirectional_coupling_direction() {
+    // X drives Y strongly (byx) and Y barely drives X (bxy ~ 0):
+    // cross-mapping X from M_Y must converge high; the reverse must stay low.
+    let (x, y) = coupled_logistic(
+        800,
+        CoupledLogisticParams { bxy: 0.0, byx: 0.32, ..Default::default() },
+    );
+    let s = scenario(800, 12, vec![50, 200, 600]);
+    let xy = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    let yx = run_case(Case::A4, &s, &x, &y, Deploy::Local { cores: 2 }, backend());
+    let sum_xy = summarize(&xy.skills);
+    let sum_yx = summarize(&yx.skills);
+    let v_xy = assess(&sum_xy, 0.1, 0.03);
+    assert!(v_xy.causal, "X->Y should be causal: {:?}", sum_xy.iter().map(|s| s.mean_rho).collect::<Vec<_>>());
+    let top_xy = sum_xy.iter().map(|s| s.mean_rho).fold(0.0, f64::max);
+    let top_yx = sum_yx.iter().map(|s| s.mean_rho).fold(0.0, f64::max);
+    assert!(
+        top_xy > top_yx + 0.15,
+        "asymmetry lost: X->Y {top_xy:.3} vs Y->X {top_yx:.3}"
+    );
+}
+
+#[test]
+fn bidirectional_coupling_detected_both_ways() {
+    let (x, y) = coupled_logistic(
+        700,
+        CoupledLogisticParams { bxy: 0.1, byx: 0.1, ..Default::default() },
+    );
+    let s = scenario(700, 10, vec![60, 500]);
+    for (effect, cause, dir) in [(&y, &x, "X->Y"), (&x, &y, "Y->X")] {
+        let rep = run_case(Case::A4, &s, effect, cause, Deploy::Local { cores: 2 }, backend());
+        let summaries = summarize(&rep.skills);
+        let v = assess(&summaries, 0.1, 0.02);
+        assert!(v.causal, "{dir} should be causal: {summaries:?}");
+    }
+}
+
+#[test]
+fn no_false_positive_on_independent_series() {
+    let a = ar1(700, 0.6, 1);
+    let b = ar1(700, 0.6, 2);
+    let s = scenario(700, 10, vec![60, 500]);
+    let rep = run_case(Case::A4, &s, &b, &a, Deploy::Local { cores: 2 }, backend());
+    let summaries = summarize(&rep.skills);
+    let top = summaries.iter().map(|x| x.mean_rho).fold(f64::MIN, f64::max);
+    assert!(top < 0.35, "independent AR(1) pair shows skill {top}");
+}
+
+#[test]
+fn convergence_with_library_size() {
+    let (x, y) = coupled_logistic(900, CoupledLogisticParams::default());
+    let s = scenario(900, 15, vec![40, 100, 300, 800]);
+    let rep = run_case(Case::A5, &s, &y, &x, Deploy::paper_cluster(), backend());
+    let summaries = summarize(&rep.skills);
+    assert_eq!(summaries.len(), 4);
+    // monotone non-decreasing in L (tolerance folded into assess)
+    let v = assess(&summaries, 0.2, 0.05);
+    assert!(v.causal, "{summaries:?}");
+    assert!(v.rho_max_l > 0.85, "strong coupling should cross-map well: {v:?}");
+}
+
+#[test]
+fn skills_identical_across_cases_large() {
+    // bigger replica of the driver unit test: A1 == A2..A5 numerically.
+    let (x, y) = coupled_logistic(500, CoupledLogisticParams::default());
+    let s = scenario(500, 6, vec![80, 250]);
+    let canon = {
+        let mut rows = run_case(Case::A1, &s, &y, &x, Deploy::SingleThread, backend()).skills;
+        rows.sort_by_key(|r| (r.params.l, r.sample_id));
+        rows
+    };
+    for case in [Case::A2, Case::A3, Case::A4, Case::A5] {
+        let mut rows = run_case(case, &s, &y, &x, Deploy::paper_cluster(), backend()).skills;
+        rows.sort_by_key(|r| (r.params.l, r.sample_id));
+        assert_eq!(rows.len(), canon.len());
+        for (a, b) in canon.iter().zip(&rows) {
+            assert!(
+                (a.rho - b.rho).abs() < 1e-5,
+                "{case:?} diverges at L={} sample={}",
+                a.params.l,
+                a.sample_id
+            );
+        }
+    }
+}
+
+#[test]
+fn theiler_window_reduces_skill_of_autocorrelated_match() {
+    // With a wide Theiler window the nearest temporal neighbours are
+    // excluded; skill should drop (slightly) but stay defined.
+    let (x, y) = coupled_logistic(600, CoupledLogisticParams::default());
+    let mut s = scenario(600, 8, vec![300]);
+    let base = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    s.theiler = 20;
+    let windowed = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    let rho_base = summarize(&base.skills)[0].mean_rho;
+    let rho_win = summarize(&windowed.skills)[0].mean_rho;
+    assert!(rho_win.is_finite());
+    assert!(rho_win <= rho_base + 0.05, "theiler window should not inflate skill");
+}

@@ -1,0 +1,236 @@
+//! Engine integration: end-to-end jobs through context + scheduler +
+//! executors + DES, including the paper-relevant scheduling semantics.
+
+use parccm::engine::{Context, Deploy, EngineConfig, Pipeline};
+
+fn ctx(deploy: Deploy, partitions: usize) -> Context {
+    Context::new(EngineConfig::new(deploy).with_default_parallelism(partitions))
+}
+
+#[test]
+fn large_job_roundtrip() {
+    let c = ctx(Deploy::Local { cores: 4 }, 16);
+    let rdd = c
+        .parallelize((0..100_000i64).collect())
+        .map(|x| x * 2)
+        .filter(|x| x % 3 == 0)
+        .map(|x| x / 2);
+    let got = c.collect(&rdd);
+    let want: Vec<i64> = (0..100_000).map(|x| x * 2).filter(|x| x % 3 == 0).map(|x| x / 2).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn many_concurrent_jobs_complete() {
+    let c = ctx(Deploy::Local { cores: 4 }, 8);
+    let futures: Vec<_> = (0..20)
+        .map(|k| {
+            let rdd = c
+                .parallelize((0..200u64).collect())
+                .map(move |v| v.wrapping_mul(k + 1));
+            c.collect_async(&rdd)
+        })
+        .collect();
+    for (k, f) in futures.into_iter().enumerate() {
+        let got = f.get();
+        assert_eq!(got.len(), 200);
+        assert_eq!(got[2], 2 * (k as u64 + 1));
+    }
+}
+
+#[test]
+fn pipeline_composition_end_to_end() {
+    let c = ctx(Deploy::Local { cores: 2 }, 4);
+    let p = Pipeline::<u32, u32>::new("inc", |_, r| r.map(|v| v + 1))
+        .then("expand", |_, r| r.flat_map(|v| vec![v, v]))
+        .then("sum-parts", |_, r| r.map_partitions(|_, xs| vec![xs.iter().sum::<u32>()]));
+    let parts = p.run(&c, c.parallelize((0..100).collect()));
+    let total: u32 = parts.iter().sum();
+    assert_eq!(total, 2 * (1..=100).sum::<u32>());
+}
+
+#[test]
+fn des_cluster_beats_single_thread_on_parallel_work() {
+    // identical work replayed against two topologies: the 20-core cluster
+    // must simulate ~an order of magnitude faster than 1 core.
+    let work = |deploy: Deploy| {
+        let c = ctx(deploy, 40);
+        let rdd = c.parallelize_with((0..40u64).collect(), 40).map(|s| {
+            // ~0.3 ms of real work per task
+            let mut acc = s;
+            for i in 0..60_000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            acc
+        });
+        let _ = c.collect(&rdd);
+        c.report()
+    };
+    let single = work(Deploy::SingleThread);
+    let cluster = work(Deploy::Cluster { workers: 5, cores_per_worker: 4 });
+    assert!(
+        cluster.sim_makespan_s < single.sim_makespan_s / 5.0,
+        "cluster {} vs single {}",
+        cluster.sim_makespan_s,
+        single.sim_makespan_s
+    );
+}
+
+#[test]
+fn async_submission_overlaps_in_des_sync_does_not() {
+    // two identical jobs; sync = submit/get/submit/get, async = submit both.
+    let run = |do_async: bool| {
+        let c = ctx(Deploy::Cluster { workers: 4, cores_per_worker: 4 }, 8);
+        let make = || {
+            c.parallelize_with((0..8u64).collect(), 8).map(|s| {
+                let mut acc = s;
+                for i in 0..50_000u64 {
+                    acc = acc.wrapping_mul(31).wrapping_add(i);
+                }
+                acc
+            })
+        };
+        if do_async {
+            let f1 = c.collect_async(&make());
+            let f2 = c.collect_async(&make());
+            let _ = (f1.get(), f2.get());
+        } else {
+            let _ = c.collect(&make());
+            let _ = c.collect(&make());
+        }
+        c.report().sim_makespan_s
+    };
+    let sync_s = run(false);
+    let async_s = run(true);
+    // 16 cores, 8 tasks per job: async packs both jobs concurrently.
+    assert!(
+        async_s < sync_s * 0.75,
+        "async {async_s} should beat sync {sync_s} on an idle-heavy topology"
+    );
+}
+
+#[test]
+fn broadcast_value_visible_in_tasks() {
+    let c = ctx(Deploy::Local { cores: 2 }, 4);
+    let table = c.broadcast(vec![10i64, 20, 30], 24);
+    let t2 = table.clone();
+    let rdd = c
+        .parallelize((0..9usize).collect())
+        .uses_broadcast(&table)
+        .map(move |i| t2.value()[i % 3]);
+    let got = c.collect(&rdd);
+    assert_eq!(got, vec![10, 20, 30, 10, 20, 30, 10, 20, 30]);
+    // dep recorded on the job
+    let jobs = c.events().jobs();
+    assert!(jobs.iter().any(|j| j.broadcast_deps.iter().any(|(id, _)| *id == table.id())));
+}
+
+#[test]
+fn sample_is_deterministic_and_roughly_proportional() {
+    let c = ctx(Deploy::Local { cores: 2 }, 8);
+    let rdd = c.parallelize((0..10_000i64).collect()).sample(0.3, 99);
+    let a = c.collect(&rdd);
+    let b = c.collect(&rdd);
+    assert_eq!(a, b, "sampling must be deterministic in (seed, partition)");
+    let frac = a.len() as f64 / 10_000.0;
+    assert!((frac - 0.3).abs() < 0.05, "kept {frac}");
+    // elements keep order and come from the source
+    assert!(a.windows(2).all(|w| w[0] < w[1]));
+}
+
+#[test]
+fn zip_with_index_is_global_and_ordered() {
+    let c = ctx(Deploy::Local { cores: 2 }, 5);
+    let data: Vec<char> = "abcdefghijk".chars().collect();
+    let rdd = c.parallelize(data.clone()).zip_with_index();
+    let got = c.collect(&rdd);
+    for (i, (idx, v)) in got.iter().enumerate() {
+        assert_eq!(*idx, i);
+        assert_eq!(*v, data[i]);
+    }
+}
+
+#[test]
+fn reduce_by_key_matches_sequential() {
+    let c = ctx(Deploy::Local { cores: 2 }, 6);
+    let rdd = c
+        .parallelize((0..1000u64).collect())
+        .key_by(|x| x % 7);
+    let mut got = c.reduce_by_key(&rdd, |a, b| a + b);
+    got.sort_by_key(|(k, _)| *k);
+    let mut want = vec![(0u64, 0u64); 7];
+    for x in 0..1000u64 {
+        want[(x % 7) as usize].0 = x % 7;
+        want[(x % 7) as usize].1 += x;
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn group_by_key_collects_all_values() {
+    let c = ctx(Deploy::Local { cores: 2 }, 4);
+    let rdd = c.parallelize((0..100usize).collect()).key_by(|x| x % 3);
+    let mut groups = c.group_by_key(&rdd);
+    groups.sort_by_key(|(k, _)| *k);
+    assert_eq!(groups.len(), 3);
+    for (k, vs) in &groups {
+        assert_eq!(vs.len(), if *k == 0 { 34 } else { 33 });
+        assert!(vs.windows(2).all(|w| w[0] < w[1]), "per-partition order kept");
+        assert!(vs.iter().all(|v| v % 3 == *k));
+    }
+}
+
+#[test]
+fn flaky_task_retried_and_job_succeeds() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    // fail the first two attempts of partition 1, then succeed — the
+    // "resilient" in RDD (Spark task.maxFailures semantics)
+    let c = ctx(Deploy::Local { cores: 2 }, 4);
+    let failures = Arc::new(AtomicUsize::new(0));
+    let f2 = Arc::clone(&failures);
+    let rdd = c
+        .parallelize_with((0..40i64).collect(), 4)
+        .map_partitions(move |p, xs| {
+            if p == 1 && f2.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("injected fault on partition 1");
+            }
+            xs
+        });
+    let got = c.collect(&rdd);
+    assert_eq!(got, (0..40).collect::<Vec<_>>());
+    // event log records the retries
+    let tasks = c.events().tasks();
+    let p1 = tasks.iter().find(|t| t.partition == 1).unwrap();
+    assert_eq!(p1.attempts, 3, "partition 1 should have taken 3 attempts");
+    assert!(tasks.iter().filter(|t| t.partition != 1).all(|t| t.attempts == 1));
+}
+
+#[test]
+fn permanently_failing_task_fails_job_not_process() {
+    let c = Context::new(
+        EngineConfig::new(Deploy::Local { cores: 2 })
+            .with_default_parallelism(4)
+            .with_max_task_attempts(2),
+    );
+    let rdd = c
+        .parallelize_with((0..8i64).collect(), 4)
+        .map(|x: i64| if x == 5 { panic!("poison element {x}") } else { x });
+    let err = c.try_collect(&rdd).unwrap_err();
+    assert!(err.reason.contains("poison element 5"), "{err}");
+    assert!(err.reason.contains("2 attempts"), "{err}");
+    // the context is still usable for new jobs afterwards
+    let ok = c.collect(&c.parallelize(vec![1, 2, 3]));
+    assert_eq!(ok, vec![1, 2, 3]);
+}
+
+#[test]
+fn report_utilization_bounded() {
+    let c = ctx(Deploy::Cluster { workers: 2, cores_per_worker: 2 }, 8);
+    let rdd = c.parallelize((0..64u64).collect()).map(|v| v + 1);
+    let _ = c.collect(&rdd);
+    let rep = c.report();
+    assert!(rep.sim_utilization >= 0.0 && rep.sim_utilization <= 1.0);
+    assert!(rep.sim_makespan_s >= 0.0);
+    assert_eq!(rep.topology, "cluster(2x2)");
+}

@@ -1,0 +1,149 @@
+//! Runtime integration: load the AOT artifacts, execute them via PJRT,
+//! and cross-check the XLA backend against the native one — this is where
+//! the Rust side inherits the pytest-verified Pallas semantics.
+//!
+//! Requires `make artifacts` (skips, loudly, if artifacts/ is absent).
+
+use std::sync::Arc;
+
+use parccm::ccm::backend::{ComputeBackend, NeighborPanels};
+use parccm::ccm::embedding::Embedding;
+use parccm::ccm::knn::knn_batch;
+use parccm::ccm::params::CcmParams;
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::draw_samples;
+use parccm::native::NativeBackend;
+use parccm::runtime::{artifacts_available, XlaBackend, DEFAULT_ARTIFACTS_DIR};
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::util::rng::Rng;
+use parccm::{EMAX, KMAX};
+
+fn artifacts_dir() -> Option<String> {
+    // tests run from the crate root
+    if artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        Some(DEFAULT_ARTIFACTS_DIR.to_string())
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn xla_backend() -> Option<XlaBackend> {
+    artifacts_dir().map(|d| XlaBackend::from_dir(&d, 1).expect("starting XLA service"))
+}
+
+#[test]
+fn distance_matrix_matches_native() {
+    let Some(xla) = xla_backend() else { return };
+    let mut rng = Rng::new(1);
+    let n = 100; // deliberately not a bucket size: exercises padding
+    let mut vecs = vec![0.0f32; n * EMAX];
+    for i in 0..n {
+        for l in 0..3 {
+            vecs[i * EMAX + l] = rng.f32();
+        }
+    }
+    let got = xla.distance_matrix(&vecs, n);
+    let want = NativeBackend.distance_matrix(&vecs, n);
+    assert_eq!(got.len(), want.len());
+    for i in 0..n * n {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-4,
+            "distance [{i}]: xla {} vs native {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn cross_map_matches_native() {
+    let Some(xla) = xla_backend() else { return };
+    let (x, y) = coupled_logistic(500, CoupledLogisticParams::default());
+    for (e, tau, l) in [(2usize, 1usize, 150usize), (4, 2, 300), (1, 1, 60)] {
+        let problem = CcmProblem::new(&y, &x, e, tau, 0.0);
+        let samples = draw_samples(&Rng::new(3), CcmParams::new(e, tau, l), problem.emb.n, 3);
+        for s in &samples {
+            let input = problem.input_for(s);
+            let a = xla.cross_map(&input);
+            let b = NativeBackend.cross_map(&input);
+            assert!(
+                (a.rho - b.rho).abs() < 1e-4,
+                "(E={e},tau={tau},L={l}) sample {}: xla rho {} vs native {}",
+                s.sample_id,
+                a.rho,
+                b.rho
+            );
+            let max_diff = a
+                .preds
+                .iter()
+                .zip(&b.preds)
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-3, "pred divergence {max_diff}");
+        }
+    }
+}
+
+#[test]
+fn simplex_tail_matches_native() {
+    let Some(xla) = xla_backend() else { return };
+    let (x, y) = coupled_logistic(400, CoupledLogisticParams::default());
+    let emb = Embedding::new(&y, 3, 1);
+    let targets = emb.align_targets(&x);
+    let mut rng = Rng::new(5);
+    let rows = rng.sample_indices(emb.n, 120);
+    let mut lib_vecs = Vec::new();
+    let mut lib_targets = Vec::new();
+    let mut lib_times = Vec::new();
+    for &r in &rows {
+        lib_vecs.extend_from_slice(emb.point(r));
+        lib_targets.push(targets[r]);
+        lib_times.push(emb.time_of(r) as f32);
+    }
+    let pred_times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+    let (dvals, tvals) =
+        knn_batch(&emb.vecs, &pred_times, &lib_vecs, &lib_targets, &lib_times, 0.0);
+    let panels = NeighborPanels { dvals, tvals, n_pred: emb.n };
+    let a = xla.simplex_tail(&panels, &targets, 3);
+    let b = NativeBackend.simplex_tail(&panels, &targets, 3);
+    assert!((a.rho - b.rho).abs() < 1e-4, "xla {} vs native {}", a.rho, b.rho);
+}
+
+#[test]
+fn service_handles_concurrent_callers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = Arc::new(XlaBackend::from_dir(&dir, 2).expect("pool of 2"));
+    let (x, y) = coupled_logistic(400, CoupledLogisticParams::default());
+    let problem = Arc::new(CcmProblem::new(&y, &x, 2, 1, 0.0));
+    let samples = draw_samples(&Rng::new(11), CcmParams::new(2, 1, 100), problem.emb.n, 8);
+    let native: Vec<f32> = samples
+        .iter()
+        .map(|s| NativeBackend.cross_map(&problem.input_for(s)).rho)
+        .collect();
+
+    let handles: Vec<_> = samples
+        .iter()
+        .cloned()
+        .map(|s| {
+            let xla = Arc::clone(&xla);
+            let problem = Arc::clone(&problem);
+            std::thread::spawn(move || xla.cross_map(&problem.input_for(&s)).rho)
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(native) {
+        let got = h.join().unwrap();
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn kmax_emax_contract() {
+    // guard: manifest constants must match the binary (Manifest::load
+    // enforces it; this test just ensures artifacts on disk are current).
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = parccm::runtime::Manifest::load(&dir).expect("manifest");
+    assert!(!manifest.artifacts.is_empty());
+    assert_eq!(EMAX, 8);
+    assert_eq!(KMAX, 11);
+}

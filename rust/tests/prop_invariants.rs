@@ -1,0 +1,255 @@
+//! Property-based tests (mini-prop harness) over the coordinator's
+//! invariants: RDD semantics, scheduling-independence of results, table
+//! equivalence, DES sanity, and kernel math properties.
+
+use std::sync::Arc;
+
+use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::embedding::Embedding;
+use parccm::ccm::knn::knn_batch;
+use parccm::ccm::params::CcmParams;
+use parccm::ccm::pipeline::{ccm_transform_rdd, CcmProblem};
+use parccm::ccm::simplex::{pearson_f32, simplex_one};
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::table::{library_mask, DistanceTable};
+use parccm::engine::{Context, Deploy, EngineConfig};
+use parccm::native::NativeBackend;
+use parccm::util::prop::check;
+use parccm::util::rng::Rng;
+use parccm::{BIG, EMAX, KMAX};
+
+fn random_series(rng: &mut Rng, n: usize) -> Vec<f32> {
+    // a mildly autocorrelated bounded series
+    let mut x = 0.5f64;
+    (0..n)
+        .map(|_| {
+            x = 3.7 * x * (1.0 - x) * 0.98 + 0.01 * rng.f64();
+            x as f32
+        })
+        .collect()
+}
+
+#[test]
+fn prop_rdd_collect_equals_sequential_eval() {
+    check("collect == flat sequential map", 40, |rng| {
+        let n = 1 + rng.below(500);
+        let parts = 1 + rng.below(12);
+        let mul = (1 + rng.below(100)) as i64;
+        let data: Vec<i64> = (0..n as i64).collect();
+        let want: Vec<i64> = data.iter().map(|x| x * mul).collect();
+        let ctx = Context::new(
+            EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(parts),
+        );
+        let got = ctx.collect(&ctx.parallelize(data).map(move |x| x * mul));
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("n={n} parts={parts}"))
+        }
+    });
+}
+
+#[test]
+fn prop_skill_independent_of_partitioning() {
+    check("partition count never changes skills", 10, |rng| {
+        let series_n = 220 + rng.below(200);
+        let y = random_series(rng, series_n);
+        let x = random_series(rng, series_n);
+        let e = 1 + rng.below(3);
+        let l = 30 + rng.below(100);
+        let problem = CcmProblem::new(&y, &x, e, 1, 0.0);
+        let n = problem.emb.n;
+        let samples = draw_samples(&Rng::new(rng.next_u64()), CcmParams::new(e, 1, l), n, 6);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+
+        let mut baseline: Option<Vec<(usize, f32)>> = None;
+        for parts in [1usize, 3, 7] {
+            let ctx = Context::new(
+                EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(parts),
+            );
+            let size = problem.size_bytes();
+            let pb = ctx.broadcast(
+                CcmProblem::new(&y, &x, e, 1, 0.0),
+                size,
+            );
+            let mut rows = ctx.collect(&ccm_transform_rdd(
+                &ctx,
+                ctx.parallelize_with(samples.clone(), parts),
+                &pb,
+                Arc::clone(&backend),
+            ));
+            rows.sort_by_key(|r| r.sample_id);
+            let got: Vec<(usize, f32)> = rows.iter().map(|r| (r.sample_id, r.rho)).collect();
+            match &baseline {
+                None => baseline = Some(got),
+                Some(want) => {
+                    if &got != want {
+                        return Err(format!("parts={parts} changed results"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_table_query_equals_bruteforce() {
+    check("indexing table == brute force k-NN", 12, |rng| {
+        let n_series = 150 + rng.below(250);
+        let y = random_series(rng, n_series);
+        let x = random_series(rng, n_series);
+        let e = 1 + rng.below(4);
+        let tau = 1 + rng.below(3);
+        let emb = Embedding::new(&y, e, tau);
+        let targets = emb.align_targets(&x);
+        let table = DistanceTable::build(&emb);
+        let l = (10 + rng.below(emb.n - 12)).min(emb.n);
+        let mut sample_rng = Rng::new(rng.next_u64());
+        let rows = sample_rng.sample_indices(emb.n, l);
+        let theiler = if rng.below(3) == 0 { rng.below(5) as f32 } else { 0.0 };
+
+        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
+        let panels = table.query_all(&mask, &target_of, theiler);
+
+        let mut lib_vecs = Vec::new();
+        let mut lib_targets = Vec::new();
+        let mut lib_times = Vec::new();
+        for &r in &rows {
+            lib_vecs.extend_from_slice(emb.point(r));
+            lib_targets.push(targets[r]);
+            lib_times.push(emb.time_of(r) as f32);
+        }
+        let pred_times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+        let (bd, bt) =
+            knn_batch(&emb.vecs, &pred_times, &lib_vecs, &lib_targets, &lib_times, theiler);
+        for i in 0..emb.n * KMAX {
+            if (panels.dvals[i] - bd[i]).abs() > 1e-4 || panels.tvals[i] != bt[i] {
+                return Err(format!(
+                    "mismatch at {i}: table ({}, {}) vs brute ({}, {}) [e={e} tau={tau} l={l} theiler={theiler}]",
+                    panels.dvals[i], panels.tvals[i], bd[i], bt[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simplex_is_convex_combination() {
+    check("simplex prediction within neighbour target range", 200, |rng| {
+        let e = 1 + rng.below(KMAX - 1);
+        let mut d = [0.0f32; KMAX];
+        let mut t = [0.0f32; KMAX];
+        let mut acc = 0.0f32;
+        for j in 0..KMAX {
+            acc += rng.f32() * 2.0;
+            d[j] = acc;
+            t[j] = rng.f32() * 20.0 - 10.0;
+        }
+        let p = simplex_one(&d, &t, e);
+        let lo = t[..=e].iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = t[..=e].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if p >= lo - 1e-4 && p <= hi + 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("p={p} outside [{lo}, {hi}] (e={e})"))
+        }
+    });
+}
+
+#[test]
+fn prop_pearson_bounded_and_symmetric() {
+    check("|rho| <= 1 and pearson(x,y) == pearson(y,x)", 100, |rng| {
+        let n = 3 + rng.below(200);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0).collect();
+        let a = pearson_f32(&x, &y);
+        let b = pearson_f32(&y, &x);
+        if a.abs() > 1.0 + 1e-5 {
+            return Err(format!("|rho| > 1: {a}"));
+        }
+        if (a - b).abs() > 1e-6 {
+            return Err(format!("asymmetric: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knn_distances_sorted_and_valid() {
+    check("knn output ascending, within BIG, correct count", 50, |rng| {
+        let n_lib = 5 + rng.below(150);
+        let n_pred = 1 + rng.below(40);
+        let active = 1 + rng.below(EMAX);
+        let mk = |count: usize, rng: &mut Rng| {
+            let mut v = vec![0.0f32; count * EMAX];
+            for i in 0..count {
+                for l in 0..active {
+                    v[i * EMAX + l] = rng.f32();
+                }
+            }
+            v
+        };
+        let lib = mk(n_lib, rng);
+        let pred = mk(n_pred, rng);
+        let targets: Vec<f32> = (0..n_lib).map(|_| rng.f32()).collect();
+        let lib_times: Vec<f32> = (0..n_lib).map(|i| i as f32).collect();
+        let pred_times: Vec<f32> = (0..n_pred).map(|i| (i + 1000) as f32).collect();
+        let (dv, _tv) = knn_batch(&pred, &pred_times, &lib, &targets, &lib_times, 0.0);
+        for row in 0..n_pred {
+            let r = &dv[row * KMAX..(row + 1) * KMAX];
+            if !r.windows(2).all(|w| w[0] <= w[1]) {
+                return Err(format!("row {row} not ascending: {r:?}"));
+            }
+            let real = r.iter().filter(|&&d| d < BIG / 2.0).count();
+            if real != n_lib.min(KMAX) {
+                return Err(format!("row {row}: {real} real neighbours, lib {n_lib}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_des_makespan_bounds() {
+    // makespan must lie between total_work/cores and total_work (+overhead)
+    check("DES within trivial scheduling bounds", 30, |rng| {
+        let tasks = 1 + rng.below(60);
+        let cores = 1 + rng.below(16);
+        let log = parccm::engine::EventLog::default();
+        let mut total = 0.0f64;
+        log.record_job_submit(parccm::engine::metrics::JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: tasks,
+            submit_rel: 0.0,
+            finish_rel: 1.0,
+            broadcast_deps: vec![],
+        });
+        for p in 0..tasks {
+            let dur = rng.f64() * 0.01;
+            total += dur;
+            log.record_task(parccm::engine::metrics::TaskRecord {
+                job_id: 1,
+                partition: p,
+                start_rel: 0.0,
+                duration: dur,
+                attempts: 1,
+            });
+        }
+        let mut cfg = EngineConfig::new(Deploy::Local { cores });
+        cfg.task_overhead_us = 0;
+        let rep = parccm::engine::des::simulate(&log, &cfg);
+        let lower = total / cores as f64 - 1e-9;
+        let upper = total + 1e-9;
+        if rep.sim_makespan_s >= lower && rep.sim_makespan_s <= upper {
+            Ok(())
+        } else {
+            Err(format!(
+                "makespan {} outside [{lower}, {upper}] (tasks={tasks} cores={cores})",
+                rep.sim_makespan_s
+            ))
+        }
+    });
+}
