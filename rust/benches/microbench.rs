@@ -7,13 +7,13 @@ mod common;
 
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
-use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::embedding::Embedding;
-use parccm::ccm::knn::knn_batch;
+use parccm::ccm::knn::knn_batch_into;
 use parccm::ccm::params::CcmParams;
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::subsample::draw_samples;
-use parccm::ccm::table::{library_mask, DistanceTable};
+use parccm::ccm::table::{DistanceTable, LibraryMask};
 use parccm::native::NativeBackend;
 use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
 use parccm::util::rng::Rng;
@@ -24,7 +24,6 @@ fn main() {
     let (x, y) = coupled_logistic(n_series, CoupledLogisticParams::default());
     let emb = Embedding::new(&y, 2, 1);
     let targets = emb.align_targets(&x);
-    let times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
     let bencher = Bencher::new().warmup(1).samples(args.get_usize("repeats", 5));
 
     let mut table = TablePrinter::new(format!("microbench (manifold n={})", emb.n));
@@ -34,32 +33,54 @@ fn main() {
     let sample =
         &draw_samples(&Rng::new(1), CcmParams::new(2, 1, emb.n / 4), emb.n, 1)[0];
     let input = problem.input_for(sample);
+    let mut arena = TaskArena::new();
+    arena.gather_library(&input);
 
     let r = bencher.run("knn_batch (brute k-NN, full manifold queries)", || {
-        knn_batch(
-            &input.pred_vecs,
-            &input.pred_times,
-            &input.lib_vecs,
-            &input.lib_targets,
-            &input.lib_times,
+        knn_batch_into(
+            input.vecs,
+            input.times,
+            &arena.lib_vecs,
+            &arena.lib_targets,
+            &arena.lib_times,
             0.0,
+            &mut arena.dist,
+            &mut arena.dvals,
+            &mut arena.tvals,
         )
     });
     table.push(Row::new("knn_batch").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
 
-    let r = bencher.run("native cross_map (one subsample)", || NativeBackend.cross_map(&input));
+    let mut cm_arena = TaskArena::new();
+    let r = bencher.run("native cross_map (one subsample, arena-reused)", || {
+        NativeBackend.cross_map_into(&input, &mut cm_arena)
+    });
     table.push(Row::new("native_cross_map").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
 
-    let r = bencher.run("distance table build (serial)", || DistanceTable::build(&emb));
+    let r = bencher.run("distance table build (serial, full)", || DistanceTable::build(&emb));
     table.push(Row::new("table_build").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
 
+    let prefix = DistanceTable::auto_prefix(emb.n, emb.n / 4);
+    let r = bencher.run("distance table build (serial, truncated)", || {
+        DistanceTable::build_truncated(&emb, prefix)
+    });
+    table.push(Row::new("table_build_truncated").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
+
     let dt = DistanceTable::build(&emb);
-    let (mask, target_of) = library_mask(emb.n, &sample.rows, &targets);
-    let r = bencher.run("table query_all (one subsample)", || {
-        dt.query_all(&mask, &target_of, 0.0)
+    let dt_trunc = DistanceTable::build_truncated(&emb, prefix);
+    let mut mask = LibraryMask::new();
+    mask.set_from(emb.n, &sample.rows);
+    let mut qa = TaskArena::new();
+    let r = bencher.run("table query_all (one subsample, full)", || {
+        dt.query_all_into(&sample.rows, &mask, &targets, 0.0, &mut qa.dvals, &mut qa.tvals)
     });
     table.push(Row::new("table_query_all").cell("mean_s", r.mean_s).cell("std_s", r.std_s));
-    let _ = times;
+    let r = bencher.run("table query_all (one subsample, truncated)", || {
+        dt_trunc.query_all_into(&sample.rows, &mask, &targets, 0.0, &mut qa.dvals, &mut qa.tvals)
+    });
+    table.push(
+        Row::new("table_query_all_truncated").cell("mean_s", r.mean_s).cell("std_s", r.std_s),
+    );
 
     // XLA path, when available
     let backend = common::backend(&args);

@@ -1,0 +1,136 @@
+//! Task-path microbench (ISSUE 1 acceptance gate): cost of assembling the
+//! per-subsample cross-map task, owned-copy (the pre-zero-copy layout:
+//! every task deep-copied the n*EMAX prediction manifold plus two
+//! length-n columns and materialized the library into fresh `Vec`s)
+//! versus zero-copy (borrowed [`CrossMapInput`] view + arena gather), and
+//! the broadcast footprint of the full versus truncated distance table.
+//!
+//! Acceptance: >= 5x reduction in per-task assembly time at n=1000, r=25,
+//! and `O(n * P)` truncated broadcast bytes.
+//!
+//! Run: `cargo bench --bench taskpath [-- --n 1000 --r 25]`
+//! Emits `BENCH_taskpath.json` (and `results/BENCH_taskpath.json`).
+
+mod common;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::bench::Bencher;
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::params::CcmParams;
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::{draw_samples, LibrarySample};
+use parccm::ccm::table::DistanceTable;
+use parccm::native::NativeBackend;
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::util::rng::Rng;
+use parccm::EMAX;
+
+/// The seed repo's task assembly, reproduced verbatim for comparison:
+/// gather the library into fresh Vecs AND deep-copy the entire
+/// prediction side (manifold vectors, targets, recomputed times).
+fn owned_copy_assembly(problem: &CcmProblem, sample: &LibrarySample) -> usize {
+    let l = sample.rows.len();
+    let mut lib_vecs = Vec::with_capacity(l * EMAX);
+    let mut lib_targets = Vec::with_capacity(l);
+    let mut lib_times = Vec::with_capacity(l);
+    for &row in &sample.rows {
+        lib_vecs.extend_from_slice(problem.emb.point(row));
+        lib_targets.push(problem.targets[row]);
+        lib_times.push(problem.emb.time_of(row) as f32);
+    }
+    let pred_vecs = problem.emb.vecs.clone();
+    let pred_targets = problem.targets.clone();
+    let pred_times: Vec<f32> =
+        (0..problem.emb.n).map(|i| problem.emb.time_of(i) as f32).collect();
+    std::hint::black_box(&pred_vecs);
+    std::hint::black_box(&pred_targets);
+    std::hint::black_box(&pred_times);
+    lib_vecs.len() + lib_targets.len() + lib_times.len() + pred_vecs.len()
+}
+
+fn main() {
+    let args = common::args();
+    let n_series = args.get_usize("n", 1000);
+    let r = args.get_usize("r", 25);
+    let (x, y) = coupled_logistic(n_series, CoupledLogisticParams::default());
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let n = problem.emb.n;
+    let samples = draw_samples(&Rng::new(1), CcmParams::new(2, 1, n / 4), n, r);
+    let bencher = Bencher::new().warmup(2).samples(args.get_usize("repeats", 7));
+
+    let mut table = TablePrinter::new(format!("taskpath (n={n}, r={r})"));
+
+    // -- task assembly: owned-copy vs zero-copy ------------------------
+    let owned = bencher.run("owned-copy task assembly (r tasks)", || {
+        let mut acc = 0usize;
+        for s in &samples {
+            acc += owned_copy_assembly(&problem, s);
+        }
+        acc
+    });
+    let mut arena = TaskArena::new();
+    let zero = bencher.run("zero-copy task assembly (r tasks)", || {
+        let mut acc = 0usize;
+        for s in &samples {
+            let input = problem.input_for(s);
+            arena.gather_library(&input);
+            acc += input.lib_rows.len() + arena.lib_vecs.len();
+        }
+        acc
+    });
+    let speedup = owned.mean_s / zero.mean_s.max(1e-12);
+    table.push(
+        Row::new("assembly_owned_copy").cell("mean_s", owned.mean_s).cell("std_s", owned.std_s),
+    );
+    table.push(
+        Row::new("assembly_zero_copy").cell("mean_s", zero.mean_s).cell("std_s", zero.std_s),
+    );
+    table.push(Row::new("assembly_speedup").cell("x", speedup).cell("target_x", 5.0));
+
+    // -- end-to-end cross-map: fresh allocations vs arena reuse --------
+    let backend = NativeBackend;
+    let fresh = bencher.run("cross_map, fresh buffers per task", || {
+        let mut acc = 0.0f32;
+        for s in &samples {
+            acc += backend.cross_map(&problem.input_for(s)).rho;
+        }
+        acc
+    });
+    let mut cm_arena = TaskArena::new();
+    let reused = bencher.run("cross_map, arena-reused buffers", || {
+        let mut acc = 0.0f32;
+        for s in &samples {
+            acc += backend.cross_map_into(&problem.input_for(s), &mut cm_arena);
+        }
+        acc
+    });
+    table.push(Row::new("cross_map_fresh").cell("mean_s", fresh.mean_s).cell("std_s", fresh.std_s));
+    table.push(
+        Row::new("cross_map_arena").cell("mean_s", reused.mean_s).cell("std_s", reused.std_s),
+    );
+    table.push(
+        Row::new("cross_map_arena_gain")
+            .cell("x", fresh.mean_s / reused.mean_s.max(1e-12)),
+    );
+
+    // -- broadcast bytes: full vs truncated table ----------------------
+    for min_l in [n / 8, n / 4, n / 2] {
+        let prefix = DistanceTable::auto_prefix(n, min_l);
+        let full_bytes = n * (n - 1) * 4 + n * EMAX * 4;
+        let trunc = DistanceTable::build_truncated(&problem.emb, prefix);
+        table.push(
+            Row::new(format!("table_bytes_minL_{min_l}"))
+                .cell("full_b", full_bytes as f64)
+                .cell("truncated_b", trunc.size_bytes() as f64)
+                .cell("prefix", prefix as f64)
+                .cell("cut_x", full_bytes as f64 / trunc.size_bytes() as f64),
+        );
+    }
+
+    table.print();
+    println!(
+        "\nassembly speedup {speedup:.1}x (acceptance target: >= 5x at n=1000, r=25)"
+    );
+    let _ = table.save("results/BENCH_taskpath.json");
+    let _ = table.save("BENCH_taskpath.json");
+}

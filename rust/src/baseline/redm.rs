@@ -39,19 +39,26 @@ pub fn redm_ccm(effect: &[f32], cause: &[f32], config: &RedmConfig) -> Vec<Skill
     let mut out = Vec::with_capacity(config.r);
     let mut dbuf = [0.0f32; KMAX];
     let mut tbuf = [0.0f32; KMAX];
+    // hoisted scratch: the knn distance sweep buffer and the per-sample
+    // library/prediction buffers are reused across all r * n queries
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut lib_vecs: Vec<f32> = Vec::new();
+    let mut lib_targets: Vec<f32> = Vec::new();
+    let mut lib_times: Vec<f32> = Vec::new();
+    let mut preds: Vec<f32> = Vec::new();
     for sample in samples {
         // materialize the library (rEDM gathers lib rows the same way)
-        let l = sample.rows.len();
-        let mut lib_vecs = Vec::with_capacity(l * EMAX);
-        let mut lib_targets = Vec::with_capacity(l);
-        let mut lib_times = Vec::with_capacity(l);
+        lib_vecs.clear();
+        lib_targets.clear();
+        lib_times.clear();
+        lib_vecs.reserve(sample.rows.len() * EMAX);
         for &row in &sample.rows {
             lib_vecs.extend_from_slice(emb.point(row));
             lib_targets.push(targets[row]);
             lib_times.push(times[row]);
         }
         // predict at every manifold point
-        let mut preds = Vec::with_capacity(emb.n);
+        preds.clear();
         for i in 0..emb.n {
             knn_one(
                 emb.point(i),
@@ -60,6 +67,7 @@ pub fn redm_ccm(effect: &[f32], cause: &[f32], config: &RedmConfig) -> Vec<Skill
                 &lib_targets,
                 &lib_times,
                 config.theiler,
+                &mut scratch,
                 &mut dbuf,
                 &mut tbuf,
             );

@@ -6,29 +6,49 @@
 //! agnostic; integration tests cross-check the two implementations against
 //! each other, which is how the Rust side inherits the Pallas kernels'
 //! pytest-verified semantics.
+//!
+//! # Zero-copy task memory layout
+//!
+//! A cross-map task owns **no copy of shared state**. The problem's shadow
+//! manifold, aligned targets, and time column live once per worker behind
+//! the broadcast `Arc<CcmProblem>`; a [`CrossMapInput`] is a *view*: three
+//! borrowed slices plus the library's manifold-row indices. Assembling the
+//! input for one of the `r x |L| x |E x tau|` subsample tasks is therefore
+//! O(1) — previously each task deep-copied `n * EMAX` prediction vectors
+//! plus two length-`n` columns, which dominated task setup at scale (the
+//! same broadcast-vs-materialization observation Belletti et al. make for
+//! Spark-side causal inference).
+//!
+//! Per-task *working* memory comes from a [`TaskArena`]: one per worker
+//! partition, reused across every sample in the partition, so no O(n) or
+//! O(L) allocation survives on the hot path. The arena holds the gathered
+//! library panel (the only inherently per-sample O(L) work), the k-NN
+//! distance scratch, the neighbour panels, the packed library bitmask for
+//! table-mode queries, and the prediction output buffer.
 
+use crate::ccm::table::LibraryMask;
 use crate::{EMAX, KMAX};
 
-/// One cross-map evaluation: predict `pred_targets` at every prediction
-/// point from the E+1 nearest library neighbours.
+/// One cross-map evaluation, as a borrowed view of shared problem state:
+/// predict `targets` at every manifold point from the E+1 nearest
+/// neighbours among the library rows.
 ///
+/// The prediction set is the whole manifold (standard CCM); the library is
+/// identified by ascending manifold-row indices into the shared arrays.
 /// Vectors are flat row-major with EMAX-lane padding (see
-/// [`crate::ccm::embedding::Embedding`]). `*_times` carry original-series
+/// [`crate::ccm::embedding::Embedding`]); `times` carries original-series
 /// time indices for Theiler-window self-exclusion.
-#[derive(Clone, Debug)]
-pub struct CrossMapInput {
-    /// Library manifold points, `[n_lib, EMAX]` flat.
-    pub lib_vecs: Vec<f32>,
-    /// Target (cause-series) value at each library point's time.
-    pub lib_targets: Vec<f32>,
-    /// Original time index of each library point.
-    pub lib_times: Vec<f32>,
-    /// Prediction manifold points, `[n_pred, EMAX]` flat.
-    pub pred_vecs: Vec<f32>,
-    /// Observed target at each prediction point (for the skill score).
-    pub pred_targets: Vec<f32>,
-    /// Original time index of each prediction point.
-    pub pred_times: Vec<f32>,
+#[derive(Clone, Copy, Debug)]
+pub struct CrossMapInput<'a> {
+    /// Shared manifold points, `[n, EMAX]` flat (library and prediction
+    /// rows both index into this).
+    pub vecs: &'a [f32],
+    /// Target (cause-series) value at each manifold row's time.
+    pub targets: &'a [f32],
+    /// Original time index of each manifold row.
+    pub times: &'a [f32],
+    /// Library membership: ascending manifold-row indices.
+    pub lib_rows: &'a [usize],
     /// Embedding dimension in use (k = e+1 neighbours enter the simplex).
     pub e: usize,
     /// Exclusion radius: library points with `|t_lib - t_pred| <= theiler`
@@ -37,21 +57,20 @@ pub struct CrossMapInput {
     pub theiler: f32,
 }
 
-impl CrossMapInput {
+impl<'a> CrossMapInput<'a> {
     pub fn n_lib(&self) -> usize {
-        self.lib_targets.len()
+        self.lib_rows.len()
     }
 
     pub fn n_pred(&self) -> usize {
-        self.pred_targets.len()
+        self.targets.len()
     }
 
     /// Internal consistency check (used by debug asserts and tests).
     pub fn validate(&self) {
-        assert_eq!(self.lib_vecs.len(), self.n_lib() * EMAX);
-        assert_eq!(self.lib_times.len(), self.n_lib());
-        assert_eq!(self.pred_vecs.len(), self.n_pred() * EMAX);
-        assert_eq!(self.pred_times.len(), self.n_pred());
+        assert_eq!(self.vecs.len(), self.n_pred() * EMAX);
+        assert_eq!(self.times.len(), self.n_pred());
+        assert!(self.lib_rows.iter().all(|&r| r < self.n_pred()));
         assert!((1..EMAX + 1).contains(&self.e));
         assert!(self.e + 1 <= KMAX);
     }
@@ -66,9 +85,13 @@ pub struct CrossMapOutput {
     pub preds: Vec<f32>,
 }
 
-/// Pre-gathered nearest-neighbour panels (the distance-indexing-table
-/// path): squared distances and gathered targets, `[n_pred, KMAX]` flat,
+/// Owned nearest-neighbour panels (the distance-indexing-table path):
+/// squared distances and gathered targets, `[n_pred, KMAX]` flat,
 /// ascending per row, padded with `BIG`/0 when a row has fewer neighbours.
+///
+/// The hot pipelines keep these flat buffers inside a [`TaskArena`] and
+/// call [`ComputeBackend::simplex_tail_into`] directly; this owned struct
+/// is the convenience/serialization form used by tests and one-off calls.
 #[derive(Clone, Debug)]
 pub struct NeighborPanels {
     pub dvals: Vec<f32>,
@@ -76,27 +99,103 @@ pub struct NeighborPanels {
     pub n_pred: usize,
 }
 
+/// Per-worker scratch: every buffer a cross-map or table-query task needs,
+/// allocated once per partition and reused across samples. Buffers are
+/// `clear()`+`resize()`d, so capacity ratchets up to the partition's
+/// largest sample and no hot-path `vec!` survives.
+#[derive(Default)]
+pub struct TaskArena {
+    /// Gathered library manifold points, `[n_lib, EMAX]` flat.
+    pub lib_vecs: Vec<f32>,
+    /// Gathered library targets.
+    pub lib_targets: Vec<f32>,
+    /// Gathered library time indices.
+    pub lib_times: Vec<f32>,
+    /// k-NN distance sweep scratch (length >= n_lib).
+    pub dist: Vec<f32>,
+    /// Neighbour panel distances, `[n_pred, KMAX]` flat.
+    pub dvals: Vec<f32>,
+    /// Neighbour panel targets, `[n_pred, KMAX]` flat.
+    pub tvals: Vec<f32>,
+    /// Simplex predictions (length n_pred after a cross-map).
+    pub preds: Vec<f32>,
+    /// Packed u64 library membership mask (table-mode queries).
+    pub mask: LibraryMask,
+}
+
+impl TaskArena {
+    pub fn new() -> TaskArena {
+        TaskArena::default()
+    }
+
+    /// Gather the library panel out of the shared view — the only O(L)
+    /// per-sample work on the zero-copy path (the gathered rows differ per
+    /// sample, so this copy is inherent; the buffers are reused).
+    pub fn gather_library(&mut self, input: &CrossMapInput) {
+        let l = input.lib_rows.len();
+        self.lib_vecs.clear();
+        self.lib_vecs.reserve(l * EMAX);
+        self.lib_targets.clear();
+        self.lib_targets.reserve(l);
+        self.lib_times.clear();
+        self.lib_times.reserve(l);
+        for &row in input.lib_rows {
+            self.lib_vecs.extend_from_slice(&input.vecs[row * EMAX..(row + 1) * EMAX]);
+            self.lib_targets.push(input.targets[row]);
+            self.lib_times.push(input.times[row]);
+        }
+    }
+}
+
 /// The backend contract.
+///
+/// The `*_into` methods are the hot path: they borrow a [`TaskArena`] (or
+/// explicit output buffers) and perform no owned allocation of O(n) data.
+/// The `cross_map` / `simplex_tail` wrappers allocate per call and exist
+/// for tests, validation commands, and one-off analysis code.
 pub trait ComputeBackend: Send + Sync {
-    /// Full cross-map (distances -> top-k -> simplex -> Pearson).
-    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput;
+    /// Full cross-map (distances -> top-k -> simplex -> Pearson) into the
+    /// arena; returns the skill. Predictions are left in `arena.preds`.
+    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32;
+
+    /// Simplex + Pearson over pre-gathered neighbour panels (flat
+    /// `[n_pred, KMAX]` slices) — the table-mode tail. Predictions are
+    /// written into `preds` (cleared first); returns the skill.
+    fn simplex_tail_into(
+        &self,
+        dvals: &[f32],
+        tvals: &[f32],
+        pred_targets: &[f32],
+        e: usize,
+        preds: &mut Vec<f32>,
+    ) -> f32;
 
     /// Full pairwise squared-distance matrix of `n` EMAX-padded points
     /// (row-major `[n, n]`) — the distance-indexing-table construction
     /// primitive (paper §3.2).
     fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32>;
 
-    /// Simplex + Pearson over pre-gathered neighbour panels — the
-    /// table-mode tail.
+    /// Human-readable backend name (for logs/benches).
+    fn name(&self) -> &'static str;
+
+    /// Convenience wrapper: fresh arena per call, owned output.
+    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput {
+        let mut arena = TaskArena::new();
+        let rho = self.cross_map_into(input, &mut arena);
+        CrossMapOutput { rho, preds: std::mem::take(&mut arena.preds) }
+    }
+
+    /// Convenience wrapper over owned [`NeighborPanels`].
     fn simplex_tail(
         &self,
         panels: &NeighborPanels,
         pred_targets: &[f32],
         e: usize,
-    ) -> CrossMapOutput;
-
-    /// Human-readable backend name (for logs/benches).
-    fn name(&self) -> &'static str;
+    ) -> CrossMapOutput {
+        let mut preds = Vec::new();
+        let rho = self.simplex_tail_into(&panels.dvals, &panels.tvals, pred_targets, e, &mut preds);
+        CrossMapOutput { rho, preds }
+    }
 }
 
 #[cfg(test)]
@@ -105,34 +204,87 @@ mod tests {
 
     #[test]
     fn validate_accepts_consistent_input() {
+        let vecs = vec![0.0; 4 * EMAX];
+        let targets = vec![0.0; 4];
+        let times = vec![0.0, 1.0, 2.0, 3.0];
+        let rows = vec![0usize, 2];
         let input = CrossMapInput {
-            lib_vecs: vec![0.0; 4 * EMAX],
-            lib_targets: vec![0.0; 4],
-            lib_times: vec![0.0; 4],
-            pred_vecs: vec![0.0; 2 * EMAX],
-            pred_targets: vec![0.0; 2],
-            pred_times: vec![0.0; 2],
+            vecs: &vecs,
+            targets: &targets,
+            times: &times,
+            lib_rows: &rows,
             e: 2,
             theiler: 0.0,
         };
         input.validate();
-        assert_eq!(input.n_lib(), 4);
-        assert_eq!(input.n_pred(), 2);
+        assert_eq!(input.n_lib(), 2);
+        assert_eq!(input.n_pred(), 4);
     }
 
     #[test]
     #[should_panic]
     fn validate_rejects_mismatched_vecs() {
+        let vecs = vec![0.0; 3]; // not n_pred * EMAX
+        let targets = vec![0.0; 4];
+        let times = vec![0.0; 4];
         let input = CrossMapInput {
-            lib_vecs: vec![0.0; 3],
-            lib_targets: vec![0.0; 4],
-            lib_times: vec![0.0; 4],
-            pred_vecs: vec![],
-            pred_targets: vec![],
-            pred_times: vec![],
+            vecs: &vecs,
+            targets: &targets,
+            times: &times,
+            lib_rows: &[],
             e: 2,
             theiler: 0.0,
         };
         input.validate();
+    }
+
+    #[test]
+    #[should_panic]
+    fn validate_rejects_out_of_range_library_row() {
+        let vecs = vec![0.0; 2 * EMAX];
+        let targets = vec![0.0; 2];
+        let times = vec![0.0; 2];
+        let rows = vec![5usize];
+        let input = CrossMapInput {
+            vecs: &vecs,
+            targets: &targets,
+            times: &times,
+            lib_rows: &rows,
+            e: 1,
+            theiler: 0.0,
+        };
+        input.validate();
+    }
+
+    #[test]
+    fn arena_gathers_library_and_reuses_capacity() {
+        let n = 6;
+        let mut vecs = vec![0.0f32; n * EMAX];
+        for (i, v) in vecs.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let targets: Vec<f32> = (0..n).map(|i| 10.0 * i as f32).collect();
+        let times: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let rows = vec![1usize, 4];
+        let input = CrossMapInput {
+            vecs: &vecs,
+            targets: &targets,
+            times: &times,
+            lib_rows: &rows,
+            e: 2,
+            theiler: 0.0,
+        };
+        let mut arena = TaskArena::new();
+        arena.gather_library(&input);
+        assert_eq!(arena.lib_targets, vec![10.0, 40.0]);
+        assert_eq!(arena.lib_times, vec![1.0, 4.0]);
+        assert_eq!(&arena.lib_vecs[..EMAX], &vecs[EMAX..2 * EMAX]);
+        let cap = arena.lib_vecs.capacity();
+        // smaller gather must not shrink or reallocate
+        let rows2 = vec![2usize];
+        let input2 = CrossMapInput { lib_rows: &rows2, ..input };
+        arena.gather_library(&input2);
+        assert_eq!(arena.lib_targets, vec![20.0]);
+        assert!(arena.lib_vecs.capacity() >= cap);
     }
 }

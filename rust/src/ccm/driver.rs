@@ -11,18 +11,23 @@
 //!
 //! Each case produces identical skills for identical seeds (asserted by
 //! integration tests) — the cases differ only in *how* the work is
-//! scheduled, which is exactly what the paper's Fig. 4 measures.
+//! scheduled, which is exactly what the paper's Fig. 4 measures. The
+//! table cases additionally take a [`TablePolicy`]: the default
+//! [`TablePolicy::TruncatedAuto`] broadcasts the `O(n * P)` truncated
+//! table (bit-identical skills, smaller ship cost in the DES model);
+//! [`TablePolicy::Full`] keeps the paper's `O(n^2)` layout.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::ccm::backend::ComputeBackend;
+use crate::ccm::backend::{ComputeBackend, TaskArena};
 use crate::ccm::params::Scenario;
 use crate::ccm::pipeline::{
-    ccm_transform_rdd, table_pipeline, table_transform_rdd, CcmProblem,
+    ccm_transform_rdd, table_pipeline_mode, table_transform_rdd, CcmProblem, TableMode,
 };
 use crate::ccm::result::SkillRow;
 use crate::ccm::subsample::draw_samples;
+use crate::ccm::table::DistanceTable;
 use crate::engine::{Context, Deploy, EngineConfig, ExecutionReport};
 use crate::util::rng::Rng;
 
@@ -74,6 +79,35 @@ impl Case {
     }
 }
 
+/// Distance-table layout policy for the table cases (A4/A5). Ignored by
+/// A1–A3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TablePolicy {
+    /// The paper's full `n * (n-1)` layout.
+    Full,
+    /// Truncated to [`DistanceTable::auto_prefix`] of the scenario's
+    /// sparsest library — the default: identical skills, `O(n * P)`
+    /// broadcast bytes.
+    #[default]
+    TruncatedAuto,
+    /// Truncated to an explicit prefix (testing / tuning).
+    Truncated(usize),
+}
+
+impl TablePolicy {
+    /// Resolve to a concrete [`TableMode`] for an `n`-row manifold with
+    /// smallest library `min_l`.
+    pub fn mode_for(self, n: usize, min_l: usize) -> TableMode {
+        match self {
+            TablePolicy::Full => TableMode::Full,
+            TablePolicy::TruncatedAuto => {
+                TableMode::Truncated { prefix: DistanceTable::auto_prefix(n, min_l) }
+            }
+            TablePolicy::Truncated(prefix) => TableMode::Truncated { prefix },
+        }
+    }
+}
+
 /// Outcome of one case run.
 pub struct CaseReport {
     pub case: Case,
@@ -84,7 +118,8 @@ pub struct CaseReport {
 }
 
 /// Run `case` over `scenario`, cross-mapping `cause` from the shadow
-/// manifold of `effect` (i.e. testing cause -> effect causality).
+/// manifold of `effect` (i.e. testing cause -> effect causality), with the
+/// default [`TablePolicy`].
 pub fn run_case(
     case: Case,
     scenario: &Scenario,
@@ -93,11 +128,24 @@ pub fn run_case(
     deploy: Deploy,
     backend: Arc<dyn ComputeBackend>,
 ) -> CaseReport {
+    run_case_policy(case, scenario, effect, cause, deploy, backend, TablePolicy::default())
+}
+
+/// [`run_case`] with an explicit distance-table layout policy.
+pub fn run_case_policy(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploy: Deploy,
+    backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
+) -> CaseReport {
     match case {
         Case::A1 => run_a1(scenario, effect, cause, backend),
         _ => {
             let (skills, mut reports) =
-                run_engine_case(case, scenario, effect, cause, &[deploy], backend);
+                run_engine_case(case, scenario, effect, cause, &[deploy], backend, policy);
             CaseReport { case, skills, report: reports.remove(0) }
         }
     }
@@ -115,18 +163,33 @@ pub fn run_case_multi(
     deploys: &[Deploy],
     backend: Arc<dyn ComputeBackend>,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+    run_case_multi_policy(case, scenario, effect, cause, deploys, backend, TablePolicy::default())
+}
+
+/// [`run_case_multi`] with an explicit distance-table layout policy.
+pub fn run_case_multi_policy(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploys: &[Deploy],
+    backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
+) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
     match case {
         Case::A1 => {
             let rep = run_a1(scenario, effect, cause, backend);
             let reports = deploys.iter().map(|_| rep.report.clone()).collect();
             (rep.skills, reports)
         }
-        _ => run_engine_case(case, scenario, effect, cause, deploys, backend),
+        _ => run_engine_case(case, scenario, effect, cause, deploys, backend, policy),
     }
 }
 
 /// Case A1: plain sequential loop, no engine. The measured wallclock *is*
-/// the report (a single-threaded run has nothing to simulate).
+/// the report (a single-threaded run has nothing to simulate). One
+/// [`TaskArena`] serves the whole sweep — the sequential baseline enjoys
+/// the same zero-copy task path as the pipelines.
 fn run_a1(
     scenario: &Scenario,
     effect: &[f32],
@@ -136,15 +199,15 @@ fn run_a1(
     let t = Instant::now();
     let master = Rng::new(scenario.seed);
     let mut skills = Vec::new();
+    let mut arena = TaskArena::new();
     for &e in &scenario.es {
         for &tau in &scenario.taus {
             let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
             for &l in &scenario.ls {
                 let params = crate::ccm::params::CcmParams::new(e, tau, l);
                 for sample in draw_samples(&master, params, problem.emb.n, scenario.r) {
-                    let input = problem.input_for(&sample);
-                    let out = backend.cross_map(&input);
-                    skills.push(SkillRow { params, sample_id: sample.sample_id, rho: out.rho });
+                    let rho = backend.cross_map_into(&problem.input_for(&sample), &mut arena);
+                    skills.push(SkillRow { params, sample_id: sample.sample_id, rho });
                 }
             }
         }
@@ -173,12 +236,14 @@ fn run_engine_case(
     cause: &[f32],
     deploys: &[Deploy],
     backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
     let ctx = Context::new(
         EngineConfig::new(deploys[0].clone()).with_default_parallelism(scenario.partitions),
     );
     let master = Rng::new(scenario.seed);
     let mut skills = Vec::new();
+    let min_l = scenario.ls.iter().copied().min().unwrap_or(1);
 
     // One problem + (optionally) one distance table per (E, tau); L only
     // affects the subsample draws. In the asynchronous cases (§3.3 /
@@ -197,7 +262,8 @@ fn run_engine_case(
             // transform jobs: its (internally parallel) pipeline blocks the
             // driver, exactly like the barrier in the paper's Fig. 2/3 DAG.
             let table_b = if case.uses_table() {
-                Some(table_pipeline(&ctx, &problem_b, scenario.partitions))
+                let mode = policy.mode_for(n_manifold, min_l);
+                Some(table_pipeline_mode(&ctx, &problem_b, scenario.partitions, mode))
             } else {
                 None
             };
@@ -233,6 +299,7 @@ mod tests {
     use super::*;
     use crate::native::NativeBackend;
     use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+    use crate::KMAX;
 
     fn series() -> (Vec<f32>, Vec<f32>) {
         coupled_logistic(300, CoupledLogisticParams::default())
@@ -258,15 +325,40 @@ mod tests {
             scenario.combos().len() * scenario.r,
             "A1 skill count"
         );
-        for case in [Case::A2, Case::A3, Case::A4, Case::A5] {
-            let rep = run_case(case, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+        // every engine case, and for the table cases every table layout —
+        // full, auto-truncated, and a pathologically short prefix that
+        // forces the brute-force fallback on most queries.
+        let runs: Vec<(Case, TablePolicy)> = vec![
+            (Case::A2, TablePolicy::Full),
+            (Case::A3, TablePolicy::Full),
+            (Case::A4, TablePolicy::Full),
+            (Case::A4, TablePolicy::TruncatedAuto),
+            (Case::A4, TablePolicy::Truncated(KMAX)),
+            (Case::A5, TablePolicy::Full),
+            (Case::A5, TablePolicy::TruncatedAuto),
+            (Case::A5, TablePolicy::Truncated(KMAX)),
+        ];
+        for (case, policy) in runs {
+            let rep = run_case_policy(
+                case,
+                &scenario,
+                &y,
+                &x,
+                deploy.clone(),
+                Arc::clone(&backend),
+                policy,
+            );
             let got = sorted_skills(rep.skills);
-            assert_eq!(got.len(), expected.len(), "{case:?} skill count");
+            assert_eq!(got.len(), expected.len(), "{case:?}/{policy:?} skill count");
             for (a, b) in expected.iter().zip(&got) {
-                assert_eq!((a.0, a.1, a.2, a.3), (b.0, b.1, b.2, b.3), "{case:?} keys");
+                assert_eq!(
+                    (a.0, a.1, a.2, a.3),
+                    (b.0, b.1, b.2, b.3),
+                    "{case:?}/{policy:?} keys"
+                );
                 assert!(
                     (a.4 - b.4).abs() < 1e-5,
-                    "{case:?}: rho {} vs A1 {} at {:?}",
+                    "{case:?}/{policy:?}: rho {} vs A1 {} at {:?}",
                     b.4,
                     a.4,
                     (a.0, a.1, a.2, a.3)
@@ -282,6 +374,21 @@ mod tests {
         assert!(!Case::A2.uses_table() && !Case::A2.is_async());
         assert_eq!(Case::ALL.len(), 5);
         assert!(Case::A1.description().contains("Single-threaded"));
+    }
+
+    #[test]
+    fn policy_resolves_modes() {
+        assert_eq!(TablePolicy::Full.mode_for(1000, 100), TableMode::Full);
+        assert_eq!(
+            TablePolicy::Truncated(64).mode_for(1000, 100),
+            TableMode::Truncated { prefix: 64 }
+        );
+        match TablePolicy::TruncatedAuto.mode_for(1000, 100) {
+            TableMode::Truncated { prefix } => {
+                assert_eq!(prefix, DistanceTable::auto_prefix(1000, 100))
+            }
+            other => panic!("expected truncated, got {other:?}"),
+        }
     }
 
     #[test]

@@ -6,14 +6,21 @@
 //! always KMAX slots returned (padded with `BIG`/0.0 when the library is
 //! small). The hot loop maintains a KMAX-wide insertion buffer — for
 //! k = 11 that beats heap- or sort-based selection by a wide margin.
+//!
+//! All entry points take caller-provided scratch (normally a
+//! [`crate::ccm::backend::TaskArena`] field) so repeated queries perform
+//! zero allocation.
 
 use crate::{BIG, EMAX, KMAX};
 
 /// Top-KMAX neighbours of one query point.
 ///
-/// Returns `(sq_distances, targets)`, each KMAX long, ascending by
-/// distance. Library entries with `|lib_time - pred_time| <= theiler` are
-/// skipped (self-exclusion); a negative `theiler` disables exclusion.
+/// Writes `(sq_distances, targets)` into `out_d`/`out_t` (first KMAX
+/// slots), ascending by distance. Library entries with
+/// `|lib_time - pred_time| <= theiler` are skipped (self-exclusion); a
+/// negative `theiler` disables exclusion. `scratch` is grown as needed and
+/// reused across calls — route it through the task arena so per-query
+/// allocation only happens on the first call.
 #[allow(clippy::too_many_arguments)]
 pub fn knn_one(
     query: &[f32],
@@ -22,10 +29,14 @@ pub fn knn_one(
     lib_targets: &[f32],
     lib_times: &[f32],
     theiler: f32,
-    out_d: &mut [f32; KMAX],
-    out_t: &mut [f32; KMAX],
+    scratch: &mut Vec<f32>,
+    out_d: &mut [f32],
+    out_t: &mut [f32],
 ) {
-    let mut scratch = vec![0.0f32; lib_targets.len()];
+    let n = lib_targets.len();
+    if scratch.len() < n {
+        scratch.resize(n, 0.0);
+    }
     knn_into(
         query,
         query_time,
@@ -33,13 +44,13 @@ pub fn knn_one(
         lib_targets,
         lib_times,
         theiler,
-        &mut scratch,
+        scratch,
         out_d,
         out_t,
     );
 }
 
-/// Core k-NN with a caller-provided distance scratch buffer.
+/// Core k-NN with a caller-provided distance scratch buffer (`len >= n`).
 ///
 /// §Perf: two passes — a branch-free distance sweep the autovectorizer
 /// turns into 8-lane SIMD, then a pruned selection scan. Fusing the two
@@ -55,10 +66,11 @@ pub fn knn_into(
     lib_times: &[f32],
     theiler: f32,
     scratch: &mut [f32],
-    out_d: &mut [f32; KMAX],
-    out_t: &mut [f32; KMAX],
+    out_d: &mut [f32],
+    out_t: &mut [f32],
 ) {
     debug_assert_eq!(query.len(), EMAX);
+    debug_assert!(out_d.len() >= KMAX && out_t.len() >= KMAX);
     let n = lib_targets.len();
     debug_assert!(scratch.len() >= n);
 
@@ -75,8 +87,8 @@ pub fn knn_into(
     }
 
     // pass 2: pruned top-KMAX selection with Theiler exclusion
-    out_d.fill(BIG);
-    out_t.fill(0.0);
+    out_d[..KMAX].fill(BIG);
+    out_t[..KMAX].fill(0.0);
     let mut worst = BIG;
     for j in 0..n {
         let d = scratch[j];
@@ -100,23 +112,34 @@ pub fn knn_into(
     }
 }
 
-/// Top-KMAX neighbours for a batch of query points; flat `[n_pred, KMAX]`
-/// outputs (the [`crate::ccm::backend::NeighborPanels`] layout).
+/// Top-KMAX neighbours for a batch of query points, written into flat
+/// `[n_pred, KMAX]` buffers (the [`crate::ccm::backend::NeighborPanels`]
+/// layout). All buffers are resized in place and reused across calls.
 #[allow(clippy::too_many_arguments)]
-pub fn knn_batch(
+pub fn knn_batch_into(
     pred_vecs: &[f32],
     pred_times: &[f32],
     lib_vecs: &[f32],
     lib_targets: &[f32],
     lib_times: &[f32],
     theiler: f32,
-) -> (Vec<f32>, Vec<f32>) {
+    scratch: &mut Vec<f32>,
+    dvals: &mut Vec<f32>,
+    tvals: &mut Vec<f32>,
+) {
     let n_pred = pred_times.len();
-    let mut dvals = vec![0.0f32; n_pred * KMAX];
-    let mut tvals = vec![0.0f32; n_pred * KMAX];
-    let mut d = [0.0f32; KMAX];
-    let mut t = [0.0f32; KMAX];
-    let mut scratch = vec![0.0f32; lib_targets.len()];
+    let n_lib = lib_targets.len();
+    // size-only resize: every slot is overwritten below, so skip the
+    // per-sample memset when the arena buffer already has the right shape
+    if dvals.len() != n_pred * KMAX {
+        dvals.resize(n_pred * KMAX, 0.0);
+    }
+    if tvals.len() != n_pred * KMAX {
+        tvals.resize(n_pred * KMAX, 0.0);
+    }
+    if scratch.len() < n_lib {
+        scratch.resize(n_lib, 0.0);
+    }
     for i in 0..n_pred {
         knn_into(
             &pred_vecs[i * EMAX..(i + 1) * EMAX],
@@ -125,13 +148,37 @@ pub fn knn_batch(
             lib_targets,
             lib_times,
             theiler,
-            &mut scratch,
-            &mut d,
-            &mut t,
+            scratch,
+            &mut dvals[i * KMAX..(i + 1) * KMAX],
+            &mut tvals[i * KMAX..(i + 1) * KMAX],
         );
-        dvals[i * KMAX..(i + 1) * KMAX].copy_from_slice(&d);
-        tvals[i * KMAX..(i + 1) * KMAX].copy_from_slice(&t);
     }
+}
+
+/// Allocating convenience wrapper over [`knn_batch_into`] (tests and
+/// one-off analysis; the pipelines reuse arena buffers instead).
+pub fn knn_batch(
+    pred_vecs: &[f32],
+    pred_times: &[f32],
+    lib_vecs: &[f32],
+    lib_targets: &[f32],
+    lib_times: &[f32],
+    theiler: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dvals = Vec::new();
+    let mut tvals = Vec::new();
+    let mut scratch = Vec::new();
+    knn_batch_into(
+        pred_vecs,
+        pred_times,
+        lib_vecs,
+        lib_targets,
+        lib_times,
+        theiler,
+        &mut scratch,
+        &mut dvals,
+        &mut tvals,
+    );
     (dvals, tvals)
 }
 
@@ -148,6 +195,20 @@ mod tests {
         out
     }
 
+    fn knn_simple(
+        query: &[f32],
+        query_time: f32,
+        lib: &[f32],
+        targets: &[f32],
+        times: &[f32],
+        theiler: f32,
+        out_d: &mut [f32; KMAX],
+        out_t: &mut [f32; KMAX],
+    ) {
+        let mut scratch = Vec::new();
+        knn_one(query, query_time, lib, targets, times, theiler, &mut scratch, out_d, out_t);
+    }
+
     #[test]
     fn finds_nearest_in_order() {
         let lib = pad(&[&[0.0], &[1.0], &[2.0], &[10.0]]);
@@ -156,7 +217,7 @@ mod tests {
         let query = pad(&[&[1.4]]);
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
-        knn_one(&query, -100.0, &lib, &targets, &times, 0.0, &mut d, &mut t);
+        knn_simple(&query, -100.0, &lib, &targets, &times, 0.0, &mut d, &mut t);
         assert_eq!(t[0], 101.0);
         assert_eq!(t[1], 102.0);
         assert_eq!(t[2], 100.0);
@@ -176,11 +237,11 @@ mod tests {
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
         // query at time 1, theiler 1 -> times 0,1,2 excluded
-        knn_one(&query, 1.0, &lib, &targets, &times, 1.0, &mut d, &mut t);
+        knn_simple(&query, 1.0, &lib, &targets, &times, 1.0, &mut d, &mut t);
         assert_eq!(t[0], 13.0);
         assert_eq!(d[1], BIG);
         // negative theiler disables exclusion: exact self picked first
-        knn_one(&query, 1.0, &lib, &targets, &times, -1.0, &mut d, &mut t);
+        knn_simple(&query, 1.0, &lib, &targets, &times, -1.0, &mut d, &mut t);
         assert_eq!(t[0], 11.0);
         assert_eq!(d[0], 0.0);
     }
@@ -193,8 +254,26 @@ mod tests {
         let query = pad(&[&[0.0]]);
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
-        knn_one(&query, -10.0, &lib, &targets, &times, 0.0, &mut d, &mut t);
+        knn_simple(&query, -10.0, &lib, &targets, &times, 0.0, &mut d, &mut t);
         assert_eq!(&t[..3], &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn scratch_reused_without_growth() {
+        let lib = pad(&[&[0.0], &[1.0], &[2.0]]);
+        let targets = [1.0, 2.0, 3.0];
+        let times = [0.0, 1.0, 2.0];
+        let query = pad(&[&[0.5]]);
+        let mut d = [0.0; KMAX];
+        let mut t = [0.0; KMAX];
+        let mut scratch = Vec::new();
+        knn_one(&query, -5.0, &lib, &targets, &times, 0.0, &mut scratch, &mut d, &mut t);
+        let cap = scratch.capacity();
+        assert!(cap >= 3);
+        for _ in 0..10 {
+            knn_one(&query, -5.0, &lib, &targets, &times, 0.0, &mut scratch, &mut d, &mut t);
+        }
+        assert_eq!(scratch.capacity(), cap, "repeated queries must not reallocate");
     }
 
     #[test]
@@ -213,7 +292,7 @@ mod tests {
 
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
-        knn_one(&query, 50.0, &lib, &targets, &times, 2.0, &mut d, &mut t);
+        knn_simple(&query, 50.0, &lib, &targets, &times, 2.0, &mut d, &mut t);
 
         // naive: compute all, filter, stable sort
         let mut all: Vec<(f32, usize)> = (0..n)
@@ -257,7 +336,7 @@ mod tests {
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
         for i in 0..p {
-            knn_one(
+            knn_simple(
                 &pred[i * EMAX..(i + 1) * EMAX],
                 pred_times[i],
                 &lib,

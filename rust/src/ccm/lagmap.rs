@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use crate::ccm::backend::ComputeBackend;
+use crate::ccm::backend::{ComputeBackend, TaskArena};
 use crate::ccm::params::CcmParams;
 use crate::ccm::pipeline::CcmProblem;
 use crate::ccm::subsample::draw_samples;
@@ -53,6 +53,7 @@ pub fn lag_profile(
     backend: Arc<dyn ComputeBackend>,
 ) -> LagProfile {
     let mut skills = Vec::new();
+    let mut arena = TaskArena::new();
     for lag in -(max_lag as i64)..=(max_lag as i64) {
         let (eff, cau) = shift(effect, cause, lag);
         if eff.len() < params.l / 2 + (params.e - 1) * params.tau + 2 {
@@ -65,7 +66,7 @@ pub fn lag_profile(
         let samples = draw_samples(&master, p, problem.emb.n, r);
         let mean = samples
             .iter()
-            .map(|s| backend.cross_map(&problem.input_for(s)).rho as f64)
+            .map(|s| backend.cross_map_into(&problem.input_for(s), &mut arena) as f64)
             .sum::<f64>()
             / r.max(1) as f64;
         skills.push((lag, mean));

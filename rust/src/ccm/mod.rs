@@ -37,9 +37,10 @@ pub mod subsample;
 pub mod surrogate;
 pub mod table;
 
-pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput};
-pub use driver::{Case, CaseReport};
+pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
+pub use driver::{Case, CaseReport, TablePolicy};
 pub use embedding::Embedding;
 pub use params::{CcmParams, Scenario};
+pub use pipeline::TableMode;
 pub use result::{SkillRow, SkillSummary};
-pub use table::DistanceTable;
+pub use table::{DistanceTable, LibraryMask};

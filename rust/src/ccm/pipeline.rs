@@ -8,23 +8,36 @@
 //!
 //! Both return *lazy* RDDs; the driver chooses blocking (`collect`) or
 //! asynchronous (`collect_async`) submission — §3.3.
+//!
+//! # Zero-copy task data path
+//!
+//! The [`CcmProblem`] (manifold + aligned targets + time column) is
+//! broadcast once and shared behind an `Arc`; a task's
+//! [`CrossMapInput`] is a borrowed view of it plus the sample's library
+//! row indices — task assembly copies nothing O(n). Each partition
+//! closure owns one [`TaskArena`] reused across its samples, so the only
+//! per-sample work besides the kernels is the inherent O(L) library
+//! gather (brute-force mode) or the O(n/64) mask refill (table mode).
 
 use std::sync::Arc;
 
-use crate::ccm::backend::{ComputeBackend, CrossMapInput};
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
 use crate::ccm::embedding::Embedding;
 use crate::ccm::result::SkillRow;
 use crate::ccm::subsample::LibrarySample;
-use crate::ccm::table::{library_mask, DistanceTable};
+use crate::ccm::table::DistanceTable;
 use crate::engine::{Broadcast, Context, Rdd};
-use crate::EMAX;
 
 /// The cross-mapping problem shared by every task: the effect-series
-/// shadow manifold and the cause-series targets aligned to it.
+/// shadow manifold and the cause-series targets aligned to it. Broadcast
+/// once per `(E, tau)`; tasks borrow it — they never copy it.
 pub struct CcmProblem {
     pub emb: Embedding,
     /// Cause value at each manifold row's time.
     pub targets: Vec<f32>,
+    /// Original-series time of each manifold row, as f32 (precomputed once
+    /// so task views can borrow it instead of re-deriving O(n) per task).
+    pub times: Vec<f32>,
     /// Theiler exclusion radius (0 = self only).
     pub theiler: f32,
 }
@@ -33,35 +46,39 @@ impl CcmProblem {
     pub fn new(effect: &[f32], cause: &[f32], e: usize, tau: usize, theiler: f32) -> CcmProblem {
         let emb = Embedding::new(effect, e, tau);
         let targets = emb.align_targets(cause);
-        CcmProblem { emb, targets, theiler }
+        let times = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+        CcmProblem { emb, targets, times, theiler }
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.emb.size_bytes() + self.targets.len() * 4
+        self.emb.size_bytes() + self.targets.len() * 4 + self.times.len() * 4
     }
 
-    /// Assemble the brute-force [`CrossMapInput`] for one library sample.
-    pub fn input_for(&self, sample: &LibrarySample) -> CrossMapInput {
-        let l = sample.rows.len();
-        let mut lib_vecs = Vec::with_capacity(l * EMAX);
-        let mut lib_targets = Vec::with_capacity(l);
-        let mut lib_times = Vec::with_capacity(l);
-        for &row in &sample.rows {
-            lib_vecs.extend_from_slice(self.emb.point(row));
-            lib_targets.push(self.targets[row]);
-            lib_times.push(self.emb.time_of(row) as f32);
-        }
+    /// Assemble the zero-copy [`CrossMapInput`] view for one library
+    /// sample: three borrowed slices + the sample's row indices. O(1) —
+    /// no O(n) prediction-side copies, no O(L) library materialization.
+    pub fn input_for<'a>(&'a self, sample: &'a LibrarySample) -> CrossMapInput<'a> {
         CrossMapInput {
-            lib_vecs,
-            lib_targets,
-            lib_times,
-            pred_vecs: self.emb.vecs.clone(),
-            pred_targets: self.targets.clone(),
-            pred_times: (0..self.emb.n).map(|i| self.emb.time_of(i) as f32).collect(),
+            vecs: &self.emb.vecs,
+            targets: &self.targets,
+            times: &self.times,
+            lib_rows: &sample.rows,
             e: sample.params.e,
             theiler: self.theiler,
         }
     }
+}
+
+/// How the distance indexing table is stored and broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableMode {
+    /// All `n - 1` sorted neighbours per row (the paper's layout).
+    Full,
+    /// Top-`prefix` neighbours per row — `O(n * P)` broadcast bytes with
+    /// an exact counted fallback for queries that exhaust the prefix (see
+    /// [`crate::ccm::table`] module docs). Size `prefix` with
+    /// [`DistanceTable::auto_prefix`].
+    Truncated { prefix: usize },
 }
 
 /// §3.1 — the CCM transform pipeline: subsamples -> prediction skills via
@@ -77,12 +94,12 @@ pub fn ccm_transform_rdd(
         .uses_broadcast(&problem)
         .map_partitions(move |_p, samples| {
             let prob = problem.value();
+            let mut arena = TaskArena::new();
             samples
                 .into_iter()
                 .map(|s| {
-                    let input = prob.input_for(&s);
-                    let out = backend.cross_map(&input);
-                    SkillRow { params: s.params, sample_id: s.sample_id, rho: out.rho }
+                    let rho = backend.cross_map_into(&prob.input_for(&s), &mut arena);
+                    SkillRow { params: s.params, sample_id: s.sample_id, rho }
                 })
                 .collect()
         })
@@ -90,37 +107,54 @@ pub fn ccm_transform_rdd(
 
 /// §3.2 (construction) — build the distance indexing table in parallel:
 /// one task per chunk of manifold rows, each computing its rows' sorted
-/// neighbour lists; the driver assembles and broadcasts.
+/// neighbour lists (truncated at source in [`TableMode::Truncated`], which
+/// also shrinks the collect); the driver assembles and broadcasts.
 ///
 /// Blocking (the table is a hard dependency of its transform jobs); the
 /// asynchronous driver overlaps *different* (E, tau) tables instead.
-pub fn table_pipeline(
+pub fn table_pipeline_mode(
     ctx: &Context,
     problem: &Broadcast<CcmProblem>,
     partitions: usize,
+    mode: TableMode,
 ) -> Broadcast<DistanceTable> {
     let n = problem.value().emb.n;
+    let row_len = match mode {
+        TableMode::Full => n.saturating_sub(1),
+        TableMode::Truncated { prefix } => prefix.min(n.saturating_sub(1)),
+    };
     let rows_rdd = ctx.parallelize_with((0..n).collect::<Vec<usize>>(), partitions);
     let prob = problem.clone();
     let sorted = rows_rdd.uses_broadcast(&prob).map_partitions(move |_p, rows| {
         let emb = &prob.value().emb;
         rows.into_iter()
-            .map(|i| (i, DistanceTable::sorted_row(emb, i)))
+            .map(|i| (i, DistanceTable::sorted_row_prefix(emb, i, row_len)))
             .collect()
     });
     let mut rows: Vec<(usize, Vec<u32>)> = ctx.collect(&sorted);
     rows.sort_by_key(|(i, _)| *i);
-    let table = DistanceTable::assemble(
+    let table = DistanceTable::assemble_with(
         &problem.value().emb,
         rows.into_iter().map(|(_, r)| r).collect(),
+        row_len,
     );
     let size = table.size_bytes();
     ctx.broadcast(table, size)
 }
 
+/// [`table_pipeline_mode`] with the paper's full layout.
+pub fn table_pipeline(
+    ctx: &Context,
+    problem: &Broadcast<CcmProblem>,
+    partitions: usize,
+) -> Broadcast<DistanceTable> {
+    table_pipeline_mode(ctx, problem, partitions, TableMode::Full)
+}
+
 /// §3.2 (use) — the CCM transform pipeline with the broadcast table:
 /// k-NN becomes a filtered walk of the precomputed sorted lists, then the
-/// simplex/Pearson tail runs on the backend.
+/// simplex/Pearson tail runs on the backend. Mask, panels, and prediction
+/// buffers all live in the partition's [`TaskArena`].
 pub fn table_transform_rdd(
     _ctx: &Context,
     samples: Rdd<LibrarySample>,
@@ -136,13 +170,27 @@ pub fn table_transform_rdd(
         .map_partitions(move |_p, samples| {
             let prob = problem.value();
             let tab = table.value();
+            let mut arena = TaskArena::new();
             samples
                 .into_iter()
                 .map(|s| {
-                    let (mask, target_of) = library_mask(tab.n, &s.rows, &prob.targets);
-                    let panels = tab.query_all(&mask, &target_of, prob.theiler);
-                    let out = backend.simplex_tail(&panels, &prob.targets, s.params.e);
-                    SkillRow { params: s.params, sample_id: s.sample_id, rho: out.rho }
+                    arena.mask.set_from(tab.n, &s.rows);
+                    tab.query_all_into(
+                        &s.rows,
+                        &arena.mask,
+                        &prob.targets,
+                        prob.theiler,
+                        &mut arena.dvals,
+                        &mut arena.tvals,
+                    );
+                    let rho = backend.simplex_tail_into(
+                        &arena.dvals,
+                        &arena.tvals,
+                        &prob.targets,
+                        s.params.e,
+                        &mut arena.preds,
+                    );
+                    SkillRow { params: s.params, sample_id: s.sample_id, rho }
                 })
                 .collect()
         })
@@ -157,6 +205,7 @@ mod tests {
     use crate::native::NativeBackend;
     use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
     use crate::util::rng::Rng;
+    use crate::KMAX;
 
     fn setup() -> (Context, Broadcast<CcmProblem>, Vec<LibrarySample>) {
         let ctx = Context::new(
@@ -168,6 +217,19 @@ mod tests {
         let b = ctx.broadcast(problem, size);
         let samples = draw_samples(&Rng::new(9), CcmParams::new(2, 1, 150), 399, 12);
         (ctx, b, samples)
+    }
+
+    #[test]
+    fn input_for_is_a_borrowed_view() {
+        let (_ctx, problem, samples) = setup();
+        let prob = problem.value();
+        let input = prob.input_for(&samples[0]);
+        // the view aliases the problem's storage — no copies
+        assert!(std::ptr::eq(input.vecs, prob.emb.vecs.as_slice()));
+        assert!(std::ptr::eq(input.targets, prob.targets.as_slice()));
+        assert!(std::ptr::eq(input.times, prob.times.as_slice()));
+        assert!(std::ptr::eq(input.lib_rows, samples[0].rows.as_slice()));
+        input.validate();
     }
 
     #[test]
@@ -186,28 +248,62 @@ mod tests {
 
     #[test]
     fn table_mode_equals_bruteforce_mode() {
-        // §3.2 is an optimization, not an approximation: identical rho.
+        // §3.2 is an optimization, not an approximation: identical rho —
+        // in full AND truncated table layouts.
         let (ctx, problem, samples) = setup();
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
         let rdd = ctx.parallelize_with(samples.clone(), 4);
         let brute = ctx.collect(&ccm_transform_rdd(&ctx, rdd, &problem, Arc::clone(&backend)));
 
-        let table = table_pipeline(&ctx, &problem, 4);
-        let rdd2 = ctx.parallelize_with(samples, 4);
-        let tabled =
-            ctx.collect(&table_transform_rdd(&ctx, rdd2, &problem, &table, backend));
+        let n = problem.value().emb.n;
+        let modes = [
+            TableMode::Full,
+            TableMode::Truncated { prefix: DistanceTable::auto_prefix(n, 150) },
+            TableMode::Truncated { prefix: KMAX }, // pathologically short: fallback-heavy
+        ];
+        for mode in modes {
+            let table = table_pipeline_mode(&ctx, &problem, 4, mode);
+            let rdd2 = ctx.parallelize_with(samples.clone(), 4);
+            let tabled = ctx.collect(&table_transform_rdd(
+                &ctx,
+                rdd2,
+                &problem,
+                &table,
+                Arc::clone(&backend),
+            ));
 
-        assert_eq!(brute.len(), tabled.len());
-        for (a, b) in brute.iter().zip(&tabled) {
-            assert_eq!(a.sample_id, b.sample_id);
-            assert!(
-                (a.rho - b.rho).abs() < 1e-5,
-                "sample {}: brute {} vs table {}",
-                a.sample_id,
-                a.rho,
-                b.rho
-            );
+            assert_eq!(brute.len(), tabled.len());
+            for (a, b) in brute.iter().zip(&tabled) {
+                assert_eq!(a.sample_id, b.sample_id, "{mode:?}");
+                assert!(
+                    (a.rho - b.rho).abs() < 1e-5,
+                    "{mode:?} sample {}: brute {} vs table {}",
+                    a.sample_id,
+                    a.rho,
+                    b.rho
+                );
+            }
         }
+    }
+
+    #[test]
+    fn truncated_table_broadcast_is_smaller() {
+        let (ctx, problem, _samples) = setup();
+        let n = problem.value().emb.n;
+        let full = table_pipeline_mode(&ctx, &problem, 4, TableMode::Full);
+        let prefix = DistanceTable::auto_prefix(n, 150);
+        let trunc =
+            table_pipeline_mode(&ctx, &problem, 4, TableMode::Truncated { prefix });
+        assert!(prefix < n - 1);
+        assert_eq!(trunc.value().row_len(), prefix);
+        assert!(
+            trunc.size_bytes() < full.size_bytes(),
+            "truncated broadcast {} must undercut full {}",
+            trunc.size_bytes(),
+            full.size_bytes()
+        );
+        // the DES charges what the broadcast declares: O(n*P) + manifold
+        assert_eq!(trunc.size_bytes(), n * prefix * 4 + n * crate::EMAX * 4);
     }
 
     #[test]

@@ -21,11 +21,25 @@ pub fn simplex_one(dvals: &[f32], tvals: &[f32], e: usize) -> f32 {
     num / den
 }
 
-/// Batch simplex over flat `[n, KMAX]` panels.
+/// Batch simplex over flat `[n, KMAX]` panels, written into a reused
+/// output buffer (cleared first) — the arena-backed hot path.
+pub fn simplex_batch_into(dvals: &[f32], tvals: &[f32], n: usize, e: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(n);
+    for i in 0..n {
+        out.push(simplex_one(
+            &dvals[i * KMAX..(i + 1) * KMAX],
+            &tvals[i * KMAX..(i + 1) * KMAX],
+            e,
+        ));
+    }
+}
+
+/// Allocating batch simplex over flat `[n, KMAX]` panels.
 pub fn simplex_batch(dvals: &[f32], tvals: &[f32], n: usize, e: usize) -> Vec<f32> {
-    (0..n)
-        .map(|i| simplex_one(&dvals[i * KMAX..(i + 1) * KMAX], &tvals[i * KMAX..(i + 1) * KMAX], e))
-        .collect()
+    let mut out = Vec::new();
+    simplex_batch_into(dvals, tvals, n, e, &mut out);
+    out
 }
 
 /// Pearson correlation between two f32 slices (f64 accumulation), 0 when

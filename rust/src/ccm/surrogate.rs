@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::ccm::backend::ComputeBackend;
+use crate::ccm::backend::{ComputeBackend, TaskArena};
 use crate::ccm::params::CcmParams;
 use crate::ccm::pipeline::CcmProblem;
 use crate::ccm::subsample::draw_samples;
@@ -47,9 +47,10 @@ fn mean_skill(
     let problem = CcmProblem::new(effect, cause, params.e, params.tau, theiler);
     let master = Rng::new(seed);
     let samples = draw_samples(&master, params, problem.emb.n, r);
+    let mut arena = TaskArena::new();
     let mut acc = 0.0f64;
     for s in &samples {
-        acc += backend.cross_map(&problem.input_for(s)).rho as f64;
+        acc += backend.cross_map_into(&problem.input_for(s), &mut arena) as f64;
     }
     acc / r.max(1) as f64
 }

@@ -10,35 +10,125 @@
 //! that are members of the sampled library — no distance computation, no
 //! sorting, expected `O(n/L * k)` walk per query.
 //!
-//! Memory: `n * (n-1)` u32 indices (the paper's noted space/time
-//! trade-off; ~64 MB at n = 4000). Neighbour *distances* are recomputed on
-//! the fly for accepted entries only (k per query), saving 8x memory over
-//! storing them.
+//! # Truncated mode
+//!
+//! A query only ever *walks* an expected `O(n/L * KMAX)` prefix of each
+//! sorted row, yet the full table broadcasts all `n * (n-1)` entries
+//! (~64 MB at n = 4000). Truncated mode stores only the top-P prefix per
+//! row — P sized from the smallest library density via
+//! [`DistanceTable::auto_prefix`] — cutting the broadcast to `O(n * P)`
+//! bytes. Correctness is preserved *exactly*: while walking, the query
+//! counts the library members it has seen; if the prefix is exhausted
+//! before KMAX neighbours are found **and** unseen members remain, it
+//! falls back to a brute-force scan of the library rows for that one
+//! query. The fallback reproduces the walk's semantics bit-for-bit
+//! (identical distance arithmetic, ties to the lower manifold row), so
+//! truncated-table results are bit-identical to full-table and
+//! brute-force k-NN; [`DistanceTable::fallback_queries`] counts how often
+//! the prefix ran dry.
+//!
+//! Memory: `n * row_len` u32 indices. Neighbour *distances* are recomputed
+//! on the fly for accepted entries only (k per query), saving 8x memory
+//! over storing them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::ccm::backend::NeighborPanels;
 use crate::ccm::embedding::Embedding;
 use crate::{BIG, EMAX, KMAX};
 
-/// Sorted-neighbour index over a full shadow manifold.
+/// Library membership as a packed u64 bitset over manifold rows, refilled
+/// per sample from a [`crate::ccm::backend::TaskArena`] without
+/// reallocating. Replaces the old one-byte-per-row mask: 8x smaller, and
+/// clearing between samples is an `O(n/64)` word fill.
+#[derive(Default)]
+pub struct LibraryMask {
+    words: Vec<u64>,
+    n: usize,
+    members: usize,
+}
+
+impl LibraryMask {
+    pub fn new() -> LibraryMask {
+        LibraryMask::default()
+    }
+
+    /// Reset to an `n`-row manifold with the given member rows set.
+    pub fn set_from(&mut self, n: usize, rows: &[usize]) {
+        let n_words = n.div_ceil(64);
+        self.words.clear();
+        self.words.resize(n_words, 0);
+        self.n = n;
+        for &r in rows {
+            debug_assert!(r < n);
+            self.words[r >> 6] |= 1u64 << (r & 63);
+        }
+        self.members = rows.len();
+    }
+
+    #[inline]
+    pub fn contains(&self, row: usize) -> bool {
+        (self.words[row >> 6] >> (row & 63)) & 1 == 1
+    }
+
+    /// Number of member rows.
+    pub fn members(&self) -> usize {
+        self.members
+    }
+
+    /// Manifold size this mask covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Sorted-neighbour index over a full shadow manifold (full or truncated
+/// prefix per row — see the module docs).
 pub struct DistanceTable {
-    /// Flat `[n, n-1]`: row i lists every other manifold row, ascending by
-    /// distance to i (ties by index).
+    /// Flat `[n, row_len]`: row i lists other manifold rows ascending by
+    /// distance to i (ties by index); the first `row_len` of them.
     neighbors: Vec<u32>,
+    /// Entries stored per row: `n - 1` (full) or the truncation prefix P.
+    row_len: usize,
     /// Number of manifold points.
     pub n: usize,
     /// The manifold the table indexes (owned copy of the flat vectors —
-    /// needed to recompute accepted-neighbour distances).
+    /// needed to recompute accepted-neighbour distances and to serve the
+    /// sparse-library brute-force fallback).
     vecs: Vec<f32>,
     /// Time index of row 0 (Theiler windows work on original time).
     pub t0: usize,
+    /// Queries that exhausted a truncated prefix and fell back to the
+    /// brute-force scan (observability; relaxed counter).
+    fallbacks: AtomicU64,
 }
 
 impl DistanceTable {
     /// Build the full table serially. The parallel build used by the
-    /// pipelines is [`DistanceTable::build_rows`] + [`DistanceTable::assemble`].
+    /// pipelines is [`DistanceTable::sorted_row`] + [`DistanceTable::assemble`].
     pub fn build(emb: &Embedding) -> DistanceTable {
         let rows: Vec<Vec<u32>> = (0..emb.n).map(|i| Self::sorted_row(emb, i)).collect();
         Self::assemble(emb, rows)
+    }
+
+    /// Build a truncated table serially, keeping the top-`prefix` entries
+    /// per row.
+    pub fn build_truncated(emb: &Embedding, prefix: usize) -> DistanceTable {
+        let row_len = prefix.min(emb.n.saturating_sub(1));
+        let rows: Vec<Vec<u32>> =
+            (0..emb.n).map(|i| Self::sorted_row_prefix(emb, i, row_len)).collect();
+        Self::assemble_with(emb, rows, row_len)
+    }
+
+    /// Prefix length for truncated mode: the expected walk length to find
+    /// KMAX members at the sparsest library density `min_l / n`, with 4x
+    /// headroom so the exact brute-force fallback stays rare. Clamped to
+    /// the full row length.
+    pub fn auto_prefix(n: usize, min_l: usize) -> usize {
+        let full = n.saturating_sub(1);
+        let min_l = min_l.max(1);
+        let expected = KMAX * n.div_ceil(min_l);
+        (expected * 4).max(KMAX).min(full)
     }
 
     /// Compute the sorted neighbour list of manifold row `i` — the unit of
@@ -70,19 +160,59 @@ impl DistanceTable {
         keys.into_iter().map(|k| k as u32).collect()
     }
 
-    /// Assemble per-row sorted lists (in row order) into a table.
-    pub fn assemble(emb: &Embedding, rows: Vec<Vec<u32>>) -> DistanceTable {
-        let n = emb.n;
-        assert_eq!(rows.len(), n);
-        let mut neighbors = Vec::with_capacity(n * n.saturating_sub(1));
-        for r in &rows {
-            assert_eq!(r.len(), n - 1);
-            neighbors.extend_from_slice(r);
-        }
-        DistanceTable { neighbors, n, vecs: emb.vecs.clone(), t0: emb.t0 }
+    /// [`DistanceTable::sorted_row`] truncated to its top-`prefix` entries
+    /// — the unit of parallel *truncated* construction. Truncating inside
+    /// the task also shrinks what the driver collects.
+    pub fn sorted_row_prefix(emb: &Embedding, i: usize, prefix: usize) -> Vec<u32> {
+        let mut row = Self::sorted_row(emb, i);
+        row.truncate(prefix);
+        row
     }
 
-    /// Serialized size for broadcast cost accounting.
+    /// Assemble per-row *full* sorted lists (in row order) into a table.
+    pub fn assemble(emb: &Embedding, rows: Vec<Vec<u32>>) -> DistanceTable {
+        let row_len = emb.n.saturating_sub(1);
+        Self::assemble_with(emb, rows, row_len)
+    }
+
+    /// Assemble per-row sorted lists of uniform length `row_len` (the
+    /// truncation prefix, or `n - 1` for a full table).
+    pub fn assemble_with(emb: &Embedding, rows: Vec<Vec<u32>>, row_len: usize) -> DistanceTable {
+        let n = emb.n;
+        assert_eq!(rows.len(), n);
+        let mut neighbors = Vec::with_capacity(n * row_len);
+        for r in &rows {
+            assert_eq!(r.len(), row_len);
+            neighbors.extend_from_slice(r);
+        }
+        DistanceTable {
+            neighbors,
+            row_len,
+            n,
+            vecs: emb.vecs.clone(),
+            t0: emb.t0,
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    /// Entries stored per row (`n - 1` when full).
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// True when rows store a truncated prefix.
+    pub fn is_truncated(&self) -> bool {
+        self.row_len < self.n.saturating_sub(1)
+    }
+
+    /// Times a truncated query ran out of prefix and used the brute-force
+    /// fallback (0 for full tables).
+    pub fn fallback_queries(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Serialized size for broadcast cost accounting: `O(n * row_len)`
+    /// indices plus the `O(n * EMAX)` manifold copy.
     pub fn size_bytes(&self) -> usize {
         self.neighbors.len() * 4 + self.vecs.len() * 4
     }
@@ -101,75 +231,146 @@ impl DistanceTable {
     }
 
     /// k-NN of manifold row `qi` restricted to library members, by walking
-    /// the precomputed list. `in_library[j] != 0` marks manifold row j as a
-    /// library member; `lib_target_of[j]` is the target value for member
-    /// rows (unused slots arbitrary). Matches brute-force semantics:
+    /// the precomputed list. `mask` marks member rows (packed);
+    /// `targets[j]` is the target value of manifold row j (the problem's
+    /// aligned target column — only member slots are read). `lib_rows`
+    /// backs the truncated-prefix fallback. Matches brute-force semantics:
     /// Theiler exclusion on original time, KMAX slots padded with BIG/0.
     pub fn query_into(
         &self,
         qi: usize,
-        in_library: &[u8],
-        lib_target_of: &[f32],
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
         theiler: f32,
-        out_d: &mut [f32; KMAX],
-        out_t: &mut [f32; KMAX],
+        out_d: &mut [f32],
+        out_t: &mut [f32],
     ) {
-        out_d.fill(BIG);
-        out_t.fill(0.0);
-        let row = &self.neighbors[qi * (self.n - 1)..(qi + 1) * (self.n - 1)];
+        debug_assert!(out_d.len() >= KMAX && out_t.len() >= KMAX);
+        debug_assert_eq!(mask.n(), self.n);
+        out_d[..KMAX].fill(BIG);
+        out_t[..KMAX].fill(0.0);
+        let row = &self.neighbors[qi * self.row_len..(qi + 1) * self.row_len];
         let qt = (self.t0 + qi) as f32;
-        let mut found = 0;
+        // The row never lists qi itself, so a member query point can see
+        // at most members-1 rows: count against the reachable total.
+        let reachable = mask.members() - usize::from(mask.contains(qi));
+        let mut found = 0usize;
+        let mut seen = 0usize;
         for &j in row {
             let j = j as usize;
-            if in_library[j] == 0 {
+            if !mask.contains(j) {
                 continue;
             }
+            seen += 1;
             if theiler >= 0.0 && ((self.t0 + j) as f32 - qt).abs() <= theiler {
                 continue;
             }
             out_d[found] = self.sq_dist(qi, j);
-            out_t[found] = lib_target_of[j];
+            out_t[found] = targets[j];
             found += 1;
             if found == KMAX {
-                break;
+                return;
             }
         }
+        if seen == reachable {
+            // every member lay inside the stored prefix: the padded result
+            // is exactly what the full walk would produce.
+            return;
+        }
+        // Truncated prefix exhausted with members unseen: exact counted
+        // fallback — brute-force k-NN over the library rows for this query.
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.brute_query_into(qi, lib_rows, targets, theiler, out_d, out_t);
     }
 
-    /// Batch query: neighbour panels for every manifold row (the standard
-    /// CCM prediction set is the whole manifold).
+    /// Exact brute-force k-NN over `lib_rows` for query row `qi`,
+    /// reproducing the sorted-walk semantics: self excluded, Theiler on
+    /// original time, ties to the lower manifold row (lib_rows ascending +
+    /// strict-less insertion).
+    fn brute_query_into(
+        &self,
+        qi: usize,
+        lib_rows: &[usize],
+        targets: &[f32],
+        theiler: f32,
+        out_d: &mut [f32],
+        out_t: &mut [f32],
+    ) {
+        out_d[..KMAX].fill(BIG);
+        out_t[..KMAX].fill(0.0);
+        let qt = (self.t0 + qi) as f32;
+        let mut worst = BIG;
+        for &j in lib_rows {
+            if j == qi {
+                continue; // the sorted row never lists the point itself
+            }
+            if theiler >= 0.0 && ((self.t0 + j) as f32 - qt).abs() <= theiler {
+                continue;
+            }
+            let d = self.sq_dist(qi, j);
+            if d >= worst {
+                continue;
+            }
+            let mut pos = KMAX - 1;
+            while pos > 0 && d < out_d[pos - 1] {
+                out_d[pos] = out_d[pos - 1];
+                out_t[pos] = out_t[pos - 1];
+                pos -= 1;
+            }
+            out_d[pos] = d;
+            out_t[pos] = targets[j];
+            worst = out_d[KMAX - 1];
+        }
+    }
+
+    /// Batch query into reused flat `[n, KMAX]` buffers (the standard CCM
+    /// prediction set is the whole manifold). Buffers are resized in place
+    /// — with a [`crate::ccm::backend::TaskArena`] nothing allocates after
+    /// the first sample.
+    pub fn query_all_into(
+        &self,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+        dvals: &mut Vec<f32>,
+        tvals: &mut Vec<f32>,
+    ) {
+        // size-only resize: query_into overwrites all KMAX slots per row,
+        // so a correctly-shaped arena buffer needs no per-sample memset
+        if dvals.len() != self.n * KMAX {
+            dvals.resize(self.n * KMAX, 0.0);
+        }
+        if tvals.len() != self.n * KMAX {
+            tvals.resize(self.n * KMAX, 0.0);
+        }
+        for qi in 0..self.n {
+            self.query_into(
+                qi,
+                lib_rows,
+                mask,
+                targets,
+                theiler,
+                &mut dvals[qi * KMAX..(qi + 1) * KMAX],
+                &mut tvals[qi * KMAX..(qi + 1) * KMAX],
+            );
+        }
+    }
+
+    /// Allocating batch query (tests and one-off analysis).
     pub fn query_all(
         &self,
-        in_library: &[u8],
-        lib_target_of: &[f32],
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
         theiler: f32,
     ) -> NeighborPanels {
-        let mut dvals = vec![0.0f32; self.n * KMAX];
-        let mut tvals = vec![0.0f32; self.n * KMAX];
-        let mut d = [0.0f32; KMAX];
-        let mut t = [0.0f32; KMAX];
-        for qi in 0..self.n {
-            self.query_into(qi, in_library, lib_target_of, theiler, &mut d, &mut t);
-            dvals[qi * KMAX..(qi + 1) * KMAX].copy_from_slice(&d);
-            tvals[qi * KMAX..(qi + 1) * KMAX].copy_from_slice(&t);
-        }
+        let mut dvals = Vec::new();
+        let mut tvals = Vec::new();
+        self.query_all_into(lib_rows, mask, targets, theiler, &mut dvals, &mut tvals);
         NeighborPanels { dvals, tvals, n_pred: self.n }
     }
-}
-
-/// Build the membership mask + target lookup for a library sample.
-pub fn library_mask(
-    n_manifold: usize,
-    rows: &[usize],
-    targets_by_row: &[f32],
-) -> (Vec<u8>, Vec<f32>) {
-    let mut mask = vec![0u8; n_manifold];
-    let mut target_of = vec![0.0f32; n_manifold];
-    for &r in rows {
-        mask[r] = 1;
-        target_of[r] = targets_by_row[r];
-    }
-    (mask, target_of)
 }
 
 #[cfg(test)]
@@ -184,6 +385,21 @@ mod tests {
         let emb = Embedding::new(&y, 3, 2);
         let targets = emb.align_targets(&x);
         (emb, targets)
+    }
+
+    fn mask_of(n: usize, rows: &[usize]) -> LibraryMask {
+        let mut m = LibraryMask::new();
+        m.set_from(n, rows);
+        m
+    }
+
+    #[test]
+    fn mask_packs_and_counts() {
+        let m = mask_of(130, &[0, 63, 64, 129]);
+        assert!(m.contains(0) && m.contains(63) && m.contains(64) && m.contains(129));
+        assert!(!m.contains(1) && !m.contains(65) && !m.contains(128));
+        assert_eq!(m.members(), 4);
+        assert_eq!(m.n(), 130);
     }
 
     #[test]
@@ -212,8 +428,8 @@ mod tests {
         let table = DistanceTable::build(&emb);
         let mut rng = Rng::new(5);
         let rows = rng.sample_indices(emb.n, 120);
-        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
-        let panels = table.query_all(&mask, &target_of, 0.0);
+        let mask = mask_of(emb.n, &rows);
+        let panels = table.query_all(&rows, &mask, &targets, 0.0);
 
         // brute force over the same library
         let mut lib_vecs = Vec::new();
@@ -239,15 +455,51 @@ mod tests {
     }
 
     #[test]
+    fn truncated_table_bit_identical_to_full() {
+        let (emb, targets) = embedding();
+        let full = DistanceTable::build(&emb);
+        let mut rng = Rng::new(9);
+        for (l, prefix) in [(120usize, 64usize), (40, 32), (12, KMAX), (emb.n, KMAX)] {
+            let rows = rng.sample_indices(emb.n, l.min(emb.n));
+            let mask = mask_of(emb.n, &rows);
+            let trunc = DistanceTable::build_truncated(&emb, prefix);
+            assert!(trunc.is_truncated());
+            let a = full.query_all(&rows, &mask, &targets, 0.0);
+            let b = trunc.query_all(&rows, &mask, &targets, 0.0);
+            assert_eq!(a.dvals, b.dvals, "l={l} prefix={prefix}");
+            assert_eq!(a.tvals, b.tvals, "l={l} prefix={prefix}");
+        }
+    }
+
+    #[test]
+    fn sparse_library_takes_counted_fallback_and_stays_exact() {
+        let (emb, targets) = embedding();
+        let full = DistanceTable::build(&emb);
+        // library so sparse that a KMAX-deep prefix can't see all members
+        let rows = vec![3usize, 40, 80, 150, 200];
+        let mask = mask_of(emb.n, &rows);
+        let trunc = DistanceTable::build_truncated(&emb, KMAX);
+        let a = full.query_all(&rows, &mask, &targets, 0.0);
+        let b = trunc.query_all(&rows, &mask, &targets, 0.0);
+        assert_eq!(a.dvals, b.dvals);
+        assert_eq!(a.tvals, b.tvals);
+        assert!(
+            trunc.fallback_queries() > 0,
+            "a 5-member library must exhaust a KMAX-deep prefix somewhere"
+        );
+        assert_eq!(full.fallback_queries(), 0, "full tables never fall back");
+    }
+
+    #[test]
     fn theiler_respected_in_table_query() {
         let (emb, targets) = embedding();
         let table = DistanceTable::build(&emb);
         let all_rows: Vec<usize> = (0..emb.n).collect();
-        let (mask, target_of) = library_mask(emb.n, &all_rows, &targets);
+        let mask = mask_of(emb.n, &all_rows);
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
         // theiler = 5: all neighbours at least 6 steps away in time
-        table.query_into(50, &mask, &target_of, 5.0, &mut d, &mut t);
+        table.query_into(50, &all_rows, &mask, &targets, 5.0, &mut d, &mut t);
         // verify by brute force over allowed rows
         let best = (0..emb.n)
             .filter(|&j| (j as i64 - 50).abs() > 5)
@@ -261,10 +513,10 @@ mod tests {
         let (emb, targets) = embedding();
         let table = DistanceTable::build(&emb);
         let rows = vec![3usize, 40, 80]; // only 3 members
-        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
+        let mask = mask_of(emb.n, &rows);
         let mut d = [0.0; KMAX];
         let mut t = [0.0; KMAX];
-        table.query_into(10, &mask, &target_of, 0.0, &mut d, &mut t);
+        table.query_into(10, &rows, &mask, &targets, 0.0, &mut d, &mut t);
         assert!(d[0] < BIG && d[1] < BIG && d[2] < BIG);
         assert_eq!(d[3], BIG);
         assert_eq!(t[3], 0.0);
@@ -275,5 +527,21 @@ mod tests {
         let (emb, _) = embedding();
         let table = DistanceTable::build(&emb);
         assert_eq!(table.size_bytes(), emb.n * (emb.n - 1) * 4 + emb.n * EMAX * 4);
+        // truncated: O(n * P) indices instead of O(n^2)
+        let trunc = DistanceTable::build_truncated(&emb, 40);
+        assert_eq!(trunc.size_bytes(), emb.n * 40 * 4 + emb.n * EMAX * 4);
+        assert_eq!(trunc.row_len(), 40);
+    }
+
+    #[test]
+    fn auto_prefix_scales_with_density() {
+        // dense library: short prefix; sparse library: longer; always
+        // clamped to the full row.
+        let dense = DistanceTable::auto_prefix(1000, 500);
+        let sparse = DistanceTable::auto_prefix(1000, 50);
+        assert!(dense < sparse);
+        assert!(sparse <= 999);
+        assert!(dense >= KMAX);
+        assert_eq!(DistanceTable::auto_prefix(10, 1), 9);
     }
 }

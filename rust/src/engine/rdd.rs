@@ -7,9 +7,7 @@
 //! task per partition — exactly Spark's stage-fusion behaviour. Actions
 //! live on [`super::context::Context`].
 
-use std::sync::Arc;
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, OnceLock};
 
 /// Broadcast dependency tag: (id, size-in-bytes). Propagated through
 /// transforms so the DES knows which jobs must ship which tables.
@@ -25,7 +23,7 @@ pub(crate) struct RddInner<T> {
     /// Broadcast variables this lineage reads.
     pub broadcast_deps: Vec<BroadcastDep>,
     /// Cache slots (filled by `cache()` + first evaluation).
-    pub cache: Option<Arc<Vec<OnceCell<Vec<T>>>>>,
+    pub cache: Option<Arc<Vec<OnceLock<Vec<T>>>>>,
 }
 
 /// An immutable, lazily evaluated, partitioned dataset.
@@ -286,7 +284,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     /// Materialize each partition at most once (Spark `.cache()`):
     /// subsequent evaluations reuse the stored partitions.
     pub fn cache(&self) -> Rdd<T> {
-        let cells = (0..self.inner.partitions).map(|_| OnceCell::new()).collect();
+        let cells = (0..self.inner.partitions).map(|_| OnceLock::new()).collect();
         Rdd {
             inner: Arc::new(RddInner {
                 partitions: self.inner.partitions,

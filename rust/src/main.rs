@@ -19,7 +19,7 @@ use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{run_case_policy, Case, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
@@ -79,6 +79,8 @@ fn print_help() {
            --full               paper-scale scenario (default: scaled for 1 core)\n\
            --backend native|xla (default: xla when artifacts/ exists)\n\
            --artifacts DIR      artifact directory (default: artifacts)\n\
+           --table full|trunc   distance-table layout for A4/A5 (default: trunc,\n\
+                                the O(n*P) truncated broadcast; bit-identical skills)\n\
            --seed N             master seed\n\
            --workers N --cores N   cluster topology for the DES (default 5x4)\n"
     );
@@ -126,13 +128,13 @@ fn scenario_from(args: &Args) -> Scenario {
     };
     s.seed = args.get_u64("seed", s.seed);
     s.r = args.get_usize("r", s.r);
-    if let Some(_) = args.get("l") {
+    if args.get("l").is_some() {
         s.ls = args.get_usize_list("l", &s.ls);
     }
-    if let Some(_) = args.get("e") {
+    if args.get("e").is_some() {
         s.es = args.get_usize_list("e", &s.es);
     }
-    if let Some(_) = args.get("tau") {
+    if args.get("tau").is_some() {
         s.taus = args.get_usize_list("tau", &s.taus);
     }
     s.partitions = args.get_usize("partitions", s.partitions);
@@ -144,6 +146,30 @@ fn cluster_from(args: &Args) -> Deploy {
         workers: args.get_usize("workers", 5),
         cores_per_worker: args.get_usize("cores", 4),
     }
+}
+
+/// Distance-table layout for the table cases: `--table full` keeps the
+/// paper's O(n^2) broadcast; the default truncates to O(n*P).
+fn table_policy_from(args: &Args) -> TablePolicy {
+    match args.get("table") {
+        Some("full") => TablePolicy::Full,
+        _ => TablePolicy::TruncatedAuto,
+    }
+}
+
+/// [`run_case_policy`] with the table layout picked from the command's
+/// own `--table` argument.
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    args: &Args,
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploy: Deploy,
+    backend: Arc<dyn ComputeBackend>,
+) -> parccm::ccm::driver::CaseReport {
+    run_case_policy(case, scenario, effect, cause, deploy, backend, table_policy_from(args))
 }
 
 fn cmd_cases() -> ExitCode {
@@ -168,13 +194,14 @@ fn cmd_fig4(args: &Args) -> ExitCode {
     for case in Case::ALL {
         // one real execution per case; Local and Yarn are DES replays of
         // the same event log (numerics are deploy-independent)
-        let (_skills, reports) = parccm::ccm::driver::run_case_multi(
+        let (_skills, reports) = parccm::ccm::driver::run_case_multi_policy(
             case,
             &scenario,
             &y,
             &x,
             &[local.clone(), cluster.clone()],
             Arc::clone(&backend),
+            table_policy_from(args),
         );
         table.push(
             Row::new(format!("{} {}", case.name(), case.description()))
@@ -204,8 +231,9 @@ fn cmd_elasticity(args: &Args) -> ExitCode {
         s.es = vec![e];
         s.taus = vec![tau];
         s.ls = vec![l];
-        let single = run_case(Case::A1, &s, &y, &x, Deploy::SingleThread, Arc::clone(&backend));
-        let parallel = run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        let single =
+            run_case(args, Case::A1, &s, &y, &x, Deploy::SingleThread, Arc::clone(&backend));
+        let parallel = run_case(args, Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
         let st = single.report.measured_wall_s;
         let pt = parallel.report.sim_makespan_s;
         table.push(
@@ -252,7 +280,7 @@ fn cmd_quickstart(args: &Args) -> ExitCode {
     scenario.es = vec![2];
     scenario.taus = vec![1];
     println!("CCM quickstart: does X drive Y? (coupled logistic, beta_yx=0.1 >> beta_xy=0.02)");
-    let rep = run_case(Case::A5, &scenario, &y, &x, Deploy::paper_cluster(), backend);
+    let rep = run_case(args, Case::A5, &scenario, &y, &x, Deploy::paper_cluster(), backend);
     let summaries = summarize(&rep.skills);
     println!("\n   L     mean rho    std");
     for s in &summaries {
@@ -306,7 +334,7 @@ fn cmd_sweep(args: &Args) -> ExitCode {
     scenario.taus = args.get_usize_list("tau", &[1]);
     scenario.seed = args.get_u64("seed", scenario.seed);
     println!("sweep over {input}: {n} points, testing {cause_name} -> {effect_name}");
-    let rep = run_case(Case::A5, &scenario, &effect, &cause, cluster_from(args), backend);
+    let rep = run_case(args, Case::A5, &scenario, &effect, &cause, cluster_from(args), backend);
     let summaries = summarize(&rep.skills);
     println!("\n  E  tau     L    mean rho     std");
     for s in &summaries {
@@ -375,7 +403,10 @@ fn cmd_events(args: &Args) -> ExitCode {
     let n = problem.emb.n;
     let size = problem.size_bytes();
     let pb = ctx.broadcast(problem, size);
-    let table = parccm::ccm::pipeline::table_pipeline(&ctx, &pb, scenario.partitions);
+    let policy = table_policy_from(args);
+    let min_l = scenario.ls.iter().copied().min().unwrap_or(1);
+    let mode = policy.mode_for(n, min_l);
+    let table = parccm::ccm::pipeline::table_pipeline_mode(&ctx, &pb, scenario.partitions, mode);
     let master = parccm::util::rng::Rng::new(scenario.seed);
     let mut futs = Vec::new();
     for &l in &scenario.ls {

@@ -6,10 +6,15 @@
 //! (b) the compute engine of the single-threaded baselines (Case A1,
 //! rEDM-style), and (c) the default backend when `artifacts/` has not
 //! been built.
+//!
+//! The hot entry point is [`ComputeBackend::cross_map_into`]: the library
+//! panel is gathered once into the caller's [`TaskArena`] (reused buffers,
+//! no allocation after the first sample), then the contiguous-library
+//! k-NN sweep, simplex, and Pearson all run in arena storage.
 
-use crate::ccm::backend::{ComputeBackend, CrossMapInput, CrossMapOutput, NeighborPanels};
-use crate::ccm::knn::knn_batch;
-use crate::ccm::simplex::{pearson_f32, simplex_batch};
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
+use crate::ccm::knn::knn_batch_into;
+use crate::ccm::simplex::{pearson_f32, simplex_batch_into};
 use crate::EMAX;
 
 /// Stateless, always-available backend.
@@ -23,22 +28,40 @@ impl NativeBackend {
 }
 
 impl ComputeBackend for NativeBackend {
-    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput {
+    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
         debug_assert!({
             input.validate();
             true
         });
-        let (dvals, tvals) = knn_batch(
-            &input.pred_vecs,
-            &input.pred_times,
-            &input.lib_vecs,
-            &input.lib_targets,
-            &input.lib_times,
+        // Gather the library contiguously once (O(L*EMAX), reused buffer):
+        // the branch-free distance sweep then vectorizes over a dense
+        // panel for all n queries, which beats per-query index gathering.
+        arena.gather_library(input);
+        knn_batch_into(
+            input.vecs,
+            input.times,
+            &arena.lib_vecs,
+            &arena.lib_targets,
+            &arena.lib_times,
             input.theiler,
+            &mut arena.dist,
+            &mut arena.dvals,
+            &mut arena.tvals,
         );
-        let preds = simplex_batch(&dvals, &tvals, input.n_pred(), input.e);
-        let rho = pearson_f32(&preds, &input.pred_targets);
-        CrossMapOutput { rho, preds }
+        simplex_batch_into(&arena.dvals, &arena.tvals, input.n_pred(), input.e, &mut arena.preds);
+        pearson_f32(&arena.preds, input.targets)
+    }
+
+    fn simplex_tail_into(
+        &self,
+        dvals: &[f32],
+        tvals: &[f32],
+        pred_targets: &[f32],
+        e: usize,
+        preds: &mut Vec<f32>,
+    ) -> f32 {
+        simplex_batch_into(dvals, tvals, pred_targets.len(), e, preds);
+        pearson_f32(preds, pred_targets)
     }
 
     fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
@@ -61,17 +84,6 @@ impl ComputeBackend for NativeBackend {
         out
     }
 
-    fn simplex_tail(
-        &self,
-        panels: &NeighborPanels,
-        pred_targets: &[f32],
-        e: usize,
-    ) -> CrossMapOutput {
-        let preds = simplex_batch(&panels.dvals, &panels.tvals, panels.n_pred, e);
-        let rho = pearson_f32(&preds, pred_targets);
-        CrossMapOutput { rho, preds }
-    }
-
     fn name(&self) -> &'static str {
         "native"
     }
@@ -80,49 +92,39 @@ impl ComputeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ccm::embedding::Embedding;
+    use crate::ccm::backend::NeighborPanels;
+    use crate::ccm::params::CcmParams;
+    use crate::ccm::pipeline::CcmProblem;
+    use crate::ccm::subsample::LibrarySample;
     use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
     use crate::util::rng::Rng;
 
-    /// Build a CrossMapInput predicting x from y's manifold with a random
-    /// library of `l` rows.
-    fn make_input(l: usize, e: usize, tau: usize, seed: u64) -> CrossMapInput {
+    /// A problem predicting x from y's manifold plus a random library of
+    /// `l` rows (the shared-view fixture for the zero-copy input).
+    fn fixture(l: usize, e: usize, tau: usize, seed: u64) -> (CcmProblem, LibrarySample) {
         let (x, y) = coupled_logistic(600, CoupledLogisticParams::default());
-        let emb = Embedding::new(&y, e, tau);
-        let targets = emb.align_targets(&x);
+        let problem = CcmProblem::new(&y, &x, e, tau, 0.0);
         let mut rng = Rng::new(seed);
-        let rows = rng.sample_indices(emb.n, l.min(emb.n));
-        let mut lib_vecs = Vec::with_capacity(rows.len() * EMAX);
-        let mut lib_targets = Vec::with_capacity(rows.len());
-        let mut lib_times = Vec::with_capacity(rows.len());
-        for &row in &rows {
-            lib_vecs.extend_from_slice(emb.point(row));
-            lib_targets.push(targets[row]);
-            lib_times.push(emb.time_of(row) as f32);
-        }
-        CrossMapInput {
-            lib_vecs,
-            lib_targets,
-            lib_times,
-            pred_vecs: emb.vecs.clone(),
-            pred_targets: targets,
-            pred_times: (0..emb.n).map(|i| emb.time_of(i) as f32).collect(),
-            e,
-            theiler: 0.0,
-        }
+        let rows = rng.sample_indices(problem.emb.n, l.min(problem.emb.n));
+        let sample =
+            LibrarySample { sample_id: 0, params: CcmParams::new(e, tau, l), rows };
+        (problem, sample)
     }
 
     #[test]
     fn skillful_on_coupled_system() {
-        let out = NativeBackend.cross_map(&make_input(400, 2, 1, 1));
+        let (problem, sample) = fixture(400, 2, 1, 1);
+        let out = NativeBackend.cross_map(&problem.input_for(&sample));
         assert!(out.rho > 0.8, "expected high cross-map skill, got {}", out.rho);
-        assert_eq!(out.preds.len(), make_input(400, 2, 1, 1).n_pred());
+        assert_eq!(out.preds.len(), problem.emb.n);
     }
 
     #[test]
     fn skill_grows_with_library() {
-        let small = NativeBackend.cross_map(&make_input(40, 2, 1, 2)).rho;
-        let large = NativeBackend.cross_map(&make_input(500, 2, 1, 2)).rho;
+        let (p1, s1) = fixture(40, 2, 1, 2);
+        let (p2, s2) = fixture(500, 2, 1, 2);
+        let small = NativeBackend.cross_map(&p1.input_for(&s1)).rho;
+        let large = NativeBackend.cross_map(&p2.input_for(&s2)).rho;
         assert!(
             large > small + 0.02,
             "convergence violated: rho({}) at L=40 vs rho({}) at L=500",
@@ -132,10 +134,23 @@ mod tests {
     }
 
     #[test]
+    fn arena_reuse_is_deterministic() {
+        // same arena across repeated samples must not change results
+        let (problem, sample) = fixture(200, 2, 1, 7);
+        let input = problem.input_for(&sample);
+        let fresh = NativeBackend.cross_map(&input).rho;
+        let mut arena = TaskArena::new();
+        for _ in 0..3 {
+            let rho = NativeBackend.cross_map_into(&input, &mut arena);
+            assert_eq!(rho, fresh);
+        }
+    }
+
+    #[test]
     fn distance_matrix_symmetric_zero_diag() {
-        let input = make_input(50, 3, 1, 3);
+        let (problem, _) = fixture(50, 3, 1, 3);
         let n = 50;
-        let d = NativeBackend.distance_matrix(&input.lib_vecs, n);
+        let d = NativeBackend.distance_matrix(&problem.emb.vecs[..n * EMAX], n);
         for i in 0..n {
             assert_eq!(d[i * n + i], 0.0);
             for j in 0..n {
@@ -148,18 +163,21 @@ mod tests {
     fn simplex_tail_equals_cross_map() {
         // gathering panels with knn then applying the tail must equal the
         // fused path — the table-mode equivalence.
-        let input = make_input(200, 2, 1, 4);
+        let (problem, sample) = fixture(200, 2, 1, 4);
+        let input = problem.input_for(&sample);
         let full = NativeBackend.cross_map(&input);
+        let mut arena = TaskArena::new();
+        arena.gather_library(&input);
         let (dvals, tvals) = crate::ccm::knn::knn_batch(
-            &input.pred_vecs,
-            &input.pred_times,
-            &input.lib_vecs,
-            &input.lib_targets,
-            &input.lib_times,
+            input.vecs,
+            input.times,
+            &arena.lib_vecs,
+            &arena.lib_targets,
+            &arena.lib_times,
             input.theiler,
         );
         let panels = NeighborPanels { dvals, tvals, n_pred: input.n_pred() };
-        let tail = NativeBackend.simplex_tail(&panels, &input.pred_targets, input.e);
+        let tail = NativeBackend.simplex_tail(&panels, input.targets, input.e);
         assert_eq!(full.rho, tail.rho);
         assert_eq!(full.preds, tail.preds);
     }

@@ -9,15 +9,21 @@
 //!   can never collide with real rows;
 //! * the neighbour count is a `k_mask` (first E+1 ones).
 //!
+//! The zero-copy [`CrossMapInput`] view gathers straight into the padded
+//! device buffers (one pass, no intermediate library materialization) —
+//! padding is the accelerator's serialization boundary, so these copies
+//! are inherent to the offload, not task-assembly overhead.
+//!
 //! Workloads larger than every bucket fall back to the native backend
 //! (logged once) — graceful degradation instead of a hot-path panic.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use crate::ccm::backend::{ComputeBackend, CrossMapInput, CrossMapOutput, NeighborPanels};
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
 use crate::native::NativeBackend;
 use crate::runtime::manifest::ArtifactKind;
 use crate::runtime::service::XlaService;
+use crate::util::error::Result;
 use crate::{EMAX, KMAX};
 
 /// XLA-offload backend (thread-safe; shares one service pool).
@@ -33,7 +39,7 @@ impl XlaBackend {
     }
 
     /// Start a service over `dir` and wrap it.
-    pub fn from_dir(dir: &str, pool_size: usize) -> anyhow::Result<XlaBackend> {
+    pub fn from_dir(dir: &str, pool_size: usize) -> Result<XlaBackend> {
         Ok(XlaBackend::new(XlaService::start(dir, pool_size)?))
     }
 
@@ -79,30 +85,40 @@ impl XlaBackend {
 }
 
 impl ComputeBackend for XlaBackend {
-    fn cross_map(&self, input: &CrossMapInput) -> CrossMapOutput {
-        let meta = match self.service.manifest().bucket_for_rect(
-            ArtifactKind::CrossMap,
-            input.n_lib(),
-            input.n_pred(),
-        ) {
+    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
+        let n = input.n_lib();
+        let p = input.n_pred();
+        let meta = match self
+            .service
+            .manifest()
+            .bucket_for_rect(ArtifactKind::CrossMap, n, p)
+        {
             Some(m) => m,
             None => {
-                self.note_fallback("cross_map", input.n_lib().max(input.n_pred()));
-                return self.fallback.cross_map(input);
+                self.note_fallback("cross_map", n.max(p));
+                return self.fallback.cross_map_into(input, arena);
             }
         };
         let (nb, pb) = (meta.n, meta.p);
-        let n = input.n_lib();
-        let p = input.n_pred();
+        // gather the library rows straight into the padded device buffers
+        let mut lib_vecs = vec![0.0f32; nb * EMAX];
+        let mut lib_targets = vec![0.0f32; nb];
+        let mut lib_times = vec![-1e9f32; nb];
+        for (k, &row) in input.lib_rows.iter().enumerate() {
+            lib_vecs[k * EMAX..(k + 1) * EMAX]
+                .copy_from_slice(&input.vecs[row * EMAX..(row + 1) * EMAX]);
+            lib_targets[k] = input.targets[row];
+            lib_times[k] = input.times[row];
+        }
         let inputs = vec![
-            (Self::pad_vecs(&input.lib_vecs, n, nb), vec![nb as i64, EMAX as i64]),
-            (Self::pad_vecs(&input.pred_vecs, p, pb), vec![pb as i64, EMAX as i64]),
+            (lib_vecs, vec![nb as i64, EMAX as i64]),
+            (Self::pad_vecs(input.vecs, p, pb), vec![pb as i64, EMAX as i64]),
             (Self::valid_mask(n, nb), vec![nb as i64]),
-            (Self::pad_col(&input.lib_targets, nb, 0.0), vec![nb as i64]),
-            (Self::pad_col(&input.pred_targets, pb, 0.0), vec![pb as i64]),
+            (lib_targets, vec![nb as i64]),
+            (Self::pad_col(input.targets, pb, 0.0), vec![pb as i64]),
             (Self::valid_mask(p, pb), vec![pb as i64]),
-            (Self::pad_col(&input.lib_times, nb, -1e9), vec![nb as i64]),
-            (Self::pad_col(&input.pred_times, pb, -2e9), vec![pb as i64]),
+            (lib_times, vec![nb as i64]),
+            (Self::pad_col(input.times, pb, -2e9), vec![pb as i64]),
             (Self::k_mask(input.e), vec![KMAX as i64]),
             (vec![input.theiler], vec![]),
         ];
@@ -110,9 +126,48 @@ impl ComputeBackend for XlaBackend {
             .service
             .execute(&meta.name, inputs)
             .expect("xla cross_map execution failed");
-        let rho = out[0][0];
-        let preds = out[1][..p].to_vec();
-        CrossMapOutput { rho, preds }
+        arena.preds.clear();
+        arena.preds.extend_from_slice(&out[1][..p]);
+        out[0][0]
+    }
+
+    fn simplex_tail_into(
+        &self,
+        dvals: &[f32],
+        tvals: &[f32],
+        pred_targets: &[f32],
+        e: usize,
+        preds: &mut Vec<f32>,
+    ) -> f32 {
+        let p = pred_targets.len();
+        let meta = match self.service.manifest().bucket_for(ArtifactKind::Simplex, p) {
+            Some(m) => m,
+            None => {
+                self.note_fallback("simplex_tail", p);
+                return self.fallback.simplex_tail_into(dvals, tvals, pred_targets, e, preds);
+            }
+        };
+        let pb = meta.p;
+        // pad panels with BIG distances / zero targets; padded rows are
+        // excluded from the Pearson by pred_valid anyway.
+        let mut dv = vec![crate::BIG; pb * KMAX];
+        dv[..p * KMAX].copy_from_slice(&dvals[..p * KMAX]);
+        let mut tv = vec![0.0f32; pb * KMAX];
+        tv[..p * KMAX].copy_from_slice(&tvals[..p * KMAX]);
+        let inputs = vec![
+            (dv, vec![pb as i64, KMAX as i64]),
+            (tv, vec![pb as i64, KMAX as i64]),
+            (Self::pad_col(pred_targets, pb, 0.0), vec![pb as i64]),
+            (Self::valid_mask(p, pb), vec![pb as i64]),
+            (Self::k_mask(e), vec![KMAX as i64]),
+        ];
+        let out = self
+            .service
+            .execute(&meta.name, inputs)
+            .expect("xla simplex execution failed");
+        preds.clear();
+        preds.extend_from_slice(&out[1][..p]);
+        out[0][0]
     }
 
     fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
@@ -144,41 +199,6 @@ impl ComputeBackend for XlaBackend {
         result
     }
 
-    fn simplex_tail(
-        &self,
-        panels: &NeighborPanels,
-        pred_targets: &[f32],
-        e: usize,
-    ) -> CrossMapOutput {
-        let p = panels.n_pred;
-        let meta = match self.service.manifest().bucket_for(ArtifactKind::Simplex, p) {
-            Some(m) => m,
-            None => {
-                self.note_fallback("simplex_tail", p);
-                return self.fallback.simplex_tail(panels, pred_targets, e);
-            }
-        };
-        let pb = meta.p;
-        // pad panels with BIG distances / zero targets; padded rows are
-        // excluded from the Pearson by pred_valid anyway.
-        let mut dv = vec![crate::BIG; pb * KMAX];
-        dv[..p * KMAX].copy_from_slice(&panels.dvals);
-        let mut tv = vec![0.0f32; pb * KMAX];
-        tv[..p * KMAX].copy_from_slice(&panels.tvals);
-        let inputs = vec![
-            (dv, vec![pb as i64, KMAX as i64]),
-            (tv, vec![pb as i64, KMAX as i64]),
-            (Self::pad_col(pred_targets, pb, 0.0), vec![pb as i64]),
-            (Self::valid_mask(p, pb), vec![pb as i64]),
-            (Self::k_mask(e), vec![KMAX as i64]),
-        ];
-        let out = self
-            .service
-            .execute(&meta.name, inputs)
-            .expect("xla simplex execution failed");
-        CrossMapOutput { rho: out[0][0], preds: out[1][..p].to_vec() }
-    }
-
     fn name(&self) -> &'static str {
         "xla"
     }
@@ -202,7 +222,8 @@ mod tests {
         assert_eq!(v, vec![1.0, 2.0, -9.0, -9.0]);
         let m = XlaBackend::valid_mask(2, 4);
         assert_eq!(m, vec![1.0, 1.0, 0.0, 0.0]);
-        let vecs = XlaBackend::pad_vecs(&vec![7.0; 2 * EMAX], 2, 3);
+        let data = [7.0f32; 2 * EMAX];
+        let vecs = XlaBackend::pad_vecs(&data, 2, 3);
         assert_eq!(vecs.len(), 3 * EMAX);
         assert!(vecs[2 * EMAX..].iter().all(|&x| x == 0.0));
     }

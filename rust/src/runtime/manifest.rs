@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context as _, Result};
+use crate::util::error::{bail, Context as _, Result};
 
 use crate::util::json::Json;
 use crate::{EMAX, KMAX};

@@ -16,6 +16,7 @@
 pub mod backend;
 pub mod manifest;
 pub mod service;
+pub mod xla;
 
 pub use backend::XlaBackend;
 pub use manifest::{ArtifactMeta, Manifest};

@@ -14,9 +14,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context as _, Result};
+use crate::util::error::{anyhow, Context as _, Result};
 
 use super::manifest::Manifest;
+use super::xla;
 
 /// One XLA invocation: named executable + positional inputs.
 pub struct ExecRequest {

@@ -7,7 +7,7 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::{bail, Context as _, Result};
+use crate::util::error::{bail, Context as _, Result};
 
 /// A named set of equal-length columns.
 #[derive(Clone, Debug, Default, PartialEq)]

@@ -1,0 +1,146 @@
+//! anyhow-lite: the string-chained error type the offline build cannot
+//! take from crates.io. API-compatible with the subset of `anyhow` this
+//! crate uses — `Result`, `anyhow!`, `bail!`, and the `Context` extension
+//! trait on both `Result` and `Option` — so call sites read identically.
+//!
+//! Context wrapping is eager (the chain is flattened into one message at
+//! wrap time). That loses lazy formatting but keeps the type a plain
+//! `String` wrapper: `Send + Sync + 'static`, no allocator tricks, no
+//! downcasting — all this crate's error paths are terminal reporting.
+
+use std::fmt;
+
+/// A flattened error message (optionally with a `: `-joined context chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from a preformatted message (what `anyhow!` expands to).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context layer, anyhow-style (`"context: cause"`).
+    pub fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible value (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow!`: format an [`Error`] value.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!`: early-return a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let err = fails_io().unwrap_err();
+        let text = err.to_string();
+        assert!(text.starts_with("reading config: "), "{text}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<usize> = None;
+        let err = missing.context("field absent").unwrap_err();
+        assert_eq!(err.to_string(), "field absent");
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        let f = || -> Result<()> { bail!("nope {}", "x") };
+        assert_eq!(f().unwrap_err().to_string(), "nope x");
+    }
+
+    #[test]
+    fn question_mark_converts_io() {
+        let f = || -> Result<String> { Ok(std::fs::read_to_string("/no/such")?) };
+        assert!(f().is_err());
+    }
+}

@@ -1,8 +1,10 @@
 //! Self-contained substrates the offline build cannot take from crates.io:
 //! a seedable PRNG, a JSON parser/writer, a CLI argument parser, summary
-//! statistics, and a miniature property-testing harness.
+//! statistics, an anyhow-style error type, and a miniature
+//! property-testing harness.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod linalg;
 pub mod prop;

@@ -4,9 +4,13 @@
 use std::sync::Arc;
 
 use parccm::ccm::backend::ComputeBackend;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{run_case, run_case_policy, Case, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
-use parccm::ccm::pipeline::{ccm_transform_rdd, table_pipeline, table_transform_rdd, CcmProblem};
+use parccm::ccm::pipeline::{
+    ccm_transform_rdd, table_pipeline, table_pipeline_mode, table_transform_rdd, CcmProblem,
+    TableMode,
+};
+use parccm::ccm::table::DistanceTable;
 use parccm::ccm::subsample::draw_samples;
 use parccm::engine::{Context, Deploy, EngineConfig};
 use parccm::native::NativeBackend;
@@ -134,6 +138,82 @@ fn async_table_case_overlaps_jobs() {
         }
     }
     assert!(overlapped, "async submission should overlap job spans: {jobs:?}");
+}
+
+#[test]
+fn truncated_table_matches_full_with_smaller_broadcast() {
+    // ISSUE 1 acceptance: truncated-table size_bytes is O(n * P) and the
+    // skills agree bit-exactly with the full layout through the whole
+    // engine stack.
+    let (x, y) = coupled_logistic(700, CoupledLogisticParams::default());
+    let ctx = Context::new(EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(6));
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let n = problem.emb.n;
+    let size = problem.size_bytes();
+    let pb = ctx.broadcast(problem, size);
+    let samples = draw_samples(&Rng::new(33), CcmParams::new(2, 1, 200), n, 24);
+
+    let full = table_pipeline_mode(&ctx, &pb, 6, TableMode::Full);
+    let prefix = DistanceTable::auto_prefix(n, 200);
+    let trunc = table_pipeline_mode(&ctx, &pb, 6, TableMode::Truncated { prefix });
+    assert!(prefix < n - 1, "auto prefix must truncate at this density");
+    assert_eq!(
+        trunc.size_bytes(),
+        n * prefix * 4 + n * parccm::EMAX * 4,
+        "O(n*P) + manifold"
+    );
+    assert!(trunc.size_bytes() < full.size_bytes() / 2);
+
+    let a = ctx.collect(&table_transform_rdd(
+        &ctx,
+        ctx.parallelize_with(samples.clone(), 6),
+        &pb,
+        &full,
+        backend(),
+    ));
+    let b = ctx.collect(&table_transform_rdd(
+        &ctx,
+        ctx.parallelize_with(samples, 6),
+        &pb,
+        &trunc,
+        backend(),
+    ));
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.sample_id, rb.sample_id);
+        assert_eq!(ra.rho.to_bits(), rb.rho.to_bits(), "truncation must be bit-exact");
+    }
+}
+
+#[test]
+fn driver_policies_agree_through_table_cases() {
+    let (x, y) = coupled_logistic(500, CoupledLogisticParams::default());
+    let s = Scenario {
+        series_len: 500,
+        r: 10,
+        ls: vec![80, 200],
+        es: vec![2],
+        taus: vec![1],
+        theiler: 0,
+        seed: 13,
+        partitions: 4,
+    };
+    let deploy = Deploy::Local { cores: 2 };
+    let sort = |mut rows: Vec<parccm::ccm::SkillRow>| {
+        rows.sort_by_key(|r| (r.params.l, r.sample_id));
+        rows
+    };
+    let full = sort(
+        run_case_policy(Case::A4, &s, &y, &x, deploy.clone(), backend(), TablePolicy::Full).skills,
+    );
+    for policy in [TablePolicy::TruncatedAuto, TablePolicy::Truncated(16)] {
+        let got =
+            sort(run_case_policy(Case::A4, &s, &y, &x, deploy.clone(), backend(), policy).skills);
+        assert_eq!(full.len(), got.len());
+        for (a, b) in full.iter().zip(&got) {
+            assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{policy:?} diverged");
+        }
+    }
 }
 
 #[test]

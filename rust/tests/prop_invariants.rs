@@ -11,7 +11,7 @@ use parccm::ccm::params::CcmParams;
 use parccm::ccm::pipeline::{ccm_transform_rdd, CcmProblem};
 use parccm::ccm::simplex::{pearson_f32, simplex_one};
 use parccm::ccm::subsample::draw_samples;
-use parccm::ccm::table::{library_mask, DistanceTable};
+use parccm::ccm::table::{DistanceTable, LibraryMask};
 use parccm::engine::{Context, Deploy, EngineConfig};
 use parccm::native::NativeBackend;
 use parccm::util::prop::check;
@@ -109,8 +109,9 @@ fn prop_table_query_equals_bruteforce() {
         let rows = sample_rng.sample_indices(emb.n, l);
         let theiler = if rng.below(3) == 0 { rng.below(5) as f32 } else { 0.0 };
 
-        let (mask, target_of) = library_mask(emb.n, &rows, &targets);
-        let panels = table.query_all(&mask, &target_of, theiler);
+        let mut mask = LibraryMask::new();
+        mask.set_from(emb.n, &rows);
+        let panels = table.query_all(&rows, &mask, &targets, theiler);
 
         let mut lib_vecs = Vec::new();
         let mut lib_targets = Vec::new();
@@ -128,6 +129,77 @@ fn prop_table_query_equals_bruteforce() {
                 return Err(format!(
                     "mismatch at {i}: table ({}, {}) vs brute ({}, {}) [e={e} tau={tau} l={l} theiler={theiler}]",
                     panels.dvals[i], panels.tvals[i], bd[i], bt[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_table_bit_identical_to_full_and_bruteforce() {
+    // The truncation contract (ISSUE 1): a truncated table — at ANY prefix
+    // length, over ANY library including sparse ones that exhaust the
+    // prefix and take the counted brute-force fallback — produces
+    // bit-identical neighbour panels to the full table, which in turn
+    // matches brute-force k-NN.
+    check("truncated == full == brute force", 12, |rng| {
+        let n_series = 120 + rng.below(220);
+        let y = random_series(rng, n_series);
+        let x = random_series(rng, n_series);
+        let e = 1 + rng.below(4);
+        let tau = 1 + rng.below(3);
+        let emb = Embedding::new(&y, e, tau);
+        let targets = emb.align_targets(&x);
+        let full = DistanceTable::build(&emb);
+
+        // library size from very sparse (fallback-heavy) to dense
+        let l = (1 + rng.below(emb.n)).min(emb.n);
+        let mut sample_rng = Rng::new(rng.next_u64());
+        let rows = sample_rng.sample_indices(emb.n, l);
+        let theiler = if rng.below(3) == 0 { rng.below(5) as f32 } else { 0.0 };
+        let mut mask = LibraryMask::new();
+        mask.set_from(emb.n, &rows);
+
+        // prefix from the minimum (KMAX) to nearly full
+        let prefix = KMAX + rng.below(emb.n);
+        let trunc = DistanceTable::build_truncated(&emb, prefix);
+        if trunc.row_len() > full.row_len() {
+            return Err(format!("prefix {} exceeds full row {}", trunc.row_len(), full.row_len()));
+        }
+
+        let a = full.query_all(&rows, &mask, &targets, theiler);
+        let b = trunc.query_all(&rows, &mask, &targets, theiler);
+        for i in 0..emb.n * KMAX {
+            if a.dvals[i].to_bits() != b.dvals[i].to_bits() || a.tvals[i] != b.tvals[i] {
+                return Err(format!(
+                    "truncated mismatch at {i}: full ({}, {}) vs truncated ({}, {}) \
+                     [e={e} tau={tau} l={l} prefix={prefix} theiler={theiler} fallbacks={}]",
+                    a.dvals[i],
+                    a.tvals[i],
+                    b.dvals[i],
+                    b.tvals[i],
+                    trunc.fallback_queries()
+                ));
+            }
+        }
+
+        // brute-force cross-check on the same library
+        let mut lib_vecs = Vec::new();
+        let mut lib_targets = Vec::new();
+        let mut lib_times = Vec::new();
+        for &r in &rows {
+            lib_vecs.extend_from_slice(emb.point(r));
+            lib_targets.push(targets[r]);
+            lib_times.push(emb.time_of(r) as f32);
+        }
+        let pred_times: Vec<f32> = (0..emb.n).map(|i| emb.time_of(i) as f32).collect();
+        let (bd, bt) =
+            knn_batch(&emb.vecs, &pred_times, &lib_vecs, &lib_targets, &lib_times, theiler);
+        for i in 0..emb.n * KMAX {
+            if (b.dvals[i] - bd[i]).abs() > 1e-4 || b.tvals[i] != bt[i] {
+                return Err(format!(
+                    "truncated vs brute mismatch at {i} [e={e} tau={tau} l={l} prefix={prefix}]"
                 ));
             }
         }
