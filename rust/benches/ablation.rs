@@ -44,6 +44,7 @@ fn main() {
     }
     t1.print();
     let _ = t1.save("results/bench_ablation_table.json");
+    let _ = t1.save("BENCH_ablation_table.json");
 
     // 2. async benefit vs topology width --------------------------------
     let mut t2 = TablePrinter::new("Ablation 2 — async benefit vs cluster width (sim makespan s)");
@@ -62,6 +63,7 @@ fn main() {
     }
     t2.print();
     let _ = t2.save("results/bench_ablation_async.json");
+    let _ = t2.save("BENCH_ablation_async.json");
 
     // 3. partition-count sensitivity -------------------------------------
     let mut t3 = TablePrinter::new("Ablation 3 — partitions per job (A5, sim makespan s)");
@@ -78,6 +80,7 @@ fn main() {
     }
     t3.print();
     let _ = t3.save("results/bench_ablation_partitions.json");
+    let _ = t3.save("BENCH_ablation_partitions.json");
 
     // 4. broadcast ship accounting ---------------------------------------
     let mut t4 = TablePrinter::new("Ablation 4 — broadcast ship share (A5, 5x4)");
@@ -91,4 +94,5 @@ fn main() {
     );
     t4.print();
     let _ = t4.save("results/bench_ablation_broadcast.json");
+    let _ = t4.save("BENCH_ablation_broadcast.json");
 }

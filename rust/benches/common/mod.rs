@@ -2,8 +2,10 @@
 //!
 //! All benches accept `-- --full` to run the paper-scale baseline scenario
 //! (series 4000, r 500); the default is the 1-core-scaled variant from
-//! `Scenario::scaled_baseline`. `--backend native|xla` picks the compute
-//! backend (default: xla when artifacts/ are present).
+//! `Scenario::scaled_baseline`, and `-- --tiny` shrinks to the smoke
+//! scenario so CI can *execute* every bench (not just compile it) in
+//! seconds while still emitting real `BENCH_*.json` artifacts.
+//! `--backend native|xla` picks the compute backend.
 
 use std::sync::Arc;
 
@@ -21,11 +23,23 @@ pub fn args() -> Args {
 pub fn scenario(args: &Args) -> Scenario {
     let mut s = if args.flag("full") {
         Scenario::paper_baseline()
+    } else if args.flag("tiny") {
+        Scenario::smoke()
     } else {
         Scenario::scaled_baseline()
     };
     s.seed = args.get_u64("seed", s.seed);
     s
+}
+
+/// Problem-size default honouring `--tiny` (benches that size themselves
+/// with `--n` instead of a full scenario).
+pub fn default_n(args: &Args, normal: usize, tiny: usize) -> usize {
+    if args.flag("tiny") {
+        tiny
+    } else {
+        normal
+    }
 }
 
 pub fn workload(s: &Scenario) -> (Vec<f32>, Vec<f32>) {

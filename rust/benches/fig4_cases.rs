@@ -108,6 +108,7 @@ fn main() {
 
     table.print();
     let _ = table.save("results/bench_fig4.json");
+    let _ = table.save("BENCH_fig4.json");
 
     println!("\nshape checks (paper expectations):");
     let a5 = table.rows[4].cells[1].1;

@@ -20,7 +20,7 @@ use parccm::util::rng::Rng;
 
 fn main() {
     let args = common::args();
-    let n_series = args.get_usize("n", 1000);
+    let n_series = args.get_usize("n", common::default_n(&args, 1000, 256));
     let (x, y) = coupled_logistic(n_series, CoupledLogisticParams::default());
     let emb = Embedding::new(&y, 2, 1);
     let targets = emb.align_targets(&x);
@@ -97,4 +97,5 @@ fn main() {
 
     table.print();
     let _ = table.save("results/bench_micro.json");
+    let _ = table.save("BENCH_micro.json");
 }

@@ -78,5 +78,6 @@ fn main() {
     }
     table.print();
     let _ = table.save("results/bench_redm.json");
+    let _ = table.save("BENCH_redm.json");
     println!("\n(paper: ~15x at the baseline scenario on the 5x4 cluster)");
 }

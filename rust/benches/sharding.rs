@@ -1,0 +1,94 @@
+//! Sharded distance-table bench (ISSUE 2 acceptance support): what
+//! splitting the broadcast into per-node row-range shards costs and buys.
+//!
+//! * broadcast footprint: monolithic table bytes vs the per-shard sum and
+//!   the largest single shard (what one node must hold);
+//! * DES ship accounting on the paper's 5x4 cluster: bytes and seconds
+//!   actually shipped per shard count (per-shard jobs let nodes skip
+//!   shards they never query);
+//! * query cost: sharded facade vs monolithic table walk over the same
+//!   libraries (should be within noise — same walk code).
+//!
+//! Run: `cargo bench --bench sharding [-- --tiny | --full]`
+//! Emits `BENCH_sharding.json` (and `results/BENCH_sharding.json`).
+
+mod common;
+
+use std::sync::Arc;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::bench::Bencher;
+use parccm::ccm::driver::{run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::table::{DistanceTable, LibraryMask};
+use parccm::engine::Deploy;
+use parccm::util::rng::Rng;
+
+fn main() {
+    let args = common::args();
+    let scenario = common::scenario(&args);
+    let backend = common::backend(&args);
+    let (x, y) = common::workload(&scenario);
+    let bencher = Bencher::new().warmup(1).samples(common::repeats(&args, 3));
+    let mut table = TablePrinter::new(format!(
+        "sharding (series={}, r={}, L={:?})",
+        scenario.series_len, scenario.r, scenario.ls
+    ));
+
+    // -- broadcast footprint + query cost, driver-side ------------------
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let n = problem.emb.n;
+    let min_l = scenario.ls.iter().copied().min().unwrap_or(1);
+    let prefix = DistanceTable::auto_prefix(n, min_l);
+    let mono = DistanceTable::build_truncated(&problem.emb, prefix);
+    let mut rng = Rng::new(17);
+    let rows = rng.sample_indices(n, min_l.min(n));
+    let mut mask = LibraryMask::new();
+    mask.set_from(n, &rows);
+    let mono_q = bencher.run("monolithic query_all (one sample)", || {
+        mono.query_all(&rows, &mask, &problem.targets, 0.0)
+    });
+
+    for shards in [1usize, 2, 4, 8] {
+        let sharded = mono.shard(shards);
+        let max_shard =
+            sharded.shards().iter().map(|s| s.size_bytes()).max().unwrap_or(0);
+        let shard_q = bencher.run(&format!("sharded({shards}) query_all"), || {
+            sharded.query_all(&rows, &mask, &problem.targets, 0.0)
+        });
+        table.push(
+            Row::new(format!("layout_shards_{shards}"))
+                .cell("mono_bytes", mono.size_bytes() as f64)
+                .cell("total_bytes", sharded.size_bytes() as f64)
+                .cell("max_node_bytes", max_shard as f64)
+                .cell("node_cut_x", mono.size_bytes() as f64 / max_shard.max(1) as f64)
+                .cell("query_s", shard_q.mean_s)
+                .cell("query_vs_mono_x", shard_q.mean_s / mono_q.mean_s.max(1e-12)),
+        );
+    }
+
+    // -- DES ship accounting through the full A4 driver -----------------
+    for shards in [1usize, 2, 4, 8] {
+        let rep = run_case_policy_sharded(
+            Case::A4,
+            &scenario,
+            &y,
+            &x,
+            Deploy::paper_cluster(),
+            Arc::clone(&backend),
+            TablePolicy::TruncatedAuto,
+            shards,
+        );
+        table.push(
+            Row::new(format!("des_shards_{shards}"))
+                .cell("sim_makespan_s", rep.report.sim_makespan_s)
+                .cell("ship_s", rep.report.sim_broadcast_ship_s)
+                .cell("ship_bytes", rep.report.sim_broadcast_ship_bytes as f64)
+                .cell("util", rep.report.sim_utilization),
+        );
+    }
+
+    table.print();
+    let _ = table.save("results/BENCH_sharding.json");
+    let _ = table.save("BENCH_sharding.json");
+}

@@ -83,5 +83,6 @@ fn main() {
 
     table.print();
     let _ = table.save("results/bench_table2.json");
+    let _ = table.save("BENCH_table2.json");
     println!("\n(paper: L-doubling -> 4.06x single / 1.11x parallel; tau-doubling -> 1.13x single)");
 }

@@ -50,8 +50,8 @@ fn owned_copy_assembly(problem: &CcmProblem, sample: &LibrarySample) -> usize {
 
 fn main() {
     let args = common::args();
-    let n_series = args.get_usize("n", 1000);
-    let r = args.get_usize("r", 25);
+    let n_series = args.get_usize("n", common::default_n(&args, 1000, 256));
+    let r = args.get_usize("r", common::default_n(&args, 25, 5));
     let (x, y) = coupled_logistic(n_series, CoupledLogisticParams::default());
     let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
     let n = problem.emb.n;

@@ -26,7 +26,7 @@
 //! distance scratch, the neighbour panels, the packed library bitmask for
 //! table-mode queries, and the prediction output buffer.
 
-use crate::ccm::table::LibraryMask;
+use crate::ccm::table::{LibraryMask, TableShard};
 use crate::{EMAX, KMAX};
 
 /// One cross-map evaluation, as a borrowed view of shared problem state:
@@ -174,6 +174,56 @@ pub trait ComputeBackend: Send + Sync {
     /// (row-major `[n, n]`) — the distance-indexing-table construction
     /// primitive (paper §3.2).
     fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32>;
+
+    /// Sharded table-mode partial cross-map: k-NN via `shard`'s sorted
+    /// prefixes for the query rows it owns (`[shard.row_lo, shard.row_hi)`),
+    /// then simplex over those rows only. Predictions for the shard's rows
+    /// are written to `preds` (cleared first). The caller concatenates
+    /// shard chunks in row order and computes Pearson over the full
+    /// prediction vector, which reproduces the unsharded table pipeline
+    /// bit-for-bit (simplex is row-independent; the walk code is shared).
+    ///
+    /// The default implementation runs in-process; a serializing backend
+    /// (e.g. `ccm::process::ProcessBackend`) overrides it to ship
+    /// `(shard wire id, targets wire id, lib_rows, e, theiler)` — a few KB
+    /// — to a worker process that holds the shard broadcast.
+    ///
+    /// Caveat: the default runs the *native* simplex kernel. For
+    /// `NativeBackend` (and the process workers, which compute natively)
+    /// sharded results are bit-identical to the monolithic table path. A
+    /// backend that overrides `simplex_tail_into` with different
+    /// arithmetic (a real XLA tail) would need to override this too to
+    /// keep sharded == monolithic at the bit level; the current
+    /// `XlaBackend` stub falls back to native, so the guarantee holds
+    /// everywhere in this build.
+    #[allow(clippy::too_many_arguments)]
+    fn shard_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+        preds: &mut Vec<f32>,
+    ) {
+        arena.mask.set_from(shard.n, lib_rows);
+        shard.query_rows_into(
+            lib_rows,
+            &arena.mask,
+            targets,
+            theiler,
+            &mut arena.dvals,
+            &mut arena.tvals,
+        );
+        crate::ccm::simplex::simplex_batch_into(
+            &arena.dvals,
+            &arena.tvals,
+            shard.num_rows(),
+            e,
+            preds,
+        );
+    }
 
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;

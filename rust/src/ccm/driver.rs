@@ -23,7 +23,8 @@ use std::time::Instant;
 use crate::ccm::backend::{ComputeBackend, TaskArena};
 use crate::ccm::params::Scenario;
 use crate::ccm::pipeline::{
-    ccm_transform_rdd, table_pipeline_mode, table_transform_rdd, CcmProblem, TableMode,
+    ccm_transform_rdd, combine_shard_chunks, sharded_table_pipeline_mode, sharded_transform_rdds,
+    table_pipeline_mode, table_transform_rdd, CcmProblem, TableMode,
 };
 use crate::ccm::result::SkillRow;
 use crate::ccm::subsample::draw_samples;
@@ -141,11 +142,30 @@ pub fn run_case_policy(
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
 ) -> CaseReport {
+    run_case_policy_sharded(case, scenario, effect, cause, deploy, backend, policy, 1)
+}
+
+/// [`run_case_policy`] with the distance table split into `shards`
+/// per-node row-range shards (table cases only; `shards <= 1` keeps the
+/// monolithic broadcast). Sharded runs submit one transform job per shard
+/// per (E, tau, L) and combine prediction chunks driver-side — skills are
+/// bit-identical to the monolithic table path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_case_policy_sharded(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploy: Deploy,
+    backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
+    shards: usize,
+) -> CaseReport {
     match case {
         Case::A1 => run_a1(scenario, effect, cause, backend),
         _ => {
             let (skills, mut reports) =
-                run_engine_case(case, scenario, effect, cause, &[deploy], backend, policy);
+                run_engine_case(case, scenario, effect, cause, &[deploy], backend, policy, shards);
             CaseReport { case, skills, report: reports.remove(0) }
         }
     }
@@ -176,13 +196,29 @@ pub fn run_case_multi_policy(
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+    run_case_multi_policy_sharded(case, scenario, effect, cause, deploys, backend, policy, 1)
+}
+
+/// [`run_case_multi_policy`] with a sharded distance table (see
+/// [`run_case_policy_sharded`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_case_multi_policy_sharded(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploys: &[Deploy],
+    backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
+    shards: usize,
+) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
     match case {
         Case::A1 => {
             let rep = run_a1(scenario, effect, cause, backend);
             let reports = deploys.iter().map(|_| rep.report.clone()).collect();
             (rep.skills, reports)
         }
-        _ => run_engine_case(case, scenario, effect, cause, deploys, backend, policy),
+        _ => run_engine_case(case, scenario, effect, cause, deploys, backend, policy, shards),
     }
 }
 
@@ -222,6 +258,7 @@ fn run_a1(
             sim_makespan_s: wall,
             sim_utilization: 1.0,
             sim_broadcast_ship_s: 0.0,
+            sim_broadcast_ship_bytes: 0,
             topology: "single-thread".to_string(),
         },
     }
@@ -229,6 +266,7 @@ fn run_a1(
 
 /// Cases A2–A5: engine-scheduled pipelines. Executes once; returns one
 /// [`ExecutionReport`] per requested deploy (DES replays of the same log).
+#[allow(clippy::too_many_arguments)]
 fn run_engine_case(
     case: Case,
     scenario: &Scenario,
@@ -237,6 +275,7 @@ fn run_engine_case(
     deploys: &[Deploy],
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
+    shards: usize,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
     let ctx = Context::new(
         EngineConfig::new(deploys[0].clone()).with_default_parallelism(scenario.partitions),
@@ -249,8 +288,11 @@ fn run_engine_case(
     // affects the subsample draws. In the asynchronous cases (§3.3 /
     // Fig. 3) ALL combinations' transform jobs are submitted before any is
     // harvested, so independent pipelines overlap across the whole grid;
-    // the synchronous cases block on every action.
+    // the synchronous cases block on every action. With a sharded table
+    // the transform is one job per shard; prediction chunks are combined
+    // driver-side into skills (bit-identical — see ccm::pipeline docs).
     let mut pending = Vec::new();
+    let mut pending_chunks = Vec::new();
     for &e in &scenario.es {
         for &tau in &scenario.taus {
             let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
@@ -261,17 +303,41 @@ fn run_engine_case(
             // The distance indexing table is a hard dependency of its
             // transform jobs: its (internally parallel) pipeline blocks the
             // driver, exactly like the barrier in the paper's Fig. 2/3 DAG.
-            let table_b = if case.uses_table() {
-                let mode = policy.mode_for(n_manifold, min_l);
+            let mode = policy.mode_for(n_manifold, min_l);
+            let sharded_b = if case.uses_table() && shards > 1 {
+                Some(sharded_table_pipeline_mode(
+                    &ctx,
+                    &problem_b,
+                    scenario.partitions,
+                    mode,
+                    shards,
+                ))
+            } else {
+                None
+            };
+            let table_b = if case.uses_table() && sharded_b.is_none() {
                 Some(table_pipeline_mode(&ctx, &problem_b, scenario.partitions, mode))
             } else {
                 None
             };
 
+            let mut sync_chunks = Vec::new();
+            let mut async_chunk_futs = Vec::new();
             for &l in &scenario.ls {
                 let params = crate::ccm::params::CcmParams::new(e, tau, l);
                 let samples = draw_samples(&master, params, n_manifold, scenario.r);
                 let rdd = ctx.parallelize_with(samples, scenario.partitions);
+                if let Some(sharded) = &sharded_b {
+                    let b = Arc::clone(&backend);
+                    for chunk_rdd in sharded_transform_rdds(&ctx, &rdd, &problem_b, sharded, b) {
+                        if case.is_async() {
+                            async_chunk_futs.push(ctx.collect_async(&chunk_rdd));
+                        } else {
+                            sync_chunks.extend(ctx.collect(&chunk_rdd));
+                        }
+                    }
+                    continue;
+                }
                 let skill_rdd = match &table_b {
                     Some(table) => {
                         table_transform_rdd(&ctx, rdd, &problem_b, table, Arc::clone(&backend))
@@ -284,10 +350,23 @@ fn run_engine_case(
                     skills.extend(ctx.collect(&skill_rdd));
                 }
             }
+            if !sync_chunks.is_empty() {
+                skills.extend(combine_shard_chunks(sync_chunks, problem_b.value()));
+            }
+            if !async_chunk_futs.is_empty() {
+                pending_chunks.push((problem_b.clone(), async_chunk_futs));
+            }
         }
     }
     for fa in pending {
         skills.extend(fa.get());
+    }
+    for (problem_b, futs) in pending_chunks {
+        let mut chunks = Vec::new();
+        for fa in futs {
+            chunks.extend(fa.get());
+        }
+        skills.extend(combine_shard_chunks(chunks, problem_b.value()));
     }
 
     let reports = deploys.iter().map(|d| ctx.report_for(d.clone())).collect();
@@ -363,6 +442,51 @@ mod tests {
                     a.4,
                     (a.0, a.1, a.2, a.3)
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_table_cases_agree_with_a1() {
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let deploy = Deploy::Local { cores: 2 };
+        let a1 = run_case(Case::A1, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let expected = sorted_skills(a1.skills);
+        // monolithic-table reference: sharded must be bit-identical to it
+        let mono = run_case_policy(
+            Case::A4,
+            &scenario,
+            &y,
+            &x,
+            deploy.clone(),
+            Arc::clone(&backend),
+            TablePolicy::TruncatedAuto,
+        );
+        let mono = sorted_skills(mono.skills);
+        for (case, shards) in [(Case::A4, 2), (Case::A4, 5), (Case::A5, 3)] {
+            let rep = run_case_policy_sharded(
+                case,
+                &scenario,
+                &y,
+                &x,
+                deploy.clone(),
+                Arc::clone(&backend),
+                TablePolicy::TruncatedAuto,
+                shards,
+            );
+            let got = sorted_skills(rep.skills);
+            assert_eq!(got.len(), expected.len(), "{case:?}/{shards} shards skill count");
+            for ((a, b), m) in expected.iter().zip(&got).zip(&mono) {
+                assert_eq!((a.0, a.1, a.2, a.3), (b.0, b.1, b.2, b.3));
+                assert!(
+                    (a.4 - b.4).abs() < 1e-5,
+                    "{case:?}/{shards} shards: rho {} vs A1 {}",
+                    b.4,
+                    a.4
+                );
+                assert_eq!(b.4, m.4, "{case:?}/{shards} shards: must equal monolithic table");
             }
         }
     }

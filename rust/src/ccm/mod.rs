@@ -20,6 +20,11 @@
 //!   brute-force k-NN with filtered lookups;
 //! * [`driver`] — §4/Table 1, the five implementation levels A1–A5
 //!   (sync/async x with/without the table, plus the engine-free A1).
+//!
+//! Beyond the paper, [`table::ShardedTable`] splits the distance index
+//! into per-node row-range shards and [`process::ProcessBackend`] ships
+//! index-only tasks to forked worker processes over a versioned JSON wire
+//! protocol — the genuinely distributed deployment of the same pipelines.
 
 pub mod backend;
 pub mod convergence;
@@ -30,6 +35,7 @@ pub mod knn;
 pub mod lagmap;
 pub mod params;
 pub mod pipeline;
+pub mod process;
 pub mod result;
 pub mod select;
 pub mod simplex;
@@ -42,5 +48,6 @@ pub use driver::{Case, CaseReport, TablePolicy};
 pub use embedding::Embedding;
 pub use params::{CcmParams, Scenario};
 pub use pipeline::TableMode;
+pub use process::ProcessBackend;
 pub use result::{SkillRow, SkillSummary};
-pub use table::{DistanceTable, LibraryMask};
+pub use table::{DistanceTable, LibraryMask, ShardedTable, TableShard};

@@ -19,13 +19,30 @@
 //! per-sample work besides the kernels is the inherent O(L) library
 //! gather (brute-force mode) or the O(n/64) mask refill (table mode).
 
+//! # Sharded table pipeline
+//!
+//! [`sharded_table_pipeline_mode`] builds the same parallel per-row
+//! sorted lists but assembles them into per-node [`TableShard`]s, each
+//! registered as its **own** broadcast — the DES then prices shard ships
+//! individually instead of charging every node the whole table. The
+//! transform becomes one job per shard ([`sharded_transform_rdds`]): a
+//! task computes the simplex predictions for its shard's query rows only
+//! (`ComputeBackend::shard_chunk_into` — in-process by default, or across
+//! a process boundary via `ccm::process::ProcessBackend`), and the driver
+//! concatenates chunks in row order and applies Pearson
+//! ([`combine_shard_chunks`]) — arithmetic identical to the unsharded
+//! tail, so skills are bit-identical.
+
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
 use crate::ccm::embedding::Embedding;
+use crate::ccm::params::CcmParams;
 use crate::ccm::result::SkillRow;
+use crate::ccm::simplex::pearson_f32;
 use crate::ccm::subsample::LibrarySample;
-use crate::ccm::table::DistanceTable;
+use crate::ccm::table::{shard_bounds, DistanceTable, ShardedTable, TableShard};
 use crate::engine::{Broadcast, Context, Rdd};
 
 /// The cross-mapping problem shared by every task: the effect-series
@@ -149,6 +166,173 @@ pub fn table_pipeline(
     partitions: usize,
 ) -> Broadcast<DistanceTable> {
     table_pipeline_mode(ctx, problem, partitions, TableMode::Full)
+}
+
+/// The distance table as per-shard broadcasts: shard `s` is its own
+/// [`Broadcast<TableShard>`] sized at its own bytes, so the DES (and a
+/// real cluster) ships a node only the shards its tasks query.
+pub struct ShardedTableBroadcast {
+    shards: Vec<Broadcast<TableShard>>,
+    pub n: usize,
+    pub row_len: usize,
+}
+
+impl ShardedTableBroadcast {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Broadcast<TableShard>] {
+        &self.shards
+    }
+
+    /// Sum of per-shard broadcast bytes.
+    pub fn total_size_bytes(&self) -> usize {
+        self.shards.iter().map(|b| b.size_bytes()).sum()
+    }
+
+    /// A query facade over the same `Arc<TableShard>`s the broadcasts hold
+    /// (no duplication) — the driver-side view for tests and local use.
+    pub fn facade(&self) -> ShardedTable {
+        ShardedTable::from_shards(self.shards.iter().map(Broadcast::share).collect())
+    }
+}
+
+/// §3.2 construction, sharded: the same parallel per-row build, assembled
+/// into `num_shards` contiguous row-range shards, each broadcast
+/// separately. Blocking, like [`table_pipeline_mode`].
+pub fn sharded_table_pipeline_mode(
+    ctx: &Context,
+    problem: &Broadcast<CcmProblem>,
+    partitions: usize,
+    mode: TableMode,
+    num_shards: usize,
+) -> ShardedTableBroadcast {
+    let n = problem.value().emb.n;
+    let row_len = match mode {
+        TableMode::Full => n.saturating_sub(1),
+        TableMode::Truncated { prefix } => prefix.min(n.saturating_sub(1)),
+    };
+    let rows_rdd = ctx.parallelize_with((0..n).collect::<Vec<usize>>(), partitions);
+    let prob = problem.clone();
+    let sorted = rows_rdd.uses_broadcast(&prob).map_partitions(move |_p, rows| {
+        let emb = &prob.value().emb;
+        rows.into_iter()
+            .map(|i| (i, DistanceTable::sorted_row_prefix(emb, i, row_len)))
+            .collect()
+    });
+    let mut rows: Vec<(usize, Vec<u32>)> = ctx.collect(&sorted);
+    rows.sort_by_key(|(i, _)| *i);
+    let mut rows: Vec<Vec<u32>> = rows.into_iter().map(|(_, r)| r).collect();
+    let emb = &problem.value().emb;
+    let mut shards = Vec::new();
+    for (sid, (lo, hi)) in shard_bounds(n, num_shards).into_iter().enumerate().rev() {
+        let shard = TableShard::assemble_with(emb, sid, lo, rows.split_off(lo), row_len);
+        debug_assert_eq!(shard.row_hi, hi);
+        let size = shard.size_bytes();
+        shards.push(ctx.broadcast(shard, size));
+    }
+    shards.reverse();
+    ShardedTableBroadcast { shards, n, row_len }
+}
+
+/// One sample's simplex predictions for one shard's query rows — the unit
+/// the sharded transform jobs emit (a few KB: `row_hi - row_lo` floats).
+#[derive(Clone, Debug)]
+pub struct PredChunk {
+    pub params: CcmParams,
+    pub sample_id: usize,
+    pub shard_id: usize,
+    pub row_lo: usize,
+    pub preds: Vec<f32>,
+}
+
+/// §3.2 use, sharded: ONE JOB PER SHARD over the same samples RDD. Each
+/// job's lineage depends only on the problem and *its* shard broadcast,
+/// so ship costs are attributed per shard; each task emits prediction
+/// chunks for its shard's query rows via `ComputeBackend::shard_chunk_into`.
+/// The caller harvests all jobs and feeds [`combine_shard_chunks`].
+pub fn sharded_transform_rdds(
+    _ctx: &Context,
+    samples: &Rdd<LibrarySample>,
+    problem: &Broadcast<CcmProblem>,
+    table: &ShardedTableBroadcast,
+    backend: Arc<dyn ComputeBackend>,
+) -> Vec<Rdd<PredChunk>> {
+    // the samples RDD is evaluated once per shard job; cache so the draws
+    // happen once (they are cheap but this keeps task logs clean)
+    let samples = samples.cache();
+    table
+        .shards()
+        .iter()
+        .map(|shard_b| {
+            let problem = problem.clone();
+            let shard_b2 = shard_b.clone();
+            let backend = Arc::clone(&backend);
+            samples
+                .uses_broadcast(&problem)
+                .uses_broadcast(shard_b)
+                .named(format!("table_shard_{}.transform", shard_b.value().shard_id))
+                .map_partitions(move |_p, samples| {
+                    let prob = problem.value();
+                    let shard = shard_b2.value();
+                    let mut arena = TaskArena::new();
+                    samples
+                        .into_iter()
+                        .map(|s| {
+                            let mut preds = Vec::new();
+                            backend.shard_chunk_into(
+                                shard,
+                                &prob.targets,
+                                prob.theiler,
+                                &s.rows,
+                                s.params.e,
+                                &mut arena,
+                                &mut preds,
+                            );
+                            PredChunk {
+                                params: s.params,
+                                sample_id: s.sample_id,
+                                shard_id: shard.shard_id,
+                                row_lo: shard.row_lo,
+                                preds,
+                            }
+                        })
+                        .collect()
+                })
+        })
+        .collect()
+}
+
+/// Driver-side combine: group chunks per (params, sample), concatenate in
+/// row order, Pearson against the problem's targets. The concatenated
+/// vector is element-for-element the unsharded pipeline's prediction
+/// vector, and `pearson_f32` runs the same summation order — bit-identical
+/// skills. Output is sorted by (E, tau, L, sample).
+pub fn combine_shard_chunks(chunks: Vec<PredChunk>, problem: &CcmProblem) -> Vec<SkillRow> {
+    let n = problem.targets.len();
+    let mut groups: HashMap<(usize, usize, usize, usize), Vec<PredChunk>> = HashMap::new();
+    for c in chunks {
+        let key = (c.params.e, c.params.tau, c.params.l, c.sample_id);
+        groups.entry(key).or_default().push(c);
+    }
+    let mut out: Vec<SkillRow> = groups
+        .into_values()
+        .map(|mut chunks| {
+            chunks.sort_by_key(|c| c.row_lo);
+            let params = chunks[0].params;
+            let sample_id = chunks[0].sample_id;
+            let mut preds = Vec::with_capacity(n);
+            for c in &chunks {
+                assert_eq!(c.row_lo, preds.len(), "missing or overlapping shard chunk");
+                preds.extend_from_slice(&c.preds);
+            }
+            assert_eq!(preds.len(), n, "shard chunks do not cover the manifold");
+            SkillRow { params, sample_id, rho: pearson_f32(&preds, &problem.targets) }
+        })
+        .collect();
+    out.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
+    out
 }
 
 /// §3.2 (use) — the CCM transform pipeline with the broadcast table:
@@ -304,6 +488,116 @@ mod tests {
         );
         // the DES charges what the broadcast declares: O(n*P) + manifold
         assert_eq!(trunc.size_bytes(), n * prefix * 4 + n * crate::EMAX * 4);
+    }
+
+    #[test]
+    fn sharded_table_mode_bit_identical_to_unsharded() {
+        let (ctx, problem, samples) = setup();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let n = problem.value().emb.n;
+        let mode = TableMode::Truncated { prefix: DistanceTable::auto_prefix(n, 150) };
+
+        // unsharded reference skills
+        let table = table_pipeline_mode(&ctx, &problem, 4, mode);
+        let rdd = ctx.parallelize_with(samples.clone(), 4);
+        let mut want =
+            ctx.collect(&table_transform_rdd(&ctx, rdd, &problem, &table, Arc::clone(&backend)));
+        want.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
+
+        for shards in [1usize, 3, 7] {
+            let sharded = sharded_table_pipeline_mode(&ctx, &problem, 4, mode, shards);
+            assert_eq!(sharded.num_shards(), shards);
+            assert_eq!(sharded.row_len, table.value().row_len());
+            let rdd = ctx.parallelize_with(samples.clone(), 4);
+            let mut chunks = Vec::new();
+            for chunk_rdd in
+                sharded_transform_rdds(&ctx, &rdd, &problem, &sharded, Arc::clone(&backend))
+            {
+                chunks.extend(ctx.collect(&chunk_rdd));
+            }
+            let got = combine_shard_chunks(chunks, problem.value());
+            assert_eq!(got.len(), want.len(), "{shards} shards");
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.sample_id, b.sample_id);
+                assert_eq!(a.rho, b.rho, "{shards} shards: rho must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_jobs_depend_on_their_own_shard_only() {
+        let (ctx, problem, samples) = setup();
+        let sharded =
+            sharded_table_pipeline_mode(&ctx, &problem, 4, TableMode::Full, 3);
+        let rdd = ctx.parallelize_with(samples, 4);
+        let chunk_rdds =
+            sharded_transform_rdds(&ctx, &rdd, &problem, &sharded, Arc::new(NativeBackend));
+        for r in &chunk_rdds {
+            let _ = ctx.collect(r);
+        }
+        let jobs = ctx.events().jobs();
+        let shard_jobs: Vec<_> =
+            jobs.iter().filter(|j| j.name.contains(".transform")).collect();
+        assert_eq!(shard_jobs.len(), 3);
+        for (s, job) in shard_jobs.iter().enumerate() {
+            let b = &sharded.shards()[s];
+            assert_eq!(job.name, format!("table_shard_{s}.transform"));
+            assert_eq!(job.broadcast_deps.len(), 2, "problem + own shard only");
+            assert!(job.broadcast_deps.contains(&(b.id(), b.size_bytes())));
+            // no dependency on any *other* shard broadcast
+            for (o, other) in sharded.shards().iter().enumerate() {
+                if o != s {
+                    assert!(job.broadcast_deps.iter().all(|(id, _)| *id != other.id()));
+                }
+            }
+        }
+        // per-shard sizes partition the index: they sum to facade total
+        let total: usize = sharded.shards().iter().map(|b| b.size_bytes()).sum();
+        assert_eq!(total, sharded.total_size_bytes());
+        assert_eq!(total, sharded.facade().size_bytes());
+    }
+
+    #[test]
+    fn facade_shares_broadcast_shards() {
+        let (ctx, problem, _samples) = setup();
+        let sharded = sharded_table_pipeline_mode(&ctx, &problem, 4, TableMode::Full, 2);
+        let facade = sharded.facade();
+        for (b, s) in sharded.shards().iter().zip(facade.shards()) {
+            assert!(std::ptr::eq(b.value(), s.as_ref()), "facade must alias broadcasts");
+        }
+    }
+
+    #[test]
+    fn combine_rejects_missing_chunk() {
+        let (_ctx, problem, samples) = setup();
+        let prob = problem.value();
+        let table = DistanceTable::build(&prob.emb);
+        let sharded = table.shard(2);
+        let backend = NativeBackend;
+        let mut arena = TaskArena::new();
+        let s = &samples[0];
+        let shard = &sharded.shards()[1]; // only the second shard's chunk
+        let mut preds = Vec::new();
+        backend.shard_chunk_into(
+            shard,
+            &prob.targets,
+            prob.theiler,
+            &s.rows,
+            s.params.e,
+            &mut arena,
+            &mut preds,
+        );
+        let chunk = PredChunk {
+            params: s.params,
+            sample_id: s.sample_id,
+            shard_id: shard.shard_id,
+            row_lo: shard.row_lo,
+            preds,
+        };
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            combine_shard_chunks(vec![chunk], prob)
+        }));
+        assert!(got.is_err(), "a missing shard chunk must not silently pass");
     }
 
     #[test]

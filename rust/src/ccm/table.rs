@@ -30,8 +30,24 @@
 //! Memory: `n * row_len` u32 indices. Neighbour *distances* are recomputed
 //! on the fly for accepted entries only (k per query), saving 8x memory
 //! over storing them.
+//!
+//! # Sharded mode
+//!
+//! Rows are independent, so the table splits mechanically into contiguous
+//! row-range shards ([`TableShard`]): shard `s` of `S` stores the sorted
+//! prefixes for query rows `[s*n/S, (s+1)*n/S)` plus the `O(n * EMAX)`
+//! manifold copy every shard needs for distance recomputation and the
+//! sparse-library fallback. No shard holds another shard's index — the
+//! `O(n * row_len)` bulk of the broadcast is partitioned, which is what
+//! lets a multi-node deployment ship each node only the shards it queries
+//! (the DES prices per-shard broadcasts individually). [`ShardedTable`]
+//! is the facade that routes a query row to its owning shard; shard
+//! queries run the *same* walk/fallback code as the unsharded table, so
+//! results are bit-identical by construction (property-tested in
+//! `tests/prop_invariants.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::ccm::backend::NeighborPanels;
 use crate::ccm::embedding::Embedding;
@@ -220,14 +236,7 @@ impl DistanceTable {
     /// Squared distance between manifold rows (recomputed, EMAX-padded).
     #[inline]
     fn sq_dist(&self, i: usize, j: usize) -> f32 {
-        let a = &self.vecs[i * EMAX..(i + 1) * EMAX];
-        let b = &self.vecs[j * EMAX..(j + 1) * EMAX];
-        let mut d = 0.0f32;
-        for l in 0..EMAX {
-            let diff = a[l] - b[l];
-            d += diff * diff;
-        }
-        d
+        sq_dist_flat(&self.vecs, i, j)
     }
 
     /// k-NN of manifold row `qi` restricted to library members, by walking
@@ -236,6 +245,7 @@ impl DistanceTable {
     /// aligned target column — only member slots are read). `lib_rows`
     /// backs the truncated-prefix fallback. Matches brute-force semantics:
     /// Theiler exclusion on original time, KMAX slots padded with BIG/0.
+    #[allow(clippy::too_many_arguments)]
     pub fn query_into(
         &self,
         qi: usize,
@@ -246,82 +256,21 @@ impl DistanceTable {
         out_d: &mut [f32],
         out_t: &mut [f32],
     ) {
-        debug_assert!(out_d.len() >= KMAX && out_t.len() >= KMAX);
         debug_assert_eq!(mask.n(), self.n);
-        out_d[..KMAX].fill(BIG);
-        out_t[..KMAX].fill(0.0);
         let row = &self.neighbors[qi * self.row_len..(qi + 1) * self.row_len];
-        let qt = (self.t0 + qi) as f32;
-        // The row never lists qi itself, so a member query point can see
-        // at most members-1 rows: count against the reachable total.
-        let reachable = mask.members() - usize::from(mask.contains(qi));
-        let mut found = 0usize;
-        let mut seen = 0usize;
-        for &j in row {
-            let j = j as usize;
-            if !mask.contains(j) {
-                continue;
-            }
-            seen += 1;
-            if theiler >= 0.0 && ((self.t0 + j) as f32 - qt).abs() <= theiler {
-                continue;
-            }
-            out_d[found] = self.sq_dist(qi, j);
-            out_t[found] = targets[j];
-            found += 1;
-            if found == KMAX {
-                return;
-            }
-        }
-        if seen == reachable {
-            // every member lay inside the stored prefix: the padded result
-            // is exactly what the full walk would produce.
-            return;
-        }
-        // Truncated prefix exhausted with members unseen: exact counted
-        // fallback — brute-force k-NN over the library rows for this query.
-        self.fallbacks.fetch_add(1, Ordering::Relaxed);
-        self.brute_query_into(qi, lib_rows, targets, theiler, out_d, out_t);
-    }
-
-    /// Exact brute-force k-NN over `lib_rows` for query row `qi`,
-    /// reproducing the sorted-walk semantics: self excluded, Theiler on
-    /// original time, ties to the lower manifold row (lib_rows ascending +
-    /// strict-less insertion).
-    fn brute_query_into(
-        &self,
-        qi: usize,
-        lib_rows: &[usize],
-        targets: &[f32],
-        theiler: f32,
-        out_d: &mut [f32],
-        out_t: &mut [f32],
-    ) {
-        out_d[..KMAX].fill(BIG);
-        out_t[..KMAX].fill(0.0);
-        let qt = (self.t0 + qi) as f32;
-        let mut worst = BIG;
-        for &j in lib_rows {
-            if j == qi {
-                continue; // the sorted row never lists the point itself
-            }
-            if theiler >= 0.0 && ((self.t0 + j) as f32 - qt).abs() <= theiler {
-                continue;
-            }
-            let d = self.sq_dist(qi, j);
-            if d >= worst {
-                continue;
-            }
-            let mut pos = KMAX - 1;
-            while pos > 0 && d < out_d[pos - 1] {
-                out_d[pos] = out_d[pos - 1];
-                out_t[pos] = out_t[pos - 1];
-                pos -= 1;
-            }
-            out_d[pos] = d;
-            out_t[pos] = targets[j];
-            worst = out_d[KMAX - 1];
-        }
+        walk_row_into(
+            row,
+            qi,
+            &self.vecs,
+            self.t0,
+            lib_rows,
+            mask,
+            targets,
+            theiler,
+            &self.fallbacks,
+            out_d,
+            out_t,
+        );
     }
 
     /// Batch query into reused flat `[n, KMAX]` buffers (the standard CCM
@@ -355,6 +304,499 @@ impl DistanceTable {
                 &mut dvals[qi * KMAX..(qi + 1) * KMAX],
                 &mut tvals[qi * KMAX..(qi + 1) * KMAX],
             );
+        }
+    }
+
+    /// Allocating batch query (tests and one-off analysis).
+    pub fn query_all(
+        &self,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+    ) -> NeighborPanels {
+        let mut dvals = Vec::new();
+        let mut tvals = Vec::new();
+        self.query_all_into(lib_rows, mask, targets, theiler, &mut dvals, &mut tvals);
+        NeighborPanels { dvals, tvals, n_pred: self.n }
+    }
+
+    /// Split into `num_shards` contiguous row-range shards (clamped to at
+    /// least one row per shard). Each shard copies its slice of the
+    /// neighbour index plus the shared manifold; together the shards
+    /// reproduce this table's queries bit-for-bit.
+    pub fn shard(&self, num_shards: usize) -> ShardedTable {
+        let bounds = shard_bounds(self.n, num_shards);
+        let shards = bounds
+            .into_iter()
+            .enumerate()
+            .map(|(sid, (lo, hi))| {
+                Arc::new(TableShard {
+                    shard_id: sid,
+                    row_lo: lo,
+                    row_hi: hi,
+                    neighbors: self.neighbors[lo * self.row_len..hi * self.row_len].to_vec(),
+                    row_len: self.row_len,
+                    n: self.n,
+                    vecs: self.vecs.clone(),
+                    t0: self.t0,
+                    fallbacks: AtomicU64::new(0),
+                    wire_key: OnceLock::new(),
+                })
+            })
+            .collect();
+        ShardedTable { shards, n: self.n, row_len: self.row_len }
+    }
+}
+
+/// Squared EMAX-padded distance between rows `i` and `j` of a flat
+/// `[n, EMAX]` manifold — the one distance kernel every query path shares.
+#[inline]
+fn sq_dist_flat(vecs: &[f32], i: usize, j: usize) -> f32 {
+    let a = &vecs[i * EMAX..(i + 1) * EMAX];
+    let b = &vecs[j * EMAX..(j + 1) * EMAX];
+    let mut d = 0.0f32;
+    for l in 0..EMAX {
+        let diff = a[l] - b[l];
+        d += diff * diff;
+    }
+    d
+}
+
+/// The sorted-prefix walk shared by [`DistanceTable`] and [`TableShard`]
+/// (one implementation → shard queries are bit-identical by construction).
+/// `row` is query row `qi`'s stored neighbour prefix (global manifold
+/// indices ascending by distance); see [`DistanceTable::query_into`] for
+/// the contract.
+#[allow(clippy::too_many_arguments)]
+fn walk_row_into(
+    row: &[u32],
+    qi: usize,
+    vecs: &[f32],
+    t0: usize,
+    lib_rows: &[usize],
+    mask: &LibraryMask,
+    targets: &[f32],
+    theiler: f32,
+    fallbacks: &AtomicU64,
+    out_d: &mut [f32],
+    out_t: &mut [f32],
+) {
+    debug_assert!(out_d.len() >= KMAX && out_t.len() >= KMAX);
+    out_d[..KMAX].fill(BIG);
+    out_t[..KMAX].fill(0.0);
+    let qt = (t0 + qi) as f32;
+    // The row never lists qi itself, so a member query point can see
+    // at most members-1 rows: count against the reachable total.
+    let reachable = mask.members() - usize::from(mask.contains(qi));
+    let mut found = 0usize;
+    let mut seen = 0usize;
+    for &j in row {
+        let j = j as usize;
+        if !mask.contains(j) {
+            continue;
+        }
+        seen += 1;
+        if theiler >= 0.0 && ((t0 + j) as f32 - qt).abs() <= theiler {
+            continue;
+        }
+        out_d[found] = sq_dist_flat(vecs, qi, j);
+        out_t[found] = targets[j];
+        found += 1;
+        if found == KMAX {
+            return;
+        }
+    }
+    if seen == reachable {
+        // every member lay inside the stored prefix: the padded result
+        // is exactly what the full walk would produce.
+        return;
+    }
+    // Truncated prefix exhausted with members unseen: exact counted
+    // fallback — brute-force k-NN over the library rows for this query.
+    fallbacks.fetch_add(1, Ordering::Relaxed);
+    brute_scan_into(vecs, t0, qi, lib_rows, targets, theiler, out_d, out_t);
+}
+
+/// Exact brute-force k-NN over `lib_rows` for query row `qi`, reproducing
+/// the sorted-walk semantics: self excluded, Theiler on original time,
+/// ties to the lower manifold row (lib_rows ascending + strict-less
+/// insertion).
+#[allow(clippy::too_many_arguments)]
+fn brute_scan_into(
+    vecs: &[f32],
+    t0: usize,
+    qi: usize,
+    lib_rows: &[usize],
+    targets: &[f32],
+    theiler: f32,
+    out_d: &mut [f32],
+    out_t: &mut [f32],
+) {
+    out_d[..KMAX].fill(BIG);
+    out_t[..KMAX].fill(0.0);
+    let qt = (t0 + qi) as f32;
+    let mut worst = BIG;
+    for &j in lib_rows {
+        if j == qi {
+            continue; // the sorted row never lists the point itself
+        }
+        if theiler >= 0.0 && ((t0 + j) as f32 - qt).abs() <= theiler {
+            continue;
+        }
+        let d = sq_dist_flat(vecs, qi, j);
+        if d >= worst {
+            continue;
+        }
+        let mut pos = KMAX - 1;
+        while pos > 0 && d < out_d[pos - 1] {
+            out_d[pos] = out_d[pos - 1];
+            out_t[pos] = out_t[pos - 1];
+            pos -= 1;
+        }
+        out_d[pos] = d;
+        out_t[pos] = targets[j];
+        worst = out_d[KMAX - 1];
+    }
+}
+
+/// Contiguous `[lo, hi)` row ranges distributing `n` rows over
+/// `num_shards` shards as evenly as possible (Spark-style range split;
+/// clamped so no shard is empty).
+pub fn shard_bounds(n: usize, num_shards: usize) -> Vec<(usize, usize)> {
+    let s = num_shards.clamp(1, n.max(1));
+    (0..s).map(|i| (i * n / s, (i + 1) * n / s)).collect()
+}
+
+/// One contiguous row-range slice of a distance table: the sorted
+/// neighbour prefixes for query rows `[row_lo, row_hi)` plus the shared
+/// `O(n * EMAX)` manifold copy (distance recomputation + the brute-force
+/// fallback need every candidate's coordinates, not just this range's).
+///
+/// This is the unit that ships to a worker node/process: `size_bytes()`
+/// is what the DES charges for its broadcast, and `wire_id()` is the
+/// content-addressed identity the process wire protocol deduplicates on.
+pub struct TableShard {
+    pub shard_id: usize,
+    /// First query row this shard owns.
+    pub row_lo: usize,
+    /// One past the last query row this shard owns.
+    pub row_hi: usize,
+    /// Flat `[row_hi - row_lo, row_len]` sorted prefixes (global indices).
+    neighbors: Vec<u32>,
+    /// Entries stored per row.
+    row_len: usize,
+    /// Full manifold size (mask and fallback operate globally).
+    pub n: usize,
+    /// Full EMAX-padded manifold copy.
+    vecs: Vec<f32>,
+    /// Time index of manifold row 0.
+    pub t0: usize,
+    fallbacks: AtomicU64,
+    wire_key: OnceLock<u64>,
+}
+
+impl TableShard {
+    /// Assemble a shard from per-row sorted prefixes (uniform `row_len`),
+    /// rows `row_lo..row_lo + rows.len()` — the parallel-build path used
+    /// by the sharded table pipeline.
+    pub fn assemble_with(
+        emb: &Embedding,
+        shard_id: usize,
+        row_lo: usize,
+        rows: Vec<Vec<u32>>,
+        row_len: usize,
+    ) -> TableShard {
+        let mut neighbors = Vec::with_capacity(rows.len() * row_len);
+        for r in &rows {
+            assert_eq!(r.len(), row_len);
+            neighbors.extend_from_slice(r);
+        }
+        TableShard {
+            shard_id,
+            row_lo,
+            row_hi: row_lo + rows.len(),
+            neighbors,
+            row_len,
+            n: emb.n,
+            vecs: emb.vecs.clone(),
+            t0: emb.t0,
+            fallbacks: AtomicU64::new(0),
+            wire_key: OnceLock::new(),
+        }
+    }
+
+    /// Rebuild a shard from raw wire parts (worker side of the process
+    /// protocol).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        shard_id: usize,
+        row_lo: usize,
+        row_hi: usize,
+        row_len: usize,
+        n: usize,
+        t0: usize,
+        neighbors: Vec<u32>,
+        vecs: Vec<f32>,
+    ) -> TableShard {
+        assert_eq!(neighbors.len(), (row_hi - row_lo) * row_len);
+        assert_eq!(vecs.len(), n * EMAX);
+        TableShard {
+            shard_id,
+            row_lo,
+            row_hi,
+            neighbors,
+            row_len,
+            n,
+            vecs,
+            t0,
+            fallbacks: AtomicU64::new(0),
+            wire_key: OnceLock::new(),
+        }
+    }
+
+    /// Number of query rows this shard owns.
+    pub fn num_rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    /// Entries stored per row.
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// True when `row` is one of this shard's query rows.
+    pub fn contains_row(&self, row: usize) -> bool {
+        (self.row_lo..self.row_hi).contains(&row)
+    }
+
+    /// Raw sorted-prefix slice and manifold (wire serialization).
+    pub fn raw_parts(&self) -> (&[u32], &[f32]) {
+        (&self.neighbors, &self.vecs)
+    }
+
+    /// Queries that exhausted a truncated prefix on this shard.
+    pub fn fallback_queries(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Broadcast bytes: this shard's index slice + the manifold copy.
+    pub fn size_bytes(&self) -> usize {
+        self.neighbors.len() * 4 + self.vecs.len() * 4
+    }
+
+    /// Content hash identifying this shard on the wire (computed once).
+    pub fn wire_id(&self) -> u64 {
+        *self.wire_key.get_or_init(|| {
+            let mut h = FNV_OFFSET;
+            for x in [self.n, self.shard_id, self.row_lo, self.row_hi, self.row_len, self.t0] {
+                h = fnv1a64_word(h, x as u64);
+            }
+            for &v in &self.neighbors {
+                h = fnv1a64_word(h, v as u64);
+            }
+            for &v in &self.vecs {
+                h = fnv1a64_word(h, v.to_bits() as u64);
+            }
+            h
+        })
+    }
+
+    /// [`DistanceTable::query_into`] for a row this shard owns (panics
+    /// otherwise) — same walk, same fallback, bit-identical output.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_into(
+        &self,
+        qi: usize,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+        out_d: &mut [f32],
+        out_t: &mut [f32],
+    ) {
+        assert!(
+            self.contains_row(qi),
+            "row {qi} outside shard {} range {}..{}",
+            self.shard_id,
+            self.row_lo,
+            self.row_hi
+        );
+        debug_assert_eq!(mask.n(), self.n);
+        let local = qi - self.row_lo;
+        let row = &self.neighbors[local * self.row_len..(local + 1) * self.row_len];
+        walk_row_into(
+            row,
+            qi,
+            &self.vecs,
+            self.t0,
+            lib_rows,
+            mask,
+            targets,
+            theiler,
+            &self.fallbacks,
+            out_d,
+            out_t,
+        );
+    }
+
+    /// Batch query over **this shard's rows only**, into reused flat
+    /// `[num_rows, KMAX]` buffers (the per-shard task body).
+    pub fn query_rows_into(
+        &self,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+        dvals: &mut Vec<f32>,
+        tvals: &mut Vec<f32>,
+    ) {
+        let rows = self.num_rows();
+        if dvals.len() != rows * KMAX {
+            dvals.resize(rows * KMAX, 0.0);
+        }
+        if tvals.len() != rows * KMAX {
+            tvals.resize(rows * KMAX, 0.0);
+        }
+        for (i, qi) in (self.row_lo..self.row_hi).enumerate() {
+            self.query_into(
+                qi,
+                lib_rows,
+                mask,
+                targets,
+                theiler,
+                &mut dvals[i * KMAX..(i + 1) * KMAX],
+                &mut tvals[i * KMAX..(i + 1) * KMAX],
+            );
+        }
+    }
+}
+
+/// FNV-1a offset basis — the shared starting state for every content
+/// hash in the crate (shard wire ids here, broadcast ids in
+/// `ccm::process`). One definition: if the hash scheme ever changes, the
+/// shard identity and the wire dedup keys move together.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// FNV-1a-style 64-bit word mix for content addressing.
+#[inline]
+pub(crate) fn fnv1a64_word(mut h: u64, w: u64) -> u64 {
+    for b in w.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Facade over contiguous [`TableShard`]s covering rows `0..n`: resolves
+/// every query row to its owning shard and otherwise mirrors
+/// [`DistanceTable`]'s query API bit-for-bit. Shards are `Arc`-shared so
+/// the same objects can simultaneously back broadcasts and this facade.
+pub struct ShardedTable {
+    shards: Vec<Arc<TableShard>>,
+    pub n: usize,
+    row_len: usize,
+}
+
+impl ShardedTable {
+    /// Build from shards (must be contiguous from row 0 and cover `0..n`
+    /// with a uniform `row_len`).
+    pub fn from_shards(shards: Vec<Arc<TableShard>>) -> ShardedTable {
+        assert!(!shards.is_empty(), "need at least one shard");
+        let row_len = shards[0].row_len;
+        let n = shards[0].n;
+        let mut next = 0usize;
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.row_lo, next, "shard {i} not contiguous");
+            assert!(s.row_hi >= s.row_lo);
+            assert_eq!(s.row_len, row_len, "shard {i} row_len mismatch");
+            assert_eq!(s.n, n, "shard {i} manifold size mismatch");
+            next = s.row_hi;
+        }
+        assert_eq!(next, n, "shards do not cover the manifold");
+        ShardedTable { shards, n, row_len }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Arc<TableShard>] {
+        &self.shards
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// True when rows store a truncated prefix.
+    pub fn is_truncated(&self) -> bool {
+        self.row_len < self.n.saturating_sub(1)
+    }
+
+    /// The shard owning query row `row`.
+    pub fn shard_of(&self, row: usize) -> &Arc<TableShard> {
+        debug_assert!(row < self.n);
+        // ranges are sorted by row_lo: last shard with row_lo <= row
+        let idx = self.shards.partition_point(|s| s.row_lo <= row) - 1;
+        &self.shards[idx]
+    }
+
+    /// Sum of per-shard broadcast bytes (>= the unsharded table's bytes by
+    /// one manifold copy per extra shard — the price of independence).
+    pub fn size_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.size_bytes()).sum()
+    }
+
+    /// Fallback count summed over shards.
+    pub fn fallback_queries(&self) -> u64 {
+        self.shards.iter().map(|s| s.fallback_queries()).sum()
+    }
+
+    /// [`DistanceTable::query_into`], routed to the owning shard.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_into(
+        &self,
+        qi: usize,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+        out_d: &mut [f32],
+        out_t: &mut [f32],
+    ) {
+        self.shard_of(qi).query_into(qi, lib_rows, mask, targets, theiler, out_d, out_t);
+    }
+
+    /// [`DistanceTable::query_all_into`] over the shard set: walks shards
+    /// in row order, producing the identical flat `[n, KMAX]` layout.
+    pub fn query_all_into(
+        &self,
+        lib_rows: &[usize],
+        mask: &LibraryMask,
+        targets: &[f32],
+        theiler: f32,
+        dvals: &mut Vec<f32>,
+        tvals: &mut Vec<f32>,
+    ) {
+        if dvals.len() != self.n * KMAX {
+            dvals.resize(self.n * KMAX, 0.0);
+        }
+        if tvals.len() != self.n * KMAX {
+            tvals.resize(self.n * KMAX, 0.0);
+        }
+        for shard in &self.shards {
+            for qi in shard.row_lo..shard.row_hi {
+                shard.query_into(
+                    qi,
+                    lib_rows,
+                    mask,
+                    targets,
+                    theiler,
+                    &mut dvals[qi * KMAX..(qi + 1) * KMAX],
+                    &mut tvals[qi * KMAX..(qi + 1) * KMAX],
+                );
+            }
         }
     }
 
@@ -531,6 +973,126 @@ mod tests {
         let trunc = DistanceTable::build_truncated(&emb, 40);
         assert_eq!(trunc.size_bytes(), emb.n * 40 * 4 + emb.n * EMAX * 4);
         assert_eq!(trunc.row_len(), 40);
+    }
+
+    #[test]
+    fn shard_bounds_cover_and_clamp() {
+        assert_eq!(shard_bounds(10, 1), vec![(0, 10)]);
+        assert_eq!(shard_bounds(10, 3), vec![(0, 3), (3, 6), (6, 10)]);
+        // more shards than rows: clamped to one row per shard
+        assert_eq!(shard_bounds(2, 5).len(), 2);
+        for s in 1..=7 {
+            let b = shard_bounds(97, s);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, 97);
+            assert!(b.windows(2).all(|w| w[0].1 == w[1].0), "contiguous");
+            assert!(b.iter().all(|&(lo, hi)| hi > lo), "non-empty");
+        }
+    }
+
+    #[test]
+    fn sharded_queries_bit_identical_incl_edges() {
+        let (emb, targets) = embedding();
+        let table = DistanceTable::build(&emb);
+        let sharded = table.shard(4);
+        assert_eq!(sharded.num_shards(), 4);
+        let mut rng = Rng::new(11);
+        let rows = rng.sample_indices(emb.n, 90);
+        let mask = mask_of(emb.n, &rows);
+        // every shard-boundary row (first and last of each range) plus a
+        // full batch sweep must match the unsharded table exactly
+        let mut d0 = [0.0; KMAX];
+        let mut t0v = [0.0; KMAX];
+        let mut d1 = [0.0; KMAX];
+        let mut t1v = [0.0; KMAX];
+        for shard in sharded.shards() {
+            for qi in [shard.row_lo, shard.row_hi - 1] {
+                assert!(shard.contains_row(qi));
+                assert!(std::ptr::eq(sharded.shard_of(qi).as_ref(), shard.as_ref()));
+                table.query_into(qi, &rows, &mask, &targets, 0.0, &mut d0, &mut t0v);
+                sharded.query_into(qi, &rows, &mask, &targets, 0.0, &mut d1, &mut t1v);
+                assert_eq!(d0, d1, "edge row {qi}");
+                assert_eq!(t0v, t1v, "edge row {qi}");
+            }
+        }
+        let a = table.query_all(&rows, &mask, &targets, 0.0);
+        let b = sharded.query_all(&rows, &mask, &targets, 0.0);
+        assert_eq!(a.dvals, b.dvals);
+        assert_eq!(a.tvals, b.tvals);
+    }
+
+    #[test]
+    fn single_shard_degenerate_equals_table() {
+        let (emb, targets) = embedding();
+        let table = DistanceTable::build_truncated(&emb, 48);
+        let sharded = table.shard(1);
+        assert_eq!(sharded.num_shards(), 1);
+        assert_eq!(sharded.row_len(), table.row_len());
+        assert!(sharded.is_truncated());
+        let mut rng = Rng::new(13);
+        let rows = rng.sample_indices(emb.n, 60);
+        let mask = mask_of(emb.n, &rows);
+        let a = table.query_all(&rows, &mask, &targets, 0.0);
+        let b = sharded.query_all(&rows, &mask, &targets, 0.0);
+        assert_eq!(a.dvals, b.dvals);
+        assert_eq!(a.tvals, b.tvals);
+    }
+
+    #[test]
+    fn shard_with_no_local_library_forces_fallback_and_stays_exact() {
+        // library entirely outside one shard's row range, prefix so short
+        // the shard's queries exhaust it: the shard must take the counted
+        // brute-force fallback and still agree with the full table.
+        let (emb, targets) = embedding();
+        let full = DistanceTable::build(&emb);
+        let trunc = DistanceTable::build_truncated(&emb, KMAX);
+        let sharded = trunc.shard(3);
+        let first = Arc::clone(&sharded.shards()[0]);
+        // members only from the LAST shard's range, far from shard 0
+        let lo = sharded.shards()[2].row_lo;
+        let rows: Vec<usize> = (lo..emb.n).step_by(17).collect();
+        assert!(rows.len() >= 4, "need a non-trivial sparse library");
+        let mask = mask_of(emb.n, &rows);
+        let a = full.query_all(&rows, &mask, &targets, 0.0);
+        let b = sharded.query_all(&rows, &mask, &targets, 0.0);
+        assert_eq!(a.dvals, b.dvals);
+        assert_eq!(a.tvals, b.tvals);
+        assert!(
+            first.fallback_queries() > 0,
+            "shard 0 has no nearby members in a KMAX prefix: must fall back"
+        );
+    }
+
+    #[test]
+    fn shard_accounting_and_wire_identity() {
+        let (emb, _) = embedding();
+        let table = DistanceTable::build_truncated(&emb, 32);
+        let sharded = table.shard(4);
+        // sum of shard bytes = index bytes + one manifold copy per shard
+        let idx_bytes = emb.n * 32 * 4;
+        assert_eq!(sharded.size_bytes(), idx_bytes + 4 * emb.n * EMAX * 4);
+        // wire ids: stable per shard, distinct across shards
+        for s in sharded.shards() {
+            assert_eq!(s.wire_id(), s.wire_id());
+        }
+        let mut ids: Vec<u64> = sharded.shards().iter().map(|s| s.wire_id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "shard wire ids must be distinct");
+        // from_parts round-trips a shard into an identical wire identity
+        let s0 = &sharded.shards()[0];
+        let (nbrs, vecs) = s0.raw_parts();
+        let rebuilt = TableShard::from_parts(
+            s0.shard_id,
+            s0.row_lo,
+            s0.row_hi,
+            s0.row_len(),
+            s0.n,
+            s0.t0,
+            nbrs.to_vec(),
+            vecs.to_vec(),
+        );
+        assert_eq!(rebuilt.wire_id(), s0.wire_id());
     }
 
     #[test]

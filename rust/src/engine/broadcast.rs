@@ -43,6 +43,14 @@ impl<T> Broadcast<T> {
         &self.value
     }
 
+    /// Clone out the shared handle — lets the same node-local object back
+    /// both a broadcast and a driver-side facade (e.g. the sharded
+    /// distance table wraps the very `Arc<TableShard>`s its per-shard
+    /// broadcasts hold, so no state is duplicated).
+    pub fn share(&self) -> Arc<T> {
+        Arc::clone(&self.value)
+    }
+
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -70,5 +78,12 @@ mod tests {
         assert_eq!(a.id(), b.id());
         assert_eq!(b.value(), &vec![1, 2, 3]);
         assert_eq!(b.size_bytes(), 24);
+    }
+
+    #[test]
+    fn share_aliases_the_broadcast_value() {
+        let a = Broadcast::new(vec![7u8], 1);
+        let arc = a.share();
+        assert!(std::ptr::eq(arc.as_ref(), a.value()));
     }
 }

@@ -50,6 +50,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
     let mut node_has_broadcast: HashSet<(u64, usize)> = HashSet::new();
     let mut node_bcast_ready: HashMap<usize, f64> = HashMap::new();
     let mut ship_total = 0.0f64;
+    let mut ship_bytes = 0u64;
     let mut des_finish: HashMap<u64, f64> = HashMap::new();
     let mut busy = 0.0f64;
     let mut makespan = 0.0f64;
@@ -87,6 +88,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                         let ship = bytes as f64 / bandwidth;
                         node_bcast_ready.insert(node, ship_start + ship);
                         ship_total += ship;
+                        ship_bytes += bytes as u64;
                         start = ship_start + ship;
                     } else if let Some(&link) = node_bcast_ready.get(&node) {
                         // a ship to this node may still be in flight
@@ -116,6 +118,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_makespan_s: makespan,
         sim_utilization: utilization,
         sim_broadcast_ship_s: ship_total,
+        sim_broadcast_ship_bytes: ship_bytes,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),
@@ -223,6 +226,64 @@ mod tests {
         // 2 nodes pay 1s ship each (in parallel), then 8 tasks over 4 cores.
         assert!((rep.sim_broadcast_ship_s - 2.0).abs() < 1e-9);
         assert!((rep.sim_makespan_s - 3.0).abs() < 1e-9, "{}", rep.sim_makespan_s);
+    }
+
+    #[test]
+    fn sharded_broadcasts_priced_per_shard() {
+        // A monolithic table dep ships all bytes to every node that runs
+        // its tasks. Sharded: each shard job carries only its own shard's
+        // bytes, so a 2-node cluster whose nodes end up running disjoint
+        // shard jobs ships half the table per node.
+        let whole = 400_000_000usize; // 1s at 400 MB/s
+        let half = whole / 2;
+
+        // monolithic: one job, 2 nodes * 2 cores, every node pays `whole`
+        let mono = EventLog::default();
+        mono.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "mono".into(),
+            num_tasks: 4,
+            submit_rel: 0.0,
+            finish_rel: 4.0,
+            broadcast_deps: vec![(7, whole)],
+        });
+        for p in 0..4 {
+            let t =
+                TaskRecord { job_id: 1, partition: p, start_rel: 0.0, duration: 1.0, attempts: 1 };
+            mono.record_task(t);
+        }
+        let c = config(Deploy::Cluster { workers: 2, cores_per_worker: 2 });
+        let mono_rep = simulate(&mono, &c);
+        assert_eq!(mono_rep.sim_broadcast_ship_bytes, 2 * whole as u64);
+
+        // sharded: two concurrent jobs, one per shard, 2 tasks each. FIFO
+        // list scheduling lands job 1 on node 0's cores and job 2 on node
+        // 1's, so each node receives exactly one shard.
+        let shard = EventLog::default();
+        for (job, bid) in [(1u64, 71u64), (2, 72)] {
+            shard.record_job_submit(JobRecord {
+                job_id: job,
+                name: format!("shard{bid}"),
+                num_tasks: 2,
+                submit_rel: (job - 1) as f64 * 0.001,
+                finish_rel: 4.0,
+                broadcast_deps: vec![(bid, half)],
+            });
+            for p in 0..2 {
+                let t = TaskRecord {
+                    job_id: job,
+                    partition: p,
+                    start_rel: 0.0,
+                    duration: 1.0,
+                    attempts: 1,
+                };
+                shard.record_task(t);
+            }
+        }
+        let shard_rep = simulate(&shard, &c);
+        assert_eq!(shard_rep.sim_broadcast_ship_bytes, whole as u64, "one shard per node");
+        assert!(shard_rep.sim_broadcast_ship_s < mono_rep.sim_broadcast_ship_s);
+        assert!(shard_rep.sim_makespan_s < mono_rep.sim_makespan_s);
     }
 
     #[test]

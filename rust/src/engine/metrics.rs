@@ -155,6 +155,10 @@ pub struct ExecutionReport {
     /// Seconds the DES spent shipping broadcast variables (summed over
     /// nodes; overlaps with compute on other cores).
     pub sim_broadcast_ship_s: f64,
+    /// Bytes the DES shipped for broadcasts, summed over (variable, node)
+    /// pairs — the quantity sharding shrinks: a node running only shard
+    /// `s`'s tasks pays for shard `s`, not the whole table.
+    pub sim_broadcast_ship_bytes: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -167,6 +171,7 @@ impl ExecutionReport {
             ("sim_makespan_s", Json::Num(self.sim_makespan_s)),
             ("sim_utilization", Json::Num(self.sim_utilization)),
             ("sim_broadcast_ship_s", Json::Num(self.sim_broadcast_ship_s)),
+            ("sim_broadcast_ship_bytes", Json::Num(self.sim_broadcast_ship_bytes as f64)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

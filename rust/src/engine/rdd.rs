@@ -262,6 +262,22 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         }
     }
 
+    /// Rename the lineage (event-log/DES readability — e.g. the sharded
+    /// table pipeline labels each per-shard transform job
+    /// `table_shard_3.transform` so replays attribute ship costs to the
+    /// right shard broadcast).
+    pub fn named(&self, name: impl Into<String>) -> Rdd<T> {
+        Rdd {
+            inner: Arc::new(RddInner {
+                partitions: self.inner.partitions,
+                compute: Arc::clone(&self.inner.compute),
+                name: name.into(),
+                broadcast_deps: self.inner.broadcast_deps.clone(),
+                cache: self.inner.cache.clone(),
+            }),
+        }
+    }
+
     /// Mark this lineage as reading broadcast variable `b` — metadata for
     /// the DES cost model (ship once per node), mirroring Spark closures
     /// capturing a `Broadcast` handle.
@@ -367,6 +383,18 @@ mod tests {
         assert_eq!(CALLS.load(Ordering::SeqCst), 0);
         let _ = eval(&rdd);
         assert_eq!(CALLS.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn named_preserves_semantics_and_deps() {
+        let b = crate::engine::Broadcast::new(1u8, 8);
+        let rdd = Rdd::parallelize((0..6).collect::<Vec<i32>>(), 2)
+            .map(|x| x + 1)
+            .uses_broadcast(&b)
+            .named("renamed");
+        assert_eq!(rdd.name(), "renamed");
+        assert_eq!(rdd.broadcast_deps(), &[(b.id(), 8)]);
+        assert_eq!(eval(&rdd), vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

@@ -19,7 +19,8 @@ use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case_policy, Case, TablePolicy};
+use parccm::ccm::driver::{run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::process::ProcessBackend;
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
@@ -42,6 +43,9 @@ fn main() -> ExitCode {
         Some("significance") => cmd_significance(&args),
         Some("select") => cmd_select(&args),
         Some("events") => cmd_events(&args),
+        // hidden: the ProcessBackend child entry point (speaks the JSON
+        // wire protocol on stdin/stdout — see ccm::process)
+        Some("worker") => parccm::ccm::process::worker_main(),
         Some("forecast") => cmd_forecast(&args),
         Some("lag") => cmd_lag(&args),
         Some("help") | None => {
@@ -77,10 +81,15 @@ fn print_help() {
          \n\
          COMMON OPTIONS\n\
            --full               paper-scale scenario (default: scaled for 1 core)\n\
-           --backend native|xla (default: xla when artifacts/ exists)\n\
+           --backend native|xla|process\n\
+                                (default: xla when artifacts/ exists, else native;\n\
+                                process = forked worker processes over pipes)\n\
+           --proc-workers N     worker processes for --backend process (default 2)\n\
            --artifacts DIR      artifact directory (default: artifacts)\n\
            --table full|trunc   distance-table layout for A4/A5 (default: trunc,\n\
                                 the O(n*P) truncated broadcast; bit-identical skills)\n\
+           --shards N           split the distance table into N row-range shards,\n\
+                                one broadcast + transform job per shard (default 1)\n\
            --seed N             master seed\n\
            --workers N --cores N   cluster topology for the DES (default 5x4)\n"
     );
@@ -105,6 +114,19 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                 }
                 Err(e) => {
                     eprintln!("[parccm] xla backend unavailable ({e:#}); using native");
+                    Arc::new(NativeBackend)
+                }
+            }
+        }
+        "process" => {
+            let workers = args.get_usize("proc-workers", 2);
+            match ProcessBackend::new(workers) {
+                Ok(b) => {
+                    eprintln!("[parccm] backend: process ({workers} worker processes)");
+                    Arc::new(b)
+                }
+                Err(e) => {
+                    eprintln!("[parccm] process backend unavailable ({e}); using native");
                     Arc::new(NativeBackend)
                 }
             }
@@ -157,8 +179,8 @@ fn table_policy_from(args: &Args) -> TablePolicy {
     }
 }
 
-/// [`run_case_policy`] with the table layout picked from the command's
-/// own `--table` argument.
+/// [`run_case_policy_sharded`] with the table layout and shard count
+/// picked from the command's own `--table` / `--shards` arguments.
 #[allow(clippy::too_many_arguments)]
 fn run_case(
     args: &Args,
@@ -169,7 +191,16 @@ fn run_case(
     deploy: Deploy,
     backend: Arc<dyn ComputeBackend>,
 ) -> parccm::ccm::driver::CaseReport {
-    run_case_policy(case, scenario, effect, cause, deploy, backend, table_policy_from(args))
+    run_case_policy_sharded(
+        case,
+        scenario,
+        effect,
+        cause,
+        deploy,
+        backend,
+        table_policy_from(args),
+        args.get_usize("shards", 1),
+    )
 }
 
 fn cmd_cases() -> ExitCode {
@@ -194,7 +225,7 @@ fn cmd_fig4(args: &Args) -> ExitCode {
     for case in Case::ALL {
         // one real execution per case; Local and Yarn are DES replays of
         // the same event log (numerics are deploy-independent)
-        let (_skills, reports) = parccm::ccm::driver::run_case_multi_policy(
+        let (_skills, reports) = parccm::ccm::driver::run_case_multi_policy_sharded(
             case,
             &scenario,
             &y,
@@ -202,6 +233,7 @@ fn cmd_fig4(args: &Args) -> ExitCode {
             &[local.clone(), cluster.clone()],
             Arc::clone(&backend),
             table_policy_from(args),
+            args.get_usize("shards", 1),
         );
         table.push(
             Row::new(format!("{} {}", case.name(), case.description()))

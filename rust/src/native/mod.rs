@@ -160,6 +160,37 @@ mod tests {
     }
 
     #[test]
+    fn shard_chunks_concatenate_to_tail_preds() {
+        // the default ComputeBackend::shard_chunk_into over every shard,
+        // concatenated in row order, must equal the unsharded table tail
+        let (problem, sample) = fixture(150, 2, 1, 9);
+        let table = crate::ccm::table::DistanceTable::build(&problem.emb);
+        let mut arena = TaskArena::new();
+        arena.mask.set_from(table.n, &sample.rows);
+        let panels = table.query_all(&sample.rows, &arena.mask, &problem.targets, 0.0);
+        let tail = NativeBackend.simplex_tail(&panels, &problem.targets, 2);
+
+        let sharded = table.shard(4);
+        let mut preds = Vec::new();
+        for shard in sharded.shards() {
+            let mut chunk = Vec::new();
+            NativeBackend.shard_chunk_into(
+                shard,
+                &problem.targets,
+                0.0,
+                &sample.rows,
+                2,
+                &mut arena,
+                &mut chunk,
+            );
+            assert_eq!(chunk.len(), shard.num_rows());
+            preds.extend_from_slice(&chunk);
+        }
+        assert_eq!(preds, tail.preds);
+        assert_eq!(crate::ccm::simplex::pearson_f32(&preds, &problem.targets), tail.rho);
+    }
+
+    #[test]
     fn simplex_tail_equals_cross_map() {
         // gathering panels with knn then applying the tail must equal the
         // fused path — the table-mode equivalence.

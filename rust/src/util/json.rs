@@ -53,6 +53,40 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Encode an f32 slice as a number array. The f32 -> f64 widening is
+    /// exact and [`Json`]'s writer prints shortest-roundtrip f64, so
+    /// decoding with [`Json::as_f32s`] is bit-identical for finite values
+    /// — the property the process wire protocol relies on.
+    pub fn f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Encode a u32 slice as a number array (exact in f64).
+    pub fn u32s(xs: &[u32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Encode a usize slice as a number array (callers keep values under
+    /// 2^53 — manifold row indices always are).
+    pub fn usizes(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Decode a number array into f32s (None if not an array of numbers).
+    pub fn as_f32s(&self) -> Option<Vec<f32>> {
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
+    }
+
+    /// Decode a number array into u32s.
+    pub fn as_u32s(&self) -> Option<Vec<u32>> {
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as u32)).collect()
+    }
+
+    /// Decode a number array into usizes.
+    pub fn as_usizes(&self) -> Option<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as usize)).collect()
+    }
+
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -375,6 +409,41 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn f32_arrays_roundtrip_bit_exact() {
+        // (-0.0 is the one finite non-roundtripper: the integer fast path
+        // prints it as "0" — the wire never carries signed zeros that
+        // matter, simplex weights are strictly positive)
+        let xs = vec![
+            0.0f32,
+            1.0,
+            -1.5e-7,
+            1e30, // BIG
+            0.1,
+            f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+            3.14159265,
+            -2.718281828,
+        ];
+        let text = Json::f32s(&xs).to_string();
+        let back = Json::parse(&text).unwrap().as_f32s().unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn index_arrays_roundtrip() {
+        let us = vec![0usize, 1, 63, 64, 4000, (1usize << 40) + 3];
+        let text = Json::usizes(&us).to_string();
+        assert_eq!(Json::parse(&text).unwrap().as_usizes().unwrap(), us);
+        let u32s = vec![0u32, 7, u32::MAX];
+        let text = Json::u32s(&u32s).to_string();
+        assert_eq!(Json::parse(&text).unwrap().as_u32s().unwrap(), u32s);
+        assert!(Json::parse("[1,\"x\"]").unwrap().as_usizes().is_none());
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! End-to-end tests of the process-separated backend: real forked
+//! `parccm worker` processes (via `CARGO_BIN_EXE_parccm`), the JSON wire
+//! protocol, shard broadcasts, and worker-death recovery.
+
+use std::sync::Arc;
+
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::process::ProcessBackend;
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::table::DistanceTable;
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::util::rng::Rng;
+
+fn spawn_backend(workers: usize) -> Arc<ProcessBackend> {
+    Arc::new(
+        ProcessBackend::with_command(env!("CARGO_BIN_EXE_parccm"), workers)
+            .expect("spawning worker processes"),
+    )
+}
+
+#[test]
+fn process_cross_map_bit_identical_to_native() {
+    let pb = spawn_backend(2);
+    assert_eq!(pb.num_workers(), 2);
+    let (x, y) = parccm::timeseries::generators::coupled_logistic(
+        400,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    );
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(3), CcmParams::new(2, 1, 120), problem.emb.n, 6);
+    let native = NativeBackend;
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho_p = pb.cross_map_into(&input, &mut arena_p);
+        let rho_n = native.cross_map_into(&input, &mut arena_n);
+        assert_eq!(rho_p.to_bits(), rho_n.to_bits(), "wire roundtrip must be exact");
+        assert_eq!(arena_p.preds, arena_n.preds);
+    }
+}
+
+#[test]
+fn process_shard_chunks_bit_identical_to_local() {
+    let pb = spawn_backend(2);
+    let (x, y) = parccm::timeseries::generators::coupled_logistic(
+        300,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    );
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let table = DistanceTable::build_truncated(&problem.emb, 32);
+    let sharded = table.shard(3);
+    let rows: Vec<usize> = (0..problem.emb.n).step_by(4).collect();
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for shard in sharded.shards() {
+        let mut remote = Vec::new();
+        let mut local = Vec::new();
+        pb.shard_chunk_into(shard, &problem.targets, 0.0, &rows, 2, &mut arena_p, &mut remote);
+        NativeBackend.shard_chunk_into(
+            shard,
+            &problem.targets,
+            0.0,
+            &rows,
+            2,
+            &mut arena_n,
+            &mut local,
+        );
+        assert_eq!(remote.len(), shard.num_rows());
+        assert_eq!(remote, local, "shard {} chunk must survive the wire", shard.shard_id);
+    }
+}
+
+#[test]
+fn process_backend_runs_a4_style_scenario_end_to_end() {
+    // the acceptance scenario: a synchronous sharded-table case (A4
+    // style) executed entirely through >= 2 worker processes, checked
+    // against the single-threaded A1 reference and bit-identical to the
+    // in-process sharded run.
+    let scenario = Scenario::smoke();
+    let (x, y) = parccm::timeseries::generators::coupled_logistic(
+        scenario.series_len,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    );
+    let deploy = Deploy::Local { cores: 2 };
+
+    let a1 = run_case(
+        Case::A1,
+        &scenario,
+        &y,
+        &x,
+        deploy.clone(),
+        Arc::new(NativeBackend),
+    );
+    let in_process = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy.clone(),
+        Arc::new(NativeBackend),
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+
+    let pb = spawn_backend(2);
+    assert!(pb.num_workers() >= 2);
+    let backend: Arc<dyn ComputeBackend> = pb.clone();
+    let via_workers = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy,
+        backend,
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+
+    let key = |r: &parccm::ccm::result::SkillRow| {
+        (r.params.e, r.params.tau, r.params.l, r.sample_id)
+    };
+    let mut a1 = a1.skills;
+    a1.sort_by_key(key);
+    let mut local = in_process.skills;
+    local.sort_by_key(key);
+    let mut remote = via_workers.skills;
+    remote.sort_by_key(key);
+    assert_eq!(remote.len(), scenario.combos().len() * scenario.r);
+    assert_eq!(remote.len(), a1.len());
+    for ((a, l), r) in a1.iter().zip(&local).zip(&remote) {
+        assert_eq!(key(a), key(r));
+        assert!(
+            (a.rho - r.rho).abs() < 1e-5,
+            "process-backend rho {} vs A1 {} at {:?}",
+            r.rho,
+            a.rho,
+            key(a)
+        );
+        assert_eq!(
+            l.rho.to_bits(),
+            r.rho.to_bits(),
+            "process-backend rho must be bit-identical to in-process sharded at {:?}",
+            key(a)
+        );
+    }
+    assert_eq!(pb.respawns(), 0, "healthy run must not recycle workers");
+}
+
+#[test]
+fn worker_kill_requeues_tasks_on_fresh_workers() {
+    let pb = spawn_backend(2);
+    let (x, y) = parccm::timeseries::generators::coupled_logistic(
+        300,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    );
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(5), CcmParams::new(2, 1, 80), problem.emb.n, 4);
+    let native = NativeBackend;
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+
+    // warm up: broadcasts shipped, every result correct
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho_p = pb.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho_p.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
+    }
+
+    // kill every live worker out from under the backend
+    let pids = pb.worker_pids();
+    assert_eq!(pids.len(), 2, "both workers idle before the kill");
+    for pid in &pids {
+        let status = std::process::Command::new("kill")
+            .args(["-9", &pid.to_string()])
+            .status()
+            .expect("running kill");
+        assert!(status.success(), "kill -9 {pid}");
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // tasks must requeue onto respawned workers, with broadcasts
+    // re-shipped from the driver-side payload cache, and stay exact.
+    // (Shard-affine dispatch touches only the preferred worker, so a
+    // single respawn is the guaranteed floor even with every pid killed.)
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho_p = pb.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho_p.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
+    }
+    assert!(pb.respawns() >= 1, "a killed worker must have been replaced");
+    assert_eq!(pb.num_workers(), 2, "pool back at target size");
+    assert!(
+        pb.worker_pids().iter().any(|p| !pids.contains(p)),
+        "at least one fresh worker pid expected after the kill"
+    );
+}

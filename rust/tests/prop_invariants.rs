@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use parccm::ccm::backend::ComputeBackend;
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::embedding::Embedding;
 use parccm::ccm::knn::knn_batch;
 use parccm::ccm::params::CcmParams;
@@ -202,6 +202,76 @@ fn prop_truncated_table_bit_identical_to_full_and_bruteforce() {
                     "truncated vs brute mismatch at {i} [e={e} tau={tau} l={l} prefix={prefix}]"
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_table_rho_bit_identical_to_full() {
+    // The sharding contract (ISSUE 2): splitting the table into ANY number
+    // of row-range shards — full or truncated layout, dense or sparse
+    // (fallback-taking) libraries — changes nothing: neighbour panels AND
+    // the end-to-end cross-map skill (per-shard simplex chunks,
+    // concatenated in row order, Pearson over the whole vector) are
+    // bit-identical to the unsharded DistanceTable path.
+    check("sharded rho == unsharded rho (bitwise)", 12, |rng| {
+        let n_series = 120 + rng.below(220);
+        let y = random_series(rng, n_series);
+        let x = random_series(rng, n_series);
+        let e = 1 + rng.below(4);
+        let tau = 1 + rng.below(3);
+        let emb = Embedding::new(&y, e, tau);
+        let targets = emb.align_targets(&x);
+        let table = if rng.below(2) == 0 {
+            DistanceTable::build(&emb)
+        } else {
+            DistanceTable::build_truncated(&emb, KMAX + rng.below(emb.n / 2))
+        };
+        let num_shards = 1 + rng.below(8);
+        let sharded = table.shard(num_shards);
+
+        let l = (1 + rng.below(emb.n)).min(emb.n);
+        let mut sample_rng = Rng::new(rng.next_u64());
+        let rows = sample_rng.sample_indices(emb.n, l);
+        let theiler = if rng.below(3) == 0 { rng.below(5) as f32 } else { 0.0 };
+        let mut mask = LibraryMask::new();
+        mask.set_from(emb.n, &rows);
+
+        // panels must match bitwise
+        let a = table.query_all(&rows, &mask, &targets, theiler);
+        let b = sharded.query_all(&rows, &mask, &targets, theiler);
+        for i in 0..emb.n * KMAX {
+            if a.dvals[i].to_bits() != b.dvals[i].to_bits() || a.tvals[i] != b.tvals[i] {
+                return Err(format!(
+                    "panel mismatch at {i} [e={e} tau={tau} l={l} shards={num_shards} \
+                     trunc={} theiler={theiler}]",
+                    table.is_truncated()
+                ));
+            }
+        }
+
+        // end-to-end skill: unsharded tail vs concatenated shard chunks
+        let backend = NativeBackend;
+        let tail = backend.simplex_tail(&a, &targets, e);
+        let mut arena = TaskArena::new();
+        let mut preds = Vec::new();
+        for shard in sharded.shards() {
+            let mut chunk = Vec::new();
+            backend.shard_chunk_into(shard, &targets, theiler, &rows, e, &mut arena, &mut chunk);
+            preds.extend_from_slice(&chunk);
+        }
+        let rho = pearson_f32(&preds, &targets);
+        if preds.len() != emb.n {
+            return Err(format!("chunks cover {} of {} rows", preds.len(), emb.n));
+        }
+        if rho.to_bits() != tail.rho.to_bits() {
+            return Err(format!(
+                "rho mismatch: sharded {rho} vs unsharded {} \
+                 [e={e} tau={tau} l={l} shards={num_shards} trunc={}]",
+                tail.rho,
+                table.is_truncated()
+            ));
         }
         Ok(())
     });
