@@ -1,0 +1,93 @@
+//! Cluster-runtime bench (ISSUE 3 acceptance support): what the transport
+//! and the replication factor cost on the real wire.
+//!
+//! * task round-trip latency: one index-only cross-map task through a
+//!   real worker process, pipe vs TCP loopback (same wire protocol — the
+//!   delta is pure transport overhead);
+//! * replica ship accounting: broadcast bytes/ships actually written for
+//!   a sharded workload at `--replicas 1` vs `2` (the eager-copy cost
+//!   that buys zero-re-ship requeue on worker death).
+//!
+//! Run: `cargo bench --bench cluster [-- --tiny | --full]`
+//! Emits `BENCH_cluster.json` (and `results/BENCH_cluster.json`).
+
+mod common;
+
+use parccm::bench::report::{Row, TablePrinter};
+use parccm::bench::Bencher;
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
+use parccm::ccm::params::CcmParams;
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::table::DistanceTable;
+use parccm::ccm::transport::TransportKind;
+use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
+use parccm::util::rng::Rng;
+
+fn spawn(kind: TransportKind, workers: usize, replicas: usize) -> ClusterBackend {
+    ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions { transport: kind, workers, replicas, worker_env: Vec::new() },
+    )
+    .expect("spawning worker processes")
+}
+
+fn main() {
+    let args = common::args();
+    let n = common::default_n(&args, 600, 200);
+    let bencher = Bencher::new().warmup(1).samples(common::repeats(&args, 3));
+    let mut table = TablePrinter::new(format!("cluster transports & replication (n={n})"));
+
+    let (x, y) = coupled_logistic(n, CoupledLogisticParams::default());
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(11), CcmParams::new(2, 1, n / 4), problem.emb.n, 1);
+    let input = problem.input_for(&samples[0]);
+
+    // -- task round-trip latency, pipe vs tcp ---------------------------
+    // one worker so every task is a strict request/response on one link;
+    // the broadcast ships once during warmup, so steady-state numbers are
+    // the index-only task + preds reply round trip
+    let mut rtt = Vec::new();
+    for kind in [TransportKind::Pipe, TransportKind::Tcp] {
+        let pb = spawn(kind, 1, 1);
+        let mut arena = TaskArena::new();
+        let res = bencher.run(&format!("{} cross_map round-trip", kind.name()), || {
+            pb.cross_map_into(&input, &mut arena)
+        });
+        assert_eq!(pb.respawns(), 0, "bench must not hide worker churn");
+        rtt.push((kind, res.mean_s));
+    }
+    let pipe_s = rtt[0].1;
+    for (kind, mean_s) in &rtt {
+        table.push(
+            Row::new(format!("rtt_{}", kind.name()))
+                .cell("task_s", *mean_s)
+                .cell("vs_pipe_x", *mean_s / pipe_s.max(1e-12)),
+        );
+    }
+
+    // -- replica ship accounting on a sharded workload ------------------
+    let prefix = DistanceTable::auto_prefix(problem.emb.n, n / 4);
+    let sharded = DistanceTable::build_truncated(&problem.emb, prefix).shard(2);
+    let rows: Vec<usize> = (0..problem.emb.n).step_by(3).collect();
+    for replicas in [1usize, 2] {
+        let pb = spawn(TransportKind::Tcp, 2, replicas);
+        let mut arena = TaskArena::new();
+        for shard in sharded.shards() {
+            let mut preds = Vec::new();
+            pb.shard_chunk_into(shard, &problem.targets, 0.0, &rows, 2, &mut arena, &mut preds);
+            assert_eq!(preds.len(), shard.num_rows());
+        }
+        table.push(
+            Row::new(format!("tcp_replicas_{replicas}"))
+                .cell("ship_bytes", pb.broadcast_ship_bytes() as f64)
+                .cell("ships", pb.broadcast_ships() as f64)
+                .cell("rebroadcasts", pb.rebroadcasts() as f64),
+        );
+    }
+
+    table.print();
+    let _ = table.save("results/BENCH_cluster.json");
+    let _ = table.save("BENCH_cluster.json");
+}

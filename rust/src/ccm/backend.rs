@@ -184,7 +184,7 @@ pub trait ComputeBackend: Send + Sync {
     /// bit-for-bit (simplex is row-independent; the walk code is shared).
     ///
     /// The default implementation runs in-process; a serializing backend
-    /// (e.g. `ccm::process::ProcessBackend`) overrides it to ship
+    /// (e.g. `ccm::cluster::ClusterBackend`) overrides it to ship
     /// `(shard wire id, targets wire id, lib_rows, e, theiler)` — a few KB
     /// — to a worker process that holds the shard broadcast.
     ///
@@ -224,6 +224,18 @@ pub trait ComputeBackend: Send + Sync {
             preds,
         );
     }
+
+    /// Hint that every task referencing these broadcast wire ids has been
+    /// harvested: a distributed backend (e.g.
+    /// [`crate::ccm::cluster::ClusterBackend`]) releases its cached
+    /// serialized payloads and sends wire `evict`s so worker memory stays
+    /// bounded across a parameter grid. Ids a backend never shipped are
+    /// ignored; in-process backends hold no payloads, hence the no-op
+    /// default. The driver computes ids via
+    /// [`crate::ccm::cluster::problem_wire_id`] /
+    /// [`crate::ccm::cluster::targets_wire_id`] /
+    /// [`crate::ccm::table::TableShard::wire_id`].
+    fn evict_broadcasts(&self, _ids: &[u64]) {}
 
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;

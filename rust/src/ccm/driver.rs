@@ -21,6 +21,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::ccm::backend::{ComputeBackend, TaskArena};
+use crate::ccm::cluster::{problem_wire_id, targets_wire_id};
 use crate::ccm::params::Scenario;
 use crate::ccm::pipeline::{
     ccm_transform_rdd, combine_shard_chunks, sharded_table_pipeline_mode, sharded_transform_rdds,
@@ -291,6 +292,10 @@ fn run_engine_case(
     // the synchronous cases block on every action. With a sharded table
     // the transform is one job per shard; prediction chunks are combined
     // driver-side into skills (bit-identical — see ccm::pipeline docs).
+    // async work is grouped per problem so its broadcast wire ids can be
+    // evicted from distributed backends the moment THAT problem's jobs
+    // are harvested (bounds driver + worker memory over the grid instead
+    // of peaking at the whole grid; a no-op for in-process backends)
     let mut pending = Vec::new();
     let mut pending_chunks = Vec::new();
     for &e in &scenario.es {
@@ -321,8 +326,21 @@ fn run_engine_case(
                 None
             };
 
+            // every wire id this problem's tasks can reference: the
+            // brute-force problem broadcast plus, when sharded, the
+            // targets column and each table shard
+            let mut bcast_ids = {
+                let p = problem_b.value();
+                vec![problem_wire_id(&p.emb.vecs, &p.targets, &p.times)]
+            };
+            if let Some(sharded) = &sharded_b {
+                bcast_ids.push(targets_wire_id(&problem_b.value().targets));
+                bcast_ids.extend(sharded.shards().iter().map(|b| b.value().wire_id()));
+            }
+
             let mut sync_chunks = Vec::new();
             let mut async_chunk_futs = Vec::new();
+            let mut async_skill_futs = Vec::new();
             for &l in &scenario.ls {
                 let params = crate::ccm::params::CcmParams::new(e, tau, l);
                 let samples = draw_samples(&master, params, n_manifold, scenario.r);
@@ -345,7 +363,7 @@ fn run_engine_case(
                     None => ccm_transform_rdd(&ctx, rdd, &problem_b, Arc::clone(&backend)),
                 };
                 if case.is_async() {
-                    pending.push(ctx.collect_async(&skill_rdd));
+                    async_skill_futs.push(ctx.collect_async(&skill_rdd));
                 } else {
                     skills.extend(ctx.collect(&skill_rdd));
                 }
@@ -354,19 +372,28 @@ fn run_engine_case(
                 skills.extend(combine_shard_chunks(sync_chunks, problem_b.value()));
             }
             if !async_chunk_futs.is_empty() {
-                pending_chunks.push((problem_b.clone(), async_chunk_futs));
+                pending_chunks.push((problem_b.clone(), async_chunk_futs, bcast_ids));
+            } else if !async_skill_futs.is_empty() {
+                pending.push((async_skill_futs, bcast_ids));
+            } else {
+                // synchronous cases harvested this problem above
+                backend.evict_broadcasts(&bcast_ids);
             }
         }
     }
-    for fa in pending {
-        skills.extend(fa.get());
+    for (futs, bcast_ids) in pending {
+        for fa in futs {
+            skills.extend(fa.get());
+        }
+        backend.evict_broadcasts(&bcast_ids);
     }
-    for (problem_b, futs) in pending_chunks {
+    for (problem_b, futs, bcast_ids) in pending_chunks {
         let mut chunks = Vec::new();
         for fa in futs {
             chunks.extend(fa.get());
         }
         skills.extend(combine_shard_chunks(chunks, problem_b.value()));
+        backend.evict_broadcasts(&bcast_ids);
     }
 
     let reports = deploys.iter().map(|d| ctx.report_for(d.clone())).collect();

@@ -22,11 +22,15 @@
 //!   (sync/async x with/without the table, plus the engine-free A1).
 //!
 //! Beyond the paper, [`table::ShardedTable`] splits the distance index
-//! into per-node row-range shards and [`process::ProcessBackend`] ships
-//! index-only tasks to forked worker processes over a versioned JSON wire
-//! protocol — the genuinely distributed deployment of the same pipelines.
+//! into per-node row-range shards and [`cluster::ClusterBackend`] ships
+//! index-only tasks to worker processes over a versioned JSON wire
+//! protocol riding a pluggable [`transport`] (pipe/fork or TCP loopback),
+//! with shard replication and zero-re-ship task requeue — the genuinely
+//! distributed deployment of the same pipelines. The old
+//! [`process::ProcessBackend`] name remains as a compatibility shim.
 
 pub mod backend;
+pub mod cluster;
 pub mod convergence;
 pub mod driver;
 pub mod embedding;
@@ -42,8 +46,10 @@ pub mod simplex;
 pub mod subsample;
 pub mod surrogate;
 pub mod table;
+pub mod transport;
 
 pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
+pub use cluster::{ClusterBackend, ClusterOptions};
 pub use driver::{Case, CaseReport, TablePolicy};
 pub use embedding::Embedding;
 pub use params::{CcmParams, Scenario};
@@ -51,3 +57,4 @@ pub use pipeline::TableMode;
 pub use process::ProcessBackend;
 pub use result::{SkillRow, SkillSummary};
 pub use table::{DistanceTable, LibraryMask, ShardedTable, TableShard};
+pub use transport::TransportKind;

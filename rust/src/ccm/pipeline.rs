@@ -28,7 +28,7 @@
 //! transform becomes one job per shard ([`sharded_transform_rdds`]): a
 //! task computes the simplex predictions for its shard's query rows only
 //! (`ComputeBackend::shard_chunk_into` — in-process by default, or across
-//! a process boundary via `ccm::process::ProcessBackend`), and the driver
+//! a process boundary via `ccm::cluster::ClusterBackend`), and the driver
 //! concatenates chunks in row order and applies Pearson
 //! ([`combine_shard_chunks`]) — arithmetic identical to the unsharded
 //! tail, so skills are bit-identical.

@@ -1,776 +1,12 @@
-//! Process-separated compute: a serializing [`ComputeBackend`] that ships
-//! CCM tasks to forked worker processes over pipes — the first genuine
-//! process boundary in the stack (native_spark-style: the driver moves
-//! serialized work to executors instead of sharing memory).
-//!
-//! # Wire protocol (version [`WIRE_VERSION`])
-//!
-//! Line-delimited JSON over the worker's stdin/stdout. Large read-only
-//! state moves once per worker as content-addressed *broadcasts*; tasks
-//! then reference broadcasts by id and carry only library-row indices —
-//! a few KB, exactly the index-only task layout PR 1's zero-copy
-//! [`CrossMapInput`] made possible.
-//!
-//! Worker -> driver on startup:
-//!
-//! ```json
-//! {"type":"hello","v":1,"pid":12345}
-//! ```
-//!
-//! Driver -> worker (broadcasts are not acknowledged; tasks get exactly
-//! one `result` or `error` reply):
-//!
-//! ```json
-//! {"v":1,"type":"broadcast","id":"<hex64>","kind":"problem",
-//!  "vecs":[...],"targets":[...],"times":[...]}
-//! {"v":1,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
-//! {"v":1,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
-//!  "row_lo":0,"row_hi":100,"row_len":64,"n":400,"t0":2,
-//!  "neighbors":[...],"vecs":[...]}
-//! {"v":1,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
-//!  "lib_rows":[...],"e":2,"theiler":0}
-//! {"v":1,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
-//!  "targets":"<hex64>","lib_rows":[...],"e":2,"theiler":0}
-//! {"type":"shutdown"}
-//! ```
-//!
-//! Worker -> driver replies:
-//!
-//! ```json
-//! {"type":"result","task":7,"rho":0.93,"preds":[...]}
-//! {"type":"result","task":8,"preds":[...]}
-//! {"type":"error","task":8,"msg":"unknown broadcast deadbeef"}
-//! ```
-//!
-//! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
-//! and f32 -> f64 is exact, so every finite value survives the pipe
-//! bit-for-bit (`util::json` tests pin this), keeping process-backend
-//! results bit-identical to in-process ones.
-//!
-//! # Lifecycle and failure handling
-//!
-//! The driver spawns `parccm worker` children (handshake validates the
-//! wire version), tracks which broadcast each worker holds, and
-//! dispatches tasks to idle workers — preferring one that already holds
-//! the task's broadcasts (shard-aware scheduling: shard `s` gravitates
-//! to the worker that first served it). A worker that dies mid-task
-//! (EOF/EPIPE) is reaped, a replacement is spawned, and the task is
-//! requeued on another worker with its broadcasts re-shipped from the
-//! driver-side payload cache — RDD-style task resilience across a real
-//! process boundary. After [`MAX_TASK_ATTEMPTS`] failures the task
-//! panics, which the engine's own task-retry then surfaces as a job
-//! failure.
-//!
-//! Known limitation: broadcasts are retained for the backend's lifetime
-//! (driver-side serialized payloads and worker-side decoded stores) —
-//! there is no evict message yet. Memory therefore grows with the
-//! parameter grid; fine at current scenario sizes, and the ROADMAP
-//! tracks broadcast eviction alongside shard replicas.
+//! Compatibility shim: PR 3 split the process-separated backend into
+//! [`crate::ccm::transport`] (the byte layer: pipe/fork and TCP-loopback
+//! transports, hello/version negotiation, death detection) and
+//! [`crate::ccm::cluster`] (the wire format and the replica-aware
+//! scheduler). The old `ProcessBackend` name is the pipe-transport
+//! [`ClusterBackend`][crate::ccm::cluster::ClusterBackend] with a
+//! replication factor of 1 — construction and behavior are unchanged
+//! (bit-identical results, same requeue-on-death semantics), so existing
+//! callers keep working through these re-exports.
 
-use std::collections::{HashMap, HashSet};
-use std::io::{BufRead, BufReader, Write};
-use std::path::{Path, PathBuf};
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-
-use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
-use crate::ccm::table::TableShard;
-use crate::native::NativeBackend;
-use crate::util::json::Json;
-
-/// Protocol version; bumped on any incompatible message change. The
-/// handshake rejects mismatched workers instead of mis-decoding them.
-pub const WIRE_VERSION: u64 = 1;
-
-/// Attempts per task across worker replacements before giving up.
-pub const MAX_TASK_ATTEMPTS: usize = 3;
-
-// ---------------------------------------------------------------------------
-// content addressing (same FNV-1a scheme as TableShard::wire_id — one
-// shared helper so shard identity and wire dedup keys can never diverge)
-// ---------------------------------------------------------------------------
-
-use crate::ccm::table::{fnv1a64_word as fnv_word, FNV_OFFSET};
-
-fn fnv_f32s(mut h: u64, xs: &[f32]) -> u64 {
-    h = fnv_word(h, xs.len() as u64);
-    for &x in xs {
-        h = fnv_word(h, x.to_bits() as u64);
-    }
-    h
-}
-
-/// Content id of a brute-force problem broadcast (manifold + targets +
-/// times). Hashing is O(n) per task but microseconds against a k-NN sweep,
-/// and content addressing can never serve stale state after reallocation.
-fn problem_id(vecs: &[f32], targets: &[f32], times: &[f32]) -> u64 {
-    fnv_f32s(fnv_f32s(fnv_f32s(fnv_word(FNV_OFFSET, 1), vecs), targets), times)
-}
-
-/// Content id of a targets-only broadcast (sharded table mode).
-fn targets_id(targets: &[f32]) -> u64 {
-    fnv_f32s(fnv_word(FNV_OFFSET, 2), targets)
-}
-
-fn hex(id: u64) -> String {
-    format!("{id:016x}")
-}
-
-// ---------------------------------------------------------------------------
-// payload builders (driver side; cached per broadcast id)
-// ---------------------------------------------------------------------------
-
-fn broadcast_header(id: u64, kind: &str) -> Vec<(&'static str, Json)> {
-    vec![
-        ("v", Json::Num(WIRE_VERSION as f64)),
-        ("type", Json::Str("broadcast".into())),
-        ("id", Json::Str(hex(id))),
-        ("kind", Json::Str(kind.to_string())),
-    ]
-}
-
-fn problem_payload(id: u64, vecs: &[f32], targets: &[f32], times: &[f32]) -> String {
-    let mut fields = broadcast_header(id, "problem");
-    fields.push(("vecs", Json::f32s(vecs)));
-    fields.push(("targets", Json::f32s(targets)));
-    fields.push(("times", Json::f32s(times)));
-    Json::obj(fields).to_string()
-}
-
-fn targets_payload(id: u64, targets: &[f32]) -> String {
-    let mut fields = broadcast_header(id, "targets");
-    fields.push(("targets", Json::f32s(targets)));
-    Json::obj(fields).to_string()
-}
-
-fn shard_payload(id: u64, shard: &TableShard) -> String {
-    let (neighbors, vecs) = shard.raw_parts();
-    let mut fields = broadcast_header(id, "shard");
-    fields.push(("shard_id", Json::Num(shard.shard_id as f64)));
-    fields.push(("row_lo", Json::Num(shard.row_lo as f64)));
-    fields.push(("row_hi", Json::Num(shard.row_hi as f64)));
-    fields.push(("row_len", Json::Num(shard.row_len() as f64)));
-    fields.push(("n", Json::Num(shard.n as f64)));
-    fields.push(("t0", Json::Num(shard.t0 as f64)));
-    fields.push(("neighbors", Json::u32s(neighbors)));
-    fields.push(("vecs", Json::f32s(vecs)));
-    Json::obj(fields).to_string()
-}
-
-// ---------------------------------------------------------------------------
-// worker (child-process side)
-// ---------------------------------------------------------------------------
-
-enum Stored {
-    Problem { vecs: Vec<f32>, targets: Vec<f32>, times: Vec<f32> },
-    Targets(Vec<f32>),
-    Shard(TableShard),
-}
-
-fn field_f64(msg: &Json, key: &str) -> Result<f64, String> {
-    msg.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{key}'"))
-}
-
-fn field_usize(msg: &Json, key: &str) -> Result<usize, String> {
-    Ok(field_f64(msg, key)? as usize)
-}
-
-fn field_str<'a>(msg: &'a Json, key: &str) -> Result<&'a str, String> {
-    msg.get(key).and_then(Json::as_str).ok_or_else(|| format!("missing string '{key}'"))
-}
-
-fn field_f32s(msg: &Json, key: &str) -> Result<Vec<f32>, String> {
-    msg.get(key).and_then(Json::as_f32s).ok_or_else(|| format!("missing f32 array '{key}'"))
-}
-
-fn store_broadcast(store: &mut HashMap<String, Stored>, msg: &Json) -> Result<(), String> {
-    let id = field_str(msg, "id")?.to_string();
-    let value = match field_str(msg, "kind")? {
-        "problem" => Stored::Problem {
-            vecs: field_f32s(msg, "vecs")?,
-            targets: field_f32s(msg, "targets")?,
-            times: field_f32s(msg, "times")?,
-        },
-        "targets" => Stored::Targets(field_f32s(msg, "targets")?),
-        "shard" => Stored::Shard(TableShard::from_parts(
-            field_usize(msg, "shard_id")?,
-            field_usize(msg, "row_lo")?,
-            field_usize(msg, "row_hi")?,
-            field_usize(msg, "row_len")?,
-            field_usize(msg, "n")?,
-            field_usize(msg, "t0")?,
-            msg.get("neighbors").and_then(Json::as_u32s).ok_or("missing 'neighbors'")?,
-            field_f32s(msg, "vecs")?,
-        )),
-        other => return Err(format!("unknown broadcast kind '{other}'")),
-    };
-    store.insert(id, value);
-    Ok(())
-}
-
-fn run_task(
-    store: &HashMap<String, Stored>,
-    arena: &mut TaskArena,
-    msg: &Json,
-) -> Result<Json, String> {
-    let task = field_f64(msg, "task")?;
-    let lib_rows = msg
-        .get("lib_rows")
-        .and_then(Json::as_usizes)
-        .ok_or("missing 'lib_rows'")?;
-    let e = field_usize(msg, "e")?;
-    let theiler = field_f64(msg, "theiler")? as f32;
-    let backend = NativeBackend;
-    match field_str(msg, "op")? {
-        "cross_map" => {
-            let pid = field_str(msg, "problem")?;
-            let Some(Stored::Problem { vecs, targets, times }) = store.get(pid) else {
-                return Err(format!("unknown broadcast {pid}"));
-            };
-            let input = CrossMapInput {
-                vecs,
-                targets,
-                times,
-                lib_rows: &lib_rows,
-                e,
-                theiler,
-            };
-            let rho = backend.cross_map_into(&input, arena);
-            Ok(Json::obj(vec![
-                ("type", Json::Str("result".into())),
-                ("task", Json::Num(task)),
-                ("rho", Json::Num(rho as f64)),
-                ("preds", Json::f32s(&arena.preds)),
-            ]))
-        }
-        "shard_chunk" => {
-            let sid = field_str(msg, "shard")?;
-            let tid = field_str(msg, "targets")?;
-            let Some(Stored::Shard(shard)) = store.get(sid) else {
-                return Err(format!("unknown broadcast {sid}"));
-            };
-            let Some(Stored::Targets(targets)) = store.get(tid) else {
-                return Err(format!("unknown broadcast {tid}"));
-            };
-            let mut preds = Vec::new();
-            backend.shard_chunk_into(shard, targets, theiler, &lib_rows, e, arena, &mut preds);
-            Ok(Json::obj(vec![
-                ("type", Json::Str("result".into())),
-                ("task", Json::Num(task)),
-                ("preds", Json::f32s(&preds)),
-            ]))
-        }
-        other => Err(format!("unknown op '{other}'")),
-    }
-}
-
-/// The worker process entry point (`parccm worker`): serve broadcasts and
-/// tasks from stdin until EOF (driver gone) or an explicit shutdown.
-/// Replies go to stdout, one JSON object per line; diagnostics to stderr.
-pub fn worker_main() -> std::process::ExitCode {
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let mut out = stdout.lock();
-    let hello = Json::obj(vec![
-        ("type", Json::Str("hello".into())),
-        ("v", Json::Num(WIRE_VERSION as f64)),
-        ("pid", Json::Num(std::process::id() as f64)),
-    ]);
-    if writeln!(out, "{hello}").and_then(|_| out.flush()).is_err() {
-        return std::process::ExitCode::FAILURE;
-    }
-    let mut store: HashMap<String, Stored> = HashMap::new();
-    let mut arena = TaskArena::new();
-    for line in stdin.lock().lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let msg = match Json::parse(&line) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("[worker {}] bad message: {e}", std::process::id());
-                return std::process::ExitCode::FAILURE;
-            }
-        };
-        let reply = match msg.get("type").and_then(Json::as_str) {
-            Some("shutdown") => return std::process::ExitCode::SUCCESS,
-            Some("broadcast") => match store_broadcast(&mut store, &msg) {
-                Ok(()) => None, // broadcasts are unacknowledged
-                Err(e) => Some(error_reply(&msg, e)),
-            },
-            Some("task") => match run_task(&store, &mut arena, &msg) {
-                Ok(r) => Some(r),
-                Err(e) => Some(error_reply(&msg, e)),
-            },
-            other => Some(error_reply(&msg, format!("unknown message type {other:?}"))),
-        };
-        if let Some(reply) = reply {
-            if writeln!(out, "{reply}").and_then(|_| out.flush()).is_err() {
-                break; // driver hung up
-            }
-        }
-    }
-    std::process::ExitCode::SUCCESS
-}
-
-fn error_reply(msg: &Json, err: String) -> Json {
-    Json::obj(vec![
-        ("type", Json::Str("error".into())),
-        ("task", msg.get("task").cloned().unwrap_or(Json::Null)),
-        ("msg", Json::Str(err)),
-    ])
-}
-
-// ---------------------------------------------------------------------------
-// driver (parent-process side)
-// ---------------------------------------------------------------------------
-
-struct Worker {
-    child: Child,
-    stdin: ChildStdin,
-    stdout: BufReader<ChildStdout>,
-    /// Broadcast ids this worker holds (reset on respawn).
-    has: HashSet<u64>,
-    pid: u32,
-}
-
-impl Worker {
-    fn send(&mut self, line: &str) -> std::io::Result<()> {
-        self.stdin.write_all(line.as_bytes())?;
-        self.stdin.write_all(b"\n")?;
-        self.stdin.flush()
-    }
-
-    fn recv(&mut self) -> std::io::Result<Json> {
-        let mut line = String::new();
-        loop {
-            line.clear();
-            if self.stdout.read_line(&mut line)? == 0 {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::UnexpectedEof,
-                    "worker closed its pipe",
-                ));
-            }
-            if line.trim().is_empty() {
-                continue;
-            }
-            return Json::parse(&line).map_err(|e| {
-                std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
-            });
-        }
-    }
-}
-
-#[derive(Default)]
-struct PoolState {
-    idle: Vec<Worker>,
-    /// Workers existing (idle or leased to a task).
-    live: usize,
-    /// Workers replaced after dying mid-exchange.
-    respawns: u64,
-}
-
-/// A [`ComputeBackend`] whose cross-map work executes in forked worker
-/// processes (see the module docs for the wire protocol). `cross_map_into`
-/// and `shard_chunk_into` cross the process boundary; `simplex_tail_into`
-/// and `distance_matrix` are driver-side combine/build steps and run
-/// locally on the native backend.
-pub struct ProcessBackend {
-    cmd: PathBuf,
-    state: Mutex<PoolState>,
-    cv: Condvar,
-    /// Serialized broadcast lines by id, for (re-)shipping to any worker.
-    payloads: Mutex<HashMap<u64, Arc<String>>>,
-    next_task: AtomicU64,
-    local: NativeBackend,
-}
-
-impl ProcessBackend {
-    /// Spawn `workers` children of this executable (`<current_exe> worker`).
-    pub fn new(workers: usize) -> std::io::Result<ProcessBackend> {
-        Self::with_command(std::env::current_exe()?, workers)
-    }
-
-    /// Spawn `workers` children of an explicit binary (tests pass
-    /// `env!("CARGO_BIN_EXE_parccm")`).
-    pub fn with_command(
-        cmd: impl Into<PathBuf>,
-        workers: usize,
-    ) -> std::io::Result<ProcessBackend> {
-        let cmd = cmd.into();
-        let workers = workers.max(1);
-        let mut idle = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            idle.push(spawn_worker(&cmd)?);
-        }
-        Ok(ProcessBackend {
-            cmd,
-            state: Mutex::new(PoolState { live: idle.len(), idle, respawns: 0 }),
-            cv: Condvar::new(),
-            payloads: Mutex::new(HashMap::new()),
-            next_task: AtomicU64::new(1),
-            local: NativeBackend,
-        })
-    }
-
-    /// Live worker pids (for observability and kill-recovery tests).
-    pub fn worker_pids(&self) -> Vec<u32> {
-        self.state.lock().unwrap().idle.iter().map(|w| w.pid).collect()
-    }
-
-    /// Workers currently alive (idle + leased).
-    pub fn num_workers(&self) -> usize {
-        self.state.lock().unwrap().live
-    }
-
-    /// How many workers have been replaced after dying.
-    pub fn respawns(&self) -> u64 {
-        self.state.lock().unwrap().respawns
-    }
-
-    /// Cache (and return) the serialized payload for broadcast `id`.
-    fn payload(&self, id: u64, build: impl FnOnce() -> String) -> Arc<String> {
-        let mut map = self.payloads.lock().unwrap();
-        Arc::clone(map.entry(id).or_insert_with(|| Arc::new(build())))
-    }
-
-    /// Lease an idle worker, preferring one that already holds every id in
-    /// `needs` (shard affinity); blocks while all workers are leased.
-    fn acquire(&self, needs: &[u64]) -> Worker {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if !st.idle.is_empty() {
-                let pos = st
-                    .idle
-                    .iter()
-                    .position(|w| needs.iter().all(|id| w.has.contains(id)))
-                    .unwrap_or(st.idle.len() - 1);
-                return st.idle.swap_remove(pos);
-            }
-            assert!(st.live > 0, "process backend has no live workers left");
-            st = self.cv.wait(st).unwrap();
-        }
-    }
-
-    fn release(&self, worker: Worker) {
-        let mut st = self.state.lock().unwrap();
-        st.idle.push(worker);
-        drop(st);
-        self.cv.notify_all();
-    }
-
-    /// Reap a dead worker and spawn its replacement (fresh broadcast set).
-    fn discard_and_respawn(&self, mut dead: Worker) {
-        let _ = dead.child.kill();
-        let _ = dead.child.wait();
-        let replacement = spawn_worker(&self.cmd);
-        let mut st = self.state.lock().unwrap();
-        st.live -= 1;
-        st.respawns += 1;
-        match replacement {
-            Ok(w) => {
-                st.idle.push(w);
-                st.live += 1;
-            }
-            Err(e) => {
-                eprintln!("[process backend] failed to respawn worker: {e}");
-                assert!(st.live > 0, "process backend lost every worker and cannot respawn");
-            }
-        }
-        drop(st);
-        self.cv.notify_all();
-    }
-
-    /// One request/response exchange on `worker`: ship missing broadcasts,
-    /// send the task, read its reply.
-    fn exchange(
-        &self,
-        worker: &mut Worker,
-        needs: &[(u64, Arc<String>)],
-        task_id: u64,
-        task_line: &str,
-    ) -> std::io::Result<Json> {
-        for (id, payload) in needs {
-            if !worker.has.contains(id) {
-                worker.send(payload)?;
-                worker.has.insert(*id);
-            }
-        }
-        worker.send(task_line)?;
-        loop {
-            let reply = worker.recv()?;
-            match reply.get("type").and_then(Json::as_str) {
-                Some("result")
-                    if reply.get("task").and_then(Json::as_f64) == Some(task_id as f64) =>
-                {
-                    return Ok(reply);
-                }
-                Some("error") => {
-                    return Err(std::io::Error::other(
-                        reply
-                            .get("msg")
-                            .and_then(Json::as_str)
-                            .unwrap_or("unspecified worker error")
-                            .to_string(),
-                    ));
-                }
-                _ => continue, // hello echoes / stale lines: skip
-            }
-        }
-    }
-
-    /// Run a task to completion, requeueing on a fresh worker if the
-    /// leased one dies mid-exchange.
-    fn execute(&self, needs: &[(u64, Arc<String>)], build_task: impl Fn(u64) -> String) -> Json {
-        let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
-        let task_line = build_task(task_id);
-        let ids: Vec<u64> = needs.iter().map(|(id, _)| *id).collect();
-        let mut last_err = String::new();
-        for _attempt in 0..MAX_TASK_ATTEMPTS {
-            let mut worker = self.acquire(&ids);
-            match self.exchange(&mut worker, needs, task_id, &task_line) {
-                Ok(reply) => {
-                    self.release(worker);
-                    return reply;
-                }
-                Err(e) => {
-                    last_err = e.to_string();
-                    self.discard_and_respawn(worker);
-                }
-            }
-        }
-        panic!("process backend task {task_id} failed {MAX_TASK_ATTEMPTS} attempts: {last_err}");
-    }
-}
-
-fn spawn_worker(cmd: &Path) -> std::io::Result<Worker> {
-    let mut child = Command::new(cmd)
-        .arg("worker")
-        .stdin(Stdio::piped())
-        .stdout(Stdio::piped())
-        .spawn()?;
-    let stdin = child.stdin.take().expect("piped stdin");
-    let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-    let pid = child.id();
-    let mut worker = Worker { child, stdin, stdout, has: HashSet::new(), pid };
-    // handshake: hello with a matching wire version
-    let hello = worker.recv()?;
-    let ok = hello.get("type").and_then(Json::as_str) == Some("hello")
-        && hello.get("v").and_then(Json::as_f64) == Some(WIRE_VERSION as f64);
-    if !ok {
-        let _ = worker.child.kill();
-        let _ = worker.child.wait();
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("worker handshake failed (want v{WIRE_VERSION}, got {hello})"),
-        ));
-    }
-    Ok(worker)
-}
-
-impl Drop for ProcessBackend {
-    fn drop(&mut self) {
-        let mut st = self.state.lock().unwrap();
-        for mut w in st.idle.drain(..) {
-            let _ = w.send(r#"{"type":"shutdown"}"#);
-            let _ = w.child.wait();
-        }
-    }
-}
-
-impl ComputeBackend for ProcessBackend {
-    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
-        let id = problem_id(input.vecs, input.targets, input.times);
-        let payload =
-            self.payload(id, || problem_payload(id, input.vecs, input.targets, input.times));
-        let e = input.e;
-        let theiler = input.theiler;
-        let lib_rows = Json::usizes(input.lib_rows);
-        let reply = self.execute(&[(id, payload)], |task| {
-            Json::obj(vec![
-                ("v", Json::Num(WIRE_VERSION as f64)),
-                ("type", Json::Str("task".into())),
-                ("task", Json::Num(task as f64)),
-                ("op", Json::Str("cross_map".into())),
-                ("problem", Json::Str(hex(id))),
-                ("lib_rows", lib_rows.clone()),
-                ("e", Json::Num(e as f64)),
-                ("theiler", Json::Num(theiler as f64)),
-            ])
-            .to_string()
-        });
-        arena.preds = reply
-            .get("preds")
-            .and_then(Json::as_f32s)
-            .expect("worker result missing preds");
-        reply.get("rho").and_then(Json::as_f64).expect("worker result missing rho") as f32
-    }
-
-    fn simplex_tail_into(
-        &self,
-        dvals: &[f32],
-        tvals: &[f32],
-        pred_targets: &[f32],
-        e: usize,
-        preds: &mut Vec<f32>,
-    ) -> f32 {
-        // driver-side combine step (cheap O(n*K)); panels never ship
-        self.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
-    }
-
-    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
-        // table construction happens driver-side; shards ship afterwards
-        self.local.distance_matrix(vecs, n)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn shard_chunk_into(
-        &self,
-        shard: &TableShard,
-        targets: &[f32],
-        theiler: f32,
-        lib_rows: &[usize],
-        e: usize,
-        _arena: &mut TaskArena,
-        preds: &mut Vec<f32>,
-    ) {
-        let sid = shard.wire_id();
-        let tid = targets_id(targets);
-        let shard_line = self.payload(sid, || shard_payload(sid, shard));
-        let targets_line = self.payload(tid, || targets_payload(tid, targets));
-        let lib_rows = Json::usizes(lib_rows);
-        let reply = self.execute(&[(sid, shard_line), (tid, targets_line)], |task| {
-            Json::obj(vec![
-                ("v", Json::Num(WIRE_VERSION as f64)),
-                ("type", Json::Str("task".into())),
-                ("task", Json::Num(task as f64)),
-                ("op", Json::Str("shard_chunk".into())),
-                ("shard", Json::Str(hex(sid))),
-                ("targets", Json::Str(hex(tid))),
-                ("lib_rows", lib_rows.clone()),
-                ("e", Json::Num(e as f64)),
-                ("theiler", Json::Num(theiler as f64)),
-            ])
-            .to_string()
-        });
-        *preds = reply
-            .get("preds")
-            .and_then(Json::as_f32s)
-            .expect("worker result missing preds");
-    }
-
-    fn name(&self) -> &'static str {
-        "process"
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::ccm::pipeline::CcmProblem;
-    use crate::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
-
-    // In-process round-trip tests of the wire pieces; full multi-process
-    // coverage lives in tests/integration_process.rs (it needs the built
-    // `parccm` binary via CARGO_BIN_EXE).
-
-    #[test]
-    fn content_ids_are_stable_and_sensitive() {
-        let a = vec![1.0f32, 2.0, 3.0];
-        let b = vec![1.0f32, 2.0, 3.0];
-        let c = vec![1.0f32, 2.0, 3.5];
-        assert_eq!(problem_id(&a, &a, &a), problem_id(&b, &b, &b));
-        assert_ne!(problem_id(&a, &a, &a), problem_id(&a, &a, &c));
-        // kind-tagged: the same bytes as problem vs targets never collide
-        assert_ne!(problem_id(&a, &[], &[]), targets_id(&a));
-    }
-
-    #[test]
-    fn broadcast_payloads_roundtrip_through_worker_store() {
-        let (x, y) = coupled_logistic(120, CoupledLogisticParams::default());
-        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
-        let pid = problem_id(&problem.emb.vecs, &problem.targets, &problem.times);
-        let line = problem_payload(pid, &problem.emb.vecs, &problem.targets, &problem.times);
-        let mut store = HashMap::new();
-        store_broadcast(&mut store, &Json::parse(&line).unwrap()).unwrap();
-        match store.get(&hex(pid)) {
-            Some(Stored::Problem { vecs, targets, times }) => {
-                assert_eq!(vecs, &problem.emb.vecs);
-                assert_eq!(targets, &problem.targets);
-                assert_eq!(times, &problem.times);
-            }
-            _ => panic!("problem broadcast not stored"),
-        }
-    }
-
-    #[test]
-    fn shard_payload_roundtrips_with_identical_wire_id() {
-        let (x, y) = coupled_logistic(120, CoupledLogisticParams::default());
-        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
-        let table = crate::ccm::table::DistanceTable::build_truncated(&problem.emb, 16);
-        let sharded = table.shard(3);
-        let shard = &sharded.shards()[1];
-        let line = shard_payload(shard.wire_id(), shard);
-        let mut store = HashMap::new();
-        store_broadcast(&mut store, &Json::parse(&line).unwrap()).unwrap();
-        match store.get(&hex(shard.wire_id())) {
-            Some(Stored::Shard(s)) => assert_eq!(s.wire_id(), shard.wire_id()),
-            _ => panic!("shard broadcast not stored"),
-        }
-    }
-
-    #[test]
-    fn worker_task_runner_matches_local_backend() {
-        // drive run_task directly (no subprocess): cross_map over the wire
-        // model must equal the local native backend bit-for-bit
-        let (x, y) = coupled_logistic(200, CoupledLogisticParams::default());
-        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
-        let pid = problem_id(&problem.emb.vecs, &problem.targets, &problem.times);
-        let mut store = HashMap::new();
-        let line = problem_payload(pid, &problem.emb.vecs, &problem.targets, &problem.times);
-        store_broadcast(&mut store, &Json::parse(&line).unwrap()).unwrap();
-        let lib_rows: Vec<usize> = (0..problem.emb.n).step_by(3).collect();
-        let task = Json::obj(vec![
-            ("v", Json::Num(1.0)),
-            ("type", Json::Str("task".into())),
-            ("task", Json::Num(9.0)),
-            ("op", Json::Str("cross_map".into())),
-            ("problem", Json::Str(hex(pid))),
-            ("lib_rows", Json::usizes(&lib_rows)),
-            ("e", Json::Num(2.0)),
-            ("theiler", Json::Num(0.0)),
-        ]);
-        // simulate the reply crossing the pipe as text
-        let mut arena = TaskArena::new();
-        let reply = run_task(&store, &mut arena, &task).unwrap();
-        let reply = Json::parse(&reply.to_string()).unwrap();
-
-        let sample = crate::ccm::subsample::LibrarySample {
-            sample_id: 0,
-            params: crate::ccm::params::CcmParams::new(2, 1, lib_rows.len()),
-            rows: lib_rows,
-        };
-        let want = NativeBackend.cross_map(&problem.input_for(&sample));
-        assert_eq!(reply.get("rho").and_then(Json::as_f64).unwrap() as f32, want.rho);
-        assert_eq!(reply.get("preds").and_then(Json::as_f32s).unwrap(), want.preds);
-    }
-
-    #[test]
-    fn unknown_broadcast_yields_error() {
-        let store = HashMap::new();
-        let mut arena = TaskArena::new();
-        let task = Json::obj(vec![
-            ("type", Json::Str("task".into())),
-            ("task", Json::Num(1.0)),
-            ("op", Json::Str("cross_map".into())),
-            ("problem", Json::Str("feedbeef00000000".into())),
-            ("lib_rows", Json::usizes(&[1, 2, 3])),
-            ("e", Json::Num(2.0)),
-            ("theiler", Json::Num(0.0)),
-        ]);
-        let err = run_task(&store, &mut arena, &task).unwrap_err();
-        assert!(err.contains("unknown broadcast"), "{err}");
-    }
-}
+pub use crate::ccm::cluster::{worker_main, ClusterBackend as ProcessBackend, MAX_TASK_ATTEMPTS};
+pub use crate::ccm::transport::{MIN_WIRE_VERSION, WIRE_VERSION};

@@ -1,0 +1,431 @@
+//! Worker transports: how framed line-JSON messages move between the
+//! driver and a worker process, independent of *what* the messages say.
+//!
+//! The wire format itself (message kinds, broadcasts, tasks) lives in
+//! [`crate::ccm::cluster`]; this module owns the byte layer under it:
+//!
+//! * [`Transport`] — framed send/recv of one JSON object per line, with
+//!   death detection folded into `std::io` errors (EOF / broken pipe /
+//!   connection reset all surface as `Err` or `Ok(None)` and mean "the
+//!   peer is gone").
+//! * [`PipeTransport`] — the original fork + stdio transport: the worker
+//!   is a child of the driver and speaks on its stdin/stdout.
+//! * [`TcpTransport`] — a TCP-loopback transport: the driver binds an
+//!   ephemeral listener, spawns `parccm worker --connect 127.0.0.1:PORT`,
+//!   and accepts exactly one connection per worker. The same versioned
+//!   wire protocol rides on the socket, so pipe and TCP results are
+//!   bit-identical (asserted in `tests/integration_cluster.rs`).
+//! * Connection lifecycle — [`connect_worker`] spawns + handshakes a
+//!   worker over either transport; [`negotiate_hello`] is the pure
+//!   version-negotiation step, unit-testable with doctored handshakes.
+//!
+//! # Version negotiation
+//!
+//! The worker's first message is a `hello` advertising the highest wire
+//! version it speaks. The driver accepts any version in
+//! [`MIN_WIRE_VERSION`]..=[`WIRE_VERSION`] and runs the connection at the
+//! *minimum* of the two sides (a v1 worker simply never receives v2-only
+//! messages such as `evict`). Anything outside the range is a clean,
+//! immediate error naming both sides' versions — never a hang and never a
+//! silent requeue loop (the regression tests doctor the advertised
+//! version via `PARCCM_TEST_HELLO_V`, a child-env test seam).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Highest protocol version this build speaks; bumped on any incompatible
+/// message change. v2 added the `evict` message and the capability-carrying
+/// hello (`transport`, `caps` fields).
+pub const WIRE_VERSION: u64 = 2;
+
+/// Oldest protocol version the driver still accepts. v1 workers are served
+/// without v2-only traffic (no `evict` is ever sent to them).
+pub const MIN_WIRE_VERSION: u64 = 1;
+
+/// How long the driver waits for a spawned TCP worker to dial back before
+/// declaring the spawn failed (keeps a broken worker from hanging CI).
+pub const TCP_ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Which byte layer a worker connection uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Forked child, line-JSON on its stdin/stdout (the PR 2 transport).
+    #[default]
+    Pipe,
+    /// Forked child dialing back over TCP loopback; same wire protocol.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Stable name used in hello messages, CLI flags, and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Pipe => "pipe",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a `--transport` value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "pipe" => Some(TransportKind::Pipe),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// One framed line-JSON connection to a worker. Implementations must fold
+/// peer death into the return values: a broken connection is an `Err` on
+/// send, and `Ok(None)` (clean EOF) or `Err` on receive — the scheduler
+/// treats all three as "worker gone, requeue its task".
+pub trait Transport: Send {
+    /// Ship one pre-serialized JSON object (no trailing newline) and flush.
+    fn send_line(&mut self, line: &str) -> std::io::Result<()>;
+
+    /// Receive the next line; `Ok(None)` means the peer closed cleanly.
+    fn recv_line(&mut self) -> std::io::Result<Option<String>>;
+
+    /// Which byte layer this is (for logs and hello messages).
+    fn kind(&self) -> TransportKind;
+}
+
+/// Receive the next non-empty line as parsed JSON; EOF and parse failures
+/// become `std::io` errors so callers have a single failure channel.
+pub fn recv_json(t: &mut dyn Transport) -> std::io::Result<Json> {
+    loop {
+        match t.recv_line()? {
+            None => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "worker closed its connection",
+                ))
+            }
+            Some(line) if line.trim().is_empty() => continue,
+            Some(line) => {
+                return Json::parse(&line).map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                })
+            }
+        }
+    }
+}
+
+fn read_line_opt<R: BufRead>(r: &mut R) -> std::io::Result<Option<String>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        Ok(None)
+    } else {
+        Ok(Some(line))
+    }
+}
+
+/// Fork + stdio transport (driver side): the worker's stdin/stdout pipes.
+pub struct PipeTransport {
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl Transport for PipeTransport {
+    fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.stdin.write_all(line.as_bytes())?;
+        self.stdin.write_all(b"\n")?;
+        self.stdin.flush()
+    }
+
+    fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        read_line_opt(&mut self.stdout)
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Pipe
+    }
+}
+
+/// TCP transport (either side): a connected stream plus a buffered reader
+/// over its clone. `TCP_NODELAY` is set — the protocol is small
+/// request/response lines, exactly the shape Nagle's algorithm penalizes.
+pub struct TcpTransport {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl TcpTransport {
+    /// Wrap an already-connected stream (used by both driver and worker).
+    pub fn from_stream(stream: TcpStream) -> std::io::Result<TcpTransport> {
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(TcpTransport { writer: stream, reader })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()
+    }
+
+    fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        read_line_opt(&mut self.reader)
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+}
+
+/// A spawned worker process plus its connected transport — what the
+/// cluster scheduler leases tasks onto.
+pub struct WorkerLink {
+    /// Child process handle (kill/wait on discard and shutdown).
+    pub child: Child,
+    /// The framed connection to it.
+    pub transport: Box<dyn Transport>,
+    /// OS pid (observability and kill-recovery tests).
+    pub pid: u32,
+}
+
+/// The worker's negotiated identity after a successful hello.
+#[derive(Clone, Debug)]
+pub struct Hello {
+    /// Version the connection runs at: `min(worker's, ours)`.
+    pub version: u64,
+    /// Worker-reported pid (equals the child pid for spawned workers).
+    pub pid: u64,
+    /// Transport the worker believes it is serving on (v2 hellos).
+    pub transport: Option<String>,
+    /// Capability strings (v2 hellos; e.g. `"evict"`).
+    pub caps: Vec<String>,
+}
+
+/// Validate a worker hello and negotiate the connection version.
+///
+/// This is the dedicated version-mismatch failure path: a worker speaking
+/// a version outside [`MIN_WIRE_VERSION`]..=[`WIRE_VERSION`] produces an
+/// error naming **both** versions, so the operator sees exactly which side
+/// is stale instead of a hang or a silent requeue loop.
+pub fn negotiate_hello(msg: &Json) -> Result<Hello, String> {
+    if msg.get("type").and_then(Json::as_str) != Some("hello") {
+        return Err(format!("expected hello handshake, got {msg}"));
+    }
+    let pid = msg.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let Some(v) = msg.get("v").and_then(Json::as_f64) else {
+        return Err(format!("hello from worker pid {pid} carries no wire version: {msg}"));
+    };
+    let v = v as u64;
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&v) {
+        return Err(format!(
+            "wire version mismatch: driver speaks v{MIN_WIRE_VERSION}..v{WIRE_VERSION}, \
+             worker pid {pid} speaks v{v} — refusing the connection"
+        ));
+    }
+    let caps = match msg.get("caps") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .filter_map(|c| c.as_str().map(str::to_string))
+            .collect(),
+        _ => Vec::new(),
+    };
+    Ok(Hello {
+        version: v.min(WIRE_VERSION),
+        pid,
+        transport: msg.get("transport").and_then(Json::as_str).map(str::to_string),
+        caps,
+    })
+}
+
+/// Spawn a worker over `kind` and complete the hello handshake, returning
+/// the connected link and the negotiated [`Hello`]. `extra_env` is set on
+/// the child only (used by tests to doctor the advertised version).
+pub fn connect_worker(
+    cmd: &Path,
+    kind: TransportKind,
+    extra_env: &[(String, String)],
+) -> std::io::Result<(WorkerLink, Hello)> {
+    let mut link = match kind {
+        TransportKind::Pipe => spawn_pipe(cmd, extra_env)?,
+        TransportKind::Tcp => spawn_tcp(cmd, extra_env)?,
+    };
+    let hello = recv_json(link.transport.as_mut())?;
+    match negotiate_hello(&hello) {
+        Ok(h) => Ok((link, h)),
+        Err(e) => {
+            let _ = link.child.kill();
+            let _ = link.child.wait();
+            Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+        }
+    }
+}
+
+fn spawn_pipe(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<WorkerLink> {
+    let mut command = Command::new(cmd);
+    command.arg("worker").stdin(Stdio::piped()).stdout(Stdio::piped());
+    for (k, v) in extra_env {
+        command.env(k, v);
+    }
+    let mut child = command.spawn()?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let pid = child.id();
+    Ok(WorkerLink { child, transport: Box::new(PipeTransport { stdin, stdout }), pid })
+}
+
+fn spawn_tcp(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<WorkerLink> {
+    // one ephemeral listener per worker: unambiguous child <-> connection
+    // mapping without trusting accept order
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let mut command = Command::new(cmd);
+    command
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null());
+    for (k, v) in extra_env {
+        command.env(k, v);
+    }
+    let mut child = command.spawn()?;
+    // non-blocking accept with a deadline: a worker that crashes before
+    // dialing back (or never dials) must fail the spawn, not hang it
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + TCP_ACCEPT_TIMEOUT;
+    let stream = loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => break stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if let Some(status) = child.try_wait()? {
+                    return Err(std::io::Error::other(format!(
+                        "tcp worker exited before connecting ({status})"
+                    )));
+                }
+                if Instant::now() >= deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("tcp worker did not connect within {TCP_ACCEPT_TIMEOUT:?}"),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e);
+            }
+        }
+    };
+    // the accepted stream must be blocking regardless of what it inherited
+    stream.set_nonblocking(false)?;
+    let pid = child.id();
+    Ok(WorkerLink { child, transport: Box::new(TcpTransport::from_stream(stream)?), pid })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hello(v: f64) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(v)),
+            ("pid", Json::Num(4242.0)),
+        ])
+    }
+
+    #[test]
+    fn negotiates_current_and_legacy_versions() {
+        let h = negotiate_hello(&hello(WIRE_VERSION as f64)).unwrap();
+        assert_eq!(h.version, WIRE_VERSION);
+        assert_eq!(h.pid, 4242);
+        let h1 = negotiate_hello(&hello(MIN_WIRE_VERSION as f64)).unwrap();
+        assert_eq!(h1.version, MIN_WIRE_VERSION, "legacy workers run at their own version");
+    }
+
+    #[test]
+    fn mismatch_error_names_both_versions() {
+        let err = negotiate_hello(&hello(99.0)).unwrap_err();
+        assert!(err.contains("v99"), "{err}");
+        assert!(err.contains(&format!("v{WIRE_VERSION}")), "{err}");
+        assert!(err.contains(&format!("v{MIN_WIRE_VERSION}")), "{err}");
+        assert!(err.contains("4242"), "must name the offending worker: {err}");
+        let too_old = negotiate_hello(&hello(0.0)).unwrap_err();
+        assert!(too_old.contains("v0"), "{too_old}");
+    }
+
+    #[test]
+    fn missing_or_malformed_hello_is_a_clean_error() {
+        let no_v = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("pid", Json::Num(7.0)),
+        ]);
+        assert!(negotiate_hello(&no_v).unwrap_err().contains("no wire version"));
+        let not_hello = Json::obj(vec![("type", Json::Str("result".into()))]);
+        assert!(negotiate_hello(&not_hello).unwrap_err().contains("expected hello"));
+    }
+
+    #[test]
+    fn hello_caps_and_transport_parse() {
+        let msg = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(2.0)),
+            ("pid", Json::Num(1.0)),
+            ("transport", Json::Str("tcp".into())),
+            ("caps", Json::Arr(vec![Json::Str("evict".into())])),
+        ]);
+        let h = negotiate_hello(&msg).unwrap();
+        assert_eq!(h.transport.as_deref(), Some("tcp"));
+        assert_eq!(h.caps, vec!["evict".to_string()]);
+    }
+
+    #[test]
+    fn transport_kind_round_trips() {
+        for k in [TransportKind::Pipe, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn tcp_transport_round_trips_lines() {
+        // loopback socket pair exercising the framed send/recv path
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut t = TcpTransport::from_stream(TcpStream::connect(addr).unwrap()).unwrap();
+            t.send_line(r#"{"type":"ping"}"#).unwrap();
+            recv_json(&mut t).unwrap()
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        let msg = recv_json(&mut server).unwrap();
+        assert_eq!(msg.get("type").and_then(Json::as_str), Some("ping"));
+        server.send_line(r#"{"type":"pong"}"#).unwrap();
+        let reply = client.join().unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("pong"));
+        assert_eq!(server.kind(), TransportKind::Tcp);
+    }
+
+    #[test]
+    fn tcp_recv_reports_clean_eof() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            // connect and immediately hang up
+            drop(TcpStream::connect(addr).unwrap());
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        t.join().unwrap();
+        assert!(matches!(server.recv_line(), Ok(None)), "EOF must be Ok(None)");
+        let err = recv_json(&mut server).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+}

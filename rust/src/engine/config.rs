@@ -69,6 +69,12 @@ pub struct EngineConfig {
     pub task_overhead_us: u64,
     /// Simulated broadcast bandwidth, MB/s per node link (DES).
     pub broadcast_mb_per_s: f64,
+    /// Broadcast replication factor in the DES ship model (the cluster
+    /// runtime's `--replicas R`): the first ship of a broadcast also
+    /// places copies on `R - 1` further nodes (each on its own link), so
+    /// a task re-run on a replica node after a worker death ships zero
+    /// additional bytes. 1 = ship only where tasks land (Spark default).
+    pub broadcast_replicas: usize,
     /// OS threads actually executing tasks (defaults to the machine's
     /// available parallelism; results never depend on this).
     pub real_threads: usize,
@@ -92,9 +98,15 @@ impl EngineConfig {
             default_parallelism: 8,
             task_overhead_us: 500,
             broadcast_mb_per_s: 400.0,
+            broadcast_replicas: 1,
             real_threads,
             max_task_attempts: 4,
         }
+    }
+
+    pub fn with_broadcast_replicas(mut self, r: usize) -> Self {
+        self.broadcast_replicas = r.max(1);
+        self
     }
 
     pub fn with_max_task_attempts(mut self, n: usize) -> Self {

@@ -21,6 +21,11 @@
 //! * A per-task fixed overhead models scheduler/serialization latency.
 //! * The first task of a broadcast-dependent job on each node pays the
 //!   ship time `size_bytes / bandwidth` once per (broadcast, node).
+//! * With `broadcast_replicas > 1`, the first ship of a broadcast also
+//!   places copies on the next `R - 1` nodes (round-robin, each on its
+//!   own serialized link) — pricing the cluster runtime's shard
+//!   replication. A task later scheduled on a replica node finds the
+//!   broadcast resident and ships nothing: requeue-without-reship.
 
 use std::collections::{HashMap, HashSet};
 
@@ -44,10 +49,13 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
     }
 
     let cores = config.deploy.total_cores();
+    let nodes = config.deploy.nodes();
+    let replicas = config.broadcast_replicas.clamp(1, nodes);
     let overhead = config.task_overhead_us as f64 * 1e-6;
     let bandwidth = config.broadcast_mb_per_s * 1e6; // bytes/s
     let mut core_free = vec![0.0f64; cores];
     let mut node_has_broadcast: HashSet<(u64, usize)> = HashSet::new();
+    let mut bcast_seen: HashSet<u64> = HashSet::new();
     let mut node_bcast_ready: HashMap<usize, f64> = HashMap::new();
     let mut ship_total = 0.0f64;
     let mut ship_bytes = 0u64;
@@ -90,6 +98,28 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                         ship_total += ship;
                         ship_bytes += bytes as u64;
                         start = ship_start + ship;
+                        // first ship of this broadcast anywhere: replicate
+                        // to the next R-1 nodes (their own links; the
+                        // current task does not wait on replica ships)
+                        if bcast_seen.insert(bid) && replicas > 1 {
+                            let mut placed = 1;
+                            for k in 1..nodes {
+                                if placed >= replicas {
+                                    break;
+                                }
+                                let m = (node + k) % nodes;
+                                if !node_has_broadcast.insert((bid, m)) {
+                                    continue;
+                                }
+                                let m_free =
+                                    node_bcast_ready.get(&m).copied().unwrap_or(0.0);
+                                let m_start = ship_start.max(m_free);
+                                node_bcast_ready.insert(m, m_start + ship);
+                                ship_total += ship;
+                                ship_bytes += bytes as u64;
+                                placed += 1;
+                            }
+                        }
                     } else if let Some(&link) = node_bcast_ready.get(&node) {
                         // a ship to this node may still be in flight
                         start = start.max(link);
@@ -284,6 +314,105 @@ mod tests {
         assert_eq!(shard_rep.sim_broadcast_ship_bytes, whole as u64, "one shard per node");
         assert!(shard_rep.sim_broadcast_ship_s < mono_rep.sim_broadcast_ship_s);
         assert!(shard_rep.sim_makespan_s < mono_rep.sim_makespan_s);
+    }
+
+    #[test]
+    fn replica_ships_priced_and_requeue_needs_no_reship() {
+        let bytes = 400_000_000usize; // 1s at 400 MB/s
+        let deploy = Deploy::Cluster { workers: 2, cores_per_worker: 1 };
+
+        // log A: one job, one task — it lands on node 0
+        let log_a = EventLog::default();
+        log_a.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "warm".into(),
+            num_tasks: 1,
+            submit_rel: 0.0,
+            finish_rel: 5.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        log_a.record_task(TaskRecord {
+            job_id: 1,
+            partition: 0,
+            start_rel: 0.0,
+            duration: 5.0,
+            attempts: 1,
+        });
+
+        // unreplicated: the broadcast ships only where the task ran
+        let r1 = simulate(&log_a, &config(deploy.clone()));
+        assert_eq!(r1.sim_broadcast_ship_bytes, bytes as u64);
+        // replicas=2: the first ship also places a copy on node 1
+        let c2 = config(deploy.clone()).with_broadcast_replicas(2);
+        let r2 = simulate(&log_a, &c2);
+        assert_eq!(r2.sim_broadcast_ship_bytes, 2 * bytes as u64, "replica ship priced");
+        assert!((r2.sim_broadcast_ship_s - 2.0).abs() < 1e-9);
+
+        // log B: a second (requeue-style) job over the same broadcast,
+        // submitted while job 1 still runs — FIFO lands it on node 1
+        let log_b = EventLog::default();
+        for j in log_a.jobs() {
+            log_b.record_job_submit(j);
+        }
+        for t in log_a.tasks() {
+            log_b.record_task(t);
+        }
+        log_b.record_job_submit(JobRecord {
+            job_id: 2,
+            name: "requeue".into(),
+            num_tasks: 1,
+            submit_rel: 0.001,
+            finish_rel: 6.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        log_b.record_task(TaskRecord {
+            job_id: 2,
+            partition: 0,
+            start_rel: 0.001,
+            duration: 1.0,
+            attempts: 1,
+        });
+
+        // with replication, node 1 already holds the broadcast: the
+        // requeued task ships ZERO additional bytes
+        let rb = simulate(&log_b, &c2);
+        assert_eq!(
+            rb.sim_broadcast_ship_bytes, r2.sim_broadcast_ship_bytes,
+            "requeue onto a replica node must not re-ship"
+        );
+        // without replication the second node pays the ship lazily —
+        // same total bytes, but only after the failure/requeue, which is
+        // exactly what eager replication buys
+        let rb1 = simulate(&log_b, &config(deploy));
+        assert_eq!(rb1.sim_broadcast_ship_bytes, 2 * bytes as u64);
+    }
+
+    #[test]
+    fn replicas_clamped_to_node_count() {
+        // a single-node deploy cannot hold more than one copy
+        let log2 = EventLog::default();
+        log2.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 2,
+            submit_rel: 0.0,
+            finish_rel: 2.0,
+            broadcast_deps: vec![(3, 100)],
+        });
+        for p in 0..2 {
+            log2.record_task(TaskRecord {
+                job_id: 1,
+                partition: p,
+                start_rel: 0.0,
+                duration: 1.0,
+                attempts: 1,
+            });
+        }
+        let rep = simulate(
+            &log2,
+            &config(Deploy::Local { cores: 2 }).with_broadcast_replicas(8),
+        );
+        assert_eq!(rep.sim_broadcast_ship_bytes, 100);
     }
 
     #[test]

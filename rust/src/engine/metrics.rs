@@ -157,7 +157,11 @@ pub struct ExecutionReport {
     pub sim_broadcast_ship_s: f64,
     /// Bytes the DES shipped for broadcasts, summed over (variable, node)
     /// pairs — the quantity sharding shrinks: a node running only shard
-    /// `s`'s tasks pays for shard `s`, not the whole table.
+    /// `s`'s tasks pays for shard `s`, not the whole table. With
+    /// `EngineConfig::broadcast_replicas > 1` this includes the eager
+    /// replica copies (the cost of making worker-death requeue re-ship
+    /// nothing); the cluster runtime's real counterpart is
+    /// `ClusterBackend::broadcast_ship_bytes`.
     pub sim_broadcast_ship_bytes: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,

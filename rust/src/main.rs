@@ -19,9 +19,10 @@ use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
+use parccm::ccm::cluster::cluster_from_cli;
 use parccm::ccm::driver::{run_case_policy_sharded, Case, TablePolicy};
-use parccm::ccm::process::ProcessBackend;
 use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::transport::TransportKind;
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
 use parccm::engine::Deploy;
@@ -43,9 +44,10 @@ fn main() -> ExitCode {
         Some("significance") => cmd_significance(&args),
         Some("select") => cmd_select(&args),
         Some("events") => cmd_events(&args),
-        // hidden: the ProcessBackend child entry point (speaks the JSON
-        // wire protocol on stdin/stdout — see ccm::process)
-        Some("worker") => parccm::ccm::process::worker_main(),
+        // hidden: the ClusterBackend child entry point (speaks the JSON
+        // wire protocol on stdio, or over TCP with --connect/--listen —
+        // see ccm::cluster and ccm::transport)
+        Some("worker") => parccm::ccm::cluster::worker_main(&args),
         Some("forecast") => cmd_forecast(&args),
         Some("lag") => cmd_lag(&args),
         Some("help") | None => {
@@ -83,8 +85,13 @@ fn print_help() {
            --full               paper-scale scenario (default: scaled for 1 core)\n\
            --backend native|xla|process\n\
                                 (default: xla when artifacts/ exists, else native;\n\
-                                process = forked worker processes over pipes)\n\
+                                process = the cluster runtime: worker processes)\n\
            --proc-workers N     worker processes for --backend process (default 2)\n\
+           --transport pipe|tcp transport to the workers (default pipe; tcp =\n\
+                                loopback sockets, same wire protocol + results)\n\
+           --replicas R         keep each broadcast resident on R workers so a\n\
+                                dead worker's tasks requeue with zero re-ship\n\
+                                (default 1; clamped to --proc-workers)\n\
            --artifacts DIR      artifact directory (default: artifacts)\n\
            --table full|trunc   distance-table layout for A4/A5 (default: trunc,\n\
                                 the O(n*P) truncated broadcast; bit-identical skills)\n\
@@ -120,13 +127,30 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
         }
         "process" => {
             let workers = args.get_usize("proc-workers", 2);
-            match ProcessBackend::new(workers) {
+            let replicas = args.get_usize("replicas", 1);
+            let transport = match args.get("transport") {
+                None => TransportKind::Pipe,
+                Some(t) => match TransportKind::parse(t) {
+                    Some(k) => k,
+                    None => {
+                        eprintln!("[parccm] unknown --transport '{t}', using pipe");
+                        TransportKind::Pipe
+                    }
+                },
+            };
+            let spawned = std::env::current_exe()
+                .and_then(|exe| cluster_from_cli(exe, transport, workers, replicas));
+            match spawned {
                 Ok(b) => {
-                    eprintln!("[parccm] backend: process ({workers} worker processes)");
+                    eprintln!(
+                        "[parccm] backend: cluster ({workers} workers, transport {}, replicas {})",
+                        transport.name(),
+                        b.replicas()
+                    );
                     Arc::new(b)
                 }
                 Err(e) => {
-                    eprintln!("[parccm] process backend unavailable ({e}); using native");
+                    eprintln!("[parccm] cluster backend unavailable ({e}); using native");
                     Arc::new(NativeBackend)
                 }
             }

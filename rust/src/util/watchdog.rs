@@ -1,0 +1,78 @@
+//! A per-scope hang guard: abort the whole process if a scope outlives
+//! its deadline.
+//!
+//! The integration tests that drive real subprocesses and sockets
+//! (`tests/integration_process.rs`, `tests/integration_cluster.rs`) wrap
+//! each test in a [`Watchdog`] so a wedged worker or a lost handshake
+//! fails CI within seconds instead of stalling the job until the runner's
+//! global timeout. Aborting (rather than panicking on the watchdog
+//! thread) is deliberate: the hung test thread would never observe a
+//! panic flag, but `abort` tears the test binary down immediately with a
+//! non-zero status and the label in stderr.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Guard that aborts the process if still armed when `timeout` elapses.
+/// Disarms on drop, so a test that finishes in time costs one parked
+/// thread poll at most.
+pub struct Watchdog {
+    disarmed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    /// Arm a watchdog; keep the returned guard alive for the guarded
+    /// scope (`let _guard = Watchdog::arm(...)`).
+    #[must_use = "binding to _ drops (and disarms) the guard immediately"]
+    pub fn arm(label: &'static str, timeout: Duration) -> Watchdog {
+        let disarmed = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&disarmed);
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + timeout;
+            while Instant::now() < deadline {
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            if !flag.load(Ordering::Relaxed) {
+                eprintln!(
+                    "[watchdog] '{label}' still running after {timeout:?}; \
+                     aborting so CI fails fast instead of hanging"
+                );
+                std::process::abort();
+            }
+        });
+        Watchdog { disarmed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.disarmed.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_watchdog_does_not_fire() {
+        // drop immediately; give the watchdog thread a chance to observe
+        // the flag before its (short) deadline passes
+        {
+            let _guard = Watchdog::arm("noop", Duration::from_millis(200));
+        }
+        std::thread::sleep(Duration::from_millis(400));
+        // reaching this line is the assertion: the process was not aborted
+    }
+
+    #[test]
+    fn guard_scope_outlives_fast_work() {
+        let _guard = Watchdog::arm("fast work", Duration::from_secs(60));
+        let x: u64 = (0..1000).sum();
+        assert_eq!(x, 499_500);
+    }
+}

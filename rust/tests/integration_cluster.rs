@@ -1,0 +1,373 @@
+//! End-to-end tests of the transport-generic cluster runtime: TCP
+//! loopback parity with the pipe transport, shard replication with
+//! zero-re-ship requeue, last-replica re-broadcast, wire-version
+//! negotiation (incl. the doctored-handshake regression), and broadcast
+//! eviction. Every test arms a [`Watchdog`] so a hung worker fails the CI
+//! job fast instead of stalling it.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::cluster::{
+    problem_wire_id, ClusterBackend, ClusterOptions, TEST_HELLO_V_ENV,
+};
+use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::table::DistanceTable;
+use parccm::ccm::transport::{TransportKind, MIN_WIRE_VERSION, WIRE_VERSION};
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::util::rng::Rng;
+use parccm::util::watchdog::Watchdog;
+
+const TEST_TIMEOUT: Duration = Duration::from_secs(180);
+
+fn spawn(kind: TransportKind, workers: usize, replicas: usize) -> Arc<ClusterBackend> {
+    Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions { transport: kind, workers, replicas, worker_env: Vec::new() },
+        )
+        .expect("spawning worker processes"),
+    )
+}
+
+fn series(n: usize) -> (Vec<f32>, Vec<f32>) {
+    parccm::timeseries::generators::coupled_logistic(
+        n,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    )
+}
+
+fn kill9(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill -9 {pid}");
+}
+
+#[test]
+fn tcp_cross_map_bit_identical_to_pipe_and_native() {
+    let _guard = Watchdog::arm("tcp_cross_map_bit_identical", TEST_TIMEOUT);
+    let pipe = spawn(TransportKind::Pipe, 2, 1);
+    let tcp = spawn(TransportKind::Tcp, 2, 1);
+    assert_eq!(tcp.transport_kind(), TransportKind::Tcp);
+    let (x, y) = series(400);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(3), CcmParams::new(2, 1, 120), problem.emb.n, 6);
+    let native = NativeBackend;
+    let mut arena_pipe = TaskArena::new();
+    let mut arena_tcp = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho_pipe = pipe.cross_map_into(&input, &mut arena_pipe);
+        let rho_tcp = tcp.cross_map_into(&input, &mut arena_tcp);
+        let rho_n = native.cross_map_into(&input, &mut arena_n);
+        assert_eq!(rho_tcp.to_bits(), rho_n.to_bits(), "tcp wire roundtrip must be exact");
+        assert_eq!(rho_pipe.to_bits(), rho_tcp.to_bits(), "transports must agree bitwise");
+        assert_eq!(arena_pipe.preds, arena_tcp.preds);
+        assert_eq!(arena_tcp.preds, arena_n.preds);
+    }
+    assert_eq!(pipe.respawns(), 0);
+    assert_eq!(tcp.respawns(), 0);
+}
+
+#[test]
+fn tcp_sharded_scenario_bit_identical_to_in_process() {
+    // the acceptance scenario on the TCP transport with replication: a
+    // sharded A4 case through 2 real TCP workers, bit-identical to the
+    // in-process sharded run (which is itself pinned to A1/monolithic).
+    let _guard = Watchdog::arm("tcp_sharded_scenario", TEST_TIMEOUT);
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let deploy = Deploy::Local { cores: 2 };
+
+    let in_process = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy.clone(),
+        Arc::new(NativeBackend),
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+
+    let tcp = spawn(TransportKind::Tcp, 2, 2);
+    let backend: Arc<dyn ComputeBackend> = tcp.clone();
+    let via_workers = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy,
+        backend,
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+
+    let key = |r: &parccm::ccm::result::SkillRow| {
+        (r.params.e, r.params.tau, r.params.l, r.sample_id)
+    };
+    let mut local = in_process.skills;
+    local.sort_by_key(key);
+    let mut remote = via_workers.skills;
+    remote.sort_by_key(key);
+    assert_eq!(remote.len(), scenario.combos().len() * scenario.r);
+    assert_eq!(remote.len(), local.len());
+    for (l, r) in local.iter().zip(&remote) {
+        assert_eq!(key(l), key(r));
+        assert_eq!(
+            l.rho.to_bits(),
+            r.rho.to_bits(),
+            "tcp sharded rho must be bit-identical to in-process at {:?}",
+            key(l)
+        );
+    }
+    assert_eq!(tcp.respawns(), 0, "healthy run must not recycle workers");
+    // the driver evicts each problem's broadcasts once harvested
+    assert_eq!(tcp.cached_payloads(), 0, "payload cache must be drained");
+    assert!(tcp.evictions() > 0, "workers must have been told to evict");
+}
+
+#[test]
+fn replicated_shard_requeue_ships_zero_bytes() {
+    // the tentpole guarantee: with --replicas 2, killing a worker that
+    // holds a shard requeues its tasks onto the surviving replica with
+    // ZERO additional broadcast bytes (no re-ship, no re-broadcast).
+    let _guard = Watchdog::arm("replicated_shard_requeue", TEST_TIMEOUT);
+    let pb = spawn(TransportKind::Tcp, 2, 2);
+    assert_eq!(pb.replicas(), 2);
+    let (x, y) = series(300);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let table = DistanceTable::build_truncated(&problem.emb, 32);
+    let sharded = table.shard(2);
+    let rows: Vec<usize> = (0..problem.emb.n).step_by(4).collect();
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+
+    let run_all = |arena_p: &mut TaskArena, arena_n: &mut TaskArena| {
+        for shard in sharded.shards() {
+            let mut remote = Vec::new();
+            let mut local = Vec::new();
+            pb.shard_chunk_into(shard, &problem.targets, 0.0, &rows, 2, arena_p, &mut remote);
+            NativeBackend.shard_chunk_into(
+                shard,
+                &problem.targets,
+                0.0,
+                &rows,
+                2,
+                arena_n,
+                &mut local,
+            );
+            assert_eq!(remote, local, "shard {} chunk must survive the wire", shard.shard_id);
+        }
+    };
+
+    // warm up: 3 broadcast ids (2 shards + targets), each resident on
+    // both workers thanks to replication
+    run_all(&mut arena_p, &mut arena_n);
+    assert_eq!(pb.broadcast_ships(), 6, "3 ids x 2 replicas");
+    let bytes_before = pb.broadcast_ship_bytes();
+    assert!(bytes_before > 0);
+
+    // kill one of the two (idle) workers out from under the backend
+    let pids = pb.worker_pids();
+    assert_eq!(pids.len(), 2, "both workers idle before the kill");
+    kill9(pids[0]);
+    std::thread::sleep(Duration::from_millis(200));
+
+    // requeue onto the surviving replica: results stay exact and NOT ONE
+    // additional broadcast byte moves
+    run_all(&mut arena_p, &mut arena_n);
+    assert!(pb.respawns() >= 1, "the killed worker must have been replaced");
+    assert_eq!(
+        pb.broadcast_ship_bytes(),
+        bytes_before,
+        "requeue to a surviving replica must be zero re-ship"
+    );
+    assert_eq!(pb.broadcast_ships(), 6, "no additional (id, worker) ships");
+    assert_eq!(pb.rebroadcasts(), 0, "a replica survived; no re-broadcast fallback");
+    assert_eq!(pb.num_workers(), 2, "pool back at target size");
+}
+
+#[test]
+fn last_replica_death_falls_back_to_rebroadcast() {
+    // without replication, killing every holder forces the counted
+    // re-broadcast path — the cost replication exists to avoid.
+    let _guard = Watchdog::arm("last_replica_death", TEST_TIMEOUT);
+    let pb = spawn(TransportKind::Tcp, 2, 1);
+    let (x, y) = series(300);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(5), CcmParams::new(2, 1, 80), problem.emb.n, 4);
+    let native = NativeBackend;
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = pb.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
+    }
+    // replicas=1 and shard-affine dispatch: exactly one worker holds it
+    assert_eq!(pb.broadcast_ships(), 1);
+    let bytes_before = pb.broadcast_ship_bytes();
+
+    // kill every live worker: the only replica dies with them
+    for pid in pb.worker_pids() {
+        kill9(pid);
+    }
+    std::thread::sleep(Duration::from_millis(200));
+
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = pb.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
+    }
+    assert!(pb.respawns() >= 1);
+    // >= 1: a buffered send to a not-yet-reaped dead worker can count an
+    // extra (failed) ship before the error surfaces on its reply
+    assert!(pb.rebroadcasts() >= 1, "the broadcast had to ship again after total loss");
+    assert!(
+        pb.broadcast_ship_bytes() > bytes_before,
+        "re-broadcast must be visible in the byte counter"
+    );
+}
+
+#[test]
+fn handshake_version_mismatch_fails_cleanly_naming_both_versions() {
+    // regression: a worker advertising an unknown wire version must fail
+    // the spawn immediately with both versions in the error — not hang,
+    // not enter a requeue loop. The version is doctored via a child-only
+    // env seam, so concurrent tests are unaffected.
+    let _guard = Watchdog::arm("handshake_version_mismatch", Duration::from_secs(60));
+    for kind in [TransportKind::Pipe, TransportKind::Tcp] {
+        let err = ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                transport: kind,
+                workers: 1,
+                replicas: 1,
+                worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "99".to_string())],
+            },
+        )
+        .expect_err("a v99 worker must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("v99"), "{kind:?}: must name the worker's version: {msg}");
+        assert!(
+            msg.contains(&format!("v{WIRE_VERSION}")),
+            "{kind:?}: must name the driver's version: {msg}"
+        );
+        assert!(
+            msg.contains(&format!("v{MIN_WIRE_VERSION}")),
+            "{kind:?}: must name the oldest accepted version: {msg}"
+        );
+        assert!(msg.contains("mismatch"), "{kind:?}: {msg}");
+    }
+}
+
+#[test]
+fn legacy_v1_worker_is_served_without_evict_traffic() {
+    // backward-compatible negotiation: a worker advertising v1 is
+    // accepted, computes bit-identically, and never receives the v2-only
+    // evict message (the driver cache is still released).
+    let _guard = Watchdog::arm("legacy_v1_worker", TEST_TIMEOUT);
+    let pb = Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                transport: TransportKind::Pipe,
+                workers: 1,
+                replicas: 1,
+                worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "1".to_string())],
+            },
+        )
+        .expect("a v1 worker must be accepted"),
+    );
+    let (x, y) = series(200);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(7), CcmParams::new(2, 1, 60), problem.emb.n, 1);
+    let input = problem.input_for(&samples[0]);
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    let rho = pb.cross_map_into(&input, &mut arena_p);
+    assert_eq!(rho.to_bits(), NativeBackend.cross_map_into(&input, &mut arena_n).to_bits());
+
+    let pid = problem_wire_id(&problem.emb.vecs, &problem.targets, &problem.times);
+    assert_eq!(pb.cached_payloads(), 1);
+    pb.evict_broadcasts(&[pid]);
+    assert_eq!(pb.cached_payloads(), 0, "driver-side payload must be released");
+    assert_eq!(pb.evictions(), 0, "a v1 worker must never see an evict message");
+}
+
+#[test]
+fn manual_eviction_releases_and_reships_on_reuse() {
+    let _guard = Watchdog::arm("manual_eviction", TEST_TIMEOUT);
+    let pb = spawn(TransportKind::Pipe, 2, 1);
+    let (x, y) = series(250);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(9), CcmParams::new(2, 1, 70), problem.emb.n, 1);
+    let input = problem.input_for(&samples[0]);
+    let native = NativeBackend;
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    let want = native.cross_map_into(&input, &mut arena_n);
+
+    assert_eq!(pb.cross_map_into(&input, &mut arena_p).to_bits(), want.to_bits());
+    assert_eq!(pb.cached_payloads(), 1);
+    let ships_before = pb.broadcast_ships();
+
+    let pid = problem_wire_id(&problem.emb.vecs, &problem.targets, &problem.times);
+    pb.evict_broadcast_ids(&[pid]);
+    assert_eq!(pb.cached_payloads(), 0);
+    assert!(pb.evictions() >= 1, "the idle holder must be told to drop its copy");
+
+    // reuse after eviction: payload is rebuilt and re-shipped, results
+    // stay exact (content addressing makes this safe by construction)
+    assert_eq!(pb.cross_map_into(&input, &mut arena_p).to_bits(), want.to_bits());
+    assert!(pb.broadcast_ships() > ships_before, "evicted broadcast must re-ship on reuse");
+    assert_eq!(pb.respawns(), 0);
+}
+
+#[test]
+fn driver_run_evicts_broadcasts_on_both_transports() {
+    // an A2 (brute-force, every task over the wire) run through the
+    // driver: skills bit-identical to native, and by the end the payload
+    // cache is empty because the driver evicted each harvested problem.
+    let _guard = Watchdog::arm("driver_run_evicts", TEST_TIMEOUT);
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let deploy = Deploy::Local { cores: 2 };
+    let reference = run_case(
+        Case::A2,
+        &scenario,
+        &y,
+        &x,
+        deploy.clone(),
+        Arc::new(NativeBackend),
+    );
+    let key = |r: &parccm::ccm::result::SkillRow| {
+        (r.params.e, r.params.tau, r.params.l, r.sample_id)
+    };
+    let mut want = reference.skills;
+    want.sort_by_key(key);
+    for kind in [TransportKind::Pipe, TransportKind::Tcp] {
+        let pb = spawn(kind, 2, 1);
+        let backend: Arc<dyn ComputeBackend> = pb.clone();
+        let rep = run_case(Case::A2, &scenario, &y, &x, deploy.clone(), backend);
+        let mut got = rep.skills;
+        got.sort_by_key(key);
+        assert_eq!(got.len(), want.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(key(w), key(g));
+            assert_eq!(w.rho.to_bits(), g.rho.to_bits(), "{kind:?} must match native bitwise");
+        }
+        assert_eq!(pb.cached_payloads(), 0, "{kind:?}: payloads evicted after harvest");
+        assert!(pb.evictions() > 0, "{kind:?}: workers told to evict");
+    }
+}

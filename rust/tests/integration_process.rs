@@ -1,8 +1,13 @@
 //! End-to-end tests of the process-separated backend: real forked
 //! `parccm worker` processes (via `CARGO_BIN_EXE_parccm`), the JSON wire
-//! protocol, shard broadcasts, and worker-death recovery.
+//! protocol, shard broadcasts, and worker-death recovery. Each test arms
+//! a [`Watchdog`] so a hung worker fails the CI job fast instead of
+//! stalling it. (`ProcessBackend` is the pipe-transport `ClusterBackend`
+//! since PR 3; TCP/replication coverage lives in
+//! `tests/integration_cluster.rs`.)
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
@@ -14,6 +19,9 @@ use parccm::ccm::table::DistanceTable;
 use parccm::engine::Deploy;
 use parccm::native::NativeBackend;
 use parccm::util::rng::Rng;
+use parccm::util::watchdog::Watchdog;
+
+const TEST_TIMEOUT: Duration = Duration::from_secs(180);
 
 fn spawn_backend(workers: usize) -> Arc<ProcessBackend> {
     Arc::new(
@@ -24,6 +32,7 @@ fn spawn_backend(workers: usize) -> Arc<ProcessBackend> {
 
 #[test]
 fn process_cross_map_bit_identical_to_native() {
+    let _guard = Watchdog::arm("process_cross_map_bit_identical", TEST_TIMEOUT);
     let pb = spawn_backend(2);
     assert_eq!(pb.num_workers(), 2);
     let (x, y) = parccm::timeseries::generators::coupled_logistic(
@@ -46,6 +55,7 @@ fn process_cross_map_bit_identical_to_native() {
 
 #[test]
 fn process_shard_chunks_bit_identical_to_local() {
+    let _guard = Watchdog::arm("process_shard_chunks_bit_identical", TEST_TIMEOUT);
     let pb = spawn_backend(2);
     let (x, y) = parccm::timeseries::generators::coupled_logistic(
         300,
@@ -77,6 +87,7 @@ fn process_shard_chunks_bit_identical_to_local() {
 
 #[test]
 fn process_backend_runs_a4_style_scenario_end_to_end() {
+    let _guard = Watchdog::arm("process_backend_a4_scenario", TEST_TIMEOUT);
     // the acceptance scenario: a synchronous sharded-table case (A4
     // style) executed entirely through >= 2 worker processes, checked
     // against the single-threaded A1 reference and bit-identical to the
@@ -153,6 +164,7 @@ fn process_backend_runs_a4_style_scenario_end_to_end() {
 
 #[test]
 fn worker_kill_requeues_tasks_on_fresh_workers() {
+    let _guard = Watchdog::arm("worker_kill_requeues", TEST_TIMEOUT);
     let pb = spawn_backend(2);
     let (x, y) = parccm::timeseries::generators::coupled_logistic(
         300,
