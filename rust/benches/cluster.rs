@@ -28,7 +28,7 @@ use parccm::util::rng::Rng;
 fn spawn(kind: TransportKind, workers: usize, replicas: usize) -> ClusterBackend {
     ClusterBackend::with_options(
         env!("CARGO_BIN_EXE_parccm"),
-        ClusterOptions { transport: kind, workers, replicas, worker_env: Vec::new() },
+        ClusterOptions { transport: kind, workers, replicas, ..ClusterOptions::default() },
     )
     .expect("spawning worker processes")
 }

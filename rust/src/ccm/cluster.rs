@@ -10,34 +10,39 @@
 //! re-shipping** the broadcast (re-broadcast happens only when the last
 //! replica dies — both paths are counted and asserted in tests).
 //!
-//! # Wire protocol (version [`WIRE_VERSION`] = 2)
+//! # Wire protocol (version [`WIRE_VERSION`] = 3)
 //!
 //! Line-delimited JSON over the worker's transport. Large read-only state
 //! moves once per holding worker as content-addressed *broadcasts*; tasks
 //! then reference broadcasts by id and carry only library-row indices.
 //!
-//! Worker -> driver on startup (v2 hello; v1 workers omit
-//! `transport`/`caps` and never receive v2-only messages):
+//! Worker -> driver on startup (v3 hello; older workers omit newer fields
+//! and never receive newer-version messages). `auth` is present iff the
+//! worker was configured with a shared token:
 //!
 //! ```json
-//! {"type":"hello","v":2,"pid":12345,"transport":"pipe","caps":["evict"]}
+//! {"type":"hello","v":3,"pid":12345,"transport":"pipe",
+//!  "caps":["evict","keepalive"],"auth":"<token>"}
 //! ```
 //!
 //! Driver -> worker (broadcasts and evicts are not acknowledged; tasks get
-//! exactly one `result` or `error` reply):
+//! exactly one `result` or `error` reply; pings get exactly one `pong`):
 //!
 //! ```json
-//! {"v":2,"type":"broadcast","id":"<hex64>","kind":"problem",
+//! {"v":3,"type":"hello_ack","auth":"<token>"}
+//! {"v":3,"type":"reject","msg":"auth token mismatch: ..."}
+//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"problem",
 //!  "vecs":[...],"targets":[...],"times":[...]}
-//! {"v":2,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
-//! {"v":2,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
+//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
+//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
 //!  "row_lo":0,"row_hi":100,"row_len":64,"n":400,"t0":2,
 //!  "neighbors":[...],"vecs":[...]}
-//! {"v":2,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
+//! {"v":3,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
 //!  "lib_rows":[...],"e":2,"theiler":0}
-//! {"v":2,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
+//! {"v":3,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
 //!  "targets":"<hex64>","lib_rows":[...],"e":2,"theiler":0}
-//! {"v":2,"type":"evict","id":"<hex64>"}
+//! {"v":3,"type":"evict","id":"<hex64>"}
+//! {"v":3,"type":"ping","nonce":41}
 //! {"type":"shutdown"}
 //! ```
 //!
@@ -47,12 +52,16 @@
 //! {"type":"result","task":7,"rho":0.93,"preds":[...]}
 //! {"type":"result","task":8,"preds":[...]}
 //! {"type":"error","task":8,"msg":"unknown broadcast deadbeef"}
+//! {"type":"pong","nonce":41}
 //! ```
 //!
-//! The only v2 addition is `evict`: once a problem's jobs are harvested,
-//! the driver tells every holder to drop the broadcast and releases its
-//! own serialized payload (the payload cache is refcounted), so driver and
-//! worker memory stay bounded on paper-scale parameter grids.
+//! v2 added `evict`: once a problem's jobs are harvested, the driver tells
+//! every holder to drop the broadcast and releases its own serialized
+//! payload (the payload cache is refcounted), so driver and worker memory
+//! stay bounded on paper-scale parameter grids. v3 added the
+//! authenticated handshake (`auth` in hello, answered by `hello_ack`,
+//! refused by `reject` — clean named errors on both ends) and the
+//! keepalive `ping`/`pong` pair that detects silently-dead remotes.
 //!
 //! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
 //! and f32 -> f64 is exact, so every finite value survives the wire
@@ -61,31 +70,53 @@
 //!
 //! # Scheduling, replication, and failure handling
 //!
+//! Workers come from a [`WorkerSource`] (see [`crate::ccm::lifecycle`]):
+//! forked children of the driver binary, or pre-started remote
+//! `parccm worker --listen` processes named by `--workers-at`. The
+//! scheduler is source-agnostic; only death handling differs (fork:
+//! respawn; remote: mark dead, shrink the pool).
+//!
 //! Dispatch is shard-affine with a load-balanced replica choice: among
 //! idle workers already holding every broadcast a task needs, the one with
 //! the fewest completed tasks wins; with no holder idle, the least-loaded
 //! idle worker is shipped to. The **first** ship of a broadcast also
 //! replicates it to `replicas - 1` additional idle workers, so shard loss
-//! does not imply re-ship: a worker that dies mid-task (EOF/EPIPE/RST) is
-//! reaped and replaced, and the task is requeued — onto a surviving
-//! replica with zero additional broadcast bytes when one exists, or with a
-//! counted re-broadcast when the last replica died. Replicas are *not*
-//! proactively re-established after a death (a later ship is task-driven);
-//! the ROADMAP tracks an eager re-replication knob. After
-//! [`MAX_TASK_ATTEMPTS`] failures the task panics, which the engine's own
-//! task-retry surfaces as a job failure.
+//! does not imply re-ship: a worker that dies mid-task (EOF/EPIPE/RST —
+//! the OS closes the socket when the process dies, so a kill surfaces as
+//! an I/O error even mid-exchange) is discarded, and the task is requeued
+//! — onto a surviving replica with zero additional broadcast bytes when
+//! one exists, or with a counted re-broadcast when the last replica died.
+//! The keepalive prober covers the remaining gap for *idle* workers: a
+//! remote whose host froze or dropped off the network without closing the
+//! socket is pinged every interval and discarded when it misses the
+//! deadline. A worker that goes silent the same way while *leased* to a
+//! task is not detected by the prober (the task's reply read has no
+//! deadline — task durations are unbounded, so any timeout would misfire
+//! on paper-scale work); that shape is bounded by job-level timeouts
+//! (CI's `timeout-minutes`, the tests' `Watchdog`).
+//! After any death with `replicas > 1`, the scheduler *eagerly* re-ships
+//! the dead worker's broadcasts to other live workers until the
+//! replication factor is restored (counted separately as `repair_ships` /
+//! `repair_ship_bytes`), so a second death inside the repair window no
+//! longer forces a full re-broadcast. After [`MAX_TASK_ATTEMPTS`] failures
+//! the task panics, which the engine's own task-retry surfaces as a job
+//! failure; a pool whose last worker died and cannot regrow panics with an
+//! actionable message instead of hanging.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
+use crate::ccm::lifecycle::WorkerSource;
 use crate::ccm::table::TableShard;
 use crate::ccm::transport::{
-    connect_worker, recv_json, Transport, TransportKind, WorkerLink, WIRE_VERSION,
+    ping_payload, recv_json, resolve_auth_token, Transport, TransportKind, WorkerLink,
+    EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, WIRE_VERSION,
 };
 use crate::native::NativeBackend;
 use crate::util::cli::Args;
@@ -98,6 +129,18 @@ pub const MAX_TASK_ATTEMPTS: usize = 3;
 /// hello — a test seam for the handshake-mismatch regression tests (set
 /// per-child by the driver's `worker_env`, never globally).
 pub const TEST_HELLO_V_ENV: &str = "PARCCM_TEST_HELLO_V";
+
+/// Env knob that makes a worker silently swallow keepalive pings — the
+/// test seam for "silently-dead remote" coverage: the connection stays
+/// open but the worker never answers, so only the keepalive deadline can
+/// notice it is gone.
+pub const TEST_IGNORE_PING_ENV: &str = "PARCCM_TEST_IGNORE_PING";
+
+/// Keepalive cadence for remote pools when none is configured: idle
+/// remote workers are pinged this often, and one that stays silent for a
+/// further interval is marked dead — so a silently-dead remote is
+/// detected within ~2 intervals instead of on the next task.
+pub const DEFAULT_REMOTE_KEEPALIVE: Duration = Duration::from_secs(5);
 
 // ---------------------------------------------------------------------------
 // content addressing (same FNV-1a scheme as TableShard::wire_id — one
@@ -295,27 +338,42 @@ fn error_reply(msg: &Json, err: String) -> Json {
     ])
 }
 
-/// Serve one driver connection: emit the hello, then answer broadcasts,
-/// evicts, and tasks until EOF (driver gone) or an explicit shutdown.
+/// Serve one driver connection: emit the hello (presenting the shared
+/// auth token when one is configured), then answer the v3 handshake ack,
+/// keepalive pings, broadcasts, evicts, and tasks until EOF (driver gone)
+/// or an explicit shutdown.
 fn serve<R: BufRead, W: Write>(
     reader: R,
     mut out: W,
     kind: TransportKind,
+    token: Option<String>,
 ) -> std::process::ExitCode {
     let advertised = std::env::var(TEST_HELLO_V_ENV)
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(WIRE_VERSION);
-    let hello = Json::obj(vec![
+    let ignore_ping = std::env::var(TEST_IGNORE_PING_ENV).is_ok();
+    let pid = std::process::id();
+    let mut fields = vec![
         ("type", Json::Str("hello".into())),
         ("v", Json::Num(advertised as f64)),
-        ("pid", Json::Num(std::process::id() as f64)),
+        ("pid", Json::Num(pid as f64)),
         ("transport", Json::Str(kind.name().into())),
-        ("caps", Json::Arr(vec![Json::Str("evict".into())])),
-    ]);
+        (
+            "caps",
+            Json::Arr(vec![Json::Str("evict".into()), Json::Str("keepalive".into())]),
+        ),
+    ];
+    if let Some(t) = &token {
+        fields.push(("auth", Json::Str(t.clone())));
+    }
+    let hello = Json::obj(fields);
     if writeln!(out, "{hello}").and_then(|_| out.flush()).is_err() {
         return std::process::ExitCode::FAILURE;
     }
+    // with a token configured, the driver must prove knowledge of it in
+    // its hello_ack before any broadcast or task is honored
+    let mut authed = token.is_none();
     let mut store: HashMap<String, Stored> = HashMap::new();
     let mut arena = TaskArena::new();
     for line in reader.lines() {
@@ -326,12 +384,56 @@ fn serve<R: BufRead, W: Write>(
         let msg = match Json::parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                eprintln!("[worker {}] bad message: {e}", std::process::id());
+                eprintln!("[worker {pid}] bad message: {e}");
                 return std::process::ExitCode::FAILURE;
             }
         };
-        let reply = match msg.get("type").and_then(Json::as_str) {
+        let kind_str = msg.get("type").and_then(Json::as_str);
+        // handshake / keepalive traffic first — valid before auth
+        match kind_str {
             Some("shutdown") => return std::process::ExitCode::SUCCESS,
+            Some("reject") => {
+                // the driver refused us by name (auth/version): surface it
+                let why = msg.get("msg").and_then(Json::as_str).unwrap_or("unspecified");
+                eprintln!("[worker {pid}] rejected by driver: {why}");
+                return std::process::ExitCode::FAILURE;
+            }
+            Some("hello_ack") => {
+                if token.is_some() && msg.get("auth").and_then(Json::as_str) != token.as_deref() {
+                    eprintln!(
+                        "[worker {pid}] auth token mismatch: driver's hello_ack does not \
+                         carry this worker's token — refusing to serve it"
+                    );
+                    return std::process::ExitCode::FAILURE;
+                }
+                authed = true;
+                continue;
+            }
+            Some("ping") => {
+                if ignore_ping {
+                    continue; // test seam: play silently dead
+                }
+                let pong = Json::obj(vec![
+                    ("type", Json::Str("pong".into())),
+                    ("nonce", msg.get("nonce").cloned().unwrap_or(Json::Null)),
+                ]);
+                if writeln!(out, "{pong}").and_then(|_| out.flush()).is_err() {
+                    break;
+                }
+                continue;
+            }
+            _ => {}
+        }
+        if !authed {
+            eprintln!(
+                "[worker {pid}] refusing {} before an authenticated hello_ack",
+                kind_str.unwrap_or("message")
+            );
+            let _ = writeln!(out, "{}", error_reply(&msg, "worker requires auth".into()));
+            let _ = out.flush();
+            return std::process::ExitCode::FAILURE;
+        }
+        let reply = match kind_str {
             Some("broadcast") => match store_broadcast(&mut store, &msg) {
                 Ok(()) => None, // broadcasts are unacknowledged
                 Err(e) => Some(error_reply(&msg, e)),
@@ -360,11 +462,15 @@ fn serve<R: BufRead, W: Write>(
 }
 
 /// The worker process entry point (`parccm worker [--connect ADDR |
-/// --listen ADDR]`): serve the driver over stdio (default), an outbound
-/// TCP connection (`--connect`, how [`ClusterBackend`] spawns TCP
-/// workers), or a single accepted inbound connection (`--listen`, for
-/// manually started remote workers). Diagnostics go to stderr.
+/// --listen ADDR] [--auth-token T]`): serve the driver over stdio
+/// (default), an outbound TCP connection (`--connect`, how
+/// [`ClusterBackend`] spawns TCP workers), or a single accepted inbound
+/// connection (`--listen`, for pre-started remote workers reached via
+/// `--workers-at`). Listen mode announces the bound address on **stdout**
+/// as `PARCCM_WORKER_LISTENING host:port` (so `--listen 127.0.0.1:0`
+/// ephemeral ports can be captured by scripts); diagnostics go to stderr.
 pub fn worker_main(args: &Args) -> std::process::ExitCode {
+    let token = resolve_auth_token(args.get("auth-token"));
     if let Some(addr) = args.get("connect") {
         let stream = match TcpStream::connect(addr) {
             Ok(s) => s,
@@ -373,7 +479,7 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
                 return std::process::ExitCode::FAILURE;
             }
         };
-        serve_tcp(stream)
+        serve_tcp(stream, token)
     } else if let Some(addr) = args.get("listen") {
         let listener = match TcpListener::bind(addr) {
             Ok(l) => l,
@@ -382,14 +488,18 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
                 return std::process::ExitCode::FAILURE;
             }
         };
-        match listener.local_addr() {
-            Ok(a) => eprintln!("[worker {}] listening on {a}", std::process::id()),
-            Err(_) => eprintln!("[worker {}] listening on {addr}", std::process::id()),
-        }
+        let bound = listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        // machine-readable ready line on stdout: launch scripts parse it
+        println!("PARCCM_WORKER_LISTENING {bound}");
+        let _ = std::io::stdout().flush();
+        eprintln!("[worker {}] listening on {bound}", std::process::id());
         match listener.accept() {
             Ok((stream, peer)) => {
                 eprintln!("[worker {}] driver connected from {peer}", std::process::id());
-                serve_tcp(stream)
+                serve_tcp(stream, token)
             }
             Err(e) => {
                 eprintln!("[worker] accept failed: {e}");
@@ -399,11 +509,11 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
     } else {
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
-        serve(stdin.lock(), stdout.lock(), TransportKind::Pipe)
+        serve(stdin.lock(), stdout.lock(), TransportKind::Pipe, token)
     }
 }
 
-fn serve_tcp(stream: TcpStream) -> std::process::ExitCode {
+fn serve_tcp(stream: TcpStream, token: Option<String>) -> std::process::ExitCode {
     if stream.set_nodelay(true).is_err() {
         return std::process::ExitCode::FAILURE;
     }
@@ -414,26 +524,42 @@ fn serve_tcp(stream: TcpStream) -> std::process::ExitCode {
             return std::process::ExitCode::FAILURE;
         }
     };
-    serve(reader, stream, TransportKind::Tcp)
+    serve(reader, stream, TransportKind::Tcp, token)
 }
 
 // ---------------------------------------------------------------------------
 // driver (scheduler side)
 // ---------------------------------------------------------------------------
 
-/// How a [`ClusterBackend`] is shaped: transport, pool width, replication.
+/// How a [`ClusterBackend`] is shaped: worker source, transport, pool
+/// width, replication, and liveness probing.
 #[derive(Clone, Debug)]
 pub struct ClusterOptions {
     /// Byte layer to reach workers over (`--transport pipe|tcp`).
     pub transport: TransportKind,
-    /// Worker processes in the pool (`--proc-workers N`).
+    /// Worker processes in the pool (`--proc-workers N`). Ignored when
+    /// `workers_at` is non-empty — the address list *is* the pool.
     pub workers: usize,
     /// Workers each broadcast is resident on (`--replicas R`); clamped to
     /// the pool size. 1 = no replication (ship only where tasks land).
     pub replicas: usize,
     /// Extra environment set on spawned workers only (test seams such as
     /// [`TEST_HELLO_V_ENV`], log knobs; never inherited by the driver).
+    /// Remote workers are pre-started and never see it.
     pub worker_env: Vec<(String, String)>,
+    /// Pre-started `parccm worker --listen` processes to connect to
+    /// instead of forking (`--workers-at host:port,...`). Non-empty
+    /// selects [`WorkerSource::Remote`]: the transport is TCP by
+    /// construction and a dead worker cannot be respawned.
+    pub workers_at: Vec<String>,
+    /// Shared secret for the authenticated handshake (`--auth-token` /
+    /// `PARCCM_AUTH_TOKEN`); forked workers inherit it automatically.
+    pub auth_token: Option<String>,
+    /// Keepalive cadence for idle workers. `None` = automatic
+    /// ([`DEFAULT_REMOTE_KEEPALIVE`] for remote pools, off for forked
+    /// pools, whose death is visible as EOF); `Some(Duration::ZERO)` =
+    /// explicitly off.
+    pub keepalive: Option<Duration>,
 }
 
 impl Default for ClusterOptions {
@@ -443,6 +569,9 @@ impl Default for ClusterOptions {
             workers: 2,
             replicas: 1,
             worker_env: Vec::new(),
+            workers_at: Vec::new(),
+            auth_token: None,
+            keepalive: None,
         }
     }
 }
@@ -464,8 +593,12 @@ struct PoolState {
     idle: Vec<Worker>,
     /// Workers existing (idle or leased to a task).
     live: usize,
-    /// Workers replaced after dying mid-exchange.
+    /// Workers replaced after dying mid-exchange (fork sources only).
     respawns: u64,
+    /// Remote workers lost for good (no respawn possible).
+    remote_lost: u64,
+    /// Workers declared dead by the keepalive prober (no pong in time).
+    keepalive_deaths: u64,
     /// Broadcast id -> serials of live workers holding it.
     holders: HashMap<u64, HashSet<u64>>,
     /// Ids ever shipped (distinguishes first ships from re-broadcasts).
@@ -479,8 +612,34 @@ struct PoolState {
     /// Ships of an id whose replicas had all died — the re-broadcast
     /// fallback replication exists to avoid.
     rebroadcasts: u64,
+    /// Repair copies shipped by eager re-replication after a death
+    /// (counted apart from task-driven `ships`, so "zero re-ship requeue"
+    /// stays assertable).
+    repair_ships: u64,
+    /// Bytes written by eager re-replication repair ships.
+    repair_ship_bytes: u64,
     /// `evict` messages delivered to workers.
     evictions: u64,
+}
+
+/// Why a worker was declared dead (for counters and log lines).
+#[derive(Clone, Copy, Debug)]
+enum DeathCause {
+    /// An I/O failure surfaced while exchanging traffic with it.
+    Exchange,
+    /// It stayed silent past the keepalive deadline.
+    Keepalive,
+}
+
+/// How a task exchange failed: a broken connection means the worker is
+/// gone, while a wire-level `error` reply comes from a live, healthy
+/// worker — the two must not share a recovery path (discarding a live
+/// REMOTE worker over a task error would shrink the pool forever).
+enum ExchangeError {
+    /// Connection-level failure (EOF/EPIPE/RST): the worker is dead.
+    Dead(std::io::Error),
+    /// The worker answered `{"type":"error",...}`: it is alive.
+    App(String),
 }
 
 /// Record one (id -> worker) broadcast ship; returns whether this was the
@@ -524,74 +683,56 @@ struct PayloadEntry {
     refs: u32,
 }
 
-/// A [`ComputeBackend`] whose cross-map work executes in worker processes
-/// reached over a pluggable [`Transport`] (see the module docs for the
-/// wire protocol and the scheduling model). `cross_map_into` and
-/// `shard_chunk_into` cross the process boundary; `simplex_tail_into` and
-/// `distance_matrix` are driver-side combine/build steps and run locally
-/// on the native backend.
-pub struct ClusterBackend {
-    cmd: PathBuf,
+/// The shared scheduler core: pool state, payload cache, and every
+/// operation the scheduling threads *and* the background keepalive prober
+/// need. [`ClusterBackend`] wraps it in an `Arc` so the prober can outlive
+/// individual calls without borrowing the backend.
+struct ClusterCore {
+    source: WorkerSource,
     opts: ClusterOptions,
     state: Mutex<PoolState>,
     cv: Condvar,
     /// Refcounted serialized broadcast payloads by id, for (re-)shipping
-    /// to any worker; entries are dropped by [`Self::evict_broadcast_ids`].
+    /// to any worker; entries are dropped by eviction.
     payloads: Mutex<HashMap<u64, PayloadEntry>>,
     next_task: AtomicU64,
     next_serial: AtomicU64,
     local: NativeBackend,
 }
 
-impl ClusterBackend {
-    /// Pipe-transport pool of `workers` children of this executable
-    /// (`<current_exe> worker`), no replication — PR 2 behavior.
-    pub fn new(workers: usize) -> std::io::Result<ClusterBackend> {
-        Self::with_command(std::env::current_exe()?, workers)
+/// A [`ComputeBackend`] whose cross-map work executes in worker processes
+/// reached over a pluggable [`Transport`] (see the module docs for the
+/// wire protocol and the scheduling model). Workers come from a
+/// [`WorkerSource`]: forked children (respawned on death) or pre-started
+/// remote listeners (`--workers-at`; death shrinks the pool and eager
+/// re-replication repairs the replication factor on survivors).
+/// `cross_map_into` and `shard_chunk_into` cross the process boundary;
+/// `simplex_tail_into` and `distance_matrix` are driver-side combine/build
+/// steps and run locally on the native backend.
+pub struct ClusterBackend {
+    core: Arc<ClusterCore>,
+    keepalive_stop: Arc<AtomicBool>,
+    keepalive_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClusterCore {
+    /// Pool-state lock that survives a poisoning panic (an actionable
+    /// abort in `acquire` must not turn `Drop` into a second panic).
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// [`ClusterBackend::new`] with an explicit binary (tests pass
-    /// `env!("CARGO_BIN_EXE_parccm")`).
-    pub fn with_command(
-        cmd: impl Into<PathBuf>,
-        workers: usize,
-    ) -> std::io::Result<ClusterBackend> {
-        Self::with_options(cmd, ClusterOptions { workers, ..ClusterOptions::default() })
+    fn lock_payloads(&self) -> MutexGuard<'_, HashMap<u64, PayloadEntry>> {
+        self.payloads.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// Fully-specified construction: transport, pool width, replication.
-    pub fn with_options(
-        cmd: impl Into<PathBuf>,
-        opts: ClusterOptions,
-    ) -> std::io::Result<ClusterBackend> {
-        let cmd = cmd.into();
-        let mut opts = opts;
-        opts.workers = opts.workers.max(1);
-        opts.replicas = opts.replicas.clamp(1, opts.workers);
-        let backend = ClusterBackend {
-            cmd,
-            opts,
-            state: Mutex::new(PoolState::default()),
-            cv: Condvar::new(),
-            payloads: Mutex::new(HashMap::new()),
-            next_task: AtomicU64::new(1),
-            next_serial: AtomicU64::new(1),
-            local: NativeBackend,
-        };
-        let mut idle = Vec::with_capacity(backend.opts.workers);
-        for _ in 0..backend.opts.workers {
-            idle.push(backend.spawn()?);
-        }
-        {
-            let mut st = backend.state.lock().unwrap();
-            st.live = idle.len();
-            st.idle = idle;
-        }
-        Ok(backend)
-    }
-
-    fn spawn(&self) -> std::io::Result<Worker> {
-        let (link, hello) = connect_worker(&self.cmd, self.opts.transport, &self.opts.worker_env)?;
+    fn spawn(&self, slot: usize) -> std::io::Result<Worker> {
+        let (link, hello) = self.source.connect(
+            slot,
+            self.opts.transport,
+            &self.opts.worker_env,
+            self.opts.auth_token.as_deref(),
+        )?;
         Ok(Worker {
             serial: self.next_serial.fetch_add(1, Ordering::Relaxed),
             link,
@@ -601,73 +742,18 @@ impl ClusterBackend {
         })
     }
 
-    /// Transport the pool runs on.
-    pub fn transport_kind(&self) -> TransportKind {
-        self.opts.transport
-    }
-
-    /// Configured replication factor (post-clamp).
-    pub fn replicas(&self) -> usize {
-        self.opts.replicas
-    }
-
-    /// Live worker pids (for observability and kill-recovery tests; idle
-    /// workers only, like PR 2).
-    pub fn worker_pids(&self) -> Vec<u32> {
-        self.state.lock().unwrap().idle.iter().map(|w| w.link.pid).collect()
-    }
-
-    /// Workers currently alive (idle + leased).
-    pub fn num_workers(&self) -> usize {
-        self.state.lock().unwrap().live
-    }
-
-    /// How many workers have been replaced after dying.
-    pub fn respawns(&self) -> u64 {
-        self.state.lock().unwrap().respawns
-    }
-
-    /// (id, worker) broadcast ships performed, including replica copies.
-    pub fn broadcast_ships(&self) -> u64 {
-        self.state.lock().unwrap().ships
-    }
-
-    /// Bytes actually written shipping broadcasts (the real counterpart of
-    /// the DES's `sim_broadcast_ship_bytes`).
-    pub fn broadcast_ship_bytes(&self) -> u64 {
-        self.state.lock().unwrap().ship_bytes
-    }
-
-    /// Ships that had to re-broadcast an id because its last replica died.
-    pub fn rebroadcasts(&self) -> u64 {
-        self.state.lock().unwrap().rebroadcasts
-    }
-
-    /// `evict` messages delivered to workers.
-    pub fn evictions(&self) -> u64 {
-        self.state.lock().unwrap().evictions
-    }
-
-    /// Serialized broadcast payloads currently cached driver-side.
-    pub fn cached_payloads(&self) -> usize {
-        self.payloads.lock().unwrap().len()
-    }
-
     /// Cache (and return) the serialized payload for broadcast `id`. A
-    /// fresh entry starts with one reference; [`Self::retain_broadcast_ids`]
-    /// adds owners and [`Self::evict_broadcast_ids`] releases them.
+    /// fresh entry starts with one reference.
     fn payload(&self, id: u64, build: impl FnOnce() -> String) -> Arc<String> {
-        let mut map = self.payloads.lock().unwrap();
+        let mut map = self.lock_payloads();
         let entry = map
             .entry(id)
             .or_insert_with(|| PayloadEntry { line: Arc::new(build()), refs: 1 });
         Arc::clone(&entry.line)
     }
 
-    /// Add an owner to already-cached payloads (callers sharing broadcast
-    /// content across problems pair this with a later eviction).
-    pub fn retain_broadcast_ids(&self, ids: &[u64]) {
-        let mut map = self.payloads.lock().unwrap();
+    fn retain_broadcast_ids(&self, ids: &[u64]) {
+        let mut map = self.lock_payloads();
         for id in ids {
             if let Some(e) = map.get_mut(id) {
                 e.refs += 1;
@@ -675,15 +761,10 @@ impl ClusterBackend {
         }
     }
 
-    /// Release one ownership reference on each id; payloads that reach
-    /// zero references are dropped from the driver cache and evicted from
-    /// every worker (v2 workers get the wire `evict`; leased holders are
-    /// notified when their task completes). Unknown ids are ignored, so
-    /// callers may pass a problem's full candidate id set.
-    pub fn evict_broadcast_ids(&self, ids: &[u64]) {
+    fn evict_broadcast_ids(&self, ids: &[u64]) {
         let mut freed = Vec::new();
         {
-            let mut map = self.payloads.lock().unwrap();
+            let mut map = self.lock_payloads();
             for id in ids {
                 if let Some(e) = map.get_mut(id) {
                     e.refs = e.refs.saturating_sub(1);
@@ -697,7 +778,7 @@ impl ClusterBackend {
         if freed.is_empty() {
             return;
         }
-        // mark the freed ids, then pull each idle v2 holder out of the
+        // mark the freed ids, then pull each idle v2+ holder out of the
         // pool and put it back through release(), which flushes pending
         // evictions OUTSIDE the pool lock — a slow worker must stall only
         // its own notification, never the scheduler. Leased holders and
@@ -706,7 +787,7 @@ impl ClusterBackend {
         // way on their own release, or forgotten when they die.
         let mut notify = Vec::new();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             for &id in &freed {
                 if st.holders.contains_key(&id) {
                     st.evicted_pending.insert(id);
@@ -718,7 +799,7 @@ impl ClusterBackend {
             let mut i = 0;
             while i < st.idle.len() {
                 let w = &st.idle[i];
-                if w.wire_v >= WIRE_VERSION && freed.iter().any(|id| w.has.contains(id)) {
+                if w.wire_v >= EVICT_WIRE_VERSION && freed.iter().any(|id| w.has.contains(id)) {
                     notify.push(st.idle.swap_remove(i));
                 } else {
                     i += 1;
@@ -733,9 +814,10 @@ impl ClusterBackend {
     /// Lease an idle worker for a task needing broadcast ids `needs`:
     /// least-loaded among workers already holding all of them (replica
     /// load balancing), else least-loaded overall (it will be shipped to);
-    /// blocks while all workers are leased.
+    /// blocks while all workers are leased. Panics with an actionable
+    /// message when the pool is empty and cannot regrow (remote sources).
     fn acquire(&self, needs: &[u64]) -> Worker {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
             if !st.idle.is_empty() {
                 let holder = st
@@ -758,8 +840,23 @@ impl ClusterBackend {
                 });
                 return st.idle.swap_remove(pos);
             }
-            assert!(st.live > 0, "cluster backend has no live workers left");
-            st = self.cv.wait(st).unwrap();
+            if st.live == 0 {
+                if self.source.is_remote() {
+                    panic!(
+                        "cluster backend has no live workers left: all {} remote workers \
+                         from --workers-at are gone and remote workers cannot be \
+                         respawned. Restart the listeners (see \
+                         scripts/launch_local_cluster.sh) and re-run; --replicas 2 or \
+                         more lets a run survive losing some of them",
+                        self.opts.workers
+                    );
+                }
+                panic!(
+                    "cluster backend has no live workers left: every forked worker died \
+                     and none could be respawned"
+                );
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -767,8 +864,8 @@ impl ClusterBackend {
     /// that became due while it was out. The evict writes happen with the
     /// pool lock RELEASED — only this worker is stalled by a slow link.
     fn release(&self, mut worker: Worker) {
-        let pending: Vec<u64> = if worker.wire_v >= WIRE_VERSION {
-            let st = self.state.lock().unwrap();
+        let pending: Vec<u64> = if worker.wire_v >= EVICT_WIRE_VERSION {
+            let st = self.lock_state();
             if st.evicted_pending.is_empty() {
                 Vec::new()
             } else {
@@ -784,12 +881,12 @@ impl ClusterBackend {
         };
         for &id in &pending {
             if worker.link.transport.send_line(&evict_payload(id)).is_err() {
-                self.discard_and_respawn(worker);
+                self.handle_death(worker, DeathCause::Exchange, "evict delivery failed");
                 return;
             }
             worker.has.remove(&id);
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         for &id in &pending {
             st.evictions += 1;
             drop_holder(&mut st, id, worker.serial);
@@ -799,31 +896,186 @@ impl ClusterBackend {
         self.cv.notify_all();
     }
 
-    /// Reap a dead worker and spawn its replacement (fresh broadcast set).
-    fn discard_and_respawn(&self, mut dead: Worker) {
-        let _ = dead.link.child.kill();
-        let _ = dead.link.child.wait();
-        let replacement = self.spawn();
-        let mut st = self.state.lock().unwrap();
-        st.live -= 1;
-        st.respawns += 1;
-        // every broadcast copy this worker held is gone with it
+    /// Reap a dead worker: respawn its replacement when the source owns
+    /// worker lifecycles (fork), else permanently shrink the pool
+    /// (remote). Either way, eagerly repair the replication factor of
+    /// every broadcast the dead worker held (`replicas > 1`), so a second
+    /// death in the repair window no longer forces a re-broadcast.
+    fn handle_death(&self, mut dead: Worker, cause: DeathCause, why: &str) {
+        if let Some(child) = dead.link.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let replacement = if self.source.can_respawn() { Some(self.spawn(0)) } else { None };
         let held: Vec<u64> = dead.has.iter().copied().collect();
-        for id in held {
-            drop_holder(&mut st, id, dead.serial);
-        }
-        match replacement {
-            Ok(w) => {
-                st.idle.push(w);
-                st.live += 1;
+        let mut repair: Vec<(u64, Arc<String>)> = Vec::new();
+        {
+            let mut st = self.lock_state();
+            st.live -= 1;
+            if matches!(cause, DeathCause::Keepalive) {
+                st.keepalive_deaths += 1;
             }
-            Err(e) => {
-                eprintln!("[cluster backend] failed to respawn worker: {e}");
-                assert!(st.live > 0, "cluster backend lost every worker and cannot respawn");
+            // every broadcast copy this worker held is gone with it
+            for &id in &held {
+                drop_holder(&mut st, id, dead.serial);
+            }
+            match replacement {
+                Some(Ok(w)) => {
+                    st.idle.push(w);
+                    st.live += 1;
+                    st.respawns += 1;
+                }
+                Some(Err(e)) => {
+                    // NOT counted in respawns: no replacement exists, the
+                    // pool genuinely shrank
+                    eprintln!("[cluster backend] failed to respawn worker: {e}");
+                }
+                None => {
+                    st.remote_lost += 1;
+                    let who = dead.link.addr.as_deref().unwrap_or("<unknown addr>");
+                    eprintln!(
+                        "[cluster backend] remote worker {who} (pid {}) is gone ({why}); \
+                         remote workers cannot be respawned — {} of {} remain",
+                        dead.link.pid, st.live, self.opts.workers
+                    );
+                }
+            }
+            // collect the repair work under the lock, ship outside it
+            if self.opts.replicas > 1 {
+                let payloads = self.lock_payloads();
+                for id in held {
+                    if st.evicted_pending.contains(&id) {
+                        continue;
+                    }
+                    let holders = st.holders.get(&id).map_or(0, |s| s.len());
+                    if holders < self.opts.replicas {
+                        if let Some(e) = payloads.get(&id) {
+                            repair.push((id, Arc::clone(&e.line)));
+                        }
+                    }
+                }
             }
         }
-        drop(st);
         self.cv.notify_all();
+        for (id, payload) in repair {
+            self.repair_ship(id, &payload);
+        }
+    }
+
+    /// Eager re-replication: top copies of `id` back up to the configured
+    /// replication factor on idle workers that lack it. Best effort (a
+    /// busy pool repairs less; the next task-driven ship finishes the
+    /// job); counted apart from task-driven ships as `repair_ships` /
+    /// `repair_ship_bytes`.
+    fn repair_ship(&self, id: u64, payload: &Arc<String>) {
+        loop {
+            let target = {
+                let mut st = self.lock_state();
+                let holders = st.holders.get(&id).map_or(0, |s| s.len());
+                if holders >= self.opts.replicas || st.evicted_pending.contains(&id) {
+                    return;
+                }
+                // a harvested (evicted) broadcast must not be resurrected:
+                // the payload being gone from the driver cache means no
+                // evict could ever follow the repair copy
+                if !self.lock_payloads().contains_key(&id) {
+                    return;
+                }
+                match st.idle.iter().position(|w| !w.has.contains(&id)) {
+                    Some(i) => {
+                        let mut w = st.idle.swap_remove(i);
+                        // claim holdership UNDER the lock: a concurrent
+                        // evict then sees this copy, marks it pending, and
+                        // release() below delivers the evict — the repair
+                        // copy can never outlive its broadcast
+                        w.has.insert(id);
+                        st.holders.entry(id).or_default().insert(w.serial);
+                        w
+                    }
+                    None => return, // no idle candidate: leave it task-driven
+                }
+            };
+            let mut w = target;
+            if w.link.transport.send_line(payload).is_err() {
+                // handle_death drops the claimed holdership via w.has
+                self.handle_death(w, DeathCause::Exchange, "repair ship failed");
+                continue;
+            }
+            {
+                let mut st = self.lock_state();
+                st.repair_ships += 1;
+                st.repair_ship_bytes += payload.len() as u64 + 1;
+            }
+            self.release(w);
+        }
+    }
+
+    /// Probe one idle worker: ping, await the matching pong within
+    /// `deadline`. `Ok(false)` = the transport cannot enforce deadlines
+    /// (pipe) and the probe was skipped; `Err` = the worker is silently
+    /// dead (or the link broke) and must be discarded.
+    fn ping_worker(
+        &self,
+        worker: &mut Worker,
+        nonce: u64,
+        deadline: Duration,
+    ) -> std::io::Result<bool> {
+        if !worker.link.transport.set_recv_deadline(Some(deadline))? {
+            return Ok(false);
+        }
+        worker.link.transport.send_line(&ping_payload(nonce))?;
+        loop {
+            let reply = recv_json(worker.link.transport.as_mut())?;
+            if reply.get("type").and_then(Json::as_str) == Some("pong")
+                && reply.get("nonce").and_then(Json::as_f64) == Some(nonce as f64)
+            {
+                worker.link.transport.set_recv_deadline(None)?;
+                return Ok(true);
+            }
+        }
+    }
+
+    /// One request/response exchange on `worker`: ship missing broadcasts,
+    /// send the task, read its reply.
+    fn exchange(
+        &self,
+        worker: &mut Worker,
+        needs: &[(u64, Arc<String>)],
+        task_id: u64,
+        task_line: &str,
+    ) -> Result<Json, ExchangeError> {
+        for (id, payload) in needs {
+            if !worker.has.contains(id) {
+                self.ship(worker, *id, payload).map_err(ExchangeError::Dead)?;
+            }
+        }
+        worker
+            .link
+            .transport
+            .send_line(task_line)
+            .map_err(ExchangeError::Dead)?;
+        loop {
+            let reply = recv_json(worker.link.transport.as_mut()).map_err(ExchangeError::Dead)?;
+            match reply.get("type").and_then(Json::as_str) {
+                Some("result")
+                    if reply.get("task").and_then(Json::as_f64) == Some(task_id as f64) =>
+                {
+                    return Ok(reply);
+                }
+                Some("error") => {
+                    // a well-formed reply: the worker is ALIVE, the task
+                    // (or our bookkeeping about the worker's store) is not
+                    return Err(ExchangeError::App(
+                        reply
+                            .get("msg")
+                            .and_then(Json::as_str)
+                            .unwrap_or("unspecified worker error")
+                            .to_string(),
+                    ));
+                }
+                _ => continue, // stale pongs / hello echoes: skip
+            }
+        }
     }
 
     /// Ship broadcast `id` to `worker`; on the id's first-ever ship, also
@@ -832,7 +1084,7 @@ impl ClusterBackend {
         worker.link.transport.send_line(payload)?;
         worker.has.insert(id);
         let first_ever = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             record_ship(&mut st, id, worker.serial, payload.len())
         };
         if first_ever && self.opts.replicas > 1 {
@@ -849,7 +1101,7 @@ impl ClusterBackend {
     fn replicate(&self, id: u64, payload: &str, exclude: u64) {
         let mut targets = Vec::new();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             let holders = st.holders.get(&id).map_or(0, |s| s.len());
             let mut need = self.opts.replicas.saturating_sub(holders);
             let mut i = 0;
@@ -864,58 +1116,24 @@ impl ClusterBackend {
         }
         for mut w in targets {
             if w.link.transport.send_line(payload).is_err() {
-                self.discard_and_respawn(w);
+                self.handle_death(w, DeathCause::Exchange, "replica ship failed");
                 continue;
             }
             w.has.insert(id);
             {
-                let mut st = self.state.lock().unwrap();
+                let mut st = self.lock_state();
                 record_ship(&mut st, id, w.serial, payload.len());
             }
             self.release(w);
         }
     }
 
-    /// One request/response exchange on `worker`: ship missing broadcasts,
-    /// send the task, read its reply.
-    fn exchange(
-        &self,
-        worker: &mut Worker,
-        needs: &[(u64, Arc<String>)],
-        task_id: u64,
-        task_line: &str,
-    ) -> std::io::Result<Json> {
-        for (id, payload) in needs {
-            if !worker.has.contains(id) {
-                self.ship(worker, *id, payload)?;
-            }
-        }
-        worker.link.transport.send_line(task_line)?;
-        loop {
-            let reply = recv_json(worker.link.transport.as_mut())?;
-            match reply.get("type").and_then(Json::as_str) {
-                Some("result")
-                    if reply.get("task").and_then(Json::as_f64) == Some(task_id as f64) =>
-                {
-                    return Ok(reply);
-                }
-                Some("error") => {
-                    return Err(std::io::Error::other(
-                        reply
-                            .get("msg")
-                            .and_then(Json::as_str)
-                            .unwrap_or("unspecified worker error")
-                            .to_string(),
-                    ));
-                }
-                _ => continue, // hello echoes / stale lines: skip
-            }
-        }
-    }
-
     /// Run a task to completion, requeueing if the leased worker dies
     /// mid-exchange — onto a surviving replica (zero re-ship) when one
-    /// holds the task's broadcasts, else with a counted re-broadcast.
+    /// holds the task's broadcasts, else with a counted re-broadcast. A
+    /// worker that answers with a clean wire `error` is alive and stays
+    /// pooled (crucial for remote workers, which cannot be respawned);
+    /// only connection-level failures declare it dead.
     fn execute(&self, needs: &[(u64, Arc<String>)], build_task: impl Fn(u64) -> String) -> Json {
         let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
         let task_line = build_task(task_id);
@@ -929,9 +1147,26 @@ impl ClusterBackend {
                     self.release(worker);
                     return reply;
                 }
-                Err(e) => {
+                Err(ExchangeError::Dead(e)) => {
                     last_err = e.to_string();
-                    self.discard_and_respawn(worker);
+                    self.handle_death(worker, DeathCause::Exchange, &last_err);
+                }
+                Err(ExchangeError::App(msg)) => {
+                    last_err = msg;
+                    // roll back this worker's claim to the task's
+                    // broadcasts: if the error was store drift ("unknown
+                    // broadcast"), the retry re-ships instead of trusting
+                    // the stale bookkeeping (and instead of discarding a
+                    // healthy worker)
+                    {
+                        let mut st = self.lock_state();
+                        for id in &ids {
+                            if worker.has.remove(id) {
+                                drop_holder(&mut st, *id, worker.serial);
+                            }
+                        }
+                    }
+                    self.release(worker);
                 }
             }
         }
@@ -939,12 +1174,247 @@ impl ClusterBackend {
     }
 }
 
-impl Drop for ClusterBackend {
+impl Drop for ClusterCore {
     fn drop(&mut self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         for mut w in st.idle.drain(..) {
             let _ = w.link.transport.send_line(r#"{"type":"shutdown"}"#);
-            let _ = w.link.child.wait();
+            if let Some(child) = w.link.child.as_mut() {
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// The background prober: periodically pings every idle
+/// keepalive-capable worker and discards any that stays silent past the
+/// deadline — a silently-dead remote (network partition, frozen host) is
+/// detected within ~2 intervals instead of on the next task.
+fn keepalive_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, interval: Duration) {
+    let tick = Duration::from_millis(25).min(interval);
+    let mut nonce: u64 = 0;
+    'rounds: loop {
+        let next = std::time::Instant::now() + interval;
+        while std::time::Instant::now() < next {
+            if stop.load(Ordering::Relaxed) {
+                break 'rounds;
+            }
+            std::thread::sleep(tick);
+        }
+        // probe idle capable workers ONE at a time (pull, ping, release
+        // before pulling the next): a silently-dead worker stalls only
+        // its own probe, never the rest of the pool behind it — tasks can
+        // still acquire every other worker while a probe waits out its
+        // deadline. `probed` stops a released worker from being re-pulled
+        // within the same round.
+        let mut probed: HashSet<u64> = HashSet::new();
+        loop {
+            let target = {
+                let mut st = core.lock_state();
+                let pos = st.idle.iter().position(|w| {
+                    w.wire_v >= KEEPALIVE_WIRE_VERSION && !probed.contains(&w.serial)
+                });
+                match pos {
+                    Some(i) => st.idle.swap_remove(i),
+                    None => break,
+                }
+            };
+            let mut w = target;
+            probed.insert(w.serial);
+            nonce += 1;
+            match core.ping_worker(&mut w, nonce, interval) {
+                Ok(_) => core.release(w),
+                Err(e) => {
+                    let why = format!("no pong within {interval:?}: {e}");
+                    core.handle_death(w, DeathCause::Keepalive, &why);
+                }
+            }
+            if stop.load(Ordering::Relaxed) {
+                break 'rounds;
+            }
+        }
+    }
+}
+
+impl ClusterBackend {
+    /// Pipe-transport pool of `workers` children of this executable
+    /// (`<current_exe> worker`), no replication — PR 2 behavior.
+    pub fn new(workers: usize) -> std::io::Result<ClusterBackend> {
+        Self::with_command(std::env::current_exe()?, workers)
+    }
+
+    /// [`ClusterBackend::new`] with an explicit binary (tests pass
+    /// `env!("CARGO_BIN_EXE_parccm")`).
+    pub fn with_command(
+        cmd: impl Into<PathBuf>,
+        workers: usize,
+    ) -> std::io::Result<ClusterBackend> {
+        Self::with_options(cmd, ClusterOptions { workers, ..ClusterOptions::default() })
+    }
+
+    /// Fully-specified construction: source, transport, pool width,
+    /// replication, keepalive. A non-empty `workers_at` connects to
+    /// pre-started remote listeners (TCP by construction, pool width =
+    /// address count) instead of forking children of `cmd`.
+    pub fn with_options(
+        cmd: impl Into<PathBuf>,
+        opts: ClusterOptions,
+    ) -> std::io::Result<ClusterBackend> {
+        let mut opts = opts;
+        // forked workers inherit the process environment, so they would
+        // present PARCCM_AUTH_TOKEN even when the caller left auth_token
+        // unset — resolve the same fallback on the driver side, or the
+        // two halves of the handshake disagree with themselves
+        opts.auth_token = resolve_auth_token(opts.auth_token.as_deref());
+        let source = if opts.workers_at.is_empty() {
+            WorkerSource::Fork { cmd: cmd.into() }
+        } else {
+            opts.transport = TransportKind::Tcp; // remote workers are sockets
+            WorkerSource::Remote { addrs: std::mem::take(&mut opts.workers_at) }
+        };
+        // >= 1 by construction: Fork clamps to 1, Remote requires the
+        // non-empty workers_at that selected it
+        opts.workers = source.pool_size(opts.workers);
+        opts.replicas = opts.replicas.clamp(1, opts.workers);
+        let keepalive = match opts.keepalive {
+            // pipes cannot enforce recv deadlines (set_recv_deadline is a
+            // no-op there), so a prober would only churn the pool — the
+            // CLI warns about the combination
+            Some(d) if d > Duration::ZERO && opts.transport == TransportKind::Tcp => Some(d),
+            Some(_) => None, // explicit zero (or pipe transport): off
+            None if source.is_remote() => Some(DEFAULT_REMOTE_KEEPALIVE),
+            None => None,
+        };
+        let core = Arc::new(ClusterCore {
+            source,
+            opts,
+            state: Mutex::new(PoolState::default()),
+            cv: Condvar::new(),
+            payloads: Mutex::new(HashMap::new()),
+            next_task: AtomicU64::new(1),
+            next_serial: AtomicU64::new(1),
+            local: NativeBackend,
+        });
+        let mut idle = Vec::with_capacity(core.opts.workers);
+        for slot in 0..core.opts.workers {
+            idle.push(core.spawn(slot)?);
+        }
+        {
+            let mut st = core.lock_state();
+            st.live = idle.len();
+            st.idle = idle;
+        }
+        let keepalive_stop = Arc::new(AtomicBool::new(false));
+        let keepalive_thread = keepalive.map(|interval| {
+            let core = Arc::clone(&core);
+            let stop = Arc::clone(&keepalive_stop);
+            std::thread::spawn(move || keepalive_loop(core, stop, interval))
+        });
+        Ok(ClusterBackend { core, keepalive_stop, keepalive_thread })
+    }
+
+    /// Transport the pool runs on.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.core.opts.transport
+    }
+
+    /// Configured replication factor (post-clamp).
+    pub fn replicas(&self) -> usize {
+        self.core.opts.replicas
+    }
+
+    /// Whether the pool connects to pre-started remote workers
+    /// (`--workers-at`) rather than forking children.
+    pub fn is_remote(&self) -> bool {
+        self.core.source.is_remote()
+    }
+
+    /// Live worker pids (for observability and kill-recovery tests; idle
+    /// workers only, like PR 2).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.core.lock_state().idle.iter().map(|w| w.link.pid).collect()
+    }
+
+    /// Workers currently alive (idle + leased).
+    pub fn num_workers(&self) -> usize {
+        self.core.lock_state().live
+    }
+
+    /// How many workers have been replaced after dying (fork sources).
+    pub fn respawns(&self) -> u64 {
+        self.core.lock_state().respawns
+    }
+
+    /// Remote workers lost for good (remote sources never respawn).
+    pub fn remote_lost(&self) -> u64 {
+        self.core.lock_state().remote_lost
+    }
+
+    /// Workers declared dead by the keepalive prober.
+    pub fn keepalive_deaths(&self) -> u64 {
+        self.core.lock_state().keepalive_deaths
+    }
+
+    /// (id, worker) broadcast ships performed, including replica copies.
+    pub fn broadcast_ships(&self) -> u64 {
+        self.core.lock_state().ships
+    }
+
+    /// Bytes actually written shipping broadcasts (the real counterpart of
+    /// the DES's `sim_broadcast_ship_bytes`).
+    pub fn broadcast_ship_bytes(&self) -> u64 {
+        self.core.lock_state().ship_bytes
+    }
+
+    /// Ships that had to re-broadcast an id because its last replica died.
+    pub fn rebroadcasts(&self) -> u64 {
+        self.core.lock_state().rebroadcasts
+    }
+
+    /// Eager re-replication copies shipped after worker deaths (the real
+    /// counterpart of the DES's `sim_repair_ship_bytes` pricing).
+    pub fn repair_ships(&self) -> u64 {
+        self.core.lock_state().repair_ships
+    }
+
+    /// Bytes written by eager re-replication repair ships.
+    pub fn repair_ship_bytes(&self) -> u64 {
+        self.core.lock_state().repair_ship_bytes
+    }
+
+    /// `evict` messages delivered to workers.
+    pub fn evictions(&self) -> u64 {
+        self.core.lock_state().evictions
+    }
+
+    /// Serialized broadcast payloads currently cached driver-side.
+    pub fn cached_payloads(&self) -> usize {
+        self.core.lock_payloads().len()
+    }
+
+    /// Add an owner to already-cached payloads (callers sharing broadcast
+    /// content across problems pair this with a later eviction).
+    pub fn retain_broadcast_ids(&self, ids: &[u64]) {
+        self.core.retain_broadcast_ids(ids);
+    }
+
+    /// Release one ownership reference on each id; payloads that reach
+    /// zero references are dropped from the driver cache and evicted from
+    /// every worker (v2+ workers get the wire `evict`; leased holders are
+    /// notified when their task completes). Unknown ids are ignored, so
+    /// callers may pass a problem's full candidate id set.
+    pub fn evict_broadcast_ids(&self, ids: &[u64]) {
+        self.core.evict_broadcast_ids(ids);
+    }
+}
+
+impl Drop for ClusterBackend {
+    fn drop(&mut self) {
+        // stop the prober before the core tears the pool down, so no ping
+        // races the shutdown messages
+        self.keepalive_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.keepalive_thread.take() {
+            let _ = handle.join();
         }
     }
 }
@@ -952,12 +1422,13 @@ impl Drop for ClusterBackend {
 impl ComputeBackend for ClusterBackend {
     fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
         let id = problem_wire_id(input.vecs, input.targets, input.times);
-        let payload =
-            self.payload(id, || problem_payload(id, input.vecs, input.targets, input.times));
+        let payload = self
+            .core
+            .payload(id, || problem_payload(id, input.vecs, input.targets, input.times));
         let e = input.e;
         let theiler = input.theiler;
         let lib_rows = Json::usizes(input.lib_rows);
-        let reply = self.execute(&[(id, payload)], |task| {
+        let reply = self.core.execute(&[(id, payload)], |task| {
             Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("type", Json::Str("task".into())),
@@ -986,12 +1457,12 @@ impl ComputeBackend for ClusterBackend {
         preds: &mut Vec<f32>,
     ) -> f32 {
         // driver-side combine step (cheap O(n*K)); panels never ship
-        self.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
+        self.core.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
     }
 
     fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
         // table construction happens driver-side; shards ship afterwards
-        self.local.distance_matrix(vecs, n)
+        self.core.local.distance_matrix(vecs, n)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1007,10 +1478,10 @@ impl ComputeBackend for ClusterBackend {
     ) {
         let sid = shard.wire_id();
         let tid = targets_wire_id(targets);
-        let shard_line = self.payload(sid, || shard_payload(sid, shard));
-        let targets_line = self.payload(tid, || targets_payload(tid, targets));
+        let shard_line = self.core.payload(sid, || shard_payload(sid, shard));
+        let targets_line = self.core.payload(tid, || targets_payload(tid, targets));
         let lib_rows = Json::usizes(lib_rows);
-        let reply = self.execute(&[(sid, shard_line), (tid, targets_line)], |task| {
+        let reply = self.core.execute(&[(sid, shard_line), (tid, targets_line)], |task| {
             Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("type", Json::Str("task".into())),
@@ -1031,29 +1502,18 @@ impl ComputeBackend for ClusterBackend {
     }
 
     fn evict_broadcasts(&self, ids: &[u64]) {
-        self.evict_broadcast_ids(ids);
+        self.core.evict_broadcast_ids(ids);
     }
 
     fn name(&self) -> &'static str {
-        match self.opts.transport {
+        if self.core.source.is_remote() {
+            return "cluster-remote";
+        }
+        match self.core.opts.transport {
             TransportKind::Pipe => "process",
             TransportKind::Tcp => "cluster-tcp",
         }
     }
-}
-
-/// Build a [`ClusterBackend`] spawning children of an explicit binary
-/// path, wired from CLI-style knobs (used by `main.rs` and benches).
-pub fn cluster_from_cli(
-    cmd: impl Into<PathBuf>,
-    transport: TransportKind,
-    workers: usize,
-    replicas: usize,
-) -> std::io::Result<ClusterBackend> {
-    ClusterBackend::with_options(
-        cmd,
-        ClusterOptions { transport, workers, replicas, worker_env: Vec::new() },
-    )
 }
 
 #[cfg(test)]

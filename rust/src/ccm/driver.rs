@@ -72,6 +72,13 @@ impl Case {
         }
     }
 
+    /// Parse a CLI case name (`--case A4`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Case> {
+        Case::ALL
+            .into_iter()
+            .find(|c| c.name().eq_ignore_ascii_case(s.trim()))
+    }
+
     pub fn uses_table(&self) -> bool {
         matches!(self, Case::A4 | Case::A5)
     }
@@ -117,6 +124,32 @@ pub struct CaseReport {
     pub skills: Vec<SkillRow>,
     /// Measured + DES-simulated costs (for A1 the two coincide).
     pub report: ExecutionReport,
+}
+
+/// Canonical JSON dump of a skill set: rows sorted by (E, tau, L, sample)
+/// with `rho` as an exact f32 -> f64 shortest-roundtrip number — two runs
+/// are bit-identical iff their dumps are byte-identical, which is what
+/// the `cluster-remote` CI job diffs across backends (`--dump-skills`).
+pub fn skills_to_json(skills: &[SkillRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut rows: Vec<&SkillRow> = skills.iter().collect();
+    rows.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
+    Json::obj(vec![(
+        "skills",
+        Json::Arr(
+            rows.into_iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("e", Json::Num(r.params.e as f64)),
+                        ("tau", Json::Num(r.params.tau as f64)),
+                        ("l", Json::Num(r.params.l as f64)),
+                        ("sample", Json::Num(r.sample_id as f64)),
+                        ("rho", Json::Num(r.rho as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
 }
 
 /// Run `case` over `scenario`, cross-mapping `cause` from the shadow
@@ -260,6 +293,8 @@ fn run_a1(
             sim_utilization: 1.0,
             sim_broadcast_ship_s: 0.0,
             sim_broadcast_ship_bytes: 0,
+            sim_repair_ship_s: 0.0,
+            sim_repair_ship_bytes: 0,
             topology: "single-thread".to_string(),
         },
     }
@@ -516,6 +551,31 @@ mod tests {
                 assert_eq!(b.4, m.4, "{case:?}/{shards} shards: must equal monolithic table");
             }
         }
+    }
+
+    #[test]
+    fn case_parse_round_trips() {
+        for c in Case::ALL {
+            assert_eq!(Case::parse(c.name()), Some(c));
+        }
+        assert_eq!(Case::parse("a4"), Some(Case::A4));
+        assert_eq!(Case::parse(" A5 "), Some(Case::A5));
+        assert_eq!(Case::parse("B9"), None);
+    }
+
+    #[test]
+    fn skills_dump_is_order_invariant_and_exact() {
+        use crate::ccm::params::CcmParams;
+        let a = SkillRow { params: CcmParams::new(2, 1, 100), sample_id: 1, rho: 0.25f32 };
+        let b = SkillRow { params: CcmParams::new(2, 1, 100), sample_id: 0, rho: 0.1f32 };
+        let fwd = skills_to_json(&[a, b]).to_string();
+        let rev = skills_to_json(&[b, a]).to_string();
+        assert_eq!(fwd, rev, "dump must canonicalize row order");
+        // 0.1f32 -> f64 is exact, and the writer round-trips it
+        assert!(fwd.contains("\"sample\":0"), "{fwd}");
+        let parsed = crate::util::json::Json::parse(&fwd).unwrap();
+        let rows = parsed.get("skills").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("rho").unwrap().as_f64().unwrap() as f32, 0.1f32);
     }
 
     #[test]

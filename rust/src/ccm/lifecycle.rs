@@ -1,0 +1,165 @@
+//! Worker lifecycle: where a pool's workers come from and what their
+//! death means — split out of the scheduler so `ccm::cluster` can stay a
+//! pure scheduling layer.
+//!
+//! Two sources exist:
+//!
+//! * [`WorkerSource::Fork`] — the pool spawns children of a binary
+//!   (`parccm worker`, over pipe or TCP loopback) and *owns* their
+//!   lifecycle: a dead worker is reaped and a fresh child respawned in
+//!   its place, so the pool width is an invariant.
+//! * [`WorkerSource::Remote`] — the pool dials pre-started
+//!   `parccm worker --listen HOST:PORT` processes named by
+//!   `--workers-at host:port,...` (or the [`WORKERS_ENV`] fallback). The
+//!   driver does not own those processes: a dead remote cannot be
+//!   respawned, so its death permanently shrinks the pool and the
+//!   scheduler must requeue onto survivors (and eagerly restore the
+//!   replication factor there). The pool width *is* the address list.
+//!
+//! The scheduler asks exactly two questions: [`WorkerSource::connect`]
+//! (make me worker `slot`) and [`WorkerSource::can_respawn`] (is death
+//! repairable?) — everything else about scheduling, replication, and
+//! requeueing is source-agnostic.
+
+use std::path::PathBuf;
+
+use crate::ccm::transport::{connect_remote, connect_worker, Hello, TransportKind, WorkerLink};
+
+/// Environment fallback for `--workers-at`: a comma-separated
+/// `host:port,...` list of pre-started listen-mode workers.
+pub const WORKERS_ENV: &str = "PARCCM_WORKERS";
+
+/// Where the cluster pool's workers come from.
+#[derive(Clone, Debug)]
+pub enum WorkerSource {
+    /// Spawn children of `cmd` (`parccm worker`); death -> respawn.
+    Fork {
+        /// Binary to spawn (`<current_exe>` in production, the
+        /// `CARGO_BIN_EXE_parccm` path in tests).
+        cmd: PathBuf,
+    },
+    /// Connect to pre-started listen-mode workers; death -> mark dead.
+    Remote {
+        /// `host:port` of each `parccm worker --listen` process.
+        addrs: Vec<String>,
+    },
+}
+
+impl WorkerSource {
+    /// How wide the pool actually is: `requested` for a forking source,
+    /// the address-list length for a remote one (each address is exactly
+    /// one worker).
+    pub fn pool_size(&self, requested: usize) -> usize {
+        match self {
+            WorkerSource::Fork { .. } => requested.max(1),
+            WorkerSource::Remote { addrs } => addrs.len(),
+        }
+    }
+
+    /// Whether a dead worker can be replaced by this source.
+    pub fn can_respawn(&self) -> bool {
+        matches!(self, WorkerSource::Fork { .. })
+    }
+
+    /// Whether this source reaches pre-started remote workers.
+    pub fn is_remote(&self) -> bool {
+        matches!(self, WorkerSource::Remote { .. })
+    }
+
+    /// Establish the connection for pool slot `slot` (respawns pass the
+    /// slot of the worker being replaced; only remote sources care, and
+    /// they never respawn).
+    pub fn connect(
+        &self,
+        slot: usize,
+        kind: TransportKind,
+        extra_env: &[(String, String)],
+        auth: Option<&str>,
+    ) -> std::io::Result<(WorkerLink, Hello)> {
+        match self {
+            WorkerSource::Fork { cmd } => connect_worker(cmd, kind, extra_env, auth),
+            WorkerSource::Remote { addrs } => {
+                let addr = addrs.get(slot).ok_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidInput,
+                        format!("no remote worker address for slot {slot}"),
+                    )
+                })?;
+                connect_remote(addr, auth)
+            }
+        }
+    }
+
+    /// Human-readable description for startup logs.
+    pub fn describe(&self) -> String {
+        match self {
+            WorkerSource::Fork { cmd } => format!("fork {}", cmd.display()),
+            WorkerSource::Remote { addrs } => format!("remote [{}]", addrs.join(", ")),
+        }
+    }
+}
+
+/// Parse a `--workers-at` value: comma-separated `host:port` entries,
+/// whitespace-tolerant, empties dropped.
+pub fn parse_workers_at(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// The [`WORKERS_ENV`] fallback for `--workers-at`; `None` when unset or
+/// empty.
+pub fn workers_at_from_env() -> Option<Vec<String>> {
+    let addrs = parse_workers_at(&std::env::var(WORKERS_ENV).ok()?);
+    if addrs.is_empty() {
+        None
+    } else {
+        Some(addrs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_workers_at_lists() {
+        assert_eq!(
+            parse_workers_at("a:1, b:2 ,,c:3,"),
+            vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()]
+        );
+        assert!(parse_workers_at("  ").is_empty());
+    }
+
+    #[test]
+    fn pool_size_follows_the_source() {
+        let fork = WorkerSource::Fork { cmd: PathBuf::from("parccm") };
+        assert_eq!(fork.pool_size(3), 3);
+        assert_eq!(fork.pool_size(0), 1, "fork pools are never empty");
+        assert!(fork.can_respawn());
+        assert!(!fork.is_remote());
+        let remote =
+            WorkerSource::Remote { addrs: vec!["h:1".into(), "h:2".into()] };
+        assert_eq!(remote.pool_size(9), 2, "remote pool width IS the address list");
+        assert!(!remote.can_respawn());
+        assert!(remote.is_remote());
+    }
+
+    #[test]
+    fn remote_connect_rejects_unknown_slot() {
+        let remote = WorkerSource::Remote { addrs: vec!["127.0.0.1:1".into()] };
+        let err = remote
+            .connect(5, TransportKind::Tcp, &[], None)
+            .expect_err("slot out of range");
+        assert!(err.to_string().contains("slot 5"), "{err}");
+    }
+
+    #[test]
+    fn describe_names_the_source() {
+        assert!(WorkerSource::Fork { cmd: PathBuf::from("x") }.describe().contains("fork"));
+        let r = WorkerSource::Remote { addrs: vec!["a:1".into(), "b:2".into()] };
+        assert_eq!(r.describe(), "remote [a:1, b:2]");
+    }
+}

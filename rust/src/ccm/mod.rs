@@ -37,6 +37,7 @@ pub mod embedding;
 pub mod forecast;
 pub mod knn;
 pub mod lagmap;
+pub mod lifecycle;
 pub mod params;
 pub mod pipeline;
 pub mod process;
@@ -51,6 +52,7 @@ pub mod transport;
 pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
 pub use cluster::{ClusterBackend, ClusterOptions};
 pub use driver::{Case, CaseReport, TablePolicy};
+pub use lifecycle::WorkerSource;
 pub use embedding::Embedding;
 pub use params::{CcmParams, Scenario};
 pub use pipeline::TableMode;

@@ -10,14 +10,18 @@
 //!   peer is gone").
 //! * [`PipeTransport`] — the original fork + stdio transport: the worker
 //!   is a child of the driver and speaks on its stdin/stdout.
-//! * [`TcpTransport`] — a TCP-loopback transport: the driver binds an
-//!   ephemeral listener, spawns `parccm worker --connect 127.0.0.1:PORT`,
-//!   and accepts exactly one connection per worker. The same versioned
-//!   wire protocol rides on the socket, so pipe and TCP results are
-//!   bit-identical (asserted in `tests/integration_cluster.rs`).
+//! * [`TcpTransport`] — a TCP transport: for spawned workers the driver
+//!   binds an ephemeral listener and the child dials back
+//!   (`parccm worker --connect 127.0.0.1:PORT`); for pre-started remote
+//!   workers the driver dials out to `parccm worker --listen HOST:PORT`
+//!   ([`connect_remote`]). The same versioned wire protocol rides on the
+//!   socket, so pipe and TCP results are bit-identical (asserted in
+//!   `tests/integration_cluster.rs` / `tests/integration_remote.rs`).
 //! * Connection lifecycle — [`connect_worker`] spawns + handshakes a
-//!   worker over either transport; [`negotiate_hello`] is the pure
-//!   version-negotiation step, unit-testable with doctored handshakes.
+//!   worker over either transport, [`connect_remote`] dials a pre-started
+//!   listener; [`negotiate_hello`] is the pure version-negotiation step
+//!   and [`verify_worker_auth`] the pure auth step, both unit-testable
+//!   with doctored handshakes.
 //!
 //! # Version negotiation
 //!
@@ -29,9 +33,21 @@
 //! immediate error naming both sides' versions — never a hang and never a
 //! silent requeue loop (the regression tests doctor the advertised
 //! version via `PARCCM_TEST_HELLO_V`, a child-env test seam).
+//!
+//! # Authenticated handshake (v3)
+//!
+//! With a shared secret configured (`--auth-token` / `PARCCM_AUTH_TOKEN`),
+//! the worker's hello carries an `auth` field and the driver answers a
+//! matching `hello_ack` — each side proves knowledge of the token to the
+//! other before any broadcast or task moves. A mismatch is a clean named
+//! error on *both* ends: the driver refuses the connection and sends the
+//! worker a `reject` naming the failure before hanging up. The token is
+//! compared in plain text on the wire: it is accident protection (a
+//! driver pointed at the wrong cluster, a stray scanner hitting a listen
+//! port), not cryptography — run real deployments on a trusted network.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::Path;
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -40,16 +56,42 @@ use crate::util::json::Json;
 
 /// Highest protocol version this build speaks; bumped on any incompatible
 /// message change. v2 added the `evict` message and the capability-carrying
-/// hello (`transport`, `caps` fields).
-pub const WIRE_VERSION: u64 = 2;
+/// hello (`transport`, `caps` fields); v3 added the authenticated
+/// handshake (`auth` in hello, `hello_ack`, `reject`) and the keepalive
+/// `ping`/`pong` pair.
+pub const WIRE_VERSION: u64 = 3;
 
-/// Oldest protocol version the driver still accepts. v1 workers are served
-/// without v2-only traffic (no `evict` is ever sent to them).
+/// Oldest protocol version the driver still accepts. Older workers are
+/// served without newer-version traffic (no `evict`/`hello_ack`/`ping`).
 pub const MIN_WIRE_VERSION: u64 = 1;
+
+/// First wire version that understands `evict`.
+pub const EVICT_WIRE_VERSION: u64 = 2;
+
+/// First wire version that understands `hello_ack`, `reject`, and the
+/// keepalive `ping`/`pong` pair.
+pub const KEEPALIVE_WIRE_VERSION: u64 = 3;
 
 /// How long the driver waits for a spawned TCP worker to dial back before
 /// declaring the spawn failed (keeps a broken worker from hanging CI).
 pub const TCP_ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long [`connect_remote`] waits for a listening remote worker to
+/// accept before declaring it unreachable.
+pub const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Environment variable both sides read the shared auth token from when
+/// no explicit `--auth-token` is given. The driver also exports it to the
+/// workers it forks, so local pools authenticate transparently.
+pub const AUTH_TOKEN_ENV: &str = "PARCCM_AUTH_TOKEN";
+
+/// Resolve the shared auth token: explicit value, else [`AUTH_TOKEN_ENV`].
+pub fn resolve_auth_token(explicit: Option<&str>) -> Option<String> {
+    match explicit {
+        Some(t) if !t.is_empty() => Some(t.to_string()),
+        _ => std::env::var(AUTH_TOKEN_ENV).ok().filter(|t| !t.is_empty()),
+    }
+}
 
 /// Which byte layer a worker connection uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -93,6 +135,14 @@ pub trait Transport: Send {
 
     /// Which byte layer this is (for logs and hello messages).
     fn kind(&self) -> TransportKind;
+
+    /// Bound how long the next `recv_line` may block (`None` = forever).
+    /// Returns `Ok(false)` when the byte layer cannot enforce deadlines
+    /// (pipes) — callers must then skip deadline-dependent traffic such as
+    /// keepalive pings rather than risk blocking the scheduler.
+    fn set_recv_deadline(&mut self, _timeout: Option<Duration>) -> std::io::Result<bool> {
+        Ok(false)
+    }
 }
 
 /// Receive the next non-empty line as parsed JSON; EOF and parse failures
@@ -178,17 +228,28 @@ impl Transport for TcpTransport {
     fn kind(&self) -> TransportKind {
         TransportKind::Tcp
     }
+
+    fn set_recv_deadline(&mut self, timeout: Option<Duration>) -> std::io::Result<bool> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(true)
+    }
 }
 
-/// A spawned worker process plus its connected transport — what the
-/// cluster scheduler leases tasks onto.
+/// A connected worker plus its transport — what the cluster scheduler
+/// leases tasks onto. Spawned workers carry their child-process handle;
+/// remote workers (pre-started, reached via [`connect_remote`]) have no
+/// child to kill or respawn — their death permanently shrinks the pool.
 pub struct WorkerLink {
-    /// Child process handle (kill/wait on discard and shutdown).
-    pub child: Child,
+    /// Child process handle (kill/wait on discard and shutdown); `None`
+    /// for remote workers, whose lifecycle the driver does not own.
+    pub child: Option<Child>,
     /// The framed connection to it.
     pub transport: Box<dyn Transport>,
-    /// OS pid (observability and kill-recovery tests).
+    /// OS pid as the worker reports it (observability and kill-recovery
+    /// tests; for remote workers this is a pid on the *remote* machine).
     pub pid: u32,
+    /// Address dialed for remote workers (diagnostics).
+    pub addr: Option<String>,
 }
 
 /// The worker's negotiated identity after a successful hello.
@@ -202,6 +263,10 @@ pub struct Hello {
     pub transport: Option<String>,
     /// Capability strings (v2 hellos; e.g. `"evict"`).
     pub caps: Vec<String>,
+    /// Shared-secret token the worker presented (v3 hellos; present iff
+    /// the worker was configured with one — presenting a token also means
+    /// the worker *requires* the driver to echo it in `hello_ack`).
+    pub auth: Option<String>,
 }
 
 /// Validate a worker hello and negotiate the connection version.
@@ -237,35 +302,184 @@ pub fn negotiate_hello(msg: &Json) -> Result<Hello, String> {
         pid,
         transport: msg.get("transport").and_then(Json::as_str).map(str::to_string),
         caps,
+        auth: msg.get("auth").and_then(Json::as_str).map(str::to_string),
     })
 }
 
-/// Spawn a worker over `kind` and complete the hello handshake, returning
-/// the connected link and the negotiated [`Hello`]. `extra_env` is set on
-/// the child only (used by tests to doctor the advertised version).
-pub fn connect_worker(
-    cmd: &Path,
-    kind: TransportKind,
-    extra_env: &[(String, String)],
-) -> std::io::Result<(WorkerLink, Hello)> {
-    let mut link = match kind {
-        TransportKind::Pipe => spawn_pipe(cmd, extra_env)?,
-        TransportKind::Tcp => spawn_tcp(cmd, extra_env)?,
-    };
-    let hello = recv_json(link.transport.as_mut())?;
-    match negotiate_hello(&hello) {
-        Ok(h) => Ok((link, h)),
-        Err(e) => {
-            let _ = link.child.kill();
-            let _ = link.child.wait();
-            Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+/// Validate the worker's presented auth token against the driver's. Pure,
+/// so the mismatch wording is unit-testable; the token itself never
+/// appears in the error.
+pub fn verify_worker_auth(hello: &Hello, driver_token: Option<&str>) -> Result<(), String> {
+    match (driver_token, hello.auth.as_deref()) {
+        (None, None) => Ok(()),
+        (Some(want), Some(got)) if want == got => Ok(()),
+        (Some(_), Some(_)) => Err(format!(
+            "auth token mismatch: worker pid {} presented a token the driver does not \
+             accept — set the same --auth-token / {AUTH_TOKEN_ENV} on both ends",
+            hello.pid
+        )),
+        (Some(_), None) => Err(format!(
+            "auth token mismatch: the driver requires a token but worker pid {} presented \
+             none — start the worker with --auth-token / {AUTH_TOKEN_ENV}",
+            hello.pid
+        )),
+        (None, Some(_)) => Err(format!(
+            "auth token mismatch: worker pid {} requires a token but the driver has none \
+             — pass --auth-token / {AUTH_TOKEN_ENV} to the driver",
+            hello.pid
+        )),
+    }
+}
+
+/// The driver's half of the v3 handshake: `hello_ack` echoing the shared
+/// token (when configured) so the worker can authenticate the driver too.
+pub fn hello_ack_payload(auth: Option<&str>) -> String {
+    let mut fields = vec![
+        ("v", Json::Num(WIRE_VERSION as f64)),
+        ("type", Json::Str("hello_ack".into())),
+    ];
+    if let Some(token) = auth {
+        fields.push(("auth", Json::Str(token.to_string())));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// A clean refusal the driver sends before hanging up, so the worker end
+/// logs a named error instead of a bare EOF.
+pub fn reject_payload(msg: &str) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(WIRE_VERSION as f64)),
+        ("type", Json::Str("reject".into())),
+        ("msg", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// Keepalive probe; the worker answers `{"type":"pong","nonce":N}`.
+pub fn ping_payload(nonce: u64) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(WIRE_VERSION as f64)),
+        ("type", Json::Str("ping".into())),
+        ("nonce", Json::Num(nonce as f64)),
+    ])
+    .to_string()
+}
+
+/// Complete the driver side of the handshake after version negotiation:
+/// authenticate the worker and, on v3+ connections, send the `hello_ack`
+/// (a rejected worker is sent a `reject` naming the failure first, so the
+/// mismatch is a clean error on both ends).
+pub fn finish_handshake(
+    transport: &mut dyn Transport,
+    hello: &Hello,
+    driver_token: Option<&str>,
+) -> std::io::Result<()> {
+    if hello.version < KEEPALIVE_WIRE_VERSION {
+        // legacy workers predate the auth handshake entirely
+        if driver_token.is_some() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "auth token required but worker pid {} speaks wire v{} \
+                     (auth needs v{KEEPALIVE_WIRE_VERSION}+)",
+                    hello.pid, hello.version
+                ),
+            ));
+        }
+        return Ok(());
+    }
+    match verify_worker_auth(hello, driver_token) {
+        Ok(()) => transport.send_line(&hello_ack_payload(driver_token)),
+        Err(msg) => {
+            let _ = transport.send_line(&reject_payload(&msg));
+            Err(std::io::Error::new(std::io::ErrorKind::PermissionDenied, msg))
         }
     }
 }
 
-fn spawn_pipe(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<WorkerLink> {
+/// Spawn a worker over `kind` and complete the hello handshake, returning
+/// the connected link and the negotiated [`Hello`]. `extra_env` is set on
+/// the child only (used by tests to doctor the advertised version); a
+/// configured `auth` token is exported to the child so it can present it.
+pub fn connect_worker(
+    cmd: &Path,
+    kind: TransportKind,
+    extra_env: &[(String, String)],
+    auth: Option<&str>,
+) -> std::io::Result<(WorkerLink, Hello)> {
+    let mut link = match kind {
+        TransportKind::Pipe => spawn_pipe(cmd, extra_env, auth)?,
+        TransportKind::Tcp => spawn_tcp(cmd, extra_env, auth)?,
+    };
+    let handshake = recv_json(link.transport.as_mut())
+        .and_then(|msg| {
+            negotiate_hello(&msg)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+        })
+        .and_then(|h| finish_handshake(link.transport.as_mut(), &h, auth).map(|()| h));
+    match handshake {
+        Ok(h) => Ok((link, h)),
+        Err(e) => {
+            if let Some(child) = link.child.as_mut() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Dial a pre-started `parccm worker --listen ADDR` and complete the
+/// authenticated handshake — the outbound-connect construction behind
+/// `--workers-at`. No child process is owned: the returned link's death
+/// cannot be repaired by respawning.
+pub fn connect_remote(addr: &str, auth: Option<&str>) -> std::io::Result<(WorkerLink, Hello)> {
+    let resolved = addr
+        .to_socket_addrs()
+        .map_err(|e| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("cannot resolve remote worker address '{addr}': {e}"),
+            )
+        })?
+        .next()
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("remote worker address '{addr}' resolved to nothing"),
+            )
+        })?;
+    let stream = TcpStream::connect_timeout(&resolved, REMOTE_CONNECT_TIMEOUT).map_err(|e| {
+        std::io::Error::new(
+            e.kind(),
+            format!(
+                "cannot reach remote worker at {addr}: {e} — is `parccm worker \
+                 --listen {addr}` running?"
+            ),
+        )
+    })?;
+    let mut transport: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream)?);
+    let hello = recv_json(transport.as_mut()).and_then(|msg| {
+        negotiate_hello(&msg).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    })?;
+    finish_handshake(transport.as_mut(), &hello, auth)?;
+    let pid = hello.pid as u32;
+    Ok((
+        WorkerLink { child: None, transport, pid, addr: Some(addr.to_string()) },
+        hello,
+    ))
+}
+
+fn spawn_pipe(
+    cmd: &Path,
+    extra_env: &[(String, String)],
+    auth: Option<&str>,
+) -> std::io::Result<WorkerLink> {
     let mut command = Command::new(cmd);
     command.arg("worker").stdin(Stdio::piped()).stdout(Stdio::piped());
+    if let Some(token) = auth {
+        command.env(AUTH_TOKEN_ENV, token);
+    }
     for (k, v) in extra_env {
         command.env(k, v);
     }
@@ -273,10 +487,19 @@ fn spawn_pipe(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<Wor
     let stdin = child.stdin.take().expect("piped stdin");
     let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
     let pid = child.id();
-    Ok(WorkerLink { child, transport: Box::new(PipeTransport { stdin, stdout }), pid })
+    Ok(WorkerLink {
+        child: Some(child),
+        transport: Box::new(PipeTransport { stdin, stdout }),
+        pid,
+        addr: None,
+    })
 }
 
-fn spawn_tcp(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<WorkerLink> {
+fn spawn_tcp(
+    cmd: &Path,
+    extra_env: &[(String, String)],
+    auth: Option<&str>,
+) -> std::io::Result<WorkerLink> {
     // one ephemeral listener per worker: unambiguous child <-> connection
     // mapping without trusting accept order
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
@@ -288,6 +511,9 @@ fn spawn_tcp(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<Work
         .arg(addr.to_string())
         .stdin(Stdio::null())
         .stdout(Stdio::null());
+    if let Some(token) = auth {
+        command.env(AUTH_TOKEN_ENV, token);
+    }
     for (k, v) in extra_env {
         command.env(k, v);
     }
@@ -325,7 +551,12 @@ fn spawn_tcp(cmd: &Path, extra_env: &[(String, String)]) -> std::io::Result<Work
     // the accepted stream must be blocking regardless of what it inherited
     stream.set_nonblocking(false)?;
     let pid = child.id();
-    Ok(WorkerLink { child, transport: Box::new(TcpTransport::from_stream(stream)?), pid })
+    Ok(WorkerLink {
+        child: Some(child),
+        transport: Box::new(TcpTransport::from_stream(stream)?),
+        pid,
+        addr: None,
+    })
 }
 
 #[cfg(test)]
@@ -411,6 +642,105 @@ mod tests {
         let reply = client.join().unwrap();
         assert_eq!(reply.get("type").and_then(Json::as_str), Some("pong"));
         assert_eq!(server.kind(), TransportKind::Tcp);
+    }
+
+    fn hello_with_auth(auth: Option<&str>) -> Hello {
+        Hello {
+            version: WIRE_VERSION,
+            pid: 4242,
+            transport: None,
+            caps: Vec::new(),
+            auth: auth.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn auth_verification_matrix() {
+        // both unset and exact match pass
+        assert!(verify_worker_auth(&hello_with_auth(None), None).is_ok());
+        assert!(verify_worker_auth(&hello_with_auth(Some("s3")), Some("s3")).is_ok());
+        // every mismatch is a clean error naming the worker, never the token
+        for (worker, driver) in [
+            (Some("sesame"), Some("wrong")),
+            (None, Some("sesame")),
+            (Some("sesame"), None),
+        ] {
+            let err = verify_worker_auth(&hello_with_auth(worker), driver).unwrap_err();
+            assert!(err.contains("auth token mismatch"), "{err}");
+            assert!(err.contains("4242"), "must name the worker: {err}");
+            assert!(!err.contains("sesame") && !err.contains("wrong"), "no token leak: {err}");
+        }
+    }
+
+    #[test]
+    fn hello_parses_auth_field() {
+        let msg = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(3.0)),
+            ("pid", Json::Num(1.0)),
+            ("auth", Json::Str("sesame".into())),
+        ]);
+        assert_eq!(negotiate_hello(&msg).unwrap().auth.as_deref(), Some("sesame"));
+        assert_eq!(negotiate_hello(&hello(3.0)).unwrap().auth, None);
+    }
+
+    #[test]
+    fn handshake_payloads_round_trip() {
+        let ack = Json::parse(&hello_ack_payload(Some("tok"))).unwrap();
+        assert_eq!(ack.get("type").and_then(Json::as_str), Some("hello_ack"));
+        assert_eq!(ack.get("auth").and_then(Json::as_str), Some("tok"));
+        let bare = Json::parse(&hello_ack_payload(None)).unwrap();
+        assert!(bare.get("auth").is_none());
+        let rej = Json::parse(&reject_payload("nope")).unwrap();
+        assert_eq!(rej.get("type").and_then(Json::as_str), Some("reject"));
+        assert_eq!(rej.get("msg").and_then(Json::as_str), Some("nope"));
+        let ping = Json::parse(&ping_payload(7)).unwrap();
+        assert_eq!(ping.get("type").and_then(Json::as_str), Some("ping"));
+        assert_eq!(ping.get("nonce").and_then(Json::as_f64), Some(7.0));
+    }
+
+    #[test]
+    fn legacy_worker_cannot_satisfy_auth_requirement() {
+        // a v1/v2 worker predates the handshake: with a driver token set,
+        // finish_handshake must refuse instead of silently skipping auth
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut t = TcpTransport::from_stream(TcpStream::connect(addr).unwrap()).unwrap();
+            let legacy = Hello {
+                version: 1,
+                pid: 1,
+                transport: None,
+                caps: Vec::new(),
+                auth: None,
+            };
+            let err = finish_handshake(&mut t, &legacy, Some("tok")).unwrap_err();
+            assert!(err.to_string().contains("auth token required"), "{err}");
+            // and without a token the legacy path is a silent no-op
+            finish_handshake(&mut t, &legacy, None).unwrap();
+        });
+        let (_stream, _) = listener.accept().unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_deadline_is_enforced() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let silent = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            drop(stream);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        assert!(server.set_recv_deadline(Some(Duration::from_millis(50))).unwrap());
+        let err = server.recv_line().unwrap_err();
+        assert!(
+            matches!(err.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut),
+            "a silent peer must surface as a timeout, got {err:?}"
+        );
+        silent.join().unwrap();
     }
 
     #[test]

@@ -75,6 +75,14 @@ pub struct EngineConfig {
     /// a task re-run on a replica node after a worker death ships zero
     /// additional bytes. 1 = ship only where tasks land (Spark default).
     pub broadcast_replicas: usize,
+    /// Worker-node failures to price in the DES (what-if knob mirroring
+    /// the cluster runtime's eager re-replication): each failure costs one
+    /// repair ship per broadcast resident on the failed node, restoring
+    /// the replication factor on a surviving node — reported as
+    /// `sim_repair_ship_s` / `sim_repair_ship_bytes`. Only meaningful with
+    /// `broadcast_replicas > 1`, matching the real pool (at factor 1 the
+    /// runtime re-ships lazily, task-driven). 0 = no failures priced.
+    pub sim_worker_failures: usize,
     /// OS threads actually executing tasks (defaults to the machine's
     /// available parallelism; results never depend on this).
     pub real_threads: usize,
@@ -99,6 +107,7 @@ impl EngineConfig {
             task_overhead_us: 500,
             broadcast_mb_per_s: 400.0,
             broadcast_replicas: 1,
+            sim_worker_failures: 0,
             real_threads,
             max_task_attempts: 4,
         }
@@ -106,6 +115,11 @@ impl EngineConfig {
 
     pub fn with_broadcast_replicas(mut self, r: usize) -> Self {
         self.broadcast_replicas = r.max(1);
+        self
+    }
+
+    pub fn with_sim_worker_failures(mut self, n: usize) -> Self {
+        self.sim_worker_failures = n;
         self
     }
 

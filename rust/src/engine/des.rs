@@ -26,6 +26,13 @@
 //!   own serialized link) — pricing the cluster runtime's shard
 //!   replication. A task later scheduled on a replica node finds the
 //!   broadcast resident and ships nothing: requeue-without-reship.
+//! * With `sim_worker_failures > 0` (and `replicas > 1`, matching the
+//!   real pool's eager-repair condition), each simulated failure costs
+//!   one repair ship per broadcast resident on the failed node: the copy
+//!   is re-established on a surviving node that lacks it, on that node's
+//!   serialized link. Reported as `sim_repair_ship_s` /
+//!   `sim_repair_ship_bytes` — the DES price of the cluster runtime's
+//!   eager re-replication (`ClusterBackend::repair_ship_bytes`).
 
 use std::collections::{HashMap, HashSet};
 
@@ -142,6 +149,45 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         0.0
     };
 
+    // Eager re-replication repair pricing: each simulated failure drops a
+    // node's resident copies; every dropped copy whose id still has a
+    // node lacking it is re-shipped there on that node's link. Like the
+    // real pool, repair only runs at replication factors above 1 (factor
+    // 1 restores lazily, task-driven) — and repair traffic overlaps the
+    // next problem's compute, so it is priced, not added to the makespan.
+    let mut repair_ship_s = 0.0f64;
+    let mut repair_ship_bytes = 0u64;
+    if config.sim_worker_failures > 0 && replicas > 1 && nodes > 1 {
+        let mut bytes_of: HashMap<u64, usize> = HashMap::new();
+        for job in &jobs {
+            for &(bid, bytes) in &job.broadcast_deps {
+                bytes_of.insert(bid, bytes);
+            }
+        }
+        for failure in 0..config.sim_worker_failures {
+            let failed = failure % nodes;
+            let resident: Vec<u64> = node_has_broadcast
+                .iter()
+                .filter(|(_, n)| *n == failed)
+                .map(|(bid, _)| *bid)
+                .collect();
+            for bid in resident {
+                node_has_broadcast.remove(&(bid, failed));
+                let target = (0..nodes)
+                    .find(|m| *m != failed && !node_has_broadcast.contains(&(bid, *m)));
+                let (Some(target), Some(&bytes)) = (target, bytes_of.get(&bid)) else {
+                    continue; // every survivor already holds it (or unknown id)
+                };
+                node_has_broadcast.insert((bid, target));
+                let ship = bytes as f64 / bandwidth;
+                let link_free = node_bcast_ready.get(&target).copied().unwrap_or(0.0);
+                node_bcast_ready.insert(target, link_free.max(makespan) + ship);
+                repair_ship_s += ship;
+                repair_ship_bytes += bytes as u64;
+            }
+        }
+    }
+
     ExecutionReport {
         measured_wall_s: log.wallclock_span(),
         total_task_s: log.total_task_seconds(),
@@ -149,6 +195,8 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_utilization: utilization,
         sim_broadcast_ship_s: ship_total,
         sim_broadcast_ship_bytes: ship_bytes,
+        sim_repair_ship_s: repair_ship_s,
+        sim_repair_ship_bytes: repair_ship_bytes,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),
@@ -413,6 +461,85 @@ mod tests {
             &config(Deploy::Local { cores: 2 }).with_broadcast_replicas(8),
         );
         assert_eq!(rep.sim_broadcast_ship_bytes, 100);
+    }
+
+    #[test]
+    fn worker_failure_prices_repair_reships() {
+        // one broadcast, replicas=2 on a 3-node cluster: the first ship
+        // lands on one node, the eager replica on the next — a failure of
+        // node 0 must re-establish its copy on the remaining node, priced
+        // as repair traffic (and NOT as broadcast ship traffic).
+        let bytes = 400_000_000usize; // 1s at 400 MB/s
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 1,
+            submit_rel: 0.0,
+            finish_rel: 3.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        log.record_task(TaskRecord {
+            job_id: 1,
+            partition: 0,
+            start_rel: 0.0,
+            duration: 1.0,
+            attempts: 1,
+        });
+        let deploy = Deploy::Cluster { workers: 3, cores_per_worker: 1 };
+        let healthy = simulate(&log, &config(deploy.clone()).with_broadcast_replicas(2));
+        assert_eq!(healthy.sim_repair_ship_bytes, 0, "no failures, no repair");
+
+        let c = config(deploy.clone())
+            .with_broadcast_replicas(2)
+            .with_sim_worker_failures(1);
+        let rep = simulate(&log, &c);
+        assert_eq!(rep.sim_repair_ship_bytes, bytes as u64, "one copy repaired");
+        assert!((rep.sim_repair_ship_s - 1.0).abs() < 1e-9);
+        assert_eq!(
+            rep.sim_broadcast_ship_bytes, healthy.sim_broadcast_ship_bytes,
+            "repair traffic is priced on its own counters"
+        );
+
+        // replicas=1 matches the real pool: restoration is lazy and
+        // task-driven, so the DES prices no eager repair
+        let lazy = simulate(
+            &log,
+            &config(deploy).with_sim_worker_failures(1),
+        );
+        assert_eq!(lazy.sim_repair_ship_bytes, 0);
+        assert_eq!(lazy.sim_repair_ship_s, 0.0);
+    }
+
+    #[test]
+    fn repair_skips_fully_replicated_clusters() {
+        // 2 nodes, replicas=2: both nodes already hold the broadcast, so
+        // a failure has nowhere new to repair to — zero repair traffic
+        // (the real pool behaves the same: no idle non-holder, no ship).
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 2,
+            submit_rel: 0.0,
+            finish_rel: 2.0,
+            broadcast_deps: vec![(5, 1000)],
+        });
+        for p in 0..2 {
+            log.record_task(TaskRecord {
+                job_id: 1,
+                partition: p,
+                start_rel: 0.0,
+                duration: 1.0,
+                attempts: 1,
+            });
+        }
+        let c = config(Deploy::Cluster { workers: 2, cores_per_worker: 1 })
+            .with_broadcast_replicas(2)
+            .with_sim_worker_failures(1);
+        let rep = simulate(&log, &c);
+        assert_eq!(rep.sim_broadcast_ship_bytes, 2000, "both nodes hold a copy");
+        assert_eq!(rep.sim_repair_ship_bytes, 0, "no third node to repair onto");
     }
 
     #[test]

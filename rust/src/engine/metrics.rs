@@ -163,6 +163,13 @@ pub struct ExecutionReport {
     /// nothing); the cluster runtime's real counterpart is
     /// `ClusterBackend::broadcast_ship_bytes`.
     pub sim_broadcast_ship_bytes: u64,
+    /// Seconds spent on eager re-replication repair ships after the
+    /// simulated worker failures (`EngineConfig::sim_worker_failures`) —
+    /// the DES price of the cluster runtime's repair traffic.
+    pub sim_repair_ship_s: f64,
+    /// Bytes shipped by the simulated repair traffic; the real
+    /// counterpart is `ClusterBackend::repair_ship_bytes`.
+    pub sim_repair_ship_bytes: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -176,6 +183,8 @@ impl ExecutionReport {
             ("sim_utilization", Json::Num(self.sim_utilization)),
             ("sim_broadcast_ship_s", Json::Num(self.sim_broadcast_ship_s)),
             ("sim_broadcast_ship_bytes", Json::Num(self.sim_broadcast_ship_bytes as f64)),
+            ("sim_repair_ship_s", Json::Num(self.sim_repair_ship_s)),
+            ("sim_repair_ship_bytes", Json::Num(self.sim_repair_ship_bytes as f64)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

@@ -19,10 +19,11 @@ use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::cluster::cluster_from_cli;
-use parccm::ccm::driver::{run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
+use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
+use parccm::ccm::lifecycle::{parse_workers_at, workers_at_from_env};
 use parccm::ccm::params::{CcmParams, Scenario};
-use parccm::ccm::transport::TransportKind;
+use parccm::ccm::transport::{resolve_auth_token, TransportKind};
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
 use parccm::engine::Deploy;
@@ -89,14 +90,25 @@ fn print_help() {
            --proc-workers N     worker processes for --backend process (default 2)\n\
            --transport pipe|tcp transport to the workers (default pipe; tcp =\n\
                                 loopback sockets, same wire protocol + results)\n\
+           --workers-at H:P,... connect to pre-started `parccm worker --listen`\n\
+                                processes instead of forking (implies tcp; pool\n\
+                                width = address count; env: PARCCM_WORKERS)\n\
+           --auth-token T       shared handshake secret for driver + workers\n\
+                                (env: PARCCM_AUTH_TOKEN)\n\
+           --keepalive-secs S   ping idle workers every S seconds, discard the\n\
+                                silent ones (default: 5 for --workers-at pools,\n\
+                                off otherwise; 0 disables)\n\
            --replicas R         keep each broadcast resident on R workers so a\n\
                                 dead worker's tasks requeue with zero re-ship\n\
-                                (default 1; clamped to --proc-workers)\n\
+                                (default 1; clamped to the pool width)\n\
            --artifacts DIR      artifact directory (default: artifacts)\n\
            --table full|trunc   distance-table layout for A4/A5 (default: trunc,\n\
                                 the O(n*P) truncated broadcast; bit-identical skills)\n\
            --shards N           split the distance table into N row-range shards,\n\
                                 one broadcast + transform job per shard (default 1)\n\
+           --case A1..A5        fig4: run a single implementation level\n\
+           --dump-skills FILE   fig4: write skills as canonical JSON (two runs are\n\
+                                bit-identical iff the files are byte-identical)\n\
            --seed N             master seed\n\
            --workers N --cores N   cluster topology for the DES (default 5x4)\n"
     );
@@ -106,11 +118,25 @@ fn print_help() {
 /// are present, else native.
 fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
     let dir = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS_DIR).to_string();
-    let choice = args.get("backend").unwrap_or(if artifacts_available(&dir) {
+    let mut choice = args.get("backend").unwrap_or(if artifacts_available(&dir) {
         "xla"
     } else {
         "native"
     });
+    // an explicit --workers-at must never be silently ignored: it implies
+    // the cluster backend, and contradicting an explicit --backend is an
+    // error, not a local run with correct-looking numbers
+    if args.get("workers-at").is_some() && choice != "process" {
+        if args.get("backend").is_some() {
+            eprintln!(
+                "[parccm] FATAL: --workers-at requires --backend process \
+                 (got --backend {choice})"
+            );
+            std::process::exit(2);
+        }
+        eprintln!("[parccm] --workers-at implies --backend process");
+        choice = "process";
+    }
     match choice {
         "xla" => {
             let pool = args.get_usize("xla-pool", 1);
@@ -138,16 +164,76 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                     }
                 },
             };
+            // pre-started remote workers: --workers-at, else PARCCM_WORKERS
+            let workers_at = match args.get("workers-at") {
+                Some(list) => {
+                    let addrs = parse_workers_at(list);
+                    if addrs.is_empty() {
+                        // asking for remote mode and getting local numbers
+                        // would hide a dead cluster — refuse loudly
+                        eprintln!(
+                            "[parccm] FATAL: --workers-at '{list}' names no host:port \
+                             (expected a comma-separated list like hostA:7001,hostB:7001)"
+                        );
+                        std::process::exit(2);
+                    }
+                    addrs
+                }
+                None => workers_at_from_env().unwrap_or_default(),
+            };
+            let explicit_pipe =
+                args.get("transport").is_some() && transport == TransportKind::Pipe;
+            if !workers_at.is_empty() && explicit_pipe {
+                eprintln!("[parccm] --workers-at implies --transport tcp; ignoring 'pipe'");
+            }
+            let auth_token = resolve_auth_token(args.get("auth-token"));
+            // --keepalive-secs S (<= 0 disables); unset = automatic (on
+            // for remote pools, off for forked ones)
+            let keepalive = args.get("keepalive-secs").map(|_| {
+                let secs = args.get_f64("keepalive-secs", 0.0).max(0.0);
+                std::time::Duration::from_secs_f64(secs)
+            });
+            if keepalive.is_some_and(|d| !d.is_zero())
+                && workers_at.is_empty()
+                && transport == TransportKind::Pipe
+            {
+                eprintln!(
+                    "[parccm] --keepalive-secs has no effect on the pipe transport \
+                     (pipes cannot enforce read deadlines); use --transport tcp"
+                );
+            }
+            let remote = !workers_at.is_empty();
+            let opts = ClusterOptions {
+                transport,
+                workers,
+                replicas,
+                workers_at,
+                auth_token,
+                keepalive,
+                ..ClusterOptions::default()
+            };
             let spawned = std::env::current_exe()
-                .and_then(|exe| cluster_from_cli(exe, transport, workers, replicas));
+                .and_then(|exe| ClusterBackend::with_options(exe, opts));
             match spawned {
                 Ok(b) => {
                     eprintln!(
-                        "[parccm] backend: cluster ({workers} workers, transport {}, replicas {})",
-                        transport.name(),
+                        "[parccm] backend: cluster ({} {} workers, transport {}, replicas {})",
+                        b.num_workers(),
+                        if remote { "remote" } else { "forked" },
+                        b.transport_kind().name(),
                         b.replicas()
                     );
                     Arc::new(b)
+                }
+                Err(e) if remote => {
+                    // a silent native fallback would still produce correct
+                    // numbers, hiding a dead cluster — fail loudly instead
+                    eprintln!(
+                        "[parccm] FATAL: cannot connect the remote worker pool ({e}); \
+                         check --workers-at / PARCCM_WORKERS and that every listener \
+                         uses the same auth token"
+                    );
+                    std::process::exit(2);
                 }
                 Err(e) => {
                     eprintln!("[parccm] cluster backend unavailable ({e}); using native");
@@ -240,16 +326,29 @@ fn cmd_fig4(args: &Args) -> ExitCode {
     let backend = make_backend(args);
     let cluster = cluster_from(args);
     let local = Deploy::Local { cores: args.get_usize("local-cores", 4) };
+    // --case A4 restricts the sweep (the cluster-remote CI job runs one
+    // case against two backends and diffs the --dump-skills output)
+    let cases: Vec<Case> = match args.get("case") {
+        None => Case::ALL.to_vec(),
+        Some(name) => match Case::parse(name) {
+            Some(c) => vec![c],
+            None => {
+                eprintln!("unknown --case '{name}' (expected one of A1..A5)");
+                return ExitCode::FAILURE;
+            }
+        },
+    };
     println!(
         "Fig. 4 — comparison of parallel levels (series={}, r={}, L={:?}, E={:?}, tau={:?})",
         scenario.series_len, scenario.r, scenario.ls, scenario.es, scenario.taus
     );
     let mut table = TablePrinter::new("Fig 4: average computation time (s)");
     let (x, y) = coupled_logistic(scenario.series_len, CoupledLogisticParams::default());
-    for case in Case::ALL {
+    let mut all_skills = Vec::new();
+    for case in cases {
         // one real execution per case; Local and Yarn are DES replays of
         // the same event log (numerics are deploy-independent)
-        let (_skills, reports) = parccm::ccm::driver::run_case_multi_policy_sharded(
+        let (skills, reports) = parccm::ccm::driver::run_case_multi_policy_sharded(
             case,
             &scenario,
             &y,
@@ -259,6 +358,7 @@ fn cmd_fig4(args: &Args) -> ExitCode {
             table_policy_from(args),
             args.get_usize("shards", 1),
         );
+        all_skills.extend(skills);
         table.push(
             Row::new(format!("{} {}", case.name(), case.description()))
                 .cell("local_sim_s", reports[0].sim_makespan_s)
@@ -270,6 +370,18 @@ fn cmd_fig4(args: &Args) -> ExitCode {
     }
     table.print();
     let _ = table.save("results/fig4.json");
+    if let Some(path) = args.get("dump-skills") {
+        // canonical, full-precision dump: byte-identical across backends
+        // iff the skills are bit-identical
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Err(e) = std::fs::write(path, skills_to_json(&all_skills).to_string()) {
+            eprintln!("cannot write --dump-skills {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("(skills dumped to {path})");
+    }
     println!("\n(saved results/fig4.json; `cargo bench --bench fig4_cases` adds repeats + rEDM)");
     ExitCode::SUCCESS
 }
@@ -453,7 +565,9 @@ fn cmd_events(args: &Args) -> ExitCode {
     let (x, y) = coupled_logistic(scenario.series_len, CoupledLogisticParams::default());
     let ctx = parccm::engine::Context::new(
         parccm::engine::EngineConfig::new(cluster_from(args))
-            .with_default_parallelism(scenario.partitions),
+            .with_default_parallelism(scenario.partitions)
+            .with_broadcast_replicas(args.get_usize("replicas", 1))
+            .with_sim_worker_failures(args.get_usize("sim-failures", 0)),
     );
     let problem = parccm::ccm::pipeline::CcmProblem::new(&y, &x, 2, 1, 0.0);
     let n = problem.emb.n;
@@ -498,11 +612,12 @@ fn cmd_events(args: &Args) -> ExitCode {
     ] {
         let rep = ctx.report_for(deploy);
         println!(
-            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s",
+            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s",
             rep.topology,
             rep.sim_makespan_s,
             rep.sim_utilization * 100.0,
-            rep.sim_broadcast_ship_s
+            rep.sim_broadcast_ship_s,
+            rep.sim_repair_ship_s
         );
     }
     ExitCode::SUCCESS

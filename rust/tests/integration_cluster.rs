@@ -29,7 +29,7 @@ fn spawn(kind: TransportKind, workers: usize, replicas: usize) -> Arc<ClusterBac
     Arc::new(
         ClusterBackend::with_options(
             env!("CARGO_BIN_EXE_parccm"),
-            ClusterOptions { transport: kind, workers, replicas, worker_env: Vec::new() },
+            ClusterOptions { transport: kind, workers, replicas, ..ClusterOptions::default() },
         )
         .expect("spawning worker processes"),
     )
@@ -183,17 +183,42 @@ fn replicated_shard_requeue_ships_zero_bytes() {
     std::thread::sleep(Duration::from_millis(200));
 
     // requeue onto the surviving replica: results stay exact and NOT ONE
-    // additional broadcast byte moves
+    // additional *task-driven* broadcast byte moves — the only traffic is
+    // the eager re-replication repair that restores the replication
+    // factor on the respawned worker, counted on its own counters
     run_all(&mut arena_p, &mut arena_n);
     assert!(pb.respawns() >= 1, "the killed worker must have been replaced");
     assert_eq!(
         pb.broadcast_ship_bytes(),
         bytes_before,
-        "requeue to a surviving replica must be zero re-ship"
+        "requeue to a surviving replica must be zero task-driven re-ship"
     );
-    assert_eq!(pb.broadcast_ships(), 6, "no additional (id, worker) ships");
+    assert_eq!(pb.broadcast_ships(), 6, "no additional task-driven (id, worker) ships");
     assert_eq!(pb.rebroadcasts(), 0, "a replica survived; no re-broadcast fallback");
+    assert_eq!(
+        pb.repair_ships(),
+        3,
+        "eager re-replication must restore all 3 ids on the respawned worker"
+    );
+    assert!(pb.repair_ship_bytes() > 0, "repair traffic is counted in bytes too");
     assert_eq!(pb.num_workers(), 2, "pool back at target size");
+
+    // the repaired copies are real: kill the ORIGINAL survivor — the
+    // respawned worker now holds every broadcast, so even this second
+    // death forces no re-broadcast (the window eager repair closes)
+    let survivors = pb.worker_pids();
+    assert_eq!(survivors.len(), 2);
+    assert!(survivors.contains(&pids[1]), "original survivor must still be pooled");
+    for pid in survivors {
+        if pid != pids[1] {
+            continue;
+        }
+        kill9(pid);
+        std::thread::sleep(Duration::from_millis(200));
+        run_all(&mut arena_p, &mut arena_n);
+        assert_eq!(pb.rebroadcasts(), 0, "repair copies must serve the second death");
+        assert_eq!(pb.broadcast_ships(), 6, "still no task-driven re-ship");
+    }
 }
 
 #[test]
@@ -254,6 +279,7 @@ fn handshake_version_mismatch_fails_cleanly_naming_both_versions() {
                 workers: 1,
                 replicas: 1,
                 worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "99".to_string())],
+                ..ClusterOptions::default()
             },
         )
         .expect_err("a v99 worker must be rejected");
@@ -285,6 +311,7 @@ fn legacy_v1_worker_is_served_without_evict_traffic() {
                 workers: 1,
                 replicas: 1,
                 worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "1".to_string())],
+                ..ClusterOptions::default()
             },
         )
         .expect("a v1 worker must be accepted"),

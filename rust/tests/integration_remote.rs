@@ -1,0 +1,332 @@
+//! End-to-end tests of the `--workers-at` remote worker mode: the driver
+//! connects to pre-started `parccm worker --listen` processes (spawned by
+//! the test itself, like the `cluster-remote` CI job does with
+//! `scripts/launch_local_cluster.sh`) instead of forking children.
+//! Covered here: bit-identical results through real remote workers with a
+//! mid-run kill, the authenticated handshake failing cleanly on BOTH ends,
+//! keepalive detection of a silently-dead worker, and the actionable abort
+//! when the last remote worker is gone (no respawn possible). Every test
+//! arms a [`Watchdog`] so a hung socket fails CI fast.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_IGNORE_PING_ENV};
+use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
+use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::subsample::draw_samples;
+use parccm::ccm::transport::AUTH_TOKEN_ENV;
+use parccm::engine::Deploy;
+use parccm::native::NativeBackend;
+use parccm::util::rng::Rng;
+use parccm::util::watchdog::Watchdog;
+
+const TEST_TIMEOUT: Duration = Duration::from_secs(180);
+
+fn series(n: usize) -> (Vec<f32>, Vec<f32>) {
+    parccm::timeseries::generators::coupled_logistic(
+        n,
+        parccm::timeseries::generators::CoupledLogisticParams::default(),
+    )
+}
+
+fn kill9(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill -9 {pid}");
+}
+
+/// A pre-started listen-mode worker owned by the test; its ephemeral
+/// address is parsed from the `PARCCM_WORKER_LISTENING` stdout line
+/// (exactly what `scripts/launch_local_cluster.sh` does). Killed on drop.
+struct ListenWorker {
+    child: Option<Child>,
+    addr: String,
+}
+
+impl ListenWorker {
+    fn start(extra_env: &[(&str, &str)]) -> ListenWorker {
+        Self::start_with(extra_env, false)
+    }
+
+    /// `capture_stderr` pipes the worker's stderr for later inspection
+    /// via [`Self::wait_output`] (the auth tests assert its contents).
+    fn start_with(extra_env: &[(&str, &str)], capture_stderr: bool) -> ListenWorker {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_parccm"));
+        cmd.args(["worker", "--listen", "127.0.0.1:0"]).stdout(Stdio::piped()).stderr(
+            if capture_stderr {
+                Stdio::piped()
+            } else {
+                Stdio::null()
+            },
+        );
+        for (k, v) in extra_env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawning listen worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let ready = BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("worker stdout closed before announcing its address")
+            .expect("reading the ready line");
+        let addr = ready
+            .strip_prefix("PARCCM_WORKER_LISTENING ")
+            .unwrap_or_else(|| panic!("unexpected ready line: {ready}"))
+            .trim()
+            .to_string();
+        ListenWorker { child: Some(child), addr }
+    }
+
+    fn pid(&self) -> u32 {
+        self.child.as_ref().expect("worker still owned").id()
+    }
+
+    /// Wait for the worker to exit on its own and collect its output
+    /// (requires `start_with(_, true)` for a captured stderr).
+    fn wait_output(mut self) -> std::process::Output {
+        self.child
+            .take()
+            .expect("worker still owned")
+            .wait_with_output()
+            .expect("collecting worker output")
+    }
+}
+
+impl Drop for ListenWorker {
+    fn drop(&mut self) {
+        if let Some(child) = self.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn remote_pool(addrs: Vec<String>, replicas: usize, keepalive: Option<Duration>) -> ClusterBackend {
+    ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            replicas,
+            workers_at: addrs,
+            keepalive,
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("connecting the remote worker pool")
+}
+
+#[test]
+fn remote_sharded_a4_bit_identical_with_midrun_kill() {
+    // the acceptance scenario: a sharded A4 run through 3 pre-started
+    // remote workers with --replicas 2, one worker killed mid-run — the
+    // result must be bit-identical to the in-process reference (and hence
+    // to the pipe backend, whose parity is pinned in integration_cluster).
+    let _guard = Watchdog::arm("remote_sharded_a4", TEST_TIMEOUT);
+    let workers = [
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+    ];
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let deploy = Deploy::Local { cores: 2 };
+
+    let reference = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy.clone(),
+        Arc::new(NativeBackend),
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+
+    let remote = Arc::new(remote_pool(
+        workers.iter().map(|w| w.addr.clone()).collect(),
+        2,
+        Some(Duration::from_millis(500)),
+    ));
+    assert!(remote.is_remote());
+    assert_eq!(remote.num_workers(), 3, "pool width must equal the address list");
+    assert_eq!(remote.replicas(), 2);
+
+    let victim = workers[0].pid();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        kill9(victim);
+    });
+    let backend: Arc<dyn ComputeBackend> = remote.clone();
+    let via_remote = run_case_policy_sharded(
+        Case::A4,
+        &scenario,
+        &y,
+        &x,
+        deploy,
+        backend,
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+    killer.join().unwrap();
+
+    // bit-identical via the canonical dump (what the CI job diffs)
+    assert_eq!(
+        skills_to_json(&reference.skills).to_string(),
+        skills_to_json(&via_remote.skills).to_string(),
+        "remote sharded A4 must be bit-identical to the in-process run"
+    );
+    assert_eq!(via_remote.skills.len(), scenario.combos().len() * scenario.r);
+    assert_eq!(remote.respawns(), 0, "remote workers are never respawned");
+    assert!(remote.num_workers() >= 2, "at most the killed worker may be gone");
+    assert_eq!(remote.cached_payloads(), 0, "harvested problems are evicted");
+}
+
+#[test]
+fn wrong_auth_token_fails_cleanly_on_both_ends() {
+    let _guard = Watchdog::arm("wrong_auth_token", Duration::from_secs(60));
+    // a worker requiring the token "sesame", with stderr captured so the
+    // worker-side error can be asserted too
+    let worker = ListenWorker::start_with(&[(AUTH_TOKEN_ENV, "sesame")], true);
+
+    // driver side: a clean named error, not a hang and not a panic
+    let err = ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            workers_at: vec![worker.addr.clone()],
+            auth_token: Some("wrong".to_string()),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect_err("a mismatched token must refuse the pool");
+    let msg = err.to_string();
+    assert!(msg.contains("auth token mismatch"), "driver error must name auth: {msg}");
+    assert!(!msg.contains("sesame") && !msg.contains("wrong"), "no token leak: {msg}");
+
+    // worker side: the reject reaches it, it logs the named error and
+    // exits non-zero
+    let out = worker.wait_output();
+    assert!(!out.status.success(), "rejected worker must exit with failure");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("rejected by driver") && stderr.contains("auth token mismatch"),
+        "worker stderr must name the rejection: {stderr}"
+    );
+}
+
+#[test]
+fn tokenless_driver_is_refused_by_token_requiring_worker() {
+    let _guard = Watchdog::arm("tokenless_driver", Duration::from_secs(60));
+    let worker = ListenWorker::start(&[(AUTH_TOKEN_ENV, "sesame")]);
+    let err = ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions { workers_at: vec![worker.addr.clone()], ..ClusterOptions::default() },
+    )
+    .expect_err("a tokenless driver must be refused");
+    let msg = err.to_string();
+    assert!(msg.contains("auth token mismatch"), "{msg}");
+    assert!(msg.contains("driver has none"), "must say which side lacks the token: {msg}");
+}
+
+#[test]
+fn matching_auth_token_serves_tasks_bit_identically() {
+    let _guard = Watchdog::arm("matching_auth_token", TEST_TIMEOUT);
+    let worker = ListenWorker::start(&[(AUTH_TOKEN_ENV, "sesame")]);
+    let pb = ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            workers_at: vec![worker.addr.clone()],
+            auth_token: Some("sesame".to_string()),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("matching tokens must connect");
+    let (x, y) = series(300);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(21), CcmParams::new(2, 1, 90), problem.emb.n, 2);
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = pb.cross_map_into(&input, &mut arena_p);
+        let want = NativeBackend.cross_map_into(&input, &mut arena_n);
+        assert_eq!(rho.to_bits(), want.to_bits(), "authed remote must match native bitwise");
+        assert_eq!(arena_p.preds, arena_n.preds);
+    }
+}
+
+#[test]
+fn keepalive_timeout_discards_silently_dead_worker() {
+    // a worker that keeps its socket open but never answers pings must be
+    // marked dead within the keepalive deadline — not on the next task —
+    // and the pool must keep serving bit-identical results without it.
+    let _guard = Watchdog::arm("keepalive_timeout", TEST_TIMEOUT);
+    let good = ListenWorker::start(&[]);
+    let deaf = ListenWorker::start(&[(TEST_IGNORE_PING_ENV, "1")]);
+    let pb = remote_pool(
+        vec![good.addr.clone(), deaf.addr.clone()],
+        1,
+        Some(Duration::from_millis(200)),
+    );
+    assert_eq!(pb.num_workers(), 2);
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pb.keepalive_deaths() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(pb.keepalive_deaths(), 1, "the silent worker must be declared dead");
+    assert_eq!(pb.remote_lost(), 1);
+    assert_eq!(pb.num_workers(), 1, "only the responsive worker remains");
+
+    // tasks requeue onto the survivor and stay exact
+    let (x, y) = series(250);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(5), CcmParams::new(2, 1, 70), problem.emb.n, 2);
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = pb.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho.to_bits(), NativeBackend.cross_map_into(&input, &mut arena_n).to_bits());
+    }
+    assert_eq!(pb.keepalive_deaths(), 1, "the good worker must keep answering pings");
+}
+
+#[test]
+fn last_remote_worker_death_aborts_with_actionable_message() {
+    // --workers-at with one worker and --replicas 1: when it dies there is
+    // nothing to requeue onto and nothing to respawn — the run must abort
+    // with a message telling the operator what to do, not hang or loop.
+    let _guard = Watchdog::arm("remote_pool_exhaustion", Duration::from_secs(60));
+    let worker = ListenWorker::start(&[]);
+    let pb = remote_pool(vec![worker.addr.clone()], 1, Some(Duration::ZERO));
+    let (x, y) = series(250);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(9), CcmParams::new(2, 1, 70), problem.emb.n, 1);
+    let input = problem.input_for(&samples[0]);
+    let mut arena = TaskArena::new();
+    let healthy = pb.cross_map_into(&input, &mut arena);
+    assert!(healthy.is_finite());
+
+    kill9(worker.pid());
+    std::thread::sleep(Duration::from_millis(200));
+
+    let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pb.cross_map_into(&input, &mut arena)
+    }))
+    .expect_err("a dead remote pool must abort the task");
+    let msg = panicked
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panicked.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("cannot be respawned"), "actionable message, got: {msg}");
+    assert!(msg.contains("--replicas"), "must point at the mitigation: {msg}");
+    assert_eq!(pb.remote_lost(), 1);
+    assert_eq!(pb.num_workers(), 0);
+}

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff fresh BENCH_*.json files against committed
+baselines and fail on gross wall-clock regressions.
+
+Usage:
+    scripts/bench_gate.py [--results DIR] [--baselines DIR]
+                          [--tolerance X] [--floor-s S]
+
+Every bench target emits a ``BENCH_<name>.json`` of the shape
+``{"title": ..., "rows": [{"label": ..., "<cell>": <num>, ...}, ...]}``
+(see rust/src/bench/report.rs). The gate compares each *time-like* cell
+(name ending in ``_s``) row-by-row against the baseline file of the same
+name under --baselines:
+
+* new > tolerance * old  AND  new - old > floor  ->  REGRESSION (exit 1)
+* baseline file / row / cell missing              ->  warning (seed mode)
+
+The tolerance is deliberately generous (default 2x) and the absolute
+floor (default 0.05 s) ignores noise on micro timings: this gate exists
+to catch "the task path got 3x slower", not 10% jitter on shared CI
+runners. Byte/count cells (ship_bytes, ships, ...) are ignored — they are
+asserted exactly by the test suite where they matter.
+
+Seeding: run the bench job (or ``cd rust && cargo bench --benches --
+--tiny``), then copy the produced BENCH_*.json into bench-baselines/ and
+commit (see bench-baselines/README.md).
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(path):
+    """-> {label: {cell: value}} for one bench report file."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("rows", []):
+        label = row.get("label", "?")
+        rows[label] = {k: v for k, v in row.items()
+                       if k != "label" and isinstance(v, (int, float))}
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=".",
+                    help="directory holding fresh BENCH_*.json (default .)")
+    ap.add_argument("--baselines", default="bench-baselines",
+                    help="directory holding committed baselines")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="fail when new > tolerance * baseline (default 2.0)")
+    ap.add_argument("--floor-s", type=float, default=0.05,
+                    help="ignore regressions smaller than this many seconds")
+    args = ap.parse_args()
+
+    fresh = sorted(glob.glob(os.path.join(args.results, "BENCH_*.json")))
+    if not fresh:
+        print(f"error: no BENCH_*.json under {args.results} — did the benches run?")
+        return 1
+
+    regressions = []
+    unseeded = []
+    checked = 0
+    for path in fresh:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baselines, name)
+        if not os.path.exists(base_path):
+            unseeded.append(name)
+            continue
+        new_rows = load_rows(path)
+        old_rows = load_rows(base_path)
+        for label, cells in sorted(new_rows.items()):
+            old_cells = old_rows.get(label)
+            if old_cells is None:
+                print(f"note: {name} row '{label}' has no baseline (new row?)")
+                continue
+            for cell, new in sorted(cells.items()):
+                if not cell.endswith("_s"):
+                    continue  # only wall-clock-like cells gate
+                old = old_cells.get(cell)
+                if old is None:
+                    print(f"note: {name} '{label}'.{cell} has no baseline")
+                    continue
+                checked += 1
+                if new > args.tolerance * old and new - old > args.floor_s:
+                    regressions.append(
+                        f"{name} '{label}'.{cell}: {old:.4f}s -> {new:.4f}s "
+                        f"({new / old:.2f}x, tolerance {args.tolerance:.1f}x)")
+                else:
+                    print(f"ok: {name} '{label}'.{cell}: "
+                          f"{old:.4f}s -> {new:.4f}s ({new / max(old, 1e-12):.2f}x)")
+
+    for name in unseeded:
+        # loud but not fatal: the first green run on a fresh machine seeds
+        # the baselines (bench-baselines/README.md)
+        print(f"::warning::bench gate: no baseline for {name} — "
+              f"seed it from this run's artifacts")
+
+    if regressions:
+        print(f"\nbench gate: {len(regressions)} wall-clock regression(s):")
+        for r in regressions:
+            print(f"::error::{r}")
+        return 1
+    print(f"\nbench gate: {checked} timing cell(s) within {args.tolerance:.1f}x "
+          f"of baseline ({len(unseeded)} file(s) unseeded)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

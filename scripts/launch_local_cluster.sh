@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Launch K listen-mode parccm workers on ephemeral loopback ports and
+# print a ready-to-paste --workers-at string.
+#
+# Usage:
+#   scripts/launch_local_cluster.sh [K] [PARCCM_BINARY]
+#
+#   K              number of workers (default 3)
+#   PARCCM_BINARY  path to the parccm binary
+#                  (default rust/target/release/parccm)
+#
+# Honors PARCCM_AUTH_TOKEN: when set, every worker requires it and the
+# driver must pass the same token (--auth-token or the same env var).
+#
+# Output (eval-able shell):
+#   PARCCM_WORKERS=127.0.0.1:34567,127.0.0.1:34568,...
+#   WORKER_PIDS="1234 1235 ..."
+#
+# Typical use:
+#   eval "$(scripts/launch_local_cluster.sh 3)"
+#   rust/target/release/parccm fig4 --backend process \
+#       --workers-at "$PARCCM_WORKERS" --replicas 2
+#   kill $WORKER_PIDS
+set -euo pipefail
+
+K="${1:-3}"
+BIN="${2:-rust/target/release/parccm}"
+
+if [ ! -x "$BIN" ]; then
+    echo "error: parccm binary not found at '$BIN' (build with: cd rust && cargo build --release)" >&2
+    exit 1
+fi
+
+LOG_DIR="$(mktemp -d "${TMPDIR:-/tmp}/parccm-cluster.XXXXXX")"
+ADDRS=()
+PIDS=()
+
+for i in $(seq 1 "$K"); do
+    out="$LOG_DIR/worker$i.out"
+    err="$LOG_DIR/worker$i.err"
+    "$BIN" worker --listen 127.0.0.1:0 >"$out" 2>"$err" &
+    pid=$!
+    # the worker announces its bound address on stdout before accepting
+    addr=""
+    for _ in $(seq 1 100); do
+        addr="$(sed -n 's/^PARCCM_WORKER_LISTENING //p' "$out" | head -n1)"
+        [ -n "$addr" ] && break
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "error: worker $i exited before listening; stderr:" >&2
+            cat "$err" >&2
+            exit 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "error: worker $i never announced its address (see $out)" >&2
+        exit 1
+    fi
+    ADDRS+=("$addr")
+    PIDS+=("$pid")
+    echo "# worker $i: pid $pid at $addr (logs: $err)" >&2
+done
+
+joined="$(IFS=,; echo "${ADDRS[*]}")"
+echo "PARCCM_WORKERS=$joined"
+echo "WORKER_PIDS=\"${PIDS[*]}\""
