@@ -237,6 +237,16 @@ pub trait ComputeBackend: Send + Sync {
     /// [`crate::ccm::table::TableShard::wire_id`].
     fn evict_broadcasts(&self, _ids: &[u64]) {}
 
+    /// Observability counters for run-metadata dumps, as (name, value)
+    /// pairs. In-process backends expose none (the default); the cluster
+    /// runtime reports its pool counters (ships, repairs, rejoins, ...)
+    /// so CLI runs can write a machine-readable sidecar next to
+    /// `--dump-skills` — the skills file itself must stay byte-comparable
+    /// across backends, so counters never go in it.
+    fn run_counters(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
+
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;
 

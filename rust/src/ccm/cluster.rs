@@ -102,21 +102,33 @@
 //! the task panics, which the engine's own task-retry surfaces as a job
 //! failure; a pool whose last worker died and cannot regrow panics with an
 //! actionable message instead of hanging.
+//!
+//! With `--rejoin-backoff-secs` set, a remote death is no longer final:
+//! the dead address stays on a [`RejoinPolicy`] exponential-backoff
+//! redial schedule, and a restarted `parccm worker --listen` on the same
+//! host:port is re-admitted by the maintenance thread after a fresh v3
+//! auth handshake — with a new worker id and an *empty* broadcast store,
+//! so payloads re-ship on demand from the driver cache (counted as
+//! `rejoin_ships` / `rejoin_ship_bytes`, distinct from the death-driven
+//! `repair_ships`). An auth mismatch during a rejoin handshake retires
+//! the address permanently (named error on both ends, no hot redial
+//! loop).
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
-use crate::ccm::lifecycle::WorkerSource;
+use crate::ccm::lifecycle::{RejoinPolicy, WorkerSource};
 use crate::ccm::table::TableShard;
 use crate::ccm::transport::{
-    ping_payload, recv_json, resolve_auth_token, Transport, TransportKind, WorkerLink,
-    EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, WIRE_VERSION,
+    bind_reuseaddr, connect_remote_deadline, ping_payload, recv_json, resolve_auth_token,
+    Transport, TransportKind, WorkerLink, EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION,
+    REJOIN_CONNECT_TIMEOUT, WIRE_VERSION,
 };
 use crate::native::NativeBackend;
 use crate::util::cli::Args;
@@ -481,7 +493,11 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
         };
         serve_tcp(stream, token)
     } else if let Some(addr) = args.get("listen") {
-        let listener = match TcpListener::bind(addr) {
+        // SO_REUSEADDR bind: a RESTARTED worker must be able to re-listen
+        // on the port its predecessor just died on (the rejoin path is
+        // "same address, new process"), even while the dead connection
+        // lingers in TIME_WAIT
+        let listener = match bind_reuseaddr(addr) {
             Ok(l) => l,
             Err(e) => {
                 eprintln!("[worker] cannot listen on {addr}: {e}");
@@ -498,6 +514,10 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
         eprintln!("[worker {}] listening on {bound}", std::process::id());
         match listener.accept() {
             Ok((stream, peer)) => {
+                // close the listener: later dials get a clean refusal
+                // instead of queueing in a backlog nothing will accept
+                // (a rejoin redial probing a busy worker must fail fast)
+                drop(listener);
                 eprintln!("[worker {}] driver connected from {peer}", std::process::id());
                 serve_tcp(stream, token)
             }
@@ -560,6 +580,12 @@ pub struct ClusterOptions {
     /// pools, whose death is visible as EOF); `Some(Duration::ZERO)` =
     /// explicitly off.
     pub keepalive: Option<Duration>,
+    /// Base delay of the [`RejoinPolicy`] redial schedule for dead
+    /// remote workers (`--rejoin-backoff-secs`). `None` or zero = off —
+    /// a dead remote is gone for the life of the pool (the pre-rejoin
+    /// behavior). Only meaningful for remote sources; forked workers are
+    /// respawned instead.
+    pub rejoin_backoff: Option<Duration>,
 }
 
 impl Default for ClusterOptions {
@@ -572,6 +598,7 @@ impl Default for ClusterOptions {
             workers_at: Vec::new(),
             auth_token: None,
             keepalive: None,
+            rejoin_backoff: None,
         }
     }
 }
@@ -579,6 +606,12 @@ impl Default for ClusterOptions {
 struct Worker {
     /// Stable identity for holder bookkeeping (pids can recycle).
     serial: u64,
+    /// Pool slot (for remote sources, the index into the address list —
+    /// what the rejoin redialer needs to know *which* address died).
+    slot: usize,
+    /// Admitted by a rejoin redial: its on-demand broadcast re-ships are
+    /// counted as `rejoin_ships` (the price of the rejoin).
+    rejoined: bool,
     link: WorkerLink,
     /// Wire version negotiated at handshake (v1 workers get no `evict`).
     wire_v: u64,
@@ -620,6 +653,23 @@ struct PoolState {
     repair_ship_bytes: u64,
     /// `evict` messages delivered to workers.
     evictions: u64,
+    /// Remote workers re-admitted by the rejoin redialer.
+    rejoins: u64,
+    /// Rejoin redial attempts (successes, failures, and rejections).
+    rejoin_attempts: u64,
+    /// Addresses permanently retired after an auth-rejected rejoin.
+    rejoin_rejected: u64,
+    /// Task-driven broadcast ships whose target was a worker admitted by
+    /// rejoin (also included in `ships`; replica/repair copies are
+    /// counted on their own counters, never here). A rejoined worker
+    /// starts empty, so its early ships are the rejoin's lazy
+    /// re-population; the flag is permanent, so later first-ships of
+    /// brand-new content to it also land here — an *upper bound* on the
+    /// rejoin's re-ship cost, distinct from the death-driven
+    /// `repair_ships`.
+    rejoin_ships: u64,
+    /// Bytes written by task-driven ships to rejoined workers.
+    rejoin_ship_bytes: u64,
 }
 
 /// Why a worker was declared dead (for counters and log lines).
@@ -695,6 +745,10 @@ struct ClusterCore {
     /// Refcounted serialized broadcast payloads by id, for (re-)shipping
     /// to any worker; entries are dropped by eviction.
     payloads: Mutex<HashMap<u64, PayloadEntry>>,
+    /// Redial schedule for dead remote addresses (disabled at base 0).
+    /// Lock order: `state` may be held while taking this, never the
+    /// reverse.
+    rejoin: Mutex<RejoinPolicy>,
     next_task: AtomicU64,
     next_serial: AtomicU64,
     local: NativeBackend,
@@ -711,8 +765,8 @@ struct ClusterCore {
 /// steps and run locally on the native backend.
 pub struct ClusterBackend {
     core: Arc<ClusterCore>,
-    keepalive_stop: Arc<AtomicBool>,
-    keepalive_thread: Option<std::thread::JoinHandle<()>>,
+    maint_stop: Arc<AtomicBool>,
+    maint_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ClusterCore {
@@ -726,6 +780,10 @@ impl ClusterCore {
         self.payloads.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    fn lock_rejoin(&self) -> MutexGuard<'_, RejoinPolicy> {
+        self.rejoin.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     fn spawn(&self, slot: usize) -> std::io::Result<Worker> {
         let (link, hello) = self.source.connect(
             slot,
@@ -735,6 +793,8 @@ impl ClusterCore {
         )?;
         Ok(Worker {
             serial: self.next_serial.fetch_add(1, Ordering::Relaxed),
+            slot,
+            rejoined: false,
             link,
             wire_v: hello.version,
             has: HashSet::new(),
@@ -842,12 +902,31 @@ impl ClusterCore {
             }
             if st.live == 0 {
                 if self.source.is_remote() {
+                    // with rejoin armed and at least one dead address
+                    // still on the redial schedule, the pool can regrow:
+                    // wait for the maintenance thread instead of aborting
+                    // (re-checked each timeout — every address could yet
+                    // be retired by an auth rejection)
+                    let rejoinable = {
+                        let rj = self.lock_rejoin();
+                        rj.enabled() && rj.pending() > 0
+                    };
+                    if rejoinable {
+                        let (guard, _) = self
+                            .cv
+                            .wait_timeout(st, Duration::from_millis(50))
+                            .unwrap_or_else(PoisonError::into_inner);
+                        st = guard;
+                        continue;
+                    }
                     panic!(
                         "cluster backend has no live workers left: all {} remote workers \
                          from --workers-at are gone and remote workers cannot be \
                          respawned. Restart the listeners (see \
                          scripts/launch_local_cluster.sh) and re-run; --replicas 2 or \
-                         more lets a run survive losing some of them",
+                         more lets a run survive losing some of them, and \
+                         --rejoin-backoff-secs N lets restarted listeners rejoin a \
+                         live run",
                         self.opts.workers
                     );
                 }
@@ -908,6 +987,7 @@ impl ClusterCore {
         }
         let replacement = if self.source.can_respawn() { Some(self.spawn(0)) } else { None };
         let held: Vec<u64> = dead.has.iter().copied().collect();
+        let mut remote_death = false;
         let mut repair: Vec<(u64, Arc<String>)> = Vec::new();
         {
             let mut st = self.lock_state();
@@ -932,6 +1012,7 @@ impl ClusterCore {
                 }
                 None => {
                     st.remote_lost += 1;
+                    remote_death = true;
                     let who = dead.link.addr.as_deref().unwrap_or("<unknown addr>");
                     eprintln!(
                         "[cluster backend] remote worker {who} (pid {}) is gone ({why}); \
@@ -956,9 +1037,106 @@ impl ClusterCore {
                 }
             }
         }
+        // put the dead address on the redial schedule: a restarted
+        // listener on the same host:port can rejoin the pool
+        if remote_death {
+            let mut rj = self.lock_rejoin();
+            if rj.enabled() && !rj.is_rejected(dead.slot) {
+                rj.note_death(dead.slot, Instant::now());
+                eprintln!(
+                    "[cluster backend] will redial {} on an exponential backoff \
+                     (--rejoin-backoff-secs); restart the listener there to rejoin",
+                    dead.link.addr.as_deref().unwrap_or("<unknown addr>")
+                );
+            }
+        }
         self.cv.notify_all();
         for (id, payload) in repair {
             self.repair_ship(id, &payload);
+        }
+    }
+
+    /// Redial every dead remote address whose backoff has elapsed,
+    /// re-running the full v3 authenticated handshake on the
+    /// [`connect_remote_deadline`] path (short deadline: a half-open peer
+    /// stalls only its own probe). Success re-admits the worker with a
+    /// fresh serial, an empty broadcast store, and the `rejoined` mark;
+    /// a connection failure re-arms the exponential backoff; an auth
+    /// rejection retires the address permanently — the named error is
+    /// logged here and the worker end received a wire `reject`.
+    fn attempt_due_rejoins(&self) {
+        let due: Vec<usize> = {
+            let rj = self.lock_rejoin();
+            if !rj.enabled() {
+                return;
+            }
+            rj.due_slots(Instant::now())
+        };
+        for slot in due {
+            let Some(addr) = self.source.remote_addr(slot).map(str::to_string) else {
+                continue;
+            };
+            {
+                self.lock_state().rejoin_attempts += 1;
+            }
+            let auth = self.opts.auth_token.as_deref();
+            match connect_remote_deadline(&addr, auth, REJOIN_CONNECT_TIMEOUT) {
+                Ok((link, hello)) => {
+                    let worker = Worker {
+                        serial: self.next_serial.fetch_add(1, Ordering::Relaxed),
+                        slot,
+                        rejoined: true,
+                        link,
+                        wire_v: hello.version,
+                        has: HashSet::new(),
+                        tasks_done: 0,
+                    };
+                    // clear the schedule BEFORE publishing the worker: once
+                    // it is leasable, it can die again, and that death's
+                    // note_death must not be erased by a late note_success
+                    self.lock_rejoin().note_success(slot);
+                    {
+                        let mut st = self.lock_state();
+                        st.live += 1;
+                        st.rejoins += 1;
+                        st.idle.push(worker);
+                    }
+                    self.cv.notify_all();
+                    eprintln!(
+                        "[cluster backend] remote worker {addr} rejoined the pool (fresh \
+                         worker id, empty broadcast store; payloads re-ship on demand)"
+                    );
+                }
+                // permanent retirement is reserved for the HANDSHAKE's
+                // auth verdict (finish_handshake: PermissionDenied + a
+                // message naming the token) — a connect-phase EACCES
+                // (firewall hiccup, ICMP admin-prohibited) also surfaces
+                // as PermissionDenied and must back off instead
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::PermissionDenied
+                        && e.to_string().contains("auth token") =>
+                {
+                    self.lock_rejoin().note_rejected(slot);
+                    {
+                        self.lock_state().rejoin_rejected += 1;
+                    }
+                    // an acquire() waiting on an empty pool must re-check:
+                    // this address will never come back
+                    self.cv.notify_all();
+                    eprintln!(
+                        "[cluster backend] rejoin of {addr} permanently rejected ({e}); \
+                         the address will not be redialed — fix its auth token and \
+                         restart the driver"
+                    );
+                }
+                Err(e) => {
+                    self.lock_rejoin().note_failure(slot, Instant::now());
+                    eprintln!(
+                        "[cluster backend] rejoin redial of {addr} failed ({e}); \
+                         backing off"
+                    );
+                }
+            }
         }
     }
 
@@ -1085,6 +1263,13 @@ impl ClusterCore {
         worker.has.insert(id);
         let first_ever = {
             let mut st = self.lock_state();
+            if worker.rejoined {
+                // lazy re-population of a rejoined worker's empty store —
+                // the on-demand price of a rejoin, distinct from the
+                // death-driven repair_ships
+                st.rejoin_ships += 1;
+                st.rejoin_ship_bytes += payload.len() as u64 + 1;
+            }
             record_ship(&mut st, id, worker.serial, payload.len())
         };
         if first_ever && self.opts.replicas > 1 {
@@ -1186,20 +1371,38 @@ impl Drop for ClusterCore {
     }
 }
 
-/// The background prober: periodically pings every idle
+/// The background maintenance thread: keepalive probing and rejoin
+/// redialing on one loop.
+///
+/// Keepalive (when `keepalive` is set): periodically pings every idle
 /// keepalive-capable worker and discards any that stays silent past the
 /// deadline — a silently-dead remote (network partition, frozen host) is
 /// detected within ~2 intervals instead of on the next task.
-fn keepalive_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, interval: Duration) {
-    let tick = Duration::from_millis(25).min(interval);
+///
+/// Rejoin (when the core's [`RejoinPolicy`] is enabled): dead remote
+/// addresses whose backoff has elapsed are redialed every tick; a
+/// restarted listener is re-admitted to the pool. The two concerns share
+/// the thread because both are periodic pool upkeep — a redial may delay
+/// a probe round by up to its (short) connect deadline, never block it.
+fn maintenance_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, keepalive: Option<Duration>) {
+    let mut tick = Duration::from_millis(25);
+    if let Some(iv) = keepalive {
+        tick = tick.min(iv);
+    }
+    let mut next_probe = keepalive.map(|iv| Instant::now() + iv);
     let mut nonce: u64 = 0;
-    'rounds: loop {
-        let next = std::time::Instant::now() + interval;
-        while std::time::Instant::now() < next {
-            if stop.load(Ordering::Relaxed) {
-                break 'rounds;
-            }
-            std::thread::sleep(tick);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        std::thread::sleep(tick);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        core.attempt_due_rejoins();
+        let Some(interval) = keepalive else { continue };
+        if next_probe.is_some_and(|t| Instant::now() < t) {
+            continue;
         }
         // probe idle capable workers ONE at a time (pull, ping, release
         // before pulling the next): a silently-dead worker stalls only
@@ -1230,9 +1433,10 @@ fn keepalive_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, interval: Durat
                 }
             }
             if stop.load(Ordering::Relaxed) {
-                break 'rounds;
+                return;
             }
         }
+        next_probe = Some(Instant::now() + interval);
     }
 }
 
@@ -1285,12 +1489,19 @@ impl ClusterBackend {
             None if source.is_remote() => Some(DEFAULT_REMOTE_KEEPALIVE),
             None => None,
         };
+        // rejoin redialing only exists for remote sources (forked workers
+        // are respawned in place); zero/unset = off
+        let rejoin_base = match opts.rejoin_backoff {
+            Some(d) if !d.is_zero() && source.is_remote() => Some(d),
+            _ => None,
+        };
         let core = Arc::new(ClusterCore {
             source,
             opts,
             state: Mutex::new(PoolState::default()),
             cv: Condvar::new(),
             payloads: Mutex::new(HashMap::new()),
+            rejoin: Mutex::new(RejoinPolicy::new(rejoin_base.unwrap_or(Duration::ZERO))),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,
@@ -1304,13 +1515,13 @@ impl ClusterBackend {
             st.live = idle.len();
             st.idle = idle;
         }
-        let keepalive_stop = Arc::new(AtomicBool::new(false));
-        let keepalive_thread = keepalive.map(|interval| {
+        let maint_stop = Arc::new(AtomicBool::new(false));
+        let maint_thread = (keepalive.is_some() || rejoin_base.is_some()).then(|| {
             let core = Arc::clone(&core);
-            let stop = Arc::clone(&keepalive_stop);
-            std::thread::spawn(move || keepalive_loop(core, stop, interval))
+            let stop = Arc::clone(&maint_stop);
+            std::thread::spawn(move || maintenance_loop(core, stop, keepalive))
         });
-        Ok(ClusterBackend { core, keepalive_stop, keepalive_thread })
+        Ok(ClusterBackend { core, maint_stop, maint_thread })
     }
 
     /// Transport the pool runs on.
@@ -1353,6 +1564,38 @@ impl ClusterBackend {
     /// Workers declared dead by the keepalive prober.
     pub fn keepalive_deaths(&self) -> u64 {
         self.core.lock_state().keepalive_deaths
+    }
+
+    /// Remote workers re-admitted by the rejoin redialer
+    /// (`--rejoin-backoff-secs`).
+    pub fn rejoins(&self) -> u64 {
+        self.core.lock_state().rejoins
+    }
+
+    /// Rejoin redial attempts made (successes, failures, rejections).
+    pub fn rejoin_attempts(&self) -> u64 {
+        self.core.lock_state().rejoin_attempts
+    }
+
+    /// Addresses permanently retired after an auth-rejected rejoin
+    /// handshake (never redialed again).
+    pub fn rejoin_rejected(&self) -> u64 {
+        self.core.lock_state().rejoin_rejected
+    }
+
+    /// Task-driven broadcast ships to workers admitted by rejoin — the
+    /// lazy re-population of their empty stores, distinct from the
+    /// death-driven [`ClusterBackend::repair_ships`]. The rejoined mark
+    /// is permanent, so over a long grid this is an upper bound on the
+    /// rejoin's re-ship cost (later first-ships of new content to the
+    /// same worker count too).
+    pub fn rejoin_ships(&self) -> u64 {
+        self.core.lock_state().rejoin_ships
+    }
+
+    /// Bytes written by task-driven ships to rejoined workers.
+    pub fn rejoin_ship_bytes(&self) -> u64 {
+        self.core.lock_state().rejoin_ship_bytes
     }
 
     /// (id, worker) broadcast ships performed, including replica copies.
@@ -1410,10 +1653,10 @@ impl ClusterBackend {
 
 impl Drop for ClusterBackend {
     fn drop(&mut self) {
-        // stop the prober before the core tears the pool down, so no ping
-        // races the shutdown messages
-        self.keepalive_stop.store(true, Ordering::Relaxed);
-        if let Some(handle) = self.keepalive_thread.take() {
+        // stop the maintenance thread before the core tears the pool
+        // down, so no ping or rejoin redial races the shutdown messages
+        self.maint_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.maint_thread.take() {
             let _ = handle.join();
         }
     }
@@ -1503,6 +1746,27 @@ impl ComputeBackend for ClusterBackend {
 
     fn evict_broadcasts(&self, ids: &[u64]) {
         self.core.evict_broadcast_ids(ids);
+    }
+
+    fn run_counters(&self) -> Vec<(&'static str, u64)> {
+        let st = self.core.lock_state();
+        vec![
+            ("live_workers", st.live as u64),
+            ("respawns", st.respawns),
+            ("remote_lost", st.remote_lost),
+            ("keepalive_deaths", st.keepalive_deaths),
+            ("broadcast_ships", st.ships),
+            ("broadcast_ship_bytes", st.ship_bytes),
+            ("rebroadcasts", st.rebroadcasts),
+            ("repair_ships", st.repair_ships),
+            ("repair_ship_bytes", st.repair_ship_bytes),
+            ("evictions", st.evictions),
+            ("rejoins", st.rejoins),
+            ("rejoin_attempts", st.rejoin_attempts),
+            ("rejoin_rejected", st.rejoin_rejected),
+            ("rejoin_ships", st.rejoin_ships),
+            ("rejoin_ship_bytes", st.rejoin_ship_bytes),
+        ]
     }
 
     fn name(&self) -> &'static str {

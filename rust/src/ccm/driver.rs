@@ -295,6 +295,8 @@ fn run_a1(
             sim_broadcast_ship_bytes: 0,
             sim_repair_ship_s: 0.0,
             sim_repair_ship_bytes: 0,
+            sim_rejoin_ship_s: 0.0,
+            sim_rejoin_ship_bytes: 0,
             topology: "single-thread".to_string(),
         },
     }

@@ -20,8 +20,19 @@
 //! (make me worker `slot`) and [`WorkerSource::can_respawn`] (is death
 //! repairable?) — everything else about scheduling, replication, and
 //! requeueing is source-agnostic.
+//!
+//! A remote death is no longer necessarily final: [`RejoinPolicy`] keeps
+//! every dead address on a clock-injected exponential-backoff redial
+//! schedule (`--rejoin-backoff-secs`), so a restarted
+//! `parccm worker --listen` on the same host:port can re-register with a
+//! live driver. The policy is a pure state machine — every method takes
+//! `now` explicitly, so the cadence is unit-testable without sockets or
+//! real sleeps; the actual redialing lives in the cluster runtime's
+//! maintenance thread.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use crate::ccm::transport::{connect_remote, connect_worker, Hello, TransportKind, WorkerLink};
 
@@ -64,6 +75,15 @@ impl WorkerSource {
     /// Whether this source reaches pre-started remote workers.
     pub fn is_remote(&self) -> bool {
         matches!(self, WorkerSource::Remote { .. })
+    }
+
+    /// Address of remote pool slot `slot` (`None` for fork sources or
+    /// out-of-range slots) — what the rejoin redialer dials.
+    pub fn remote_addr(&self, slot: usize) -> Option<&str> {
+        match self {
+            WorkerSource::Remote { addrs } => addrs.get(slot).map(String::as_str),
+            WorkerSource::Fork { .. } => None,
+        }
     }
 
     /// Establish the connection for pool slot `slot` (respawns pass the
@@ -120,6 +140,133 @@ pub fn workers_at_from_env() -> Option<Vec<String>> {
     }
 }
 
+/// Ceiling on the rejoin redial delay: however many redials have failed,
+/// a dead address is retried at least this often.
+pub const DEFAULT_REJOIN_CAP: Duration = Duration::from_secs(60);
+
+/// Redial state of one dead remote pool slot.
+#[derive(Clone, Debug)]
+enum RejoinSlot {
+    /// Scheduled for a redial at `due`; `attempt` redials have failed
+    /// since the death.
+    Waiting { due: Instant, attempt: u32 },
+    /// The rejoin handshake was auth-rejected: the address is retired
+    /// for the life of the pool (no hot redial loop against a
+    /// misconfigured worker).
+    Rejected,
+}
+
+/// Exponential-backoff redial schedule for dead remote workers — the
+/// pure half of reconnect/rejoin.
+///
+/// A death schedules the slot's first redial one `base` after `now`;
+/// each failed redial doubles the delay up to `cap`; a success clears
+/// the slot entirely (the *next* death starts over at `base`); an auth
+/// rejection retires the slot permanently. A zero `base` disables the
+/// policy (`--rejoin-backoff-secs 0`).
+///
+/// Every method takes `now: Instant` — the clock is injected, so the
+/// whole cadence is unit-tested with synthetic instants and no sleeps.
+/// Thread-safety and the actual dialing are the caller's problem (the
+/// cluster runtime wraps this in a mutex and redials from its
+/// maintenance thread).
+#[derive(Clone, Debug)]
+pub struct RejoinPolicy {
+    base: Duration,
+    cap: Duration,
+    slots: HashMap<usize, RejoinSlot>,
+}
+
+impl RejoinPolicy {
+    /// Policy with the default delay ceiling ([`DEFAULT_REJOIN_CAP`]).
+    /// `base` zero = disabled.
+    pub fn new(base: Duration) -> RejoinPolicy {
+        Self::with_cap(base, DEFAULT_REJOIN_CAP)
+    }
+
+    /// Policy with an explicit delay ceiling (clamped to at least
+    /// `base`).
+    pub fn with_cap(base: Duration, cap: Duration) -> RejoinPolicy {
+        RejoinPolicy { base, cap: cap.max(base), slots: HashMap::new() }
+    }
+
+    /// Whether rejoin is on at all (`base > 0`).
+    pub fn enabled(&self) -> bool {
+        !self.base.is_zero()
+    }
+
+    /// A remote worker at `slot` died: schedule its first redial one
+    /// `base` from `now`. No-op when disabled or the slot was retired by
+    /// an auth rejection.
+    pub fn note_death(&mut self, slot: usize, now: Instant) {
+        if !self.enabled() || matches!(self.slots.get(&slot), Some(RejoinSlot::Rejected)) {
+            return;
+        }
+        self.slots
+            .insert(slot, RejoinSlot::Waiting { due: now + self.base, attempt: 0 });
+    }
+
+    /// Slots whose backoff has elapsed at `now` (sorted, so redial order
+    /// is deterministic).
+    pub fn due_slots(&self, now: Instant) -> Vec<usize> {
+        let mut due: Vec<usize> = self
+            .slots
+            .iter()
+            .filter(|(_, s)| matches!(s, RejoinSlot::Waiting { due, .. } if *due <= now))
+            .map(|(&slot, _)| slot)
+            .collect();
+        due.sort_unstable();
+        due
+    }
+
+    /// A redial of `slot` failed: double the delay (capped) and
+    /// reschedule from `now`.
+    pub fn note_failure(&mut self, slot: usize, now: Instant) {
+        let base = self.base;
+        let cap = self.cap;
+        if let Some(RejoinSlot::Waiting { due, attempt }) = self.slots.get_mut(&slot) {
+            *attempt += 1;
+            let delay = base.saturating_mul(1u32 << (*attempt).min(16)).min(cap);
+            *due = now + delay;
+        }
+    }
+
+    /// A redial of `slot` completed its handshake: clear the slot so a
+    /// later death starts back at the base delay (reset-on-success).
+    pub fn note_success(&mut self, slot: usize) {
+        self.slots.remove(&slot);
+    }
+
+    /// The rejoin handshake for `slot` was auth-rejected: retire the
+    /// address permanently.
+    pub fn note_rejected(&mut self, slot: usize) {
+        self.slots.insert(slot, RejoinSlot::Rejected);
+    }
+
+    /// Whether `slot` has been permanently retired.
+    pub fn is_rejected(&self, slot: usize) -> bool {
+        matches!(self.slots.get(&slot), Some(RejoinSlot::Rejected))
+    }
+
+    /// Slots still scheduled for a redial (a non-zero count means an
+    /// empty pool may yet regrow, so the scheduler waits instead of
+    /// aborting).
+    pub fn pending(&self) -> usize {
+        self.slots
+            .values()
+            .filter(|s| matches!(s, RejoinSlot::Waiting { .. }))
+            .count()
+    }
+
+    /// Slots permanently retired by an auth rejection.
+    pub fn rejected(&self) -> usize {
+        self.slots
+            .values()
+            .filter(|s| matches!(s, RejoinSlot::Rejected))
+            .count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +308,93 @@ mod tests {
         assert!(WorkerSource::Fork { cmd: PathBuf::from("x") }.describe().contains("fork"));
         let r = WorkerSource::Remote { addrs: vec!["a:1".into(), "b:2".into()] };
         assert_eq!(r.describe(), "remote [a:1, b:2]");
+    }
+
+    #[test]
+    fn remote_addr_maps_slots_to_the_address_list() {
+        let r = WorkerSource::Remote { addrs: vec!["a:1".into(), "b:2".into()] };
+        assert_eq!(r.remote_addr(0), Some("a:1"));
+        assert_eq!(r.remote_addr(1), Some("b:2"));
+        assert_eq!(r.remote_addr(2), None);
+        assert_eq!(WorkerSource::Fork { cmd: PathBuf::from("x") }.remote_addr(0), None);
+    }
+
+    // ---- RejoinPolicy: clock-injected, no sockets, no sleeps ----
+
+    const S: Duration = Duration::from_secs(1);
+
+    #[test]
+    fn rejoin_policy_zero_base_is_disabled() {
+        let mut p = RejoinPolicy::new(Duration::ZERO);
+        assert!(!p.enabled());
+        let t0 = Instant::now();
+        p.note_death(0, t0);
+        assert_eq!(p.pending(), 0, "a disabled policy records nothing");
+        assert!(p.due_slots(t0 + 100 * S).is_empty());
+    }
+
+    #[test]
+    fn rejoin_policy_backoff_doubles_and_caps() {
+        let t0 = Instant::now();
+        let mut p = RejoinPolicy::with_cap(S, 8 * S);
+        p.note_death(3, t0);
+        assert!(p.due_slots(t0).is_empty(), "the first redial waits out the base delay");
+        assert!(p.due_slots(t0 + S / 2).is_empty());
+        assert_eq!(p.due_slots(t0 + S), vec![3]);
+        // each failure doubles: base, 2, 4, 8(cap), 8(cap), ...
+        p.note_failure(3, t0 + S);
+        assert!(p.due_slots(t0 + 2 * S).is_empty());
+        assert_eq!(p.due_slots(t0 + 3 * S), vec![3]);
+        p.note_failure(3, t0 + 3 * S);
+        assert!(p.due_slots(t0 + 6 * S).is_empty());
+        assert_eq!(p.due_slots(t0 + 7 * S), vec![3]);
+        p.note_failure(3, t0 + 7 * S);
+        assert_eq!(p.due_slots(t0 + 15 * S), vec![3], "third failure waits the 8s cap");
+        p.note_failure(3, t0 + 15 * S);
+        assert!(p.due_slots(t0 + 22 * S).is_empty());
+        assert_eq!(p.due_slots(t0 + 23 * S), vec![3], "the cap holds from here on");
+        assert_eq!(p.pending(), 1);
+    }
+
+    #[test]
+    fn rejoin_policy_resets_to_base_after_success() {
+        let t0 = Instant::now();
+        let mut p = RejoinPolicy::new(S);
+        p.note_death(1, t0);
+        p.note_failure(1, t0 + S);
+        p.note_failure(1, t0 + 3 * S); // backoff now 4s
+        p.note_success(1);
+        assert_eq!(p.pending(), 0, "success clears the slot");
+        // the NEXT death starts over at the base delay, not the old 4s
+        p.note_death(1, t0 + 10 * S);
+        assert!(p.due_slots(t0 + 10 * S).is_empty());
+        assert_eq!(p.due_slots(t0 + 11 * S), vec![1]);
+    }
+
+    #[test]
+    fn rejoin_policy_rejection_is_permanent() {
+        let t0 = Instant::now();
+        let mut p = RejoinPolicy::new(S);
+        p.note_death(2, t0);
+        p.note_rejected(2);
+        assert!(p.is_rejected(2));
+        assert_eq!(p.rejected(), 1);
+        assert_eq!(p.pending(), 0);
+        assert!(p.due_slots(t0 + 1000 * S).is_empty(), "never redialed again");
+        // not even a fresh death resurrects a rejected address
+        p.note_death(2, t0 + 5 * S);
+        assert!(p.due_slots(t0 + 1000 * S).is_empty());
+        assert!(p.is_rejected(2));
+    }
+
+    #[test]
+    fn rejoin_policy_due_slots_are_sorted() {
+        let t0 = Instant::now();
+        let mut p = RejoinPolicy::new(S);
+        p.note_death(9, t0);
+        p.note_death(1, t0);
+        p.note_death(4, t0);
+        assert_eq!(p.due_slots(t0 + S), vec![1, 4, 9]);
+        assert_eq!(p.pending(), 3);
     }
 }

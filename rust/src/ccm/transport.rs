@@ -80,6 +80,12 @@ pub const TCP_ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
 /// accept before declaring it unreachable.
 pub const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// The (shorter) deadline rejoin redials use on the same path: a redial
+/// is speculative by construction — the address is *known* dead until
+/// proven otherwise — so a half-open peer must stall only its own probe,
+/// never the maintenance thread's whole round.
+pub const REJOIN_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
 /// Environment variable both sides read the shared auth token from when
 /// no explicit `--auth-token` is given. The driver also exports it to the
 /// workers it forks, so local pools authenticate transparently.
@@ -434,6 +440,21 @@ pub fn connect_worker(
 /// `--workers-at`. No child process is owned: the returned link's death
 /// cannot be repaired by respawning.
 pub fn connect_remote(addr: &str, auth: Option<&str>) -> std::io::Result<(WorkerLink, Hello)> {
+    connect_remote_deadline(addr, auth, REMOTE_CONNECT_TIMEOUT)
+}
+
+/// [`connect_remote`] with an explicit deadline covering both the TCP
+/// connect *and* the handshake reads. The handshake deadline matters for
+/// rejoin redials ([`REJOIN_CONNECT_TIMEOUT`]): a dial can land in the
+/// listen backlog of a worker that will never accept it (e.g. one
+/// already serving an abandoned connection), where the connect succeeds
+/// but no hello ever arrives — without a read deadline that would wedge
+/// the caller forever.
+pub fn connect_remote_deadline(
+    addr: &str,
+    auth: Option<&str>,
+    deadline: Duration,
+) -> std::io::Result<(WorkerLink, Hello)> {
     let resolved = addr
         .to_socket_addrs()
         .map_err(|e| {
@@ -449,7 +470,7 @@ pub fn connect_remote(addr: &str, auth: Option<&str>) -> std::io::Result<(Worker
                 format!("remote worker address '{addr}' resolved to nothing"),
             )
         })?;
-    let stream = TcpStream::connect_timeout(&resolved, REMOTE_CONNECT_TIMEOUT).map_err(|e| {
+    let stream = TcpStream::connect_timeout(&resolved, deadline).map_err(|e| {
         std::io::Error::new(
             e.kind(),
             format!(
@@ -459,10 +480,12 @@ pub fn connect_remote(addr: &str, auth: Option<&str>) -> std::io::Result<(Worker
         )
     })?;
     let mut transport: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream)?);
+    transport.set_recv_deadline(Some(deadline))?;
     let hello = recv_json(transport.as_mut()).and_then(|msg| {
         negotiate_hello(&msg).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
     })?;
     finish_handshake(transport.as_mut(), &hello, auth)?;
+    transport.set_recv_deadline(None)?;
     let pid = hello.pid as u32;
     Ok((
         WorkerLink { child: None, transport, pid, addr: Some(addr.to_string()) },
@@ -557,6 +580,98 @@ fn spawn_tcp(
         pid,
         addr: None,
     })
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR` set *before* the bind.
+///
+/// The rejoin path depends on "same address, new process": a restarted
+/// `parccm worker --listen HOST:PORT` must be able to re-bind the port
+/// its predecessor just died on, even while the predecessor's connection
+/// lingers in `TIME_WAIT` (a SIGKILLed worker's kernel-orphaned socket
+/// commonly does, for up to a minute). `std::net::TcpListener::bind`
+/// cannot set the option pre-bind, so on Linux this drops down to the
+/// libc socket calls (std already links libc; the crate stays
+/// dependency-free). Any setup failure falls back to the std path —
+/// worst case is the old fast-restart `EADDRINUSE` behavior; a genuine
+/// bind/listen failure (port held by a live listener) still surfaces as
+/// an error.
+#[cfg(target_os = "linux")]
+pub fn bind_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    use std::net::SocketAddr;
+    use std::os::unix::io::FromRawFd;
+
+    #[allow(non_camel_case_types)]
+    type c_int = i32;
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_int,
+            len: u32,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const SockaddrIn, len: u32) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+    const AF_INET: c_int = 2;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    /// `struct sockaddr_in` (all fields in network byte order).
+    #[repr(C)]
+    struct SockaddrIn {
+        family: u16,
+        port: u16,
+        addr: u32,
+        zero: [u8; 8],
+    }
+
+    let mut v4 = None;
+    if let Ok(resolved) = addr.to_socket_addrs() {
+        for a in resolved {
+            if let SocketAddr::V4(found) = a {
+                v4 = Some(found);
+                break;
+            }
+        }
+    }
+    let Some(v4) = v4 else {
+        return TcpListener::bind(addr); // unresolvable / IPv6-only: std path
+    };
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0);
+        if fd < 0 {
+            return TcpListener::bind(addr);
+        }
+        let one: c_int = 1;
+        let len = std::mem::size_of::<c_int>() as u32;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, len) != 0 {
+            close(fd);
+            return TcpListener::bind(addr);
+        }
+        let sa = SockaddrIn {
+            family: AF_INET as u16,
+            port: v4.port().to_be(),
+            addr: u32::from_ne_bytes(v4.ip().octets()),
+            zero: [0; 8],
+        };
+        let sa_len = std::mem::size_of::<SockaddrIn>() as u32;
+        if bind(fd, &sa, sa_len) != 0 || listen(fd, 128) != 0 {
+            let err = std::io::Error::last_os_error();
+            close(fd);
+            return Err(err);
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+/// Non-Linux fallback: the plain std bind (no pre-bind socket options).
+#[cfg(not(target_os = "linux"))]
+pub fn bind_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    TcpListener::bind(addr)
 }
 
 #[cfg(test)]
@@ -741,6 +856,25 @@ mod tests {
             "a silent peer must surface as a timeout, got {err:?}"
         );
         silent.join().unwrap();
+    }
+
+    #[test]
+    fn reuseaddr_bind_survives_a_previous_listeners_time_wait() {
+        // the rejoin shape: a listener dies with an open connection, a new
+        // process re-listens on the SAME port moments later. The old
+        // server-side socket closes first, so it lingers in TIME_WAIT —
+        // bind_reuseaddr must succeed anyway.
+        let listener = bind_reuseaddr("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(server_side); // server closes first → its side heads to TIME_WAIT
+        std::thread::sleep(Duration::from_millis(10));
+        drop(client);
+        drop(listener);
+        std::thread::sleep(Duration::from_millis(20));
+        let again = bind_reuseaddr(&addr.to_string()).expect("re-bind on the same port");
+        assert_eq!(again.local_addr().unwrap().port(), addr.port());
     }
 
     #[test]

@@ -83,6 +83,15 @@ pub struct EngineConfig {
     /// `broadcast_replicas > 1`, matching the real pool (at factor 1 the
     /// runtime re-ships lazily, task-driven). 0 = no failures priced.
     pub sim_worker_failures: usize,
+    /// Worker-node *rejoins* to price in the DES (the cluster runtime's
+    /// `--rejoin-backoff-secs`): rejoin `k` revives the node failure `k`
+    /// dropped, with an **empty** broadcast store — its next tasks
+    /// lazily re-fetch every broadcast it held, reported as
+    /// `sim_rejoin_ship_s` / `sim_rejoin_ship_bytes` (distinct from the
+    /// eager repair counters, at any replication factor — a rejoined
+    /// worker always starts empty). Rejoins beyond `sim_worker_failures`
+    /// have no dead node to revive and price nothing.
+    pub sim_worker_rejoins: usize,
     /// OS threads actually executing tasks (defaults to the machine's
     /// available parallelism; results never depend on this).
     pub real_threads: usize,
@@ -108,6 +117,7 @@ impl EngineConfig {
             broadcast_mb_per_s: 400.0,
             broadcast_replicas: 1,
             sim_worker_failures: 0,
+            sim_worker_rejoins: 0,
             real_threads,
             max_task_attempts: 4,
         }
@@ -120,6 +130,11 @@ impl EngineConfig {
 
     pub fn with_sim_worker_failures(mut self, n: usize) -> Self {
         self.sim_worker_failures = n;
+        self
+    }
+
+    pub fn with_sim_worker_rejoins(mut self, n: usize) -> Self {
+        self.sim_worker_rejoins = n;
         self
     }
 

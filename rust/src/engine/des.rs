@@ -33,6 +33,15 @@
 //!   serialized link. Reported as `sim_repair_ship_s` /
 //!   `sim_repair_ship_bytes` — the DES price of the cluster runtime's
 //!   eager re-replication (`ClusterBackend::repair_ship_bytes`).
+//! * With `sim_worker_rejoins > 0`, rejoin `k` revives the node that
+//!   failure `k` killed — with an **empty** store, so its next tasks
+//!   lazily re-fetch every broadcast it held (minus anything eager
+//!   repair already put back elsewhere leaves it without). Priced at any
+//!   replication factor (a rejoined worker always starts empty) on its
+//!   own counters, `sim_rejoin_ship_s` / `sim_rejoin_ship_bytes` —
+//!   mirroring the real pool's `rejoin_ships` (`--rejoin-backoff-secs`).
+//!   Rejoins beyond the failure count have no dead node to revive and
+//!   price nothing.
 
 use std::collections::{HashMap, HashSet};
 
@@ -155,15 +164,22 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
     // real pool, repair only runs at replication factors above 1 (factor
     // 1 restores lazily, task-driven) — and repair traffic overlaps the
     // next problem's compute, so it is priced, not added to the makespan.
+    // Rejoin pricing piggybacks on the same failure bookkeeping: rejoin
+    // `k` revives failure `k`'s node with an empty store, and its lazy
+    // re-fetch of everything it held is priced on the rejoin counters.
     let mut repair_ship_s = 0.0f64;
     let mut repair_ship_bytes = 0u64;
-    if config.sim_worker_failures > 0 && replicas > 1 && nodes > 1 {
+    let mut rejoin_ship_s = 0.0f64;
+    let mut rejoin_ship_bytes = 0u64;
+    if config.sim_worker_failures > 0 && nodes > 1 {
         let mut bytes_of: HashMap<u64, usize> = HashMap::new();
         for job in &jobs {
             for &(bid, bytes) in &job.broadcast_deps {
                 bytes_of.insert(bid, bytes);
             }
         }
+        // what each failure dropped, in failure order (rejoins pair up)
+        let mut dropped: Vec<(usize, Vec<u64>)> = Vec::new();
         for failure in 0..config.sim_worker_failures {
             let failed = failure % nodes;
             let resident: Vec<u64> = node_has_broadcast
@@ -171,19 +187,40 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                 .filter(|(_, n)| *n == failed)
                 .map(|(bid, _)| *bid)
                 .collect();
-            for bid in resident {
+            for &bid in &resident {
                 node_has_broadcast.remove(&(bid, failed));
-                let target = (0..nodes)
-                    .find(|m| *m != failed && !node_has_broadcast.contains(&(bid, *m)));
-                let (Some(target), Some(&bytes)) = (target, bytes_of.get(&bid)) else {
-                    continue; // every survivor already holds it (or unknown id)
-                };
-                node_has_broadcast.insert((bid, target));
+            }
+            if replicas > 1 {
+                for &bid in &resident {
+                    let target = (0..nodes)
+                        .find(|m| *m != failed && !node_has_broadcast.contains(&(bid, *m)));
+                    let (Some(target), Some(&bytes)) = (target, bytes_of.get(&bid)) else {
+                        continue; // every survivor already holds it (or unknown id)
+                    };
+                    node_has_broadcast.insert((bid, target));
+                    let ship = bytes as f64 / bandwidth;
+                    let link_free = node_bcast_ready.get(&target).copied().unwrap_or(0.0);
+                    node_bcast_ready.insert(target, link_free.max(makespan) + ship);
+                    repair_ship_s += ship;
+                    repair_ship_bytes += bytes as u64;
+                }
+            }
+            dropped.push((failed, resident));
+        }
+        // rejoin k revives failure k's node: empty store, lazy re-fetch
+        // of every broadcast it held — at ANY replication factor (a
+        // rejoined worker always starts empty), on its own counters
+        for (node, ids) in dropped.iter().take(config.sim_worker_rejoins) {
+            for bid in ids {
+                if !node_has_broadcast.insert((*bid, *node)) {
+                    continue; // already back (e.g. repair landed here)
+                }
+                let Some(&bytes) = bytes_of.get(bid) else { continue };
                 let ship = bytes as f64 / bandwidth;
-                let link_free = node_bcast_ready.get(&target).copied().unwrap_or(0.0);
-                node_bcast_ready.insert(target, link_free.max(makespan) + ship);
-                repair_ship_s += ship;
-                repair_ship_bytes += bytes as u64;
+                let link_free = node_bcast_ready.get(node).copied().unwrap_or(0.0);
+                node_bcast_ready.insert(*node, link_free.max(makespan) + ship);
+                rejoin_ship_s += ship;
+                rejoin_ship_bytes += bytes as u64;
             }
         }
     }
@@ -197,6 +234,8 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_broadcast_ship_bytes: ship_bytes,
         sim_repair_ship_s: repair_ship_s,
         sim_repair_ship_bytes: repair_ship_bytes,
+        sim_rejoin_ship_s: rejoin_ship_s,
+        sim_rejoin_ship_bytes: rejoin_ship_bytes,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),
@@ -509,6 +548,93 @@ mod tests {
         );
         assert_eq!(lazy.sim_repair_ship_bytes, 0);
         assert_eq!(lazy.sim_repair_ship_s, 0.0);
+    }
+
+    #[test]
+    fn rejoined_node_lazy_reships_priced_on_their_own_counters() {
+        // one broadcast, replicas=2 on 3 nodes: the failure of node 0
+        // drops its copy (repair puts one on the spare node); the rejoin
+        // of node 0 re-fetches the copy it held, priced as rejoin
+        // traffic — broadcast and repair counters must not move.
+        let bytes = 400_000_000usize; // 1s at 400 MB/s
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 1,
+            submit_rel: 0.0,
+            finish_rel: 3.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        log.record_task(TaskRecord {
+            job_id: 1,
+            partition: 0,
+            start_rel: 0.0,
+            duration: 1.0,
+            attempts: 1,
+        });
+        let deploy = Deploy::Cluster { workers: 3, cores_per_worker: 1 };
+        let base = config(deploy)
+            .with_broadcast_replicas(2)
+            .with_sim_worker_failures(1);
+        let no_rejoin = simulate(&log, &base);
+        assert_eq!(no_rejoin.sim_rejoin_ship_bytes, 0, "no rejoin, no rejoin traffic");
+        assert_eq!(no_rejoin.sim_rejoin_ship_s, 0.0);
+
+        let rejoined = simulate(&log, &base.with_sim_worker_rejoins(1));
+        assert_eq!(rejoined.sim_rejoin_ship_bytes, bytes as u64, "lazy re-fetch priced");
+        assert!((rejoined.sim_rejoin_ship_s - 1.0).abs() < 1e-9);
+        assert_eq!(
+            rejoined.sim_repair_ship_bytes, no_rejoin.sim_repair_ship_bytes,
+            "rejoin traffic must not leak into the repair counters"
+        );
+        assert_eq!(
+            rejoined.sim_broadcast_ship_bytes, no_rejoin.sim_broadcast_ship_bytes,
+            "rejoin traffic must not leak into the broadcast counters"
+        );
+    }
+
+    #[test]
+    fn rejoin_without_a_failure_prices_nothing() {
+        // rejoins beyond the failure count have no dead node to revive
+        let log = make_log(&[(1, 0.0, 1.0, 2, 1.0)]);
+        let c = config(Deploy::Cluster { workers: 2, cores_per_worker: 1 })
+            .with_sim_worker_rejoins(3);
+        let rep = simulate(&log, &c);
+        assert_eq!(rep.sim_rejoin_ship_bytes, 0);
+        assert_eq!(rep.sim_rejoin_ship_s, 0.0);
+    }
+
+    #[test]
+    fn rejoin_prices_lazy_reships_even_at_replication_factor_one() {
+        // replicas=1: no eager repair exists, but a rejoined node still
+        // starts empty — its lazy re-fetch is real traffic and is priced
+        // (matching the real pool, whose rejoin_ships counter moves at
+        // any replication factor)
+        let bytes = 400_000_000usize;
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 1,
+            submit_rel: 0.0,
+            finish_rel: 2.0,
+            broadcast_deps: vec![(4, bytes)],
+        });
+        log.record_task(TaskRecord {
+            job_id: 1,
+            partition: 0,
+            start_rel: 0.0,
+            duration: 1.0,
+            attempts: 1,
+        });
+        let c = config(Deploy::Cluster { workers: 2, cores_per_worker: 1 })
+            .with_sim_worker_failures(1)
+            .with_sim_worker_rejoins(1);
+        let rep = simulate(&log, &c);
+        assert_eq!(rep.sim_repair_ship_bytes, 0, "factor 1 never repairs eagerly");
+        assert_eq!(rep.sim_rejoin_ship_bytes, bytes as u64);
+        assert!((rep.sim_rejoin_ship_s - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -170,6 +170,13 @@ pub struct ExecutionReport {
     /// Bytes shipped by the simulated repair traffic; the real
     /// counterpart is `ClusterBackend::repair_ship_bytes`.
     pub sim_repair_ship_bytes: u64,
+    /// Seconds spent lazily re-shipping broadcasts to simulated rejoined
+    /// nodes (`EngineConfig::sim_worker_rejoins`) — the DES price of a
+    /// rejoined worker's empty store re-populating on demand.
+    pub sim_rejoin_ship_s: f64,
+    /// Bytes shipped by the simulated rejoin traffic; the real
+    /// counterpart is `ClusterBackend::rejoin_ship_bytes`.
+    pub sim_rejoin_ship_bytes: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -185,6 +192,8 @@ impl ExecutionReport {
             ("sim_broadcast_ship_bytes", Json::Num(self.sim_broadcast_ship_bytes as f64)),
             ("sim_repair_ship_s", Json::Num(self.sim_repair_ship_s)),
             ("sim_repair_ship_bytes", Json::Num(self.sim_repair_ship_bytes as f64)),
+            ("sim_rejoin_ship_s", Json::Num(self.sim_rejoin_ship_s)),
+            ("sim_rejoin_ship_bytes", Json::Num(self.sim_rejoin_ship_bytes as f64)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

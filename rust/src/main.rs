@@ -32,6 +32,7 @@ use parccm::runtime::{artifacts_available, XlaBackend, DEFAULT_ARTIFACTS_DIR};
 use parccm::timeseries::generators::{coupled_logistic, CoupledLogisticParams};
 use parccm::timeseries::io::read_csv;
 use parccm::util::cli::Args;
+use parccm::util::json::Json;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -98,6 +99,12 @@ fn print_help() {
            --keepalive-secs S   ping idle workers every S seconds, discard the\n\
                                 silent ones (default: 5 for --workers-at pools,\n\
                                 off otherwise; 0 disables)\n\
+           --rejoin-backoff-secs S\n\
+                                redial dead --workers-at addresses on an\n\
+                                exponential backoff starting at S seconds, so a\n\
+                                restarted `parccm worker --listen` on the same\n\
+                                port rejoins the pool (default 0 = off; auth\n\
+                                mismatch on rejoin retires the address)\n\
            --replicas R         keep each broadcast resident on R workers so a\n\
                                 dead worker's tasks requeue with zero re-ship\n\
                                 (default 1; clamped to the pool width)\n\
@@ -108,7 +115,9 @@ fn print_help() {
                                 one broadcast + transform job per shard (default 1)\n\
            --case A1..A5        fig4: run a single implementation level\n\
            --dump-skills FILE   fig4: write skills as canonical JSON (two runs are\n\
-                                bit-identical iff the files are byte-identical)\n\
+                                bit-identical iff the files are byte-identical);\n\
+                                also writes FILE.meta.json with the backend's run\n\
+                                counters (rejoins, repair ships, ...)\n\
            --seed N             master seed\n\
            --workers N --cores N   cluster topology for the DES (default 5x4)\n"
     );
@@ -202,6 +211,18 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                      (pipes cannot enforce read deadlines); use --transport tcp"
                 );
             }
+            // --rejoin-backoff-secs S (0 = off): redial dead remote
+            // addresses so restarted listeners rejoin the pool
+            let rejoin_backoff = args.get("rejoin-backoff-secs").map(|_| {
+                let secs = args.get_f64("rejoin-backoff-secs", 0.0).max(0.0);
+                std::time::Duration::from_secs_f64(secs)
+            });
+            if rejoin_backoff.is_some_and(|d| !d.is_zero()) && workers_at.is_empty() {
+                eprintln!(
+                    "[parccm] --rejoin-backoff-secs only applies to --workers-at pools \
+                     (forked workers are respawned in place); ignoring it"
+                );
+            }
             let remote = !workers_at.is_empty();
             let opts = ClusterOptions {
                 transport,
@@ -210,6 +231,7 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                 workers_at,
                 auth_token,
                 keepalive,
+                rejoin_backoff,
                 ..ClusterOptions::default()
             };
             let spawned = std::env::current_exe()
@@ -381,6 +403,25 @@ fn cmd_fig4(args: &Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
         println!("(skills dumped to {path})");
+        // run metadata rides in a sidecar, never in the skills file: the
+        // skills dump must stay byte-comparable across backends while the
+        // counters (rejoins, repair ships, ...) legitimately differ — the
+        // cluster-remote CI job asserts the rejoin counters from here
+        let counters: Vec<(&str, Json)> = backend
+            .run_counters()
+            .iter()
+            .map(|&(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        let meta = Json::obj(vec![
+            ("backend", Json::Str(backend.name().to_string())),
+            ("counters", Json::obj(counters)),
+        ]);
+        let meta_path = format!("{path}.meta.json");
+        if let Err(e) = std::fs::write(&meta_path, meta.to_string()) {
+            eprintln!("cannot write run metadata {meta_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("(run metadata dumped to {meta_path})");
     }
     println!("\n(saved results/fig4.json; `cargo bench --bench fig4_cases` adds repeats + rEDM)");
     ExitCode::SUCCESS
@@ -567,7 +608,8 @@ fn cmd_events(args: &Args) -> ExitCode {
         parccm::engine::EngineConfig::new(cluster_from(args))
             .with_default_parallelism(scenario.partitions)
             .with_broadcast_replicas(args.get_usize("replicas", 1))
-            .with_sim_worker_failures(args.get_usize("sim-failures", 0)),
+            .with_sim_worker_failures(args.get_usize("sim-failures", 0))
+            .with_sim_worker_rejoins(args.get_usize("sim-rejoins", 0)),
     );
     let problem = parccm::ccm::pipeline::CcmProblem::new(&y, &x, 2, 1, 0.0);
     let n = problem.emb.n;
@@ -612,12 +654,13 @@ fn cmd_events(args: &Args) -> ExitCode {
     ] {
         let rep = ctx.report_for(deploy);
         println!(
-            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s",
+            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s",
             rep.topology,
             rep.sim_makespan_s,
             rep.sim_utilization * 100.0,
             rep.sim_broadcast_ship_s,
-            rep.sim_repair_ship_s
+            rep.sim_repair_ship_s,
+            rep.sim_rejoin_ship_s
         );
     }
     ExitCode::SUCCESS

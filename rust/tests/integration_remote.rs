@@ -7,6 +7,17 @@
 //! keepalive detection of a silently-dead worker, and the actionable abort
 //! when the last remote worker is gone (no respawn possible). Every test
 //! arms a [`Watchdog`] so a hung socket fails CI fast.
+//!
+//! This file is also the deterministic cluster fault-injection harness
+//! for reconnect/rejoin (`--rejoin-backoff-secs`): kill/restart schedules
+//! are driven by a seeded [`Rng`], every wait is an *observable sync
+//! point* (a counter poll with a deadline — `remote_lost`, `rejoins`,
+//! `keepalive_deaths`, `rejoin_rejected` — never a bare sleep standing in
+//! for cluster state), fault *kinds* ride on env seams
+//! ([`TEST_IGNORE_PING_ENV`] plays silently dead; a restart with a wrong
+//! [`AUTH_TOKEN_ENV`] plays misconfigured), and the canonical
+//! `skills_to_json` dump is asserted byte-identical after every fault
+//! schedule.
 
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
@@ -58,8 +69,48 @@ impl ListenWorker {
     /// `capture_stderr` pipes the worker's stderr for later inspection
     /// via [`Self::wait_output`] (the auth tests assert its contents).
     fn start_with(extra_env: &[(&str, &str)], capture_stderr: bool) -> ListenWorker {
+        Self::spawn_at("127.0.0.1:0", extra_env, capture_stderr)
+            .expect("spawning listen worker")
+    }
+
+    /// Restart a listener on the exact address a previous worker died on
+    /// — the rejoin shape. The worker binds with `SO_REUSEADDR`, but the
+    /// spawn is still retried briefly in case the OS has not finished
+    /// tearing the old socket down.
+    fn restart_at(addr: &str, extra_env: &[(&str, &str)]) -> ListenWorker {
+        Self::restart_at_with(addr, extra_env, false)
+    }
+
+    fn restart_at_with(
+        addr: &str,
+        extra_env: &[(&str, &str)],
+        capture_stderr: bool,
+    ) -> ListenWorker {
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            match Self::spawn_at(addr, extra_env, capture_stderr) {
+                Ok(w) => {
+                    assert_eq!(w.addr, addr, "restarted worker must bind the recorded port");
+                    return w;
+                }
+                Err(e) if Instant::now() < deadline => {
+                    eprintln!("[test] re-listen on {addr} not ready yet ({e}); retrying");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+                Err(e) => panic!("could not re-listen on {addr}: {e}"),
+            }
+        }
+    }
+
+    /// Spawn `parccm worker --listen ADDR` and wait for its ready line;
+    /// `Err` when the worker exits before announcing (e.g. bind failure).
+    fn spawn_at(
+        addr: &str,
+        extra_env: &[(&str, &str)],
+        capture_stderr: bool,
+    ) -> Result<ListenWorker, String> {
         let mut cmd = Command::new(env!("CARGO_BIN_EXE_parccm"));
-        cmd.args(["worker", "--listen", "127.0.0.1:0"]).stdout(Stdio::piped()).stderr(
+        cmd.args(["worker", "--listen", addr]).stdout(Stdio::piped()).stderr(
             if capture_stderr {
                 Stdio::piped()
             } else {
@@ -69,19 +120,22 @@ impl ListenWorker {
         for (k, v) in extra_env {
             cmd.env(k, v);
         }
-        let mut child = cmd.spawn().expect("spawning listen worker");
+        let mut child = cmd.spawn().map_err(|e| format!("spawn failed: {e}"))?;
         let stdout = child.stdout.take().expect("piped stdout");
-        let ready = BufReader::new(stdout)
-            .lines()
-            .next()
-            .expect("worker stdout closed before announcing its address")
-            .expect("reading the ready line");
+        let ready = match BufReader::new(stdout).lines().next() {
+            Some(Ok(line)) => line,
+            other => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(format!("worker exited before announcing its address: {other:?}"));
+            }
+        };
         let addr = ready
             .strip_prefix("PARCCM_WORKER_LISTENING ")
             .unwrap_or_else(|| panic!("unexpected ready line: {ready}"))
             .trim()
             .to_string();
-        ListenWorker { child: Some(child), addr }
+        Ok(ListenWorker { child: Some(child), addr })
     }
 
     fn pid(&self) -> u32 {
@@ -119,6 +173,18 @@ fn remote_pool(addrs: Vec<String>, replicas: usize, keepalive: Option<Duration>)
         },
     )
     .expect("connecting the remote worker pool")
+}
+
+/// Observable sync point for fault schedules: poll a pool counter until
+/// it reports the expected state (bounded by a deadline), so the
+/// schedule advances on *observed* cluster transitions, never on a sleep
+/// that guesses at timing.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
 }
 
 #[test]
@@ -329,4 +395,251 @@ fn last_remote_worker_death_aborts_with_actionable_message() {
     assert!(msg.contains("--replicas"), "must point at the mitigation: {msg}");
     assert_eq!(pb.remote_lost(), 1);
     assert_eq!(pb.num_workers(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// reconnect/rejoin (--rejoin-backoff-secs) + the fault-injection harness
+// ---------------------------------------------------------------------------
+
+fn rejoin_pool(addrs: Vec<String>, replicas: usize) -> Arc<ClusterBackend> {
+    Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                replicas,
+                workers_at: addrs,
+                keepalive: Some(Duration::from_millis(300)),
+                rejoin_backoff: Some(Duration::from_millis(150)),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("connecting the remote worker pool"),
+    )
+}
+
+fn sharded_a4(
+    scenario: &Scenario,
+    y: &[f32],
+    x: &[f32],
+    backend: Arc<dyn ComputeBackend>,
+) -> String {
+    let rep = run_case_policy_sharded(
+        Case::A4,
+        scenario,
+        y,
+        x,
+        Deploy::Local { cores: 2 },
+        backend,
+        TablePolicy::TruncatedAuto,
+        3,
+    );
+    skills_to_json(&rep.skills).to_string()
+}
+
+#[test]
+fn killed_remote_worker_rejoins_and_serves_again() {
+    // the acceptance schedule: sharded A4 over 3 remote workers, one
+    // kill -9'd mid-grid; the listener is restarted on the SAME port and
+    // the driver must redial it (rejoins >= 1), ship broadcasts to it on
+    // demand (rejoin_ships >= 1 — tasks land on it again), and keep every
+    // dump byte-identical to the in-process reference (and hence to the
+    // pipe backend, whose parity is pinned in integration_cluster).
+    let _guard = Watchdog::arm("rejoin_midgrid", TEST_TIMEOUT);
+    let workers = [
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+    ];
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let reference = sharded_a4(&scenario, &y, &x, Arc::new(NativeBackend));
+
+    let remote = rejoin_pool(workers.iter().map(|w| w.addr.clone()).collect(), 2);
+    assert_eq!(remote.num_workers(), 3);
+
+    // grid 1 with a mid-grid kill (the pool survives on replicas)
+    let victim_pid = workers[0].pid();
+    let victim_addr = workers[0].addr.clone();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        kill9(victim_pid);
+    });
+    let first = sharded_a4(&scenario, &y, &x, remote.clone());
+    killer.join().unwrap();
+    assert_eq!(first, reference, "grid with a mid-grid kill must stay bit-identical");
+
+    // sync point: the driver observed the death (mid-exchange or via the
+    // keepalive prober while idle)
+    wait_for("the death to be observed", || remote.remote_lost() >= 1);
+    assert_eq!(remote.rejoins(), 0, "nothing to rejoin before the restart");
+
+    // restart the listener on the recorded port; the redialer must
+    // re-admit it with a fresh worker id and no duplicate pool entry
+    let _revived = ListenWorker::restart_at(&victim_addr, &[]);
+    wait_for("the rejoin", || remote.rejoins() >= 1);
+    assert_eq!(remote.num_workers(), 3, "pool back at full width, exactly one entry");
+    assert_eq!(remote.rejoins(), 1);
+
+    // grid 2 through the recovered pool: the rejoined worker's empty
+    // store re-populates on demand and results stay bit-identical. A kill
+    // landing inside a sole-holder window DURING grid 1 may legitimately
+    // force one re-broadcast (eager repair is best-effort while every
+    // survivor is leased); what the rejoin guarantees is zero NEW
+    // re-broadcasts after the repair window closed — pin exactly that.
+    let rebroadcasts_after_recovery = remote.rebroadcasts();
+    let second = sharded_a4(&scenario, &y, &x, remote.clone());
+    assert_eq!(second, reference, "post-rejoin grid must stay bit-identical");
+    assert!(
+        remote.rejoin_ships() >= 1,
+        "tasks must land on the rejoined worker and re-ship its broadcasts on demand"
+    );
+    assert_eq!(
+        remote.rebroadcasts(),
+        rebroadcasts_after_recovery,
+        "after the repair window + rejoin, nothing may force a full re-broadcast"
+    );
+    assert_eq!(remote.respawns(), 0, "remote workers are never respawned, only rejoined");
+}
+
+#[test]
+fn seeded_chaos_schedule_stays_bit_identical() {
+    // the deterministic chaos harness: a seeded RNG picks the victim each
+    // round; every round is kill -> observe (sync point) -> restart ->
+    // rejoin (sync point) -> full sharded grid -> byte-identical dump.
+    let _guard = Watchdog::arm("chaos_schedule", Duration::from_secs(300));
+    let mut workers: Vec<ListenWorker> =
+        (0..3).map(|_| ListenWorker::start(&[])).collect();
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let reference = sharded_a4(&scenario, &y, &x, Arc::new(NativeBackend));
+
+    let remote = rejoin_pool(workers.iter().map(|w| w.addr.clone()).collect(), 2);
+    let mut rng = Rng::new(0xC0FFEE);
+    let rounds = 2u64;
+    for round in 0..rounds {
+        let victim = rng.below(workers.len());
+        let addr = workers[victim].addr.clone();
+        let lost_before = remote.remote_lost();
+        let rejoins_before = remote.rejoins();
+        kill9(workers[victim].pid());
+        wait_for("the kill to be observed", || remote.remote_lost() > lost_before);
+        workers[victim] = ListenWorker::restart_at(&addr, &[]);
+        wait_for("the round's rejoin", || remote.rejoins() > rejoins_before);
+        assert_eq!(remote.num_workers(), 3, "round {round}: full width, no duplicates");
+        let got = sharded_a4(&scenario, &y, &x, remote.clone());
+        assert_eq!(got, reference, "round {round}: dump must stay byte-identical");
+    }
+    assert_eq!(remote.rejoins(), rounds, "exactly one rejoin per round");
+    assert_eq!(remote.rebroadcasts(), 0, "no fault schedule may force a re-broadcast");
+}
+
+#[test]
+fn keepalive_discarded_worker_rejoins_without_duplicate_entries() {
+    // keepalive/rejoin interaction: a silently-dead worker (socket open,
+    // pings swallowed via the env seam) is discarded by the prober; its
+    // process is then killed and a healthy listener restarted on the same
+    // port — the pool must end with exactly one entry for that address
+    // and replicas must not be double-counted.
+    let _guard = Watchdog::arm("keepalive_then_rejoin", TEST_TIMEOUT);
+    let good = ListenWorker::start(&[]);
+    let deaf = ListenWorker::start(&[(TEST_IGNORE_PING_ENV, "1")]);
+    let remote = ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            replicas: 2,
+            workers_at: vec![good.addr.clone(), deaf.addr.clone()],
+            keepalive: Some(Duration::from_millis(200)),
+            rejoin_backoff: Some(Duration::from_millis(150)),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("connecting the remote worker pool");
+    assert_eq!(remote.num_workers(), 2);
+
+    // sync point 1: the prober declares the deaf worker dead. Its
+    // process is still alive — rejoin redials against it are refused (it
+    // closed its listener on accept) or time out on the short handshake
+    // deadline; either way they must back off, not wedge the prober.
+    wait_for("the keepalive discard", || remote.keepalive_deaths() >= 1);
+    assert_eq!(remote.num_workers(), 1);
+
+    let addr = deaf.addr.clone();
+    kill9(deaf.pid());
+    drop(deaf);
+    let _revived = ListenWorker::restart_at(&addr, &[]);
+    wait_for("the rejoin", || remote.rejoins() >= 1);
+    assert_eq!(remote.num_workers(), 2, "exactly one pool entry for the rejoined address");
+    assert_eq!(remote.keepalive_deaths(), 1);
+    assert_eq!(remote.remote_lost(), 1);
+    assert_eq!(remote.rejoins(), 1, "the same address must not rejoin twice");
+
+    // replicas are not double-counted: one problem over a 2-worker pool
+    // at factor 2 ships exactly twice (first ship + one replica copy),
+    // with zero re-broadcasts — and results stay bitwise exact
+    let (x, y) = series(250);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(11), CcmParams::new(2, 1, 70), problem.emb.n, 2);
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = remote.cross_map_into(&input, &mut arena_p);
+        assert_eq!(rho.to_bits(), NativeBackend.cross_map_into(&input, &mut arena_n).to_bits());
+        assert_eq!(arena_p.preds, arena_n.preds);
+    }
+    // <= because eager replication is best-effort (a worker mid-probe is
+    // not idle); > 2 would mean a phantom duplicate entry got a copy
+    let ships = remote.broadcast_ships();
+    assert!((1..=2).contains(&ships), "factor 2 on 2 workers: no third copy ({ships})");
+    assert_eq!(remote.rebroadcasts(), 0);
+}
+
+#[test]
+fn auth_mismatch_during_rejoin_permanently_rejects_the_address() {
+    // the regression named by the issue: a listener that comes back
+    // MISCONFIGURED (wrong token) must be retired after one rejected
+    // handshake — named error on both ends, no hot redial loop.
+    let _guard = Watchdog::arm("rejoin_auth_mismatch", TEST_TIMEOUT);
+    let victim = ListenWorker::start(&[(AUTH_TOKEN_ENV, "sesame")]);
+    let anchor = ListenWorker::start(&[(AUTH_TOKEN_ENV, "sesame")]);
+    let remote = ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            workers_at: vec![victim.addr.clone(), anchor.addr.clone()],
+            auth_token: Some("sesame".to_string()),
+            keepalive: Some(Duration::from_millis(200)),
+            rejoin_backoff: Some(Duration::from_millis(100)),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("matching tokens must connect");
+    assert_eq!(remote.num_workers(), 2);
+
+    let addr = victim.addr.clone();
+    kill9(victim.pid());
+    drop(victim);
+    wait_for("the death to be observed", || remote.remote_lost() >= 1);
+
+    // the address comes back with the WRONG token, stderr captured so the
+    // worker-side named error can be asserted
+    let evil = ListenWorker::restart_at_with(&addr, &[(AUTH_TOKEN_ENV, "imposter")], true);
+    wait_for("the auth rejection", || remote.rejoin_rejected() >= 1);
+    assert_eq!(remote.rejoins(), 0, "a mismatched worker must never rejoin");
+    assert_eq!(remote.num_workers(), 1);
+
+    // no hot redial loop: once rejected, the attempt counter freezes even
+    // across several would-be backoff periods
+    let frozen = remote.rejoin_attempts();
+    std::thread::sleep(Duration::from_millis(600));
+    assert_eq!(remote.rejoin_attempts(), frozen, "a rejected address is never redialed");
+
+    // the worker end received the wire reject and exited with the named
+    // error (not a bare EOF)
+    let out = evil.wait_output();
+    assert!(!out.status.success(), "rejected worker must exit with failure");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("rejected by driver") && stderr.contains("auth token mismatch"),
+        "worker stderr must name the rejection: {stderr}"
+    );
 }

@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
 # Launch K listen-mode parccm workers on ephemeral loopback ports and
-# print a ready-to-paste --workers-at string.
+# print a ready-to-paste --workers-at string — or restart one of them on
+# its recorded port (the rejoin fault schedule).
 #
 # Usage:
 #   scripts/launch_local_cluster.sh [K] [PARCCM_BINARY]
+#   scripts/launch_local_cluster.sh restart IDX [PARCCM_BINARY]
 #
 #   K              number of workers (default 3)
+#   IDX            0-based index into PARCCM_WORKERS of the worker to
+#                  restart on its recorded host:port (restart mode needs
+#                  PARCCM_WORKERS and WORKER_PIDS exported from a
+#                  previous launch; pair the driver with
+#                  --rejoin-backoff-secs so it redials the address)
 #   PARCCM_BINARY  path to the parccm binary
 #                  (default rust/target/release/parccm)
 #
@@ -13,15 +20,73 @@
 # driver must pass the same token (--auth-token or the same env var).
 #
 # Output (eval-able shell):
-#   PARCCM_WORKERS=127.0.0.1:34567,127.0.0.1:34568,...
-#   WORKER_PIDS="1234 1235 ..."
+#   launch:  PARCCM_WORKERS=127.0.0.1:34567,...  and  WORKER_PIDS="1234 ..."
+#   restart: WORKER_PIDS="1234 ..."  (with the restarted slot's new pid)
 #
 # Typical use:
 #   eval "$(scripts/launch_local_cluster.sh 3)"
+#   export PARCCM_WORKERS WORKER_PIDS
 #   rust/target/release/parccm fig4 --backend process \
-#       --workers-at "$PARCCM_WORKERS" --replicas 2
+#       --workers-at "$PARCCM_WORKERS" --replicas 2 --rejoin-backoff-secs 1 &
+#   kill -9 "${WORKER_PIDS%% *}"                       # fault injection
+#   eval "$(scripts/launch_local_cluster.sh restart 0)"  # ...and recovery
 #   kill $WORKER_PIDS
 set -euo pipefail
+
+# Poll $1 (a worker's stdout file) for the PARCCM_WORKER_LISTENING ready
+# line while pid $2 stays alive; echoes the bound address on success.
+wait_for_addr() {
+    local addr=""
+    for _ in $(seq 1 100); do
+        addr="$(sed -n 's/^PARCCM_WORKER_LISTENING //p' "$1" | head -n1)"
+        if [ -n "$addr" ]; then
+            echo "$addr"
+            return 0
+        fi
+        kill -0 "$2" 2>/dev/null || return 1
+        sleep 0.1
+    done
+    return 1
+}
+
+if [ "${1:-}" = "restart" ]; then
+    IDX="${2:?usage: launch_local_cluster.sh restart IDX [BIN]}"
+    BIN="${3:-rust/target/release/parccm}"
+    : "${PARCCM_WORKERS:?restart mode needs PARCCM_WORKERS exported from a launch}"
+    : "${WORKER_PIDS:?restart mode needs WORKER_PIDS exported from a launch}"
+    IFS=',' read -r -a ADDRS <<<"$PARCCM_WORKERS"
+    read -r -a PIDS <<<"$WORKER_PIDS"
+    ADDR="${ADDRS[$IDX]:?no recorded address for worker index $IDX}"
+    LOG_DIR="$(mktemp -d "${TMPDIR:-/tmp}/parccm-cluster.XXXXXX")"
+    out="$LOG_DIR/restart$IDX.out"
+    err="$LOG_DIR/restart$IDX.err"
+    pid=""
+    # the worker binds with SO_REUSEADDR, so a lingering TIME_WAIT from
+    # the killed predecessor is fine; retry briefly anyway in case the OS
+    # has not finished tearing the old socket down
+    for _ in $(seq 1 20); do
+        "$BIN" worker --listen "$ADDR" >"$out" 2>"$err" &
+        pid=$!
+        if addr="$(wait_for_addr "$out" "$pid")"; then
+            break
+        fi
+        pid=""
+        sleep 0.25
+    done
+    if [ -z "$pid" ]; then
+        echo "error: could not re-listen on $ADDR; stderr:" >&2
+        cat "$err" >&2
+        exit 1
+    fi
+    if [ "$addr" != "$ADDR" ]; then
+        echo "error: restarted worker bound $addr, expected $ADDR" >&2
+        exit 1
+    fi
+    PIDS[IDX]="$pid"
+    echo "# worker $IDX: restarted, pid $pid at $ADDR (logs: $err)" >&2
+    echo "WORKER_PIDS=\"${PIDS[*]}\""
+    exit 0
+fi
 
 K="${1:-3}"
 BIN="${2:-rust/target/release/parccm}"
@@ -41,19 +106,9 @@ for i in $(seq 1 "$K"); do
     "$BIN" worker --listen 127.0.0.1:0 >"$out" 2>"$err" &
     pid=$!
     # the worker announces its bound address on stdout before accepting
-    addr=""
-    for _ in $(seq 1 100); do
-        addr="$(sed -n 's/^PARCCM_WORKER_LISTENING //p' "$out" | head -n1)"
-        [ -n "$addr" ] && break
-        if ! kill -0 "$pid" 2>/dev/null; then
-            echo "error: worker $i exited before listening; stderr:" >&2
-            cat "$err" >&2
-            exit 1
-        fi
-        sleep 0.1
-    done
-    if [ -z "$addr" ]; then
-        echo "error: worker $i never announced its address (see $out)" >&2
+    if ! addr="$(wait_for_addr "$out" "$pid")"; then
+        echo "error: worker $i never announced its address; stderr:" >&2
+        cat "$err" >&2
         exit 1
     fi
     ADDRS+=("$addr")
