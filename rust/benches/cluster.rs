@@ -6,7 +6,11 @@
 //!   delta is pure transport overhead);
 //! * replica ship accounting: broadcast bytes/ships actually written for
 //!   a sharded workload at `--replicas 1` vs `2` (the eager-copy cost
-//!   that buys zero-re-ship requeue on worker death).
+//!   that buys zero-re-ship requeue on worker death);
+//! * straggler-defense overhead: the TCP round trip with the lease knobs
+//!   on (`--speculate-factor` + `--task-deadline-secs`) — the price of
+//!   per-task lease bookkeeping and deadline-bounded recv polling on a
+//!   healthy pool, with the defense counters recorded as cells.
 //!
 //! Run: `cargo bench --bench cluster [-- --tiny | --full]`
 //! Emits `BENCH_cluster.json` (and `results/BENCH_cluster.json`).
@@ -84,6 +88,40 @@ fn main() {
                 .cell("ship_bytes", pb.broadcast_ship_bytes() as f64)
                 .cell("ships", pb.broadcast_ships() as f64)
                 .cell("rebroadcasts", pb.rebroadcasts() as f64),
+        );
+    }
+
+    // -- straggler-defense overhead on a healthy pool --------------------
+    // same strict round trip as rtt_tcp, but with leases tracked and the
+    // recv polled on a deadline; the counter cells document that nothing
+    // straggled (a genuinely slow CI task may legitimately speculate —
+    // results stay bit-identical either way, and only *_s cells gate)
+    {
+        let pb = ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                transport: TransportKind::Tcp,
+                workers: 1,
+                replicas: 1,
+                task_deadline: Some(std::time::Duration::from_secs(30)),
+                speculate_factor: Some(8.0),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("spawning worker processes");
+        let mut arena = TaskArena::new();
+        let res = bencher.run("tcp cross_map round-trip (leases on)", || {
+            pb.cross_map_into(&input, &mut arena)
+        });
+        table.push(
+            Row::new("rtt_tcp_leases")
+                .cell("task_s", res.mean_s)
+                .cell("vs_pipe_x", res.mean_s / pipe_s.max(1e-12))
+                .cell("speculative_launches", pb.speculative_launches() as f64)
+                .cell("speculative_wins", pb.speculative_wins() as f64)
+                .cell("deadline_kills", pb.deadline_kills() as f64)
+                .cell("corrupt_frames_detected", pb.corrupt_frames_detected() as f64)
+                .cell("exhausted_fallbacks", pb.exhausted_fallbacks() as f64),
         );
     }
 

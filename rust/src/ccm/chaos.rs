@@ -1,0 +1,334 @@
+//! Deterministic fault injection at the transport layer.
+//!
+//! [`ChaosTransport`] wraps any [`Transport`] and injects failures frame
+//! by frame — delays, silent drops, truncated writes, byte corruption —
+//! from a seeded [`Rng`], so a "flaky network" run is *replayable*: the
+//! same seed and profile produce the same fault schedule. It is layered
+//! *under* the v4 [`ChecksumTransport`](crate::ccm::transport::ChecksumTransport)
+//! (checksum outermost on send, verify outermost on recv), which is what
+//! turns injected corruption into a clean, counted detection instead of a
+//! JSON-parse coin flip.
+//!
+//! Configuration rides in `PARCCM_CHAOS=seed:profile`, e.g.
+//!
+//! ```text
+//! PARCCM_CHAOS="7:delay=6,delay_ms=2,corrupt_once=30"
+//! ```
+//!
+//! The profile is comma-joined `k=v` pairs; every rate is "1 in N frames"
+//! (`0` disables):
+//!
+//! | key            | effect                                                  |
+//! |----------------|---------------------------------------------------------|
+//! | `delay=N`      | 1-in-N frames (either direction) sleep before moving    |
+//! | `delay_ms=M`   | how long a delayed frame sleeps (default 5 ms)          |
+//! | `drop=N`       | 1-in-N *sent* frames silently vanish                    |
+//! | `trunc=N`      | 1-in-N *sent* frames are cut mid-write and the send errs|
+//! | `corrupt=N`    | 1-in-N frames, both directions, get one byte flipped    |
+//! | `corrupt_send=N` | corruption on the send side only                      |
+//! | `corrupt_recv=N` | corruption on the receive side only                   |
+//! | `corrupt_once=N` | exactly the Nth frame *received* process-wide is      |
+//! |                | corrupted, then never again — the deterministic "one    |
+//! |                | corruption per run" the chaos CI pass asserts on        |
+//!
+//! The handshake is exempt by construction: callers wrap the transport
+//! only after the hello/`hello_ack` exchange, so chaos can never make a
+//! spawn flaky — only steady-state traffic.
+//!
+//! The driver threads its chaos config through
+//! [`ClusterOptions::chaos`](crate::ccm::cluster::ClusterOptions) rather
+//! than reading the environment per connection (process-global env races
+//! across threaded tests); `main.rs` and the worker entrypoint fill it
+//! from [`CHAOS_ENV`] via [`chaos_from_env`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ccm::transport::{Transport, TransportKind};
+use crate::util::rng::Rng;
+
+/// Environment variable carrying `seed:profile`.
+pub const CHAOS_ENV: &str = "PARCCM_CHAOS";
+
+/// Parsed fault-injection profile: each rate is "1 in N frames", 0 = off.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosProfile {
+    /// 1-in-N frames (both directions) sleep [`ChaosProfile::delay_ms`].
+    pub delay: u64,
+    /// Sleep applied to a delayed frame (milliseconds, default 5).
+    pub delay_ms: u64,
+    /// 1-in-N sent frames are silently dropped.
+    pub drop: u64,
+    /// 1-in-N sent frames are truncated mid-write; the send then errors.
+    pub trunc: u64,
+    /// 1-in-N frames in both directions get one byte flipped.
+    pub corrupt: u64,
+    /// Send-side-only corruption rate.
+    pub corrupt_send: u64,
+    /// Receive-side-only corruption rate.
+    pub corrupt_recv: u64,
+    /// Corrupt exactly the Nth received frame process-wide, then stop.
+    pub corrupt_once: u64,
+}
+
+impl ChaosProfile {
+    /// Parse the comma-joined `k=v` profile string.
+    pub fn parse(spec: &str) -> Result<ChaosProfile, String> {
+        let mut p = ChaosProfile { delay_ms: 5, ..ChaosProfile::default() };
+        for pair in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("chaos profile entry '{pair}' is not k=v"))?;
+            let n: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("chaos profile '{key}' value '{value}' is not a number"))?;
+            match key.trim() {
+                "delay" => p.delay = n,
+                "delay_ms" => p.delay_ms = n,
+                "drop" => p.drop = n,
+                "trunc" => p.trunc = n,
+                "corrupt" => p.corrupt = n,
+                "corrupt_send" => p.corrupt_send = n,
+                "corrupt_recv" => p.corrupt_recv = n,
+                "corrupt_once" => p.corrupt_once = n,
+                other => return Err(format!("unknown chaos profile key '{other}'")),
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// State shared by every [`ChaosTransport`] in one process: the global
+/// received-frame counter behind `corrupt_once`, and the connection
+/// counter that forks each wrapper its own deterministic stream.
+#[derive(Debug, Default)]
+pub struct ChaosState {
+    frames_recv: AtomicU64,
+    connections: AtomicU64,
+}
+
+impl ChaosState {
+    /// Fresh shared state (one per driver core / worker process).
+    pub fn new() -> Arc<ChaosState> {
+        Arc::new(ChaosState::default())
+    }
+}
+
+/// Parse [`CHAOS_ENV`] into `(seed, profile)`; `None` when unset. A
+/// malformed value is a loud error — a chaos run that silently ran clean
+/// would "pass" while testing nothing.
+pub fn chaos_from_env() -> Result<Option<(u64, ChaosProfile)>, String> {
+    let Ok(raw) = std::env::var(CHAOS_ENV) else { return Ok(None) };
+    if raw.trim().is_empty() {
+        return Ok(None);
+    }
+    let (seed, spec) = raw
+        .split_once(':')
+        .ok_or_else(|| format!("{CHAOS_ENV} must be seed:profile, got '{raw}'"))?;
+    let seed: u64 = seed
+        .trim()
+        .parse()
+        .map_err(|_| format!("{CHAOS_ENV} seed '{seed}' is not a number"))?;
+    let profile = ChaosProfile::parse(spec)?;
+    Ok(Some((seed, profile)))
+}
+
+/// A [`Transport`] that deterministically misbehaves. Each wrapper forks
+/// its own RNG stream from (seed, connection-serial) so reconnects after
+/// an injected death see a fresh — but still reproducible — schedule.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    profile: ChaosProfile,
+    rng: Rng,
+    state: Arc<ChaosState>,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` with the given seed/profile and process-shared state.
+    pub fn new(
+        inner: Box<dyn Transport>,
+        seed: u64,
+        profile: ChaosProfile,
+        state: Arc<ChaosState>,
+    ) -> ChaosTransport {
+        let conn = state.connections.fetch_add(1, Ordering::Relaxed);
+        ChaosTransport { inner, profile, rng: Rng::new(seed).fork(conn), state }
+    }
+
+    fn hit(&mut self, one_in: u64) -> bool {
+        one_in > 0 && self.rng.below(one_in as usize) == 0
+    }
+
+    fn maybe_delay(&mut self) {
+        if self.profile.delay_ms > 0 && self.hit(self.profile.delay) {
+            std::thread::sleep(Duration::from_millis(self.profile.delay_ms));
+        }
+    }
+
+    /// Flip one byte of `line` at a seeded position (never the newline —
+    /// the *frame* is corrupted, not the framing underneath it).
+    fn corrupt_line(&mut self, line: &str) -> String {
+        let mut bytes: Vec<u8> = line.as_bytes().to_vec();
+        if bytes.is_empty() {
+            return line.to_string();
+        }
+        let pos = self.rng.below(bytes.len());
+        // xor with a sub-0x80 value keeps the byte printable-ish and the
+        // line valid UTF-8 often enough to exercise the checksum (rather
+        // than only the UTF-8) detection path; 0 is avoided so the byte
+        // always actually changes
+        let flip = 1 + (self.rng.below(0x5e) as u8);
+        bytes[pos] = bytes[pos] ^ flip;
+        if bytes[pos] == b'\n' {
+            bytes[pos] ^= 1; // keep framing intact
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.maybe_delay();
+        if self.hit(self.profile.drop) {
+            return Ok(()); // vanished in flight; the peer just never hears it
+        }
+        if self.hit(self.profile.trunc) {
+            // a half-written frame: ship a prefix with no terminator and
+            // fail the send so the scheduler declares this worker dead
+            let mut cut = line.len() / 2;
+            while cut > 0 && !line.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            let _ = self.inner.send_line(&line[..cut]);
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "chaos: truncated write",
+            ));
+        }
+        if self.hit(self.profile.corrupt) || self.hit(self.profile.corrupt_send) {
+            let mangled = self.corrupt_line(line);
+            return self.inner.send_line(&mangled);
+        }
+        self.inner.send_line(line)
+    }
+
+    fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        let got = self.inner.recv_line()?;
+        let Some(line) = got else { return Ok(None) };
+        self.maybe_delay();
+        let nth = self.state.frames_recv.fetch_add(1, Ordering::Relaxed) + 1;
+        let once = self.profile.corrupt_once > 0 && nth == self.profile.corrupt_once;
+        if once || self.hit(self.profile.corrupt) || self.hit(self.profile.corrupt_recv) {
+            return Ok(Some(self.corrupt_line(&line)));
+        }
+        Ok(Some(line))
+    }
+
+    fn kind(&self) -> TransportKind {
+        self.inner.kind()
+    }
+
+    fn set_recv_deadline(&mut self, timeout: Option<Duration>) -> std::io::Result<bool> {
+        self.inner.set_recv_deadline(timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::transport::{recv_json, ChecksumTransport, TcpTransport};
+    use crate::util::json::Json;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn profile_parses_and_rejects_garbage() {
+        let p = ChaosProfile::parse("delay=6,delay_ms=2,corrupt_once=30").unwrap();
+        assert_eq!(p.delay, 6);
+        assert_eq!(p.delay_ms, 2);
+        assert_eq!(p.corrupt_once, 30);
+        assert_eq!(p.drop, 0);
+        assert_eq!(ChaosProfile::parse("").unwrap(), ChaosProfile { delay_ms: 5, ..Default::default() });
+        assert!(ChaosProfile::parse("warp=9").unwrap_err().contains("warp"));
+        assert!(ChaosProfile::parse("delay").unwrap_err().contains("k=v"));
+        assert!(ChaosProfile::parse("delay=x").unwrap_err().contains("not a number"));
+    }
+
+    fn tcp_pair() -> (TcpTransport, TcpTransport) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (server, _) = listener.accept().unwrap();
+        (
+            TcpTransport::from_stream(server).unwrap(),
+            TcpTransport::from_stream(client.join().unwrap()).unwrap(),
+        )
+    }
+
+    #[test]
+    fn clean_profile_is_a_transparent_wrapper() {
+        let (server, mut client) = tcp_pair();
+        let mut chaotic = ChaosTransport::new(
+            Box::new(server),
+            7,
+            ChaosProfile::parse("").unwrap(),
+            ChaosState::new(),
+        );
+        client.send_line(r#"{"type":"ping"}"#).unwrap();
+        let msg = recv_json(&mut chaotic).unwrap();
+        assert_eq!(msg.get("type").and_then(Json::as_str), Some("ping"));
+        chaotic.send_line(r#"{"type":"pong"}"#).unwrap();
+        let reply = recv_json(&mut client).unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("pong"));
+    }
+
+    #[test]
+    fn corrupt_once_hits_exactly_the_nth_received_frame() {
+        let (server, mut client) = tcp_pair();
+        let state = ChaosState::new();
+        let profile = ChaosProfile::parse("corrupt_once=2").unwrap();
+        let mut chaotic = ChaosTransport::new(Box::new(server), 1, profile, state);
+        for i in 0..4 {
+            client.send_line(&format!(r#"{{"n":{i}}}"#)).unwrap();
+        }
+        let mut mangled = 0;
+        for i in 0..4 {
+            let line = chaotic.recv_line().unwrap().unwrap();
+            if line.trim_end() != format!(r#"{{"n":{i}}}"#) {
+                mangled += 1;
+                assert_eq!(i, 1, "only the 2nd frame is corrupted, got frame {i}: {line:?}");
+            }
+        }
+        assert_eq!(mangled, 1, "exactly one corruption per process");
+    }
+
+    #[test]
+    fn injected_corruption_is_caught_by_the_checksum_layer() {
+        // the real layering: raw → chaos (recv corruption) → checksum
+        let (server, client) = tcp_pair();
+        let state = ChaosState::new();
+        let profile = ChaosProfile::parse("corrupt_once=1").unwrap();
+        let chaotic = ChaosTransport::new(Box::new(server), 3, profile, state);
+        let tally = std::sync::Arc::new(AtomicU64::new(0));
+        let mut checked = ChecksumTransport::new(Box::new(chaotic), Some(tally.clone()));
+        let mut sender = ChecksumTransport::new(Box::new(client), None);
+        sender.send_line(r#"{"type":"result","id":9}"#).unwrap();
+        let err = checked.recv_line().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally.load(Ordering::Relaxed), 1, "corruption detected and tallied");
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let profile = ChaosProfile::parse("drop=3,corrupt=5").unwrap();
+        let schedule = |seed: u64| -> Vec<(bool, bool)> {
+            let (server, _client) = tcp_pair();
+            let mut t =
+                ChaosTransport::new(Box::new(server), seed, profile.clone(), ChaosState::new());
+            (0..64).map(|_| (t.hit(t.profile.drop), t.hit(t.profile.corrupt))).collect()
+        };
+        assert_eq!(schedule(42), schedule(42), "replayable");
+        assert_ne!(schedule(42), schedule(43), "seed actually matters");
+    }
+}

@@ -10,18 +10,18 @@
 //! re-shipping** the broadcast (re-broadcast happens only when the last
 //! replica dies — both paths are counted and asserted in tests).
 //!
-//! # Wire protocol (version [`WIRE_VERSION`] = 3)
+//! # Wire protocol (version [`WIRE_VERSION`] = 4)
 //!
 //! Line-delimited JSON over the worker's transport. Large read-only state
 //! moves once per holding worker as content-addressed *broadcasts*; tasks
 //! then reference broadcasts by id and carry only library-row indices.
 //!
-//! Worker -> driver on startup (v3 hello; older workers omit newer fields
+//! Worker -> driver on startup (v4 hello; older workers omit newer fields
 //! and never receive newer-version messages). `auth` is present iff the
 //! worker was configured with a shared token:
 //!
 //! ```json
-//! {"type":"hello","v":3,"pid":12345,"transport":"pipe",
+//! {"type":"hello","v":4,"pid":12345,"transport":"pipe",
 //!  "caps":["evict","keepalive"],"auth":"<token>"}
 //! ```
 //!
@@ -29,20 +29,20 @@
 //! exactly one `result` or `error` reply; pings get exactly one `pong`):
 //!
 //! ```json
-//! {"v":3,"type":"hello_ack","auth":"<token>"}
-//! {"v":3,"type":"reject","msg":"auth token mismatch: ..."}
-//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"problem",
+//! {"v":4,"type":"hello_ack","auth":"<token>"}
+//! {"v":4,"type":"reject","msg":"auth token mismatch: ..."}
+//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"problem",
 //!  "vecs":[...],"targets":[...],"times":[...]}
-//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
-//! {"v":3,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
+//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
+//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
 //!  "row_lo":0,"row_hi":100,"row_len":64,"n":400,"t0":2,
 //!  "neighbors":[...],"vecs":[...]}
-//! {"v":3,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
+//! {"v":4,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
 //!  "lib_rows":[...],"e":2,"theiler":0}
-//! {"v":3,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
+//! {"v":4,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
 //!  "targets":"<hex64>","lib_rows":[...],"e":2,"theiler":0}
-//! {"v":3,"type":"evict","id":"<hex64>"}
-//! {"v":3,"type":"ping","nonce":41}
+//! {"v":4,"type":"evict","id":"<hex64>"}
+//! {"v":4,"type":"ping","nonce":41}
 //! {"type":"shutdown"}
 //! ```
 //!
@@ -61,7 +61,15 @@
 //! stay bounded on paper-scale parameter grids. v3 added the
 //! authenticated handshake (`auth` in hello, answered by `hello_ack`,
 //! refused by `reject` — clean named errors on both ends) and the
-//! keepalive `ping`/`pong` pair that detects silently-dead remotes.
+//! keepalive `ping`/`pong` pair that detects silently-dead remotes. v4
+//! added the per-frame FNV-1a checksum suffix (`...}#<16 hex>`): once the
+//! hello/`hello_ack` exchange negotiates v4 on both sides, every later
+//! frame in both directions is checksummed and verified, so byte
+//! corruption anywhere on the path is a *detected*, counted connection
+//! death (`corrupt_frames_detected`) feeding the normal requeue/repair
+//! machinery instead of a JSON-parse coin flip. v≤3 peers negotiate the
+//! old byte streams unchanged (the handshake itself is never
+//! checksummed).
 //!
 //! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
 //! and f32 -> f64 is exact, so every finite value survives the wire
@@ -90,23 +98,34 @@
 //! remote whose host froze or dropped off the network without closing the
 //! socket is pinged every interval and discarded when it misses the
 //! deadline. A worker that goes silent the same way while *leased* to a
-//! task is not detected by the prober (the task's reply read has no
-//! deadline — task durations are unbounded, so any timeout would misfire
-//! on paper-scale work); that shape is bounded by job-level timeouts
-//! (CI's `timeout-minutes`, the tests' `Watchdog`).
+//! task is covered by the per-task lease scan on the same maintenance
+//! thread: every dispatched task records a lease (start time, task kind,
+//! holder), and a lease past `--task-deadline-secs` gets its worker
+//! killed and the task requeued (`deadline_kills`), while a lease past
+//! `--speculate-factor` × the running median duration for its task kind
+//! gets a *speculative duplicate* launched on a different idle worker —
+//! first result wins, the straggler is shot, and the loser's late reply
+//! is discarded (`speculative_launches` / `speculative_wins`). With both
+//! knobs unset, no lease is ever recorded and dispatch is byte-for-byte
+//! the pre-v4 behavior.
 //! After any death with `replicas > 1`, the scheduler *eagerly* re-ships
 //! the dead worker's broadcasts to other live workers until the
 //! replication factor is restored (counted separately as `repair_ships` /
 //! `repair_ship_bytes`), so a second death inside the repair window no
-//! longer forces a full re-broadcast. After [`MAX_TASK_ATTEMPTS`] failures
-//! the task panics, which the engine's own task-retry surfaces as a job
-//! failure; a pool whose last worker died and cannot regrow panics with an
-//! actionable message instead of hanging.
+//! longer forces a full re-broadcast. Between task attempts the scheduler
+//! sleeps a jittered exponential backoff (the [`RejoinPolicy`] curve at
+//! task scale), and after [`MAX_TASK_ATTEMPTS`] failures the task returns
+//! a typed [`TaskExhausted`] error: `--on-exhausted abort` (default)
+//! panics with an actionable message, `--on-exhausted fallback` computes
+//! the task on the in-process native backend instead — bit-identical
+//! results, counted as `exhausted_fallbacks`. A pool whose last worker
+//! died and cannot regrow panics with an actionable message instead of
+//! hanging.
 //!
 //! With `--rejoin-backoff-secs` set, a remote death is no longer final:
 //! the dead address stays on a [`RejoinPolicy`] exponential-backoff
 //! redial schedule, and a restarted `parccm worker --listen` on the same
-//! host:port is re-admitted by the maintenance thread after a fresh v3
+//! host:port is re-admitted by the maintenance thread after a fresh
 //! auth handshake — with a new worker id and an *empty* broadcast store,
 //! so payloads re-ship on demand from the driver cache (counted as
 //! `rejoin_ships` / `rejoin_ship_bytes`, distinct from the death-driven
@@ -114,7 +133,7 @@
 //! the address permanently (named error on both ends, no hot redial
 //! loop).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
@@ -123,16 +142,41 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
-use crate::ccm::lifecycle::{RejoinPolicy, WorkerSource};
+use crate::ccm::chaos::{chaos_from_env, ChaosProfile, ChaosState, ChaosTransport};
+use crate::ccm::lifecycle::{exp_backoff, RejoinPolicy, WorkerSource};
 use crate::ccm::table::TableShard;
 use crate::ccm::transport::{
     bind_reuseaddr, connect_remote_deadline, ping_payload, recv_json, resolve_auth_token,
-    Transport, TransportKind, WorkerLink, EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION,
-    REJOIN_CONNECT_TIMEOUT, WIRE_VERSION,
+    ChecksumTransport, Transport, TransportKind, WorkerLink, CHECKSUM_WIRE_VERSION,
+    EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, REJOIN_CONNECT_TIMEOUT, WIRE_VERSION,
 };
 use crate::native::NativeBackend;
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Base delay of the jittered exponential backoff between task retry
+/// attempts (the [`RejoinPolicy`] curve at task scale).
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(25);
+
+/// Ceiling on the per-attempt retry backoff delay.
+const RETRY_BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Poll granularity of the leased-task reply read when a deadline or
+/// speculation knob is active: the reply read wakes this often to check
+/// whether its lease was superseded (speculative win) or deadline-killed.
+const LEASE_POLL: Duration = Duration::from_millis(200);
+
+/// Longest a speculative launch waits for an idle worker before giving
+/// up quietly (the primary attempt still owns the task).
+const SPECULATE_ACQUIRE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Running-median window per task kind for the speculation threshold.
+const DURATION_WINDOW: usize = 512;
+
+/// Minimum completed samples of a task kind before its running median is
+/// trusted to arm speculation.
+const MEDIAN_MIN_SAMPLES: usize = 3;
 
 /// Attempts per task across worker replacements before giving up.
 pub const MAX_TASK_ATTEMPTS: usize = 3;
@@ -350,13 +394,48 @@ fn error_reply(msg: &Json, err: String) -> Json {
     ])
 }
 
+/// The worker's stdio byte layer, as a [`Transport`] so the serve loop
+/// can layer chaos/checksum wrappers over pipes exactly as over TCP.
+struct StdioTransport {
+    stdin: std::io::BufReader<std::io::Stdin>,
+    stdout: std::io::Stdout,
+}
+
+impl StdioTransport {
+    fn new() -> StdioTransport {
+        StdioTransport { stdin: std::io::BufReader::new(std::io::stdin()), stdout: std::io::stdout() }
+    }
+}
+
+impl Transport for StdioTransport {
+    fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        writeln!(self.stdout, "{line}")?;
+        self.stdout.flush()
+    }
+
+    fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        let mut line = String::new();
+        match self.stdin.read_line(&mut line)? {
+            0 => Ok(None),
+            _ => Ok(Some(line)),
+        }
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Pipe
+    }
+}
+
 /// Serve one driver connection: emit the hello (presenting the shared
 /// auth token when one is configured), then answer the v3 handshake ack,
 /// keepalive pings, broadcasts, evicts, and tasks until EOF (driver gone)
-/// or an explicit shutdown.
-fn serve<R: BufRead, W: Write>(
-    reader: R,
-    mut out: W,
+/// or an explicit shutdown. Once the `hello_ack` reveals a v4+ driver,
+/// the rest of the connection (both directions) runs checksummed — and
+/// chaos-wrapped when `PARCCM_CHAOS` is set in the worker's environment.
+/// A corrupt frame is a clean, logged connection death: the driver sees
+/// EOF and its normal requeue/repair machinery takes over.
+fn serve(
+    mut transport: Box<dyn Transport>,
     kind: TransportKind,
     token: Option<String>,
 ) -> std::process::ExitCode {
@@ -366,6 +445,14 @@ fn serve<R: BufRead, W: Write>(
         .unwrap_or(WIRE_VERSION);
     let ignore_ping = std::env::var(TEST_IGNORE_PING_ENV).is_ok();
     let pid = std::process::id();
+    let chaos = match chaos_from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("[worker {pid}] {e}");
+            return std::process::ExitCode::FAILURE;
+        }
+    };
+    let chaos_state = ChaosState::new();
     let mut fields = vec![
         ("type", Json::Str("hello".into())),
         ("v", Json::Num(advertised as f64)),
@@ -380,16 +467,28 @@ fn serve<R: BufRead, W: Write>(
         fields.push(("auth", Json::Str(t.clone())));
     }
     let hello = Json::obj(fields);
-    if writeln!(out, "{hello}").and_then(|_| out.flush()).is_err() {
+    if transport.send_line(&hello.to_string()).is_err() {
         return std::process::ExitCode::FAILURE;
     }
     // with a token configured, the driver must prove knowledge of it in
     // its hello_ack before any broadcast or task is honored
     let mut authed = token.is_none();
+    // the handshake always rides the raw byte layer; chaos + checksum are
+    // layered on when the hello_ack announces a v4+ driver
+    let mut wrapped = false;
     let mut store: HashMap<String, Stored> = HashMap::new();
     let mut arena = TaskArena::new();
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    loop {
+        let line = match transport.recv_line() {
+            Ok(Some(l)) => l,
+            Ok(None) => break, // EOF: driver gone
+            Err(e) => {
+                // includes a failed v4 checksum: die cleanly and loudly so
+                // the driver's death machinery requeues our task
+                eprintln!("[worker {pid}] connection error: {e}");
+                return std::process::ExitCode::FAILURE;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -419,6 +518,22 @@ fn serve<R: BufRead, W: Write>(
                     return std::process::ExitCode::FAILURE;
                 }
                 authed = true;
+                if !wrapped {
+                    wrapped = true;
+                    let driver_v =
+                        msg.get("v").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(0);
+                    if driver_v.min(advertised) >= CHECKSUM_WIRE_VERSION {
+                        if let Some((seed, profile)) = &chaos {
+                            transport = Box::new(ChaosTransport::new(
+                                transport,
+                                *seed,
+                                profile.clone(),
+                                Arc::clone(&chaos_state),
+                            ));
+                        }
+                        transport = Box::new(ChecksumTransport::new(transport, None));
+                    }
+                }
                 continue;
             }
             Some("ping") => {
@@ -429,7 +544,7 @@ fn serve<R: BufRead, W: Write>(
                     ("type", Json::Str("pong".into())),
                     ("nonce", msg.get("nonce").cloned().unwrap_or(Json::Null)),
                 ]);
-                if writeln!(out, "{pong}").and_then(|_| out.flush()).is_err() {
+                if transport.send_line(&pong.to_string()).is_err() {
                     break;
                 }
                 continue;
@@ -441,8 +556,7 @@ fn serve<R: BufRead, W: Write>(
                 "[worker {pid}] refusing {} before an authenticated hello_ack",
                 kind_str.unwrap_or("message")
             );
-            let _ = writeln!(out, "{}", error_reply(&msg, "worker requires auth".into()));
-            let _ = out.flush();
+            let _ = transport.send_line(&error_reply(&msg, "worker requires auth".into()).to_string());
             return std::process::ExitCode::FAILURE;
         }
         let reply = match kind_str {
@@ -465,7 +579,7 @@ fn serve<R: BufRead, W: Write>(
             other => Some(error_reply(&msg, format!("unknown message type {other:?}"))),
         };
         if let Some(reply) = reply {
-            if writeln!(out, "{reply}").and_then(|_| out.flush()).is_err() {
+            if transport.send_line(&reply.to_string()).is_err() {
                 break; // driver hung up
             }
         }
@@ -527,24 +641,18 @@ pub fn worker_main(args: &Args) -> std::process::ExitCode {
             }
         }
     } else {
-        let stdin = std::io::stdin();
-        let stdout = std::io::stdout();
-        serve(stdin.lock(), stdout.lock(), TransportKind::Pipe, token)
+        serve(Box::new(StdioTransport::new()), TransportKind::Pipe, token)
     }
 }
 
 fn serve_tcp(stream: TcpStream, token: Option<String>) -> std::process::ExitCode {
-    if stream.set_nodelay(true).is_err() {
-        return std::process::ExitCode::FAILURE;
-    }
-    let reader = match stream.try_clone() {
-        Ok(s) => std::io::BufReader::new(s),
+    match crate::ccm::transport::TcpTransport::from_stream(stream) {
+        Ok(t) => serve(Box::new(t), TransportKind::Tcp, token),
         Err(e) => {
-            eprintln!("[worker] cannot clone socket: {e}");
-            return std::process::ExitCode::FAILURE;
+            eprintln!("[worker] cannot set up socket: {e}");
+            std::process::ExitCode::FAILURE
         }
-    };
-    serve(reader, stream, TransportKind::Tcp, token)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -586,6 +694,23 @@ pub struct ClusterOptions {
     /// behavior). Only meaningful for remote sources; forked workers are
     /// respawned instead.
     pub rejoin_backoff: Option<Duration>,
+    /// Hard per-task wall-clock limit (`--task-deadline-secs`). A leased
+    /// task running longer has its worker killed and is requeued
+    /// (`deadline_kills`). `None` = off (the pre-v4 behavior).
+    pub task_deadline: Option<Duration>,
+    /// Straggler threshold (`--speculate-factor X`): a leased task
+    /// running longer than X times the running median duration of its
+    /// task kind gets a speculative duplicate on a different idle worker;
+    /// first result wins. `None` = off.
+    pub speculate_factor: Option<f64>,
+    /// What to do when a task exhausts [`MAX_TASK_ATTEMPTS`]
+    /// (`--on-exhausted abort|fallback`).
+    pub on_exhausted: OnExhausted,
+    /// Driver-side deterministic fault injection: seed + profile wrapped
+    /// around every post-handshake worker connection (filled from
+    /// `PARCCM_CHAOS` by the CLI; a field rather than an env read so
+    /// threaded tests can scope chaos to one pool).
+    pub chaos: Option<(u64, ChaosProfile)>,
 }
 
 impl Default for ClusterOptions {
@@ -599,7 +724,59 @@ impl Default for ClusterOptions {
             auth_token: None,
             keepalive: None,
             rejoin_backoff: None,
+            task_deadline: None,
+            speculate_factor: None,
+            on_exhausted: OnExhausted::Abort,
+            chaos: None,
         }
+    }
+}
+
+/// Policy when a task fails [`MAX_TASK_ATTEMPTS`] times across worker
+/// replacements (`--on-exhausted`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnExhausted {
+    /// Panic with an actionable message (the default, and the pre-v4
+    /// behavior — minus the backoff between attempts).
+    #[default]
+    Abort,
+    /// Compute the task on the in-process native backend instead —
+    /// bit-identical results (workers run the same native kernels),
+    /// counted as `exhausted_fallbacks` and logged.
+    Fallback,
+}
+
+impl OnExhausted {
+    /// Parse the `--on-exhausted` flag value.
+    pub fn parse(s: &str) -> Option<OnExhausted> {
+        match s {
+            "abort" => Some(OnExhausted::Abort),
+            "fallback" => Some(OnExhausted::Fallback),
+            _ => None,
+        }
+    }
+}
+
+/// Typed terminal failure of one task: every attempt died or errored.
+/// Surfaced through [`ComputeBackend`] so the driver can degrade per
+/// [`OnExhausted`] instead of unconditionally aborting mid-job.
+#[derive(Debug)]
+pub struct TaskExhausted {
+    /// Wire id of the task that gave up.
+    pub task_id: u64,
+    /// Attempts made ([`MAX_TASK_ATTEMPTS`]).
+    pub attempts: usize,
+    /// The last attempt's failure, verbatim.
+    pub last_err: String,
+}
+
+impl std::fmt::Display for TaskExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cluster backend task {} failed {} attempts: {}",
+            self.task_id, self.attempts, self.last_err
+        )
     }
 }
 
@@ -733,6 +910,37 @@ struct PayloadEntry {
     refs: u32,
 }
 
+/// One dispatched task's lease: everything the maintenance scan needs to
+/// spot a straggler, everything a speculative duplicate needs to re-run
+/// it, and the cell a speculative win commits its result into. A lease
+/// exists exactly while a primary attempt is in flight — it is removed
+/// (under the leases lock) *before* the attempt requeues or releases its
+/// worker, so a deadline/speculation kill can only ever land on a worker
+/// still leased to the task: a kill can never double-requeue.
+struct Lease {
+    started: Instant,
+    /// Task kind (`"cross_map"` / `"shard_chunk"`) keying the running
+    /// median used by the speculation threshold.
+    kind: &'static str,
+    /// Local child pid when the holder is a forked worker we own — the
+    /// SIGKILL target for deadline kills and speculative supersedes.
+    /// `None` for remote workers (their pid is another machine's).
+    holder_pid: Option<u32>,
+    /// A speculative duplicate has been launched (at most one per lease).
+    speculated: bool,
+    /// The holder was deliberately killed (deadline breach or speculative
+    /// supersede) — the primary's reply read translates this to a death
+    /// instead of waiting forever on a wedged remote.
+    killed: bool,
+    /// A speculative win, committed here for the primary to collect.
+    result: Option<Json>,
+    /// The task's broadcast needs, cloned for the speculative re-run.
+    needs: Vec<(u64, Arc<String>)>,
+    /// The exact task line, re-sent verbatim by the speculative run (same
+    /// task id, so either reply matches the exchange filter).
+    task_line: Arc<String>,
+}
+
 /// The shared scheduler core: pool state, payload cache, and every
 /// operation the scheduling threads *and* the background keepalive prober
 /// need. [`ClusterBackend`] wraps it in an `Arc` so the prober can outlive
@@ -749,6 +957,28 @@ struct ClusterCore {
     /// Lock order: `state` may be held while taking this, never the
     /// reverse.
     rejoin: Mutex<RejoinPolicy>,
+    /// Live task leases by task id (empty unless a deadline or
+    /// speculation knob is set). Lock order: `leases` is a leaf except
+    /// for `durations`, which it may take; never hold `state` and take
+    /// `leases`, or vice versa.
+    leases: Mutex<HashMap<u64, Lease>>,
+    /// Completed-task duration samples per task kind (bounded ring,
+    /// [`DURATION_WINDOW`]) feeding the speculation median.
+    durations: Mutex<HashMap<&'static str, VecDeque<f64>>>,
+    /// Frames rejected by the v4 checksum layer on any driver-side
+    /// connection (shared with every [`ChecksumTransport`] it wraps).
+    corrupt_frames: Arc<AtomicU64>,
+    /// Shared frame/connection counters for driver-side chaos injection.
+    chaos_state: Arc<ChaosState>,
+    /// Speculative duplicates actually dispatched to a worker.
+    speculative_launches: AtomicU64,
+    /// Speculative duplicates whose result superseded the primary's.
+    speculative_wins: AtomicU64,
+    /// Workers killed for breaching `--task-deadline-secs`.
+    deadline_kills: AtomicU64,
+    /// Tasks computed on the in-process native backend after exhausting
+    /// their attempts (`--on-exhausted fallback`).
+    exhausted_fallbacks: AtomicU64,
     next_task: AtomicU64,
     next_serial: AtomicU64,
     local: NativeBackend,
@@ -784,13 +1014,50 @@ impl ClusterCore {
         self.rejoin.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    fn lock_leases(&self) -> MutexGuard<'_, HashMap<u64, Lease>> {
+        self.leases.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn lock_durations(&self) -> MutexGuard<'_, HashMap<&'static str, VecDeque<f64>>> {
+        self.durations.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Whether task leases are tracked at all (either liveness knob set).
+    /// With both off, dispatch takes no lease lock and no reply-read
+    /// deadline — byte-for-byte the pre-v4 behavior.
+    fn tracks_leases(&self) -> bool {
+        self.opts.task_deadline.is_some() || self.opts.speculate_factor.is_some()
+    }
+
+    /// Post-handshake transport layering for a fresh worker connection:
+    /// chaos (when configured) under the v4 checksum layer, so injected
+    /// corruption on either side is *detected* by the peer's verify. The
+    /// handshake itself always rides the raw byte layer, and v≤3 workers
+    /// keep their old byte streams exactly.
+    fn wrap_transport(&self, raw: Box<dyn Transport>, wire_v: u64) -> Box<dyn Transport> {
+        let mut t = raw;
+        if let Some((seed, profile)) = &self.opts.chaos {
+            t = Box::new(ChaosTransport::new(
+                t,
+                *seed,
+                profile.clone(),
+                Arc::clone(&self.chaos_state),
+            ));
+        }
+        if wire_v >= CHECKSUM_WIRE_VERSION {
+            t = Box::new(ChecksumTransport::new(t, Some(Arc::clone(&self.corrupt_frames))));
+        }
+        t
+    }
+
     fn spawn(&self, slot: usize) -> std::io::Result<Worker> {
-        let (link, hello) = self.source.connect(
+        let (mut link, hello) = self.source.connect(
             slot,
             self.opts.transport,
             &self.opts.worker_env,
             self.opts.auth_token.as_deref(),
         )?;
+        link.transport = self.wrap_transport(link.transport, hello.version);
         Ok(Worker {
             serial: self.next_serial.fetch_add(1, Ordering::Relaxed),
             slot,
@@ -985,7 +1252,11 @@ impl ClusterCore {
             let _ = child.kill();
             let _ = child.wait();
         }
-        let replacement = if self.source.can_respawn() { Some(self.spawn(0)) } else { None };
+        // respawn into the SLOT the dead worker occupied (fork sources
+        // ignore the slot today, but slot-keyed bookkeeping — rejoin
+        // redial, lease kill targeting — must never see a recycled 0)
+        let replacement =
+            if self.source.can_respawn() { Some(self.spawn(dead.slot)) } else { None };
         let held: Vec<u64> = dead.has.iter().copied().collect();
         let mut remote_death = false;
         let mut repair: Vec<(u64, Arc<String>)> = Vec::new();
@@ -1081,7 +1352,8 @@ impl ClusterCore {
             }
             let auth = self.opts.auth_token.as_deref();
             match connect_remote_deadline(&addr, auth, REJOIN_CONNECT_TIMEOUT) {
-                Ok((link, hello)) => {
+                Ok((mut link, hello)) => {
+                    link.transport = self.wrap_transport(link.transport, hello.version);
                     let worker = Worker {
                         serial: self.next_serial.fetch_add(1, Ordering::Relaxed),
                         slot,
@@ -1215,12 +1487,23 @@ impl ClusterCore {
 
     /// One request/response exchange on `worker`: ship missing broadcasts,
     /// send the task, read its reply.
+    ///
+    /// With a liveness knob set (`tracks_leases`), the reply read polls at
+    /// [`LEASE_POLL`] instead of blocking forever, so a *primary* attempt
+    /// notices its lease was superseded (speculative win) or
+    /// deadline-killed even when the wedged worker is remote (no local
+    /// pid to kill). A *speculative* attempt (`speculative = true`) polls
+    /// only to bound how long it waits after the primary has already
+    /// finished. Pipe transports cannot enforce read deadlines
+    /// (`set_recv_deadline` = false) and keep the blocking read — forked
+    /// pipe workers are unblocked by the pid kill instead.
     fn exchange(
         &self,
         worker: &mut Worker,
         needs: &[(u64, Arc<String>)],
         task_id: u64,
         task_line: &str,
+        speculative: bool,
     ) -> Result<Json, ExchangeError> {
         for (id, payload) in needs {
             if !worker.has.contains(id) {
@@ -1232,17 +1515,75 @@ impl ClusterCore {
             .transport
             .send_line(task_line)
             .map_err(ExchangeError::Dead)?;
+        let polling = self.tracks_leases()
+            && worker
+                .link
+                .transport
+                .set_recv_deadline(Some(LEASE_POLL))
+                .map_err(ExchangeError::Dead)?;
+        // bound a speculative loser's wait for a reply that may be very
+        // slow: after the lease is gone (primary finished) allow a long
+        // grace, then abandon the connection rather than leak the worker
+        let mut orphan_polls: u32 = 0;
+        let abandon_after = (Duration::from_secs(60).as_millis() / LEASE_POLL.as_millis()) as u32;
         loop {
-            let reply = recv_json(worker.link.transport.as_mut()).map_err(ExchangeError::Dead)?;
+            let reply = match recv_json(worker.link.transport.as_mut()) {
+                Ok(r) => r,
+                Err(e)
+                    if polling
+                        && matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                {
+                    let leases = self.lock_leases();
+                    match leases.get(&task_id) {
+                        Some(l) if !speculative && l.result.is_some() => {
+                            return Err(ExchangeError::Dead(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                "superseded by a speculative result",
+                            )));
+                        }
+                        Some(l) if !speculative && l.killed => {
+                            return Err(ExchangeError::Dead(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                "task deadline exceeded",
+                            )));
+                        }
+                        None if speculative => {
+                            orphan_polls += 1;
+                            if orphan_polls > abandon_after {
+                                return Err(ExchangeError::Dead(std::io::Error::new(
+                                    std::io::ErrorKind::TimedOut,
+                                    "speculative reply abandoned (primary finished long ago)",
+                                )));
+                            }
+                            continue;
+                        }
+                        _ => continue, // still ours: keep waiting
+                    }
+                }
+                Err(e) => return Err(ExchangeError::Dead(e)),
+            };
             match reply.get("type").and_then(Json::as_str) {
                 Some("result")
                     if reply.get("task").and_then(Json::as_f64) == Some(task_id as f64) =>
                 {
+                    if polling {
+                        worker
+                            .link
+                            .transport
+                            .set_recv_deadline(None)
+                            .map_err(ExchangeError::Dead)?;
+                    }
                     return Ok(reply);
                 }
                 Some("error") => {
                     // a well-formed reply: the worker is ALIVE, the task
                     // (or our bookkeeping about the worker's store) is not
+                    if polling {
+                        let _ = worker.link.transport.set_recv_deadline(None);
+                    }
                     return Err(ExchangeError::App(
                         reply
                             .get("msg")
@@ -1251,7 +1592,7 @@ impl ClusterCore {
                             .to_string(),
                     ));
                 }
-                _ => continue, // stale pongs / hello echoes: skip
+                _ => continue, // stale pongs / late loser replies: skip
             }
         }
     }
@@ -1313,31 +1654,326 @@ impl ClusterCore {
         }
     }
 
+    /// Register the lease for one dispatched attempt (no-op when no
+    /// liveness knob is set — dispatch then takes no lease lock at all).
+    fn lease_task(
+        &self,
+        task_id: u64,
+        kind: &'static str,
+        worker: &Worker,
+        needs: &[(u64, Arc<String>)],
+        task_line: &Arc<String>,
+    ) {
+        if !self.tracks_leases() {
+            return;
+        }
+        self.lock_leases().insert(
+            task_id,
+            Lease {
+                started: Instant::now(),
+                kind,
+                holder_pid: worker.link.child.is_some().then_some(worker.link.pid),
+                speculated: false,
+                killed: false,
+                result: None,
+                needs: needs.to_vec(),
+                task_line: Arc::clone(task_line),
+            },
+        );
+    }
+
+    /// Remove (and return) the task's lease. Called by the primary
+    /// attempt *before* it requeues, releases, or reaps its worker — the
+    /// invariant that makes deadline/speculation kills unable to
+    /// double-requeue (they only ever act on a live lease).
+    fn finish_lease(&self, task_id: u64) -> Option<Lease> {
+        if !self.tracks_leases() {
+            return None;
+        }
+        self.lock_leases().remove(&task_id)
+    }
+
+    /// Collect a speculative win if one has been committed for `task_id`
+    /// (removing the lease).
+    fn take_lease_result(&self, task_id: u64) -> Option<Json> {
+        if !self.tracks_leases() {
+            return None;
+        }
+        let mut leases = self.lock_leases();
+        if leases.get(&task_id).is_some_and(|l| l.result.is_some()) {
+            return leases.remove(&task_id).and_then(|l| l.result);
+        }
+        None
+    }
+
+    /// Feed one completed attempt's wall-clock into the running per-kind
+    /// median (bounded ring).
+    fn record_duration(&self, kind: &'static str, secs: f64) {
+        if !self.tracks_leases() {
+            return;
+        }
+        let mut durations = self.lock_durations();
+        let ring = durations.entry(kind).or_default();
+        if ring.len() >= DURATION_WINDOW {
+            ring.pop_front();
+        }
+        ring.push_back(secs);
+    }
+
+    /// Running median task duration for `kind`, once enough samples exist
+    /// to trust it.
+    fn median_duration(&self, kind: &'static str) -> Option<f64> {
+        let durations = self.lock_durations();
+        let ring = durations.get(kind)?;
+        if ring.len() < MEDIAN_MIN_SAMPLES {
+            return None;
+        }
+        let mut sorted: Vec<f64> = ring.iter().copied().collect();
+        sorted.sort_unstable_by(f64::total_cmp);
+        Some(sorted[sorted.len() / 2])
+    }
+
+    /// The maintenance thread's lease scan: kill deadline breaches,
+    /// launch (at most one) speculative duplicate per straggling lease.
+    fn scan_leases(self: &Arc<Self>) {
+        if !self.tracks_leases() {
+            return;
+        }
+        let now = Instant::now();
+        let mut speculate: Vec<u64> = Vec::new();
+        {
+            let mut leases = self.lock_leases();
+            for (&task_id, lease) in leases.iter_mut() {
+                if lease.killed || lease.result.is_some() {
+                    continue;
+                }
+                let elapsed = now.duration_since(lease.started);
+                if let Some(deadline) = self.opts.task_deadline {
+                    if elapsed >= deadline {
+                        // kill under the leases lock: the primary cannot
+                        // have requeued (it removes the lease first), so
+                        // the shot always lands on the leased worker
+                        lease.killed = true;
+                        if let Some(pid) = lease.holder_pid {
+                            kill_pid(pid);
+                        }
+                        self.deadline_kills.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[cluster backend] task {task_id} ({}) exceeded \
+                             --task-deadline-secs after {:.1}s; killing its worker and \
+                             requeueing",
+                            lease.kind,
+                            elapsed.as_secs_f64()
+                        );
+                        continue;
+                    }
+                }
+                if let Some(factor) = self.opts.speculate_factor {
+                    if !lease.speculated {
+                        if let Some(median) = self.median_duration(lease.kind) {
+                            // floor the threshold: micro-task medians must
+                            // not arm speculation on scheduler jitter
+                            let threshold = (median * factor).max(0.001);
+                            if elapsed.as_secs_f64() >= threshold {
+                                lease.speculated = true;
+                                speculate.push(task_id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for task_id in speculate {
+            let core = Arc::clone(self);
+            std::thread::spawn(move || core.speculate(task_id));
+        }
+    }
+
+    /// Run one speculative duplicate of a straggling task on a different
+    /// idle worker. First result wins: a committed win also shoots the
+    /// straggler (under the leases lock, so the kill can only land while
+    /// the primary still owns the lease); if the primary finished first,
+    /// this duplicate's reply is discarded. Best effort throughout — no
+    /// idle worker within [`SPECULATE_ACQUIRE_TIMEOUT`] (or a duplicate
+    /// that itself dies) re-arms the lease for a later scan rather than
+    /// stranding a wedged primary with its one spent chance.
+    fn speculate(self: &Arc<Self>, task_id: u64) {
+        let (needs, task_line, ids) = {
+            let leases = self.lock_leases();
+            let Some(lease) = leases.get(&task_id) else { return };
+            let ids: Vec<u64> = lease.needs.iter().map(|(id, _)| *id).collect();
+            (lease.needs.clone(), Arc::clone(&lease.task_line), ids)
+        };
+        // the straggler itself is leased (not idle), so it can never be
+        // picked as its own speculative stand-in
+        let Some(mut worker) = self.try_acquire(&ids, SPECULATE_ACQUIRE_TIMEOUT) else {
+            // no stand-in right now: re-arm the lease so a later scan can
+            // retry — a wedged primary must not lose its only rescue to a
+            // momentarily-busy pool
+            if let Some(lease) = self.lock_leases().get_mut(&task_id) {
+                lease.speculated = false;
+            }
+            return;
+        };
+        self.speculative_launches.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[cluster backend] task {task_id} is straggling; launching a speculative \
+             duplicate (first result wins)"
+        );
+        match self.exchange(&mut worker, &needs, task_id, &task_line, true) {
+            Ok(reply) => {
+                {
+                    let mut leases = self.lock_leases();
+                    match leases.get_mut(&task_id) {
+                        Some(lease) if lease.result.is_none() && !lease.killed => {
+                            lease.result = Some(reply);
+                            lease.killed = true;
+                            if let Some(pid) = lease.holder_pid {
+                                kill_pid(pid);
+                            }
+                            self.speculative_wins.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[cluster backend] speculative duplicate of task {task_id} \
+                                 won; superseding the straggler"
+                            );
+                        }
+                        // the primary finished (lease gone) or was already
+                        // deadline-killed: this duplicate lost — discard
+                        _ => {}
+                    }
+                }
+                worker.tasks_done += 1;
+                self.release(worker);
+            }
+            Err(ExchangeError::Dead(e)) => {
+                self.handle_death(worker, DeathCause::Exchange, &e.to_string());
+                // the duplicate died, not the primary: re-arm so a later
+                // scan may try again on another worker (no-op if the
+                // primary finished or was deadline-killed meanwhile)
+                if let Some(lease) = self.lock_leases().get_mut(&task_id) {
+                    lease.speculated = false;
+                }
+            }
+            Err(ExchangeError::App(_)) => {
+                // a live worker that cannot run the duplicate (store
+                // drift): roll back its claims and repool it; the primary
+                // still owns the task
+                {
+                    let mut st = self.lock_state();
+                    for id in &ids {
+                        if worker.has.remove(id) {
+                            drop_holder(&mut st, *id, worker.serial);
+                        }
+                    }
+                }
+                self.release(worker);
+            }
+        }
+    }
+
+    /// Bounded-wait acquire for speculative launches: same replica
+    /// preference as [`ClusterCore::acquire`], but gives up (returning
+    /// `None`) after `timeout` or on a dead pool instead of blocking or
+    /// panicking — a speculative duplicate is opportunistic by design.
+    fn try_acquire(&self, needs: &[u64], timeout: Duration) -> Option<Worker> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock_state();
+        loop {
+            if !st.idle.is_empty() {
+                let holder = st
+                    .idle
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| needs.iter().all(|id| w.has.contains(id)))
+                    .min_by_key(|(_, w)| w.tasks_done)
+                    .map(|(i, _)| i);
+                let pos = holder.unwrap_or_else(|| {
+                    st.idle
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, w)| (w.tasks_done, u64::MAX - w.serial))
+                        .map(|(i, _)| i)
+                        .unwrap()
+                });
+                return Some(st.idle.swap_remove(pos));
+            }
+            let now = Instant::now();
+            if st.live == 0 || now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
     /// Run a task to completion, requeueing if the leased worker dies
     /// mid-exchange — onto a surviving replica (zero re-ship) when one
     /// holds the task's broadcasts, else with a counted re-broadcast. A
     /// worker that answers with a clean wire `error` is alive and stays
     /// pooled (crucial for remote workers, which cannot be respawned);
-    /// only connection-level failures declare it dead.
-    fn execute(&self, needs: &[(u64, Arc<String>)], build_task: impl Fn(u64) -> String) -> Json {
+    /// only connection-level failures declare it dead. Attempts after the
+    /// first are separated by a jittered exponential backoff (the
+    /// [`RejoinPolicy`] curve at task scale), and exhausting
+    /// [`MAX_TASK_ATTEMPTS`] returns a typed [`TaskExhausted`] for the
+    /// caller's `--on-exhausted` policy instead of panicking here.
+    fn execute(
+        &self,
+        needs: &[(u64, Arc<String>)],
+        kind: &'static str,
+        build_task: impl Fn(u64) -> String,
+    ) -> Result<Json, TaskExhausted> {
         let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
-        let task_line = build_task(task_id);
+        let task_line = Arc::new(build_task(task_id));
         let ids: Vec<u64> = needs.iter().map(|(id, _)| *id).collect();
         let mut last_err = String::new();
-        for _attempt in 0..MAX_TASK_ATTEMPTS {
+        let mut jitter = Rng::new(task_id);
+        for attempt in 0..MAX_TASK_ATTEMPTS {
+            if attempt > 0 {
+                // decorrelate requeue storms after a mass death: jittered
+                // exponential backoff between attempts
+                let delay = exp_backoff(RETRY_BACKOFF_BASE, attempt as u32, RETRY_BACKOFF_CAP);
+                std::thread::sleep(delay.mul_f64(0.5 + jitter.f64()));
+            }
+            // a speculative duplicate may have finished while we backed off
+            if let Some(reply) = self.take_lease_result(task_id) {
+                return Ok(reply);
+            }
             let mut worker = self.acquire(&ids);
-            match self.exchange(&mut worker, needs, task_id, &task_line) {
+            let started = Instant::now();
+            self.lease_task(task_id, kind, &worker, needs, &task_line);
+            match self.exchange(&mut worker, needs, task_id, &task_line, false) {
                 Ok(reply) => {
+                    let lease = self.finish_lease(task_id);
+                    self.record_duration(kind, started.elapsed().as_secs_f64());
                     worker.tasks_done += 1;
-                    self.release(worker);
-                    return reply;
+                    // a speculative win may have shot this worker just as
+                    // its own (bit-identical) reply was already in flight:
+                    // the reply stands, the worker does not
+                    if lease.as_ref().is_some_and(|l| l.killed) {
+                        self.handle_death(worker, DeathCause::Exchange, "superseded mid-reply");
+                    } else {
+                        self.release(worker);
+                    }
+                    return Ok(reply);
                 }
                 Err(ExchangeError::Dead(e)) => {
                     last_err = e.to_string();
+                    // remove the lease BEFORE reaping: once the task is
+                    // requeueable, no deadline/speculation kill can target
+                    // it (the no-double-requeue invariant)
+                    let lease = self.finish_lease(task_id);
                     self.handle_death(worker, DeathCause::Exchange, &last_err);
+                    if let Some(reply) = lease.and_then(|l| l.result) {
+                        // superseded: the speculative duplicate already won
+                        return Ok(reply);
+                    }
                 }
                 Err(ExchangeError::App(msg)) => {
                     last_err = msg;
+                    self.finish_lease(task_id);
                     // roll back this worker's claim to the task's
                     // broadcasts: if the error was store drift ("unknown
                     // broadcast"), the retry re-ships instead of trusting
@@ -1355,9 +1991,49 @@ impl ClusterCore {
                 }
             }
         }
-        panic!("cluster backend task {task_id} failed {MAX_TASK_ATTEMPTS} attempts: {last_err}");
+        if let Some(reply) = self.take_lease_result(task_id) {
+            return Ok(reply);
+        }
+        Err(TaskExhausted { task_id, attempts: MAX_TASK_ATTEMPTS, last_err })
+    }
+
+    /// Apply the `--on-exhausted` policy to a terminal task failure:
+    /// abort (default) panics with an actionable message; fallback counts
+    /// and logs, and the caller computes the task on the in-process
+    /// native backend (bit-identical — workers run the same kernels).
+    fn note_exhausted(&self, exhausted: &TaskExhausted) {
+        match self.opts.on_exhausted {
+            OnExhausted::Abort => panic!(
+                "{exhausted}; pass --on-exhausted fallback to degrade to the in-process \
+                 native backend instead of aborting"
+            ),
+            OnExhausted::Fallback => {
+                self.exhausted_fallbacks.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[cluster backend] {exhausted}; --on-exhausted fallback: computing it \
+                     on the in-process native backend (bit-identical results)"
+                );
+            }
+        }
     }
 }
+
+/// SIGKILL a forked worker we own (deadline breach / speculative
+/// supersede). Unix-only by the same libc precedent as `bind_reuseaddr`;
+/// elsewhere the reply-read polling alone unblocks the primary.
+#[cfg(unix)]
+fn kill_pid(pid: u32) {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGKILL: i32 = 9;
+    unsafe {
+        kill(pid as i32, SIGKILL);
+    }
+}
+
+#[cfg(not(unix))]
+fn kill_pid(_pid: u32) {}
 
 impl Drop for ClusterCore {
     fn drop(&mut self) {
@@ -1371,8 +2047,8 @@ impl Drop for ClusterCore {
     }
 }
 
-/// The background maintenance thread: keepalive probing and rejoin
-/// redialing on one loop.
+/// The background maintenance thread: keepalive probing, rejoin
+/// redialing, and the per-task lease scan on one loop.
 ///
 /// Keepalive (when `keepalive` is set): periodically pings every idle
 /// keepalive-capable worker and discards any that stays silent past the
@@ -1381,9 +2057,17 @@ impl Drop for ClusterCore {
 ///
 /// Rejoin (when the core's [`RejoinPolicy`] is enabled): dead remote
 /// addresses whose backoff has elapsed are redialed every tick; a
-/// restarted listener is re-admitted to the pool. The two concerns share
-/// the thread because both are periodic pool upkeep — a redial may delay
-/// a probe round by up to its (short) connect deadline, never block it.
+/// restarted listener is re-admitted to the pool.
+///
+/// Lease scan (when a deadline/speculation knob is set): every tick,
+/// leased tasks are checked against `--task-deadline-secs` (breach =
+/// kill + requeue) and `--speculate-factor` × the running median for
+/// their kind (breach = speculative duplicate on another worker).
+///
+/// The concerns share the thread because all are periodic pool upkeep —
+/// a redial may delay a probe round by up to its (short) connect
+/// deadline, never block it; the lease scan itself launches speculative
+/// work on detached threads and never blocks the loop.
 fn maintenance_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, keepalive: Option<Duration>) {
     let mut tick = Duration::from_millis(25);
     if let Some(iv) = keepalive {
@@ -1400,6 +2084,7 @@ fn maintenance_loop(core: Arc<ClusterCore>, stop: Arc<AtomicBool>, keepalive: Op
             return;
         }
         core.attempt_due_rejoins();
+        core.scan_leases();
         let Some(interval) = keepalive else { continue };
         if next_probe.is_some_and(|t| Instant::now() < t) {
             continue;
@@ -1502,6 +2187,14 @@ impl ClusterBackend {
             cv: Condvar::new(),
             payloads: Mutex::new(HashMap::new()),
             rejoin: Mutex::new(RejoinPolicy::new(rejoin_base.unwrap_or(Duration::ZERO))),
+            leases: Mutex::new(HashMap::new()),
+            durations: Mutex::new(HashMap::new()),
+            corrupt_frames: Arc::new(AtomicU64::new(0)),
+            chaos_state: ChaosState::new(),
+            speculative_launches: AtomicU64::new(0),
+            speculative_wins: AtomicU64::new(0),
+            deadline_kills: AtomicU64::new(0),
+            exhausted_fallbacks: AtomicU64::new(0),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,
@@ -1516,11 +2209,14 @@ impl ClusterBackend {
             st.idle = idle;
         }
         let maint_stop = Arc::new(AtomicBool::new(false));
-        let maint_thread = (keepalive.is_some() || rejoin_base.is_some()).then(|| {
-            let core = Arc::clone(&core);
-            let stop = Arc::clone(&maint_stop);
-            std::thread::spawn(move || maintenance_loop(core, stop, keepalive))
-        });
+        // the lease scan rides the same maintenance thread as keepalive
+        // probing and rejoin redialing — any of the three warrants it
+        let maint_thread =
+            (keepalive.is_some() || rejoin_base.is_some() || core.tracks_leases()).then(|| {
+                let core = Arc::clone(&core);
+                let stop = Arc::clone(&maint_stop);
+                std::thread::spawn(move || maintenance_loop(core, stop, keepalive))
+            });
         Ok(ClusterBackend { core, maint_stop, maint_thread })
     }
 
@@ -1630,6 +2326,33 @@ impl ClusterBackend {
         self.core.lock_state().evictions
     }
 
+    /// Speculative duplicates actually dispatched (`--speculate-factor`).
+    pub fn speculative_launches(&self) -> u64 {
+        self.core.speculative_launches.load(Ordering::Relaxed)
+    }
+
+    /// Speculative duplicates whose result superseded the straggler's.
+    pub fn speculative_wins(&self) -> u64 {
+        self.core.speculative_wins.load(Ordering::Relaxed)
+    }
+
+    /// Workers killed for breaching `--task-deadline-secs`.
+    pub fn deadline_kills(&self) -> u64 {
+        self.core.deadline_kills.load(Ordering::Relaxed)
+    }
+
+    /// Frames rejected by the v4 checksum layer across all driver-side
+    /// connections (each one a clean, counted connection death).
+    pub fn corrupt_frames_detected(&self) -> u64 {
+        self.core.corrupt_frames.load(Ordering::Relaxed)
+    }
+
+    /// Tasks computed on the in-process native backend after exhausting
+    /// their attempts (`--on-exhausted fallback`).
+    pub fn exhausted_fallbacks(&self) -> u64 {
+        self.core.exhausted_fallbacks.load(Ordering::Relaxed)
+    }
+
     /// Serialized broadcast payloads currently cached driver-side.
     pub fn cached_payloads(&self) -> usize {
         self.core.lock_payloads().len()
@@ -1671,7 +2394,7 @@ impl ComputeBackend for ClusterBackend {
         let e = input.e;
         let theiler = input.theiler;
         let lib_rows = Json::usizes(input.lib_rows);
-        let reply = self.core.execute(&[(id, payload)], |task| {
+        let reply = self.core.execute(&[(id, payload)], "cross_map", |task| {
             Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("type", Json::Str("task".into())),
@@ -1684,6 +2407,15 @@ impl ComputeBackend for ClusterBackend {
             ])
             .to_string()
         });
+        let reply = match reply {
+            Ok(reply) => reply,
+            Err(exhausted) => {
+                self.core.note_exhausted(&exhausted);
+                // workers run the same native kernels, so the local
+                // fallback is bit-identical to a worker result
+                return self.core.local.cross_map_into(input, arena);
+            }
+        };
         arena.preds = reply
             .get("preds")
             .and_then(Json::as_f32s)
@@ -1723,21 +2455,32 @@ impl ComputeBackend for ClusterBackend {
         let tid = targets_wire_id(targets);
         let shard_line = self.core.payload(sid, || shard_payload(sid, shard));
         let targets_line = self.core.payload(tid, || targets_payload(tid, targets));
-        let lib_rows = Json::usizes(lib_rows);
-        let reply = self.core.execute(&[(sid, shard_line), (tid, targets_line)], |task| {
-            Json::obj(vec![
-                ("v", Json::Num(WIRE_VERSION as f64)),
-                ("type", Json::Str("task".into())),
-                ("task", Json::Num(task as f64)),
-                ("op", Json::Str("shard_chunk".into())),
-                ("shard", Json::Str(hex(sid))),
-                ("targets", Json::Str(hex(tid))),
-                ("lib_rows", lib_rows.clone()),
-                ("e", Json::Num(e as f64)),
-                ("theiler", Json::Num(theiler as f64)),
-            ])
-            .to_string()
-        });
+        let rows = Json::usizes(lib_rows);
+        let reply =
+            self.core.execute(&[(sid, shard_line), (tid, targets_line)], "shard_chunk", |task| {
+                Json::obj(vec![
+                    ("v", Json::Num(WIRE_VERSION as f64)),
+                    ("type", Json::Str("task".into())),
+                    ("task", Json::Num(task as f64)),
+                    ("op", Json::Str("shard_chunk".into())),
+                    ("shard", Json::Str(hex(sid))),
+                    ("targets", Json::Str(hex(tid))),
+                    ("lib_rows", rows.clone()),
+                    ("e", Json::Num(e as f64)),
+                    ("theiler", Json::Num(theiler as f64)),
+                ])
+                .to_string()
+            });
+        let reply = match reply {
+            Ok(reply) => reply,
+            Err(exhausted) => {
+                self.core.note_exhausted(&exhausted);
+                self.core
+                    .local
+                    .shard_chunk_into(shard, targets, theiler, lib_rows, e, _arena, preds);
+                return;
+            }
+        };
         *preds = reply
             .get("preds")
             .and_then(Json::as_f32s)
@@ -1766,6 +2509,11 @@ impl ComputeBackend for ClusterBackend {
             ("rejoin_rejected", st.rejoin_rejected),
             ("rejoin_ships", st.rejoin_ships),
             ("rejoin_ship_bytes", st.rejoin_ship_bytes),
+            ("speculative_launches", self.core.speculative_launches.load(Ordering::Relaxed)),
+            ("speculative_wins", self.core.speculative_wins.load(Ordering::Relaxed)),
+            ("deadline_kills", self.core.deadline_kills.load(Ordering::Relaxed)),
+            ("corrupt_frames_detected", self.core.corrupt_frames.load(Ordering::Relaxed)),
+            ("exhausted_fallbacks", self.core.exhausted_fallbacks.load(Ordering::Relaxed)),
         ]
     }
 
@@ -1954,5 +2702,121 @@ mod tests {
             }
         }
         assert!(map.is_empty());
+    }
+
+    /// A core with no workers and no threads: enough for the pure lease /
+    /// median / policy bookkeeping, which never touches the pool.
+    fn bare_core(opts: ClusterOptions) -> ClusterCore {
+        ClusterCore {
+            source: WorkerSource::Fork { cmd: PathBuf::from("unused") },
+            opts,
+            state: Mutex::new(PoolState::default()),
+            cv: Condvar::new(),
+            payloads: Mutex::new(HashMap::new()),
+            rejoin: Mutex::new(RejoinPolicy::new(Duration::ZERO)),
+            leases: Mutex::new(HashMap::new()),
+            durations: Mutex::new(HashMap::new()),
+            corrupt_frames: Arc::new(AtomicU64::new(0)),
+            chaos_state: ChaosState::new(),
+            speculative_launches: AtomicU64::new(0),
+            speculative_wins: AtomicU64::new(0),
+            deadline_kills: AtomicU64::new(0),
+            exhausted_fallbacks: AtomicU64::new(0),
+            next_task: AtomicU64::new(1),
+            next_serial: AtomicU64::new(1),
+            local: NativeBackend,
+        }
+    }
+
+    fn bare_lease(kind: &'static str) -> Lease {
+        Lease {
+            started: Instant::now(),
+            kind,
+            holder_pid: None,
+            speculated: false,
+            killed: false,
+            result: None,
+            needs: Vec::new(),
+            task_line: Arc::new(String::new()),
+        }
+    }
+
+    #[test]
+    fn on_exhausted_parses_the_two_policies_and_rejects_garbage() {
+        assert_eq!(OnExhausted::parse("abort"), Some(OnExhausted::Abort));
+        assert_eq!(OnExhausted::parse("fallback"), Some(OnExhausted::Fallback));
+        assert_eq!(OnExhausted::parse("retry"), None);
+        assert_eq!(OnExhausted::default(), OnExhausted::Abort);
+    }
+
+    #[test]
+    fn task_exhausted_displays_the_id_attempts_and_cause() {
+        let e = TaskExhausted { task_id: 41, attempts: 3, last_err: "boom".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("41") && msg.contains('3') && msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn median_needs_samples_and_the_ring_stays_bounded() {
+        let core = bare_core(ClusterOptions {
+            speculate_factor: Some(3.0),
+            ..ClusterOptions::default()
+        });
+        assert!(core.tracks_leases());
+        assert_eq!(core.median_duration("cross_map"), None);
+        core.record_duration("cross_map", 1.0);
+        core.record_duration("cross_map", 2.0);
+        assert_eq!(core.median_duration("cross_map"), None, "under MEDIAN_MIN_SAMPLES");
+        core.record_duration("cross_map", 3.0);
+        assert_eq!(core.median_duration("cross_map"), Some(2.0));
+        // flood the window with a new regime: the ring forgets the old one
+        for _ in 0..DURATION_WINDOW + 8 {
+            core.record_duration("cross_map", 10.0);
+        }
+        assert_eq!(core.lock_durations().get("cross_map").unwrap().len(), DURATION_WINDOW);
+        assert_eq!(core.median_duration("cross_map"), Some(10.0));
+        // kinds are independent
+        assert_eq!(core.median_duration("shard_chunk"), None);
+    }
+
+    #[test]
+    fn durations_are_not_tracked_with_the_knobs_off() {
+        let core = bare_core(ClusterOptions::default());
+        assert!(!core.tracks_leases());
+        core.record_duration("cross_map", 1.0);
+        assert!(core.lock_durations().is_empty(), "knobs off must mean zero bookkeeping");
+    }
+
+    #[test]
+    fn take_lease_result_only_collects_a_committed_win() {
+        let core = bare_core(ClusterOptions {
+            task_deadline: Some(Duration::from_secs(300)),
+            ..ClusterOptions::default()
+        });
+        core.lock_leases().insert(7, bare_lease("cross_map"));
+        // no result committed: the lease must stay (the primary still owns
+        // the task and will finish_lease it itself)
+        assert!(core.take_lease_result(7).is_none());
+        assert!(core.lock_leases().contains_key(&7));
+        // commit a speculative win, then collect it exactly once
+        core.lock_leases().get_mut(&7).unwrap().result = Some(Json::Num(1.0));
+        assert!(core.take_lease_result(7).is_some());
+        assert!(core.lock_leases().is_empty(), "collection removes the lease");
+        assert!(core.take_lease_result(7).is_none());
+    }
+
+    #[test]
+    fn deadline_scan_kills_once_and_arms_speculation_once() {
+        let core = Arc::new(bare_core(ClusterOptions {
+            task_deadline: Some(Duration::ZERO), // everything is overdue
+            ..ClusterOptions::default()
+        }));
+        core.lock_leases().insert(1, bare_lease("cross_map"));
+        core.scan_leases();
+        assert_eq!(core.deadline_kills.load(Ordering::Relaxed), 1);
+        assert!(core.lock_leases().get(&1).unwrap().killed);
+        // a second scan must not re-kill (no double-requeue pressure)
+        core.scan_leases();
+        assert_eq!(core.deadline_kills.load(Ordering::Relaxed), 1);
     }
 }

@@ -297,6 +297,7 @@ fn run_a1(
             sim_repair_ship_bytes: 0,
             sim_rejoin_ship_s: 0.0,
             sim_rejoin_ship_bytes: 0,
+            sim_speculative_task_s: 0.0,
             topology: "single-thread".to_string(),
         },
     }

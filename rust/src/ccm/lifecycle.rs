@@ -144,6 +144,15 @@ pub fn workers_at_from_env() -> Option<Vec<String>> {
 /// a dead address is retried at least this often.
 pub const DEFAULT_REJOIN_CAP: Duration = Duration::from_secs(60);
 
+/// Pure exponential-backoff step shared by the rejoin redial schedule
+/// and the cluster scheduler's task-retry loop: the delay after
+/// `attempt` consecutive failures is `base * 2^attempt`, saturating and
+/// capped at `cap`. The shift is clamped so large attempt counts cannot
+/// overflow the multiplier.
+pub fn exp_backoff(base: Duration, attempt: u32, cap: Duration) -> Duration {
+    base.saturating_mul(1u32 << attempt.min(16)).min(cap)
+}
+
 /// Redial state of one dead remote pool slot.
 #[derive(Clone, Debug)]
 enum RejoinSlot {
@@ -226,8 +235,7 @@ impl RejoinPolicy {
         let cap = self.cap;
         if let Some(RejoinSlot::Waiting { due, attempt }) = self.slots.get_mut(&slot) {
             *attempt += 1;
-            let delay = base.saturating_mul(1u32 << (*attempt).min(16)).min(cap);
-            *due = now + delay;
+            *due = now + exp_backoff(base, *attempt, cap);
         }
     }
 
@@ -322,6 +330,18 @@ mod tests {
     // ---- RejoinPolicy: clock-injected, no sockets, no sleeps ----
 
     const S: Duration = Duration::from_secs(1);
+
+    #[test]
+    fn exp_backoff_doubles_saturates_and_caps() {
+        let cap = Duration::from_secs(8);
+        assert_eq!(exp_backoff(S, 0, cap), S);
+        assert_eq!(exp_backoff(S, 1, cap), 2 * S);
+        assert_eq!(exp_backoff(S, 2, cap), 4 * S);
+        assert_eq!(exp_backoff(S, 3, cap), cap);
+        // huge attempt counts clamp the shift instead of overflowing
+        assert_eq!(exp_backoff(S, 500, cap), cap);
+        assert_eq!(exp_backoff(Duration::ZERO, 5, cap), Duration::ZERO);
+    }
 
     #[test]
     fn rejoin_policy_zero_base_is_disabled() {

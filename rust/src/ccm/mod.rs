@@ -30,6 +30,7 @@
 //! [`process::ProcessBackend`] name remains as a compatibility shim.
 
 pub mod backend;
+pub mod chaos;
 pub mod cluster;
 pub mod convergence;
 pub mod driver;
@@ -50,7 +51,7 @@ pub mod table;
 pub mod transport;
 
 pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
-pub use cluster::{ClusterBackend, ClusterOptions};
+pub use cluster::{ClusterBackend, ClusterOptions, OnExhausted, TaskExhausted};
 pub use driver::{Case, CaseReport, TablePolicy};
 pub use lifecycle::WorkerSource;
 pub use embedding::Embedding;

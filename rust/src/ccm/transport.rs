@@ -45,11 +45,28 @@
 //! compared in plain text on the wire: it is accident protection (a
 //! driver pointed at the wrong cluster, a stray scanner hitting a listen
 //! port), not cryptography — run real deployments on a trusted network.
+//!
+//! # Checksummed frames (v4)
+//!
+//! On connections negotiated at v4+, every post-handshake frame carries a
+//! trailing `#` + 16-lowercase-hex FNV-1a checksum of the payload bytes
+//! ([`append_checksum`] / [`verify_frame`], applied by wrapping the raw
+//! transport in a [`ChecksumTransport`] once the hello/`hello_ack`
+//! exchange settles the version). A frame whose suffix is missing,
+//! malformed, or disagrees with the payload is *never* parsed as a
+//! message: the receiver surfaces `InvalidData`, counts it (the driver's
+//! `corrupt_frames_detected` counter), and kills the connection, which
+//! flows into the existing death → requeue/repair/rejoin machinery. The
+//! handshake itself is un-checksummed on every version (the first frame
+//! arrives before the version is known), and v≤3 peers never see or are
+//! asked for checksums.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::Path;
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
@@ -58,8 +75,8 @@ use crate::util::json::Json;
 /// message change. v2 added the `evict` message and the capability-carrying
 /// hello (`transport`, `caps` fields); v3 added the authenticated
 /// handshake (`auth` in hello, `hello_ack`, `reject`) and the keepalive
-/// `ping`/`pong` pair.
-pub const WIRE_VERSION: u64 = 3;
+/// `ping`/`pong` pair; v4 added the per-frame FNV-1a checksum suffix.
+pub const WIRE_VERSION: u64 = 4;
 
 /// Oldest protocol version the driver still accepts. Older workers are
 /// served without newer-version traffic (no `evict`/`hello_ack`/`ping`).
@@ -71,6 +88,20 @@ pub const EVICT_WIRE_VERSION: u64 = 2;
 /// First wire version that understands `hello_ack`, `reject`, and the
 /// keepalive `ping`/`pong` pair.
 pub const KEEPALIVE_WIRE_VERSION: u64 = 3;
+
+/// First wire version whose post-handshake frames carry the trailing
+/// FNV-1a checksum suffix. Connections negotiated below this run exactly
+/// the v3 byte streams (pinned by the doctored-handshake test).
+pub const CHECKSUM_WIRE_VERSION: u64 = 4;
+
+/// Per-write deadline on every TCP connection. A *frozen* peer (SIGSTOP,
+/// livelocked host) keeps its sockets open while its kernel buffers fill;
+/// without a send deadline a large broadcast ship to it would block the
+/// sender forever — a wedge the recv-side lease polling can never see.
+/// With it, the stalled write errors out and the normal death → requeue
+/// machinery takes over. Generous on purpose: a healthy peer drains even
+/// multi-megabyte ships in well under a second.
+pub const TCP_WRITE_DEADLINE: Duration = Duration::from_secs(30);
 
 /// How long the driver waits for a spawned TCP worker to dial back before
 /// declaring the spawn failed (keeps a broken worker from hanging CI).
@@ -181,6 +212,128 @@ fn read_line_opt<R: BufRead>(r: &mut R) -> std::io::Result<Option<String>> {
     }
 }
 
+/// Length of the v4 frame suffix: `#` plus 16 lowercase hex digits.
+pub const FRAME_CHECKSUM_LEN: usize = 17;
+
+/// Byte-wise FNV-1a over the frame payload. The per-byte step
+/// `h → (h ^ b) * prime` multiplies by an odd (hence invertible mod 2^64)
+/// prime, so two payloads differing in a single byte at the same position
+/// can never collide — the property test in `tests/prop_wire_checksum.rs`
+/// leans on exactly this.
+pub fn frame_checksum(payload: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Frame a payload for a v4 connection: payload + `#` + 16-hex checksum.
+pub fn append_checksum(line: &str) -> String {
+    format!("{line}#{:016x}", frame_checksum(line.as_bytes()))
+}
+
+/// Validate a v4 frame and return its payload. The suffix is parsed
+/// strictly — exactly [`FRAME_CHECKSUM_LEN`] trailing bytes, a literal
+/// `#`, then 16 *lowercase* hex digits (no signs, no uppercase, no
+/// shorter forms a lenient integer parse would accept) — so a flipped
+/// byte anywhere in the frame can never still read as a valid message.
+pub fn verify_frame(frame: &str) -> Result<&str, String> {
+    let frame = frame.trim_end_matches(['\r', '\n']);
+    let bytes = frame.as_bytes();
+    if bytes.len() < FRAME_CHECKSUM_LEN + 1 {
+        return Err(format!("frame too short for a checksum suffix ({} bytes)", bytes.len()));
+    }
+    let split = bytes.len() - FRAME_CHECKSUM_LEN;
+    if bytes[split] != b'#' {
+        return Err("frame carries no checksum suffix".into());
+    }
+    let mut want: u64 = 0;
+    for &c in &bytes[split + 1..] {
+        let nibble = match c {
+            b'0'..=b'9' => c - b'0',
+            b'a'..=b'f' => c - b'a' + 10,
+            _ => return Err("checksum suffix is not 16 lowercase hex digits".into()),
+        };
+        want = (want << 4) | u64::from(nibble);
+    }
+    // `split` indexes the ascii '#', so it is a valid char boundary even
+    // if corruption put multi-byte sequences elsewhere in the frame
+    let body = &frame[..split];
+    let got = frame_checksum(body.as_bytes());
+    if got != want {
+        return Err(format!("checksum mismatch: frame says {want:016x}, payload hashes to {got:016x}"));
+    }
+    Ok(body)
+}
+
+/// v4 framing layer: checksums every outbound line and verifies every
+/// inbound one, surfacing corruption as `InvalidData` (optionally tallied
+/// into the driver's `corrupt_frames_detected` counter). Wrapped
+/// *outermost* — around any chaos-injection layer — so injected
+/// corruption is seen by the peer's verify, not silently re-checksummed.
+pub struct ChecksumTransport {
+    inner: Box<dyn Transport>,
+    tally: Option<Arc<AtomicU64>>,
+}
+
+impl ChecksumTransport {
+    /// Wrap `inner`; `tally` (when given) counts detected corrupt frames.
+    pub fn new(inner: Box<dyn Transport>, tally: Option<Arc<AtomicU64>>) -> ChecksumTransport {
+        ChecksumTransport { inner, tally }
+    }
+
+    fn count_corrupt(&self) {
+        if let Some(t) = &self.tally {
+            t.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Transport for ChecksumTransport {
+    fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.inner.send_line(&append_checksum(line))
+    }
+
+    fn recv_line(&mut self) -> std::io::Result<Option<String>> {
+        match self.inner.recv_line() {
+            Ok(None) => Ok(None),
+            Ok(Some(frame)) => {
+                if frame.trim().is_empty() {
+                    return Ok(Some(frame)); // blank keepalive lines carry nothing to protect
+                }
+                match verify_frame(&frame) {
+                    Ok(body) => Ok(Some(body.to_string())),
+                    Err(why) => {
+                        self.count_corrupt();
+                        Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("corrupt frame: {why}"),
+                        ))
+                    }
+                }
+            }
+            Err(e) => {
+                // invalid UTF-8 on the wire is corruption too (the byte
+                // layer refuses to even hand the frame up)
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    self.count_corrupt();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn kind(&self) -> TransportKind {
+        self.inner.kind()
+    }
+
+    fn set_recv_deadline(&mut self, timeout: Option<Duration>) -> std::io::Result<bool> {
+        self.inner.set_recv_deadline(timeout)
+    }
+}
+
 /// Fork + stdio transport (driver side): the worker's stdin/stdout pipes.
 pub struct PipeTransport {
     stdin: ChildStdin,
@@ -206,17 +359,33 @@ impl Transport for PipeTransport {
 /// TCP transport (either side): a connected stream plus a buffered reader
 /// over its clone. `TCP_NODELAY` is set — the protocol is small
 /// request/response lines, exactly the shape Nagle's algorithm penalizes.
+///
+/// `recv_line` accumulates into a persistent partial-line buffer rather
+/// than using `BufRead::read_line`: a recv-deadline timeout that lands
+/// mid-frame must *keep* the bytes already read so the next call resumes
+/// the same line — `read_line` drops them on `Err`, which would shear a
+/// frame in half and (on v4 connections) read as phantom corruption.
 pub struct TcpTransport {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    partial: Vec<u8>,
 }
 
 impl TcpTransport {
     /// Wrap an already-connected stream (used by both driver and worker).
     pub fn from_stream(stream: TcpStream) -> std::io::Result<TcpTransport> {
         stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(TCP_WRITE_DEADLINE))?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(TcpTransport { writer: stream, reader })
+        Ok(TcpTransport { writer: stream, reader, partial: Vec::new() })
+    }
+
+    fn take_line(&mut self, end: usize) -> std::io::Result<Option<String>> {
+        let rest = self.partial.split_off(end);
+        let line = std::mem::replace(&mut self.partial, rest);
+        String::from_utf8(line).map(Some).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("non-UTF-8 frame: {e}"))
+        })
     }
 }
 
@@ -228,7 +397,29 @@ impl Transport for TcpTransport {
     }
 
     fn recv_line(&mut self) -> std::io::Result<Option<String>> {
-        read_line_opt(&mut self.reader)
+        loop {
+            if let Some(pos) = self.partial.iter().position(|&b| b == b'\n') {
+                return self.take_line(pos + 1);
+            }
+            let taken = {
+                let buf = self.reader.fill_buf()?; // timeout Err leaves `partial` intact
+                let take = match buf.iter().position(|&b| b == b'\n') {
+                    Some(p) => p + 1,
+                    None => buf.len(),
+                };
+                self.partial.extend_from_slice(&buf[..take]);
+                take
+            };
+            self.reader.consume(taken);
+            if taken == 0 {
+                // EOF: a trailing unterminated line still surfaces
+                if self.partial.is_empty() {
+                    return Ok(None);
+                }
+                let end = self.partial.len();
+                return self.take_line(end);
+            }
+        }
     }
 
     fn kind(&self) -> TransportKind {
@@ -875,6 +1066,104 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         let again = bind_reuseaddr(&addr.to_string()).expect("re-bind on the same port");
         assert_eq!(again.local_addr().unwrap().port(), addr.port());
+    }
+
+    #[test]
+    fn checksum_frames_round_trip_and_reject_tampering() {
+        for payload in [r#"{"type":"task","id":7}"#, "", "π ≠ 3", r#"{"nested":{"a":[1,2]}}"#] {
+            let frame = append_checksum(payload);
+            assert_eq!(verify_frame(&frame).unwrap(), payload, "round trip");
+            assert_eq!(verify_frame(&format!("{frame}\n")).unwrap(), payload, "newline trimmed");
+        }
+        // no suffix at all
+        assert!(verify_frame(r#"{"type":"task"}"#).is_err());
+        // suffix present but the body changed
+        let frame = append_checksum(r#"{"type":"task","id":7}"#);
+        let tampered = frame.replacen('7', "8", 1);
+        assert!(verify_frame(&tampered).is_err());
+    }
+
+    #[test]
+    fn checksum_suffix_parse_is_strict() {
+        // a lenient integer parse would accept "+abc..." or uppercase hex
+        // and could equate them with the honest value — the strict parser
+        // must refuse anything but exactly 16 lowercase hex digits
+        let frame = append_checksum("payload");
+        let n = frame.len();
+        let mut plus = frame.clone();
+        plus.replace_range(n - 16..n - 15, "+");
+        assert!(verify_frame(&plus).is_err(), "sign characters are not hex");
+        let upper = format!("{}{}", &frame[..n - 16], frame[n - 16..].to_uppercase());
+        if upper != frame {
+            assert!(verify_frame(&upper).is_err(), "uppercase hex is refused");
+        }
+    }
+
+    #[test]
+    fn checksum_transport_round_trips_and_counts_corruption() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let raw = TcpTransport::from_stream(TcpStream::connect(addr).unwrap()).unwrap();
+            let mut t = ChecksumTransport::new(Box::new(raw), None);
+            t.send_line(r#"{"type":"ping"}"#).unwrap();
+            // a clean checksummed reply parses...
+            let ok = recv_json(&mut t).unwrap();
+            assert_eq!(ok.get("type").and_then(Json::as_str), Some("pong"));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let tally = Arc::new(AtomicU64::new(0));
+        let raw = TcpTransport::from_stream(stream).unwrap();
+        let mut server = ChecksumTransport::new(Box::new(raw), Some(tally.clone()));
+        let msg = recv_json(&mut server).unwrap();
+        assert_eq!(msg.get("type").and_then(Json::as_str), Some("ping"));
+        server.send_line(r#"{"type":"pong"}"#).unwrap();
+        client.join().unwrap();
+        assert_eq!(tally.load(Ordering::Relaxed), 0, "clean traffic counts nothing");
+
+        // ...while a bare (un-checksummed) frame is corruption, tallied
+        let listener2 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr2 = listener2.local_addr().unwrap();
+        let bare = std::thread::spawn(move || {
+            let mut raw = TcpTransport::from_stream(TcpStream::connect(addr2).unwrap()).unwrap();
+            raw.send_line(r#"{"type":"ping"}"#).unwrap();
+        });
+        let (stream2, _) = listener2.accept().unwrap();
+        let tally2 = Arc::new(AtomicU64::new(0));
+        let raw2 = TcpTransport::from_stream(stream2).unwrap();
+        let mut server2 = ChecksumTransport::new(Box::new(raw2), Some(tally2.clone()));
+        let err = server2.recv_line().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally2.load(Ordering::Relaxed), 1, "corrupt frame tallied");
+        bare.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_keeps_partial_line_across_timeouts() {
+        // a deadline that fires mid-frame must not shear the frame: the
+        // next recv_line picks the same line back up and completes it
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"{\"type\":\"res").unwrap();
+            stream.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(250));
+            stream.write_all(b"ult\",\"id\":7}\n").unwrap();
+            stream.flush().unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        server.set_recv_deadline(Some(Duration::from_millis(60))).unwrap();
+        let err = server.recv_line().unwrap_err();
+        assert!(
+            matches!(err.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut),
+            "mid-frame deadline surfaces as a timeout: {err:?}"
+        );
+        server.set_recv_deadline(None).unwrap();
+        let line = server.recv_line().unwrap().unwrap();
+        assert_eq!(line.trim_end(), r#"{"type":"result","id":7}"#, "frame reassembled");
+        sender.join().unwrap();
     }
 
     #[test]

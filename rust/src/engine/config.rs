@@ -92,6 +92,15 @@ pub struct EngineConfig {
     /// worker always starts empty). Rejoins beyond `sim_worker_failures`
     /// have no dead node to revive and price nothing.
     pub sim_worker_rejoins: usize,
+    /// Speculative task duplicates to price in the DES (the cluster
+    /// runtime's `--speculate-factor` straggler defense): the `k`
+    /// longest tasks in the log are assumed to straggle and be
+    /// speculatively re-executed, so each contributes its full duration
+    /// a second time — reported as `sim_speculative_task_s`, its own
+    /// counter beside the makespan (speculation burns spare capacity; it
+    /// does not serialize the critical path). Clamped to the task count.
+    /// 0 = no speculation priced.
+    pub sim_speculative_tasks: usize,
     /// OS threads actually executing tasks (defaults to the machine's
     /// available parallelism; results never depend on this).
     pub real_threads: usize,
@@ -118,6 +127,7 @@ impl EngineConfig {
             broadcast_replicas: 1,
             sim_worker_failures: 0,
             sim_worker_rejoins: 0,
+            sim_speculative_tasks: 0,
             real_threads,
             max_task_attempts: 4,
         }
@@ -135,6 +145,11 @@ impl EngineConfig {
 
     pub fn with_sim_worker_rejoins(mut self, n: usize) -> Self {
         self.sim_worker_rejoins = n;
+        self
+    }
+
+    pub fn with_sim_speculative_tasks(mut self, n: usize) -> Self {
+        self.sim_speculative_tasks = n;
         self
     }
 

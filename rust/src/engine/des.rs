@@ -225,6 +225,20 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         }
     }
 
+    // Speculative re-execution pricing: the k longest tasks are assumed
+    // to straggle and be speculatively duplicated (the real pool's
+    // `--speculate-factor` arms on exactly those tasks), so each is paid
+    // for twice — the duplicate burns spare capacity in parallel with
+    // the straggler, so the cost is its own counter, not makespan time.
+    let mut speculative_task_s = 0.0f64;
+    if config.sim_speculative_tasks > 0 {
+        let mut durations: Vec<f64> =
+            tasks_by_job.values().flatten().map(|&(_, d)| d).collect();
+        durations.sort_unstable_by(f64::total_cmp);
+        let k = config.sim_speculative_tasks.min(durations.len());
+        speculative_task_s = durations[durations.len() - k..].iter().sum();
+    }
+
     ExecutionReport {
         measured_wall_s: log.wallclock_span(),
         total_task_s: log.total_task_seconds(),
@@ -236,6 +250,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_repair_ship_bytes: repair_ship_bytes,
         sim_rejoin_ship_s: rejoin_ship_s,
         sim_rejoin_ship_bytes: rejoin_ship_bytes,
+        sim_speculative_task_s: speculative_task_s,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),

@@ -177,6 +177,13 @@ pub struct ExecutionReport {
     /// Bytes shipped by the simulated rejoin traffic; the real
     /// counterpart is `ClusterBackend::rejoin_ship_bytes`.
     pub sim_rejoin_ship_bytes: u64,
+    /// Seconds of duplicated compute from simulated speculative task
+    /// re-execution (`EngineConfig::sim_speculative_tasks` — the k
+    /// longest tasks each run twice). Burned in parallel with the
+    /// stragglers, so its own counter rather than makespan time; the
+    /// real counterparts are `ClusterBackend::speculative_launches` /
+    /// `speculative_wins`.
+    pub sim_speculative_task_s: f64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -194,6 +201,7 @@ impl ExecutionReport {
             ("sim_repair_ship_bytes", Json::Num(self.sim_repair_ship_bytes as f64)),
             ("sim_rejoin_ship_s", Json::Num(self.sim_rejoin_ship_s)),
             ("sim_rejoin_ship_bytes", Json::Num(self.sim_rejoin_ship_bytes as f64)),
+            ("sim_speculative_task_s", Json::Num(self.sim_speculative_task_s)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

@@ -19,7 +19,8 @@ use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
+use parccm::ccm::chaos::chaos_from_env;
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, OnExhausted};
 use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
 use parccm::ccm::lifecycle::{parse_workers_at, workers_at_from_env};
 use parccm::ccm::params::{CcmParams, Scenario};
@@ -108,6 +109,23 @@ fn print_help() {
            --replicas R         keep each broadcast resident on R workers so a\n\
                                 dead worker's tasks requeue with zero re-ship\n\
                                 (default 1; clamped to the pool width)\n\
+           --task-deadline-secs S\n\
+                                kill + requeue any cluster task still running\n\
+                                after S seconds (default: off)\n\
+           --speculate-factor X launch a speculative duplicate of any task\n\
+                                running longer than X times the running median\n\
+                                for its kind; first result wins (default: off)\n\
+           --on-exhausted abort|fallback\n\
+                                when a task fails all its attempts: abort the\n\
+                                run (default), or fall back to the in-process\n\
+                                native backend for that task (bit-identical\n\
+                                results, counted as exhausted_fallbacks)\n\
+           PARCCM_CHAOS=seed:spec\n\
+                                deterministic fault injection on every cluster\n\
+                                connection (spec keys: delay=N, delay_ms=M,\n\
+                                drop=N, trunc=N, corrupt=N, corrupt_send=N,\n\
+                                corrupt_recv=N, corrupt_once=N); corrupt frames\n\
+                                are caught by the v4 wire checksum\n\
            --artifacts DIR      artifact directory (default: artifacts)\n\
            --table full|trunc   distance-table layout for A4/A5 (default: trunc,\n\
                                 the O(n*P) truncated broadcast; bit-identical skills)\n\
@@ -223,6 +241,44 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                      (forked workers are respawned in place); ignoring it"
                 );
             }
+            // straggler defense: a hard per-task deadline and/or speculative
+            // duplicates keyed to the running median duration per task kind
+            let task_deadline = args.get("task-deadline-secs").and_then(|_| {
+                let secs = args.get_f64("task-deadline-secs", 0.0);
+                (secs > 0.0).then(|| std::time::Duration::from_secs_f64(secs))
+            });
+            let speculate_factor = args.get("speculate-factor").and_then(|_| {
+                let x = args.get_f64("speculate-factor", 0.0);
+                (x > 0.0).then_some(x)
+            });
+            let on_exhausted = match args.get("on-exhausted") {
+                None => OnExhausted::Abort,
+                Some(p) => match OnExhausted::parse(p) {
+                    Some(o) => o,
+                    None => {
+                        eprintln!(
+                            "[parccm] FATAL: unknown --on-exhausted '{p}' \
+                             (expected abort|fallback)"
+                        );
+                        std::process::exit(2);
+                    }
+                },
+            };
+            // a malformed chaos spec must never silently run chaos-free:
+            // the whole point of PARCCM_CHAOS is a reproducible fault plan
+            let chaos = match chaos_from_env() {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("[parccm] FATAL: {e}");
+                    std::process::exit(2);
+                }
+            };
+            if let Some((seed, _)) = &chaos {
+                eprintln!(
+                    "[parccm] chaos injection armed on driver-side connections \
+                     (PARCCM_CHAOS, seed {seed})"
+                );
+            }
             let remote = !workers_at.is_empty();
             let opts = ClusterOptions {
                 transport,
@@ -232,6 +288,10 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
                 auth_token,
                 keepalive,
                 rejoin_backoff,
+                task_deadline,
+                speculate_factor,
+                on_exhausted,
+                chaos,
                 ..ClusterOptions::default()
             };
             let spawned = std::env::current_exe()
@@ -609,7 +669,8 @@ fn cmd_events(args: &Args) -> ExitCode {
             .with_default_parallelism(scenario.partitions)
             .with_broadcast_replicas(args.get_usize("replicas", 1))
             .with_sim_worker_failures(args.get_usize("sim-failures", 0))
-            .with_sim_worker_rejoins(args.get_usize("sim-rejoins", 0)),
+            .with_sim_worker_rejoins(args.get_usize("sim-rejoins", 0))
+            .with_sim_speculative_tasks(args.get_usize("sim-speculative", 0)),
     );
     let problem = parccm::ccm::pipeline::CcmProblem::new(&y, &x, 2, 1, 0.0);
     let n = problem.emb.n;
@@ -654,13 +715,14 @@ fn cmd_events(args: &Args) -> ExitCode {
     ] {
         let rep = ctx.report_for(deploy);
         println!(
-            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s",
+            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s  spec {:.4}s",
             rep.topology,
             rep.sim_makespan_s,
             rep.sim_utilization * 100.0,
             rep.sim_broadcast_ship_s,
             rep.sim_repair_ship_s,
-            rep.sim_rejoin_ship_s
+            rep.sim_rejoin_ship_s,
+            rep.sim_speculative_task_s
         );
     }
     ExitCode::SUCCESS

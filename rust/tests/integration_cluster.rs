@@ -9,8 +9,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::chaos::ChaosProfile;
 use parccm::ccm::cluster::{
-    problem_wire_id, ClusterBackend, ClusterOptions, TEST_HELLO_V_ENV,
+    problem_wire_id, ClusterBackend, ClusterOptions, OnExhausted, TEST_HELLO_V_ENV,
 };
 use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
@@ -330,6 +331,125 @@ fn legacy_v1_worker_is_served_without_evict_traffic() {
     pb.evict_broadcasts(&[pid]);
     assert_eq!(pb.cached_payloads(), 0, "driver-side payload must be released");
     assert_eq!(pb.evictions(), 0, "a v1 worker must never see an evict message");
+}
+
+#[test]
+fn doctored_v3_worker_runs_the_v3_byte_stream_unchanged() {
+    // the compatibility pin for the v4 checksum rollout: a worker
+    // advertising v3 negotiates a connection WITHOUT checksum suffixes —
+    // bit-identical results, zero corruption counted, zero respawns — so
+    // pre-v4 peers are provably unaffected by the new framing. (A v4
+    // driver talking to a v4 worker is covered by every other test in
+    // this file; this one pins the downgrade path.)
+    let _guard = Watchdog::arm("doctored_v3_worker", TEST_TIMEOUT);
+    for kind in [TransportKind::Pipe, TransportKind::Tcp] {
+        let pb = Arc::new(
+            ClusterBackend::with_options(
+                env!("CARGO_BIN_EXE_parccm"),
+                ClusterOptions {
+                    transport: kind,
+                    workers: 2,
+                    replicas: 1,
+                    worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "3".to_string())],
+                    ..ClusterOptions::default()
+                },
+            )
+            .expect("a v3 worker must be accepted"),
+        );
+        let (x, y) = series(250);
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let samples = draw_samples(&Rng::new(13), CcmParams::new(2, 1, 70), problem.emb.n, 3);
+        let mut arena_p = TaskArena::new();
+        let mut arena_n = TaskArena::new();
+        for s in &samples {
+            let input = problem.input_for(s);
+            let rho = pb.cross_map_into(&input, &mut arena_p);
+            let want = NativeBackend.cross_map_into(&input, &mut arena_n);
+            assert_eq!(rho.to_bits(), want.to_bits(), "{kind:?}: v3 stream must stay exact");
+            assert_eq!(arena_p.preds, arena_n.preds);
+        }
+        assert_eq!(
+            pb.corrupt_frames_detected(),
+            0,
+            "{kind:?}: an un-checksummed v3 stream must never read as corrupt"
+        );
+        assert_eq!(pb.respawns(), 0, "{kind:?}: no connection may have died");
+        assert!(pb.evictions() >= 1, "{kind:?}: v3 still understands evict");
+    }
+}
+
+/// A pool whose driver-side chaos corrupts EVERY sent frame: each
+/// attempt's first post-handshake frame is mangled, the worker's checksum
+/// verify kills the connection, and the task can never complete over the
+/// wire — the deterministic way to exhaust [`MAX_TASK_ATTEMPTS`].
+fn always_corrupting_pool(on_exhausted: OnExhausted) -> Arc<ClusterBackend> {
+    Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                transport: TransportKind::Pipe,
+                workers: 1,
+                replicas: 1,
+                on_exhausted,
+                chaos: Some((11, ChaosProfile::parse("corrupt_send=1").expect("profile"))),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("the handshake is chaos-exempt, so the spawn must succeed"),
+    )
+}
+
+#[test]
+fn exhausted_task_aborts_with_a_typed_actionable_message() {
+    let _guard = Watchdog::arm("exhausted_abort", TEST_TIMEOUT);
+    let pb = always_corrupting_pool(OnExhausted::Abort);
+    let (x, y) = series(200);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(17), CcmParams::new(2, 1, 60), problem.emb.n, 1);
+    let input = problem.input_for(&samples[0]);
+    let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut arena = TaskArena::new();
+        pb.cross_map_into(&input, &mut arena)
+    }))
+    .expect_err("every attempt is corrupted, so the default policy must abort");
+    let msg = panicked
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panicked.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("attempts"), "must say the retries were spent: {msg}");
+    assert!(
+        msg.contains("--on-exhausted fallback"),
+        "must point at the degradation knob: {msg}"
+    );
+    assert_eq!(pb.exhausted_fallbacks(), 0, "abort must not silently fall back");
+}
+
+#[test]
+fn exhausted_task_falls_back_to_native_bit_identically() {
+    let _guard = Watchdog::arm("exhausted_fallback", TEST_TIMEOUT);
+    let pb = always_corrupting_pool(OnExhausted::Fallback);
+    let (x, y) = series(200);
+    let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+    let samples = draw_samples(&Rng::new(17), CcmParams::new(2, 1, 60), problem.emb.n, 2);
+    let mut arena_p = TaskArena::new();
+    let mut arena_n = TaskArena::new();
+    for s in &samples {
+        let input = problem.input_for(s);
+        let rho = pb.cross_map_into(&input, &mut arena_p);
+        let want = NativeBackend.cross_map_into(&input, &mut arena_n);
+        assert_eq!(
+            rho.to_bits(),
+            want.to_bits(),
+            "the in-process fallback must be bit-identical to native"
+        );
+        assert_eq!(arena_p.preds, arena_n.preds);
+    }
+    assert!(
+        pb.exhausted_fallbacks() >= 1,
+        "every task exhausts its attempts here, so the fallback must be counted"
+    );
+    assert!(pb.respawns() >= 1, "each corrupted attempt kills and respawns the worker");
 }
 
 #[test]

@@ -25,6 +25,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::chaos::ChaosProfile;
 use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_IGNORE_PING_ENV};
 use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
@@ -51,6 +52,19 @@ fn kill9(pid: u32) {
         .status()
         .expect("running kill");
     assert!(status.success(), "kill -9 {pid}");
+}
+
+/// Wedge (not kill) a worker: SIGSTOP freezes the process but keeps its
+/// sockets open, so the driver sees a healthy connection that simply
+/// never answers — the straggler shape only a deadline/speculation
+/// defense can recover from (the ListenWorker Drop's SIGKILL still
+/// reaps a stopped process).
+fn sigstop(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-STOP", &pid.to_string()])
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill -STOP {pid}");
 }
 
 /// A pre-started listen-mode worker owned by the test; its ephemeral
@@ -592,6 +606,74 @@ fn keepalive_discarded_worker_rejoins_without_duplicate_entries() {
     let ships = remote.broadcast_ships();
     assert!((1..=2).contains(&ships), "factor 2 on 2 workers: no third copy ({ships})");
     assert_eq!(remote.rebroadcasts(), 0);
+}
+
+#[test]
+fn seeded_chaos_with_wedged_worker_speculates_and_stays_bit_identical() {
+    // the PR's acceptance scenario: a seeded chaos profile (frame delays
+    // + exactly one corrupted frame) on every driver-side connection, one
+    // worker SIGSTOPped before the grid — wedged, not dead: its sockets
+    // stay open, so neither an exchange error nor the keepalive prober
+    // (deliberately off here) can save its tasks. Only the lease scan's
+    // speculative re-execution can, and the dump must STILL be
+    // byte-identical to the in-process reference. No bare sleep gates any
+    // assertion: the grid returning is itself the sync point (it cannot
+    // complete unless speculation rescued the wedged worker's tasks), and
+    // the counters are checked after that barrier.
+    let _guard = Watchdog::arm("chaos_wedged_speculation", TEST_TIMEOUT);
+    let workers = [
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+    ];
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let reference = sharded_a4(&scenario, &y, &x, Arc::new(NativeBackend));
+
+    let remote = Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                replicas: 2,
+                workers_at: workers.iter().map(|w| w.addr.clone()).collect(),
+                // keepalive OFF: the wedged worker must be defeated by
+                // speculation, not discarded by the prober
+                keepalive: None,
+                speculate_factor: Some(4.0),
+                chaos: Some((
+                    7,
+                    ChaosProfile::parse("delay=6,delay_ms=2,corrupt_once=10")
+                        .expect("chaos profile"),
+                )),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("connecting the remote worker pool"),
+    );
+    assert_eq!(remote.num_workers(), 3);
+    sigstop(workers[0].pid());
+
+    let got = sharded_a4(&scenario, &y, &x, remote.clone());
+    assert_eq!(got, reference, "chaos + wedge grid must stay bit-identical");
+
+    assert!(
+        remote.speculative_launches() >= 1,
+        "the wedged worker's tasks can only finish via speculation \
+         (launches {}, wins {})",
+        remote.speculative_launches(),
+        remote.speculative_wins()
+    );
+    assert!(
+        remote.speculative_wins() >= 1,
+        "a speculative duplicate must have beaten the wedged primary"
+    );
+    assert!(
+        remote.corrupt_frames_detected() >= 1,
+        "the corrupt_once frame must be caught by the v4 checksum, got {}",
+        remote.corrupt_frames_detected()
+    );
+    assert_eq!(remote.respawns(), 0, "remote workers are never respawned");
+    assert_eq!(remote.deadline_kills(), 0, "no deadline was configured");
 }
 
 #[test]

@@ -76,14 +76,16 @@ def main():
         for label, cells in sorted(new_rows.items()):
             old_cells = old_rows.get(label)
             if old_cells is None:
-                print(f"note: {name} row '{label}' has no baseline (new row?)")
+                print(f"::warning::bench gate: {name} row '{label}' has no "
+                      f"baseline row — refresh bench-baselines/{name}")
                 continue
             for cell, new in sorted(cells.items()):
                 if not cell.endswith("_s"):
                     continue  # only wall-clock-like cells gate
                 old = old_cells.get(cell)
                 if old is None:
-                    print(f"note: {name} '{label}'.{cell} has no baseline")
+                    print(f"::warning::bench gate: {name} '{label}'.{cell} has "
+                          f"no baseline cell — refresh bench-baselines/{name}")
                     continue
                 checked += 1
                 if new > args.tolerance * old and new - old > args.floor_s:

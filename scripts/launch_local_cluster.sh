@@ -6,6 +6,7 @@
 # Usage:
 #   scripts/launch_local_cluster.sh [K] [PARCCM_BINARY]
 #   scripts/launch_local_cluster.sh restart IDX [PARCCM_BINARY]
+#   scripts/launch_local_cluster.sh wedge IDX
 #
 #   K              number of workers (default 3)
 #   IDX            0-based index into PARCCM_WORKERS of the worker to
@@ -13,6 +14,13 @@
 #                  PARCCM_WORKERS and WORKER_PIDS exported from a
 #                  previous launch; pair the driver with
 #                  --rejoin-backoff-secs so it redials the address)
+#   wedge IDX      SIGSTOP worker IDX (needs WORKER_PIDS): the process
+#                  freezes but its sockets stay open, so the driver sees a
+#                  healthy connection that never answers — the straggler
+#                  shape only --task-deadline-secs / --speculate-factor
+#                  can recover from (a kill would be detected as a death
+#                  and requeued immediately, which is a different fault).
+#                  Un-wedge with `kill -CONT pid`, or just kill the pid.
 #   PARCCM_BINARY  path to the parccm binary
 #                  (default rust/target/release/parccm)
 #
@@ -48,6 +56,16 @@ wait_for_addr() {
     done
     return 1
 }
+
+if [ "${1:-}" = "wedge" ]; then
+    IDX="${2:?usage: launch_local_cluster.sh wedge IDX}"
+    : "${WORKER_PIDS:?wedge mode needs WORKER_PIDS exported from a launch}"
+    read -r -a PIDS <<<"$WORKER_PIDS"
+    PID="${PIDS[$IDX]:?no recorded pid for worker index $IDX}"
+    kill -STOP "$PID"
+    echo "# worker $IDX: wedged (SIGSTOP) pid $PID — resume with: kill -CONT $PID" >&2
+    exit 0
+fi
 
 if [ "${1:-}" = "restart" ]; then
     IDX="${2:?usage: launch_local_cluster.sh restart IDX [BIN]}"
