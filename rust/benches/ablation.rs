@@ -16,7 +16,7 @@ mod common;
 use std::sync::Arc;
 
 use parccm::bench::report::{Row, TablePrinter};
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::engine::Deploy;
 
 fn main() {
@@ -33,8 +33,12 @@ fn main() {
         s.ls = vec![l];
         s.es = vec![2];
         s.taus = vec![1];
-        let brute = run_case(Case::A2, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
-        let tabled = run_case(Case::A4, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        let brute = RunSpec::new(Case::A2, &s, &y, &x)
+            .deploy(cluster.clone())
+            .run(Arc::clone(&backend));
+        let tabled = RunSpec::new(Case::A4, &s, &y, &x)
+            .deploy(cluster.clone())
+            .run(Arc::clone(&backend));
         t1.push(
             Row::new(format!("L={l}"))
                 .cell("brute_task_s", brute.report.total_task_s)
@@ -50,8 +54,12 @@ fn main() {
     let mut t2 = TablePrinter::new("Ablation 2 — async benefit vs cluster width (sim makespan s)");
     for (w, c) in [(1usize, 2usize), (2, 2), (5, 4), (10, 4)] {
         let deploy = Deploy::Cluster { workers: w, cores_per_worker: c };
-        let sync = run_case(Case::A4, &base, &y, &x, deploy.clone(), Arc::clone(&backend));
-        let asy = run_case(Case::A5, &base, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let sync = RunSpec::new(Case::A4, &base, &y, &x)
+            .deploy(deploy.clone())
+            .run(Arc::clone(&backend));
+        let asy = RunSpec::new(Case::A5, &base, &y, &x)
+            .deploy(deploy.clone())
+            .run(Arc::clone(&backend));
         t2.push(
             Row::new(format!("{w}x{c} ({} cores)", w * c))
                 .cell("sync_s", sync.report.sim_makespan_s)
@@ -70,7 +78,9 @@ fn main() {
     for parts in [2usize, 5, 10, 20, 40, 80] {
         let mut s = base.clone();
         s.partitions = parts;
-        let rep = run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend));
+        let rep = RunSpec::new(Case::A5, &s, &y, &x)
+            .deploy(cluster.clone())
+            .run(Arc::clone(&backend));
         t3.push(
             Row::new(format!("partitions={parts}"))
                 .cell("sim_s", rep.report.sim_makespan_s)
@@ -84,7 +94,7 @@ fn main() {
 
     // 4. broadcast ship accounting ---------------------------------------
     let mut t4 = TablePrinter::new("Ablation 4 — broadcast ship share (A5, 5x4)");
-    let rep = run_case(Case::A5, &base, &y, &x, cluster, Arc::clone(&backend));
+    let rep = RunSpec::new(Case::A5, &base, &y, &x).deploy(cluster).run(Arc::clone(&backend));
     t4.push(
         Row::new("baseline grid")
             .cell("sim_makespan_s", rep.report.sim_makespan_s)

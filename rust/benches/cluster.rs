@@ -10,18 +10,27 @@
 //! * straggler-defense overhead: the TCP round trip with the lease knobs
 //!   on (`--speculate-factor` + `--task-deadline-secs`) — the price of
 //!   per-task lease bookkeeping and deadline-bounded recv polling on a
-//!   healthy pool, with the defense counters recorded as cells.
+//!   healthy pool, with the defense counters recorded as cells;
+//! * result-ingress accounting: the same sharded A4 case under
+//!   `--reduce driver` (raw prediction rows come back) vs
+//!   `--reduce worker` (six-sum partials come back) — the wire-v5
+//!   shuffle-stage reduce this crate exists to demonstrate. The byte
+//!   cells are informational (only `_s` cells gate); the bench hard-
+//!   asserts worker-reduce ingress is strictly below driver-reduce.
 //!
 //! Run: `cargo bench --bench cluster [-- --tiny | --full]`
 //! Emits `BENCH_cluster.json` (and `results/BENCH_cluster.json`).
 
 mod common;
 
+use std::sync::Arc;
+
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
-use parccm::ccm::params::CcmParams;
+use parccm::ccm::driver::{Case, ReduceMode, RunSpec, TablePolicy};
+use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::subsample::draw_samples;
 use parccm::ccm::table::DistanceTable;
@@ -59,7 +68,7 @@ fn main() {
         let res = bencher.run(&format!("{} cross_map round-trip", kind.name()), || {
             pb.cross_map_into(&input, &mut arena)
         });
-        assert_eq!(pb.respawns(), 0, "bench must not hide worker churn");
+        assert_eq!(pb.run_counters().respawns, 0, "bench must not hide worker churn");
         rtt.push((kind, res.mean_s));
     }
     let pipe_s = rtt[0].1;
@@ -85,9 +94,9 @@ fn main() {
         }
         table.push(
             Row::new(format!("tcp_replicas_{replicas}"))
-                .cell("ship_bytes", pb.broadcast_ship_bytes() as f64)
-                .cell("ships", pb.broadcast_ships() as f64)
-                .cell("rebroadcasts", pb.rebroadcasts() as f64),
+                .cell("ship_bytes", pb.run_counters().broadcast_ship_bytes as f64)
+                .cell("ships", pb.run_counters().broadcast_ships as f64)
+                .cell("rebroadcasts", pb.run_counters().rebroadcasts as f64),
         );
     }
 
@@ -117,11 +126,50 @@ fn main() {
             Row::new("rtt_tcp_leases")
                 .cell("task_s", res.mean_s)
                 .cell("vs_pipe_x", res.mean_s / pipe_s.max(1e-12))
-                .cell("speculative_launches", pb.speculative_launches() as f64)
-                .cell("speculative_wins", pb.speculative_wins() as f64)
-                .cell("deadline_kills", pb.deadline_kills() as f64)
-                .cell("corrupt_frames_detected", pb.corrupt_frames_detected() as f64)
-                .cell("exhausted_fallbacks", pb.exhausted_fallbacks() as f64),
+                .cell("speculative_launches", pb.run_counters().speculative_launches as f64)
+                .cell("speculative_wins", pb.run_counters().speculative_wins as f64)
+                .cell("deadline_kills", pb.run_counters().deadline_kills as f64)
+                .cell("corrupt_frames_detected", pb.run_counters().corrupt_frames_detected as f64)
+                .cell("exhausted_fallbacks", pb.run_counters().exhausted_fallbacks as f64),
+        );
+    }
+
+    // -- result ingress: driver-side vs worker-side reduce ---------------
+    // one full sharded A4 case per reduce placement on a fresh 2-worker
+    // TCP pool; `ingress_bytes` is the driver-side tally of accepted
+    // result frames (PoolCounters::result_ingress_bytes). A single timed
+    // pass per mode keeps the counter an exact per-run figure.
+    {
+        let mut scenario = Scenario::smoke();
+        scenario.series_len = n;
+        scenario.ls = vec![n / 4];
+        scenario.r = 4;
+        let mut measured = Vec::new();
+        for (label, reduce) in [
+            ("ingress_driver_reduce", ReduceMode::Driver),
+            ("ingress_worker_reduce", ReduceMode::Worker),
+        ] {
+            let pb = Arc::new(spawn(TransportKind::Tcp, 2, 1));
+            let backend: Arc<dyn ComputeBackend> = pb.clone();
+            let t0 = std::time::Instant::now();
+            let rep = RunSpec::new(Case::A4, &scenario, &y, &x)
+                .policy(TablePolicy::TruncatedAuto)
+                .shards(2)
+                .reduce(reduce)
+                .run(backend);
+            let run_s = t0.elapsed().as_secs_f64();
+            assert_eq!(rep.skills.len(), scenario.combos().len() * scenario.r);
+            let bytes = pb.run_counters().result_ingress_bytes;
+            assert!(bytes > 0, "{label}: accepted result frames must be counted");
+            table.push(Row::new(label).cell("run_s", run_s).cell("ingress_bytes", bytes as f64));
+            measured.push(bytes);
+        }
+        assert!(
+            measured[1] < measured[0],
+            "worker-side reduce must pull fewer result bytes than driver-side \
+             (driver {} vs worker {})",
+            measured[0],
+            measured[1]
         );
     }
 

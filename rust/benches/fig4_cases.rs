@@ -19,7 +19,7 @@ use std::sync::Arc;
 use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
-use parccm::ccm::driver::{run_case_multi, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::engine::Deploy;
 use parccm::util::stats;
 
@@ -50,14 +50,8 @@ fn main() {
         for _ in 0..repeats {
             // one real execution, two DES topologies (exact — numerics are
             // deploy-independent)
-            let (_skills, reports) = run_case_multi(
-                case,
-                &scenario,
-                &y,
-                &x,
-                &[local.clone(), cluster.clone()],
-                Arc::clone(&backend),
-            );
+            let (_skills, reports) = RunSpec::new(case, &scenario, &y, &x)
+                .run_multi(&[local.clone(), cluster.clone()], Arc::clone(&backend));
             local_s.push(reports[0].sim_makespan_s);
             yarn_s.push(reports[1].sim_makespan_s);
             wall_s.push(reports[1].measured_wall_s);

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use parccm::baseline::{redm_ccm, RedmConfig};
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::engine::Deploy;
 
 fn main() {
@@ -53,7 +53,9 @@ fn main() {
             n
         });
         let a5 = Bencher::new().quiet(true).warmup(0).samples(repeats).run("a5", || {
-            run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend))
+            RunSpec::new(Case::A5, &s, &y, &x)
+                .deploy(cluster.clone())
+                .run(Arc::clone(&backend))
                 .report
                 .sim_makespan_s
         });
@@ -62,7 +64,9 @@ fn main() {
         let mut sim = Vec::new();
         for _ in 0..repeats {
             sim.push(
-                run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend))
+                RunSpec::new(Case::A5, &s, &y, &x)
+                    .deploy(cluster.clone())
+                    .run(Arc::clone(&backend))
                     .report
                     .sim_makespan_s,
             );

@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
-use parccm::ccm::driver::{run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::driver::{Case, RunSpec, TablePolicy};
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::table::{DistanceTable, LibraryMask};
 use parccm::engine::Deploy;
@@ -69,16 +69,11 @@ fn main() {
 
     // -- DES ship accounting through the full A4 driver -----------------
     for shards in [1usize, 2, 4, 8] {
-        let rep = run_case_policy_sharded(
-            Case::A4,
-            &scenario,
-            &y,
-            &x,
-            Deploy::paper_cluster(),
-            Arc::clone(&backend),
-            TablePolicy::TruncatedAuto,
-            shards,
-        );
+        let rep = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(Deploy::paper_cluster())
+            .policy(TablePolicy::TruncatedAuto)
+            .shards(shards)
+            .run(Arc::clone(&backend));
         table.push(
             Row::new(format!("des_shards_{shards}"))
                 .cell("sim_makespan_s", rep.report.sim_makespan_s)

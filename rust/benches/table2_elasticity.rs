@@ -15,7 +15,7 @@ mod common;
 use std::sync::Arc;
 
 use parccm::bench::report::{Row, TablePrinter};
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::engine::Deploy;
 use parccm::util::stats;
 
@@ -46,12 +46,12 @@ fn main() {
         let mut par = Vec::new();
         for _ in 0..repeats {
             single.push(
-                run_case(Case::A1, &s, &y, &x, Deploy::SingleThread, Arc::clone(&backend))
-                    .report
-                    .measured_wall_s,
+                RunSpec::new(Case::A1, &s, &y, &x).run(Arc::clone(&backend)).report.measured_wall_s,
             );
             par.push(
-                run_case(Case::A5, &s, &y, &x, cluster.clone(), Arc::clone(&backend))
+                RunSpec::new(Case::A5, &s, &y, &x)
+                    .deploy(cluster.clone())
+                    .run(Arc::clone(&backend))
                     .report
                     .sim_makespan_s,
             );

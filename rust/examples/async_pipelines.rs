@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use parccm::bench::report::{Row, TablePrinter};
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::engine::Deploy;
 use parccm::native::NativeBackend;
@@ -44,8 +44,10 @@ fn main() {
     let mut table = TablePrinter::new("sync (A4) vs async (A5) across topologies");
     for (w, c) in [(1usize, 1usize), (1, 4), (2, 4), (5, 4), (10, 4), (20, 4)] {
         let deploy = Deploy::Cluster { workers: w, cores_per_worker: c };
-        let sync = run_case(Case::A4, &scenario, &y, &x, deploy.clone(), backend.clone());
-        let asy = run_case(Case::A5, &scenario, &y, &x, deploy, backend.clone());
+        let sync = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .run(backend.clone());
+        let asy = RunSpec::new(Case::A5, &scenario, &y, &x).deploy(deploy).run(backend.clone());
         let gain = 100.0 * (1.0 - asy.report.sim_makespan_s / sync.report.sim_makespan_s);
         table.push(
             Row::new(format!("{w} workers x {c} cores"))

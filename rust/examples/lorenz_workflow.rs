@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::forecast::{simplex_forecast, smap_forecast};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
@@ -66,14 +66,9 @@ fn main() {
     };
     let backend = Arc::new(NativeBackend);
     for (effect, cause, label) in [(&z, &x, "x -> z"), (&x, &z, "z -> x")] {
-        let rep = run_case(
-            Case::A5,
-            &scenario,
-            effect,
-            cause,
-            Deploy::paper_cluster(),
-            backend.clone(),
-        );
+        let rep = RunSpec::new(Case::A5, &scenario, effect, cause)
+            .deploy(Deploy::paper_cluster())
+            .run(backend.clone());
         let summaries = summarize(&rep.skills);
         let v = assess(&summaries, 0.2, 0.02);
         print!("   {label}: ");

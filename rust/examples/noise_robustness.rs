@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
 use parccm::engine::Deploy;
@@ -39,7 +39,9 @@ fn main() {
     for (i, sigma) in [0.0, 0.05, 0.1, 0.2, 0.4, 0.8].iter().enumerate() {
         let x = add_gaussian(&x0, *sigma, 100 + i as u64);
         let y = add_gaussian(&y0, *sigma, 200 + i as u64);
-        let rep = run_case(Case::A5, &scenario, &y, &x, Deploy::paper_cluster(), backend.clone());
+        let rep = RunSpec::new(Case::A5, &scenario, &y, &x)
+            .deploy(Deploy::paper_cluster())
+            .run(backend.clone());
         let summaries = summarize(&rep.skills);
         let v = assess(&summaries, 0.1, 0.02);
         table.push(

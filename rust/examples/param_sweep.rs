@@ -19,7 +19,7 @@ use std::sync::Arc;
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
 use parccm::engine::Deploy;
@@ -75,7 +75,9 @@ fn main() {
     let mut a1_time = f64::NAN;
     let mut a5_skills = Vec::new();
     for case in Case::ALL {
-        let rep = run_case(case, &scenario, &y, &x, cluster.clone(), Arc::clone(&backend));
+        let rep = RunSpec::new(case, &scenario, &y, &x)
+            .deploy(cluster.clone())
+            .run(Arc::clone(&backend));
         // cross-case numeric equivalence (the Table-1 levels are
         // scheduling variants of the same computation)
         let mut keyed: Vec<(usize, usize, usize, usize, f32)> = rep

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
@@ -53,14 +53,9 @@ fn main() {
     for (effect, cause, label) in
         [(&lynx, &hares, "hares -> lynx"), (&hares, &lynx, "lynx -> hares")]
     {
-        let rep = run_case(
-            Case::A5,
-            &scenario,
-            effect,
-            cause,
-            Deploy::paper_cluster(),
-            backend.clone(),
-        );
+        let rep = RunSpec::new(Case::A5, &scenario, effect, cause)
+            .deploy(Deploy::paper_cluster())
+            .run(backend.clone());
         let summaries = summarize(&rep.skills);
         println!("direction {label}:");
         for s in &summaries {

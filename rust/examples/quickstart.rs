@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
 use parccm::engine::Deploy;
@@ -37,14 +37,9 @@ fn main() {
 
     println!("CCM on coupled logistic maps (n = 1000, r = 25)\n");
     for (effect, cause, label) in [(&y, &x, "X -> Y"), (&x, &y, "Y -> X")] {
-        let rep = run_case(
-            Case::A5,
-            &scenario,
-            effect,
-            cause,
-            Deploy::paper_cluster(),
-            backend.clone(),
-        );
+        let rep = RunSpec::new(Case::A5, &scenario, effect, cause)
+            .deploy(Deploy::paper_cluster())
+            .run(backend.clone());
         let summaries = summarize(&rep.skills);
         println!("direction {label}:   (cross-map skill rho vs library size L)");
         for s in &summaries {

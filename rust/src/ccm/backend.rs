@@ -26,6 +26,7 @@
 //! distance scratch, the neighbour panels, the packed library bitmask for
 //! table-mode queries, and the prediction output buffer.
 
+use crate::ccm::pipeline::PearsonSums;
 use crate::ccm::table::{LibraryMask, TableShard};
 use crate::{EMAX, KMAX};
 
@@ -147,6 +148,95 @@ impl TaskArena {
     }
 }
 
+/// Observability counters for one compute pool, snapshotted by
+/// [`ComputeBackend::run_counters`]. One typed struct instead of the old
+/// per-counter getter sprawl: adding a counter means adding a field here
+/// and a line in [`PoolCounters::to_pairs`], and every consumer — the
+/// `--dump-skills` `.meta.json` sidecar, benches, integration tests — sees
+/// it. In-process backends report all zeros (the default); the cluster
+/// runtime fills in its pool state.
+///
+/// `live_workers` is a point-in-time gauge; everything else is a
+/// monotonically increasing count over the pool's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Workers currently alive (gauge).
+    pub live_workers: u64,
+    /// Dead local workers replaced with fresh spawns.
+    pub respawns: u64,
+    /// Remote workers lost (remote pools shrink instead of respawning).
+    pub remote_lost: u64,
+    /// Workers declared dead by keepalive ping timeout.
+    pub keepalive_deaths: u64,
+    /// Broadcast payload ships to workers (first ships + replicas).
+    pub broadcast_ships: u64,
+    /// Bytes of broadcast payload shipped.
+    pub broadcast_ship_bytes: u64,
+    /// Ships of a payload a worker was already supposed to hold.
+    pub rebroadcasts: u64,
+    /// Re-replication ships triggered by worker death.
+    pub repair_ships: u64,
+    /// Bytes shipped by death-triggered re-replication.
+    pub repair_ship_bytes: u64,
+    /// Wire-level broadcast evictions sent.
+    pub evictions: u64,
+    /// Remote workers successfully re-admitted after rejoin.
+    pub rejoins: u64,
+    /// Rejoin dial attempts (successful or not).
+    pub rejoin_attempts: u64,
+    /// Rejoin handshakes rejected (auth/version mismatch).
+    pub rejoin_rejected: u64,
+    /// Payload ships to rejoined workers re-warming their store.
+    pub rejoin_ships: u64,
+    /// Bytes shipped to rejoined workers.
+    pub rejoin_ship_bytes: u64,
+    /// Speculative duplicate tasks launched against stragglers.
+    pub speculative_launches: u64,
+    /// Speculative duplicates that finished before the original.
+    pub speculative_wins: u64,
+    /// Tasks killed for exceeding `--task-deadline-secs`.
+    pub deadline_kills: u64,
+    /// Frames rejected by the v4 checksum layer.
+    pub corrupt_frames_detected: u64,
+    /// Tasks that exhausted retries and fell back to the native backend.
+    pub exhausted_fallbacks: u64,
+    /// Bytes of task-result frames received by the driver — the
+    /// result-movement cost the worker-side reduce (`--reduce worker`)
+    /// exists to shrink.
+    pub result_ingress_bytes: u64,
+}
+
+impl PoolCounters {
+    /// The counters as (name, value) pairs, in a stable documented order —
+    /// the serialization the `--dump-skills` sidecar writes. Names are
+    /// load-bearing: CI asserts on them, so they never change spelling.
+    pub fn to_pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("live_workers", self.live_workers),
+            ("respawns", self.respawns),
+            ("remote_lost", self.remote_lost),
+            ("keepalive_deaths", self.keepalive_deaths),
+            ("broadcast_ships", self.broadcast_ships),
+            ("broadcast_ship_bytes", self.broadcast_ship_bytes),
+            ("rebroadcasts", self.rebroadcasts),
+            ("repair_ships", self.repair_ships),
+            ("repair_ship_bytes", self.repair_ship_bytes),
+            ("evictions", self.evictions),
+            ("rejoins", self.rejoins),
+            ("rejoin_attempts", self.rejoin_attempts),
+            ("rejoin_rejected", self.rejoin_rejected),
+            ("rejoin_ships", self.rejoin_ships),
+            ("rejoin_ship_bytes", self.rejoin_ship_bytes),
+            ("speculative_launches", self.speculative_launches),
+            ("speculative_wins", self.speculative_wins),
+            ("deadline_kills", self.deadline_kills),
+            ("corrupt_frames_detected", self.corrupt_frames_detected),
+            ("exhausted_fallbacks", self.exhausted_fallbacks),
+            ("result_ingress_bytes", self.result_ingress_bytes),
+        ]
+    }
+}
+
 /// The backend contract.
 ///
 /// The `*_into` methods are the hot path: they borrow a [`TaskArena`] (or
@@ -225,6 +315,44 @@ pub trait ComputeBackend: Send + Sync {
         );
     }
 
+    /// Shuffle-stage partial reduce: like [`ComputeBackend::shard_chunk_into`],
+    /// but the shard's predictions are folded straight into compensated
+    /// partial Pearson sums against the shard's own target rows
+    /// (`targets[shard.row_lo..shard.row_hi]`) and only the ~48-byte
+    /// [`PearsonSums`] comes back — never the predictions.
+    ///
+    /// The default computes the chunk in-process (reusing `arena.preds`)
+    /// and accumulates locally. `ccm::cluster::ClusterBackend` overrides it
+    /// to ship a wire-v5 `agg_chunk` task when a v5-capable worker is
+    /// available, falling back to this default otherwise. Both produce
+    /// bit-identical sums: accumulation order is fixed by row order and the
+    /// Kahan compensation never leaves the accumulation call.
+    fn agg_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+    ) -> PearsonSums {
+        let mut preds = std::mem::take(&mut arena.preds);
+        self.shard_chunk_into(shard, targets, theiler, lib_rows, e, arena, &mut preds);
+        let sums = PearsonSums::from_slices(&preds, &targets[shard.row_lo..shard.row_hi]);
+        arena.preds = preds;
+        sums
+    }
+
+    /// Merge per-shard partial sums (callers pass them sorted by shard
+    /// index) into one [`PearsonSums`]. The default merges in-process;
+    /// `ccm::cluster::ClusterBackend` ships the partials to a v5 worker as
+    /// a `merge_sums` task so the final reduce also runs worker-side. The
+    /// merge is a pure function of the ordered slice, so every
+    /// implementation is bit-identical.
+    fn merge_sums(&self, partials: &[PearsonSums]) -> PearsonSums {
+        PearsonSums::merge_all(partials)
+    }
+
     /// Hint that every task referencing these broadcast wire ids has been
     /// harvested: a distributed backend (e.g.
     /// [`crate::ccm::cluster::ClusterBackend`]) releases its cached
@@ -237,14 +365,14 @@ pub trait ComputeBackend: Send + Sync {
     /// [`crate::ccm::table::TableShard::wire_id`].
     fn evict_broadcasts(&self, _ids: &[u64]) {}
 
-    /// Observability counters for run-metadata dumps, as (name, value)
-    /// pairs. In-process backends expose none (the default); the cluster
-    /// runtime reports its pool counters (ships, repairs, rejoins, ...)
-    /// so CLI runs can write a machine-readable sidecar next to
-    /// `--dump-skills` — the skills file itself must stay byte-comparable
-    /// across backends, so counters never go in it.
-    fn run_counters(&self) -> Vec<(&'static str, u64)> {
-        Vec::new()
+    /// Observability counters for run-metadata dumps. In-process backends
+    /// report all zeros (the default); the cluster runtime snapshots its
+    /// pool counters (ships, repairs, rejoins, result ingress, ...) so CLI
+    /// runs can write a machine-readable sidecar next to `--dump-skills` —
+    /// the skills file itself must stay byte-comparable across backends,
+    /// so counters never go in it.
+    fn run_counters(&self) -> PoolCounters {
+        PoolCounters::default()
     }
 
     /// Human-readable backend name (for logs/benches).
@@ -326,6 +454,30 @@ mod tests {
             theiler: 0.0,
         };
         input.validate();
+    }
+
+    #[test]
+    fn pool_counters_pairs_are_stable() {
+        let c = PoolCounters { rejoins: 3, result_ingress_bytes: 42, ..Default::default() };
+        let pairs = c.to_pairs();
+        assert_eq!(pairs.len(), 21);
+        // the sidecar keys CI asserts on must exist under these exact names
+        for key in [
+            "rejoins",
+            "rejoin_ships",
+            "rebroadcasts",
+            "speculative_launches",
+            "speculative_wins",
+            "corrupt_frames_detected",
+            "result_ingress_bytes",
+        ] {
+            assert!(pairs.iter().any(|&(k, _)| k == key), "missing sidecar key {key}");
+        }
+        assert_eq!(pairs.iter().find(|&&(k, _)| k == "rejoins").unwrap().1, 3);
+        assert_eq!(
+            pairs.iter().find(|&&(k, _)| k == "result_ingress_bytes").unwrap().1,
+            42
+        );
     }
 
     #[test]

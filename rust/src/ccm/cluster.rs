@@ -10,18 +10,18 @@
 //! re-shipping** the broadcast (re-broadcast happens only when the last
 //! replica dies — both paths are counted and asserted in tests).
 //!
-//! # Wire protocol (version [`WIRE_VERSION`] = 4)
+//! # Wire protocol (version [`WIRE_VERSION`] = 5)
 //!
 //! Line-delimited JSON over the worker's transport. Large read-only state
 //! moves once per holding worker as content-addressed *broadcasts*; tasks
 //! then reference broadcasts by id and carry only library-row indices.
 //!
-//! Worker -> driver on startup (v4 hello; older workers omit newer fields
+//! Worker -> driver on startup (v5 hello; older workers omit newer fields
 //! and never receive newer-version messages). `auth` is present iff the
 //! worker was configured with a shared token:
 //!
 //! ```json
-//! {"type":"hello","v":4,"pid":12345,"transport":"pipe",
+//! {"type":"hello","v":5,"pid":12345,"transport":"pipe",
 //!  "caps":["evict","keepalive"],"auth":"<token>"}
 //! ```
 //!
@@ -29,28 +29,35 @@
 //! exactly one `result` or `error` reply; pings get exactly one `pong`):
 //!
 //! ```json
-//! {"v":4,"type":"hello_ack","auth":"<token>"}
-//! {"v":4,"type":"reject","msg":"auth token mismatch: ..."}
-//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"problem",
+//! {"v":5,"type":"hello_ack","auth":"<token>"}
+//! {"v":5,"type":"reject","msg":"auth token mismatch: ..."}
+//! {"v":5,"type":"broadcast","id":"<hex64>","kind":"problem",
 //!  "vecs":[...],"targets":[...],"times":[...]}
-//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
-//! {"v":4,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
+//! {"v":5,"type":"broadcast","id":"<hex64>","kind":"targets","targets":[...]}
+//! {"v":5,"type":"broadcast","id":"<hex64>","kind":"shard","shard_id":0,
 //!  "row_lo":0,"row_hi":100,"row_len":64,"n":400,"t0":2,
 //!  "neighbors":[...],"vecs":[...]}
-//! {"v":4,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
+//! {"v":5,"type":"task","task":7,"op":"cross_map","problem":"<hex64>",
 //!  "lib_rows":[...],"e":2,"theiler":0}
-//! {"v":4,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
+//! {"v":5,"type":"task","task":8,"op":"shard_chunk","shard":"<hex64>",
 //!  "targets":"<hex64>","lib_rows":[...],"e":2,"theiler":0}
-//! {"v":4,"type":"evict","id":"<hex64>"}
-//! {"v":4,"type":"ping","nonce":41}
+//! {"v":5,"type":"task","task":9,"op":"agg_chunk","shard":"<hex64>",
+//!  "targets":"<hex64>","lib_rows":[...],"e":2,"theiler":0}
+//! {"v":5,"type":"task","task":10,"op":"merge_sums",
+//!  "sums":[[100,1.5,2.5,3.75,2.25,6.25],...]}
+//! {"v":5,"type":"evict","id":"<hex64>"}
+//! {"v":5,"type":"ping","nonce":41}
 //! {"type":"shutdown"}
 //! ```
 //!
-//! Worker -> driver replies:
+//! Worker -> driver replies (`agg_chunk`/`merge_sums` return the six
+//! partial Pearson sums `[n, Σx, Σy, Σxy, Σx², Σy²]` — never predictions):
 //!
 //! ```json
 //! {"type":"result","task":7,"rho":0.93,"preds":[...]}
 //! {"type":"result","task":8,"preds":[...]}
+//! {"type":"result","task":9,"sums":[100,1.5,2.5,3.75,2.25,6.25]}
+//! {"type":"result","task":10,"sums":[400,6.0,10.0,15.0,9.0,25.0]}
 //! {"type":"error","task":8,"msg":"unknown broadcast deadbeef"}
 //! {"type":"pong","nonce":41}
 //! ```
@@ -69,7 +76,13 @@
 //! death (`corrupt_frames_detected`) feeding the normal requeue/repair
 //! machinery instead of a JSON-parse coin flip. v≤3 peers negotiate the
 //! old byte streams unchanged (the handshake itself is never
-//! checksummed).
+//! checksummed). v5 added the worker-side reduce ops: `agg_chunk` folds a
+//! shard chunk into compensated partial Pearson sums on the worker and
+//! `merge_sums` merges ordered partials there, so with `--reduce worker`
+//! the driver's result ingress shrinks from O(rows) prediction chunks to
+//! ~48-byte sums (counted by `result_ingress_bytes`). Pools containing
+//! any v≤4 worker — and the default `--reduce driver` — keep the
+//! driver-concat path bit-for-bit.
 //!
 //! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
 //! and f32 -> f64 is exact, so every finite value survives the wire
@@ -141,14 +154,16 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
+use crate::ccm::backend::{ComputeBackend, CrossMapInput, PoolCounters, TaskArena};
 use crate::ccm::chaos::{chaos_from_env, ChaosProfile, ChaosState, ChaosTransport};
 use crate::ccm::lifecycle::{exp_backoff, RejoinPolicy, WorkerSource};
+use crate::ccm::pipeline::PearsonSums;
 use crate::ccm::table::TableShard;
 use crate::ccm::transport::{
-    bind_reuseaddr, connect_remote_deadline, ping_payload, recv_json, resolve_auth_token,
-    ChecksumTransport, Transport, TransportKind, WorkerLink, CHECKSUM_WIRE_VERSION,
-    EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, REJOIN_CONNECT_TIMEOUT, WIRE_VERSION,
+    bind_reuseaddr, connect_remote_deadline, ping_payload, recv_json, recv_json_counted,
+    resolve_auth_token, ChecksumTransport, Transport, TransportKind, WorkerLink, AGG_WIRE_VERSION,
+    CHECKSUM_WIRE_VERSION, EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, REJOIN_CONNECT_TIMEOUT,
+    WIRE_VERSION,
 };
 use crate::native::NativeBackend;
 use crate::util::cli::Args;
@@ -330,21 +345,51 @@ fn store_broadcast(store: &mut HashMap<String, Stored>, msg: &Json) -> Result<()
     Ok(())
 }
 
-fn run_task(
-    store: &HashMap<String, Stored>,
-    arena: &mut TaskArena,
-    msg: &Json,
-) -> Result<Json, String> {
-    let task = field_f64(msg, "task")?;
+/// Encode partial Pearson sums as the wire array `[n, Σx, Σy, Σxy, Σx²,
+/// Σy²]`. The JSON writer emits shortest-roundtrip f64, so the sums
+/// survive the wire bit-for-bit.
+fn sums_to_json(s: &PearsonSums) -> Json {
+    Json::Arr(vec![
+        Json::Num(s.n as f64),
+        Json::Num(s.sx),
+        Json::Num(s.sy),
+        Json::Num(s.sxy),
+        Json::Num(s.sxx),
+        Json::Num(s.syy),
+    ])
+}
+
+fn sums_from_json(v: &Json) -> Result<PearsonSums, String> {
+    let arr = v.as_arr().ok_or("partial sums must be a 6-element array")?;
+    if arr.len() != 6 {
+        return Err(format!("partial sums must have 6 elements, got {}", arr.len()));
+    }
+    let f = |i: usize| arr[i].as_f64().ok_or_else(|| format!("non-numeric sum at index {i}"));
+    Ok(PearsonSums { n: f(0)? as u64, sx: f(1)?, sy: f(2)?, sxy: f(3)?, sxx: f(4)?, syy: f(5)? })
+}
+
+/// Parse the common cross-map task fields (library rows, E, theiler) —
+/// present on every op except `merge_sums`, which carries only sums.
+fn task_common(msg: &Json) -> Result<(Vec<usize>, usize, f32), String> {
     let lib_rows = msg
         .get("lib_rows")
         .and_then(Json::as_usizes)
         .ok_or("missing 'lib_rows'")?;
     let e = field_usize(msg, "e")?;
     let theiler = field_f64(msg, "theiler")? as f32;
+    Ok((lib_rows, e, theiler))
+}
+
+fn run_task(
+    store: &HashMap<String, Stored>,
+    arena: &mut TaskArena,
+    msg: &Json,
+) -> Result<Json, String> {
+    let task = field_f64(msg, "task")?;
     let backend = NativeBackend;
     match field_str(msg, "op")? {
         "cross_map" => {
+            let (lib_rows, e, theiler) = task_common(msg)?;
             let pid = field_str(msg, "problem")?;
             let Some(Stored::Problem { vecs, targets, times }) = store.get(pid) else {
                 return Err(format!("unknown broadcast {pid}"));
@@ -366,6 +411,7 @@ fn run_task(
             ]))
         }
         "shard_chunk" => {
+            let (lib_rows, e, theiler) = task_common(msg)?;
             let sid = field_str(msg, "shard")?;
             let tid = field_str(msg, "targets")?;
             let Some(Stored::Shard(shard)) = store.get(sid) else {
@@ -380,6 +426,43 @@ fn run_task(
                 ("type", Json::Str("result".into())),
                 ("task", Json::Num(task)),
                 ("preds", Json::f32s(&preds)),
+            ]))
+        }
+        // v5: fold the shard's predictions into partial Pearson sums on
+        // this side of the wire — the reply is ~48 bytes of sums, never
+        // the predictions.
+        "agg_chunk" => {
+            let (lib_rows, e, theiler) = task_common(msg)?;
+            let sid = field_str(msg, "shard")?;
+            let tid = field_str(msg, "targets")?;
+            let Some(Stored::Shard(shard)) = store.get(sid) else {
+                return Err(format!("unknown broadcast {sid}"));
+            };
+            let Some(Stored::Targets(targets)) = store.get(tid) else {
+                return Err(format!("unknown broadcast {tid}"));
+            };
+            let sums = backend.agg_chunk_into(shard, targets, theiler, &lib_rows, e, arena);
+            Ok(Json::obj(vec![
+                ("type", Json::Str("result".into())),
+                ("task", Json::Num(task)),
+                ("sums", sums_to_json(&sums)),
+            ]))
+        }
+        // v5: merge ordered partials (the driver sends them sorted by
+        // shard index) into one sums vector. No broadcasts needed.
+        "merge_sums" => {
+            let parts = msg
+                .get("sums")
+                .and_then(Json::as_arr)
+                .ok_or("missing 'sums'")?
+                .iter()
+                .map(sums_from_json)
+                .collect::<Result<Vec<PearsonSums>, String>>()?;
+            let merged = backend.merge_sums(&parts);
+            Ok(Json::obj(vec![
+                ("type", Json::Str("result".into())),
+                ("task", Json::Num(task)),
+                ("sums", sums_to_json(&merged)),
             ]))
         }
         other => Err(format!("unknown op '{other}'")),
@@ -803,6 +886,11 @@ struct PoolState {
     idle: Vec<Worker>,
     /// Workers existing (idle or leased to a task).
     live: usize,
+    /// Live workers whose negotiated wire version predates
+    /// [`AGG_WIRE_VERSION`]. While nonzero, the driver never dispatches
+    /// the v5 reduce ops (a mixed pool keeps the compatible concat path
+    /// instead of risking unknown-op retries on a legacy worker).
+    legacy_live: usize,
     /// Workers replaced after dying mid-exchange (fork sources only).
     respawns: u64,
     /// Remote workers lost for good (no respawn possible).
@@ -979,6 +1067,11 @@ struct ClusterCore {
     /// Tasks computed on the in-process native backend after exhausting
     /// their attempts (`--on-exhausted fallback`).
     exhausted_fallbacks: AtomicU64,
+    /// Bytes of matched task-result frames received by the driver — the
+    /// result-movement cost `--reduce worker` shrinks (the frame bytes of
+    /// each accepted `result`, including its newline; stale/superseded
+    /// replies are not counted).
+    result_ingress_bytes: AtomicU64,
     next_task: AtomicU64,
     next_serial: AtomicU64,
     local: NativeBackend,
@@ -1027,6 +1120,18 @@ impl ClusterCore {
     /// deadline — byte-for-byte the pre-v4 behavior.
     fn tracks_leases(&self) -> bool {
         self.opts.task_deadline.is_some() || self.opts.speculate_factor.is_some()
+    }
+
+    /// Whether every live worker speaks the v5 reduce ops (false for an
+    /// empty pool). Checked per agg dispatch: a legacy worker joining
+    /// mid-run (rejoin with a doctored hello) flips this off and the
+    /// caller silently computes the bit-identical in-process default
+    /// instead. If the race still lands an agg task on a legacy worker,
+    /// its `unknown op` error rides the normal retry path and the
+    /// exhaustion fallback keeps the answer correct.
+    fn pool_speaks_agg(&self) -> bool {
+        let st = self.lock_state();
+        st.live > 0 && st.legacy_live == 0
     }
 
     /// Post-handshake transport layering for a fresh worker connection:
@@ -1263,6 +1368,9 @@ impl ClusterCore {
         {
             let mut st = self.lock_state();
             st.live -= 1;
+            if dead.wire_v < AGG_WIRE_VERSION {
+                st.legacy_live -= 1;
+            }
             if matches!(cause, DeathCause::Keepalive) {
                 st.keepalive_deaths += 1;
             }
@@ -1272,6 +1380,9 @@ impl ClusterCore {
             }
             match replacement {
                 Some(Ok(w)) => {
+                    if w.wire_v < AGG_WIRE_VERSION {
+                        st.legacy_live += 1;
+                    }
                     st.idle.push(w);
                     st.live += 1;
                     st.respawns += 1;
@@ -1370,6 +1481,9 @@ impl ClusterCore {
                     {
                         let mut st = self.lock_state();
                         st.live += 1;
+                        if worker.wire_v < AGG_WIRE_VERSION {
+                            st.legacy_live += 1;
+                        }
                         st.rejoins += 1;
                         st.idle.push(worker);
                     }
@@ -1527,7 +1641,7 @@ impl ClusterCore {
         let mut orphan_polls: u32 = 0;
         let abandon_after = (Duration::from_secs(60).as_millis() / LEASE_POLL.as_millis()) as u32;
         loop {
-            let reply = match recv_json(worker.link.transport.as_mut()) {
+            let (reply, reply_bytes) = match recv_json_counted(worker.link.transport.as_mut()) {
                 Ok(r) => r,
                 Err(e)
                     if polling
@@ -1576,6 +1690,10 @@ impl ClusterCore {
                             .set_recv_deadline(None)
                             .map_err(ExchangeError::Dead)?;
                     }
+                    // only the accepted result frame is charged as ingress
+                    // (stale pongs and late loser replies are noise, not
+                    // result movement)
+                    self.result_ingress_bytes.fetch_add(reply_bytes, Ordering::Relaxed);
                     return Ok(reply);
                 }
                 Some("error") => {
@@ -2195,6 +2313,7 @@ impl ClusterBackend {
             speculative_wins: AtomicU64::new(0),
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
+            result_ingress_bytes: AtomicU64::new(0),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,
@@ -2206,6 +2325,7 @@ impl ClusterBackend {
         {
             let mut st = core.lock_state();
             st.live = idle.len();
+            st.legacy_live = idle.iter().filter(|w| w.wire_v < AGG_WIRE_VERSION).count();
             st.idle = idle;
         }
         let maint_stop = Arc::new(AtomicBool::new(false));
@@ -2245,112 +2365,6 @@ impl ClusterBackend {
     /// Workers currently alive (idle + leased).
     pub fn num_workers(&self) -> usize {
         self.core.lock_state().live
-    }
-
-    /// How many workers have been replaced after dying (fork sources).
-    pub fn respawns(&self) -> u64 {
-        self.core.lock_state().respawns
-    }
-
-    /// Remote workers lost for good (remote sources never respawn).
-    pub fn remote_lost(&self) -> u64 {
-        self.core.lock_state().remote_lost
-    }
-
-    /// Workers declared dead by the keepalive prober.
-    pub fn keepalive_deaths(&self) -> u64 {
-        self.core.lock_state().keepalive_deaths
-    }
-
-    /// Remote workers re-admitted by the rejoin redialer
-    /// (`--rejoin-backoff-secs`).
-    pub fn rejoins(&self) -> u64 {
-        self.core.lock_state().rejoins
-    }
-
-    /// Rejoin redial attempts made (successes, failures, rejections).
-    pub fn rejoin_attempts(&self) -> u64 {
-        self.core.lock_state().rejoin_attempts
-    }
-
-    /// Addresses permanently retired after an auth-rejected rejoin
-    /// handshake (never redialed again).
-    pub fn rejoin_rejected(&self) -> u64 {
-        self.core.lock_state().rejoin_rejected
-    }
-
-    /// Task-driven broadcast ships to workers admitted by rejoin — the
-    /// lazy re-population of their empty stores, distinct from the
-    /// death-driven [`ClusterBackend::repair_ships`]. The rejoined mark
-    /// is permanent, so over a long grid this is an upper bound on the
-    /// rejoin's re-ship cost (later first-ships of new content to the
-    /// same worker count too).
-    pub fn rejoin_ships(&self) -> u64 {
-        self.core.lock_state().rejoin_ships
-    }
-
-    /// Bytes written by task-driven ships to rejoined workers.
-    pub fn rejoin_ship_bytes(&self) -> u64 {
-        self.core.lock_state().rejoin_ship_bytes
-    }
-
-    /// (id, worker) broadcast ships performed, including replica copies.
-    pub fn broadcast_ships(&self) -> u64 {
-        self.core.lock_state().ships
-    }
-
-    /// Bytes actually written shipping broadcasts (the real counterpart of
-    /// the DES's `sim_broadcast_ship_bytes`).
-    pub fn broadcast_ship_bytes(&self) -> u64 {
-        self.core.lock_state().ship_bytes
-    }
-
-    /// Ships that had to re-broadcast an id because its last replica died.
-    pub fn rebroadcasts(&self) -> u64 {
-        self.core.lock_state().rebroadcasts
-    }
-
-    /// Eager re-replication copies shipped after worker deaths (the real
-    /// counterpart of the DES's `sim_repair_ship_bytes` pricing).
-    pub fn repair_ships(&self) -> u64 {
-        self.core.lock_state().repair_ships
-    }
-
-    /// Bytes written by eager re-replication repair ships.
-    pub fn repair_ship_bytes(&self) -> u64 {
-        self.core.lock_state().repair_ship_bytes
-    }
-
-    /// `evict` messages delivered to workers.
-    pub fn evictions(&self) -> u64 {
-        self.core.lock_state().evictions
-    }
-
-    /// Speculative duplicates actually dispatched (`--speculate-factor`).
-    pub fn speculative_launches(&self) -> u64 {
-        self.core.speculative_launches.load(Ordering::Relaxed)
-    }
-
-    /// Speculative duplicates whose result superseded the straggler's.
-    pub fn speculative_wins(&self) -> u64 {
-        self.core.speculative_wins.load(Ordering::Relaxed)
-    }
-
-    /// Workers killed for breaching `--task-deadline-secs`.
-    pub fn deadline_kills(&self) -> u64 {
-        self.core.deadline_kills.load(Ordering::Relaxed)
-    }
-
-    /// Frames rejected by the v4 checksum layer across all driver-side
-    /// connections (each one a clean, counted connection death).
-    pub fn corrupt_frames_detected(&self) -> u64 {
-        self.core.corrupt_frames.load(Ordering::Relaxed)
-    }
-
-    /// Tasks computed on the in-process native backend after exhausting
-    /// their attempts (`--on-exhausted fallback`).
-    pub fn exhausted_fallbacks(&self) -> u64 {
-        self.core.exhausted_fallbacks.load(Ordering::Relaxed)
     }
 
     /// Serialized broadcast payloads currently cached driver-side.
@@ -2487,34 +2501,117 @@ impl ComputeBackend for ClusterBackend {
             .expect("worker result missing preds");
     }
 
+    /// Worker-side shuffle-stage reduce (wire v5): ship an `agg_chunk`
+    /// task referencing the shard + targets broadcasts; only the ~48-byte
+    /// partial sums come back. If any live worker negotiated below v5 (or
+    /// the exchange exhausts its retries), the bit-identical in-process
+    /// default computes the partial locally instead — same sums, larger
+    /// local compute, zero wire traffic.
+    fn agg_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+    ) -> PearsonSums {
+        if !self.core.pool_speaks_agg() {
+            return self.core.local.agg_chunk_into(shard, targets, theiler, lib_rows, e, arena);
+        }
+        let sid = shard.wire_id();
+        let tid = targets_wire_id(targets);
+        let shard_line = self.core.payload(sid, || shard_payload(sid, shard));
+        let targets_line = self.core.payload(tid, || targets_payload(tid, targets));
+        let rows = Json::usizes(lib_rows);
+        let reply =
+            self.core.execute(&[(sid, shard_line), (tid, targets_line)], "agg_chunk", |task| {
+                Json::obj(vec![
+                    ("v", Json::Num(WIRE_VERSION as f64)),
+                    ("type", Json::Str("task".into())),
+                    ("task", Json::Num(task as f64)),
+                    ("op", Json::Str("agg_chunk".into())),
+                    ("shard", Json::Str(hex(sid))),
+                    ("targets", Json::Str(hex(tid))),
+                    ("lib_rows", rows.clone()),
+                    ("e", Json::Num(e as f64)),
+                    ("theiler", Json::Num(theiler as f64)),
+                ])
+                .to_string()
+            });
+        let reply = match reply {
+            Ok(reply) => reply,
+            Err(exhausted) => {
+                self.core.note_exhausted(&exhausted);
+                return self
+                    .core
+                    .local
+                    .agg_chunk_into(shard, targets, theiler, lib_rows, e, arena);
+            }
+        };
+        sums_from_json(reply.get("sums").expect("worker result missing sums"))
+            .expect("worker result carried malformed sums")
+    }
+
+    /// Final merge on a worker (wire v5): ship the ordered partials as a
+    /// `merge_sums` task (no broadcast needs — the payload IS the sums)
+    /// and take the merged sums back. The merge is a pure function of the
+    /// ordered slice, so the local fallback is bit-identical.
+    fn merge_sums(&self, partials: &[PearsonSums]) -> PearsonSums {
+        if !self.core.pool_speaks_agg() {
+            return self.core.local.merge_sums(partials);
+        }
+        let sums = Json::Arr(partials.iter().map(sums_to_json).collect());
+        let reply = self.core.execute(&[], "merge_sums", |task| {
+            Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("type", Json::Str("task".into())),
+                ("task", Json::Num(task as f64)),
+                ("op", Json::Str("merge_sums".into())),
+                ("sums", sums.clone()),
+            ])
+            .to_string()
+        });
+        let reply = match reply {
+            Ok(reply) => reply,
+            Err(exhausted) => {
+                self.core.note_exhausted(&exhausted);
+                return self.core.local.merge_sums(partials);
+            }
+        };
+        sums_from_json(reply.get("sums").expect("worker result missing sums"))
+            .expect("worker result carried malformed sums")
+    }
+
     fn evict_broadcasts(&self, ids: &[u64]) {
         self.core.evict_broadcast_ids(ids);
     }
 
-    fn run_counters(&self) -> Vec<(&'static str, u64)> {
+    fn run_counters(&self) -> PoolCounters {
         let st = self.core.lock_state();
-        vec![
-            ("live_workers", st.live as u64),
-            ("respawns", st.respawns),
-            ("remote_lost", st.remote_lost),
-            ("keepalive_deaths", st.keepalive_deaths),
-            ("broadcast_ships", st.ships),
-            ("broadcast_ship_bytes", st.ship_bytes),
-            ("rebroadcasts", st.rebroadcasts),
-            ("repair_ships", st.repair_ships),
-            ("repair_ship_bytes", st.repair_ship_bytes),
-            ("evictions", st.evictions),
-            ("rejoins", st.rejoins),
-            ("rejoin_attempts", st.rejoin_attempts),
-            ("rejoin_rejected", st.rejoin_rejected),
-            ("rejoin_ships", st.rejoin_ships),
-            ("rejoin_ship_bytes", st.rejoin_ship_bytes),
-            ("speculative_launches", self.core.speculative_launches.load(Ordering::Relaxed)),
-            ("speculative_wins", self.core.speculative_wins.load(Ordering::Relaxed)),
-            ("deadline_kills", self.core.deadline_kills.load(Ordering::Relaxed)),
-            ("corrupt_frames_detected", self.core.corrupt_frames.load(Ordering::Relaxed)),
-            ("exhausted_fallbacks", self.core.exhausted_fallbacks.load(Ordering::Relaxed)),
-        ]
+        PoolCounters {
+            live_workers: st.live as u64,
+            respawns: st.respawns,
+            remote_lost: st.remote_lost,
+            keepalive_deaths: st.keepalive_deaths,
+            broadcast_ships: st.ships,
+            broadcast_ship_bytes: st.ship_bytes,
+            rebroadcasts: st.rebroadcasts,
+            repair_ships: st.repair_ships,
+            repair_ship_bytes: st.repair_ship_bytes,
+            evictions: st.evictions,
+            rejoins: st.rejoins,
+            rejoin_attempts: st.rejoin_attempts,
+            rejoin_rejected: st.rejoin_rejected,
+            rejoin_ships: st.rejoin_ships,
+            rejoin_ship_bytes: st.rejoin_ship_bytes,
+            speculative_launches: self.core.speculative_launches.load(Ordering::Relaxed),
+            speculative_wins: self.core.speculative_wins.load(Ordering::Relaxed),
+            deadline_kills: self.core.deadline_kills.load(Ordering::Relaxed),
+            corrupt_frames_detected: self.core.corrupt_frames.load(Ordering::Relaxed),
+            exhausted_fallbacks: self.core.exhausted_fallbacks.load(Ordering::Relaxed),
+            result_ingress_bytes: self.core.result_ingress_bytes.load(Ordering::Relaxed),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -2621,6 +2718,107 @@ mod tests {
     }
 
     #[test]
+    fn worker_agg_chunk_matches_local_sums_bit_for_bit() {
+        // drive the v5 agg_chunk op through run_task and the wire text:
+        // the partial sums must equal the in-process default bit-for-bit
+        let (x, y) = coupled_logistic(200, CoupledLogisticParams::default());
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let table = crate::ccm::table::DistanceTable::build_truncated(&problem.emb, 16);
+        let sharded = table.shard(3);
+        let shard = &sharded.shards()[1];
+        let tid = targets_wire_id(&problem.targets);
+        let mut store = HashMap::new();
+        let shard_line = shard_payload(shard.wire_id(), shard);
+        let targets_line = targets_payload(tid, &problem.targets);
+        store_broadcast(&mut store, &Json::parse(&shard_line).unwrap()).unwrap();
+        store_broadcast(&mut store, &Json::parse(&targets_line).unwrap()).unwrap();
+        let lib_rows: Vec<usize> = (0..problem.emb.n).step_by(3).collect();
+        let task = Json::obj(vec![
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("type", Json::Str("task".into())),
+            ("task", Json::Num(11.0)),
+            ("op", Json::Str("agg_chunk".into())),
+            ("shard", Json::Str(hex(shard.wire_id()))),
+            ("targets", Json::Str(hex(tid))),
+            ("lib_rows", Json::usizes(&lib_rows)),
+            ("e", Json::Num(2.0)),
+            ("theiler", Json::Num(0.0)),
+        ]);
+        let mut arena = TaskArena::new();
+        let reply = run_task(&store, &mut arena, &task).unwrap();
+        // simulate the reply crossing the wire as text
+        let reply = Json::parse(&reply.to_string()).unwrap();
+        let got = sums_from_json(reply.get("sums").unwrap()).unwrap();
+
+        let want = NativeBackend.agg_chunk_into(
+            shard,
+            &problem.targets,
+            0.0,
+            &lib_rows,
+            2,
+            &mut TaskArena::new(),
+        );
+        assert_eq!(got, want, "wire sums must be bit-identical to in-process sums");
+        assert_eq!(got.n as usize, shard.num_rows());
+    }
+
+    #[test]
+    fn worker_merge_sums_matches_local_merge_bit_for_bit() {
+        let parts = vec![
+            PearsonSums { n: 3, sx: 1.5, sy: -2.25, sxy: 0.125, sxx: 9.0, syy: 4.5 },
+            PearsonSums { n: 5, sx: 0.1, sy: 0.2, sxy: 0.3, sxx: 0.4, syy: 0.5 },
+            PearsonSums { n: 2, sx: -7.0, sy: 3.5, sxy: 1.0e-9, sxx: 2.0, syy: 1.0 },
+        ];
+        let task = Json::obj(vec![
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("type", Json::Str("task".into())),
+            ("task", Json::Num(12.0)),
+            ("op", Json::Str("merge_sums".into())),
+            ("sums", Json::Arr(parts.iter().map(sums_to_json).collect())),
+        ]);
+        let store = HashMap::new();
+        let mut arena = TaskArena::new();
+        let reply = run_task(&store, &mut arena, &task).unwrap();
+        let reply = Json::parse(&reply.to_string()).unwrap();
+        let got = sums_from_json(reply.get("sums").unwrap()).unwrap();
+        assert_eq!(got, PearsonSums::merge_all(&parts));
+        assert_eq!(got.n, 10);
+    }
+
+    #[test]
+    fn sums_wire_encoding_roundtrips_bit_for_bit() {
+        // adversarial f64s: subnormal-ish, negative, high-precision
+        let s = PearsonSums {
+            n: u64::from(u32::MAX),
+            sx: 0.1 + 0.2,
+            sy: -1.0e-300,
+            sxy: std::f64::consts::PI,
+            sxx: 4.9e-324_f64,
+            syy: 1.0e300,
+        };
+        let line = sums_to_json(&s).to_string();
+        let back = sums_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, s, "sums must survive the wire bit-for-bit");
+        // malformed arrays are named errors, not panics
+        assert!(sums_from_json(&Json::parse("[1,2]").unwrap()).is_err());
+        assert!(sums_from_json(&Json::parse("\"nope\"").unwrap()).is_err());
+    }
+
+    #[test]
+    fn merge_sums_task_rejects_malformed_partials() {
+        let task = Json::obj(vec![
+            ("type", Json::Str("task".into())),
+            ("task", Json::Num(1.0)),
+            ("op", Json::Str("merge_sums".into())),
+            ("sums", Json::parse("[[1,2,3]]").unwrap()),
+        ]);
+        let store = HashMap::new();
+        let mut arena = TaskArena::new();
+        let err = run_task(&store, &mut arena, &task).unwrap_err();
+        assert!(err.contains("6 elements"), "{err}");
+    }
+
+    #[test]
     fn unknown_broadcast_yields_error() {
         let store = HashMap::new();
         let mut arena = TaskArena::new();
@@ -2722,6 +2920,7 @@ mod tests {
             speculative_wins: AtomicU64::new(0),
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
+            result_ingress_bytes: AtomicU64::new(0),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,

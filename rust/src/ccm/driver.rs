@@ -24,8 +24,9 @@ use crate::ccm::backend::{ComputeBackend, TaskArena};
 use crate::ccm::cluster::{problem_wire_id, targets_wire_id};
 use crate::ccm::params::Scenario;
 use crate::ccm::pipeline::{
-    ccm_transform_rdd, combine_shard_chunks, sharded_table_pipeline_mode, sharded_transform_rdds,
-    table_pipeline_mode, table_transform_rdd, CcmProblem, TableMode,
+    ccm_transform_rdd, combine_shard_chunks, combine_shard_sums, sharded_agg_rdds,
+    sharded_table_pipeline_mode, sharded_transform_rdds, table_pipeline_mode, table_transform_rdd,
+    CcmProblem, TableMode,
 };
 use crate::ccm::result::SkillRow;
 use crate::ccm::subsample::draw_samples;
@@ -117,6 +118,179 @@ impl TablePolicy {
     }
 }
 
+/// Where the Pearson reduction runs for sharded table cases.
+///
+/// With [`ReduceMode::Driver`] (the default) every shard task ships its
+/// raw prediction chunk back and the driver concatenates rows before a
+/// two-pass Pearson — bit-identical to the monolithic table path. With
+/// [`ReduceMode::Worker`] each shard task reduces its chunk to six
+/// streaming partial sums on the worker (`agg_chunk`) and the driver only
+/// merges sums (`merge_sums`) — result ingress shrinks from `O(rows)` to
+/// `O(shards)` per skill, and the resulting rho is within 1 ULP of the
+/// driver-concat value (see `ccm::pipeline`'s worker-side reduce docs).
+///
+/// Non-sharded paths already return one scalar rho per task, so there is
+/// nothing to move and the mode is ignored there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReduceMode {
+    /// Ship raw predictions; concatenate and reduce on the driver.
+    #[default]
+    Driver,
+    /// Reduce to partial Pearson sums on the workers; merge on the driver.
+    Worker,
+}
+
+impl ReduceMode {
+    /// Parse a CLI mode name (`--reduce worker`, case-insensitive).
+    pub fn parse(s: &str) -> Option<ReduceMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "driver" => Some(ReduceMode::Driver),
+            "worker" => Some(ReduceMode::Worker),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceMode::Driver => "driver",
+            ReduceMode::Worker => "worker",
+        }
+    }
+}
+
+/// A single, composable description of one case run — the one entry point
+/// the driver exposes. Build it, chain the knobs you care about, then call
+/// [`RunSpec::run`] (one deploy) or [`RunSpec::run_multi`] (one execution,
+/// many DES topologies):
+///
+/// ```no_run
+/// # use parccm::ccm::driver::{Case, ReduceMode, RunSpec, TablePolicy};
+/// # use parccm::ccm::params::Scenario;
+/// # use parccm::engine::Deploy;
+/// # use parccm::native::NativeBackend;
+/// # use std::sync::Arc;
+/// # let scenario = Scenario::smoke();
+/// # let (effect, cause) = (vec![0.0f32; 64], vec![0.0f32; 64]);
+/// let report = RunSpec::new(Case::A4, &scenario, &effect, &cause)
+///     .deploy(Deploy::paper_cluster())
+///     .policy(TablePolicy::TruncatedAuto)
+///     .shards(3)
+///     .reduce(ReduceMode::Worker)
+///     .run(Arc::new(NativeBackend));
+/// ```
+///
+/// Defaults: [`Deploy::SingleThread`], [`TablePolicy::TruncatedAuto`],
+/// one shard (monolithic table broadcast), [`ReduceMode::Driver`].
+/// Numerics never depend on the deploy, and the default policy / shard /
+/// reduce combination is bit-identical to the paper's monolithic path.
+#[derive(Clone)]
+pub struct RunSpec<'a> {
+    case: Case,
+    scenario: &'a Scenario,
+    effect: &'a [f32],
+    cause: &'a [f32],
+    deploy: Deploy,
+    policy: TablePolicy,
+    shards: usize,
+    reduce: ReduceMode,
+}
+
+impl<'a> RunSpec<'a> {
+    /// Describe a run of `case` over `scenario`, cross-mapping `cause`
+    /// from the shadow manifold of `effect` (i.e. testing cause -> effect
+    /// causality). All other knobs start at their defaults.
+    pub fn new(case: Case, scenario: &'a Scenario, effect: &'a [f32], cause: &'a [f32]) -> Self {
+        RunSpec {
+            case,
+            scenario,
+            effect,
+            cause,
+            deploy: Deploy::SingleThread,
+            policy: TablePolicy::default(),
+            shards: 1,
+            reduce: ReduceMode::default(),
+        }
+    }
+
+    /// Topology the DES replay prices ([`RunSpec::run`] only — the
+    /// multi-deploy terminal takes its own list).
+    pub fn deploy(mut self, deploy: Deploy) -> Self {
+        self.deploy = deploy;
+        self
+    }
+
+    /// Distance-table layout policy (table cases only).
+    pub fn policy(mut self, policy: TablePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Split the distance table into `shards` per-node row-range shards
+    /// (table cases only; `<= 1` keeps the monolithic broadcast).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Where the Pearson reduction runs (sharded table cases only).
+    pub fn reduce(mut self, reduce: ReduceMode) -> Self {
+        self.reduce = reduce;
+        self
+    }
+
+    /// Execute on `backend`, pricing the configured deploy.
+    pub fn run(self, backend: Arc<dyn ComputeBackend>) -> CaseReport {
+        let case = self.case;
+        match case {
+            Case::A1 => run_a1(self.scenario, self.effect, self.cause, backend),
+            _ => {
+                let deploys = [self.deploy.clone()];
+                let (skills, mut reports) = run_engine_case(
+                    case,
+                    self.scenario,
+                    self.effect,
+                    self.cause,
+                    &deploys,
+                    backend,
+                    self.policy,
+                    self.shards,
+                    self.reduce,
+                );
+                CaseReport { case, skills, report: reports.remove(0) }
+            }
+        }
+    }
+
+    /// Execute ONCE, pricing MANY topologies via DES replay (numerics
+    /// never depend on the deploy, so this is exact and saves re-running
+    /// expensive cases per topology — e.g. Fig. 4's Local-vs-Yarn
+    /// comparison). Ignores [`RunSpec::deploy`].
+    pub fn run_multi(
+        self,
+        deploys: &[Deploy],
+        backend: Arc<dyn ComputeBackend>,
+    ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+        match self.case {
+            Case::A1 => {
+                let rep = run_a1(self.scenario, self.effect, self.cause, backend);
+                let reports = deploys.iter().map(|_| rep.report.clone()).collect();
+                (rep.skills, reports)
+            }
+            _ => run_engine_case(
+                self.case,
+                self.scenario,
+                self.effect,
+                self.cause,
+                deploys,
+                backend,
+                self.policy,
+                self.shards,
+                self.reduce,
+            ),
+        }
+    }
+}
+
 /// Outcome of one case run.
 pub struct CaseReport {
     pub case: Case,
@@ -153,8 +327,8 @@ pub fn skills_to_json(skills: &[SkillRow]) -> crate::util::json::Json {
 }
 
 /// Run `case` over `scenario`, cross-mapping `cause` from the shadow
-/// manifold of `effect` (i.e. testing cause -> effect causality), with the
-/// default [`TablePolicy`].
+/// manifold of `effect`, with all-default knobs.
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).deploy(..).run(backend)")]
 pub fn run_case(
     case: Case,
     scenario: &Scenario,
@@ -163,10 +337,11 @@ pub fn run_case(
     deploy: Deploy,
     backend: Arc<dyn ComputeBackend>,
 ) -> CaseReport {
-    run_case_policy(case, scenario, effect, cause, deploy, backend, TablePolicy::default())
+    RunSpec::new(case, scenario, effect, cause).deploy(deploy).run(backend)
 }
 
-/// [`run_case`] with an explicit distance-table layout policy.
+/// [`RunSpec`] with an explicit distance-table layout policy.
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).policy(..).run(backend)")]
 pub fn run_case_policy(
     case: Case,
     scenario: &Scenario,
@@ -176,14 +351,11 @@ pub fn run_case_policy(
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
 ) -> CaseReport {
-    run_case_policy_sharded(case, scenario, effect, cause, deploy, backend, policy, 1)
+    RunSpec::new(case, scenario, effect, cause).deploy(deploy).policy(policy).run(backend)
 }
 
-/// [`run_case_policy`] with the distance table split into `shards`
-/// per-node row-range shards (table cases only; `shards <= 1` keeps the
-/// monolithic broadcast). Sharded runs submit one transform job per shard
-/// per (E, tau, L) and combine prediction chunks driver-side — skills are
-/// bit-identical to the monolithic table path.
+/// [`RunSpec`] with a sharded distance table.
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).shards(..).run(backend)")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_case_policy_sharded(
     case: Case,
@@ -195,20 +367,15 @@ pub fn run_case_policy_sharded(
     policy: TablePolicy,
     shards: usize,
 ) -> CaseReport {
-    match case {
-        Case::A1 => run_a1(scenario, effect, cause, backend),
-        _ => {
-            let (skills, mut reports) =
-                run_engine_case(case, scenario, effect, cause, &[deploy], backend, policy, shards);
-            CaseReport { case, skills, report: reports.remove(0) }
-        }
-    }
+    RunSpec::new(case, scenario, effect, cause)
+        .deploy(deploy)
+        .policy(policy)
+        .shards(shards)
+        .run(backend)
 }
 
-/// Like [`run_case`] but costs ONE real execution on MANY topologies via
-/// DES replay (numerics never depend on the deploy, so this is exact and
-/// saves re-running expensive cases per topology — e.g. Fig. 4's
-/// Local-vs-Yarn comparison).
+/// One execution priced on many topologies — see [`RunSpec::run_multi`].
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).run_multi(deploys, backend)")]
 pub fn run_case_multi(
     case: Case,
     scenario: &Scenario,
@@ -217,10 +384,11 @@ pub fn run_case_multi(
     deploys: &[Deploy],
     backend: Arc<dyn ComputeBackend>,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    run_case_multi_policy(case, scenario, effect, cause, deploys, backend, TablePolicy::default())
+    RunSpec::new(case, scenario, effect, cause).run_multi(deploys, backend)
 }
 
-/// [`run_case_multi`] with an explicit distance-table layout policy.
+/// [`RunSpec::run_multi`] with an explicit distance-table layout policy.
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).policy(..).run_multi(deploys, backend)")]
 pub fn run_case_multi_policy(
     case: Case,
     scenario: &Scenario,
@@ -230,11 +398,11 @@ pub fn run_case_multi_policy(
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    run_case_multi_policy_sharded(case, scenario, effect, cause, deploys, backend, policy, 1)
+    RunSpec::new(case, scenario, effect, cause).policy(policy).run_multi(deploys, backend)
 }
 
-/// [`run_case_multi_policy`] with a sharded distance table (see
-/// [`run_case_policy_sharded`]).
+/// [`RunSpec::run_multi`] with a sharded distance table.
+#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).shards(..).run_multi(deploys, backend)")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_case_multi_policy_sharded(
     case: Case,
@@ -246,14 +414,10 @@ pub fn run_case_multi_policy_sharded(
     policy: TablePolicy,
     shards: usize,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    match case {
-        Case::A1 => {
-            let rep = run_a1(scenario, effect, cause, backend);
-            let reports = deploys.iter().map(|_| rep.report.clone()).collect();
-            (rep.skills, reports)
-        }
-        _ => run_engine_case(case, scenario, effect, cause, deploys, backend, policy, shards),
-    }
+    RunSpec::new(case, scenario, effect, cause)
+        .policy(policy)
+        .shards(shards)
+        .run_multi(deploys, backend)
 }
 
 /// Case A1: plain sequential loop, no engine. The measured wallclock *is*
@@ -298,10 +462,18 @@ fn run_a1(
             sim_rejoin_ship_s: 0.0,
             sim_rejoin_ship_bytes: 0,
             sim_speculative_task_s: 0.0,
+            sim_result_ingress_bytes: 0,
             topology: "single-thread".to_string(),
         },
     }
 }
+
+/// Modeled wire bytes per harvested result element for the DES
+/// `sim_result_ingress_bytes` tally: one f32 prediction row, one
+/// six-f64 partial-sums record, one f32 rho per skill row.
+const PRED_WIRE_BYTES: u64 = 4;
+const SUMS_WIRE_BYTES: u64 = 48;
+const ROW_WIRE_BYTES: u64 = 4;
 
 /// Cases A2–A5: engine-scheduled pipelines. Executes once; returns one
 /// [`ExecutionReport`] per requested deploy (DES replays of the same log).
@@ -315,12 +487,16 @@ fn run_engine_case(
     backend: Arc<dyn ComputeBackend>,
     policy: TablePolicy,
     shards: usize,
+    reduce: ReduceMode,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
     let ctx = Context::new(
         EngineConfig::new(deploys[0].clone()).with_default_parallelism(scenario.partitions),
     );
     let master = Rng::new(scenario.seed);
     let mut skills = Vec::new();
+    // modeled result-ingress tally, mirrored into every report's
+    // `sim_result_ingress_bytes` — the quantity worker-side reduce shrinks
+    let mut ingress: u64 = 0;
     let min_l = scenario.ls.iter().copied().min().unwrap_or(1);
 
     // One problem + (optionally) one distance table per (E, tau); L only
@@ -336,6 +512,7 @@ fn run_engine_case(
     // of peaking at the whole grid; a no-op for in-process backends)
     let mut pending = Vec::new();
     let mut pending_chunks = Vec::new();
+    let mut pending_sums = Vec::new();
     for &e in &scenario.es {
         for &tau in &scenario.taus {
             let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
@@ -377,7 +554,9 @@ fn run_engine_case(
             }
 
             let mut sync_chunks = Vec::new();
+            let mut sync_sums = Vec::new();
             let mut async_chunk_futs = Vec::new();
+            let mut async_sums_futs = Vec::new();
             let mut async_skill_futs = Vec::new();
             for &l in &scenario.ls {
                 let params = crate::ccm::params::CcmParams::new(e, tau, l);
@@ -385,11 +564,24 @@ fn run_engine_case(
                 let rdd = ctx.parallelize_with(samples, scenario.partitions);
                 if let Some(sharded) = &sharded_b {
                     let b = Arc::clone(&backend);
-                    for chunk_rdd in sharded_transform_rdds(&ctx, &rdd, &problem_b, sharded, b) {
-                        if case.is_async() {
-                            async_chunk_futs.push(ctx.collect_async(&chunk_rdd));
-                        } else {
-                            sync_chunks.extend(ctx.collect(&chunk_rdd));
+                    if reduce == ReduceMode::Worker {
+                        // shuffle-stage reduce: each shard job returns six
+                        // partial Pearson sums instead of its prediction rows
+                        for sums_rdd in sharded_agg_rdds(&ctx, &rdd, &problem_b, sharded, b) {
+                            if case.is_async() {
+                                async_sums_futs.push(ctx.collect_async(&sums_rdd));
+                            } else {
+                                sync_sums.extend(ctx.collect(&sums_rdd));
+                            }
+                        }
+                    } else {
+                        for chunk_rdd in sharded_transform_rdds(&ctx, &rdd, &problem_b, sharded, b)
+                        {
+                            if case.is_async() {
+                                async_chunk_futs.push(ctx.collect_async(&chunk_rdd));
+                            } else {
+                                sync_chunks.extend(ctx.collect(&chunk_rdd));
+                            }
                         }
                     }
                     continue;
@@ -403,14 +595,24 @@ fn run_engine_case(
                 if case.is_async() {
                     async_skill_futs.push(ctx.collect_async(&skill_rdd));
                 } else {
-                    skills.extend(ctx.collect(&skill_rdd));
+                    let got = ctx.collect(&skill_rdd);
+                    ingress += got.len() as u64 * ROW_WIRE_BYTES;
+                    skills.extend(got);
                 }
             }
             if !sync_chunks.is_empty() {
+                ingress +=
+                    sync_chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>();
                 skills.extend(combine_shard_chunks(sync_chunks, problem_b.value()));
+            }
+            if !sync_sums.is_empty() {
+                ingress += sync_sums.len() as u64 * SUMS_WIRE_BYTES;
+                skills.extend(combine_shard_sums(sync_sums, problem_b.value(), backend.as_ref()));
             }
             if !async_chunk_futs.is_empty() {
                 pending_chunks.push((problem_b.clone(), async_chunk_futs, bcast_ids));
+            } else if !async_sums_futs.is_empty() {
+                pending_sums.push((problem_b.clone(), async_sums_futs, bcast_ids));
             } else if !async_skill_futs.is_empty() {
                 pending.push((async_skill_futs, bcast_ids));
             } else {
@@ -421,7 +623,9 @@ fn run_engine_case(
     }
     for (futs, bcast_ids) in pending {
         for fa in futs {
-            skills.extend(fa.get());
+            let got = fa.get();
+            ingress += got.len() as u64 * ROW_WIRE_BYTES;
+            skills.extend(got);
         }
         backend.evict_broadcasts(&bcast_ids);
     }
@@ -430,11 +634,25 @@ fn run_engine_case(
         for fa in futs {
             chunks.extend(fa.get());
         }
+        ingress += chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>();
         skills.extend(combine_shard_chunks(chunks, problem_b.value()));
         backend.evict_broadcasts(&bcast_ids);
     }
+    for (problem_b, futs, bcast_ids) in pending_sums {
+        let mut sums = Vec::new();
+        for fa in futs {
+            sums.extend(fa.get());
+        }
+        ingress += sums.len() as u64 * SUMS_WIRE_BYTES;
+        skills.extend(combine_shard_sums(sums, problem_b.value(), backend.as_ref()));
+        backend.evict_broadcasts(&bcast_ids);
+    }
 
-    let reports = deploys.iter().map(|d| ctx.report_for(d.clone())).collect();
+    let mut reports: Vec<ExecutionReport> =
+        deploys.iter().map(|d| ctx.report_for(d.clone())).collect();
+    for r in &mut reports {
+        r.sim_result_ingress_bytes = ingress;
+    }
     (skills, reports)
 }
 
@@ -462,7 +680,9 @@ mod tests {
         let scenario = Scenario::smoke();
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
         let deploy = Deploy::Local { cores: 2 };
-        let a1 = run_case(Case::A1, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let a1 = RunSpec::new(Case::A1, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .run(Arc::clone(&backend));
         let expected = sorted_skills(a1.skills);
         assert_eq!(
             expected.len(),
@@ -483,15 +703,10 @@ mod tests {
             (Case::A5, TablePolicy::Truncated(KMAX)),
         ];
         for (case, policy) in runs {
-            let rep = run_case_policy(
-                case,
-                &scenario,
-                &y,
-                &x,
-                deploy.clone(),
-                Arc::clone(&backend),
-                policy,
-            );
+            let rep = RunSpec::new(case, &scenario, &y, &x)
+                .deploy(deploy.clone())
+                .policy(policy)
+                .run(Arc::clone(&backend));
             let got = sorted_skills(rep.skills);
             assert_eq!(got.len(), expected.len(), "{case:?}/{policy:?} skill count");
             for (a, b) in expected.iter().zip(&got) {
@@ -517,30 +732,22 @@ mod tests {
         let scenario = Scenario::smoke();
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
         let deploy = Deploy::Local { cores: 2 };
-        let a1 = run_case(Case::A1, &scenario, &y, &x, deploy.clone(), Arc::clone(&backend));
+        let a1 = RunSpec::new(Case::A1, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .run(Arc::clone(&backend));
         let expected = sorted_skills(a1.skills);
         // monolithic-table reference: sharded must be bit-identical to it
-        let mono = run_case_policy(
-            Case::A4,
-            &scenario,
-            &y,
-            &x,
-            deploy.clone(),
-            Arc::clone(&backend),
-            TablePolicy::TruncatedAuto,
-        );
+        let mono = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .policy(TablePolicy::TruncatedAuto)
+            .run(Arc::clone(&backend));
         let mono = sorted_skills(mono.skills);
         for (case, shards) in [(Case::A4, 2), (Case::A4, 5), (Case::A5, 3)] {
-            let rep = run_case_policy_sharded(
-                case,
-                &scenario,
-                &y,
-                &x,
-                deploy.clone(),
-                Arc::clone(&backend),
-                TablePolicy::TruncatedAuto,
-                shards,
-            );
+            let rep = RunSpec::new(case, &scenario, &y, &x)
+                .deploy(deploy.clone())
+                .policy(TablePolicy::TruncatedAuto)
+                .shards(shards)
+                .run(Arc::clone(&backend));
             let got = sorted_skills(rep.skills);
             assert_eq!(got.len(), expected.len(), "{case:?}/{shards} shards skill count");
             for ((a, b), m) in expected.iter().zip(&got).zip(&mono) {
@@ -609,16 +816,60 @@ mod tests {
     fn engine_cases_record_jobs() {
         let (x, y) = series();
         let scenario = Scenario::smoke();
-        let rep = run_case(
-            Case::A5,
-            &scenario,
-            &y,
-            &x,
-            Deploy::paper_cluster(),
-            Arc::new(NativeBackend),
-        );
+        let rep = RunSpec::new(Case::A5, &scenario, &y, &x)
+            .deploy(Deploy::paper_cluster())
+            .run(Arc::new(NativeBackend));
         assert!(rep.report.sim_makespan_s > 0.0);
         assert!(rep.report.measured_wall_s > 0.0);
+        assert!(rep.report.sim_result_ingress_bytes > 0, "harvest tally must be recorded");
         assert_eq!(rep.report.topology, "cluster(5x4)");
+    }
+
+    #[test]
+    fn reduce_mode_parse_round_trips() {
+        for m in [ReduceMode::Driver, ReduceMode::Worker] {
+            assert_eq!(ReduceMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ReduceMode::parse(" Worker "), Some(ReduceMode::Worker));
+        assert_eq!(ReduceMode::parse("shuffle"), None);
+        assert_eq!(ReduceMode::default(), ReduceMode::Driver);
+    }
+
+    #[test]
+    fn worker_reduce_matches_driver_reduce_within_1_ulp() {
+        use crate::ccm::pipeline::f32_ulp_distance;
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let deploy = Deploy::Local { cores: 2 };
+        for (case, shards) in [(Case::A4, 3), (Case::A5, 2)] {
+            let spec = RunSpec::new(case, &scenario, &y, &x)
+                .deploy(deploy.clone())
+                .policy(TablePolicy::TruncatedAuto)
+                .shards(shards);
+            let driver_red = spec.clone().reduce(ReduceMode::Driver).run(Arc::clone(&backend));
+            let worker_red = spec.reduce(ReduceMode::Worker).run(Arc::clone(&backend));
+            let a = sorted_skills(driver_red.skills);
+            let b = sorted_skills(worker_red.skills);
+            assert_eq!(a.len(), b.len(), "{case:?}/{shards} shards skill count");
+            for (d, w) in a.iter().zip(&b) {
+                assert_eq!((d.0, d.1, d.2, d.3), (w.0, w.1, w.2, w.3), "{case:?} keys");
+                assert!(
+                    f32_ulp_distance(d.4, w.4) <= 1,
+                    "{case:?}/{shards} shards: worker-reduce rho {} vs driver {} drifts > 1 ULP",
+                    w.4,
+                    d.4
+                );
+            }
+            // six f64 sums per (skill, shard) must undercut raw prediction
+            // rows in the modeled ingress too
+            assert!(
+                worker_red.report.sim_result_ingress_bytes
+                    < driver_red.report.sim_result_ingress_bytes,
+                "{case:?}/{shards} shards: worker-reduce ingress {} !< driver {}",
+                worker_red.report.sim_result_ingress_bytes,
+                driver_red.report.sim_result_ingress_bytes
+            );
+        }
     }
 }

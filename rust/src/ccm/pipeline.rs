@@ -32,8 +32,23 @@
 //! concatenates chunks in row order and applies Pearson
 //! ([`combine_shard_chunks`]) — arithmetic identical to the unsharded
 //! tail, so skills are bit-identical.
+//!
+//! # Worker-side reduce (shuffle stage)
+//!
+//! [`sharded_agg_rdds`] is the map-side-combine variant of the sharded
+//! transform: each task folds its shard's predictions straight into a
+//! [`PearsonSums`] partial (n, Σx, Σy, Σxy, Σx², Σy²) and ships ~48 bytes
+//! back instead of a prediction chunk. The driver groups partials per
+//! (E, tau, L, sample) key ([`combine_shard_sums`]), merges them in
+//! shard-index order (`ComputeBackend::merge_sums` — on a worker for the
+//! cluster backend), and evaluates rho from the merged sums
+//! ([`pearson_from_sums`]). Per-chunk accumulation and the merge are both
+//! compensated (Kahan) with the compensation internal to each call, so a
+//! partial computed in-process and one computed across the wire are
+//! bit-identical, and rho agrees with the driver-concat path to within
+//! 1 ULP (asserted by tests and the `--reduce` A/B in CI).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, TaskArena};
@@ -308,15 +323,17 @@ pub fn sharded_transform_rdds(
 /// row order, Pearson against the problem's targets. The concatenated
 /// vector is element-for-element the unsharded pipeline's prediction
 /// vector, and `pearson_f32` runs the same summation order — bit-identical
-/// skills. Output is sorted by (E, tau, L, sample).
+/// skills. Groups are visited in sorted key order (`BTreeMap`), so every
+/// step of the combine — not just the sorted output — is independent of
+/// hasher seed. Output is sorted by (E, tau, L, sample).
 pub fn combine_shard_chunks(chunks: Vec<PredChunk>, problem: &CcmProblem) -> Vec<SkillRow> {
     let n = problem.targets.len();
-    let mut groups: HashMap<(usize, usize, usize, usize), Vec<PredChunk>> = HashMap::new();
+    let mut groups: BTreeMap<(usize, usize, usize, usize), Vec<PredChunk>> = BTreeMap::new();
     for c in chunks {
         let key = (c.params.e, c.params.tau, c.params.l, c.sample_id);
         groups.entry(key).or_default().push(c);
     }
-    let mut out: Vec<SkillRow> = groups
+    groups
         .into_values()
         .map(|mut chunks| {
             chunks.sort_by_key(|c| c.row_lo);
@@ -330,9 +347,245 @@ pub fn combine_shard_chunks(chunks: Vec<PredChunk>, problem: &CcmProblem) -> Vec
             assert_eq!(preds.len(), n, "shard chunks do not cover the manifold");
             SkillRow { params, sample_id, rho: pearson_f32(&preds, &problem.targets) }
         })
-        .collect();
-    out.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
-    out
+        .collect()
+}
+
+/// Streaming partial Pearson sums over a row range: the five raw moments
+/// plus the count. This is the shuffle-stage value type — a worker folds
+/// its shard's predictions (x) and the aligned targets (y) into one of
+/// these and ships ~48 bytes instead of the prediction chunk.
+///
+/// Accumulation ([`PearsonSums::from_slices`]) and the merge
+/// ([`PearsonSums::merge_all`]) are compensated (Kahan) *internally*: the
+/// compensation terms never leave the call, only the plain `f64` sums do.
+/// A partial is therefore a pure function of its chunk's data, and a merge
+/// a pure function of the ordered partials — in-process and across-the-wire
+/// reduces are bit-identical (the JSON writer round-trips f64 exactly).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PearsonSums {
+    /// Number of (x, y) pairs folded in.
+    pub n: u64,
+    /// Σx.
+    pub sx: f64,
+    /// Σy.
+    pub sy: f64,
+    /// Σxy.
+    pub sxy: f64,
+    /// Σx².
+    pub sxx: f64,
+    /// Σy².
+    pub syy: f64,
+}
+
+/// Compensated (Kahan) f64 accumulator — private to [`PearsonSums`]; the
+/// compensation term never crosses an API boundary.
+#[derive(Clone, Copy, Default)]
+struct Kahan {
+    sum: f64,
+    c: f64,
+}
+
+impl Kahan {
+    fn add(&mut self, v: f64) {
+        let y = v - self.c;
+        let t = self.sum + y;
+        self.c = (t - self.sum) - y;
+        self.sum = t;
+    }
+}
+
+impl PearsonSums {
+    /// Fold one chunk's aligned (predictions, targets) pairs into partial
+    /// sums, compensated. One call per shard chunk — the summation order
+    /// within a chunk is fixed by row order, so the result is deterministic
+    /// for a given chunk regardless of where it runs.
+    pub fn from_slices(xs: &[f32], ys: &[f32]) -> PearsonSums {
+        assert_eq!(xs.len(), ys.len(), "predictions and targets must align");
+        let mut sx = Kahan::default();
+        let mut sy = Kahan::default();
+        let mut sxy = Kahan::default();
+        let mut sxx = Kahan::default();
+        let mut syy = Kahan::default();
+        for (&xf, &yf) in xs.iter().zip(ys) {
+            let (x, y) = (xf as f64, yf as f64);
+            sx.add(x);
+            sy.add(y);
+            sxy.add(x * y);
+            sxx.add(x * x);
+            syy.add(y * y);
+        }
+        PearsonSums {
+            n: xs.len() as u64,
+            sx: sx.sum,
+            sy: sy.sum,
+            sxy: sxy.sum,
+            sxx: sxx.sum,
+            syy: syy.sum,
+        }
+    }
+
+    /// Merge partials column-wise in slice order (callers pass them sorted
+    /// by shard index), compensated. Deterministic for a given ordered
+    /// slice, so the driver-local default and a worker-side merge of the
+    /// same partials produce bit-identical sums.
+    pub fn merge_all(parts: &[PearsonSums]) -> PearsonSums {
+        let mut n = 0u64;
+        let mut sx = Kahan::default();
+        let mut sy = Kahan::default();
+        let mut sxy = Kahan::default();
+        let mut sxx = Kahan::default();
+        let mut syy = Kahan::default();
+        for p in parts {
+            n += p.n;
+            sx.add(p.sx);
+            sy.add(p.sy);
+            sxy.add(p.sxy);
+            sxx.add(p.sxx);
+            syy.add(p.syy);
+        }
+        PearsonSums { n, sx: sx.sum, sy: sy.sum, sxy: sxy.sum, sxx: sxx.sum, syy: syy.sum }
+    }
+}
+
+/// Pearson correlation from merged raw-moment sums, mirroring
+/// [`pearson_f32`]'s guards: empty input and zero variance both yield 0.
+///
+/// `cov = Σxy − n·x̄·ȳ`, `vx = Σx² − n·x̄²`, `vy = Σy² − n·ȳ²`,
+/// `rho = cov / sqrt(vx · vy)`. The two-pass mean-centered driver path and
+/// this raw-moment form agree to well under one f32 ULP on bounded CCM
+/// data (asserted by the property suite).
+pub fn pearson_from_sums(s: &PearsonSums) -> f32 {
+    if s.n == 0 {
+        return 0.0;
+    }
+    let n = s.n as f64;
+    let mx = s.sx / n;
+    let my = s.sy / n;
+    let cov = s.sxy - n * mx * my;
+    let vx = s.sxx - n * mx * mx;
+    let vy = s.syy - n * my * my;
+    let denom = (vx * vy).sqrt();
+    if denom > 0.0 {
+        (cov / denom) as f32
+    } else {
+        0.0
+    }
+}
+
+/// Distance between two f32 values in units-in-the-last-place, treating
+/// the floats as points on the monotonic integer line (negative zero and
+/// positive zero are 0 apart). `0` means bit-identical-or-signed-zero;
+/// the worker-reduce acceptance bound is `<= 1`.
+pub fn f32_ulp_distance(a: f32, b: f32) -> u64 {
+    fn ordered(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            -0x8000_0000 - i
+        } else {
+            i
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+/// One sample's partial Pearson sums for one shard's query rows — the unit
+/// the shuffle-stage aggregation jobs emit (~48 bytes vs. a few KB for a
+/// [`PredChunk`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SumsChunk {
+    pub params: CcmParams,
+    pub sample_id: usize,
+    pub shard_id: usize,
+    pub sums: PearsonSums,
+}
+
+/// §3.2 use, sharded, with map-side combine: one job per shard over the
+/// same samples RDD, but each task reduces its shard's predictions to a
+/// [`PearsonSums`] partial via `ComputeBackend::agg_chunk_into` — in-process
+/// by default, or on a remote worker as a wire-v5 `agg_chunk` task (the
+/// raw predictions then never leave the worker). The caller harvests all
+/// jobs and feeds [`combine_shard_sums`].
+pub fn sharded_agg_rdds(
+    _ctx: &Context,
+    samples: &Rdd<LibrarySample>,
+    problem: &Broadcast<CcmProblem>,
+    table: &ShardedTableBroadcast,
+    backend: Arc<dyn ComputeBackend>,
+) -> Vec<Rdd<SumsChunk>> {
+    let samples = samples.cache();
+    table
+        .shards()
+        .iter()
+        .map(|shard_b| {
+            let problem = problem.clone();
+            let shard_b2 = shard_b.clone();
+            let backend = Arc::clone(&backend);
+            samples
+                .uses_broadcast(&problem)
+                .uses_broadcast(shard_b)
+                .named(format!("table_shard_{}.agg", shard_b.value().shard_id))
+                .map_partitions(move |_p, samples| {
+                    let prob = problem.value();
+                    let shard = shard_b2.value();
+                    let mut arena = TaskArena::new();
+                    samples
+                        .into_iter()
+                        .map(|s| SumsChunk {
+                            params: s.params,
+                            sample_id: s.sample_id,
+                            shard_id: shard.shard_id,
+                            sums: backend.agg_chunk_into(
+                                shard,
+                                &prob.targets,
+                                prob.theiler,
+                                &s.rows,
+                                s.params.e,
+                                &mut arena,
+                            ),
+                        })
+                        .collect()
+                })
+        })
+        .collect()
+}
+
+/// Driver-side combine for the worker-reduce path: group partials per
+/// (params, sample) key in sorted key order, merge each group's sums in
+/// shard-index order (`ComputeBackend::merge_sums` — the cluster backend
+/// ships this to a v5 worker, the default merges in-process; both are
+/// bit-identical), and evaluate rho from the merged sums. Coverage is
+/// checked: duplicate shard partials and missing rows both panic, so a
+/// requeued task can never be double-counted silently. Output is sorted by
+/// (E, tau, L, sample), like [`combine_shard_chunks`].
+pub fn combine_shard_sums(
+    chunks: Vec<SumsChunk>,
+    problem: &CcmProblem,
+    backend: &dyn ComputeBackend,
+) -> Vec<SkillRow> {
+    let n = problem.targets.len() as u64;
+    let mut groups: BTreeMap<(usize, usize, usize, usize), Vec<SumsChunk>> = BTreeMap::new();
+    for c in chunks {
+        let key = (c.params.e, c.params.tau, c.params.l, c.sample_id);
+        groups.entry(key).or_default().push(c);
+    }
+    groups
+        .into_values()
+        .map(|mut chunks| {
+            chunks.sort_by_key(|c| c.shard_id);
+            for w in chunks.windows(2) {
+                assert_ne!(
+                    w[0].shard_id, w[1].shard_id,
+                    "duplicate shard partial — a requeued agg task was double-counted"
+                );
+            }
+            let params = chunks[0].params;
+            let sample_id = chunks[0].sample_id;
+            let partials: Vec<PearsonSums> = chunks.iter().map(|c| c.sums).collect();
+            let merged = backend.merge_sums(&partials);
+            assert_eq!(merged.n, n, "shard partial sums do not cover the manifold");
+            SkillRow { params, sample_id, rho: pearson_from_sums(&merged) }
+        })
+        .collect()
 }
 
 /// §3.2 (use) — the CCM transform pipeline with the broadcast table:
@@ -598,6 +851,179 @@ mod tests {
             combine_shard_chunks(vec![chunk], prob)
         }));
         assert!(got.is_err(), "a missing shard chunk must not silently pass");
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(f32_ulp_distance(1.0, 1.0), 0);
+        assert_eq!(f32_ulp_distance(0.0, -0.0), 0);
+        assert_eq!(f32_ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(
+            f32_ulp_distance(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)),
+            1
+        );
+        // straddling zero: one step each side of the signed-zero pair
+        assert_eq!(f32_ulp_distance(f32::from_bits(1), -f32::from_bits(1)), 2);
+        assert!(f32_ulp_distance(1.0, 1.0 + 1e-4) > 1);
+    }
+
+    #[test]
+    fn pearson_from_sums_matches_pearson_f32_within_1_ulp() {
+        let (_ctx, problem, samples) = setup();
+        let prob = problem.value();
+        let backend = NativeBackend;
+        let mut arena = TaskArena::new();
+        for s in &samples {
+            let rho_concat = backend.cross_map_into(&prob.input_for(s), &mut arena);
+            let sums = PearsonSums::from_slices(&arena.preds, &prob.targets);
+            let rho_sums = pearson_from_sums(&sums);
+            assert!(
+                f32_ulp_distance(rho_concat, rho_sums) <= 1,
+                "sample {}: concat {} vs sums {}",
+                s.sample_id,
+                rho_concat,
+                rho_sums
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_deterministic_and_split_invariance_holds_to_1_ulp() {
+        let (_ctx, problem, samples) = setup();
+        let prob = problem.value();
+        let backend = NativeBackend;
+        let mut arena = TaskArena::new();
+        let s = &samples[0];
+        backend.cross_map_into(&prob.input_for(s), &mut arena);
+        let preds = arena.preds.clone();
+        let whole = PearsonSums::from_slices(&preds, &prob.targets);
+        for parts in [2usize, 3, 7] {
+            let bounds = shard_bounds(preds.len(), parts);
+            let partials: Vec<PearsonSums> = bounds
+                .iter()
+                .map(|&(lo, hi)| {
+                    PearsonSums::from_slices(&preds[lo..hi], &prob.targets[lo..hi])
+                })
+                .collect();
+            let merged = PearsonSums::merge_all(&partials);
+            // merging the same ordered partials twice is bit-identical
+            assert_eq!(merged, PearsonSums::merge_all(&partials));
+            assert_eq!(merged.n, whole.n);
+            // a different split changes the grouping of the compensated
+            // sums, so only rho-level agreement is guaranteed
+            assert!(
+                f32_ulp_distance(pearson_from_sums(&merged), pearson_from_sums(&whole)) <= 1,
+                "{parts} parts"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_agg_mode_matches_driver_concat_within_1_ulp() {
+        let (ctx, problem, samples) = setup();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let n = problem.value().emb.n;
+        let mode = TableMode::Truncated { prefix: DistanceTable::auto_prefix(n, 150) };
+
+        for shards in [1usize, 3, 7] {
+            let sharded = sharded_table_pipeline_mode(&ctx, &problem, 4, mode, shards);
+
+            let rdd = ctx.parallelize_with(samples.clone(), 4);
+            let mut chunks = Vec::new();
+            for chunk_rdd in
+                sharded_transform_rdds(&ctx, &rdd, &problem, &sharded, Arc::clone(&backend))
+            {
+                chunks.extend(ctx.collect(&chunk_rdd));
+            }
+            let want = combine_shard_chunks(chunks, problem.value());
+
+            let rdd = ctx.parallelize_with(samples.clone(), 4);
+            let mut sums = Vec::new();
+            for sums_rdd in
+                sharded_agg_rdds(&ctx, &rdd, &problem, &sharded, Arc::clone(&backend))
+            {
+                sums.extend(ctx.collect(&sums_rdd));
+            }
+            let got = combine_shard_sums(sums, problem.value(), backend.as_ref());
+
+            assert_eq!(got.len(), want.len(), "{shards} shards");
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.sample_id, b.sample_id);
+                assert_eq!(a.params, b.params);
+                assert!(
+                    f32_ulp_distance(a.rho, b.rho) <= 1,
+                    "{shards} shards sample {}: concat {} vs worker-reduce {}",
+                    a.sample_id,
+                    a.rho,
+                    b.rho
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn agg_jobs_depend_on_their_own_shard_only() {
+        let (ctx, problem, samples) = setup();
+        let sharded = sharded_table_pipeline_mode(&ctx, &problem, 4, TableMode::Full, 3);
+        let rdd = ctx.parallelize_with(samples, 4);
+        let sums_rdds = sharded_agg_rdds(&ctx, &rdd, &problem, &sharded, Arc::new(NativeBackend));
+        for r in &sums_rdds {
+            let _ = ctx.collect(r);
+        }
+        let jobs = ctx.events().jobs();
+        let agg_jobs: Vec<_> = jobs.iter().filter(|j| j.name.contains(".agg")).collect();
+        assert_eq!(agg_jobs.len(), 3);
+        for (s, job) in agg_jobs.iter().enumerate() {
+            let b = &sharded.shards()[s];
+            assert_eq!(job.name, format!("table_shard_{s}.agg"));
+            assert_eq!(job.broadcast_deps.len(), 2, "problem + own shard only");
+            assert!(job.broadcast_deps.contains(&(b.id(), b.size_bytes())));
+        }
+    }
+
+    #[test]
+    fn combine_sums_rejects_duplicate_and_missing_partials() {
+        let (_ctx, problem, samples) = setup();
+        let prob = problem.value();
+        let table = DistanceTable::build(&prob.emb);
+        let sharded = table.shard(2);
+        let backend = NativeBackend;
+        let mut arena = TaskArena::new();
+        let s = &samples[0];
+        let chunk_for = |shard_idx: usize, arena: &mut TaskArena| {
+            let shard = &sharded.shards()[shard_idx];
+            SumsChunk {
+                params: s.params,
+                sample_id: s.sample_id,
+                shard_id: shard.shard_id,
+                sums: backend.agg_chunk_into(
+                    shard,
+                    &prob.targets,
+                    prob.theiler,
+                    &s.rows,
+                    s.params.e,
+                    arena,
+                ),
+            }
+        };
+        let c0 = chunk_for(0, &mut arena);
+        let c1 = chunk_for(1, &mut arena);
+
+        // complete coverage combines fine
+        let ok = combine_shard_sums(vec![c1, c0], prob, &backend);
+        assert_eq!(ok.len(), 1);
+
+        // a missing partial must not silently pass
+        let missing = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            combine_shard_sums(vec![c0], prob, &backend)
+        }));
+        assert!(missing.is_err(), "missing shard partial must panic");
+
+        // a double-counted (requeued twice) partial must not silently pass
+        let dup = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            combine_shard_sums(vec![c0, c1, c1], prob, &backend)
+        }));
+        assert!(dup.is_err(), "duplicate shard partial must panic");
     }
 
     #[test]

@@ -75,8 +75,10 @@ use crate::util::json::Json;
 /// message change. v2 added the `evict` message and the capability-carrying
 /// hello (`transport`, `caps` fields); v3 added the authenticated
 /// handshake (`auth` in hello, `hello_ack`, `reject`) and the keepalive
-/// `ping`/`pong` pair; v4 added the per-frame FNV-1a checksum suffix.
-pub const WIRE_VERSION: u64 = 4;
+/// `ping`/`pong` pair; v4 added the per-frame FNV-1a checksum suffix; v5
+/// added the worker-side-reduce task kinds `agg_chunk` and `merge_sums`
+/// (partial Pearson sums instead of raw predictions).
+pub const WIRE_VERSION: u64 = 5;
 
 /// Oldest protocol version the driver still accepts. Older workers are
 /// served without newer-version traffic (no `evict`/`hello_ack`/`ping`).
@@ -93,6 +95,13 @@ pub const KEEPALIVE_WIRE_VERSION: u64 = 3;
 /// FNV-1a checksum suffix. Connections negotiated below this run exactly
 /// the v3 byte streams (pinned by the doctored-handshake test).
 pub const CHECKSUM_WIRE_VERSION: u64 = 4;
+
+/// First wire version that understands the worker-side-reduce task kinds
+/// `agg_chunk` (fold a shard chunk into partial Pearson sums) and
+/// `merge_sums` (merge ordered partials). Peers below this never receive
+/// either op — the driver silently keeps their results on the
+/// driver-concat path, which is bit-for-bit the v4 behaviour.
+pub const AGG_WIRE_VERSION: u64 = 5;
 
 /// Per-write deadline on every TCP connection. A *frozen* peer (SIGSTOP,
 /// livelocked host) keeps its sockets open while its kernel buffers fill;
@@ -185,6 +194,14 @@ pub trait Transport: Send {
 /// Receive the next non-empty line as parsed JSON; EOF and parse failures
 /// become `std::io` errors so callers have a single failure channel.
 pub fn recv_json(t: &mut dyn Transport) -> std::io::Result<Json> {
+    recv_json_counted(t).map(|(msg, _)| msg)
+}
+
+/// [`recv_json`] plus the received line's byte count (the payload as the
+/// transport surfaced it — checksum suffix already stripped on v4+
+/// connections — plus one for the newline). The driver's result-ingress
+/// accounting reads the count for accepted `result` frames.
+pub fn recv_json_counted(t: &mut dyn Transport) -> std::io::Result<(Json, u64)> {
     loop {
         match t.recv_line()? {
             None => {
@@ -195,9 +212,12 @@ pub fn recv_json(t: &mut dyn Transport) -> std::io::Result<Json> {
             }
             Some(line) if line.trim().is_empty() => continue,
             Some(line) => {
-                return Json::parse(&line).map_err(|e| {
-                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
-                })
+                let bytes = line.trim_end_matches(['\r', '\n']).len() as u64 + 1;
+                return Json::parse(&line)
+                    .map(|msg| (msg, bytes))
+                    .map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    });
             }
         }
     }

@@ -251,6 +251,9 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_rejoin_ship_s: rejoin_ship_s,
         sim_rejoin_ship_bytes: rejoin_ship_bytes,
         sim_speculative_task_s: speculative_task_s,
+        // the event log carries no result payload sizes; the driver
+        // overrides this with its harvest tally (see `run_engine_case`)
+        sim_result_ingress_bytes: 0,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),

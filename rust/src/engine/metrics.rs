@@ -184,6 +184,12 @@ pub struct ExecutionReport {
     /// real counterparts are `ClusterBackend::speculative_launches` /
     /// `speculative_wins`.
     pub sim_speculative_task_s: f64,
+    /// Bytes of task results the driver would pull back over the wire —
+    /// raw predictions under driver-side reduce, six-number partial sums
+    /// under worker-side reduce (`--reduce worker`). Modeled from the
+    /// harvested result payloads; the real counterpart is
+    /// `PoolCounters::result_ingress_bytes`.
+    pub sim_result_ingress_bytes: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -202,6 +208,7 @@ impl ExecutionReport {
             ("sim_rejoin_ship_s", Json::Num(self.sim_rejoin_ship_s)),
             ("sim_rejoin_ship_bytes", Json::Num(self.sim_rejoin_ship_bytes as f64)),
             ("sim_speculative_task_s", Json::Num(self.sim_speculative_task_s)),
+            ("sim_result_ingress_bytes", Json::Num(self.sim_result_ingress_bytes as f64)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

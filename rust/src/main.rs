@@ -21,7 +21,7 @@ use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
 use parccm::ccm::chaos::chaos_from_env;
 use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, OnExhausted};
-use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
+use parccm::ccm::driver::{skills_to_json, Case, ReduceMode, RunSpec, TablePolicy};
 use parccm::ccm::lifecycle::{parse_workers_at, workers_at_from_env};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::transport::{resolve_auth_token, TransportKind};
@@ -131,6 +131,13 @@ fn print_help() {
                                 the O(n*P) truncated broadcast; bit-identical skills)\n\
            --shards N           split the distance table into N row-range shards,\n\
                                 one broadcast + transform job per shard (default 1)\n\
+           --reduce driver|worker\n\
+                                where the Pearson reduction runs for sharded table\n\
+                                cases: driver (default) ships raw prediction rows\n\
+                                back and concatenates; worker reduces each shard\n\
+                                to six partial sums on the worker (v5 wire ops\n\
+                                agg_chunk/merge_sums) — same skills to within\n\
+                                1 ULP, result ingress O(shards) instead of O(rows)\n\
            --case A1..A5        fig4: run a single implementation level\n\
            --dump-skills FILE   fig4: write skills as canonical JSON (two runs are\n\
                                 bit-identical iff the files are byte-identical);\n\
@@ -371,8 +378,25 @@ fn table_policy_from(args: &Args) -> TablePolicy {
     }
 }
 
-/// [`run_case_policy_sharded`] with the table layout and shard count
-/// picked from the command's own `--table` / `--shards` arguments.
+/// Pearson reduction placement for sharded table cases: `--reduce worker`
+/// keeps raw predictions on the workers and ships six partial sums per
+/// (skill, shard) instead; the default ships the rows.
+fn reduce_from(args: &Args) -> ReduceMode {
+    match args.get("reduce") {
+        None => ReduceMode::Driver,
+        Some(m) => match ReduceMode::parse(m) {
+            Some(r) => r,
+            None => {
+                eprintln!("[parccm] FATAL: unknown --reduce '{m}' (expected driver|worker)");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+/// A [`RunSpec`] with the table layout, shard count, and reduce placement
+/// picked from the command's own `--table` / `--shards` / `--reduce`
+/// arguments.
 #[allow(clippy::too_many_arguments)]
 fn run_case(
     args: &Args,
@@ -383,16 +407,12 @@ fn run_case(
     deploy: Deploy,
     backend: Arc<dyn ComputeBackend>,
 ) -> parccm::ccm::driver::CaseReport {
-    run_case_policy_sharded(
-        case,
-        scenario,
-        effect,
-        cause,
-        deploy,
-        backend,
-        table_policy_from(args),
-        args.get_usize("shards", 1),
-    )
+    RunSpec::new(case, scenario, effect, cause)
+        .deploy(deploy)
+        .policy(table_policy_from(args))
+        .shards(args.get_usize("shards", 1))
+        .reduce(reduce_from(args))
+        .run(backend)
 }
 
 fn cmd_cases() -> ExitCode {
@@ -430,16 +450,11 @@ fn cmd_fig4(args: &Args) -> ExitCode {
     for case in cases {
         // one real execution per case; Local and Yarn are DES replays of
         // the same event log (numerics are deploy-independent)
-        let (skills, reports) = parccm::ccm::driver::run_case_multi_policy_sharded(
-            case,
-            &scenario,
-            &y,
-            &x,
-            &[local.clone(), cluster.clone()],
-            Arc::clone(&backend),
-            table_policy_from(args),
-            args.get_usize("shards", 1),
-        );
+        let (skills, reports) = RunSpec::new(case, &scenario, &y, &x)
+            .policy(table_policy_from(args))
+            .shards(args.get_usize("shards", 1))
+            .reduce(reduce_from(args))
+            .run_multi(&[local.clone(), cluster.clone()], Arc::clone(&backend));
         all_skills.extend(skills);
         table.push(
             Row::new(format!("{} {}", case.name(), case.description()))
@@ -469,8 +484,9 @@ fn cmd_fig4(args: &Args) -> ExitCode {
         // cluster-remote CI job asserts the rejoin counters from here
         let counters: Vec<(&str, Json)> = backend
             .run_counters()
-            .iter()
-            .map(|&(k, v)| (k, Json::Num(v as f64)))
+            .to_pairs()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
             .collect();
         let meta = Json::obj(vec![
             ("backend", Json::Str(backend.name().to_string())),

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
-use parccm::ccm::driver::{run_case, Case};
+use parccm::ccm::driver::{Case, RunSpec};
 use parccm::ccm::params::Scenario;
 use parccm::ccm::result::summarize;
 use parccm::engine::Deploy;
@@ -39,8 +39,8 @@ fn detects_unidirectional_coupling_direction() {
         CoupledLogisticParams { bxy: 0.0, byx: 0.32, ..Default::default() },
     );
     let s = scenario(800, 12, vec![50, 200, 600]);
-    let xy = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
-    let yx = run_case(Case::A4, &s, &x, &y, Deploy::Local { cores: 2 }, backend());
+    let xy = RunSpec::new(Case::A4, &s, &y, &x).deploy(Deploy::Local { cores: 2 }).run(backend());
+    let yx = RunSpec::new(Case::A4, &s, &x, &y).deploy(Deploy::Local { cores: 2 }).run(backend());
     let sum_xy = summarize(&xy.skills);
     let sum_yx = summarize(&yx.skills);
     let v_xy = assess(&sum_xy, 0.1, 0.03);
@@ -61,7 +61,9 @@ fn bidirectional_coupling_detected_both_ways() {
     );
     let s = scenario(700, 10, vec![60, 500]);
     for (effect, cause, dir) in [(&y, &x, "X->Y"), (&x, &y, "Y->X")] {
-        let rep = run_case(Case::A4, &s, effect, cause, Deploy::Local { cores: 2 }, backend());
+        let rep = RunSpec::new(Case::A4, &s, effect, cause)
+            .deploy(Deploy::Local { cores: 2 })
+            .run(backend());
         let summaries = summarize(&rep.skills);
         let v = assess(&summaries, 0.1, 0.02);
         assert!(v.causal, "{dir} should be causal: {summaries:?}");
@@ -73,7 +75,7 @@ fn no_false_positive_on_independent_series() {
     let a = ar1(700, 0.6, 1);
     let b = ar1(700, 0.6, 2);
     let s = scenario(700, 10, vec![60, 500]);
-    let rep = run_case(Case::A4, &s, &b, &a, Deploy::Local { cores: 2 }, backend());
+    let rep = RunSpec::new(Case::A4, &s, &b, &a).deploy(Deploy::Local { cores: 2 }).run(backend());
     let summaries = summarize(&rep.skills);
     let top = summaries.iter().map(|x| x.mean_rho).fold(f64::MIN, f64::max);
     assert!(top < 0.35, "independent AR(1) pair shows skill {top}");
@@ -83,7 +85,7 @@ fn no_false_positive_on_independent_series() {
 fn convergence_with_library_size() {
     let (x, y) = coupled_logistic(900, CoupledLogisticParams::default());
     let s = scenario(900, 15, vec![40, 100, 300, 800]);
-    let rep = run_case(Case::A5, &s, &y, &x, Deploy::paper_cluster(), backend());
+    let rep = RunSpec::new(Case::A5, &s, &y, &x).deploy(Deploy::paper_cluster()).run(backend());
     let summaries = summarize(&rep.skills);
     assert_eq!(summaries.len(), 4);
     // monotone non-decreasing in L (tolerance folded into assess)
@@ -98,12 +100,13 @@ fn skills_identical_across_cases_large() {
     let (x, y) = coupled_logistic(500, CoupledLogisticParams::default());
     let s = scenario(500, 6, vec![80, 250]);
     let canon = {
-        let mut rows = run_case(Case::A1, &s, &y, &x, Deploy::SingleThread, backend()).skills;
+        let mut rows = RunSpec::new(Case::A1, &s, &y, &x).run(backend()).skills;
         rows.sort_by_key(|r| (r.params.l, r.sample_id));
         rows
     };
     for case in [Case::A2, Case::A3, Case::A4, Case::A5] {
-        let mut rows = run_case(case, &s, &y, &x, Deploy::paper_cluster(), backend()).skills;
+        let mut rows =
+            RunSpec::new(case, &s, &y, &x).deploy(Deploy::paper_cluster()).run(backend()).skills;
         rows.sort_by_key(|r| (r.params.l, r.sample_id));
         assert_eq!(rows.len(), canon.len());
         for (a, b) in canon.iter().zip(&rows) {
@@ -123,9 +126,10 @@ fn theiler_window_reduces_skill_of_autocorrelated_match() {
     // excluded; skill should drop (slightly) but stay defined.
     let (x, y) = coupled_logistic(600, CoupledLogisticParams::default());
     let mut s = scenario(600, 8, vec![300]);
-    let base = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    let base = RunSpec::new(Case::A4, &s, &y, &x).deploy(Deploy::Local { cores: 2 }).run(backend());
     s.theiler = 20;
-    let windowed = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    let windowed =
+        RunSpec::new(Case::A4, &s, &y, &x).deploy(Deploy::Local { cores: 2 }).run(backend());
     let rho_base = summarize(&base.skills)[0].mean_rho;
     let rho_win = summarize(&windowed.skills)[0].mean_rho;
     assert!(rho_win.is_finite());

@@ -13,9 +13,9 @@ use parccm::ccm::chaos::ChaosProfile;
 use parccm::ccm::cluster::{
     problem_wire_id, ClusterBackend, ClusterOptions, OnExhausted, TEST_HELLO_V_ENV,
 };
-use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::driver::{Case, ReduceMode, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
-use parccm::ccm::pipeline::CcmProblem;
+use parccm::ccm::pipeline::{f32_ulp_distance, CcmProblem};
 use parccm::ccm::subsample::draw_samples;
 use parccm::ccm::table::DistanceTable;
 use parccm::ccm::transport::{TransportKind, MIN_WIRE_VERSION, WIRE_VERSION};
@@ -74,8 +74,8 @@ fn tcp_cross_map_bit_identical_to_pipe_and_native() {
         assert_eq!(arena_pipe.preds, arena_tcp.preds);
         assert_eq!(arena_tcp.preds, arena_n.preds);
     }
-    assert_eq!(pipe.respawns(), 0);
-    assert_eq!(tcp.respawns(), 0);
+    assert_eq!(pipe.run_counters().respawns, 0);
+    assert_eq!(tcp.run_counters().respawns, 0);
 }
 
 #[test]
@@ -88,29 +88,19 @@ fn tcp_sharded_scenario_bit_identical_to_in_process() {
     let (x, y) = series(scenario.series_len);
     let deploy = Deploy::Local { cores: 2 };
 
-    let in_process = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy.clone(),
-        Arc::new(NativeBackend),
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let in_process = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy.clone())
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(Arc::new(NativeBackend));
 
     let tcp = spawn(TransportKind::Tcp, 2, 2);
     let backend: Arc<dyn ComputeBackend> = tcp.clone();
-    let via_workers = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy,
-        backend,
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let via_workers = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy)
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(backend);
 
     let key = |r: &parccm::ccm::result::SkillRow| {
         (r.params.e, r.params.tau, r.params.l, r.sample_id)
@@ -130,10 +120,10 @@ fn tcp_sharded_scenario_bit_identical_to_in_process() {
             key(l)
         );
     }
-    assert_eq!(tcp.respawns(), 0, "healthy run must not recycle workers");
+    assert_eq!(tcp.run_counters().respawns, 0, "healthy run must not recycle workers");
     // the driver evicts each problem's broadcasts once harvested
     assert_eq!(tcp.cached_payloads(), 0, "payload cache must be drained");
-    assert!(tcp.evictions() > 0, "workers must have been told to evict");
+    assert!(tcp.run_counters().evictions > 0, "workers must have been told to evict");
 }
 
 #[test]
@@ -173,8 +163,8 @@ fn replicated_shard_requeue_ships_zero_bytes() {
     // warm up: 3 broadcast ids (2 shards + targets), each resident on
     // both workers thanks to replication
     run_all(&mut arena_p, &mut arena_n);
-    assert_eq!(pb.broadcast_ships(), 6, "3 ids x 2 replicas");
-    let bytes_before = pb.broadcast_ship_bytes();
+    assert_eq!(pb.run_counters().broadcast_ships, 6, "3 ids x 2 replicas");
+    let bytes_before = pb.run_counters().broadcast_ship_bytes;
     assert!(bytes_before > 0);
 
     // kill one of the two (idle) workers out from under the backend
@@ -188,20 +178,24 @@ fn replicated_shard_requeue_ships_zero_bytes() {
     // the eager re-replication repair that restores the replication
     // factor on the respawned worker, counted on its own counters
     run_all(&mut arena_p, &mut arena_n);
-    assert!(pb.respawns() >= 1, "the killed worker must have been replaced");
+    assert!(pb.run_counters().respawns >= 1, "the killed worker must have been replaced");
     assert_eq!(
-        pb.broadcast_ship_bytes(),
+        pb.run_counters().broadcast_ship_bytes,
         bytes_before,
         "requeue to a surviving replica must be zero task-driven re-ship"
     );
-    assert_eq!(pb.broadcast_ships(), 6, "no additional task-driven (id, worker) ships");
-    assert_eq!(pb.rebroadcasts(), 0, "a replica survived; no re-broadcast fallback");
     assert_eq!(
-        pb.repair_ships(),
+        pb.run_counters().broadcast_ships,
+        6,
+        "no additional task-driven (id, worker) ships"
+    );
+    assert_eq!(pb.run_counters().rebroadcasts, 0, "a replica survived; no re-broadcast fallback");
+    assert_eq!(
+        pb.run_counters().repair_ships,
         3,
         "eager re-replication must restore all 3 ids on the respawned worker"
     );
-    assert!(pb.repair_ship_bytes() > 0, "repair traffic is counted in bytes too");
+    assert!(pb.run_counters().repair_ship_bytes > 0, "repair traffic is counted in bytes too");
     assert_eq!(pb.num_workers(), 2, "pool back at target size");
 
     // the repaired copies are real: kill the ORIGINAL survivor — the
@@ -217,8 +211,8 @@ fn replicated_shard_requeue_ships_zero_bytes() {
         kill9(pid);
         std::thread::sleep(Duration::from_millis(200));
         run_all(&mut arena_p, &mut arena_n);
-        assert_eq!(pb.rebroadcasts(), 0, "repair copies must serve the second death");
-        assert_eq!(pb.broadcast_ships(), 6, "still no task-driven re-ship");
+        assert_eq!(pb.run_counters().rebroadcasts, 0, "repair copies must serve the second death");
+        assert_eq!(pb.run_counters().broadcast_ships, 6, "still no task-driven re-ship");
     }
 }
 
@@ -241,8 +235,8 @@ fn last_replica_death_falls_back_to_rebroadcast() {
         assert_eq!(rho.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
     }
     // replicas=1 and shard-affine dispatch: exactly one worker holds it
-    assert_eq!(pb.broadcast_ships(), 1);
-    let bytes_before = pb.broadcast_ship_bytes();
+    assert_eq!(pb.run_counters().broadcast_ships, 1);
+    let bytes_before = pb.run_counters().broadcast_ship_bytes;
 
     // kill every live worker: the only replica dies with them
     for pid in pb.worker_pids() {
@@ -255,12 +249,15 @@ fn last_replica_death_falls_back_to_rebroadcast() {
         let rho = pb.cross_map_into(&input, &mut arena_p);
         assert_eq!(rho.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
     }
-    assert!(pb.respawns() >= 1);
+    assert!(pb.run_counters().respawns >= 1);
     // >= 1: a buffered send to a not-yet-reaped dead worker can count an
     // extra (failed) ship before the error surfaces on its reply
-    assert!(pb.rebroadcasts() >= 1, "the broadcast had to ship again after total loss");
     assert!(
-        pb.broadcast_ship_bytes() > bytes_before,
+        pb.run_counters().rebroadcasts >= 1,
+        "the broadcast had to ship again after total loss"
+    );
+    assert!(
+        pb.run_counters().broadcast_ship_bytes > bytes_before,
         "re-broadcast must be visible in the byte counter"
     );
 }
@@ -330,7 +327,7 @@ fn legacy_v1_worker_is_served_without_evict_traffic() {
     assert_eq!(pb.cached_payloads(), 1);
     pb.evict_broadcasts(&[pid]);
     assert_eq!(pb.cached_payloads(), 0, "driver-side payload must be released");
-    assert_eq!(pb.evictions(), 0, "a v1 worker must never see an evict message");
+    assert_eq!(pb.run_counters().evictions, 0, "a v1 worker must never see an evict message");
 }
 
 #[test]
@@ -369,12 +366,12 @@ fn doctored_v3_worker_runs_the_v3_byte_stream_unchanged() {
             assert_eq!(arena_p.preds, arena_n.preds);
         }
         assert_eq!(
-            pb.corrupt_frames_detected(),
+            pb.run_counters().corrupt_frames_detected,
             0,
             "{kind:?}: an un-checksummed v3 stream must never read as corrupt"
         );
-        assert_eq!(pb.respawns(), 0, "{kind:?}: no connection may have died");
-        assert!(pb.evictions() >= 1, "{kind:?}: v3 still understands evict");
+        assert_eq!(pb.run_counters().respawns, 0, "{kind:?}: no connection may have died");
+        assert!(pb.run_counters().evictions >= 1, "{kind:?}: v3 still understands evict");
     }
 }
 
@@ -422,7 +419,7 @@ fn exhausted_task_aborts_with_a_typed_actionable_message() {
         msg.contains("--on-exhausted fallback"),
         "must point at the degradation knob: {msg}"
     );
-    assert_eq!(pb.exhausted_fallbacks(), 0, "abort must not silently fall back");
+    assert_eq!(pb.run_counters().exhausted_fallbacks, 0, "abort must not silently fall back");
 }
 
 #[test]
@@ -446,10 +443,13 @@ fn exhausted_task_falls_back_to_native_bit_identically() {
         assert_eq!(arena_p.preds, arena_n.preds);
     }
     assert!(
-        pb.exhausted_fallbacks() >= 1,
+        pb.run_counters().exhausted_fallbacks >= 1,
         "every task exhausts its attempts here, so the fallback must be counted"
     );
-    assert!(pb.respawns() >= 1, "each corrupted attempt kills and respawns the worker");
+    assert!(
+        pb.run_counters().respawns >= 1,
+        "each corrupted attempt kills and respawns the worker"
+    );
 }
 
 #[test]
@@ -467,18 +467,21 @@ fn manual_eviction_releases_and_reships_on_reuse() {
 
     assert_eq!(pb.cross_map_into(&input, &mut arena_p).to_bits(), want.to_bits());
     assert_eq!(pb.cached_payloads(), 1);
-    let ships_before = pb.broadcast_ships();
+    let ships_before = pb.run_counters().broadcast_ships;
 
     let pid = problem_wire_id(&problem.emb.vecs, &problem.targets, &problem.times);
     pb.evict_broadcast_ids(&[pid]);
     assert_eq!(pb.cached_payloads(), 0);
-    assert!(pb.evictions() >= 1, "the idle holder must be told to drop its copy");
+    assert!(pb.run_counters().evictions >= 1, "the idle holder must be told to drop its copy");
 
     // reuse after eviction: payload is rebuilt and re-shipped, results
     // stay exact (content addressing makes this safe by construction)
     assert_eq!(pb.cross_map_into(&input, &mut arena_p).to_bits(), want.to_bits());
-    assert!(pb.broadcast_ships() > ships_before, "evicted broadcast must re-ship on reuse");
-    assert_eq!(pb.respawns(), 0);
+    assert!(
+        pb.run_counters().broadcast_ships > ships_before,
+        "evicted broadcast must re-ship on reuse"
+    );
+    assert_eq!(pb.run_counters().respawns, 0);
 }
 
 #[test]
@@ -490,14 +493,9 @@ fn driver_run_evicts_broadcasts_on_both_transports() {
     let scenario = Scenario::smoke();
     let (x, y) = series(scenario.series_len);
     let deploy = Deploy::Local { cores: 2 };
-    let reference = run_case(
-        Case::A2,
-        &scenario,
-        &y,
-        &x,
-        deploy.clone(),
-        Arc::new(NativeBackend),
-    );
+    let reference = RunSpec::new(Case::A2, &scenario, &y, &x)
+        .deploy(deploy.clone())
+        .run(Arc::new(NativeBackend));
     let key = |r: &parccm::ccm::result::SkillRow| {
         (r.params.e, r.params.tau, r.params.l, r.sample_id)
     };
@@ -506,7 +504,7 @@ fn driver_run_evicts_broadcasts_on_both_transports() {
     for kind in [TransportKind::Pipe, TransportKind::Tcp] {
         let pb = spawn(kind, 2, 1);
         let backend: Arc<dyn ComputeBackend> = pb.clone();
-        let rep = run_case(Case::A2, &scenario, &y, &x, deploy.clone(), backend);
+        let rep = RunSpec::new(Case::A2, &scenario, &y, &x).deploy(deploy.clone()).run(backend);
         let mut got = rep.skills;
         got.sort_by_key(key);
         assert_eq!(got.len(), want.len());
@@ -515,6 +513,135 @@ fn driver_run_evicts_broadcasts_on_both_transports() {
             assert_eq!(w.rho.to_bits(), g.rho.to_bits(), "{kind:?} must match native bitwise");
         }
         assert_eq!(pb.cached_payloads(), 0, "{kind:?}: payloads evicted after harvest");
-        assert!(pb.evictions() > 0, "{kind:?}: workers told to evict");
+        assert!(pb.run_counters().evictions > 0, "{kind:?}: workers told to evict");
     }
+}
+
+#[test]
+fn worker_reduce_over_workers_matches_driver_reduce_and_cuts_ingress() {
+    // the tentpole acceptance, in-tree: the same sharded A4 case through
+    // real worker processes under BOTH reduce placements. Worker-side
+    // reduce must (a) agree with the in-process worker-reduce run
+    // bit-for-bit (the v5 sums frames round-trip f64 exactly), (b) stay
+    // within 1 ULP of the driver-concat skills, and (c) pull >= 5x fewer
+    // result bytes into the driver — six f64 sums per (skill, shard)
+    // instead of every prediction row.
+    let _guard = Watchdog::arm("worker_reduce_over_workers", TEST_TIMEOUT);
+    // a longer series than smoke: the ingress ratio scales with rows per
+    // shard (driver-reduce ships ~11 bytes per prediction row, worker
+    // reduce a fixed six-sum record per task), so at n ~ 800 the >= 5x
+    // bound holds with a wide margin instead of sitting on the boundary
+    let mut scenario = Scenario::smoke();
+    scenario.series_len = 800;
+    scenario.ls = vec![200];
+    scenario.r = 6;
+    let (x, y) = series(scenario.series_len);
+    let deploy = Deploy::Local { cores: 2 };
+    let spec = |reduce: ReduceMode| {
+        RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .policy(TablePolicy::TruncatedAuto)
+            .shards(3)
+            .reduce(reduce)
+    };
+    let key = |r: &parccm::ccm::result::SkillRow| {
+        (r.params.e, r.params.tau, r.params.l, r.sample_id)
+    };
+    let sort = |mut rows: Vec<parccm::ccm::result::SkillRow>| {
+        rows.sort_by_key(key);
+        rows
+    };
+    let local_worker_red = sort(spec(ReduceMode::Worker).run(Arc::new(NativeBackend)).skills);
+
+    let driver_pool = spawn(TransportKind::Tcp, 2, 1);
+    let driver_red =
+        sort(spec(ReduceMode::Driver).run(driver_pool.clone() as Arc<dyn ComputeBackend>).skills);
+    let driver_ingress = driver_pool.run_counters().result_ingress_bytes;
+
+    let worker_pool = spawn(TransportKind::Tcp, 2, 1);
+    let worker_red =
+        sort(spec(ReduceMode::Worker).run(worker_pool.clone() as Arc<dyn ComputeBackend>).skills);
+    let worker_ingress = worker_pool.run_counters().result_ingress_bytes;
+
+    assert_eq!(worker_red.len(), driver_red.len());
+    assert_eq!(worker_red.len(), local_worker_red.len());
+    for ((w, d), l) in worker_red.iter().zip(&driver_red).zip(&local_worker_red) {
+        assert_eq!(key(w), key(d));
+        assert_eq!(
+            w.rho.to_bits(),
+            l.rho.to_bits(),
+            "wire worker-reduce must be bit-identical to in-process worker-reduce at {:?}",
+            key(w)
+        );
+        assert!(
+            f32_ulp_distance(w.rho, d.rho) <= 1,
+            "worker-reduce rho {} drifts > 1 ULP from driver-concat {} at {:?}",
+            w.rho,
+            d.rho,
+            key(w)
+        );
+    }
+    assert!(worker_ingress > 0, "accepted result frames must be counted");
+    assert!(
+        driver_ingress >= 5 * worker_ingress,
+        "worker-side reduce must cut result ingress >= 5x (driver {driver_ingress} vs \
+         worker {worker_ingress})"
+    );
+}
+
+#[test]
+fn corrupted_agg_frame_requeues_without_double_counting() {
+    // chaos on the shuffle stage: exactly one driver-received frame is
+    // corrupted mid-run (an agg_chunk/merge_sums reply under worker-side
+    // reduce), the connection dies on the checksum, and the lost partial
+    // is recomputed on the respawned worker. combine_shard_sums panics on
+    // any duplicate shard partial and on partial coverage, so agreeing
+    // with the clean in-process run proves the requeue neither dropped
+    // nor double-counted a partial sum.
+    let _guard = Watchdog::arm("corrupted_agg_frame", TEST_TIMEOUT);
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let deploy = Deploy::Local { cores: 2 };
+    let spec = || {
+        RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .policy(TablePolicy::TruncatedAuto)
+            .shards(3)
+            .reduce(ReduceMode::Worker)
+    };
+    let key = |r: &parccm::ccm::result::SkillRow| {
+        (r.params.e, r.params.tau, r.params.l, r.sample_id)
+    };
+    let mut want = spec().run(Arc::new(NativeBackend)).skills;
+    want.sort_by_key(key);
+
+    let pb = Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                transport: TransportKind::Tcp,
+                workers: 2,
+                replicas: 1,
+                chaos: Some((23, ChaosProfile::parse("corrupt_once=12").expect("profile"))),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("the handshake is chaos-exempt, so the spawn must succeed"),
+    );
+    let mut got = spec().run(pb.clone() as Arc<dyn ComputeBackend>).skills;
+    got.sort_by_key(key);
+
+    assert_eq!(got.len(), want.len());
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(key(w), key(g));
+        assert_eq!(
+            w.rho.to_bits(),
+            g.rho.to_bits(),
+            "requeued partial must reproduce the clean run exactly at {:?}",
+            key(w)
+        );
+    }
+    let c = pb.run_counters();
+    assert_eq!(c.corrupt_frames_detected, 1, "exactly one frame was scheduled to corrupt");
+    assert!(c.respawns >= 1, "the corrupted connection must have been recycled");
 }

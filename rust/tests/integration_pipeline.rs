@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use parccm::ccm::backend::ComputeBackend;
-use parccm::ccm::driver::{run_case, run_case_policy, Case, TablePolicy};
+use parccm::ccm::driver::{Case, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::{
     ccm_transform_rdd, table_pipeline, table_pipeline_mode, table_transform_rdd, CcmProblem,
@@ -40,8 +40,10 @@ fn table_cuts_task_time_vs_bruteforce() {
         seed: 5,
         partitions: 6,
     };
-    let brute = run_case(Case::A2, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
-    let tabled = run_case(Case::A4, &s, &y, &x, Deploy::Local { cores: 2 }, backend());
+    let brute =
+        RunSpec::new(Case::A2, &s, &y, &x).deploy(Deploy::Local { cores: 2 }).run(backend());
+    let tabled =
+        RunSpec::new(Case::A4, &s, &y, &x).deploy(Deploy::Local { cores: 2 }).run(backend());
     let cut = 1.0 - tabled.report.total_task_s / brute.report.total_task_s;
     assert!(
         cut > 0.4,
@@ -70,7 +72,7 @@ fn fig4_qualitative_ordering_holds() {
     let deploy = Deploy::paper_cluster();
     let mut makespans = std::collections::HashMap::new();
     for case in Case::ALL {
-        let rep = run_case(case, &s, &y, &x, deploy.clone(), backend());
+        let rep = RunSpec::new(case, &s, &y, &x).deploy(deploy.clone()).run(backend());
         makespans.insert(case, rep.report.sim_makespan_s);
     }
     let get = |c: Case| makespans[&c];
@@ -100,7 +102,7 @@ fn async_table_case_overlaps_jobs() {
         seed: 11,
         partitions: 8,
     };
-    // run engine case manually to keep the context (run_case drops it)
+    // run engine case manually to keep the context (RunSpec::run drops it)
     let ctx = Context::new(
         EngineConfig::new(Deploy::Local { cores: 2 }).with_default_parallelism(s.partitions),
     );
@@ -204,11 +206,20 @@ fn driver_policies_agree_through_table_cases() {
         rows
     };
     let full = sort(
-        run_case_policy(Case::A4, &s, &y, &x, deploy.clone(), backend(), TablePolicy::Full).skills,
+        RunSpec::new(Case::A4, &s, &y, &x)
+            .deploy(deploy.clone())
+            .policy(TablePolicy::Full)
+            .run(backend())
+            .skills,
     );
     for policy in [TablePolicy::TruncatedAuto, TablePolicy::Truncated(16)] {
-        let got =
-            sort(run_case_policy(Case::A4, &s, &y, &x, deploy.clone(), backend(), policy).skills);
+        let got = sort(
+            RunSpec::new(Case::A4, &s, &y, &x)
+                .deploy(deploy.clone())
+                .policy(policy)
+                .run(backend())
+                .skills,
+        );
         assert_eq!(full.len(), got.len());
         for (a, b) in full.iter().zip(&got) {
             assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{policy:?} diverged");

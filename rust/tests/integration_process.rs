@@ -10,7 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
-use parccm::ccm::driver::{run_case, run_case_policy_sharded, Case, TablePolicy};
+use parccm::ccm::driver::{Case, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::process::ProcessBackend;
@@ -99,38 +99,23 @@ fn process_backend_runs_a4_style_scenario_end_to_end() {
     );
     let deploy = Deploy::Local { cores: 2 };
 
-    let a1 = run_case(
-        Case::A1,
-        &scenario,
-        &y,
-        &x,
-        deploy.clone(),
-        Arc::new(NativeBackend),
-    );
-    let in_process = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy.clone(),
-        Arc::new(NativeBackend),
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let a1 = RunSpec::new(Case::A1, &scenario, &y, &x)
+        .deploy(deploy.clone())
+        .run(Arc::new(NativeBackend));
+    let in_process = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy.clone())
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(Arc::new(NativeBackend));
 
     let pb = spawn_backend(2);
     assert!(pb.num_workers() >= 2);
     let backend: Arc<dyn ComputeBackend> = pb.clone();
-    let via_workers = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy,
-        backend,
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let via_workers = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy)
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(backend);
 
     let key = |r: &parccm::ccm::result::SkillRow| {
         (r.params.e, r.params.tau, r.params.l, r.sample_id)
@@ -159,7 +144,7 @@ fn process_backend_runs_a4_style_scenario_end_to_end() {
             key(a)
         );
     }
-    assert_eq!(pb.respawns(), 0, "healthy run must not recycle workers");
+    assert_eq!(pb.run_counters().respawns, 0, "healthy run must not recycle workers");
 }
 
 #[test]
@@ -204,7 +189,7 @@ fn worker_kill_requeues_tasks_on_fresh_workers() {
         let rho_p = pb.cross_map_into(&input, &mut arena_p);
         assert_eq!(rho_p.to_bits(), native.cross_map_into(&input, &mut arena_n).to_bits());
     }
-    assert!(pb.respawns() >= 1, "a killed worker must have been replaced");
+    assert!(pb.run_counters().respawns >= 1, "a killed worker must have been replaced");
     assert_eq!(pb.num_workers(), 2, "pool back at target size");
     assert!(
         pb.worker_pids().iter().any(|p| !pids.contains(p)),

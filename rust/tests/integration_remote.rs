@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::chaos::ChaosProfile;
 use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_IGNORE_PING_ENV};
-use parccm::ccm::driver::{run_case_policy_sharded, skills_to_json, Case, TablePolicy};
+use parccm::ccm::driver::{skills_to_json, Case, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::subsample::draw_samples;
@@ -217,16 +217,11 @@ fn remote_sharded_a4_bit_identical_with_midrun_kill() {
     let (x, y) = series(scenario.series_len);
     let deploy = Deploy::Local { cores: 2 };
 
-    let reference = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy.clone(),
-        Arc::new(NativeBackend),
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let reference = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy.clone())
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(Arc::new(NativeBackend));
 
     let remote = Arc::new(remote_pool(
         workers.iter().map(|w| w.addr.clone()).collect(),
@@ -243,16 +238,11 @@ fn remote_sharded_a4_bit_identical_with_midrun_kill() {
         kill9(victim);
     });
     let backend: Arc<dyn ComputeBackend> = remote.clone();
-    let via_remote = run_case_policy_sharded(
-        Case::A4,
-        &scenario,
-        &y,
-        &x,
-        deploy,
-        backend,
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let via_remote = RunSpec::new(Case::A4, &scenario, &y, &x)
+        .deploy(deploy)
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(backend);
     killer.join().unwrap();
 
     // bit-identical via the canonical dump (what the CI job diffs)
@@ -262,7 +252,7 @@ fn remote_sharded_a4_bit_identical_with_midrun_kill() {
         "remote sharded A4 must be bit-identical to the in-process run"
     );
     assert_eq!(via_remote.skills.len(), scenario.combos().len() * scenario.r);
-    assert_eq!(remote.respawns(), 0, "remote workers are never respawned");
+    assert_eq!(remote.run_counters().respawns, 0, "remote workers are never respawned");
     assert!(remote.num_workers() >= 2, "at most the killed worker may be gone");
     assert_eq!(remote.cached_payloads(), 0, "harvested problems are evicted");
 }
@@ -356,11 +346,11 @@ fn keepalive_timeout_discards_silently_dead_worker() {
     assert_eq!(pb.num_workers(), 2);
 
     let deadline = Instant::now() + Duration::from_secs(30);
-    while pb.keepalive_deaths() == 0 && Instant::now() < deadline {
+    while pb.run_counters().keepalive_deaths == 0 && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(50));
     }
-    assert_eq!(pb.keepalive_deaths(), 1, "the silent worker must be declared dead");
-    assert_eq!(pb.remote_lost(), 1);
+    assert_eq!(pb.run_counters().keepalive_deaths, 1, "the silent worker must be declared dead");
+    assert_eq!(pb.run_counters().remote_lost, 1);
     assert_eq!(pb.num_workers(), 1, "only the responsive worker remains");
 
     // tasks requeue onto the survivor and stay exact
@@ -374,7 +364,7 @@ fn keepalive_timeout_discards_silently_dead_worker() {
         let rho = pb.cross_map_into(&input, &mut arena_p);
         assert_eq!(rho.to_bits(), NativeBackend.cross_map_into(&input, &mut arena_n).to_bits());
     }
-    assert_eq!(pb.keepalive_deaths(), 1, "the good worker must keep answering pings");
+    assert_eq!(pb.run_counters().keepalive_deaths, 1, "the good worker must keep answering pings");
 }
 
 #[test]
@@ -407,7 +397,7 @@ fn last_remote_worker_death_aborts_with_actionable_message() {
         .unwrap_or_default();
     assert!(msg.contains("cannot be respawned"), "actionable message, got: {msg}");
     assert!(msg.contains("--replicas"), "must point at the mitigation: {msg}");
-    assert_eq!(pb.remote_lost(), 1);
+    assert_eq!(pb.run_counters().remote_lost, 1);
     assert_eq!(pb.num_workers(), 0);
 }
 
@@ -437,16 +427,11 @@ fn sharded_a4(
     x: &[f32],
     backend: Arc<dyn ComputeBackend>,
 ) -> String {
-    let rep = run_case_policy_sharded(
-        Case::A4,
-        scenario,
-        y,
-        x,
-        Deploy::Local { cores: 2 },
-        backend,
-        TablePolicy::TruncatedAuto,
-        3,
-    );
+    let rep = RunSpec::new(Case::A4, scenario, y, x)
+        .deploy(Deploy::Local { cores: 2 })
+        .policy(TablePolicy::TruncatedAuto)
+        .shards(3)
+        .run(backend);
     skills_to_json(&rep.skills).to_string()
 }
 
@@ -484,15 +469,15 @@ fn killed_remote_worker_rejoins_and_serves_again() {
 
     // sync point: the driver observed the death (mid-exchange or via the
     // keepalive prober while idle)
-    wait_for("the death to be observed", || remote.remote_lost() >= 1);
-    assert_eq!(remote.rejoins(), 0, "nothing to rejoin before the restart");
+    wait_for("the death to be observed", || remote.run_counters().remote_lost >= 1);
+    assert_eq!(remote.run_counters().rejoins, 0, "nothing to rejoin before the restart");
 
     // restart the listener on the recorded port; the redialer must
     // re-admit it with a fresh worker id and no duplicate pool entry
     let _revived = ListenWorker::restart_at(&victim_addr, &[]);
-    wait_for("the rejoin", || remote.rejoins() >= 1);
+    wait_for("the rejoin", || remote.run_counters().rejoins >= 1);
     assert_eq!(remote.num_workers(), 3, "pool back at full width, exactly one entry");
-    assert_eq!(remote.rejoins(), 1);
+    assert_eq!(remote.run_counters().rejoins, 1);
 
     // grid 2 through the recovered pool: the rejoined worker's empty
     // store re-populates on demand and results stay bit-identical. A kill
@@ -500,19 +485,23 @@ fn killed_remote_worker_rejoins_and_serves_again() {
     // force one re-broadcast (eager repair is best-effort while every
     // survivor is leased); what the rejoin guarantees is zero NEW
     // re-broadcasts after the repair window closed — pin exactly that.
-    let rebroadcasts_after_recovery = remote.rebroadcasts();
+    let rebroadcasts_after_recovery = remote.run_counters().rebroadcasts;
     let second = sharded_a4(&scenario, &y, &x, remote.clone());
     assert_eq!(second, reference, "post-rejoin grid must stay bit-identical");
     assert!(
-        remote.rejoin_ships() >= 1,
+        remote.run_counters().rejoin_ships >= 1,
         "tasks must land on the rejoined worker and re-ship its broadcasts on demand"
     );
     assert_eq!(
-        remote.rebroadcasts(),
+        remote.run_counters().rebroadcasts,
         rebroadcasts_after_recovery,
         "after the repair window + rejoin, nothing may force a full re-broadcast"
     );
-    assert_eq!(remote.respawns(), 0, "remote workers are never respawned, only rejoined");
+    assert_eq!(
+        remote.run_counters().respawns,
+        0,
+        "remote workers are never respawned, only rejoined"
+    );
 }
 
 #[test]
@@ -533,18 +522,18 @@ fn seeded_chaos_schedule_stays_bit_identical() {
     for round in 0..rounds {
         let victim = rng.below(workers.len());
         let addr = workers[victim].addr.clone();
-        let lost_before = remote.remote_lost();
-        let rejoins_before = remote.rejoins();
+        let lost_before = remote.run_counters().remote_lost;
+        let rejoins_before = remote.run_counters().rejoins;
         kill9(workers[victim].pid());
-        wait_for("the kill to be observed", || remote.remote_lost() > lost_before);
+        wait_for("the kill to be observed", || remote.run_counters().remote_lost > lost_before);
         workers[victim] = ListenWorker::restart_at(&addr, &[]);
-        wait_for("the round's rejoin", || remote.rejoins() > rejoins_before);
+        wait_for("the round's rejoin", || remote.run_counters().rejoins > rejoins_before);
         assert_eq!(remote.num_workers(), 3, "round {round}: full width, no duplicates");
         let got = sharded_a4(&scenario, &y, &x, remote.clone());
         assert_eq!(got, reference, "round {round}: dump must stay byte-identical");
     }
-    assert_eq!(remote.rejoins(), rounds, "exactly one rejoin per round");
-    assert_eq!(remote.rebroadcasts(), 0, "no fault schedule may force a re-broadcast");
+    assert_eq!(remote.run_counters().rejoins, rounds, "exactly one rejoin per round");
+    assert_eq!(remote.run_counters().rebroadcasts, 0, "no fault schedule may force a re-broadcast");
 }
 
 #[test]
@@ -574,18 +563,18 @@ fn keepalive_discarded_worker_rejoins_without_duplicate_entries() {
     // process is still alive — rejoin redials against it are refused (it
     // closed its listener on accept) or time out on the short handshake
     // deadline; either way they must back off, not wedge the prober.
-    wait_for("the keepalive discard", || remote.keepalive_deaths() >= 1);
+    wait_for("the keepalive discard", || remote.run_counters().keepalive_deaths >= 1);
     assert_eq!(remote.num_workers(), 1);
 
     let addr = deaf.addr.clone();
     kill9(deaf.pid());
     drop(deaf);
     let _revived = ListenWorker::restart_at(&addr, &[]);
-    wait_for("the rejoin", || remote.rejoins() >= 1);
+    wait_for("the rejoin", || remote.run_counters().rejoins >= 1);
     assert_eq!(remote.num_workers(), 2, "exactly one pool entry for the rejoined address");
-    assert_eq!(remote.keepalive_deaths(), 1);
-    assert_eq!(remote.remote_lost(), 1);
-    assert_eq!(remote.rejoins(), 1, "the same address must not rejoin twice");
+    assert_eq!(remote.run_counters().keepalive_deaths, 1);
+    assert_eq!(remote.run_counters().remote_lost, 1);
+    assert_eq!(remote.run_counters().rejoins, 1, "the same address must not rejoin twice");
 
     // replicas are not double-counted: one problem over a 2-worker pool
     // at factor 2 ships exactly twice (first ship + one replica copy),
@@ -603,9 +592,9 @@ fn keepalive_discarded_worker_rejoins_without_duplicate_entries() {
     }
     // <= because eager replication is best-effort (a worker mid-probe is
     // not idle); > 2 would mean a phantom duplicate entry got a copy
-    let ships = remote.broadcast_ships();
+    let ships = remote.run_counters().broadcast_ships;
     assert!((1..=2).contains(&ships), "factor 2 on 2 workers: no third copy ({ships})");
-    assert_eq!(remote.rebroadcasts(), 0);
+    assert_eq!(remote.run_counters().rebroadcasts, 0);
 }
 
 #[test]
@@ -657,23 +646,23 @@ fn seeded_chaos_with_wedged_worker_speculates_and_stays_bit_identical() {
     assert_eq!(got, reference, "chaos + wedge grid must stay bit-identical");
 
     assert!(
-        remote.speculative_launches() >= 1,
+        remote.run_counters().speculative_launches >= 1,
         "the wedged worker's tasks can only finish via speculation \
          (launches {}, wins {})",
-        remote.speculative_launches(),
-        remote.speculative_wins()
+        remote.run_counters().speculative_launches,
+        remote.run_counters().speculative_wins
     );
     assert!(
-        remote.speculative_wins() >= 1,
+        remote.run_counters().speculative_wins >= 1,
         "a speculative duplicate must have beaten the wedged primary"
     );
     assert!(
-        remote.corrupt_frames_detected() >= 1,
+        remote.run_counters().corrupt_frames_detected >= 1,
         "the corrupt_once frame must be caught by the v4 checksum, got {}",
-        remote.corrupt_frames_detected()
+        remote.run_counters().corrupt_frames_detected
     );
-    assert_eq!(remote.respawns(), 0, "remote workers are never respawned");
-    assert_eq!(remote.deadline_kills(), 0, "no deadline was configured");
+    assert_eq!(remote.run_counters().respawns, 0, "remote workers are never respawned");
+    assert_eq!(remote.run_counters().deadline_kills, 0, "no deadline was configured");
 }
 
 #[test]
@@ -700,20 +689,24 @@ fn auth_mismatch_during_rejoin_permanently_rejects_the_address() {
     let addr = victim.addr.clone();
     kill9(victim.pid());
     drop(victim);
-    wait_for("the death to be observed", || remote.remote_lost() >= 1);
+    wait_for("the death to be observed", || remote.run_counters().remote_lost >= 1);
 
     // the address comes back with the WRONG token, stderr captured so the
     // worker-side named error can be asserted
     let evil = ListenWorker::restart_at_with(&addr, &[(AUTH_TOKEN_ENV, "imposter")], true);
-    wait_for("the auth rejection", || remote.rejoin_rejected() >= 1);
-    assert_eq!(remote.rejoins(), 0, "a mismatched worker must never rejoin");
+    wait_for("the auth rejection", || remote.run_counters().rejoin_rejected >= 1);
+    assert_eq!(remote.run_counters().rejoins, 0, "a mismatched worker must never rejoin");
     assert_eq!(remote.num_workers(), 1);
 
     // no hot redial loop: once rejected, the attempt counter freezes even
     // across several would-be backoff periods
-    let frozen = remote.rejoin_attempts();
+    let frozen = remote.run_counters().rejoin_attempts;
     std::thread::sleep(Duration::from_millis(600));
-    assert_eq!(remote.rejoin_attempts(), frozen, "a rejected address is never redialed");
+    assert_eq!(
+        remote.run_counters().rejoin_attempts,
+        frozen,
+        "a rejected address is never redialed"
+    );
 
     // the worker end received the wire reject and exited with the named
     // error (not a bare EOF)

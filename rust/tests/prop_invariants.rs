@@ -8,7 +8,9 @@ use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::embedding::Embedding;
 use parccm::ccm::knn::knn_batch;
 use parccm::ccm::params::CcmParams;
-use parccm::ccm::pipeline::{ccm_transform_rdd, CcmProblem};
+use parccm::ccm::pipeline::{
+    ccm_transform_rdd, f32_ulp_distance, pearson_from_sums, CcmProblem, PearsonSums,
+};
 use parccm::ccm::simplex::{pearson_f32, simplex_one};
 use parccm::ccm::subsample::draw_samples;
 use parccm::ccm::table::{DistanceTable, LibraryMask};
@@ -270,6 +272,30 @@ fn prop_sharded_table_rho_bit_identical_to_full() {
                 "rho mismatch: sharded {rho} vs unsharded {} \
                  [e={e} tau={tau} l={l} shards={num_shards} trunc={}]",
                 tail.rho,
+                table.is_truncated()
+            ));
+        }
+
+        // worker-side reduce contract (this PR): reducing each shard to
+        // six partial Pearson sums on the "worker" and merging driver-side
+        // must land within 1 ULP of the driver-concat rho, for ANY shard
+        // count, table layout, and library — and cover every row exactly
+        // once.
+        let partials: Vec<PearsonSums> = sharded
+            .shards()
+            .iter()
+            .map(|shard| backend.agg_chunk_into(shard, &targets, theiler, &rows, e, &mut arena))
+            .collect();
+        let merged = PearsonSums::merge_all(&partials);
+        if merged.n != emb.n as u64 {
+            return Err(format!("merged sums cover {} of {} rows", merged.n, emb.n));
+        }
+        let agg_rho = pearson_from_sums(&merged);
+        let ulps = f32_ulp_distance(agg_rho, rho);
+        if ulps > 1 {
+            return Err(format!(
+                "worker-reduce rho {agg_rho} drifts {ulps} ULPs from driver-concat {rho} \
+                 [e={e} tau={tau} l={l} shards={num_shards} trunc={}]",
                 table.is_truncated()
             ));
         }
