@@ -11,6 +11,10 @@
 //!   on (`--speculate-factor` + `--task-deadline-secs`) — the price of
 //!   per-task lease bookkeeping and deadline-bounded recv polling on a
 //!   healthy pool, with the defense counters recorded as cells;
+//! * wire-encoding cost: the TCP round trip against a stock worker (v6
+//!   binary frames) vs a doctored `PARCCM_TEST_HELLO_V=5` worker (pinned
+//!   legacy JSON lines) — bit-identical results, with hard asserts that
+//!   the binary wire's broadcast and result-ingress bytes undercut JSON;
 //! * result-ingress accounting: the same sharded A4 case under
 //!   `--reduce driver` (raw prediction rows come back) vs
 //!   `--reduce worker` (six-sum partials come back) — the wire-v5
@@ -28,7 +32,7 @@ use std::sync::Arc;
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
-use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_HELLO_V_ENV};
 use parccm::ccm::driver::{Case, ReduceMode, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::CcmProblem;
@@ -77,6 +81,63 @@ fn main() {
             Row::new(format!("rtt_{}", kind.name()))
                 .cell("task_s", *mean_s)
                 .cell("vs_pipe_x", *mean_s / pipe_s.max(1e-12)),
+        );
+    }
+
+    // -- wire encodings on a real pool: v6 binary vs pinned JSON --------
+    // same strict single-worker TCP round trip twice: once on a stock
+    // worker (negotiates the v6 binary frames) and once on a doctored
+    // worker (TEST_HELLO_V_ENV=5) whose connection pins the legacy JSON
+    // line wire. Results are bit-identical; the rows record what each
+    // encoding costs — broadcast footprint (ships once during warmup),
+    // accepted result-frame bytes, and the round-trip time.
+    {
+        let mut wire = Vec::new();
+        for (label, env) in [
+            ("wire_binary", Vec::new()),
+            ("wire_json", vec![(TEST_HELLO_V_ENV.to_string(), "5".to_string())]),
+        ] {
+            let pb = ClusterBackend::with_options(
+                env!("CARGO_BIN_EXE_parccm"),
+                ClusterOptions {
+                    transport: TransportKind::Tcp,
+                    workers: 1,
+                    replicas: 1,
+                    worker_env: env,
+                    ..ClusterOptions::default()
+                },
+            )
+            .expect("spawning worker processes");
+            let mut arena = TaskArena::new();
+            let res = bencher.run(&format!("{label} cross_map round-trip"), || {
+                pb.cross_map_into(&input, &mut arena)
+            });
+            let c = pb.run_counters();
+            assert_eq!(c.respawns, 0, "{label}: bench must not hide worker churn");
+            table.push(
+                Row::new(label)
+                    .cell("task_s", res.mean_s)
+                    .cell("ship_bytes", c.broadcast_ship_bytes as f64)
+                    .cell("ingress_bytes", c.result_ingress_bytes as f64)
+                    .cell("binary_connections", c.binary_connections as f64)
+                    .cell("json_connections", c.json_connections as f64),
+            );
+            wire.push(c);
+        }
+        assert_eq!(wire[0].binary_connections, 1, "stock pool must negotiate the v6 wire");
+        assert_eq!(wire[0].json_connections, 0, "stock pool must not pin JSON");
+        assert_eq!(wire[1].json_connections, 1, "doctored pool must pin the JSON wire");
+        assert!(
+            wire[0].broadcast_ship_bytes < wire[1].broadcast_ship_bytes,
+            "binary broadcast ship bytes {} must undercut JSON {}",
+            wire[0].broadcast_ship_bytes,
+            wire[1].broadcast_ship_bytes
+        );
+        assert!(
+            wire[0].result_ingress_bytes < wire[1].result_ingress_bytes,
+            "binary result ingress {} must undercut JSON {}",
+            wire[0].result_ingress_bytes,
+            wire[1].result_ingress_bytes
         );
     }
 

@@ -2,8 +2,11 @@
 //! per-subsample cross-map task, owned-copy (the pre-zero-copy layout:
 //! every task deep-copied the n*EMAX prediction manifold plus two
 //! length-n columns and materialized the library into fresh `Vec`s)
-//! versus zero-copy (borrowed [`CrossMapInput`] view + arena gather), and
-//! the broadcast footprint of the full versus truncated distance table.
+//! versus zero-copy (borrowed [`CrossMapInput`] view + arena gather), the
+//! wire-codec cost of a problem broadcast (v6 binary frame vs legacy JSON
+//! line, with hard asserts that binary wins on bytes and on encode+decode
+//! time), and the broadcast footprint of the full versus truncated
+//! distance table.
 //!
 //! Acceptance: >= 5x reduction in per-task assembly time at n=1000, r=25,
 //! and `O(n * P)` truncated broadcast bytes.
@@ -16,6 +19,8 @@ mod common;
 use parccm::bench::report::{Row, TablePrinter};
 use parccm::bench::Bencher;
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
+use parccm::ccm::binwire;
+use parccm::ccm::cluster::{problem_payload, problem_wire_id};
 use parccm::ccm::params::CcmParams;
 use parccm::ccm::pipeline::CcmProblem;
 use parccm::ccm::subsample::{draw_samples, LibrarySample};
@@ -112,6 +117,61 @@ fn main() {
         Row::new("cross_map_arena_gain")
             .cell("x", fresh.mean_s / reused.mean_s.max(1e-12)),
     );
+
+    // -- wire codecs: v6 binary frames vs legacy JSON lines ------------
+    // the same problem broadcast through both encoders and decoders; the
+    // ship_b cells are true on-wire sizes (line + newline vs frame body +
+    // length prefix). The binary codec must beat JSON on bytes AND on
+    // encode+decode time — both hard-asserted, since that pair is the
+    // whole case for wire v6.
+    {
+        let times: Vec<f32> = (0..n).map(|i| problem.emb.time_of(i) as f32).collect();
+        let id = problem_wire_id(&problem.emb.vecs, &problem.targets, &times);
+        let json_line = problem_payload(id, &problem.emb.vecs, &problem.targets, &times);
+        let bin_frame = binwire::encode_problem(id, &problem.emb.vecs, &problem.targets, &times);
+        let json_ship = json_line.len() + 1;
+        let bin_ship = bin_frame.len() + 4;
+        let ej = bencher.run("wire encode json", || {
+            problem_payload(id, &problem.emb.vecs, &problem.targets, &times).len()
+        });
+        let eb = bencher.run("wire encode binary", || {
+            binwire::encode_problem(id, &problem.emb.vecs, &problem.targets, &times).len()
+        });
+        let dj = bencher.run("wire decode json", || {
+            let parsed = parccm::util::json::Json::parse(&json_line)
+                .expect("legacy broadcast line parses");
+            parsed.get("vecs").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0)
+        });
+        let db = bencher.run("wire decode binary", || {
+            match binwire::decode(&bin_frame).expect("v6 frame decodes") {
+                binwire::BinMsg::Broadcast(binwire::Broadcast::Problem { vecs, .. }) => vecs.len(),
+                _ => panic!("problem frame decoded to the wrong variant"),
+            }
+        });
+        table.push(
+            Row::new("wire_json")
+                .cell("encode_s", ej.mean_s)
+                .cell("decode_s", dj.mean_s)
+                .cell("ship_b", json_ship as f64),
+        );
+        table.push(
+            Row::new("wire_binary")
+                .cell("encode_s", eb.mean_s)
+                .cell("decode_s", db.mean_s)
+                .cell("ship_b", bin_ship as f64)
+                .cell("cut_x", json_ship as f64 / bin_ship as f64),
+        );
+        assert!(
+            bin_ship < json_ship,
+            "binary problem frame ({bin_ship} B) must undercut the JSON line ({json_ship} B)"
+        );
+        assert!(
+            eb.mean_s + db.mean_s < ej.mean_s + dj.mean_s,
+            "binary encode+decode ({:.2e}s) must beat JSON ({:.2e}s)",
+            eb.mean_s + db.mean_s,
+            ej.mean_s + dj.mean_s
+        );
+    }
 
     // -- broadcast bytes: full vs truncated table ----------------------
     for min_l in [n / 8, n / 4, n / 2] {

@@ -190,6 +190,11 @@ pub struct PoolCounters {
     pub rejoin_ships: u64,
     /// Bytes shipped to rejoined workers.
     pub rejoin_ship_bytes: u64,
+    /// Connections admitted speaking the v6 binary wire (cumulative:
+    /// initial spawns, respawns, and rejoins each count their admit).
+    pub binary_connections: u64,
+    /// Connections admitted pinned to the JSON line wire (v<=5 peers).
+    pub json_connections: u64,
     /// Speculative duplicate tasks launched against stragglers.
     pub speculative_launches: u64,
     /// Speculative duplicates that finished before the original.
@@ -227,6 +232,8 @@ impl PoolCounters {
             ("rejoin_rejected", self.rejoin_rejected),
             ("rejoin_ships", self.rejoin_ships),
             ("rejoin_ship_bytes", self.rejoin_ship_bytes),
+            ("binary_connections", self.binary_connections),
+            ("json_connections", self.json_connections),
             ("speculative_launches", self.speculative_launches),
             ("speculative_wins", self.speculative_wins),
             ("deadline_kills", self.deadline_kills),
@@ -375,6 +382,17 @@ pub trait ComputeBackend: Send + Sync {
         PoolCounters::default()
     }
 
+    /// Wire encoding the DES should price simulated traffic at, so
+    /// modeled bytes track what this backend's pool actually ships.
+    /// In-process backends move no bytes, so the identity
+    /// [`WirePricing::Binary`](crate::engine::config::WirePricing) default
+    /// keeps their reports raw-sized; `ccm::cluster::ClusterBackend`
+    /// answers `Json` once any connection in its pool has pinned the
+    /// legacy line wire (a v<=5 peer).
+    fn wire_pricing(&self) -> crate::engine::config::WirePricing {
+        crate::engine::config::WirePricing::Binary
+    }
+
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;
 
@@ -460,7 +478,7 @@ mod tests {
     fn pool_counters_pairs_are_stable() {
         let c = PoolCounters { rejoins: 3, result_ingress_bytes: 42, ..Default::default() };
         let pairs = c.to_pairs();
-        assert_eq!(pairs.len(), 21);
+        assert_eq!(pairs.len(), 23);
         // the sidecar keys CI asserts on must exist under these exact names
         for key in [
             "rejoins",
@@ -470,6 +488,8 @@ mod tests {
             "speculative_wins",
             "corrupt_frames_detected",
             "result_ingress_bytes",
+            "binary_connections",
+            "json_connections",
         ] {
             assert!(pairs.iter().any(|&(k, _)| k == key), "missing sidecar key {key}");
         }

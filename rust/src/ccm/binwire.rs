@@ -1,0 +1,720 @@
+//! The v6 binary wire codec: what goes *inside* a length-prefixed frame.
+//!
+//! [`crate::ccm::transport`] owns the byte layer (length prefix, checksum
+//! trailer, deadlines); this module owns the frame body:
+//!
+//! ```text
+//! [tag: u8] [payload...]
+//! ```
+//!
+//! Payload-bearing messages — the broadcasts (`problem`, `targets`,
+//! `shard`) and the results (`preds`, `sums`) — get dedicated tags with
+//! raw little-endian f32/f64 arrays and varint section lengths, so an f32
+//! crosses the wire as its exact 4 bytes instead of shortest-roundtrip
+//! decimal text (bit-exact *including* NaN payloads and signed zeros,
+//! which the JSON writer cannot even represent). Everything else — tasks,
+//! hello/ack, ping/pong, evict, errors, shutdown — rides as compact JSON
+//! text inside a [`TAG_JSON`] envelope: those messages are tiny and keeping
+//! them JSON means the scheduler's lease/speculation machinery (which
+//! stores and re-sends task lines verbatim) carries over unchanged.
+//!
+//! Neighbor-index arrays (the dominant bytes of a `shard` broadcast) are
+//! *bit-packed* to the width of their largest value rather than shipped as
+//! raw u32: a row index is bounded by the manifold size, so it fits
+//! ~10-20 bits, while both raw u32 and its decimal JSON form cost ~4
+//! bytes — raw alone would leave shard ships nearly as large as JSON.
+//! The packing is exact and self-describing (an explicit width byte).
+//!
+//! Decoding is strict: every section length is checked against the bytes
+//! actually present, unknown tags and trailing garbage are errors, and a
+//! decode error never panics — the caller surfaces it as `InvalidData`,
+//! which flows into the same connection-death machinery as a checksum
+//! mismatch.
+
+use crate::ccm::pipeline::PearsonSums;
+use crate::ccm::table::TableShard;
+use crate::util::json::Json;
+
+/// JSON-in-envelope: the payload is one UTF-8 JSON object, byte for byte
+/// the line the JSON wire would have sent (minus the newline).
+pub const TAG_JSON: u8 = 0x00;
+/// Broadcast: brute-force problem (vecs + targets + times f32 arrays).
+pub const TAG_BCAST_PROBLEM: u8 = 0x01;
+/// Broadcast: shared targets column (one f32 array).
+pub const TAG_BCAST_TARGETS: u8 = 0x02;
+/// Broadcast: one sorted-neighbour table shard (packed indices + manifold).
+pub const TAG_BCAST_SHARD: u8 = 0x03;
+/// Result: prediction rows (optional rho + f32 array), `cross_map` and
+/// `shard_chunk` replies.
+pub const TAG_RESULT_PREDS: u8 = 0x10;
+/// Result: six-number partial Pearson sums, `agg_chunk` / `merge_sums`
+/// replies (the v5 reduce path).
+pub const TAG_RESULT_SUMS: u8 = 0x11;
+
+/// A decoded v6 frame body.
+pub enum BinMsg {
+    /// A control / task message (parsed from its JSON envelope).
+    Json(Json),
+    /// A broadcast, decoded straight to its typed form (no JSON detour —
+    /// this is the bulk-bytes path).
+    Broadcast(Broadcast),
+    /// A `result` carrying prediction rows.
+    ResultPreds { task: u64, rho: Option<f32>, preds: Vec<f32> },
+    /// A `result` carrying partial Pearson sums.
+    ResultSums { task: u64, sums: PearsonSums },
+}
+
+/// A typed broadcast payload (the worker stores these content-addressed).
+pub enum Broadcast {
+    Problem { id: u64, vecs: Vec<f32>, targets: Vec<f32>, times: Vec<f32> },
+    Targets { id: u64, targets: Vec<f32> },
+    Shard { id: u64, shard: TableShard },
+}
+
+// ---- primitive writers ------------------------------------------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_varint(out, xs.len() as u64);
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bit-packed index array: `[width: u8][count: varint][packed bits]`,
+/// LSB-first within each byte, `width` = bits of the largest value (0 for
+/// an all-zero or empty array — zero-width values decode as 0).
+fn put_packed_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    let width = xs.iter().copied().max().map_or(0, |m| 32 - m.leading_zeros()) as u8;
+    out.push(width);
+    put_varint(out, xs.len() as u64);
+    if width == 0 {
+        return;
+    }
+    out.reserve((xs.len() * width as usize).div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut bits: u32 = 0;
+    for &x in xs {
+        acc |= (x as u64) << bits;
+        bits += width as u32;
+        while bits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            bits -= 8;
+        }
+    }
+    if bits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+}
+
+// ---- primitive readers ------------------------------------------------
+
+/// A cursor over a frame payload; every read is bounds-checked.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let end = end.ok_or_else(|| format!("frame truncated: wanted {n} more bytes"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 63 && b > 1 {
+                return Err("varint overflows u64".into());
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// A length prefix that must be satisfiable by the remaining bytes
+    /// (guards against a corrupt count demanding a huge allocation).
+    fn len(&mut self, bytes_per_item: usize) -> Result<usize, String> {
+        let n = self.varint()? as usize;
+        let need = n.checked_mul(bytes_per_item).ok_or("section length overflows")?;
+        if need > self.buf.len() - self.pos {
+            return Err(format!("section claims {n} items but the frame is too short"));
+        }
+        Ok(n)
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    fn u64_raw(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn packed_u32s(&mut self) -> Result<Vec<u32>, String> {
+        let width = self.u8()? as u32;
+        if width > 32 {
+            return Err(format!("packed index width {width} exceeds 32 bits"));
+        }
+        let n = self.varint()? as usize;
+        if width == 0 {
+            // zero-width: every value is 0 and no bits follow; cap the
+            // count by the frame size to bound the allocation
+            if n > self.buf.len().saturating_mul(8).max(1 << 16) {
+                return Err("zero-width section claims an implausible count".into());
+            }
+            return Ok(vec![0; n]);
+        }
+        let need = n
+            .checked_mul(width as usize)
+            .map(|bits| bits.div_ceil(8))
+            .ok_or("packed section length overflows")?;
+        let bytes = self.take(need)?;
+        let mask = if width == 32 { u64::MAX >> 32 } else { (1u64 << width) - 1 };
+        let mut out = Vec::with_capacity(n);
+        let mut acc: u64 = 0;
+        let mut bits: u32 = 0;
+        let mut iter = bytes.iter();
+        for _ in 0..n {
+            while bits < width {
+                acc |= u64::from(*iter.next().expect("sized above")) << bits;
+                bits += 8;
+            }
+            out.push((acc & mask) as u32);
+            acc >>= width;
+            bits -= width;
+        }
+        Ok(out)
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing bytes after the message", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+// ---- encoders ---------------------------------------------------------
+
+/// Wrap a pre-serialized JSON line in a [`TAG_JSON`] envelope.
+pub fn encode_json(line: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + line.len());
+    out.push(TAG_JSON);
+    out.extend_from_slice(line.as_bytes());
+    out
+}
+
+/// Encode a `problem` broadcast.
+pub fn encode_problem(id: u64, vecs: &[f32], targets: &[f32], times: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + 4 * (vecs.len() + targets.len() + times.len()) + 15);
+    out.push(TAG_BCAST_PROBLEM);
+    out.extend_from_slice(&id.to_le_bytes());
+    put_f32s(&mut out, vecs);
+    put_f32s(&mut out, targets);
+    put_f32s(&mut out, times);
+    out
+}
+
+/// Encode a `targets` broadcast.
+pub fn encode_targets(id: u64, targets: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(14 + 4 * targets.len());
+    out.push(TAG_BCAST_TARGETS);
+    out.extend_from_slice(&id.to_le_bytes());
+    put_f32s(&mut out, targets);
+    out
+}
+
+/// Encode a `shard` broadcast (packed indices + raw manifold copy).
+pub fn encode_shard(id: u64, shard: &TableShard) -> Vec<u8> {
+    let (neighbors, vecs) = shard.raw_parts();
+    let mut out = Vec::with_capacity(64 + 3 * neighbors.len() + 4 * vecs.len());
+    out.push(TAG_BCAST_SHARD);
+    out.extend_from_slice(&id.to_le_bytes());
+    for v in [shard.shard_id, shard.row_lo, shard.row_hi, shard.row_len(), shard.n, shard.t0] {
+        put_varint(&mut out, v as u64);
+    }
+    put_packed_u32s(&mut out, neighbors);
+    put_f32s(&mut out, vecs);
+    out
+}
+
+/// Encode a `result` carrying prediction rows.
+pub fn encode_result_preds(task: u64, rho: Option<f32>, preds: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 + 4 * preds.len());
+    out.push(TAG_RESULT_PREDS);
+    put_varint(&mut out, task);
+    match rho {
+        Some(r) => {
+            out.push(1);
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        None => out.push(0),
+    }
+    put_f32s(&mut out, preds);
+    out
+}
+
+/// Encode a `result` carrying partial Pearson sums (bit-exact f64).
+pub fn encode_result_sums(task: u64, sums: &PearsonSums) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.push(TAG_RESULT_SUMS);
+    put_varint(&mut out, task);
+    put_varint(&mut out, sums.n);
+    for v in [sums.sx, sums.sy, sums.sxy, sums.sxx, sums.syy] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Worker-side reply encoding: payload-bearing `result` replies get their
+/// binary tag (preds/sums arrays as raw bytes, skipping float→text
+/// formatting entirely — the encode-time win the v6 wire exists for);
+/// everything else (pong, error, results with neither array) rides a
+/// [`TAG_JSON`] envelope.
+pub fn reply_frame(reply: &Json) -> Vec<u8> {
+    if reply.get("type").and_then(Json::as_str) == Some("result") {
+        if let Some(task) = reply.get("task").and_then(Json::as_f64) {
+            let task = task as u64;
+            if let Some(preds) = reply.get("preds").and_then(Json::as_f32s) {
+                let rho = reply.get("rho").and_then(Json::as_f64).map(|r| r as f32);
+                return encode_result_preds(task, rho, &preds);
+            }
+            if let Some(sums) = reply.get("sums").and_then(sums_from_json) {
+                return encode_result_sums(task, &sums);
+            }
+        }
+    }
+    encode_json(&reply.to_string())
+}
+
+fn sums_from_json(v: &Json) -> Option<PearsonSums> {
+    let arr = v.as_arr()?;
+    if arr.len() != 6 {
+        return None;
+    }
+    let f = |i: usize| arr[i].as_f64();
+    Some(PearsonSums {
+        n: f(0)? as u64,
+        sx: f(1)?,
+        sy: f(2)?,
+        sxy: f(3)?,
+        sxx: f(4)?,
+        syy: f(5)?,
+    })
+}
+
+/// Driver-side lowering: turn a decoded frame into the exact JSON shape
+/// the scheduler already consumes, so the lease/retry/result machinery
+/// never sees the wire mode. Broadcast frames never flow worker→driver —
+/// one arriving is a protocol error, not a panic.
+pub fn to_json(msg: BinMsg) -> Result<Json, String> {
+    match msg {
+        BinMsg::Json(m) => Ok(m),
+        BinMsg::ResultPreds { task, rho, preds } => {
+            let mut fields = vec![
+                ("type", Json::Str("result".into())),
+                ("task", Json::Num(task as f64)),
+            ];
+            if let Some(r) = rho {
+                fields.push(("rho", Json::Num(r as f64)));
+            }
+            fields.push(("preds", Json::f32s(&preds)));
+            Ok(Json::obj(fields))
+        }
+        BinMsg::ResultSums { task, sums } => Ok(Json::obj(vec![
+            ("type", Json::Str("result".into())),
+            ("task", Json::Num(task as f64)),
+            (
+                "sums",
+                Json::Arr(vec![
+                    Json::Num(sums.n as f64),
+                    Json::Num(sums.sx),
+                    Json::Num(sums.sy),
+                    Json::Num(sums.sxy),
+                    Json::Num(sums.sxx),
+                    Json::Num(sums.syy),
+                ]),
+            ),
+        ])),
+        BinMsg::Broadcast(_) => Err("unexpected broadcast frame from a worker".into()),
+    }
+}
+
+// ---- decoder ----------------------------------------------------------
+
+/// Decode one frame body. Strict: unknown tags, truncated sections, and
+/// trailing bytes are all errors (never panics).
+pub fn decode(frame: &[u8]) -> Result<BinMsg, String> {
+    let (&tag, payload) = frame.split_first().ok_or("empty frame")?;
+    let mut r = Reader::new(payload);
+    match tag {
+        TAG_JSON => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|e| format!("non-UTF-8 JSON envelope: {e}"))?;
+            Json::parse(text).map(BinMsg::Json).map_err(|e| e.to_string())
+        }
+        TAG_BCAST_PROBLEM => {
+            let id = r.u64_raw()?;
+            let vecs = r.f32s()?;
+            let targets = r.f32s()?;
+            let times = r.f32s()?;
+            r.finish()?;
+            Ok(BinMsg::Broadcast(Broadcast::Problem { id, vecs, targets, times }))
+        }
+        TAG_BCAST_TARGETS => {
+            let id = r.u64_raw()?;
+            let targets = r.f32s()?;
+            r.finish()?;
+            Ok(BinMsg::Broadcast(Broadcast::Targets { id, targets }))
+        }
+        TAG_BCAST_SHARD => {
+            let id = r.u64_raw()?;
+            let shard_id = r.varint()? as usize;
+            let row_lo = r.varint()? as usize;
+            let row_hi = r.varint()? as usize;
+            let row_len = r.varint()? as usize;
+            let n = r.varint()? as usize;
+            let t0 = r.varint()? as usize;
+            let neighbors = r.packed_u32s()?;
+            let vecs = r.f32s()?;
+            r.finish()?;
+            // from_parts asserts shape; validate here so corruption that
+            // survived the checksum odds still errors instead of panicking
+            if row_hi < row_lo
+                || neighbors.len() != (row_hi - row_lo) * row_len
+                || vecs.len() != n * crate::EMAX
+            {
+                return Err("shard sections disagree with the header".into());
+            }
+            let shard = TableShard::from_parts(shard_id, row_lo, row_hi, row_len, n, t0, neighbors, vecs);
+            Ok(BinMsg::Broadcast(Broadcast::Shard { id, shard }))
+        }
+        TAG_RESULT_PREDS => {
+            let task = r.varint()?;
+            let rho = match r.u8()? {
+                0 => None,
+                1 => Some(r.f32()?),
+                f => return Err(format!("bad rho flag {f}")),
+            };
+            let preds = r.f32s()?;
+            r.finish()?;
+            Ok(BinMsg::ResultPreds { task, rho, preds })
+        }
+        TAG_RESULT_SUMS => {
+            let task = r.varint()?;
+            let n = r.varint()?;
+            let sums = PearsonSums {
+                n,
+                sx: r.f64()?,
+                sy: r.f64()?,
+                sxy: r.f64()?,
+                sxx: r.f64()?,
+                syy: r.f64()?,
+            };
+            r.finish()?;
+            Ok(BinMsg::ResultSums { task, sums })
+        }
+        other => Err(format!("unknown frame tag 0x{other:02x}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::embedding::Embedding;
+    use crate::ccm::table::DistanceTable;
+
+    fn weird_f32s() -> Vec<f32> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5e-7,
+            f32::from_bits(0x7fc0_0001), // quiet NaN with payload
+            f32::from_bits(0x7f80_0001), // signaling NaN bit pattern
+            f32::from_bits(0xffc0_dead), // negative NaN with payload
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+            f32::MAX,
+            3.14159265,
+        ]
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn varints_round_trip_at_every_boundary() {
+        for v in [0u64, 1, 127, 128, 129, 16383, 16384, u32::MAX as u64, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v);
+            r.finish().unwrap();
+        }
+        // an overlong varint that would overflow u64 is an error
+        let overflow = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(Reader::new(&overflow).varint().is_err());
+    }
+
+    #[test]
+    fn packed_indices_round_trip_all_widths() {
+        for xs in [
+            vec![],
+            vec![0u32],
+            vec![0, 0, 0],
+            vec![1, 0, 1, 1, 0, 0, 1],
+            vec![255, 17, 0, 254],
+            vec![1023, 512, 7],
+            (0..300).map(|i| i * 7919 % 100_000).collect::<Vec<u32>>(),
+            vec![u32::MAX, 0, 12345],
+        ] {
+            let mut buf = Vec::new();
+            put_packed_u32s(&mut buf, &xs);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.packed_u32s().unwrap(), xs, "width case {xs:?}");
+            r.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_indices_beat_raw_u32_for_bounded_values() {
+        // the shard-table case: 10k indices bounded by n=1000 pack to 10
+        // bits each — the reason shard ships shrink at all
+        let xs: Vec<u32> = (0..10_000u32).map(|i| i % 1000).collect();
+        let mut buf = Vec::new();
+        put_packed_u32s(&mut buf, &xs);
+        assert!(buf.len() < xs.len() * 2, "10-bit packing: {} bytes", buf.len());
+    }
+
+    #[test]
+    fn f32_arrays_round_trip_bit_exact_including_nans() {
+        let xs = weird_f32s();
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &xs);
+        let mut r = Reader::new(&buf);
+        let back = r.f32s().unwrap();
+        r.finish().unwrap();
+        assert_eq!(bits(&back), bits(&xs), "every bit pattern survives, incl. NaN payloads");
+    }
+
+    #[test]
+    fn problem_and_targets_broadcasts_round_trip() {
+        let vecs = weird_f32s();
+        let targets = vec![0.25f32, -0.0, f32::from_bits(0x7fc0_0042)];
+        let times = vec![0.0f32, 1.0, 2.0];
+        let msg = decode(&encode_problem(0xdead_beef_cafe_f00d, &vecs, &targets, &times)).unwrap();
+        match msg {
+            BinMsg::Broadcast(Broadcast::Problem { id, vecs: v, targets: tg, times: tm }) => {
+                assert_eq!(id, 0xdead_beef_cafe_f00d);
+                assert_eq!(bits(&v), bits(&vecs));
+                assert_eq!(bits(&tg), bits(&targets));
+                assert_eq!(bits(&tm), bits(&times));
+            }
+            _ => panic!("wrong variant"),
+        }
+        match decode(&encode_targets(7, &targets)).unwrap() {
+            BinMsg::Broadcast(Broadcast::Targets { id, targets: tg }) => {
+                assert_eq!(id, 7);
+                assert_eq!(bits(&tg), bits(&targets));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn shard_broadcast_round_trips_with_identical_wire_id() {
+        let series: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect();
+        let emb = Embedding::new(&series, 2, 1);
+        let sharded = DistanceTable::build_truncated(&emb, 9).shard(2);
+        for shard in sharded.shards() {
+            let frame = encode_shard(shard.wire_id(), shard);
+            match decode(&frame).unwrap() {
+                BinMsg::Broadcast(Broadcast::Shard { id, shard: back }) => {
+                    assert_eq!(id, shard.wire_id());
+                    assert_eq!(back.wire_id(), shard.wire_id(), "content identity preserved");
+                    assert_eq!(back.num_rows(), shard.num_rows());
+                }
+                _ => panic!("wrong variant"),
+            }
+        }
+    }
+
+    #[test]
+    fn results_round_trip_bit_exact() {
+        let preds = weird_f32s();
+        let rho = f32::from_bits(0x8000_0000); // -0.0
+        match decode(&encode_result_preds(900, Some(rho), &preds)).unwrap() {
+            BinMsg::ResultPreds { task, rho: Some(r), preds: p } => {
+                assert_eq!(task, 900);
+                assert_eq!(r.to_bits(), rho.to_bits());
+                assert_eq!(bits(&p), bits(&preds));
+            }
+            _ => panic!("wrong variant"),
+        }
+        match decode(&encode_result_preds(1, None, &[])).unwrap() {
+            BinMsg::ResultPreds { task: 1, rho: None, preds } => assert!(preds.is_empty()),
+            _ => panic!("wrong variant"),
+        }
+        let sums = PearsonSums {
+            n: u64::MAX >> 8,
+            sx: -0.0,
+            sy: f64::NAN,
+            sxy: 1.0000000000000002,
+            sxx: f64::MIN_POSITIVE,
+            syy: -1.7976931348623157e308,
+        };
+        match decode(&encode_result_sums(42, &sums)).unwrap() {
+            BinMsg::ResultSums { task, sums: s } => {
+                assert_eq!(task, 42);
+                assert_eq!(s.n, sums.n);
+                for (a, b) in [
+                    (s.sx, sums.sx),
+                    (s.sy, sums.sy),
+                    (s.sxy, sums.sxy),
+                    (s.sxx, sums.sxx),
+                    (s.syy, sums.syy),
+                ] {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn json_envelope_round_trips() {
+        let line = r#"{"op":"cross_map","type":"task","v":6}"#;
+        match decode(&encode_json(line)).unwrap() {
+            BinMsg::Json(msg) => {
+                assert_eq!(msg.get("op").and_then(Json::as_str), Some("cross_map"));
+                assert_eq!(msg.to_string(), line, "envelope preserves the exact line");
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn reply_frames_lower_back_to_the_same_json() {
+        // a cross_map result: binary tag, preds bit-exact (incl. -0.0,
+        // which JSON text cannot even represent)
+        let reply = Json::obj(vec![
+            ("type", Json::Str("result".into())),
+            ("task", Json::Num(31.0)),
+            ("rho", Json::Num(0.5)),
+            ("preds", Json::f32s(&[1.0, -0.0, 2.5])),
+        ]);
+        let frame = reply_frame(&reply);
+        assert_eq!(frame[0], TAG_RESULT_PREDS);
+        let back = to_json(decode(&frame).unwrap()).unwrap();
+        assert_eq!(back.get("task").and_then(Json::as_f64), Some(31.0));
+        assert_eq!(back.get("rho").and_then(Json::as_f64), Some(0.5));
+        let preds = back.get("preds").and_then(Json::as_f32s).unwrap();
+        assert_eq!(bits(&preds), bits(&[1.0, -0.0, 2.5]));
+
+        // an agg_chunk result: sums tag, all six values bit-exact
+        let sums = Json::obj(vec![
+            ("type", Json::Str("result".into())),
+            ("task", Json::Num(8.0)),
+            (
+                "sums",
+                Json::Arr(vec![
+                    Json::Num(10.0),
+                    Json::Num(0.1 + 0.2),
+                    Json::Num(-1.0e-300),
+                    Json::Num(std::f64::consts::PI),
+                    Json::Num(4.9e-324),
+                    Json::Num(1.0e300),
+                ]),
+            ),
+        ]);
+        let frame = reply_frame(&sums);
+        assert_eq!(frame[0], TAG_RESULT_SUMS);
+        let back = to_json(decode(&frame).unwrap()).unwrap();
+        assert_eq!(back.to_string(), sums.to_string(), "sums survive bit-for-bit");
+
+        // control replies ride the JSON envelope unchanged
+        let pong = Json::obj(vec![
+            ("type", Json::Str("pong".into())),
+            ("nonce", Json::Num(4.0)),
+        ]);
+        let frame = reply_frame(&pong);
+        assert_eq!(frame[0], TAG_JSON);
+        let back = to_json(decode(&frame).unwrap()).unwrap();
+        assert_eq!(back.to_string(), pong.to_string());
+    }
+
+    #[test]
+    fn malformed_frames_error_instead_of_panicking() {
+        assert!(decode(&[]).is_err(), "empty frame");
+        assert!(decode(&[0xee]).is_err(), "unknown tag");
+        assert!(decode(&[TAG_JSON, 0xff, 0xfe]).is_err(), "non-UTF-8 envelope");
+        assert!(decode(&[TAG_JSON, b'{']).is_err(), "bad JSON");
+        // truncate a valid frame at every length — all errors, no panics
+        let frame = encode_result_preds(3, Some(0.5), &[1.0, 2.0, 3.0]);
+        for cut in 0..frame.len() {
+            assert!(decode(&frame[..cut]).is_err(), "truncated at {cut}");
+        }
+        // a section length that overstates the remaining bytes
+        let mut lying = encode_targets(1, &[1.0]);
+        lying[9] = 0x7f; // claim 127 f32s where 1 follows
+        assert!(decode(&lying).is_err());
+        // trailing garbage after a complete message
+        let mut trailing = encode_targets(1, &[1.0]);
+        trailing.push(0);
+        assert!(decode(&trailing).is_err());
+    }
+}

@@ -35,6 +35,15 @@
 //! only after the hello/`hello_ack` exchange, so chaos can never make a
 //! spawn flaky — only steady-state traffic.
 //!
+//! v6 binary frames get the same treatment as JSON lines: `drop` swallows
+//! a sent frame whole, `trunc` ships a cut frame body (the length prefix
+//! stays honest, mirroring how line truncation keeps its newline) and
+//! fails the send, and the corrupt knobs flip one byte of the frame body
+//! — which, layered under the checksum wrapper, includes the 8-byte
+//! trailer. The `corrupt_once` received-frame counter is shared across
+//! both wire modes, so "the Nth frame" means the Nth thing received,
+//! line or binary.
+//!
 //! The driver threads its chaos config through
 //! [`ClusterOptions::chaos`](crate::ccm::cluster::ClusterOptions) rather
 //! than reading the environment per connection (process-global env races
@@ -186,6 +195,20 @@ impl ChaosTransport {
         }
         String::from_utf8_lossy(&bytes).into_owned()
     }
+
+    /// Flip one byte of a binary frame body at a seeded position. No
+    /// byte is off-limits: the length prefix lives a layer below, so any
+    /// flip here lands inside the checksummed body (or its trailer).
+    fn corrupt_frame(&mut self, frame: &[u8]) -> Vec<u8> {
+        let mut bytes = frame.to_vec();
+        if bytes.is_empty() {
+            return bytes;
+        }
+        let pos = self.rng.below(bytes.len());
+        let flip = 1 + (self.rng.below(0xfe) as u8); // never 0: always a real change
+        bytes[pos] ^= flip;
+        bytes
+    }
 }
 
 impl Transport for ChaosTransport {
@@ -224,6 +247,41 @@ impl Transport for ChaosTransport {
             return Ok(Some(self.corrupt_line(&line)));
         }
         Ok(Some(line))
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        self.maybe_delay();
+        if self.hit(self.profile.drop) {
+            return Ok(()); // vanished in flight; the peer just never hears it
+        }
+        if self.hit(self.profile.trunc) {
+            // ship a cut frame body — honestly framed, so the peer reads
+            // it cleanly and the *checksum* layer calls it corrupt — and
+            // fail the send so the scheduler declares this worker dead
+            let cut = (frame.len() / 2).max(1);
+            let _ = self.inner.send_frame(&frame[..cut]);
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "chaos: truncated write",
+            ));
+        }
+        if self.hit(self.profile.corrupt) || self.hit(self.profile.corrupt_send) {
+            let mangled = self.corrupt_frame(frame);
+            return self.inner.send_frame(&mangled);
+        }
+        self.inner.send_frame(frame)
+    }
+
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        let got = self.inner.recv_frame()?;
+        let Some(frame) = got else { return Ok(None) };
+        self.maybe_delay();
+        let nth = self.state.frames_recv.fetch_add(1, Ordering::Relaxed) + 1;
+        let once = self.profile.corrupt_once > 0 && nth == self.profile.corrupt_once;
+        if once || self.hit(self.profile.corrupt) || self.hit(self.profile.corrupt_recv) {
+            return Ok(Some(self.corrupt_frame(&frame)));
+        }
+        Ok(Some(frame))
     }
 
     fn kind(&self) -> TransportKind {
@@ -317,6 +375,63 @@ mod tests {
         let err = checked.recv_line().unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
         assert_eq!(tally.load(Ordering::Relaxed), 1, "corruption detected and tallied");
+    }
+
+    #[test]
+    fn binary_frame_corruption_is_caught_by_the_checksum_layer() {
+        // same layering as the line test, binary wire: raw → chaos → checksum
+        let (server, client) = tcp_pair();
+        let profile = ChaosProfile::parse("corrupt_once=1").unwrap();
+        let chaotic = ChaosTransport::new(Box::new(server), 3, profile, ChaosState::new());
+        let tally = std::sync::Arc::new(AtomicU64::new(0));
+        let mut checked = ChecksumTransport::new(Box::new(chaotic), Some(tally.clone()));
+        let mut sender = ChecksumTransport::new(Box::new(client), None);
+        sender.send_frame(&[0x10, 1, 2, 3, 4, 5]).unwrap();
+        let err = checked.recv_frame().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally.load(Ordering::Relaxed), 1, "corruption detected and tallied");
+    }
+
+    #[test]
+    fn truncated_binary_send_errors_and_the_peer_counts_corruption() {
+        let (server, client) = tcp_pair();
+        let profile = ChaosProfile::parse("trunc=1").unwrap();
+        let chaotic = ChaosTransport::new(Box::new(server), 5, profile, ChaosState::new());
+        let mut sender = ChecksumTransport::new(Box::new(chaotic), None);
+        let err = sender.send_frame(&[0x01; 64]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe, "{err}");
+        let tally = std::sync::Arc::new(AtomicU64::new(0));
+        let mut checked = ChecksumTransport::new(Box::new(client), Some(tally.clone()));
+        let err = checked.recv_frame().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally.load(Ordering::Relaxed), 1, "cut frame counted as corruption");
+    }
+
+    #[test]
+    fn dropped_binary_frames_vanish_without_breaking_the_stream() {
+        let (server, mut client) = tcp_pair();
+        let profile = ChaosProfile::parse("drop=1").unwrap();
+        let mut chaotic = ChaosTransport::new(Box::new(server), 9, profile, ChaosState::new());
+        chaotic.send_frame(&[0x10, 0xde, 0xad]).unwrap(); // swallowed, send "succeeds"
+        chaotic.inner.send_frame(&[0x10, 0xbe, 0xef]).unwrap(); // bypasses chaos
+        let got = client.recv_frame().unwrap().unwrap();
+        assert_eq!(got, vec![0x10, 0xbe, 0xef], "first frame never hit the wire");
+    }
+
+    #[test]
+    fn corrupt_once_counter_spans_lines_and_binary_frames() {
+        // "the Nth frame received" counts both wire modes: a line then a
+        // frame through the same state — corrupt_once=2 hits the frame
+        let (server, mut client) = tcp_pair();
+        let profile = ChaosProfile::parse("corrupt_once=2").unwrap();
+        let mut chaotic = ChaosTransport::new(Box::new(server), 11, profile, ChaosState::new());
+        client.send_line(r#"{"type":"ping"}"#).unwrap();
+        client.send_frame(&[0x10, 7, 7, 7]).unwrap();
+        let line = chaotic.recv_line().unwrap().unwrap();
+        assert_eq!(line.trim_end(), r#"{"type":"ping"}"#, "frame 1 untouched");
+        let frame = chaotic.recv_frame().unwrap().unwrap();
+        assert_ne!(frame, vec![0x10, 7, 7, 7], "frame 2 corrupted");
+        assert_eq!(frame.len(), 4, "corruption flips a byte, never resizes");
     }
 
     #[test]

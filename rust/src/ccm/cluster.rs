@@ -10,11 +10,15 @@
 //! re-shipping** the broadcast (re-broadcast happens only when the last
 //! replica dies — both paths are counted and asserted in tests).
 //!
-//! # Wire protocol (version [`WIRE_VERSION`] = 5)
+//! # Wire protocol (version [`WIRE_VERSION`] = 6)
 //!
-//! Line-delimited JSON over the worker's transport. Large read-only state
-//! moves once per holding worker as content-addressed *broadcasts*; tasks
-//! then reference broadcasts by id and carry only library-row indices.
+//! Line-delimited JSON over the worker's transport — or, on a
+//! v6-negotiated connection, the same messages inside length-prefixed
+//! binary frames (see below). Large read-only state moves once per
+//! holding worker as content-addressed *broadcasts*; tasks then reference
+//! broadcasts by id and carry only library-row indices. The JSON shapes
+//! shown here are canonical: the binary wire is an alternate encoding of
+//! exactly these messages, negotiated per connection.
 //!
 //! Worker -> driver on startup (v5 hello; older workers omit newer fields
 //! and never receive newer-version messages). `auth` is present iff the
@@ -82,12 +86,30 @@
 //! the driver's result ingress shrinks from O(rows) prediction chunks to
 //! ~48-byte sums (counted by `result_ingress_bytes`). Pools containing
 //! any v≤4 worker — and the default `--reduce driver` — keep the
-//! driver-concat path bit-for-bit.
+//! driver-concat path bit-for-bit. v6 added the binary wire
+//! ([`BINARY_WIRE_VERSION`], codec in [`crate::ccm::binwire`]): once the
+//! handshake negotiates v6 on both sides, every post-handshake message in
+//! both directions rides a length-prefixed frame — payload-bearing
+//! messages (the three broadcast kinds, `result` preds, v5 `sums`) as
+//! tagged raw little-endian arrays with bit-packed neighbor indices,
+//! everything else (tasks, ping/pong, evict, error, shutdown) as compact
+//! JSON inside a `TAG_JSON` envelope, so the lease/speculation machinery
+//! re-sends task lines verbatim regardless of wire mode. Negotiation is
+//! **per connection**, at min(worker, driver): one v≤5 worker in a pool
+//! silently pins *its own* connection to the byte-identical JSON wire
+//! (`json_connections` vs `binary_connections` count the admits) without
+//! affecting its v6 peers — unlike `pool_speaks_agg`, which must gate
+//! pool-wide because agg results flow through shared driver state. The
+//! v4 checksum rides along: binary frames carry an 8-byte little-endian
+//! FNV-1a trailer instead of the 17-byte text suffix, with the same
+//! counted-detection semantics.
 //!
 //! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
 //! and f32 -> f64 is exact, so every finite value survives the wire
 //! bit-for-bit (`util::json` tests pin this), keeping cluster-backend
-//! results bit-identical to in-process ones — on both transports.
+//! results bit-identical to in-process ones — on both transports. Binary
+//! frames carry the raw bits themselves, which extends bit-exactness to
+//! the values JSON text cannot express (NaN payloads, -0.0).
 //!
 //! # Scheduling, replication, and failure handling
 //!
@@ -151,19 +173,20 @@ use std::io::{BufRead, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::ccm::backend::{ComputeBackend, CrossMapInput, PoolCounters, TaskArena};
+use crate::ccm::binwire;
 use crate::ccm::chaos::{chaos_from_env, ChaosProfile, ChaosState, ChaosTransport};
 use crate::ccm::lifecycle::{exp_backoff, RejoinPolicy, WorkerSource};
 use crate::ccm::pipeline::PearsonSums;
 use crate::ccm::table::TableShard;
 use crate::ccm::transport::{
-    bind_reuseaddr, connect_remote_deadline, ping_payload, recv_json, recv_json_counted,
-    resolve_auth_token, ChecksumTransport, Transport, TransportKind, WorkerLink, AGG_WIRE_VERSION,
-    CHECKSUM_WIRE_VERSION, EVICT_WIRE_VERSION, KEEPALIVE_WIRE_VERSION, REJOIN_CONNECT_TIMEOUT,
-    WIRE_VERSION,
+    bind_reuseaddr, connect_remote_deadline, ping_payload, read_frame, recv_json_counted,
+    resolve_auth_token, write_frame, ChecksumTransport, Transport, TransportKind, WorkerLink,
+    AGG_WIRE_VERSION, BINARY_WIRE_VERSION, CHECKSUM_WIRE_VERSION, EVICT_WIRE_VERSION,
+    KEEPALIVE_WIRE_VERSION, REJOIN_CONNECT_TIMEOUT, WIRE_VERSION,
 };
 use crate::native::NativeBackend;
 use crate::util::cli::Args;
@@ -257,7 +280,10 @@ fn broadcast_header(id: u64, kind: &str) -> Vec<(&'static str, Json)> {
     ]
 }
 
-fn problem_payload(id: u64, vecs: &[f32], targets: &[f32], times: &[f32]) -> String {
+/// The legacy JSON broadcast line for a problem — the v<=5 wire, still
+/// shipped verbatim on pinned-JSON connections. Public so benches can
+/// price the two wire encodings of the same content against each other.
+pub fn problem_payload(id: u64, vecs: &[f32], targets: &[f32], times: &[f32]) -> String {
     let mut fields = broadcast_header(id, "problem");
     fields.push(("vecs", Json::f32s(vecs)));
     fields.push(("targets", Json::f32s(targets)));
@@ -292,6 +318,154 @@ fn evict_payload(id: u64) -> String {
         ("id", Json::Str(hex(id))),
     ])
     .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// per-connection wire mode (v6)
+// ---------------------------------------------------------------------------
+
+/// Send a control or task message in the connection's wire mode: binary
+/// connections wrap the line in a `TAG_JSON` envelope frame, JSON
+/// connections send it verbatim. The handshake never comes through here.
+fn send_control(t: &mut dyn Transport, binary: bool, line: &str) -> std::io::Result<()> {
+    if binary {
+        t.send_frame(&binwire::encode_json(line))
+    } else {
+        t.send_line(line)
+    }
+}
+
+/// Worker-side reply send: on a binary connection, payload-bearing
+/// results get their binary tag (via [`binwire::reply_frame`]), control
+/// replies ride the JSON envelope; a JSON connection gets the line.
+fn send_reply(t: &mut dyn Transport, binary: bool, reply: &Json) -> std::io::Result<()> {
+    if binary {
+        t.send_frame(&binwire::reply_frame(reply))
+    } else {
+        t.send_line(&reply.to_string())
+    }
+}
+
+/// Driver-side receive in the connection's wire mode, returning the
+/// message plus its on-wire byte count (JSON: trimmed line + newline;
+/// binary: frame body + 4-byte length prefix — both excluding the
+/// checksum layer's own overhead). EOF and malformed frames surface as
+/// the same error kinds the JSON path produces, feeding the identical
+/// connection-death machinery.
+fn recv_msg_counted(t: &mut dyn Transport, binary: bool) -> std::io::Result<(Json, u64)> {
+    if !binary {
+        return recv_json_counted(t);
+    }
+    let Some(frame) = t.recv_frame()? else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "worker closed its connection",
+        ));
+    };
+    let bytes = frame.len() as u64 + 4;
+    binwire::decode(&frame)
+        .and_then(binwire::to_json)
+        .map(|msg| (msg, bytes))
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+/// [`recv_msg_counted`] without the tally (keepalive probes).
+fn recv_msg(t: &mut dyn Transport, binary: bool) -> std::io::Result<Json> {
+    recv_msg_counted(t, binary).map(|(msg, _)| msg)
+}
+
+/// The raw content of one broadcast, kept driver-side so either wire
+/// encoding can be produced on demand. Owning the arrays (rather than a
+/// pre-serialized string) is what makes the dual encoding lazy: a pool
+/// that negotiated v6 everywhere never pays the float→text JSON encode at
+/// all, and a pinned-JSON connection never pays the binary one.
+enum PayloadSrc {
+    Problem { id: u64, vecs: Vec<f32>, targets: Vec<f32>, times: Vec<f32> },
+    Targets { id: u64, targets: Vec<f32> },
+    /// An owned copy rebuilt from the source shard's raw parts
+    /// ([`TableShard`] is deliberately not `Clone` — it carries per-shard
+    /// runtime state), captured once when the payload is first cached.
+    Shard { id: u64, shard: TableShard },
+}
+
+/// One cached broadcast payload with both wire encodings, each produced
+/// on first use and then shared by every later ship of the same content.
+struct Payload {
+    src: PayloadSrc,
+    line: OnceLock<Arc<String>>,
+    bin: OnceLock<Arc<Vec<u8>>>,
+}
+
+impl PayloadSrc {
+    /// Capture an owned copy of `shard` for the payload cache.
+    fn from_shard(id: u64, shard: &TableShard) -> PayloadSrc {
+        let (neighbors, vecs) = shard.raw_parts();
+        PayloadSrc::Shard {
+            id,
+            shard: TableShard::from_parts(
+                shard.shard_id,
+                shard.row_lo,
+                shard.row_hi,
+                shard.row_len(),
+                shard.n,
+                shard.t0,
+                neighbors.to_vec(),
+                vecs.to_vec(),
+            ),
+        }
+    }
+}
+
+impl Payload {
+    fn new(src: PayloadSrc) -> Payload {
+        Payload { src, line: OnceLock::new(), bin: OnceLock::new() }
+    }
+
+    /// The JSON wire line — byte-identical to the pre-v6 payload builders
+    /// (the pinned-JSON fallback tests compare against exactly this).
+    fn line(&self) -> &Arc<String> {
+        self.line.get_or_init(|| {
+            Arc::new(match &self.src {
+                PayloadSrc::Problem { id, vecs, targets, times } => {
+                    problem_payload(*id, vecs, targets, times)
+                }
+                PayloadSrc::Targets { id, targets } => targets_payload(*id, targets),
+                PayloadSrc::Shard { id, shard } => shard_payload(*id, shard),
+            })
+        })
+    }
+
+    /// The v6 binary frame body.
+    fn bin(&self) -> &Arc<Vec<u8>> {
+        self.bin.get_or_init(|| {
+            Arc::new(match &self.src {
+                PayloadSrc::Problem { id, vecs, targets, times } => {
+                    binwire::encode_problem(*id, vecs, targets, times)
+                }
+                PayloadSrc::Targets { id, targets } => binwire::encode_targets(*id, targets),
+                PayloadSrc::Shard { id, shard } => binwire::encode_shard(*id, shard),
+            })
+        })
+    }
+
+    /// On-wire byte count of one ship of this payload in the given mode
+    /// (line + newline, or frame body + length prefix).
+    fn wire_bytes(&self, binary: bool) -> u64 {
+        if binary {
+            self.bin().len() as u64 + 4
+        } else {
+            self.line().len() as u64 + 1
+        }
+    }
+
+    /// Send this payload in the connection's wire mode.
+    fn send(&self, t: &mut dyn Transport, binary: bool) -> std::io::Result<()> {
+        if binary {
+            t.send_frame(self.bin())
+        } else {
+            t.send_line(self.line())
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -343,6 +517,23 @@ fn store_broadcast(store: &mut HashMap<String, Stored>, msg: &Json) -> Result<()
     };
     store.insert(id, value);
     Ok(())
+}
+
+/// Store a broadcast that arrived as a typed v6 frame — no JSON detour:
+/// the decoded arrays (and the rebuilt [`TableShard`]) move straight into
+/// the store the task ops read from.
+fn store_bin_broadcast(store: &mut HashMap<String, Stored>, b: binwire::Broadcast) {
+    match b {
+        binwire::Broadcast::Problem { id, vecs, targets, times } => {
+            store.insert(hex(id), Stored::Problem { vecs, targets, times });
+        }
+        binwire::Broadcast::Targets { id, targets } => {
+            store.insert(hex(id), Stored::Targets(targets));
+        }
+        binwire::Broadcast::Shard { id, shard } => {
+            store.insert(hex(id), Stored::Shard(shard));
+        }
+    }
 }
 
 /// Encode partial Pearson sums as the wire array `[n, Σx, Σy, Σxy, Σx²,
@@ -504,6 +695,14 @@ impl Transport for StdioTransport {
         }
     }
 
+    fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        write_frame(&mut self.stdout, frame)
+    }
+
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        read_frame(&mut self.stdin)
+    }
+
     fn kind(&self) -> TransportKind {
         TransportKind::Pipe
     }
@@ -559,27 +758,60 @@ fn serve(
     // the handshake always rides the raw byte layer; chaos + checksum are
     // layered on when the hello_ack announces a v4+ driver
     let mut wrapped = false;
+    // set when the hello_ack negotiates v6: every later message in both
+    // directions is a binary frame (the handshake itself is always lines)
+    let mut binary = false;
     let mut store: HashMap<String, Stored> = HashMap::new();
     let mut arena = TaskArena::new();
     loop {
-        let line = match transport.recv_line() {
-            Ok(Some(l)) => l,
-            Ok(None) => break, // EOF: driver gone
-            Err(e) => {
-                // includes a failed v4 checksum: die cleanly and loudly so
-                // the driver's death machinery requeues our task
-                eprintln!("[worker {pid}] connection error: {e}");
-                return std::process::ExitCode::FAILURE;
+        let msg = if binary {
+            let frame = match transport.recv_frame() {
+                Ok(Some(f)) => f,
+                Ok(None) => break, // EOF: driver gone
+                Err(e) => {
+                    // includes a failed v4 checksum: die cleanly and loudly
+                    // so the driver's death machinery requeues our task
+                    eprintln!("[worker {pid}] connection error: {e}");
+                    return std::process::ExitCode::FAILURE;
+                }
+            };
+            match binwire::decode(&frame) {
+                // typed broadcasts skip the JSON detour entirely (binary
+                // mode implies the hello_ack already authenticated us)
+                Ok(binwire::BinMsg::Broadcast(b)) => {
+                    store_bin_broadcast(&mut store, b);
+                    continue;
+                }
+                Ok(binwire::BinMsg::Json(m)) => m,
+                Ok(_) => {
+                    eprintln!("[worker {pid}] protocol error: result frame from the driver");
+                    return std::process::ExitCode::FAILURE;
+                }
+                Err(e) => {
+                    eprintln!("[worker {pid}] bad frame: {e}");
+                    return std::process::ExitCode::FAILURE;
+                }
             }
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let msg = match Json::parse(&line) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("[worker {pid}] bad message: {e}");
-                return std::process::ExitCode::FAILURE;
+        } else {
+            let line = match transport.recv_line() {
+                Ok(Some(l)) => l,
+                Ok(None) => break, // EOF: driver gone
+                Err(e) => {
+                    // includes a failed v4 checksum: die cleanly and loudly
+                    // so the driver's death machinery requeues our task
+                    eprintln!("[worker {pid}] connection error: {e}");
+                    return std::process::ExitCode::FAILURE;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Json::parse(&line) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("[worker {pid}] bad message: {e}");
+                    return std::process::ExitCode::FAILURE;
+                }
             }
         };
         let kind_str = msg.get("type").and_then(Json::as_str);
@@ -605,7 +837,8 @@ fn serve(
                     wrapped = true;
                     let driver_v =
                         msg.get("v").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(0);
-                    if driver_v.min(advertised) >= CHECKSUM_WIRE_VERSION {
+                    let negotiated = driver_v.min(advertised);
+                    if negotiated >= CHECKSUM_WIRE_VERSION {
                         if let Some((seed, profile)) = &chaos {
                             transport = Box::new(ChaosTransport::new(
                                 transport,
@@ -616,6 +849,9 @@ fn serve(
                         }
                         transport = Box::new(ChecksumTransport::new(transport, None));
                     }
+                    // v6: both sides switch to length-prefixed binary frames
+                    // for everything after the handshake
+                    binary = negotiated >= BINARY_WIRE_VERSION;
                 }
                 continue;
             }
@@ -627,7 +863,7 @@ fn serve(
                     ("type", Json::Str("pong".into())),
                     ("nonce", msg.get("nonce").cloned().unwrap_or(Json::Null)),
                 ]);
-                if transport.send_line(&pong.to_string()).is_err() {
+                if send_reply(transport.as_mut(), binary, &pong).is_err() {
                     break;
                 }
                 continue;
@@ -639,7 +875,7 @@ fn serve(
                 "[worker {pid}] refusing {} before an authenticated hello_ack",
                 kind_str.unwrap_or("message")
             );
-            let _ = transport.send_line(&error_reply(&msg, "worker requires auth".into()).to_string());
+            let _ = send_reply(transport.as_mut(), binary, &error_reply(&msg, "worker requires auth".into()));
             return std::process::ExitCode::FAILURE;
         }
         let reply = match kind_str {
@@ -662,7 +898,7 @@ fn serve(
             other => Some(error_reply(&msg, format!("unknown message type {other:?}"))),
         };
         if let Some(reply) = reply {
-            if transport.send_line(&reply.to_string()).is_err() {
+            if send_reply(transport.as_mut(), binary, &reply).is_err() {
                 break; // driver hung up
             }
         }
@@ -881,6 +1117,15 @@ struct Worker {
     tasks_done: u64,
 }
 
+impl Worker {
+    /// This connection negotiated the v6 binary wire at its handshake.
+    /// Per-connection, not pool-wide: one legacy worker pins only its own
+    /// connection to the JSON line wire.
+    fn binary(&self) -> bool {
+        self.wire_v >= BINARY_WIRE_VERSION
+    }
+}
+
 #[derive(Default)]
 struct PoolState {
     idle: Vec<Worker>,
@@ -905,7 +1150,9 @@ struct PoolState {
     evicted_pending: HashSet<u64>,
     /// (id, worker) broadcast ships performed, including replica copies.
     ships: u64,
-    /// Bytes actually written for broadcast ships (payload + newline).
+    /// Bytes actually written for broadcast ships under each
+    /// connection's negotiated encoding (JSON line + newline, or binary
+    /// frame + length prefix; checksum trailers excluded in both modes).
     ship_bytes: u64,
     /// Ships of an id whose replicas had all died — the re-broadcast
     /// fallback replication exists to avoid.
@@ -935,6 +1182,11 @@ struct PoolState {
     rejoin_ships: u64,
     /// Bytes written by task-driven ships to rejoined workers.
     rejoin_ship_bytes: u64,
+    /// Connections admitted speaking the v6 binary wire (cumulative over
+    /// the run: spawns, respawns, and rejoins all count their admit).
+    binary_connections: u64,
+    /// Connections admitted pinned to the JSON line wire (v≤5 peers).
+    json_connections: u64,
 }
 
 /// Why a worker was declared dead (for counters and log lines).
@@ -957,9 +1209,22 @@ enum ExchangeError {
     App(String),
 }
 
+/// Tally one admitted connection under the wire mode its handshake
+/// negotiated. Called wherever a worker enters the pool: initial spawn,
+/// death respawn, and rejoin redial.
+fn note_connection(st: &mut PoolState, w: &Worker) {
+    if w.binary() {
+        st.binary_connections += 1;
+    } else {
+        st.json_connections += 1;
+    }
+}
+
 /// Record one (id -> worker) broadcast ship; returns whether this was the
-/// id's first ship ever (the moment replication tops up).
-fn record_ship(st: &mut PoolState, id: u64, serial: u64, line_len: usize) -> bool {
+/// id's first ship ever (the moment replication tops up). `wire_bytes` is
+/// the on-wire size of the ship under the connection's negotiated
+/// encoding (line + newline, or binary frame + length prefix).
+fn record_ship(st: &mut PoolState, id: u64, serial: u64, wire_bytes: u64) -> bool {
     let first_ever = st.shipped_ever.insert(id);
     let lost_all = match st.holders.get(&id) {
         Some(set) => set.is_empty(),
@@ -970,7 +1235,7 @@ fn record_ship(st: &mut PoolState, id: u64, serial: u64, line_len: usize) -> boo
     }
     st.holders.entry(id).or_default().insert(serial);
     st.ships += 1;
-    st.ship_bytes += line_len as u64 + 1;
+    st.ship_bytes += wire_bytes;
     first_ever
 }
 
@@ -993,7 +1258,10 @@ fn drop_holder(st: &mut PoolState, id: u64, serial: u64) {
 }
 
 struct PayloadEntry {
-    line: Arc<String>,
+    /// Lazily dual-encoded broadcast content: JSON line and v6 binary
+    /// frame are each built at most once, on first ship over a
+    /// connection of that wire mode.
+    payload: Arc<Payload>,
     /// Owners that have not yet evicted this payload; freed at zero.
     refs: u32,
 }
@@ -1023,7 +1291,7 @@ struct Lease {
     /// A speculative win, committed here for the primary to collect.
     result: Option<Json>,
     /// The task's broadcast needs, cloned for the speculative re-run.
-    needs: Vec<(u64, Arc<String>)>,
+    needs: Vec<(u64, Arc<Payload>)>,
     /// The exact task line, re-sent verbatim by the speculative run (same
     /// task id, so either reply matches the exchange filter).
     task_line: Arc<String>,
@@ -1174,14 +1442,16 @@ impl ClusterCore {
         })
     }
 
-    /// Cache (and return) the serialized payload for broadcast `id`. A
-    /// fresh entry starts with one reference.
-    fn payload(&self, id: u64, build: impl FnOnce() -> String) -> Arc<String> {
+    /// Cache (and return) the payload for broadcast `id`. A fresh entry
+    /// starts with one reference. The entry holds the broadcast's
+    /// *content* ([`PayloadSrc`]); the JSON line and binary frame
+    /// encodings are each materialized lazily on first use.
+    fn payload(&self, id: u64, build: impl FnOnce() -> PayloadSrc) -> Arc<Payload> {
         let mut map = self.lock_payloads();
         let entry = map
             .entry(id)
-            .or_insert_with(|| PayloadEntry { line: Arc::new(build()), refs: 1 });
-        Arc::clone(&entry.line)
+            .or_insert_with(|| PayloadEntry { payload: Arc::new(Payload::new(build())), refs: 1 });
+        Arc::clone(&entry.payload)
     }
 
     fn retain_broadcast_ids(&self, ids: &[u64]) {
@@ -1331,7 +1601,8 @@ impl ClusterCore {
             Vec::new()
         };
         for &id in &pending {
-            if worker.link.transport.send_line(&evict_payload(id)).is_err() {
+            let binary = worker.binary();
+            if send_control(worker.link.transport.as_mut(), binary, &evict_payload(id)).is_err() {
                 self.handle_death(worker, DeathCause::Exchange, "evict delivery failed");
                 return;
             }
@@ -1364,7 +1635,7 @@ impl ClusterCore {
             if self.source.can_respawn() { Some(self.spawn(dead.slot)) } else { None };
         let held: Vec<u64> = dead.has.iter().copied().collect();
         let mut remote_death = false;
-        let mut repair: Vec<(u64, Arc<String>)> = Vec::new();
+        let mut repair: Vec<(u64, Arc<Payload>)> = Vec::new();
         {
             let mut st = self.lock_state();
             st.live -= 1;
@@ -1383,6 +1654,7 @@ impl ClusterCore {
                     if w.wire_v < AGG_WIRE_VERSION {
                         st.legacy_live += 1;
                     }
+                    note_connection(&mut st, &w);
                     st.idle.push(w);
                     st.live += 1;
                     st.respawns += 1;
@@ -1413,7 +1685,7 @@ impl ClusterCore {
                     let holders = st.holders.get(&id).map_or(0, |s| s.len());
                     if holders < self.opts.replicas {
                         if let Some(e) = payloads.get(&id) {
-                            repair.push((id, Arc::clone(&e.line)));
+                            repair.push((id, Arc::clone(&e.payload)));
                         }
                     }
                 }
@@ -1484,6 +1756,7 @@ impl ClusterCore {
                         if worker.wire_v < AGG_WIRE_VERSION {
                             st.legacy_live += 1;
                         }
+                        note_connection(&mut st, &worker);
                         st.rejoins += 1;
                         st.idle.push(worker);
                     }
@@ -1531,7 +1804,7 @@ impl ClusterCore {
     /// busy pool repairs less; the next task-driven ship finishes the
     /// job); counted apart from task-driven ships as `repair_ships` /
     /// `repair_ship_bytes`.
-    fn repair_ship(&self, id: u64, payload: &Arc<String>) {
+    fn repair_ship(&self, id: u64, payload: &Arc<Payload>) {
         loop {
             let target = {
                 let mut st = self.lock_state();
@@ -1560,7 +1833,8 @@ impl ClusterCore {
                 }
             };
             let mut w = target;
-            if w.link.transport.send_line(payload).is_err() {
+            let binary = w.binary();
+            if payload.send(w.link.transport.as_mut(), binary).is_err() {
                 // handle_death drops the claimed holdership via w.has
                 self.handle_death(w, DeathCause::Exchange, "repair ship failed");
                 continue;
@@ -1568,7 +1842,7 @@ impl ClusterCore {
             {
                 let mut st = self.lock_state();
                 st.repair_ships += 1;
-                st.repair_ship_bytes += payload.len() as u64 + 1;
+                st.repair_ship_bytes += payload.wire_bytes(binary);
             }
             self.release(w);
         }
@@ -1587,9 +1861,10 @@ impl ClusterCore {
         if !worker.link.transport.set_recv_deadline(Some(deadline))? {
             return Ok(false);
         }
-        worker.link.transport.send_line(&ping_payload(nonce))?;
+        let binary = worker.binary();
+        send_control(worker.link.transport.as_mut(), binary, &ping_payload(nonce))?;
         loop {
-            let reply = recv_json(worker.link.transport.as_mut())?;
+            let reply = recv_msg(worker.link.transport.as_mut(), binary)?;
             if reply.get("type").and_then(Json::as_str) == Some("pong")
                 && reply.get("nonce").and_then(Json::as_f64) == Some(nonce as f64)
             {
@@ -1614,20 +1889,20 @@ impl ClusterCore {
     fn exchange(
         &self,
         worker: &mut Worker,
-        needs: &[(u64, Arc<String>)],
+        needs: &[(u64, Arc<Payload>)],
         task_id: u64,
         task_line: &str,
         speculative: bool,
     ) -> Result<Json, ExchangeError> {
+        let binary = worker.binary();
         for (id, payload) in needs {
             if !worker.has.contains(id) {
                 self.ship(worker, *id, payload).map_err(ExchangeError::Dead)?;
             }
         }
-        worker
-            .link
-            .transport
-            .send_line(task_line)
+        // tasks are control-plane traffic: they ride a TAG_JSON envelope
+        // frame on a binary connection, byte-identical JSON inside
+        send_control(worker.link.transport.as_mut(), binary, task_line)
             .map_err(ExchangeError::Dead)?;
         let polling = self.tracks_leases()
             && worker
@@ -1641,7 +1916,8 @@ impl ClusterCore {
         let mut orphan_polls: u32 = 0;
         let abandon_after = (Duration::from_secs(60).as_millis() / LEASE_POLL.as_millis()) as u32;
         loop {
-            let (reply, reply_bytes) = match recv_json_counted(worker.link.transport.as_mut()) {
+            let (reply, reply_bytes) = match recv_msg_counted(worker.link.transport.as_mut(), binary)
+            {
                 Ok(r) => r,
                 Err(e)
                     if polling
@@ -1717,9 +1993,11 @@ impl ClusterCore {
 
     /// Ship broadcast `id` to `worker`; on the id's first-ever ship, also
     /// top up replicas on other idle workers.
-    fn ship(&self, worker: &mut Worker, id: u64, payload: &str) -> std::io::Result<()> {
-        worker.link.transport.send_line(payload)?;
+    fn ship(&self, worker: &mut Worker, id: u64, payload: &Payload) -> std::io::Result<()> {
+        let binary = worker.binary();
+        payload.send(worker.link.transport.as_mut(), binary)?;
         worker.has.insert(id);
+        let wire_bytes = payload.wire_bytes(binary);
         let first_ever = {
             let mut st = self.lock_state();
             if worker.rejoined {
@@ -1727,9 +2005,9 @@ impl ClusterCore {
                 // the on-demand price of a rejoin, distinct from the
                 // death-driven repair_ships
                 st.rejoin_ships += 1;
-                st.rejoin_ship_bytes += payload.len() as u64 + 1;
+                st.rejoin_ship_bytes += wire_bytes;
             }
-            record_ship(&mut st, id, worker.serial, payload.len())
+            record_ship(&mut st, id, worker.serial, wire_bytes)
         };
         if first_ever && self.opts.replicas > 1 {
             self.replicate(id, payload, worker.serial);
@@ -1742,7 +2020,7 @@ impl ClusterCore {
     /// fewer; later ships are task-driven). Targets are leased out of the
     /// pool under the lock but the (potentially large) payload writes
     /// happen OUTSIDE it, so a slow replica link never stalls dispatch.
-    fn replicate(&self, id: u64, payload: &str, exclude: u64) {
+    fn replicate(&self, id: u64, payload: &Payload, exclude: u64) {
         let mut targets = Vec::new();
         {
             let mut st = self.lock_state();
@@ -1759,14 +2037,15 @@ impl ClusterCore {
             }
         }
         for mut w in targets {
-            if w.link.transport.send_line(payload).is_err() {
+            let binary = w.binary();
+            if payload.send(w.link.transport.as_mut(), binary).is_err() {
                 self.handle_death(w, DeathCause::Exchange, "replica ship failed");
                 continue;
             }
             w.has.insert(id);
             {
                 let mut st = self.lock_state();
-                record_ship(&mut st, id, w.serial, payload.len());
+                record_ship(&mut st, id, w.serial, payload.wire_bytes(binary));
             }
             self.release(w);
         }
@@ -1779,7 +2058,7 @@ impl ClusterCore {
         task_id: u64,
         kind: &'static str,
         worker: &Worker,
-        needs: &[(u64, Arc<String>)],
+        needs: &[(u64, Arc<Payload>)],
         task_line: &Arc<String>,
     ) {
         if !self.tracks_leases() {
@@ -2039,7 +2318,7 @@ impl ClusterCore {
     /// caller's `--on-exhausted` policy instead of panicking here.
     fn execute(
         &self,
-        needs: &[(u64, Arc<String>)],
+        needs: &[(u64, Arc<Payload>)],
         kind: &'static str,
         build_task: impl Fn(u64) -> String,
     ) -> Result<Json, TaskExhausted> {
@@ -2157,7 +2436,8 @@ impl Drop for ClusterCore {
     fn drop(&mut self) {
         let mut st = self.lock_state();
         for mut w in st.idle.drain(..) {
-            let _ = w.link.transport.send_line(r#"{"type":"shutdown"}"#);
+            let binary = w.binary();
+            let _ = send_control(w.link.transport.as_mut(), binary, r#"{"type":"shutdown"}"#);
             if let Some(child) = w.link.child.as_mut() {
                 let _ = child.wait();
             }
@@ -2326,6 +2606,9 @@ impl ClusterBackend {
             let mut st = core.lock_state();
             st.live = idle.len();
             st.legacy_live = idle.iter().filter(|w| w.wire_v < AGG_WIRE_VERSION).count();
+            for w in &idle {
+                note_connection(&mut st, w);
+            }
             st.idle = idle;
         }
         let maint_stop = Arc::new(AtomicBool::new(false));
@@ -2402,9 +2685,12 @@ impl Drop for ClusterBackend {
 impl ComputeBackend for ClusterBackend {
     fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
         let id = problem_wire_id(input.vecs, input.targets, input.times);
-        let payload = self
-            .core
-            .payload(id, || problem_payload(id, input.vecs, input.targets, input.times));
+        let payload = self.core.payload(id, || PayloadSrc::Problem {
+            id,
+            vecs: input.vecs.to_vec(),
+            targets: input.targets.to_vec(),
+            times: input.times.to_vec(),
+        });
         let e = input.e;
         let theiler = input.theiler;
         let lib_rows = Json::usizes(input.lib_rows);
@@ -2467,8 +2753,9 @@ impl ComputeBackend for ClusterBackend {
     ) {
         let sid = shard.wire_id();
         let tid = targets_wire_id(targets);
-        let shard_line = self.core.payload(sid, || shard_payload(sid, shard));
-        let targets_line = self.core.payload(tid, || targets_payload(tid, targets));
+        let shard_line = self.core.payload(sid, || PayloadSrc::from_shard(sid, shard));
+        let targets_line =
+            self.core.payload(tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
         let rows = Json::usizes(lib_rows);
         let reply =
             self.core.execute(&[(sid, shard_line), (tid, targets_line)], "shard_chunk", |task| {
@@ -2521,8 +2808,9 @@ impl ComputeBackend for ClusterBackend {
         }
         let sid = shard.wire_id();
         let tid = targets_wire_id(targets);
-        let shard_line = self.core.payload(sid, || shard_payload(sid, shard));
-        let targets_line = self.core.payload(tid, || targets_payload(tid, targets));
+        let shard_line = self.core.payload(sid, || PayloadSrc::from_shard(sid, shard));
+        let targets_line =
+            self.core.payload(tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
         let rows = Json::usizes(lib_rows);
         let reply =
             self.core.execute(&[(sid, shard_line), (tid, targets_line)], "agg_chunk", |task| {
@@ -2605,12 +2893,26 @@ impl ComputeBackend for ClusterBackend {
             rejoin_rejected: st.rejoin_rejected,
             rejoin_ships: st.rejoin_ships,
             rejoin_ship_bytes: st.rejoin_ship_bytes,
+            binary_connections: st.binary_connections,
+            json_connections: st.json_connections,
             speculative_launches: self.core.speculative_launches.load(Ordering::Relaxed),
             speculative_wins: self.core.speculative_wins.load(Ordering::Relaxed),
             deadline_kills: self.core.deadline_kills.load(Ordering::Relaxed),
             corrupt_frames_detected: self.core.corrupt_frames.load(Ordering::Relaxed),
             exhausted_fallbacks: self.core.exhausted_fallbacks.load(Ordering::Relaxed),
             result_ingress_bytes: self.core.result_ingress_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn wire_pricing(&self) -> crate::engine::config::WirePricing {
+        // conservative: one pinned-JSON connection in the pool means some
+        // real traffic ships as decimal text, so the DES prices the whole
+        // run at the JSON rate (connections are per-worker; the model has
+        // no per-link granularity)
+        if self.core.lock_state().json_connections > 0 {
+            crate::engine::config::WirePricing::Json
+        } else {
+            crate::engine::config::WirePricing::Binary
         }
     }
 
@@ -2854,9 +3156,10 @@ mod tests {
     fn ship_accounting_counts_replicas_and_rebroadcasts() {
         let mut st = PoolState::default();
         // first ship of id 7 to worker 1: first_ever, no rebroadcast
-        assert!(record_ship(&mut st, 7, 1, 99));
+        // (100 = the caller-computed on-wire size, encoding included)
+        assert!(record_ship(&mut st, 7, 1, 100));
         // replica copy to worker 2: not first_ever, holders non-empty
-        assert!(!record_ship(&mut st, 7, 2, 99));
+        assert!(!record_ship(&mut st, 7, 2, 100));
         assert_eq!(st.ships, 2);
         assert_eq!(st.ship_bytes, 200);
         assert_eq!(st.rebroadcasts, 0);
@@ -2889,7 +3192,8 @@ mod tests {
         // exercise the refcount logic without spawning workers: build the
         // backend pieces by hand (no pool needed for this path)
         let mut map: HashMap<u64, PayloadEntry> = HashMap::new();
-        map.insert(5, PayloadEntry { line: Arc::new("x".into()), refs: 1 });
+        let src = PayloadSrc::Targets { id: 5, targets: vec![1.0, 2.0] };
+        map.insert(5, PayloadEntry { payload: Arc::new(Payload::new(src)), refs: 1 });
         // retain then double-evict: survives the first, freed by the second
         map.get_mut(&5).unwrap().refs += 1;
         for _ in 0..2 {
@@ -2900,6 +3204,117 @@ mod tests {
             }
         }
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn payload_line_is_byte_identical_to_the_legacy_builders() {
+        // the pinned-JSON (v<=5) fallback promises the exact bytes a
+        // pre-v6 driver would have sent; Payload::line() must keep that
+        let (x, y) = coupled_logistic(160, CoupledLogisticParams::default());
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let pid = problem_wire_id(&problem.emb.vecs, &problem.targets, &problem.times);
+        let p = Payload::new(PayloadSrc::Problem {
+            id: pid,
+            vecs: problem.emb.vecs.clone(),
+            targets: problem.targets.clone(),
+            times: problem.times.clone(),
+        });
+        assert_eq!(
+            p.line().as_str(),
+            problem_payload(pid, &problem.emb.vecs, &problem.targets, &problem.times)
+        );
+        assert_eq!(p.wire_bytes(false), p.line().len() as u64 + 1);
+        assert_eq!(p.wire_bytes(true), p.bin().len() as u64 + 4);
+
+        let tid = targets_wire_id(&problem.targets);
+        let t = Payload::new(PayloadSrc::Targets { id: tid, targets: problem.targets.clone() });
+        assert_eq!(t.line().as_str(), targets_payload(tid, &problem.targets));
+
+        let table = crate::ccm::table::DistanceTable::build_truncated(&problem.emb, 16);
+        let sharded = table.shard(2);
+        let shard = &sharded.shards()[0];
+        let s = Payload::new(PayloadSrc::from_shard(shard.wire_id(), shard));
+        assert_eq!(s.line().as_str(), shard_payload(shard.wire_id(), shard));
+    }
+
+    #[test]
+    fn payload_bin_lands_the_same_content_in_a_worker_store() {
+        let (x, y) = coupled_logistic(160, CoupledLogisticParams::default());
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let pid = problem_wire_id(&problem.emb.vecs, &problem.targets, &problem.times);
+        let p = Payload::new(PayloadSrc::Problem {
+            id: pid,
+            vecs: problem.emb.vecs.clone(),
+            targets: problem.targets.clone(),
+            times: problem.times.clone(),
+        });
+        let mut store = HashMap::new();
+        match binwire::decode(p.bin()).unwrap() {
+            binwire::BinMsg::Broadcast(b) => store_bin_broadcast(&mut store, b),
+            _ => panic!("problem payload must decode as a broadcast frame"),
+        }
+        match store.get(&hex(pid)) {
+            Some(Stored::Problem { vecs, targets, times }) => {
+                assert_eq!(vecs, &problem.emb.vecs);
+                assert_eq!(targets, &problem.targets);
+                assert_eq!(times, &problem.times);
+            }
+            _ => panic!("binary problem broadcast not stored"),
+        }
+        // and the shard form, including its neighbor bit-packing
+        let table = crate::ccm::table::DistanceTable::build_truncated(&problem.emb, 16);
+        let sharded = table.shard(2);
+        let shard = &sharded.shards()[1];
+        let s = Payload::new(PayloadSrc::from_shard(shard.wire_id(), shard));
+        let mut store = HashMap::new();
+        match binwire::decode(s.bin()).unwrap() {
+            binwire::BinMsg::Broadcast(b) => store_bin_broadcast(&mut store, b),
+            _ => panic!("shard payload must decode as a broadcast frame"),
+        }
+        match store.get(&hex(shard.wire_id())) {
+            Some(Stored::Shard(got)) => {
+                assert_eq!(got.wire_id(), shard.wire_id());
+                assert_eq!(got.raw_parts().0, shard.raw_parts().0);
+                assert_eq!(got.raw_parts().1, shard.raw_parts().1);
+            }
+            _ => panic!("binary shard broadcast not stored"),
+        }
+    }
+
+    #[test]
+    fn note_connection_tallies_by_negotiated_wire_version() {
+        let mut st = PoolState::default();
+        let count = |st: &mut PoolState, wire_v: u64| {
+            // only wire_v matters to the tally; fabricate the rest
+            let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let client = std::thread::spawn(move || std::net::TcpStream::connect(addr).unwrap());
+            let (stream, _) = listener.accept().unwrap();
+            let _keep = client.join().unwrap();
+            let w = Worker {
+                serial: 1,
+                slot: 0,
+                rejoined: false,
+                link: WorkerLink {
+                    child: None,
+                    transport: Box::new(
+                        crate::ccm::transport::TcpTransport::from_stream(stream).unwrap(),
+                    ),
+                    pid: 0,
+                    addr: None,
+                },
+                wire_v,
+                has: HashSet::new(),
+                tasks_done: 0,
+            };
+            note_connection(st, &w);
+        };
+        count(&mut st, WIRE_VERSION);
+        count(&mut st, BINARY_WIRE_VERSION);
+        count(&mut st, AGG_WIRE_VERSION); // v5: pinned to JSON
+        count(&mut st, 1);
+        assert_eq!(st.binary_connections, 2);
+        assert_eq!(st.json_connections, 2);
     }
 
     /// A core with no workers and no threads: enough for the pure lease /

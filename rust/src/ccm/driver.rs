@@ -118,7 +118,7 @@ impl TablePolicy {
     }
 }
 
-/// Where the Pearson reduction runs for sharded table cases.
+/// Where the Pearson reduction runs for the table cases (A4/A5).
 ///
 /// With [`ReduceMode::Driver`] (the default) every shard task ships its
 /// raw prediction chunk back and the driver concatenates rows before a
@@ -129,8 +129,13 @@ impl TablePolicy {
 /// `O(shards)` per skill, and the resulting rho is within 1 ULP of the
 /// driver-concat value (see `ccm::pipeline`'s worker-side reduce docs).
 ///
-/// Non-sharded paths already return one scalar rho per task, so there is
-/// nothing to move and the mode is ignored there.
+/// [`ReduceMode::Worker`] also covers the *single-table* pipeline
+/// (`--shards 1`): the driver routes it through the sharded machinery with
+/// one shard spanning every row, so the full prediction vector reduces
+/// worker-side and each task returns one ~48-byte sums record instead of
+/// `O(rows)` predictions. The brute-force cases (A2/A3) already return a
+/// single scalar rho per task, so there is nothing to move and the mode is
+/// ignored there.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum ReduceMode {
     /// Ship raw predictions; concatenate and reduce on the driver.
@@ -468,9 +473,13 @@ fn run_a1(
     }
 }
 
-/// Modeled wire bytes per harvested result element for the DES
+/// Modeled *raw* bytes per harvested result element for the DES
 /// `sim_result_ingress_bytes` tally: one f32 prediction row, one
-/// six-f64 partial-sums record, one f32 rho per skill row.
+/// six-f64 partial-sums record, one f32 rho per skill row. Raw sizes
+/// match the v6 binary wire; when the backend reports a JSON-pinned pool
+/// ([`ComputeBackend::wire_pricing`]) the tally inflates through
+/// [`crate::engine::config::WirePricing::bytes`] so the model tracks the
+/// decimal-text wire.
 const PRED_WIRE_BYTES: u64 = 4;
 const SUMS_WIRE_BYTES: u64 = 48;
 const ROW_WIRE_BYTES: u64 = 4;
@@ -489,8 +498,13 @@ fn run_engine_case(
     shards: usize,
     reduce: ReduceMode,
 ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+    // wire encoding the pool actually negotiated — prices both the DES
+    // broadcast/repair/rejoin model and the result-ingress tally below
+    let pricing = backend.wire_pricing();
     let ctx = Context::new(
-        EngineConfig::new(deploys[0].clone()).with_default_parallelism(scenario.partitions),
+        EngineConfig::new(deploys[0].clone())
+            .with_default_parallelism(scenario.partitions)
+            .with_wire_pricing(pricing),
     );
     let master = Rng::new(scenario.seed);
     let mut skills = Vec::new();
@@ -524,17 +538,21 @@ fn run_engine_case(
             // transform jobs: its (internally parallel) pipeline blocks the
             // driver, exactly like the barrier in the paper's Fig. 2/3 DAG.
             let mode = policy.mode_for(n_manifold, min_l);
-            let sharded_b = if case.uses_table() && shards > 1 {
-                Some(sharded_table_pipeline_mode(
-                    &ctx,
-                    &problem_b,
-                    scenario.partitions,
-                    mode,
-                    shards,
-                ))
-            } else {
-                None
-            };
+            // worker-side reduce needs the sharded machinery even for the
+            // single-table pipeline: one shard spanning every row gives the
+            // agg tasks a chunk to fold into partial sums
+            let sharded_b =
+                if case.uses_table() && (shards > 1 || reduce == ReduceMode::Worker) {
+                    Some(sharded_table_pipeline_mode(
+                        &ctx,
+                        &problem_b,
+                        scenario.partitions,
+                        mode,
+                        shards.max(1),
+                    ))
+                } else {
+                    None
+                };
             let table_b = if case.uses_table() && sharded_b.is_none() {
                 Some(table_pipeline_mode(&ctx, &problem_b, scenario.partitions, mode))
             } else {
@@ -596,17 +614,18 @@ fn run_engine_case(
                     async_skill_futs.push(ctx.collect_async(&skill_rdd));
                 } else {
                     let got = ctx.collect(&skill_rdd);
-                    ingress += got.len() as u64 * ROW_WIRE_BYTES;
+                    ingress += pricing.bytes(got.len() as u64 * ROW_WIRE_BYTES);
                     skills.extend(got);
                 }
             }
             if !sync_chunks.is_empty() {
-                ingress +=
-                    sync_chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>();
+                ingress += pricing.bytes(
+                    sync_chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>(),
+                );
                 skills.extend(combine_shard_chunks(sync_chunks, problem_b.value()));
             }
             if !sync_sums.is_empty() {
-                ingress += sync_sums.len() as u64 * SUMS_WIRE_BYTES;
+                ingress += pricing.bytes(sync_sums.len() as u64 * SUMS_WIRE_BYTES);
                 skills.extend(combine_shard_sums(sync_sums, problem_b.value(), backend.as_ref()));
             }
             if !async_chunk_futs.is_empty() {
@@ -624,7 +643,7 @@ fn run_engine_case(
     for (futs, bcast_ids) in pending {
         for fa in futs {
             let got = fa.get();
-            ingress += got.len() as u64 * ROW_WIRE_BYTES;
+            ingress += pricing.bytes(got.len() as u64 * ROW_WIRE_BYTES);
             skills.extend(got);
         }
         backend.evict_broadcasts(&bcast_ids);
@@ -634,7 +653,8 @@ fn run_engine_case(
         for fa in futs {
             chunks.extend(fa.get());
         }
-        ingress += chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>();
+        ingress += pricing
+            .bytes(chunks.iter().map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES).sum::<u64>());
         skills.extend(combine_shard_chunks(chunks, problem_b.value()));
         backend.evict_broadcasts(&bcast_ids);
     }
@@ -643,7 +663,7 @@ fn run_engine_case(
         for fa in futs {
             sums.extend(fa.get());
         }
-        ingress += sums.len() as u64 * SUMS_WIRE_BYTES;
+        ingress += pricing.bytes(sums.len() as u64 * SUMS_WIRE_BYTES);
         skills.extend(combine_shard_sums(sums, problem_b.value(), backend.as_ref()));
         backend.evict_broadcasts(&bcast_ids);
     }
@@ -871,5 +891,107 @@ mod tests {
                 driver_red.report.sim_result_ingress_bytes
             );
         }
+    }
+
+    #[test]
+    fn single_table_worker_reduce_matches_monolithic_within_1_ulp() {
+        use crate::ccm::pipeline::f32_ulp_distance;
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let deploy = Deploy::Local { cores: 2 };
+        for case in [Case::A4, Case::A5] {
+            let spec = RunSpec::new(case, &scenario, &y, &x)
+                .deploy(deploy.clone())
+                .policy(TablePolicy::TruncatedAuto);
+            let mono = spec.clone().run(Arc::clone(&backend));
+            let worker_red = spec.reduce(ReduceMode::Worker).run(Arc::clone(&backend));
+            let a = sorted_skills(mono.skills);
+            let b = sorted_skills(worker_red.skills);
+            assert_eq!(a.len(), b.len(), "{case:?} single-table skill count");
+            for (d, w) in a.iter().zip(&b) {
+                assert_eq!((d.0, d.1, d.2, d.3), (w.0, w.1, w.2, w.3), "{case:?} keys");
+                assert!(
+                    f32_ulp_distance(d.4, w.4) <= 1,
+                    "{case:?}: single-shard worker-reduce rho {} vs monolithic {} drifts > 1 ULP",
+                    w.4,
+                    d.4
+                );
+            }
+            // with one shard spanning the manifold, exactly one sums record
+            // moves per skill row — the modeled ingress must say so
+            assert_eq!(
+                worker_red.report.sim_result_ingress_bytes,
+                a.len() as u64 * SUMS_WIRE_BYTES,
+                "{case:?}: single-shard worker reduce must ship one sums record per skill"
+            );
+        }
+    }
+
+    /// A native backend that reports a JSON-pinned pool, standing in for a
+    /// cluster with a v<=5 peer: numerics identical, modeled bytes priced
+    /// at the decimal-text rate.
+    struct JsonPinned(NativeBackend);
+
+    impl ComputeBackend for JsonPinned {
+        fn cross_map_into(
+            &self,
+            input: &crate::ccm::backend::CrossMapInput,
+            arena: &mut TaskArena,
+        ) -> f32 {
+            self.0.cross_map_into(input, arena)
+        }
+
+        fn simplex_tail_into(
+            &self,
+            dvals: &[f32],
+            tvals: &[f32],
+            pred_targets: &[f32],
+            e: usize,
+            preds: &mut Vec<f32>,
+        ) -> f32 {
+            self.0.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
+        }
+
+        fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
+            self.0.distance_matrix(vecs, n)
+        }
+
+        fn wire_pricing(&self) -> crate::engine::config::WirePricing {
+            crate::engine::config::WirePricing::Json
+        }
+
+        fn name(&self) -> &'static str {
+            "json-pinned-native"
+        }
+    }
+
+    #[test]
+    fn json_pinned_backend_inflates_modeled_bytes_only() {
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let deploy = Deploy::paper_cluster();
+        let bin = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy.clone())
+            .run(Arc::new(NativeBackend));
+        let json = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .deploy(deploy)
+            .run(Arc::new(JsonPinned(NativeBackend)));
+        assert_eq!(
+            sorted_skills(bin.skills),
+            sorted_skills(json.skills),
+            "wire pricing must never touch numerics"
+        );
+        // every tallied quantum is a multiple of 4 raw bytes, so the 11/4
+        // inflation is exact end to end
+        assert_eq!(
+            json.report.sim_result_ingress_bytes,
+            bin.report.sim_result_ingress_bytes * 11 / 4,
+            "ingress must be priced at the JSON rate"
+        );
+        assert!(
+            json.report.sim_broadcast_ship_bytes > bin.report.sim_broadcast_ship_bytes,
+            "DES broadcast bytes must inflate on a JSON-pinned pool"
+        );
     }
 }

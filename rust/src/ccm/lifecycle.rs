@@ -29,6 +29,13 @@
 //! `now` explicitly, so the cadence is unit-testable without sockets or
 //! real sleeps; the actual redialing lives in the cluster runtime's
 //! maintenance thread.
+//!
+//! Every admit — initial connect, respawn, rejoin — runs the full hello
+//! handshake, so the wire mode is renegotiated per connection: a worker
+//! that rejoins after upgrading (or downgrading) its binary may land on a
+//! different negotiated version than it had before, including switching
+//! between the v6 binary frames and the legacy JSON line wire. Wire mode
+//! is connection state, never pool state.
 
 use std::collections::HashMap;
 use std::path::PathBuf;

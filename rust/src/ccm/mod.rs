@@ -23,13 +23,16 @@
 //!
 //! Beyond the paper, [`table::ShardedTable`] splits the distance index
 //! into per-node row-range shards and [`cluster::ClusterBackend`] ships
-//! index-only tasks to worker processes over a versioned JSON wire
-//! protocol riding a pluggable [`transport`] (pipe/fork or TCP loopback),
+//! index-only tasks to worker processes over a versioned wire protocol —
+//! v6 length-prefixed [`binwire`] frames for bulk payloads, negotiated
+//! per connection with a byte-identical JSON line fallback for v<=5
+//! peers — riding a pluggable [`transport`] (pipe/fork or TCP loopback),
 //! with shard replication and zero-re-ship task requeue — the genuinely
 //! distributed deployment of the same pipelines. The old
 //! [`process::ProcessBackend`] name remains as a compatibility shim.
 
 pub mod backend;
+pub mod binwire;
 pub mod chaos;
 pub mod cluster;
 pub mod convergence;

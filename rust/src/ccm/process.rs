@@ -9,4 +9,4 @@
 //! callers keep working through these re-exports.
 
 pub use crate::ccm::cluster::{worker_main, ClusterBackend as ProcessBackend, MAX_TASK_ATTEMPTS};
-pub use crate::ccm::transport::{MIN_WIRE_VERSION, WIRE_VERSION};
+pub use crate::ccm::transport::{BINARY_WIRE_VERSION, MIN_WIRE_VERSION, WIRE_VERSION};

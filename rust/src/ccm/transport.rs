@@ -60,6 +60,30 @@
 //! handshake itself is un-checksummed on every version (the first frame
 //! arrives before the version is known), and v≤3 peers never see or are
 //! asked for checksums.
+//!
+//! # Binary frames (v6)
+//!
+//! On connections negotiated at v6+ every post-handshake message rides a
+//! *length-prefixed binary frame* instead of a JSON line:
+//!
+//! ```text
+//! [len: u32 LE] [tag: u8] [payload: len-1 bytes]
+//! ```
+//!
+//! The tag and payload encodings live in [`crate::ccm::binwire`]; this
+//! module owns only the byte layer — [`Transport::send_frame`] /
+//! [`Transport::recv_frame`] frame and de-frame bodies, and
+//! [`ChecksumTransport`] protects each body with a trailing 8-byte LE
+//! FNV-1a checksum ([`append_frame_checksum`] / [`verify_binary_frame`],
+//! the binary analogue of the v4 text suffix; the *length prefix* is not
+//! covered, so a corrupted prefix surfaces as either an over-limit length
+//! or a mis-framed body whose checksum cannot verify — both `InvalidData`,
+//! both counted). [`TcpTransport::recv_frame`] accumulates into the same
+//! persistent partial buffer as `recv_line`, so a recv-deadline timeout
+//! mid-frame resumes cleanly and bytes buffered while the line-mode
+//! handshake ran stay visible. The handshake itself is always line JSON
+//! (the version is unknown until it completes); a v≤5 peer keeps the
+//! byte-identical JSON wire for the life of the connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -77,8 +101,10 @@ use crate::util::json::Json;
 /// handshake (`auth` in hello, `hello_ack`, `reject`) and the keepalive
 /// `ping`/`pong` pair; v4 added the per-frame FNV-1a checksum suffix; v5
 /// added the worker-side-reduce task kinds `agg_chunk` and `merge_sums`
-/// (partial Pearson sums instead of raw predictions).
-pub const WIRE_VERSION: u64 = 5;
+/// (partial Pearson sums instead of raw predictions); v6 moved every
+/// post-handshake message onto length-prefixed binary frames (raw LE
+/// arrays for payloads, JSON-in-envelope for control).
+pub const WIRE_VERSION: u64 = 6;
 
 /// Oldest protocol version the driver still accepts. Older workers are
 /// served without newer-version traffic (no `evict`/`hello_ack`/`ping`).
@@ -102,6 +128,13 @@ pub const CHECKSUM_WIRE_VERSION: u64 = 4;
 /// either op — the driver silently keeps their results on the
 /// driver-concat path, which is bit-for-bit the v4 behaviour.
 pub const AGG_WIRE_VERSION: u64 = 5;
+
+/// First wire version whose post-handshake traffic is length-prefixed
+/// binary frames (see the module docs and [`crate::ccm::binwire`]).
+/// Connections negotiated below this run the line-JSON wire byte for
+/// byte as before — one legacy peer pins only its own connection, never
+/// the pool.
+pub const BINARY_WIRE_VERSION: u64 = 6;
 
 /// Per-write deadline on every TCP connection. A *frozen* peer (SIGSTOP,
 /// livelocked host) keeps its sockets open while its kernel buffers fill;
@@ -189,6 +222,87 @@ pub trait Transport: Send {
     fn set_recv_deadline(&mut self, _timeout: Option<Duration>) -> std::io::Result<bool> {
         Ok(false)
     }
+
+    /// Ship one v6 binary frame body (tag + payload, *without* the length
+    /// prefix — the transport adds it) and flush. The default refuses:
+    /// only byte layers that implement framing may carry v6 connections.
+    fn send_frame(&mut self, _frame: &[u8]) -> std::io::Result<()> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "transport cannot send binary frames",
+        ))
+    }
+
+    /// Receive the next v6 frame body; `Ok(None)` means the peer closed
+    /// cleanly on a frame boundary. Honors the same recv deadline as
+    /// `recv_line` where the byte layer supports one.
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "transport cannot receive binary frames",
+        ))
+    }
+}
+
+/// Upper bound a v6 length prefix may claim. A corrupted prefix is not
+/// checksum-protected (the body is), so without a cap it could demand an
+/// absurd allocation before the body checksum ever gets a chance to
+/// object; anything over the cap is surfaced (and counted) as corruption.
+pub const MAX_BINARY_FRAME: usize = 1 << 31;
+
+/// Write one length-prefixed frame: `u32 LE` body length, then the body.
+pub(crate) fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> std::io::Result<()> {
+    debug_assert!(!frame.is_empty(), "v6 frames always carry at least a tag byte");
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame from a blocking buffered reader (pipe /
+/// stdio byte layers — no deadline, so no resumability needed). A clean
+/// EOF *before* the first length byte is `Ok(None)`; EOF anywhere inside
+/// a frame is `UnexpectedEof` (the peer died mid-send).
+pub(crate) fn read_frame<R: BufRead>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::Read;
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed inside a frame length prefix",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    check_frame_len(len)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed inside a frame body",
+            )
+        } else {
+            e
+        }
+    })?;
+    Ok(Some(body))
+}
+
+fn check_frame_len(len: usize) -> std::io::Result<()> {
+    if len == 0 || len > MAX_BINARY_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible frame length {len} (corrupt length prefix?)"),
+        ));
+    }
+    Ok(())
 }
 
 /// Receive the next non-empty line as parsed JSON; EOF and parse failures
@@ -288,6 +402,40 @@ pub fn verify_frame(frame: &str) -> Result<&str, String> {
     Ok(body)
 }
 
+/// Length of the v6 binary frame trailer: the raw 8-byte LE FNV-1a hash
+/// (binary frames need no `#` sentinel — the length prefix already says
+/// where the body ends).
+pub const FRAME_BIN_CHECKSUM_LEN: usize = 8;
+
+/// Frame a v6 body for the wire: body + 8-byte LE FNV-1a over the body.
+pub fn append_frame_checksum(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + FRAME_BIN_CHECKSUM_LEN);
+    out.extend_from_slice(body);
+    out.extend_from_slice(&frame_checksum(body).to_le_bytes());
+    out
+}
+
+/// Validate a checksummed v6 frame and return its body. Same single-byte
+/// detection guarantee as the text-mode [`verify_frame`]: the trailer
+/// must match the body byte for byte, and a frame too short to even carry
+/// a trailer (a truncated or mis-framed read) is corruption, not a parse.
+pub fn verify_binary_frame(frame: &[u8]) -> Result<&[u8], String> {
+    if frame.len() < FRAME_BIN_CHECKSUM_LEN + 1 {
+        return Err(format!("frame too short for a checksum trailer ({} bytes)", frame.len()));
+    }
+    let split = frame.len() - FRAME_BIN_CHECKSUM_LEN;
+    let mut trailer = [0u8; FRAME_BIN_CHECKSUM_LEN];
+    trailer.copy_from_slice(&frame[split..]);
+    let want = u64::from_le_bytes(trailer);
+    let got = frame_checksum(&frame[..split]);
+    if got != want {
+        return Err(format!(
+            "checksum mismatch: frame says {want:016x}, payload hashes to {got:016x}"
+        ));
+    }
+    Ok(&frame[..split])
+}
+
 /// v4 framing layer: checksums every outbound line and verifies every
 /// inbound one, surfacing corruption as `InvalidData` (optionally tallied
 /// into the driver's `corrupt_frames_detected` counter). Wrapped
@@ -352,6 +500,38 @@ impl Transport for ChecksumTransport {
     fn set_recv_deadline(&mut self, timeout: Option<Duration>) -> std::io::Result<bool> {
         self.inner.set_recv_deadline(timeout)
     }
+
+    fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        self.inner.send_frame(&append_frame_checksum(frame))
+    }
+
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        match self.inner.recv_frame() {
+            Ok(None) => Ok(None),
+            Ok(Some(mut frame)) => match verify_binary_frame(&frame) {
+                Ok(body) => {
+                    let keep = body.len();
+                    frame.truncate(keep);
+                    Ok(Some(frame))
+                }
+                Err(why) => {
+                    self.count_corrupt();
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("corrupt frame: {why}"),
+                    ))
+                }
+            },
+            Err(e) => {
+                // an implausible length prefix is corruption the byte
+                // layer refuses to even hand up — count it the same way
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    self.count_corrupt();
+                }
+                Err(e)
+            }
+        }
+    }
 }
 
 /// Fork + stdio transport (driver side): the worker's stdin/stdout pipes.
@@ -374,6 +554,14 @@ impl Transport for PipeTransport {
     fn kind(&self) -> TransportKind {
         TransportKind::Pipe
     }
+
+    fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        write_frame(&mut self.stdin, frame)
+    }
+
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        read_frame(&mut self.stdout)
+    }
 }
 
 /// TCP transport (either side): a connected stream plus a buffered reader
@@ -385,6 +573,10 @@ impl Transport for PipeTransport {
 /// mid-frame must *keep* the bytes already read so the next call resumes
 /// the same line — `read_line` drops them on `Err`, which would shear a
 /// frame in half and (on v4 connections) read as phantom corruption.
+/// `recv_frame` shares the same partial buffer with the same invariant
+/// for v6 binary frames, and because `recv_line` only ever consumes up to
+/// its newline, frame bytes the peer pipelined behind the line-mode
+/// handshake stay queued for the first `recv_frame`.
 pub struct TcpTransport {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
@@ -449,6 +641,42 @@ impl Transport for TcpTransport {
     fn set_recv_deadline(&mut self, timeout: Option<Duration>) -> std::io::Result<bool> {
         self.reader.get_ref().set_read_timeout(timeout)?;
         Ok(true)
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        write_frame(&mut self.writer, frame)
+    }
+
+    fn recv_frame(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        loop {
+            if self.partial.len() >= 4 {
+                let mut len_buf = [0u8; 4];
+                len_buf.copy_from_slice(&self.partial[..4]);
+                let len = u32::from_le_bytes(len_buf) as usize;
+                check_frame_len(len)?;
+                if self.partial.len() >= 4 + len {
+                    let rest = self.partial.split_off(4 + len);
+                    let mut frame = std::mem::replace(&mut self.partial, rest);
+                    frame.drain(..4);
+                    return Ok(Some(frame));
+                }
+            }
+            let taken = {
+                let buf = self.reader.fill_buf()?; // timeout Err leaves `partial` intact
+                self.partial.extend_from_slice(buf);
+                buf.len()
+            };
+            self.reader.consume(taken);
+            if taken == 0 {
+                if self.partial.is_empty() {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame",
+                ));
+            }
+        }
     }
 }
 
@@ -1200,5 +1428,133 @@ mod tests {
         assert!(matches!(server.recv_line(), Ok(None)), "EOF must be Ok(None)");
         let err = recv_json(&mut server).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn binary_frames_round_trip_after_a_line_handshake() {
+        // the v6 connection shape: one line-JSON hello exchange, then
+        // binary frames — including frames the peer pipelined behind its
+        // final handshake line, which must stay visible to recv_frame
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut t = TcpTransport::from_stream(TcpStream::connect(addr).unwrap()).unwrap();
+            t.send_line(r#"{"type":"hello"}"#).unwrap();
+            let frame = t.recv_frame().unwrap().unwrap();
+            assert_eq!(frame, vec![0x01, 0xff, 0x00, 0x80]);
+            t.send_frame(&[0x10, 1, 2, 3]).unwrap();
+            assert!(matches!(t.recv_frame(), Ok(None)), "clean EOF on a frame boundary");
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        let line = server.recv_line().unwrap().unwrap();
+        assert_eq!(line.trim_end(), r#"{"type":"hello"}"#);
+        // pipeline two sends back to back: the line then the frame
+        server.send_frame(&[0x01, 0xff, 0x00, 0x80]).unwrap();
+        let reply = server.recv_frame().unwrap().unwrap();
+        assert_eq!(reply, vec![0x10, 1, 2, 3]);
+        drop(server);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn binary_checksum_round_trips_and_detects_every_corruption_shape() {
+        let body: Vec<u8> = vec![0x03, 0, 0, 0x80, 0x7f, 0xc0, 0xff];
+        let framed = append_frame_checksum(&body);
+        assert_eq!(framed.len(), body.len() + FRAME_BIN_CHECKSUM_LEN);
+        assert_eq!(verify_binary_frame(&framed).unwrap(), &body[..]);
+        // every single-byte flip (body or trailer) must be detected
+        for i in 0..framed.len() {
+            for bit in 0..8u8 {
+                let mut bad = framed.clone();
+                bad[i] ^= 1 << bit;
+                assert!(verify_binary_frame(&bad).is_err(), "flip at byte {i} bit {bit}");
+            }
+        }
+        // a frame too short to carry a trailer is corruption, not a parse
+        assert!(verify_binary_frame(&framed[..FRAME_BIN_CHECKSUM_LEN]).is_err());
+        assert!(verify_binary_frame(&[]).is_err());
+    }
+
+    #[test]
+    fn binary_checksum_transport_round_trips_and_counts_corruption() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let raw = TcpTransport::from_stream(TcpStream::connect(addr).unwrap()).unwrap();
+            let mut t = ChecksumTransport::new(Box::new(raw), None);
+            t.send_frame(&[0x01, 42, 0, 1]).unwrap();
+            let reply = t.recv_frame().unwrap().unwrap();
+            assert_eq!(reply, vec![0x10, 7]);
+            // now send a frame whose trailer lies about the body
+            let mut bad = append_frame_checksum(&[0x01, 42, 0, 1]);
+            let n = bad.len();
+            bad[n - 1] ^= 0x40;
+            t.inner.send_frame(&bad).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let tally = Arc::new(AtomicU64::new(0));
+        let raw = TcpTransport::from_stream(stream).unwrap();
+        let mut server = ChecksumTransport::new(Box::new(raw), Some(tally.clone()));
+        let frame = server.recv_frame().unwrap().unwrap();
+        assert_eq!(frame, vec![0x01, 42, 0, 1], "trailer stripped before hand-up");
+        server.send_frame(&[0x10, 7]).unwrap();
+        assert_eq!(tally.load(Ordering::Relaxed), 0, "clean traffic counts nothing");
+        let err = server.recv_frame().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally.load(Ordering::Relaxed), 1, "corrupt binary frame tallied");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn implausible_length_prefix_is_counted_corruption() {
+        // a flipped high bit in the (unchecksummed) length prefix must
+        // surface as counted InvalidData, never a giant allocation
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            stream.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let tally = Arc::new(AtomicU64::new(0));
+        let raw = TcpTransport::from_stream(stream).unwrap();
+        let mut server = ChecksumTransport::new(Box::new(raw), Some(tally.clone()));
+        let err = server.recv_frame().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert_eq!(tally.load(Ordering::Relaxed), 1);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_keeps_partial_frame_across_timeouts() {
+        // the binary analogue of the partial-line invariant: a deadline
+        // mid-frame keeps the prefix and body bytes already read
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let body = [0x02u8, 9, 8, 7, 6, 5];
+            stream.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            stream.write_all(&body[..2]).unwrap();
+            stream.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(250));
+            stream.write_all(&body[2..]).unwrap();
+            stream.flush().unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut server = TcpTransport::from_stream(stream).unwrap();
+        server.set_recv_deadline(Some(Duration::from_millis(60))).unwrap();
+        let err = server.recv_frame().unwrap_err();
+        assert!(
+            matches!(err.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut),
+            "mid-frame deadline surfaces as a timeout: {err:?}"
+        );
+        server.set_recv_deadline(None).unwrap();
+        let frame = server.recv_frame().unwrap().unwrap();
+        assert_eq!(frame, vec![0x02, 9, 8, 7, 6, 5], "frame reassembled");
+        sender.join().unwrap();
     }
 }

@@ -56,6 +56,34 @@ impl Deploy {
     }
 }
 
+/// How the DES converts a payload's raw in-memory size (4-byte lanes)
+/// into on-wire bytes — the cost-model face of the cluster runtime's
+/// per-connection wire negotiation (v6 binary frames vs the legacy JSON
+/// line protocol).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WirePricing {
+    /// v6 binary framing: f32/u32 arrays ship as raw little-endian bytes,
+    /// so the wire size is the raw size (tag/length/varint overhead is a
+    /// rounding error at broadcast scale). The default — a homogeneous
+    /// current-version pool negotiates binary on every connection.
+    #[default]
+    Binary,
+    /// JSON line wire (any v<=5 peer in the pool pins its connections to
+    /// it): a decimal-text f32 averages ~11 characters with its
+    /// separator, so each raw 4-byte lane inflates by ~11/4.
+    Json,
+}
+
+impl WirePricing {
+    /// Price `raw` in-memory bytes as on-wire bytes.
+    pub fn bytes(self, raw: u64) -> u64 {
+        match self {
+            WirePricing::Binary => raw,
+            WirePricing::Json => raw * 11 / 4,
+        }
+    }
+}
+
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -101,6 +129,11 @@ pub struct EngineConfig {
     /// does not serialize the critical path). Clamped to the task count.
     /// 0 = no speculation priced.
     pub sim_speculative_tasks: usize,
+    /// Wire encoding the DES prices broadcast/repair/rejoin traffic at.
+    /// Defaults to [`WirePricing::Binary`] (the v6 wire); a driver running
+    /// against a pool with pinned-JSON connections sets
+    /// [`WirePricing::Json`] so simulated bytes track the real wire.
+    pub wire_pricing: WirePricing,
     /// OS threads actually executing tasks (defaults to the machine's
     /// available parallelism; results never depend on this).
     pub real_threads: usize,
@@ -128,9 +161,15 @@ impl EngineConfig {
             sim_worker_failures: 0,
             sim_worker_rejoins: 0,
             sim_speculative_tasks: 0,
+            wire_pricing: WirePricing::Binary,
             real_threads,
             max_task_attempts: 4,
         }
+    }
+
+    pub fn with_wire_pricing(mut self, pricing: WirePricing) -> Self {
+        self.wire_pricing = pricing;
+        self
     }
 
     pub fn with_broadcast_replicas(mut self, r: usize) -> Self {
@@ -193,5 +232,15 @@ mod tests {
     #[test]
     fn single_thread_uses_one_real_thread() {
         assert_eq!(EngineConfig::new(Deploy::SingleThread).real_threads, 1);
+    }
+
+    #[test]
+    fn wire_pricing_defaults_to_binary_identity() {
+        let c = EngineConfig::new(Deploy::SingleThread);
+        assert_eq!(c.wire_pricing, WirePricing::Binary);
+        assert_eq!(WirePricing::Binary.bytes(4000), 4000);
+        // a decimal-text f32 averages ~11 chars per 4 raw bytes
+        assert_eq!(WirePricing::Json.bytes(4000), 11_000);
+        assert_eq!(WirePricing::Json.bytes(0), 0);
     }
 }

@@ -42,6 +42,10 @@
 //!   mirroring the real pool's `rejoin_ships` (`--rejoin-backoff-secs`).
 //!   Rejoins beyond the failure count have no dead node to revive and
 //!   price nothing.
+//! * Every simulated byte counter prices raw payload sizes through the
+//!   configured [`super::config::WirePricing`]: binary (v6 wire, identity
+//!   — the default) or JSON lines (~11/4 inflation per 4-byte lane,
+//!   matching a pool with pinned-JSON connections).
 
 use std::collections::{HashMap, HashSet};
 
@@ -104,15 +108,17 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                 let mut start = core_free[core].max(ready);
 
                 // Broadcast shipping: once per (variable, node); the node's
-                // link serializes ships.
+                // link serializes ships. Raw sizes are priced through the
+                // configured wire encoding (binary = identity, JSON ~11/4).
                 for &(bid, bytes) in &job.broadcast_deps {
+                    let wire_bytes = config.wire_pricing.bytes(bytes as u64);
                     if node_has_broadcast.insert((bid, node)) {
                         let link_free = node_bcast_ready.get(&node).copied().unwrap_or(0.0);
                         let ship_start = start.max(link_free);
-                        let ship = bytes as f64 / bandwidth;
+                        let ship = wire_bytes as f64 / bandwidth;
                         node_bcast_ready.insert(node, ship_start + ship);
                         ship_total += ship;
-                        ship_bytes += bytes as u64;
+                        ship_bytes += wire_bytes;
                         start = ship_start + ship;
                         // first ship of this broadcast anywhere: replicate
                         // to the next R-1 nodes (their own links; the
@@ -132,7 +138,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                                 let m_start = ship_start.max(m_free);
                                 node_bcast_ready.insert(m, m_start + ship);
                                 ship_total += ship;
-                                ship_bytes += bytes as u64;
+                                ship_bytes += wire_bytes;
                                 placed += 1;
                             }
                         }
@@ -198,11 +204,12 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                         continue; // every survivor already holds it (or unknown id)
                     };
                     node_has_broadcast.insert((bid, target));
-                    let ship = bytes as f64 / bandwidth;
+                    let wire_bytes = config.wire_pricing.bytes(bytes as u64);
+                    let ship = wire_bytes as f64 / bandwidth;
                     let link_free = node_bcast_ready.get(&target).copied().unwrap_or(0.0);
                     node_bcast_ready.insert(target, link_free.max(makespan) + ship);
                     repair_ship_s += ship;
-                    repair_ship_bytes += bytes as u64;
+                    repair_ship_bytes += wire_bytes;
                 }
             }
             dropped.push((failed, resident));
@@ -216,11 +223,12 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
                     continue; // already back (e.g. repair landed here)
                 }
                 let Some(&bytes) = bytes_of.get(bid) else { continue };
-                let ship = bytes as f64 / bandwidth;
+                let wire_bytes = config.wire_pricing.bytes(bytes as u64);
+                let ship = wire_bytes as f64 / bandwidth;
                 let link_free = node_bcast_ready.get(node).copied().unwrap_or(0.0);
                 node_bcast_ready.insert(*node, link_free.max(makespan) + ship);
                 rejoin_ship_s += ship;
-                rejoin_ship_bytes += bytes as u64;
+                rejoin_ship_bytes += wire_bytes;
             }
         }
     }
@@ -361,6 +369,45 @@ mod tests {
         // 2 nodes pay 1s ship each (in parallel), then 8 tasks over 4 cores.
         assert!((rep.sim_broadcast_ship_s - 2.0).abs() < 1e-9);
         assert!((rep.sim_makespan_s - 3.0).abs() < 1e-9, "{}", rep.sim_makespan_s);
+    }
+
+    #[test]
+    fn json_wire_pricing_inflates_every_byte_counter() {
+        use crate::engine::config::WirePricing;
+        // one broadcast, replicas=2, one failure + one rejoin on a 3-node
+        // cluster: all three byte counters move, and each must carry the
+        // 11/4 JSON inflation when the pool is pinned to the line wire
+        let bytes = 4_000_000usize;
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 1,
+            submit_rel: 0.0,
+            finish_rel: 2.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        log.record_task(TaskRecord {
+            job_id: 1,
+            partition: 0,
+            start_rel: 0.0,
+            duration: 1.0,
+            attempts: 1,
+        });
+        let base = config(Deploy::Cluster { workers: 3, cores_per_worker: 1 })
+            .with_broadcast_replicas(2)
+            .with_sim_worker_failures(1)
+            .with_sim_worker_rejoins(1);
+        let binary = simulate(&log, &base.clone());
+        let json = simulate(&log, &base.with_wire_pricing(WirePricing::Json));
+        let inflate = |raw: u64| raw * 11 / 4;
+        assert_eq!(binary.sim_broadcast_ship_bytes, 2 * bytes as u64, "binary = raw");
+        assert_eq!(json.sim_broadcast_ship_bytes, 2 * inflate(bytes as u64));
+        assert_eq!(json.sim_repair_ship_bytes, inflate(binary.sim_repair_ship_bytes));
+        assert_eq!(json.sim_rejoin_ship_bytes, inflate(binary.sim_rejoin_ship_bytes));
+        assert!(binary.sim_repair_ship_bytes > 0 && binary.sim_rejoin_ship_bytes > 0);
+        // the slower wire also stretches simulated ship time
+        assert!(json.sim_broadcast_ship_s > binary.sim_broadcast_ship_s);
     }
 
     #[test]

@@ -375,6 +375,58 @@ fn doctored_v3_worker_runs_the_v3_byte_stream_unchanged() {
     }
 }
 
+#[test]
+fn doctored_v5_worker_pins_the_json_wire_byte_stream_unchanged() {
+    // the compatibility pin for the v6 binary-wire rollout: a worker
+    // advertising v5 negotiates min(5, 6) = 5, so its connections stay on
+    // the checksummed JSON line wire — bit-identical results on both
+    // transports, counted as json connections, zero corruption, zero
+    // respawns. (The JSON lines themselves are pinned byte-identical to
+    // the pre-v6 builders by the cluster unit tests; this proves the
+    // negotiated downgrade path end to end through real processes.)
+    let _guard = Watchdog::arm("doctored_v5_worker", TEST_TIMEOUT);
+    for kind in [TransportKind::Pipe, TransportKind::Tcp] {
+        let pb = Arc::new(
+            ClusterBackend::with_options(
+                env!("CARGO_BIN_EXE_parccm"),
+                ClusterOptions {
+                    transport: kind,
+                    workers: 2,
+                    replicas: 1,
+                    worker_env: vec![(TEST_HELLO_V_ENV.to_string(), "5".to_string())],
+                    ..ClusterOptions::default()
+                },
+            )
+            .expect("a v5 worker must be accepted"),
+        );
+        let (x, y) = series(250);
+        let problem = CcmProblem::new(&y, &x, 2, 1, 0.0);
+        let samples = draw_samples(&Rng::new(19), CcmParams::new(2, 1, 70), problem.emb.n, 3);
+        let mut arena_p = TaskArena::new();
+        let mut arena_n = TaskArena::new();
+        for s in &samples {
+            let input = problem.input_for(s);
+            let rho = pb.cross_map_into(&input, &mut arena_p);
+            let want = NativeBackend.cross_map_into(&input, &mut arena_n);
+            assert_eq!(rho.to_bits(), want.to_bits(), "{kind:?}: v5 stream must stay exact");
+            assert_eq!(arena_p.preds, arena_n.preds);
+        }
+        let c = pb.run_counters();
+        assert_eq!(c.json_connections, 2, "{kind:?}: v5 peers must pin the JSON line wire");
+        assert_eq!(c.binary_connections, 0, "{kind:?}: nothing in this pool negotiated v6");
+        assert_eq!(
+            c.corrupt_frames_detected, 0,
+            "{kind:?}: the pinned JSON stream must never read as corrupt"
+        );
+        assert_eq!(c.respawns, 0, "{kind:?}: no connection may have died");
+    }
+    // and the same build's stock workers negotiate v6 on every admit
+    let stock = spawn(TransportKind::Tcp, 2, 1);
+    let c = stock.run_counters();
+    assert_eq!(c.binary_connections, 2, "stock workers must negotiate the binary wire");
+    assert_eq!(c.json_connections, 0);
+}
+
 /// A pool whose driver-side chaos corrupts EVERY sent frame: each
 /// attempt's first post-handshake frame is mangled, the worker's checksum
 /// verify kills the connection, and the task can never complete over the
@@ -528,9 +580,10 @@ fn worker_reduce_over_workers_matches_driver_reduce_and_cuts_ingress() {
     // instead of every prediction row.
     let _guard = Watchdog::arm("worker_reduce_over_workers", TEST_TIMEOUT);
     // a longer series than smoke: the ingress ratio scales with rows per
-    // shard (driver-reduce ships ~11 bytes per prediction row, worker
-    // reduce a fixed six-sum record per task), so at n ~ 800 the >= 5x
-    // bound holds with a wide margin instead of sitting on the boundary
+    // shard (driver-reduce ships 4 bytes per prediction row on the v6
+    // binary wire, worker reduce a fixed six-sum record per task), so at
+    // n ~ 800 the >= 5x bound holds with a wide margin instead of
+    // sitting on the boundary
     let mut scenario = Scenario::smoke();
     scenario.series_len = 800;
     scenario.ls = vec![200];

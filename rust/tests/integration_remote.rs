@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use parccm::ccm::backend::{ComputeBackend, TaskArena};
 use parccm::ccm::chaos::ChaosProfile;
-use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_IGNORE_PING_ENV};
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, TEST_HELLO_V_ENV, TEST_IGNORE_PING_ENV};
 use parccm::ccm::driver::{skills_to_json, Case, RunSpec, TablePolicy};
 use parccm::ccm::params::{CcmParams, Scenario};
 use parccm::ccm::pipeline::CcmProblem;
@@ -255,6 +255,73 @@ fn remote_sharded_a4_bit_identical_with_midrun_kill() {
     assert_eq!(remote.run_counters().respawns, 0, "remote workers are never respawned");
     assert!(remote.num_workers() >= 2, "at most the killed worker may be gone");
     assert_eq!(remote.cached_payloads(), 0, "harvested problems are evicted");
+}
+
+#[test]
+fn mixed_version_pool_pins_json_per_connection_and_stays_bit_identical() {
+    // the v6 rollout's mixed-fleet scenario: two current workers and one
+    // stale v5 binary in the same pool. Negotiation is per connection —
+    // the v5 worker's links stay on the checksummed JSON line wire while
+    // the other two ship v6 binary frames — and the sharded A4 dump must
+    // be byte-identical to a pure-JSON pool AND to the in-process
+    // reference: the wire encoding can never leak into results.
+    let _guard = Watchdog::arm("mixed_version_pool", TEST_TIMEOUT);
+    let scenario = Scenario::smoke();
+    let (x, y) = series(scenario.series_len);
+    let reference = sharded_a4(&scenario, &y, &x, Arc::new(NativeBackend));
+
+    // pure-JSON pool first: every worker doctored down to v5
+    let json_workers: Vec<ListenWorker> =
+        (0..3).map(|_| ListenWorker::start(&[(TEST_HELLO_V_ENV, "5")])).collect();
+    let json_pool = Arc::new(ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            replicas: 2,
+            workers_at: json_workers.iter().map(|w| w.addr.clone()).collect(),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("connecting the all-v5 pool"));
+    let via_json = sharded_a4(&scenario, &y, &x, json_pool.clone());
+    assert_eq!(via_json, reference, "all-v5 pool must match the in-process reference");
+    let jc = json_pool.run_counters();
+    assert_eq!(jc.json_connections, 3, "every v5 worker must pin the JSON line wire");
+    assert_eq!(jc.binary_connections, 0);
+    drop(json_workers);
+
+    // mixed pool: 2 stock v6 workers + 1 doctored v5 straggler
+    let mixed_workers = [
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[]),
+        ListenWorker::start(&[(TEST_HELLO_V_ENV, "5")]),
+    ];
+    let mixed = Arc::new(ClusterBackend::with_options(
+        env!("CARGO_BIN_EXE_parccm"),
+        ClusterOptions {
+            replicas: 2,
+            workers_at: mixed_workers.iter().map(|w| w.addr.clone()).collect(),
+            ..ClusterOptions::default()
+        },
+    )
+    .expect("connecting the mixed-version pool"));
+    let via_mixed = sharded_a4(&scenario, &y, &x, mixed.clone());
+    assert_eq!(via_mixed, via_json, "mixed pool must match the all-v5 dump byte for byte");
+    assert_eq!(via_mixed, reference, "and the in-process reference");
+
+    let mc = mixed.run_counters();
+    assert_eq!(mc.binary_connections, 2, "the two stock workers must negotiate v6");
+    assert_eq!(mc.json_connections, 1, "only the v5 worker's connection pins JSON");
+    assert_eq!(mc.corrupt_frames_detected, 0, "both wires must verify cleanly");
+    assert_eq!(mc.respawns, 0, "remote workers are never respawned");
+    // a mixed fleet already moves fewer broadcast bytes than an all-JSON
+    // one: with 3 shards x 2 replicas over 3 workers, at least 4 of the 6
+    // shard ships ride the two binary links
+    assert!(
+        mc.broadcast_ship_bytes < jc.broadcast_ship_bytes,
+        "mixed pool must ship fewer bytes than all-JSON ({} vs {})",
+        mc.broadcast_ship_bytes,
+        jc.broadcast_ship_bytes
+    );
 }
 
 #[test]

@@ -1,15 +1,31 @@
-//! Property tests for the v4 wire checksum (`ccm::transport`):
+//! Property tests for the v4 wire checksum (`ccm::transport`) and the v6
+//! binary codec (`ccm::binwire`):
 //!
 //! 1. any JSON frame round-trips `append_checksum` -> `verify_frame`
 //!    bit-exactly, and
 //! 2. flipping any single byte of a checksummed frame is *always*
 //!    detected — by the checksum, by UTF-8 validation, or (when the flip
-//!    lands on `\n`) by the shorn partial frame failing verification.
+//!    lands on `\n`) by the shorn partial frame failing verification;
+//! 3. every v6 binary message type round-trips encode -> decode
+//!    bit-exactly, including NaN, ±0.0, infinities, and raw f32/f64 bit
+//!    noise (the wire carries raw little-endian bytes, so nothing is
+//!    canonicalized); and
+//! 4. flipping any single byte of a checksummed *binary* frame is always
+//!    rejected by `verify_binary_frame` — binary framing is
+//!    length-prefixed, so there is no newline-shear escape hatch: every
+//!    corrupted byte reaches the checksum and must be caught there.
 //!
 //! Detection must hold for every byte position, so each case exhaustively
 //! sweeps the whole frame rather than sampling positions.
 
-use parccm::ccm::transport::{append_checksum, frame_checksum, verify_frame, FRAME_CHECKSUM_LEN};
+use parccm::ccm::binwire::{self, BinMsg, Broadcast};
+use parccm::ccm::embedding::Embedding;
+use parccm::ccm::pipeline::PearsonSums;
+use parccm::ccm::table::DistanceTable;
+use parccm::ccm::transport::{
+    append_checksum, append_frame_checksum, frame_checksum, verify_binary_frame, verify_frame,
+    FRAME_BIN_CHECKSUM_LEN, FRAME_CHECKSUM_LEN,
+};
 use parccm::util::json::Json;
 use parccm::util::prop::check;
 use parccm::util::rng::Rng;
@@ -129,6 +145,177 @@ fn every_single_byte_flip_is_detected() {
         let flip = 1 + rng.below(0xfe) as u8;
         for pos in 0..frame.len() {
             flip_is_detected(&frame, pos, flip)?;
+        }
+        Ok(())
+    });
+}
+
+// ---- v6 binary codec -----------------------------------------------------
+
+/// f32s shaped like hostile wire traffic: the named special values plus
+/// raw bit noise (covers signaling NaNs and subnormals).
+fn raw_f32s(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => f32::NAN,
+            1 => 0.0,
+            2 => -0.0,
+            3 => f32::INFINITY,
+            4 => f32::NEG_INFINITY,
+            _ => f32::from_bits(rng.next_u64() as u32),
+        })
+        .collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn binary_problem_and_result_frames_round_trip_bit_exactly() {
+    check("v6 codec round-trip", 200, |rng| {
+        let id = rng.next_u64();
+        let vecs = raw_f32s(rng, rng.below(64));
+        let targets = raw_f32s(rng, rng.below(64));
+        let times = raw_f32s(rng, rng.below(64));
+        match binwire::decode(&binwire::encode_problem(id, &vecs, &targets, &times))
+            .map_err(|e| format!("problem frame: {e}"))?
+        {
+            BinMsg::Broadcast(Broadcast::Problem { id: ri, vecs: rv, targets: rt, times: rm }) => {
+                if ri != id
+                    || bits(&rv) != bits(&vecs)
+                    || bits(&rt) != bits(&targets)
+                    || bits(&rm) != bits(&times)
+                {
+                    return Err("problem frame mangled a section".into());
+                }
+            }
+            _ => return Err("problem frame decoded to the wrong variant".into()),
+        }
+        match binwire::decode(&binwire::encode_targets(id, &targets))
+            .map_err(|e| format!("targets frame: {e}"))?
+        {
+            BinMsg::Broadcast(Broadcast::Targets { id: ri, targets: rt }) => {
+                if ri != id || bits(&rt) != bits(&targets) {
+                    return Err("targets frame mangled a section".into());
+                }
+            }
+            _ => return Err("targets frame decoded to the wrong variant".into()),
+        }
+        let task = rng.next_u64() >> rng.below(48);
+        let rho = match rng.below(3) {
+            0 => None,
+            1 => Some(f32::NAN),
+            _ => Some(f32::from_bits(rng.next_u64() as u32)),
+        };
+        match binwire::decode(&binwire::encode_result_preds(task, rho, &vecs))
+            .map_err(|e| format!("preds frame: {e}"))?
+        {
+            BinMsg::ResultPreds { task: rt, rho: rr, preds: rp } => {
+                if rt != task
+                    || rr.map(f32::to_bits) != rho.map(f32::to_bits)
+                    || bits(&rp) != bits(&vecs)
+                {
+                    return Err("preds frame mangled a section".into());
+                }
+            }
+            _ => return Err("preds frame decoded to the wrong variant".into()),
+        }
+        let sums = PearsonSums {
+            n: rng.next_u64() >> 12,
+            sx: f64::from_bits(rng.next_u64()),
+            sy: f64::from_bits(rng.next_u64()),
+            sxy: f64::from_bits(rng.next_u64()),
+            sxx: f64::from_bits(rng.next_u64()),
+            syy: f64::from_bits(rng.next_u64()),
+        };
+        match binwire::decode(&binwire::encode_result_sums(task, &sums))
+            .map_err(|e| format!("sums frame: {e}"))?
+        {
+            BinMsg::ResultSums { task: rt, sums: rs } => {
+                let same = rt == task
+                    && rs.n == sums.n
+                    && [rs.sx, rs.sy, rs.sxy, rs.sxx, rs.syy]
+                        .iter()
+                        .zip([sums.sx, sums.sy, sums.sxy, sums.sxx, sums.syy].iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err("sums frame mangled a section".into());
+                }
+            }
+            _ => return Err("sums frame decoded to the wrong variant".into()),
+        }
+        // control messages survive the TAG_JSON envelope verbatim
+        let line = arbitrary_json(rng, 2).to_string();
+        match binwire::decode(&binwire::encode_json(&line))
+            .map_err(|e| format!("json envelope: {e}"))?
+        {
+            BinMsg::Json(m) if m.to_string() == Json::parse(&line).unwrap().to_string() => Ok(()),
+            _ => Err("json envelope mangled the line".into()),
+        }
+    });
+}
+
+#[test]
+fn binary_shard_frames_round_trip_bit_exactly() {
+    check("v6 shard round-trip", 12, |rng| {
+        let n = 40 + rng.below(80);
+        let series: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let emb = Embedding::new(&series, 2, 1);
+        let prefix = 4 + rng.below(12);
+        let table = DistanceTable::build_truncated(&emb, prefix);
+        let sharded = table.shard(1 + rng.below(4));
+        for shard in sharded.shards() {
+            let frame = binwire::encode_shard(shard.wire_id(), shard);
+            match binwire::decode(&frame).map_err(|e| format!("shard frame: {e}"))? {
+                BinMsg::Broadcast(Broadcast::Shard { id, shard: back }) => {
+                    let (n0, v0) = shard.raw_parts();
+                    let (n1, v1) = back.raw_parts();
+                    let same = id == shard.wire_id()
+                        && back.wire_id() == shard.wire_id()
+                        && (back.shard_id, back.row_lo, back.row_hi, back.n, back.t0)
+                            == (shard.shard_id, shard.row_lo, shard.row_hi, shard.n, shard.t0)
+                        && n1 == n0
+                        && bits(v1) == bits(v0);
+                    if !same {
+                        return Err("shard frame mangled a section".into());
+                    }
+                }
+                _ => return Err("shard frame decoded to the wrong variant".into()),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_binary_frame_byte_flip_is_detected() {
+    check("binary single-byte corruption detection", 60, |rng| {
+        let body: Vec<u8> = (0..1 + rng.below(120)).map(|_| rng.next_u64() as u8).collect();
+        let frame = append_frame_checksum(&body);
+        if frame.len() != body.len() + FRAME_BIN_CHECKSUM_LEN {
+            return Err(format!(
+                "trailer must be exactly {FRAME_BIN_CHECKSUM_LEN} bytes, got frame of {}",
+                frame.len()
+            ));
+        }
+        match verify_binary_frame(&frame) {
+            Ok(b) if b == &body[..] => {}
+            Ok(_) => return Err("round-trip mangled the body".into()),
+            Err(e) => return Err(format!("fresh frame failed verification: {e}")),
+        }
+        // one random non-zero flip pattern, applied at EVERY position —
+        // body bytes and all 8 trailer bytes alike
+        let flip = 1 + rng.below(0xfe) as u8;
+        for pos in 0..frame.len() {
+            let mut corrupted = frame.clone();
+            corrupted[pos] ^= flip;
+            if verify_binary_frame(&corrupted).is_ok() {
+                return Err(format!(
+                    "flip of byte {pos} (xor {flip:#04x}) in a {}-byte frame passed verification",
+                    frame.len()
+                ));
+            }
         }
         Ok(())
     });
