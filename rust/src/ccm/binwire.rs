@@ -16,7 +16,10 @@
 //! hello/ack, ping/pong, evict, errors, shutdown — rides as compact JSON
 //! text inside a [`TAG_JSON`] envelope: those messages are tiny and keeping
 //! them JSON means the scheduler's lease/speculation machinery (which
-//! stores and re-sends task lines verbatim) carries over unchanged.
+//! stores and re-sends task lines verbatim) carries over unchanged. The v7
+//! serve-mode control messages (`submit`/`status`/`fetch`/`cancel` and
+//! their replies, see [`crate::ccm::serve`]) ride the same envelope, which
+//! is why v7 needed no codec changes at all.
 //!
 //! Neighbor-index arrays (the dominant bytes of a `shard` broadcast) are
 //! *bit-packed* to the width of their largest value rather than shipped as
@@ -644,6 +647,27 @@ mod tests {
                 assert_eq!(msg.to_string(), line, "envelope preserves the exact line");
             }
             _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn serve_control_envelopes_round_trip_unchanged() {
+        // v7 serve-mode control messages are plain JSON envelopes: the
+        // binary framing carries them byte-for-byte, no new tags needed.
+        for line in [
+            r#"{"spec":{"case":"a1","shards":2},"type":"submit"}"#,
+            r#"{"job":3,"type":"status"}"#,
+            r#"{"job":3,"type":"fetch"}"#,
+            r#"{"job":7,"type":"cancel"}"#,
+        ] {
+            let frame = encode_json(line);
+            assert_eq!(frame[0], TAG_JSON);
+            match decode(&frame).unwrap() {
+                BinMsg::Json(msg) => {
+                    assert_eq!(msg.to_string(), line, "control line survives framing");
+                }
+                _ => panic!("wrong variant"),
+            }
         }
     }
 

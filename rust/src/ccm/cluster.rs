@@ -10,7 +10,7 @@
 //! re-shipping** the broadcast (re-broadcast happens only when the last
 //! replica dies — both paths are counted and asserted in tests).
 //!
-//! # Wire protocol (version [`WIRE_VERSION`] = 6)
+//! # Wire protocol (version [`WIRE_VERSION`] = 7)
 //!
 //! Line-delimited JSON over the worker's transport — or, on a
 //! v6-negotiated connection, the same messages inside length-prefixed
@@ -102,7 +102,12 @@
 //! pool-wide because agg results flow through shared driver state. The
 //! v4 checksum rides along: binary frames carry an 8-byte little-endian
 //! FNV-1a trailer instead of the 17-byte text suffix, with the same
-//! counted-detection semantics.
+//! counted-detection semantics. v7 added nothing on the worker wire: it
+//! introduced the client-role hello (`"role":"client"`) and the
+//! serve-mode control messages (`submit`/`status`/`fetch`/`cancel`,
+//! plain JSON envelopes carried unchanged by the v6 framing) spoken
+//! between a `parccm serve` daemon and its job clients — see
+//! [`crate::ccm::serve`]. Workers are never sent any of them.
 //!
 //! Floats ride as JSON numbers; the writer emits shortest-roundtrip f64
 //! and f32 -> f64 is exact, so every finite value survives the wire
@@ -1187,6 +1192,48 @@ struct PoolState {
     binary_connections: u64,
     /// Connections admitted pinned to the JSON line wire (v≤5 peers).
     json_connections: u64,
+    /// Round-robin grant order across jobs with waiters in [`acquire`].
+    /// Each job id appears at most once; the front job owns the next idle
+    /// worker. Fairness is at *worker-grant* granularity: a job with a
+    /// thousand queued tasks gets one worker, then goes to the back of
+    /// the line behind every other waiting job — one huge grid cannot
+    /// starve a small one. Batch runs (every task job 0) degenerate to
+    /// exactly the old FIFO-on-condvar behaviour.
+    rr: VecDeque<u64>,
+    /// Waiter count per job currently parked in [`acquire`]; a job leaves
+    /// `rr` when its count drops to zero.
+    waiting: HashMap<u64, usize>,
+}
+
+/// Per-job slice of the pool counters, keyed by the job id every task and
+/// ship is tagged with (batch paths run as job 0). Summed over all jobs,
+/// `broadcast_ships` equals the pool's `ships` and `result_ingress_bytes`
+/// equals the pool's total — asserted by the serve-mode tests, so counter
+/// bleed between tenants is structurally visible.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobTally {
+    /// Tasks completed on behalf of this job (speculative wins count once).
+    pub tasks: u64,
+    /// Broadcast ships performed for this job's dispatches, including
+    /// replica copies made on its first ship.
+    pub broadcast_ships: u64,
+    /// On-wire bytes of those ships (same encoding rules as `ship_bytes`).
+    pub broadcast_ship_bytes: u64,
+    /// Bytes of accepted task-result frames attributed to this job.
+    pub result_ingress_bytes: u64,
+}
+
+impl JobTally {
+    /// Stable (name, value) pairs for JSON surfaces, mirroring
+    /// [`PoolCounters::to_pairs`] naming.
+    pub fn to_pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("tasks", self.tasks),
+            ("broadcast_ships", self.broadcast_ships),
+            ("broadcast_ship_bytes", self.broadcast_ship_bytes),
+            ("result_ingress_bytes", self.result_ingress_bytes),
+        ]
+    }
 }
 
 /// Why a worker was declared dead (for counters and log lines).
@@ -1257,6 +1304,26 @@ fn drop_holder(st: &mut PoolState, id: u64, serial: u64) {
     }
 }
 
+/// One waiter of `job` leaves [`acquire`]'s round-robin queue (grant or
+/// panic). The job's slot in `rr` is surrendered and — when it still has
+/// parked waiters — re-taken at the BACK, which is the rotation that makes
+/// grants fair across jobs.
+fn rr_depart(st: &mut PoolState, job: u64) {
+    let remaining = {
+        let count = st.waiting.entry(job).or_insert(1);
+        *count = count.saturating_sub(1);
+        *count
+    };
+    if let Some(pos) = st.rr.iter().position(|&j| j == job) {
+        st.rr.remove(pos);
+    }
+    if remaining == 0 {
+        st.waiting.remove(&job);
+    } else {
+        st.rr.push_back(job);
+    }
+}
+
 struct PayloadEntry {
     /// Lazily dual-encoded broadcast content: JSON line and v6 binary
     /// frame are each built at most once, on first ship over a
@@ -1264,6 +1331,14 @@ struct PayloadEntry {
     payload: Arc<Payload>,
     /// Owners that have not yet evicted this payload; freed at zero.
     refs: u32,
+    /// Jobs that have retained this payload via the job-aware path: each
+    /// job holds at most ONE ref no matter how many times it re-requests
+    /// the id, and `evict_broadcast_ids_for_job` releases only that job's
+    /// ref — so two jobs sharing a problem share one cache entry and the
+    /// first finisher's eviction cannot pull it out from under the other.
+    /// Job-agnostic callers (`retain_broadcast_ids`) bypass this set and
+    /// keep the raw refcount semantics.
+    jobs: HashSet<u64>,
 }
 
 /// One dispatched task's lease: everything the maintenance scan needs to
@@ -1275,6 +1350,9 @@ struct PayloadEntry {
 /// still leased to the task: a kill can never double-requeue.
 struct Lease {
     started: Instant,
+    /// Job the leased task belongs to (0 for batch runs): a speculative
+    /// re-run must attribute its traffic to the same job as the primary.
+    job: u64,
     /// Task kind (`"cross_map"` / `"shard_chunk"`) keying the running
     /// median used by the speculation threshold.
     kind: &'static str,
@@ -1340,6 +1418,11 @@ struct ClusterCore {
     /// each accepted `result`, including its newline; stale/superseded
     /// replies are not counted).
     result_ingress_bytes: AtomicU64,
+    /// Per-job counter slices (see [`JobTally`]); entries are created on a
+    /// job's first attributed event and live for the pool's lifetime (a
+    /// daemon's `status`/`fetch` replies read them after the job ends).
+    /// Lock order: strict leaf — only ever taken with no other lock held.
+    job_tallies: Mutex<HashMap<u64, JobTally>>,
     next_task: AtomicU64,
     next_serial: AtomicU64,
     local: NativeBackend,
@@ -1381,6 +1464,23 @@ impl ClusterCore {
 
     fn lock_durations(&self) -> MutexGuard<'_, HashMap<&'static str, VecDeque<f64>>> {
         self.durations.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn lock_job_tallies(&self) -> MutexGuard<'_, HashMap<u64, JobTally>> {
+        self.job_tallies.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Snapshot of one job's counter slice (zero if the job never ran).
+    fn job_tally(&self, job: u64) -> JobTally {
+        self.lock_job_tallies().get(&job).copied().unwrap_or_default()
+    }
+
+    /// Snapshot of every job's counter slice, sorted by job id.
+    fn job_tallies_snapshot(&self) -> Vec<(u64, JobTally)> {
+        let mut all: Vec<(u64, JobTally)> =
+            self.lock_job_tallies().iter().map(|(&j, &t)| (j, t)).collect();
+        all.sort_unstable_by_key(|&(j, _)| j);
+        all
     }
 
     /// Whether task leases are tracked at all (either liveness knob set).
@@ -1442,15 +1542,25 @@ impl ClusterCore {
         })
     }
 
-    /// Cache (and return) the payload for broadcast `id`. A fresh entry
-    /// starts with one reference. The entry holds the broadcast's
-    /// *content* ([`PayloadSrc`]); the JSON line and binary frame
-    /// encodings are each materialized lazily on first use.
-    fn payload(&self, id: u64, build: impl FnOnce() -> PayloadSrc) -> Arc<Payload> {
+    /// Cache (and return) the payload for broadcast `id`, retaining it on
+    /// behalf of `job`. A fresh entry starts with one reference owned by
+    /// `job`; a job re-requesting an id it already holds is a no-op, and a
+    /// *different* job requesting a cached id adds exactly one ref — the
+    /// cross-tenant sharing path: the bytes are NOT re-encoded and (because
+    /// broadcasts are content-addressed) never re-shipped to workers that
+    /// hold them. The entry holds the broadcast's *content*
+    /// ([`PayloadSrc`]); the JSON line and binary frame encodings are each
+    /// materialized lazily on first use.
+    fn payload(&self, job: u64, id: u64, build: impl FnOnce() -> PayloadSrc) -> Arc<Payload> {
         let mut map = self.lock_payloads();
-        let entry = map
-            .entry(id)
-            .or_insert_with(|| PayloadEntry { payload: Arc::new(Payload::new(build())), refs: 1 });
+        let entry = map.entry(id).or_insert_with(|| PayloadEntry {
+            payload: Arc::new(Payload::new(build())),
+            refs: 0,
+            jobs: HashSet::new(),
+        });
+        if entry.jobs.insert(job) {
+            entry.refs += 1;
+        }
         Arc::clone(&entry.payload)
     }
 
@@ -1477,6 +1587,34 @@ impl ClusterCore {
                 }
             }
         }
+        self.push_evictions(freed);
+    }
+
+    /// Release `job`'s references on `ids`: each id loses at most the one
+    /// ref `job` holds ([`ClusterCore::payload`]), so one tenant finishing
+    /// cannot evict a broadcast another tenant still computes against.
+    fn evict_broadcast_ids_for_job(&self, job: u64, ids: &[u64]) {
+        let mut freed = Vec::new();
+        {
+            let mut map = self.lock_payloads();
+            for id in ids {
+                if let Some(e) = map.get_mut(id) {
+                    if e.jobs.remove(&job) {
+                        e.refs = e.refs.saturating_sub(1);
+                        if e.refs == 0 {
+                            map.remove(id);
+                            freed.push(*id);
+                        }
+                    }
+                }
+            }
+        }
+        self.push_evictions(freed);
+    }
+
+    /// Deliver wire evictions for ids whose driver cache entry was just
+    /// freed (shared tail of both evict paths).
+    fn push_evictions(&self, freed: Vec<u64>) {
         if freed.is_empty() {
             return;
         }
@@ -1513,15 +1651,26 @@ impl ClusterCore {
         }
     }
 
-    /// Lease an idle worker for a task needing broadcast ids `needs`:
-    /// least-loaded among workers already holding all of them (replica
-    /// load balancing), else least-loaded overall (it will be shipped to);
-    /// blocks while all workers are leased. Panics with an actionable
-    /// message when the pool is empty and cannot regrow (remote sources).
-    fn acquire(&self, needs: &[u64]) -> Worker {
+    /// Lease an idle worker for a task of `job` needing broadcast ids
+    /// `needs`: least-loaded among workers already holding all of them
+    /// (replica load balancing), else least-loaded overall (it will be
+    /// shipped to); blocks while all workers are leased. Grants rotate
+    /// round-robin across jobs with parked waiters ([`PoolState::rr`]):
+    /// each idle worker goes to the front job, which then re-queues behind
+    /// every other waiting job — so a small grid makes progress at 1/J of
+    /// the pool against a huge co-tenant instead of starving. A single
+    /// job (every batch run) always finds itself at the front, preserving
+    /// the old behaviour exactly. Panics with an actionable message when
+    /// the pool is empty and cannot regrow (remote sources).
+    fn acquire(&self, job: u64, needs: &[u64]) -> Worker {
         let mut st = self.lock_state();
+        if !st.waiting.contains_key(&job) {
+            st.rr.push_back(job);
+        }
+        *st.waiting.entry(job).or_insert(0) += 1;
         loop {
-            if !st.idle.is_empty() {
+            if !st.idle.is_empty() && st.rr.front() == Some(&job) {
+                rr_depart(&mut st, job);
                 let holder = st
                     .idle
                     .iter()
@@ -1540,7 +1689,14 @@ impl ClusterCore {
                         .map(|(i, _)| i)
                         .unwrap()
                 });
-                return st.idle.swap_remove(pos);
+                let worker = st.idle.swap_remove(pos);
+                // the rotation just promoted a NEW front job; its waiters
+                // may have re-slept after seeing us at the front, so any
+                // worker still idle needs a fresh wake to be claimed
+                if !st.idle.is_empty() && !st.rr.is_empty() {
+                    self.cv.notify_all();
+                }
+                return worker;
             }
             if st.live == 0 {
                 if self.source.is_remote() {
@@ -1561,6 +1717,7 @@ impl ClusterCore {
                         st = guard;
                         continue;
                     }
+                    rr_depart(&mut st, job);
                     panic!(
                         "cluster backend has no live workers left: all {} remote workers \
                          from --workers-at are gone and remote workers cannot be \
@@ -1572,6 +1729,7 @@ impl ClusterCore {
                         self.opts.workers
                     );
                 }
+                rr_depart(&mut st, job);
                 panic!(
                     "cluster backend has no live workers left: every forked worker died \
                      and none could be respawned"
@@ -1888,6 +2046,7 @@ impl ClusterCore {
     /// pipe workers are unblocked by the pid kill instead.
     fn exchange(
         &self,
+        job: u64,
         worker: &mut Worker,
         needs: &[(u64, Arc<Payload>)],
         task_id: u64,
@@ -1897,7 +2056,7 @@ impl ClusterCore {
         let binary = worker.binary();
         for (id, payload) in needs {
             if !worker.has.contains(id) {
-                self.ship(worker, *id, payload).map_err(ExchangeError::Dead)?;
+                self.ship(job, worker, *id, payload).map_err(ExchangeError::Dead)?;
             }
         }
         // tasks are control-plane traffic: they ride a TAG_JSON envelope
@@ -1970,6 +2129,8 @@ impl ClusterCore {
                     // (stale pongs and late loser replies are noise, not
                     // result movement)
                     self.result_ingress_bytes.fetch_add(reply_bytes, Ordering::Relaxed);
+                    self.lock_job_tallies().entry(job).or_default().result_ingress_bytes +=
+                        reply_bytes;
                     return Ok(reply);
                 }
                 Some("error") => {
@@ -1991,9 +2152,10 @@ impl ClusterCore {
         }
     }
 
-    /// Ship broadcast `id` to `worker`; on the id's first-ever ship, also
-    /// top up replicas on other idle workers.
-    fn ship(&self, worker: &mut Worker, id: u64, payload: &Payload) -> std::io::Result<()> {
+    /// Ship broadcast `id` to `worker` for `job`; on the id's first-ever
+    /// ship, also top up replicas on other idle workers (their copies are
+    /// attributed to the same job — it triggered them).
+    fn ship(&self, job: u64, worker: &mut Worker, id: u64, payload: &Payload) -> std::io::Result<()> {
         let binary = worker.binary();
         payload.send(worker.link.transport.as_mut(), binary)?;
         worker.has.insert(id);
@@ -2009,8 +2171,14 @@ impl ClusterCore {
             }
             record_ship(&mut st, id, worker.serial, wire_bytes)
         };
+        {
+            let mut tallies = self.lock_job_tallies();
+            let t = tallies.entry(job).or_default();
+            t.broadcast_ships += 1;
+            t.broadcast_ship_bytes += wire_bytes;
+        }
         if first_ever && self.opts.replicas > 1 {
-            self.replicate(id, payload, worker.serial);
+            self.replicate(job, id, payload, worker.serial);
         }
         Ok(())
     }
@@ -2020,7 +2188,7 @@ impl ClusterCore {
     /// fewer; later ships are task-driven). Targets are leased out of the
     /// pool under the lock but the (potentially large) payload writes
     /// happen OUTSIDE it, so a slow replica link never stalls dispatch.
-    fn replicate(&self, id: u64, payload: &Payload, exclude: u64) {
+    fn replicate(&self, job: u64, id: u64, payload: &Payload, exclude: u64) {
         let mut targets = Vec::new();
         {
             let mut st = self.lock_state();
@@ -2043,9 +2211,16 @@ impl ClusterCore {
                 continue;
             }
             w.has.insert(id);
+            let wire_bytes = payload.wire_bytes(binary);
             {
                 let mut st = self.lock_state();
-                record_ship(&mut st, id, w.serial, payload.wire_bytes(binary));
+                record_ship(&mut st, id, w.serial, wire_bytes);
+            }
+            {
+                let mut tallies = self.lock_job_tallies();
+                let t = tallies.entry(job).or_default();
+                t.broadcast_ships += 1;
+                t.broadcast_ship_bytes += wire_bytes;
             }
             self.release(w);
         }
@@ -2055,6 +2230,7 @@ impl ClusterCore {
     /// liveness knob is set — dispatch then takes no lease lock at all).
     fn lease_task(
         &self,
+        job: u64,
         task_id: u64,
         kind: &'static str,
         worker: &Worker,
@@ -2068,6 +2244,7 @@ impl ClusterCore {
             task_id,
             Lease {
                 started: Instant::now(),
+                job,
                 kind,
                 holder_pid: worker.link.child.is_some().then_some(worker.link.pid),
                 speculated: false,
@@ -2195,11 +2372,11 @@ impl ClusterCore {
     /// that itself dies) re-arms the lease for a later scan rather than
     /// stranding a wedged primary with its one spent chance.
     fn speculate(self: &Arc<Self>, task_id: u64) {
-        let (needs, task_line, ids) = {
+        let (job, needs, task_line, ids) = {
             let leases = self.lock_leases();
             let Some(lease) = leases.get(&task_id) else { return };
             let ids: Vec<u64> = lease.needs.iter().map(|(id, _)| *id).collect();
-            (lease.needs.clone(), Arc::clone(&lease.task_line), ids)
+            (lease.job, lease.needs.clone(), Arc::clone(&lease.task_line), ids)
         };
         // the straggler itself is leased (not idle), so it can never be
         // picked as its own speculative stand-in
@@ -2217,7 +2394,7 @@ impl ClusterCore {
             "[cluster backend] task {task_id} is straggling; launching a speculative \
              duplicate (first result wins)"
         );
-        match self.exchange(&mut worker, &needs, task_id, &task_line, true) {
+        match self.exchange(job, &mut worker, &needs, task_id, &task_line, true) {
             Ok(reply) => {
                 {
                     let mut leases = self.lock_leases();
@@ -2316,8 +2493,27 @@ impl ClusterCore {
     /// [`RejoinPolicy`] curve at task scale), and exhausting
     /// [`MAX_TASK_ATTEMPTS`] returns a typed [`TaskExhausted`] for the
     /// caller's `--on-exhausted` policy instead of panicking here.
+    ///
+    /// Every completed task is tallied against `job` (batch runs pass 0);
+    /// the traffic it generated was attributed as it happened (ships in
+    /// [`ClusterCore::ship`]/[`ClusterCore::replicate`], ingress in
+    /// [`ClusterCore::exchange`] — the speculative path included, via the
+    /// job stored on the lease).
     fn execute(
         &self,
+        job: u64,
+        needs: &[(u64, Arc<Payload>)],
+        kind: &'static str,
+        build_task: impl Fn(u64) -> String,
+    ) -> Result<Json, TaskExhausted> {
+        let reply = self.execute_inner(job, needs, kind, build_task)?;
+        self.lock_job_tallies().entry(job).or_default().tasks += 1;
+        Ok(reply)
+    }
+
+    fn execute_inner(
+        &self,
+        job: u64,
         needs: &[(u64, Arc<Payload>)],
         kind: &'static str,
         build_task: impl Fn(u64) -> String,
@@ -2338,10 +2534,10 @@ impl ClusterCore {
             if let Some(reply) = self.take_lease_result(task_id) {
                 return Ok(reply);
             }
-            let mut worker = self.acquire(&ids);
+            let mut worker = self.acquire(job, &ids);
             let started = Instant::now();
-            self.lease_task(task_id, kind, &worker, needs, &task_line);
-            match self.exchange(&mut worker, needs, task_id, &task_line, false) {
+            self.lease_task(job, task_id, kind, &worker, needs, &task_line);
+            match self.exchange(job, &mut worker, needs, task_id, &task_line, false) {
                 Ok(reply) => {
                     let lease = self.finish_lease(task_id);
                     self.record_duration(kind, started.elapsed().as_secs_f64());
@@ -2594,6 +2790,7 @@ impl ClusterBackend {
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
             result_ingress_bytes: AtomicU64::new(0),
+            job_tallies: Mutex::new(HashMap::new()),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,
@@ -2669,6 +2866,123 @@ impl ClusterBackend {
     pub fn evict_broadcast_ids(&self, ids: &[u64]) {
         self.core.evict_broadcast_ids(ids);
     }
+
+    /// Snapshot of one job's counter slice (all-zero for an unknown job).
+    pub fn job_tally(&self, job: u64) -> JobTally {
+        self.core.job_tally(job)
+    }
+
+    /// Every job's counter slice, sorted by job id. Summed across jobs,
+    /// `broadcast_ships`/`broadcast_ship_bytes` equal the pool's `ships`/
+    /// `ship_bytes` and `result_ingress_bytes` equals the pool total.
+    pub fn job_tallies(&self) -> Vec<(u64, JobTally)> {
+        self.core.job_tallies_snapshot()
+    }
+}
+
+/// A [`ComputeBackend`] view of a shared [`ClusterBackend`] whose every
+/// task, ship, and result byte is attributed to one job id — the handle a
+/// `parccm serve` job runner computes through. Cloning is cheap (one
+/// `Arc`); any number of `JobBackend`s drive the same warm pool
+/// concurrently, with [`acquire`](ClusterCore::acquire)'s round-robin
+/// keeping worker grants fair across their job ids and the job-aware
+/// payload cache refcounts keeping shared broadcasts alive until the last
+/// tenant evicts. The plain `ComputeBackend` impl on `ClusterBackend`
+/// itself is exactly `JobBackend` with job 0.
+#[derive(Clone)]
+pub struct JobBackend {
+    backend: Arc<ClusterBackend>,
+    job: u64,
+}
+
+impl JobBackend {
+    /// Attribute work on `backend`'s pool to `job`. Job 0 is reserved for
+    /// the batch path (the `ClusterBackend` trait impl), so serve-mode
+    /// callers should hand out ids from 1.
+    pub fn new(backend: Arc<ClusterBackend>, job: u64) -> Self {
+        JobBackend { backend, job }
+    }
+
+    /// The job id this handle attributes to.
+    pub fn job(&self) -> u64 {
+        self.job
+    }
+
+    /// This job's counter slice so far.
+    pub fn tally(&self) -> JobTally {
+        self.backend.job_tally(self.job)
+    }
+}
+
+impl ComputeBackend for JobBackend {
+    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
+        self.backend.cross_map_for(self.job, input, arena)
+    }
+
+    fn simplex_tail_into(
+        &self,
+        dvals: &[f32],
+        tvals: &[f32],
+        pred_targets: &[f32],
+        e: usize,
+        preds: &mut Vec<f32>,
+    ) -> f32 {
+        self.backend.core.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
+    }
+
+    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
+        self.backend.core.local.distance_matrix(vecs, n)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn shard_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+        preds: &mut Vec<f32>,
+    ) {
+        self.backend.shard_chunk_for(self.job, shard, targets, theiler, lib_rows, e, arena, preds)
+    }
+
+    fn agg_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+    ) -> PearsonSums {
+        self.backend.agg_chunk_for(self.job, shard, targets, theiler, lib_rows, e, arena)
+    }
+
+    fn merge_sums(&self, partials: &[PearsonSums]) -> PearsonSums {
+        self.backend.merge_sums_for(self.job, partials)
+    }
+
+    fn evict_broadcasts(&self, ids: &[u64]) {
+        // release only THIS job's refs: a co-tenant still computing
+        // against a shared broadcast keeps it cached and shipped
+        self.backend.core.evict_broadcast_ids_for_job(self.job, ids);
+    }
+
+    fn run_counters(&self) -> PoolCounters {
+        // pool-wide totals (the sidecar shape); the per-job slice is
+        // available via [`JobBackend::tally`]
+        self.backend.run_counters()
+    }
+
+    fn wire_pricing(&self) -> crate::engine::config::WirePricing {
+        self.backend.wire_pricing()
+    }
+
+    fn name(&self) -> &'static str {
+        self.backend.name()
+    }
 }
 
 impl Drop for ClusterBackend {
@@ -2682,10 +2996,14 @@ impl Drop for ClusterBackend {
     }
 }
 
-impl ComputeBackend for ClusterBackend {
-    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
+/// The job-attributed task paths: each ships/executes exactly as the
+/// [`ComputeBackend`] methods below (which delegate here with job 0), but
+/// tags every acquire, ship, and result byte with a job id so a
+/// [`JobBackend`] tenant's traffic lands on its own [`JobTally`].
+impl ClusterBackend {
+    fn cross_map_for(&self, job: u64, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
         let id = problem_wire_id(input.vecs, input.targets, input.times);
-        let payload = self.core.payload(id, || PayloadSrc::Problem {
+        let payload = self.core.payload(job, id, || PayloadSrc::Problem {
             id,
             vecs: input.vecs.to_vec(),
             targets: input.targets.to_vec(),
@@ -2694,7 +3012,7 @@ impl ComputeBackend for ClusterBackend {
         let e = input.e;
         let theiler = input.theiler;
         let lib_rows = Json::usizes(input.lib_rows);
-        let reply = self.core.execute(&[(id, payload)], "cross_map", |task| {
+        let reply = self.core.execute(job, &[(id, payload)], "cross_map", |task| {
             Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("type", Json::Str("task".into())),
@@ -2723,26 +3041,10 @@ impl ComputeBackend for ClusterBackend {
         reply.get("rho").and_then(Json::as_f64).expect("worker result missing rho") as f32
     }
 
-    fn simplex_tail_into(
-        &self,
-        dvals: &[f32],
-        tvals: &[f32],
-        pred_targets: &[f32],
-        e: usize,
-        preds: &mut Vec<f32>,
-    ) -> f32 {
-        // driver-side combine step (cheap O(n*K)); panels never ship
-        self.core.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
-    }
-
-    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
-        // table construction happens driver-side; shards ship afterwards
-        self.core.local.distance_matrix(vecs, n)
-    }
-
     #[allow(clippy::too_many_arguments)]
-    fn shard_chunk_into(
+    fn shard_chunk_for(
         &self,
+        job: u64,
         shard: &TableShard,
         targets: &[f32],
         theiler: f32,
@@ -2753,12 +3055,14 @@ impl ComputeBackend for ClusterBackend {
     ) {
         let sid = shard.wire_id();
         let tid = targets_wire_id(targets);
-        let shard_line = self.core.payload(sid, || PayloadSrc::from_shard(sid, shard));
-        let targets_line =
-            self.core.payload(tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
+        let shard_line = self.core.payload(job, sid, || PayloadSrc::from_shard(sid, shard));
+        let targets_line = self
+            .core
+            .payload(job, tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
         let rows = Json::usizes(lib_rows);
-        let reply =
-            self.core.execute(&[(sid, shard_line), (tid, targets_line)], "shard_chunk", |task| {
+        let reply = self
+            .core
+            .execute(job, &[(sid, shard_line), (tid, targets_line)], "shard_chunk", |task| {
                 Json::obj(vec![
                     ("v", Json::Num(WIRE_VERSION as f64)),
                     ("type", Json::Str("task".into())),
@@ -2794,8 +3098,9 @@ impl ComputeBackend for ClusterBackend {
     /// the exchange exhausts its retries), the bit-identical in-process
     /// default computes the partial locally instead — same sums, larger
     /// local compute, zero wire traffic.
-    fn agg_chunk_into(
+    fn agg_chunk_for(
         &self,
+        job: u64,
         shard: &TableShard,
         targets: &[f32],
         theiler: f32,
@@ -2808,12 +3113,14 @@ impl ComputeBackend for ClusterBackend {
         }
         let sid = shard.wire_id();
         let tid = targets_wire_id(targets);
-        let shard_line = self.core.payload(sid, || PayloadSrc::from_shard(sid, shard));
-        let targets_line =
-            self.core.payload(tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
+        let shard_line = self.core.payload(job, sid, || PayloadSrc::from_shard(sid, shard));
+        let targets_line = self
+            .core
+            .payload(job, tid, || PayloadSrc::Targets { id: tid, targets: targets.to_vec() });
         let rows = Json::usizes(lib_rows);
-        let reply =
-            self.core.execute(&[(sid, shard_line), (tid, targets_line)], "agg_chunk", |task| {
+        let reply = self
+            .core
+            .execute(job, &[(sid, shard_line), (tid, targets_line)], "agg_chunk", |task| {
                 Json::obj(vec![
                     ("v", Json::Num(WIRE_VERSION as f64)),
                     ("type", Json::Str("task".into())),
@@ -2845,12 +3152,12 @@ impl ComputeBackend for ClusterBackend {
     /// `merge_sums` task (no broadcast needs — the payload IS the sums)
     /// and take the merged sums back. The merge is a pure function of the
     /// ordered slice, so the local fallback is bit-identical.
-    fn merge_sums(&self, partials: &[PearsonSums]) -> PearsonSums {
+    fn merge_sums_for(&self, job: u64, partials: &[PearsonSums]) -> PearsonSums {
         if !self.core.pool_speaks_agg() {
             return self.core.local.merge_sums(partials);
         }
         let sums = Json::Arr(partials.iter().map(sums_to_json).collect());
-        let reply = self.core.execute(&[], "merge_sums", |task| {
+        let reply = self.core.execute(job, &[], "merge_sums", |task| {
             Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("type", Json::Str("task".into())),
@@ -2869,6 +3176,59 @@ impl ComputeBackend for ClusterBackend {
         };
         sums_from_json(reply.get("sums").expect("worker result missing sums"))
             .expect("worker result carried malformed sums")
+    }
+}
+
+impl ComputeBackend for ClusterBackend {
+    fn cross_map_into(&self, input: &CrossMapInput, arena: &mut TaskArena) -> f32 {
+        self.cross_map_for(0, input, arena)
+    }
+
+    fn simplex_tail_into(
+        &self,
+        dvals: &[f32],
+        tvals: &[f32],
+        pred_targets: &[f32],
+        e: usize,
+        preds: &mut Vec<f32>,
+    ) -> f32 {
+        // driver-side combine step (cheap O(n*K)); panels never ship
+        self.core.local.simplex_tail_into(dvals, tvals, pred_targets, e, preds)
+    }
+
+    fn distance_matrix(&self, vecs: &[f32], n: usize) -> Vec<f32> {
+        // table construction happens driver-side; shards ship afterwards
+        self.core.local.distance_matrix(vecs, n)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn shard_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+        preds: &mut Vec<f32>,
+    ) {
+        self.shard_chunk_for(0, shard, targets, theiler, lib_rows, e, arena, preds)
+    }
+
+    fn agg_chunk_into(
+        &self,
+        shard: &TableShard,
+        targets: &[f32],
+        theiler: f32,
+        lib_rows: &[usize],
+        e: usize,
+        arena: &mut TaskArena,
+    ) -> PearsonSums {
+        self.agg_chunk_for(0, shard, targets, theiler, lib_rows, e, arena)
+    }
+
+    fn merge_sums(&self, partials: &[PearsonSums]) -> PearsonSums {
+        self.merge_sums_for(0, partials)
     }
 
     fn evict_broadcasts(&self, ids: &[u64]) {
@@ -3193,7 +3553,14 @@ mod tests {
         // backend pieces by hand (no pool needed for this path)
         let mut map: HashMap<u64, PayloadEntry> = HashMap::new();
         let src = PayloadSrc::Targets { id: 5, targets: vec![1.0, 2.0] };
-        map.insert(5, PayloadEntry { payload: Arc::new(Payload::new(src)), refs: 1 });
+        map.insert(
+            5,
+            PayloadEntry {
+                payload: Arc::new(Payload::new(src)),
+                refs: 1,
+                jobs: HashSet::from([0]),
+            },
+        );
         // retain then double-evict: survives the first, freed by the second
         map.get_mut(&5).unwrap().refs += 1;
         for _ in 0..2 {
@@ -3204,6 +3571,85 @@ mod tests {
             }
         }
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn payload_cache_is_shared_and_refcounted_per_job() {
+        // two tenants requesting the same content-addressed id share ONE
+        // cache entry; re-requests by the same job add nothing, and each
+        // job's eviction releases only its own ref
+        let core = bare_core(ClusterOptions::default());
+        let build = || PayloadSrc::Targets { id: 9, targets: vec![1.0, 2.0, 3.0] };
+        let a = core.payload(1, 9, build);
+        let again = core.payload(1, 9, build);
+        assert!(Arc::ptr_eq(&a, &again), "same entry, not a re-encode");
+        let b = core.payload(2, 9, build);
+        assert!(Arc::ptr_eq(&a, &b), "tenants share the driver cache entry");
+        {
+            let map = core.lock_payloads();
+            let e = map.get(&9).unwrap();
+            assert_eq!(e.refs, 2, "one ref per job, idempotent per job");
+            assert_eq!(e.jobs.len(), 2);
+        }
+        // job 1 finishes: the entry survives for job 2 — and a repeat
+        // eviction by job 1 is a no-op, not a double-free
+        core.evict_broadcast_ids_for_job(1, &[9]);
+        core.evict_broadcast_ids_for_job(1, &[9]);
+        assert!(core.lock_payloads().contains_key(&9), "co-tenant keeps it alive");
+        core.evict_broadcast_ids_for_job(2, &[9]);
+        assert!(core.lock_payloads().is_empty(), "last tenant out frees the entry");
+    }
+
+    #[test]
+    fn job_tallies_accumulate_and_snapshot_sorted() {
+        let core = bare_core(ClusterOptions::default());
+        {
+            let mut t = core.lock_job_tallies();
+            t.entry(2).or_default().tasks = 5;
+            let one = t.entry(1).or_default();
+            one.tasks = 3;
+            one.broadcast_ships = 2;
+            one.broadcast_ship_bytes = 128;
+            one.result_ingress_bytes = 64;
+        }
+        assert_eq!(core.job_tally(1).tasks, 3);
+        assert_eq!(core.job_tally(7), JobTally::default(), "unknown job reads zero");
+        let snap = core.job_tallies_snapshot();
+        assert_eq!(snap.iter().map(|&(j, _)| j).collect::<Vec<_>>(), vec![1, 2]);
+        let pairs = core.job_tally(1).to_pairs();
+        assert_eq!(
+            pairs,
+            vec![
+                ("tasks", 3),
+                ("broadcast_ships", 2),
+                ("broadcast_ship_bytes", 128),
+                ("result_ingress_bytes", 64),
+            ]
+        );
+    }
+
+    #[test]
+    fn rr_queue_rotates_grants_across_jobs() {
+        // pure PoolState bookkeeping: two jobs with parked waiters take
+        // turns at the front; a departing job with more waiters re-queues
+        // at the BACK, and a fully-departed job leaves the queue
+        let mut st = PoolState::default();
+        // job 10 parks two waiters, job 20 parks one (acquire's preamble)
+        for job in [10, 10, 20] {
+            if !st.waiting.contains_key(&job) {
+                st.rr.push_back(job);
+            }
+            *st.waiting.entry(job).or_insert(0) += 1;
+        }
+        assert_eq!(st.rr.front(), Some(&10));
+        rr_depart(&mut st, 10); // first grant: job 10 still has a waiter
+        assert_eq!(st.rr.front(), Some(&20), "job 20 is next despite arriving later");
+        assert_eq!(st.rr.back(), Some(&10), "job 10 re-queued behind it");
+        rr_depart(&mut st, 20); // job 20's only waiter departs
+        assert!(!st.waiting.contains_key(&20));
+        assert_eq!(st.rr.iter().copied().collect::<Vec<_>>(), vec![10]);
+        rr_depart(&mut st, 10);
+        assert!(st.rr.is_empty() && st.waiting.is_empty());
     }
 
     #[test]
@@ -3336,6 +3782,7 @@ mod tests {
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
             result_ingress_bytes: AtomicU64::new(0),
+            job_tallies: Mutex::new(HashMap::new()),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
             local: NativeBackend,
@@ -3345,6 +3792,7 @@ mod tests {
     fn bare_lease(kind: &'static str) -> Lease {
         Lease {
             started: Instant::now(),
+            job: 0,
             kind,
             holder_pid: None,
             speculated: false,

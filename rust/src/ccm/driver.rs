@@ -32,6 +32,7 @@ use crate::ccm::result::SkillRow;
 use crate::ccm::subsample::draw_samples;
 use crate::ccm::table::DistanceTable;
 use crate::engine::{Context, Deploy, EngineConfig, ExecutionReport};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The paper's implementation levels (Table 1).
@@ -309,8 +310,7 @@ pub struct CaseReport {
 /// with `rho` as an exact f32 -> f64 shortest-roundtrip number — two runs
 /// are bit-identical iff their dumps are byte-identical, which is what
 /// the `cluster-remote` CI job diffs across backends (`--dump-skills`).
-pub fn skills_to_json(skills: &[SkillRow]) -> crate::util::json::Json {
-    use crate::util::json::Json;
+pub fn skills_to_json(skills: &[SkillRow]) -> Json {
     let mut rows: Vec<&SkillRow> = skills.iter().collect();
     rows.sort_by_key(|r| (r.params.e, r.params.tau, r.params.l, r.sample_id));
     Json::obj(vec![(
@@ -331,98 +331,152 @@ pub fn skills_to_json(skills: &[SkillRow]) -> crate::util::json::Json {
     )])
 }
 
-/// Run `case` over `scenario`, cross-mapping `cause` from the shadow
-/// manifold of `effect`, with all-default knobs.
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).deploy(..).run(backend)")]
-pub fn run_case(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploy: Deploy,
-    backend: Arc<dyn ComputeBackend>,
-) -> CaseReport {
-    RunSpec::new(case, scenario, effect, cause).deploy(deploy).run(backend)
+/// An owned, wire-serializable description of one case run — the unit of
+/// work a `parccm serve` daemon accepts. A [`RunSpec`] borrows its
+/// scenario and input series; a `JobSpec` owns the scenario and
+/// *regenerates* the series from it (the coupled-logistic generator is
+/// deterministic in `series_len`), so a job crosses the wire as one small
+/// JSON object and still reproduces the batch path byte for byte:
+/// [`JobSpec::run`] builds exactly the series and [`RunSpec`] that
+/// `parccm fig4` builds for the same flags.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Implementation level to run.
+    pub case: Case,
+    /// Owned parameter grid; the input series regenerate from
+    /// `series_len` via the default coupled-logistic map.
+    pub scenario: Scenario,
+    /// Distance-table layout (table cases only).
+    pub policy: TablePolicy,
+    /// Row-range table shards (`<= 1` keeps the monolithic broadcast).
+    pub shards: usize,
+    /// Where the Pearson reduction runs.
+    pub reduce: ReduceMode,
 }
 
-/// [`RunSpec`] with an explicit distance-table layout policy.
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).policy(..).run(backend)")]
-pub fn run_case_policy(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploy: Deploy,
-    backend: Arc<dyn ComputeBackend>,
-    policy: TablePolicy,
-) -> CaseReport {
-    RunSpec::new(case, scenario, effect, cause).deploy(deploy).policy(policy).run(backend)
-}
+impl JobSpec {
+    /// A job with all-default knobs, mirroring [`RunSpec::new`].
+    pub fn new(case: Case, scenario: Scenario) -> JobSpec {
+        JobSpec {
+            case,
+            scenario,
+            policy: TablePolicy::default(),
+            shards: 1,
+            reduce: ReduceMode::default(),
+        }
+    }
 
-/// [`RunSpec`] with a sharded distance table.
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).shards(..).run(backend)")]
-#[allow(clippy::too_many_arguments)]
-pub fn run_case_policy_sharded(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploy: Deploy,
-    backend: Arc<dyn ComputeBackend>,
-    policy: TablePolicy,
-    shards: usize,
-) -> CaseReport {
-    RunSpec::new(case, scenario, effect, cause)
-        .deploy(deploy)
-        .policy(policy)
-        .shards(shards)
-        .run(backend)
-}
+    /// Serialize for the v7 `submit` control message. The sorted-key JSON
+    /// writer makes equal specs serialize identically, which is what lets
+    /// the serve daemon share driver payload-cache entries (and therefore
+    /// broadcast ships) across jobs posing the same problem.
+    pub fn to_json(&self) -> Json {
+        let policy = match self.policy {
+            TablePolicy::Full => Json::Str("full".into()),
+            TablePolicy::TruncatedAuto => Json::Str("auto".into()),
+            TablePolicy::Truncated(p) => Json::Num(p as f64),
+        };
+        let nums = |xs: &[usize]| Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect());
+        Json::obj(vec![
+            ("case", Json::Str(self.case.name().into())),
+            ("policy", policy),
+            ("reduce", Json::Str(self.reduce.name().into())),
+            ("shards", Json::Num(self.shards as f64)),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("series_len", Json::Num(self.scenario.series_len as f64)),
+                    ("r", Json::Num(self.scenario.r as f64)),
+                    ("es", nums(&self.scenario.es)),
+                    ("ls", nums(&self.scenario.ls)),
+                    ("taus", nums(&self.scenario.taus)),
+                    ("theiler", Json::Num(self.scenario.theiler as f64)),
+                    ("seed", Json::Num(self.scenario.seed as f64)),
+                    ("partitions", Json::Num(self.scenario.partitions as f64)),
+                ]),
+            ),
+        ])
+    }
 
-/// One execution priced on many topologies — see [`RunSpec::run_multi`].
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).run_multi(deploys, backend)")]
-pub fn run_case_multi(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploys: &[Deploy],
-    backend: Arc<dyn ComputeBackend>,
-) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    RunSpec::new(case, scenario, effect, cause).run_multi(deploys, backend)
-}
+    /// Parse a `submit` spec. Strict on the scenario (every field
+    /// required); the knobs (`policy`/`shards`/`reduce`) default exactly
+    /// like [`RunSpec::new`] when absent. Errors are strings the daemon
+    /// bounces back to the client verbatim.
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        fn num(j: &Json, key: &str) -> Result<usize, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("spec scenario: missing numeric `{key}`"))
+        }
+        fn nums(j: &Json, key: &str) -> Result<Vec<usize>, String> {
+            let arr = j
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("spec scenario: missing array `{key}`"))?;
+            arr.iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|v| v as usize)
+                        .ok_or_else(|| format!("spec scenario: non-numeric `{key}` entry"))
+                })
+                .collect()
+        }
+        let case = j
+            .get("case")
+            .and_then(Json::as_str)
+            .and_then(Case::parse)
+            .ok_or("spec: missing or unknown `case`")?;
+        let policy = match j.get("policy") {
+            None => TablePolicy::default(),
+            Some(Json::Str(s)) if s.as_str() == "full" => TablePolicy::Full,
+            Some(Json::Str(s)) if s.as_str() == "auto" => TablePolicy::TruncatedAuto,
+            Some(p) => TablePolicy::Truncated(
+                p.as_f64().map(|v| v as usize).ok_or("spec: bad `policy`")?,
+            ),
+        };
+        let reduce = match j.get("reduce").and_then(Json::as_str) {
+            Some(s) => ReduceMode::parse(s).ok_or("spec: unknown `reduce`")?,
+            None => ReduceMode::default(),
+        };
+        let shards = match j.get("shards") {
+            Some(v) => v.as_f64().map(|v| v as usize).ok_or("spec: bad `shards`")?,
+            None => 1,
+        };
+        let sc = j.get("scenario").ok_or("spec: missing `scenario`")?;
+        let seed = sc
+            .get("seed")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or("spec scenario: missing numeric `seed`")?;
+        let scenario = Scenario {
+            series_len: num(sc, "series_len")?,
+            r: num(sc, "r")?,
+            ls: nums(sc, "ls")?,
+            es: nums(sc, "es")?,
+            taus: nums(sc, "taus")?,
+            theiler: num(sc, "theiler")?,
+            seed,
+            partitions: num(sc, "partitions")?,
+        };
+        Ok(JobSpec { case, scenario, policy, shards, reduce })
+    }
 
-/// [`RunSpec::run_multi`] with an explicit distance-table layout policy.
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).policy(..).run_multi(deploys, backend)")]
-pub fn run_case_multi_policy(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploys: &[Deploy],
-    backend: Arc<dyn ComputeBackend>,
-    policy: TablePolicy,
-) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    RunSpec::new(case, scenario, effect, cause).policy(policy).run_multi(deploys, backend)
-}
-
-/// [`RunSpec::run_multi`] with a sharded distance table.
-#[deprecated(since = "0.3.0", note = "use RunSpec::new(..).shards(..).run_multi(deploys, backend)")]
-#[allow(clippy::too_many_arguments)]
-pub fn run_case_multi_policy_sharded(
-    case: Case,
-    scenario: &Scenario,
-    effect: &[f32],
-    cause: &[f32],
-    deploys: &[Deploy],
-    backend: Arc<dyn ComputeBackend>,
-    policy: TablePolicy,
-    shards: usize,
-) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
-    RunSpec::new(case, scenario, effect, cause)
-        .policy(policy)
-        .shards(shards)
-        .run_multi(deploys, backend)
+    /// Execute on `backend`, regenerating the input series exactly as
+    /// `parccm fig4` does (effect = y, cause = x of the coupled-logistic
+    /// pair) — the skills, and therefore the canonical [`skills_to_json`]
+    /// dump, are byte-identical to the batch path.
+    pub fn run(&self, backend: Arc<dyn ComputeBackend>) -> CaseReport {
+        let (x, y) = crate::timeseries::generators::coupled_logistic(
+            self.scenario.series_len,
+            crate::timeseries::generators::CoupledLogisticParams::default(),
+        );
+        RunSpec::new(self.case, &self.scenario, &y, &x)
+            .policy(self.policy)
+            .shards(self.shards)
+            .reduce(self.reduce)
+            .run(backend)
+    }
 }
 
 /// Case A1: plain sequential loop, no engine. The measured wallclock *is*
@@ -468,6 +522,7 @@ fn run_a1(
             sim_rejoin_ship_bytes: 0,
             sim_speculative_task_s: 0.0,
             sim_result_ingress_bytes: 0,
+            sim_concurrent_jobs: 1,
             topology: "single-thread".to_string(),
         },
     }
@@ -806,6 +861,60 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&fwd).unwrap();
         let rows = parsed.get("skills").unwrap().as_arr().unwrap();
         assert_eq!(rows[0].get("rho").unwrap().as_f64().unwrap() as f32, 0.1f32);
+    }
+
+    #[test]
+    fn job_spec_round_trips_through_json() {
+        let mut spec = JobSpec::new(Case::A4, Scenario::smoke());
+        spec.policy = TablePolicy::Truncated(64);
+        spec.shards = 3;
+        spec.reduce = ReduceMode::Worker;
+        let j = spec.to_json();
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string(), "round trip is stable");
+        assert_eq!(back.case, Case::A4);
+        assert_eq!(back.policy, TablePolicy::Truncated(64));
+        assert_eq!(back.shards, 3);
+        assert_eq!(back.reduce, ReduceMode::Worker);
+        assert_eq!(back.scenario.seed, spec.scenario.seed);
+        // the named policies round-trip by name
+        for policy in [TablePolicy::Full, TablePolicy::TruncatedAuto] {
+            let mut p = JobSpec::new(Case::A5, Scenario::smoke());
+            p.policy = policy;
+            assert_eq!(JobSpec::from_json(&p.to_json()).unwrap().policy, policy);
+        }
+        // knobs default like RunSpec::new when absent; scenario is required
+        let minimal = Json::obj(vec![
+            ("case", Json::Str("A2".into())),
+            ("scenario", j.get("scenario").unwrap().clone()),
+        ]);
+        let d = JobSpec::from_json(&minimal).unwrap();
+        assert_eq!(d.policy, TablePolicy::TruncatedAuto);
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.reduce, ReduceMode::Driver);
+        let err = JobSpec::from_json(&Json::obj(vec![("case", Json::Str("A4".into()))]))
+            .unwrap_err();
+        assert!(err.contains("scenario"), "{err}");
+    }
+
+    #[test]
+    fn job_spec_run_matches_batch_dump_byte_for_byte() {
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let batch = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .shards(2)
+            .reduce(ReduceMode::Worker)
+            .run(Arc::clone(&backend));
+        let mut spec = JobSpec::new(Case::A4, scenario.clone());
+        spec.shards = 2;
+        spec.reduce = ReduceMode::Worker;
+        let served = JobSpec::from_json(&spec.to_json()).unwrap().run(backend);
+        assert_eq!(
+            skills_to_json(&served.skills).to_string(),
+            skills_to_json(&batch.skills).to_string(),
+            "a JobSpec must reproduce the batch dump byte for byte"
+        );
     }
 
     #[test]

@@ -282,6 +282,71 @@ impl RejoinPolicy {
     }
 }
 
+/// Pool lifetime across job boundaries in serve mode — the pure half of
+/// `parccm serve`'s "the pool outlives every job" invariant. A batch run
+/// tears its pool down at exit; a serve daemon instead keeps one
+/// [`crate::ccm::cluster::ClusterBackend`] warm for its whole life and
+/// threads every job through it, so this tracker only needs to answer:
+/// how many jobs are on the pool right now, how many has it served, and
+/// how long has it been idle (the input a future idle-scale-down policy
+/// would read).
+///
+/// Same design as [`RejoinPolicy`]: every method takes `now: Instant`, so
+/// the whole cadence is unit-tested with synthetic instants and no
+/// sleeps; thread-safety is the caller's problem (the serve job tracker
+/// wraps it in its own mutex).
+#[derive(Clone, Debug)]
+pub struct ServeLifecycle {
+    active: usize,
+    served: u64,
+    /// When the pool last went idle (set at construction and every time
+    /// the active count returns to zero).
+    idle_since: Instant,
+}
+
+impl ServeLifecycle {
+    /// A freshly-warmed pool with no jobs yet, idle since `now`.
+    pub fn new(now: Instant) -> ServeLifecycle {
+        ServeLifecycle { active: 0, served: 0, idle_since: now }
+    }
+
+    /// A job started computing on the pool.
+    pub fn note_job_start(&mut self, _now: Instant) {
+        self.active += 1;
+    }
+
+    /// A job left the pool (done, failed, or cancelled mid-queue after a
+    /// start was noted — callers pair every start with exactly one end).
+    pub fn note_job_end(&mut self, now: Instant) {
+        debug_assert!(self.active > 0, "job end without a matching start");
+        self.active = self.active.saturating_sub(1);
+        self.served += 1;
+        if self.active == 0 {
+            self.idle_since = now;
+        }
+    }
+
+    /// Jobs currently computing on the pool.
+    pub fn active_jobs(&self) -> usize {
+        self.active
+    }
+
+    /// Jobs the pool has finished over its lifetime (any terminal state).
+    pub fn jobs_served(&self) -> u64 {
+        self.served
+    }
+
+    /// How long the pool has been idle at `now` (`None` while any job is
+    /// active).
+    pub fn idle_for(&self, now: Instant) -> Option<Duration> {
+        if self.active == 0 {
+            Some(now.saturating_duration_since(self.idle_since))
+        } else {
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -423,5 +488,32 @@ mod tests {
         p.note_death(4, t0);
         assert_eq!(p.due_slots(t0 + S), vec![1, 4, 9]);
         assert_eq!(p.pending(), 3);
+    }
+
+    // ---- ServeLifecycle: clock-injected, no threads, no sleeps ----
+
+    #[test]
+    fn serve_lifecycle_counts_jobs_across_pool_lifetime() {
+        let t0 = Instant::now();
+        let mut lc = ServeLifecycle::new(t0);
+        assert_eq!(lc.active_jobs(), 0);
+        assert_eq!(lc.jobs_served(), 0);
+        assert_eq!(lc.idle_for(t0 + 3 * S), Some(3 * S), "idle since construction");
+        lc.note_job_start(t0 + 3 * S);
+        lc.note_job_start(t0 + 4 * S);
+        assert_eq!(lc.active_jobs(), 2, "two overlapping tenants");
+        assert_eq!(lc.idle_for(t0 + 5 * S), None, "not idle while jobs run");
+        lc.note_job_end(t0 + 6 * S);
+        assert_eq!(lc.active_jobs(), 1);
+        assert_eq!(lc.jobs_served(), 1);
+        assert_eq!(lc.idle_for(t0 + 7 * S), None, "one tenant still on the pool");
+        lc.note_job_end(t0 + 8 * S);
+        assert_eq!(lc.active_jobs(), 0);
+        assert_eq!(lc.jobs_served(), 2, "the pool outlives every job it served");
+        assert_eq!(lc.idle_for(t0 + 10 * S), Some(2 * S), "idle clock restarts at last end");
+        // a third job on the SAME pool: serve mode never re-warms
+        lc.note_job_start(t0 + 10 * S);
+        lc.note_job_end(t0 + 11 * S);
+        assert_eq!(lc.jobs_served(), 3);
     }
 }

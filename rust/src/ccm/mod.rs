@@ -30,6 +30,11 @@
 //! with shard replication and zero-re-ship task requeue — the genuinely
 //! distributed deployment of the same pipelines. The old
 //! [`process::ProcessBackend`] name remains as a compatibility shim.
+//! [`serve`] turns that one-shot cluster into a long-running service:
+//! a `parccm serve` daemon owns the warm pool for its lifetime and
+//! admits many concurrent jobs over the v7 wire, each isolated by a
+//! [`cluster::JobBackend`] tag, scheduled fairly round-robin, and
+//! priced per tenant by [`cluster::JobTally`].
 
 pub mod backend;
 pub mod binwire;
@@ -47,6 +52,7 @@ pub mod pipeline;
 pub mod process;
 pub mod result;
 pub mod select;
+pub mod serve;
 pub mod simplex;
 pub mod subsample;
 pub mod surrogate;
@@ -54,13 +60,14 @@ pub mod table;
 pub mod transport;
 
 pub use backend::{ComputeBackend, CrossMapInput, CrossMapOutput, TaskArena};
-pub use cluster::{ClusterBackend, ClusterOptions, OnExhausted, TaskExhausted};
-pub use driver::{Case, CaseReport, TablePolicy};
+pub use cluster::{ClusterBackend, ClusterOptions, JobBackend, JobTally, OnExhausted, TaskExhausted};
+pub use driver::{Case, CaseReport, JobSpec, TablePolicy};
 pub use lifecycle::WorkerSource;
 pub use embedding::Embedding;
 pub use params::{CcmParams, Scenario};
 pub use pipeline::TableMode;
 pub use process::ProcessBackend;
 pub use result::{SkillRow, SkillSummary};
+pub use serve::{JobClient, JobId, JobPool, JobState, JobTracker, ServeDaemon, ServeOptions};
 pub use table::{DistanceTable, LibraryMask, ShardedTable, TableShard};
 pub use transport::TransportKind;

@@ -1,0 +1,1099 @@
+//! `parccm serve`: a long-running multi-tenant job service over one warm
+//! worker pool.
+//!
+//! Everything before this module was batch: one driver, one grid, exit —
+//! the pool is torn down and every broadcast re-shipped per invocation.
+//! The serve daemon inverts that: it owns one
+//! [`crate::ccm::cluster::ClusterBackend`] (and therefore one
+//! `ClusterCore` + warm worker pool) for its whole life and accepts many
+//! concurrent CCM jobs over the existing framed wire. Per-job isolation
+//! is the cluster layer's job — every task, broadcast ship, and result
+//! byte is tagged with a job id ([`crate::ccm::cluster::JobBackend`]),
+//! worker grants rotate round-robin across jobs so one huge grid cannot
+//! starve a small one, and the driver payload cache refcounts per job so
+//! two tenants posing the same problem share one broadcast ship. This
+//! module adds the service half: the job tracker, admission control, the
+//! control protocol, and the client.
+//!
+//! # Wire protocol (v7)
+//!
+//! A job client dials the daemon's listen port and runs the standard
+//! hello handshake *as the listening side's peer*: it sends a `hello`
+//! carrying `"role":"client"` (plus the shared auth token when one is
+//! configured), and the daemon answers `hello_ack` / `reject` exactly
+//! like a driver admitting a worker. Connections that present no client
+//! role are rejected by name — a worker that mistakenly dials the job
+//! port gets a readable error, not a protocol wedge. After the
+//! handshake the connection follows the same negotiated layering as a
+//! worker link: v4+ checksums, v6+ length-prefixed binary frames. The
+//! control messages themselves are plain JSON envelopes
+//! ([`crate::ccm::binwire::TAG_JSON`]), so the binary framing carries
+//! them unchanged — v7 needed no codec changes at all.
+//!
+//! | client sends                         | daemon replies                                          |
+//! |--------------------------------------|---------------------------------------------------------|
+//! | `{"spec":{...},"type":"submit"}`     | `{"job":N,"state":"queued","type":"submitted"}`         |
+//! | `{"job":N,"type":"status"}`          | `{"counters":{...},"job":N,"state":S,"type":"status"}`  |
+//! | `{"job":N,"type":"fetch"}`           | `{"job":N,"skills":"...","state":"done","type":"result"}` |
+//! | `{"job":N,"type":"cancel"}`          | `{"job":N,"state":"cancelled","type":"cancelled"}`      |
+//! | `{"type":"shutdown"}`                | `{"type":"shutdown_ack"}`, then the daemon drains       |
+//!
+//! Any failure is `{"msg":"...","type":"error"}` (plus `"job"` when one
+//! was named). `status.counters` is the job's live [`JobTally`] slice —
+//! summed across jobs it equals the pool totals, so cross-tenant counter
+//! bleed is structurally visible to clients.
+//!
+//! # Determinism
+//!
+//! A fetched result is the canonical
+//! [`skills_to_json`](crate::ccm::driver::skills_to_json) dump of the
+//! job's skills, byte-identical to what `parccm fig4 --dump-skills`
+//! writes for the same spec: [`crate::ccm::driver::JobSpec::run`]
+//! regenerates the same input series and builds the same `RunSpec`, and
+//! the scheduler's fairness machinery never touches numerics. The
+//! round-trip is asserted end-to-end in this module's tests, the
+//! concurrent-jobs chaos test (`tests/integration_serve.rs`), and CI's
+//! serve-mode pass.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ccm::backend::ComputeBackend;
+use crate::ccm::binwire;
+use crate::ccm::cluster::{ClusterBackend, JobBackend, JobTally};
+use crate::ccm::driver::{skills_to_json, JobSpec};
+use crate::ccm::lifecycle::ServeLifecycle;
+use crate::ccm::transport::{
+    finish_handshake, negotiate_hello, recv_json, reject_payload, ChecksumTransport, TcpTransport,
+    Transport, TransportKind, BINARY_WIRE_VERSION, CHECKSUM_WIRE_VERSION, SERVE_WIRE_VERSION,
+    WIRE_VERSION,
+};
+use crate::util::json::Json;
+
+/// Deadline covering a job client's TCP connect and handshake reads, and
+/// the daemon's read of a fresh connection's hello (a dialer that never
+/// speaks must not pin a handler thread forever).
+const SERVE_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default admission bound (`--max-concurrent-jobs`): jobs computing on
+/// the pool at once; excess submissions queue FIFO.
+pub const DEFAULT_MAX_CONCURRENT_JOBS: usize = 4;
+
+/// Identity of one submitted job. Ids are handed out from 1 — job 0 is
+/// reserved for the batch path (`ClusterBackend`'s plain trait impl), so
+/// a serve tenant can never alias the daemon's own maintenance traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {}", self.0)
+    }
+}
+
+/// Lifecycle of one job, as surfaced through `status`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted to the queue, not yet computing (admission bound full).
+    Queued,
+    /// Computing on the pool.
+    Running,
+    /// Finished; the canonical skills dump is ready to `fetch`.
+    Done,
+    /// The run panicked or errored; `status` carries the message.
+    Failed,
+    /// Cancelled while still queued (running jobs cannot be cancelled).
+    Cancelled,
+}
+
+impl JobState {
+    /// The wire name (`status.state`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the job will never change state again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+struct JobEntry {
+    spec: JobSpec,
+    state: JobState,
+    /// The canonical skills dump (set when `Done`).
+    result: Option<String>,
+    /// The failure message (set when `Failed`).
+    error: Option<String>,
+}
+
+struct TrackerState {
+    next_id: u64,
+    jobs: BTreeMap<u64, JobEntry>,
+    /// FIFO admission queue of job ids still `Queued` (lazily pruned:
+    /// a cancelled entry is skipped at admit time, not removed here).
+    queue: VecDeque<u64>,
+    running: usize,
+    lifecycle: ServeLifecycle,
+}
+
+/// The daemon's book of record: every submitted job's spec, state, and
+/// result, plus FIFO admission against the `--max-concurrent-jobs`
+/// bound. Pure bookkeeping behind one mutex — no threads, no sockets —
+/// so the whole state machine is unit-testable; the daemon supplies the
+/// threads ([`ServeDaemon`]) and the pool supplies fairness between the
+/// jobs this tracker has admitted.
+pub struct JobTracker {
+    inner: Mutex<TrackerState>,
+    max_concurrent: usize,
+}
+
+impl JobTracker {
+    /// Tracker admitting at most `max_concurrent` running jobs (clamped
+    /// to at least 1; excess submissions queue FIFO).
+    pub fn new(max_concurrent: usize) -> JobTracker {
+        JobTracker {
+            inner: Mutex::new(TrackerState {
+                next_id: 1, // 0 is the batch job id, never a tenant's
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+                running: 0,
+                lifecycle: ServeLifecycle::new(Instant::now()),
+            }),
+            max_concurrent: max_concurrent.max(1),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, TrackerState> {
+        // a panicking job runner must not wedge every later request
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record a submission and queue it for admission.
+    pub fn submit(&self, spec: JobSpec) -> JobId {
+        let mut st = self.lock();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobEntry { spec, state: JobState::Queued, result: None, error: None },
+        );
+        st.queue.push_back(id);
+        JobId(id)
+    }
+
+    /// Admit the next queued job if the concurrency bound has room:
+    /// marks it `Running` and returns its spec for a runner to execute.
+    /// Cancelled entries are skipped. Callers loop until `None` to fill
+    /// every free slot.
+    pub fn admit(&self) -> Option<(JobId, JobSpec)> {
+        let mut st = self.lock();
+        while st.running < self.max_concurrent {
+            let id = st.queue.pop_front()?;
+            let Some(entry) = st.jobs.get_mut(&id) else { continue };
+            if entry.state != JobState::Queued {
+                continue; // cancelled while waiting
+            }
+            entry.state = JobState::Running;
+            let spec = entry.spec.clone();
+            st.running += 1;
+            st.lifecycle.note_job_start(Instant::now());
+            return Some((JobId(id), spec));
+        }
+        None
+    }
+
+    fn settle(&self, id: JobId, state: JobState, result: Option<String>, error: Option<String>) {
+        let mut st = self.lock();
+        if let Some(entry) = st.jobs.get_mut(&id.0) {
+            debug_assert_eq!(entry.state, JobState::Running, "{id} settled twice");
+            entry.state = state;
+            entry.result = result;
+            entry.error = error;
+        }
+        st.running = st.running.saturating_sub(1);
+        st.lifecycle.note_job_end(Instant::now());
+    }
+
+    /// A runner finished `id`; `dump` is its canonical skills JSON.
+    pub fn finish(&self, id: JobId, dump: String) {
+        self.settle(id, JobState::Done, Some(dump), None);
+    }
+
+    /// A runner died computing `id`.
+    pub fn fail(&self, id: JobId, err: String) {
+        self.settle(id, JobState::Failed, None, Some(err));
+    }
+
+    /// Cancel a still-queued job. Cancelling an already-cancelled job is
+    /// an idempotent success; a running or finished job is an error (the
+    /// pool gives no safe way to claw back in-flight tasks).
+    pub fn cancel(&self, id: JobId) -> Result<JobState, String> {
+        let mut st = self.lock();
+        let Some(entry) = st.jobs.get_mut(&id.0) else {
+            return Err(format!("unknown job {}", id.0));
+        };
+        match entry.state {
+            JobState::Queued => {
+                entry.state = JobState::Cancelled;
+                Ok(JobState::Cancelled)
+            }
+            JobState::Cancelled => Ok(JobState::Cancelled),
+            state => Err(format!("{id} is {}; only queued jobs can be cancelled", state.name())),
+        }
+    }
+
+    /// Current state of `id` (`None` for an unknown job).
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        self.lock().jobs.get(&id.0).map(|e| e.state)
+    }
+
+    /// State plus the failure message, for the `status` reply.
+    pub fn status(&self, id: JobId) -> Option<(JobState, Option<String>)> {
+        self.lock().jobs.get(&id.0).map(|e| (e.state, e.error.clone()))
+    }
+
+    /// The canonical skills dump of a `Done` job; every other state is a
+    /// named error (clients poll `status` until `done`, then fetch once).
+    pub fn fetch(&self, id: JobId) -> Result<String, String> {
+        let st = self.lock();
+        let Some(entry) = st.jobs.get(&id.0) else {
+            return Err(format!("unknown job {}", id.0));
+        };
+        match entry.state {
+            JobState::Done => Ok(entry.result.clone().unwrap_or_default()),
+            JobState::Failed => Err(format!(
+                "{id} failed: {}",
+                entry.error.as_deref().unwrap_or("unspecified")
+            )),
+            state => Err(format!("{id} is {}; poll status until done", state.name())),
+        }
+    }
+
+    /// Jobs waiting for admission (excluding lazily-pruned cancellations).
+    pub fn queued(&self) -> usize {
+        let st = self.lock();
+        st.queue
+            .iter()
+            .filter(|id| st.jobs.get(id).map(|e| e.state == JobState::Queued).unwrap_or(false))
+            .count()
+    }
+
+    /// Jobs currently computing on the pool.
+    pub fn running(&self) -> usize {
+        self.lock().running
+    }
+
+    /// Jobs that have reached `Done` or `Failed` over the tracker's life.
+    pub fn jobs_served(&self) -> u64 {
+        self.lock().lifecycle.jobs_served()
+    }
+
+    /// Nothing queued and nothing running (what a draining daemon waits
+    /// for before letting the pool go).
+    pub fn idle(&self) -> bool {
+        let st = self.lock();
+        st.running == 0
+            && !st
+                .queue
+                .iter()
+                .any(|id| st.jobs.get(id).map(|e| e.state == JobState::Queued).unwrap_or(false))
+    }
+}
+
+/// What the daemon needs from the compute layer: a per-job backend
+/// handle and the job's live counter slice. The production impl is
+/// `Arc<ClusterBackend>` (handing out [`JobBackend`] views of one warm
+/// pool); tests and degraded deployments substitute an in-process
+/// backend without touching the service half.
+pub trait JobPool: Send + Sync + 'static {
+    /// A backend whose work is attributed to `job`.
+    fn backend_for(&self, job: u64) -> Arc<dyn ComputeBackend>;
+
+    /// The job's counter slice so far (all-zero for an unknown job).
+    fn tally_for(&self, job: u64) -> JobTally;
+}
+
+impl JobPool for Arc<ClusterBackend> {
+    fn backend_for(&self, job: u64) -> Arc<dyn ComputeBackend> {
+        Arc::new(JobBackend::new(Arc::clone(self), job))
+    }
+
+    fn tally_for(&self, job: u64) -> JobTally {
+        self.job_tally(job)
+    }
+}
+
+/// Degraded single-process pool: every job computes on the one shared
+/// backend with no per-job attribution (tallies stay all-zero). What
+/// `parccm serve` runs under `--backend native`/`xla` — same results,
+/// same protocol, no isolation counters.
+impl JobPool for Arc<dyn ComputeBackend> {
+    fn backend_for(&self, _job: u64) -> Arc<dyn ComputeBackend> {
+        Arc::clone(self)
+    }
+
+    fn tally_for(&self, _job: u64) -> JobTally {
+        JobTally::default()
+    }
+}
+
+/// How a [`ServeDaemon`] is shaped.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Address to listen for job clients on (`--serve-at`; port 0 binds
+    /// an ephemeral port, announced on stdout by `parccm serve`).
+    pub listen: String,
+    /// Shared auth token job clients must present (`--auth-token` /
+    /// `PARCCM_AUTH_TOKEN`) — same semantics as the worker handshake.
+    pub auth_token: Option<String>,
+    /// Jobs computing on the pool at once (`--max-concurrent-jobs`);
+    /// excess submissions queue FIFO.
+    pub max_concurrent_jobs: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            listen: "127.0.0.1:0".to_string(),
+            auth_token: None,
+            max_concurrent_jobs: DEFAULT_MAX_CONCURRENT_JOBS,
+        }
+    }
+}
+
+/// Shared state of one daemon: the pool, the tracker, and the stop flag.
+struct ServeCtx {
+    pool: Arc<dyn JobPool>,
+    tracker: JobTracker,
+    stop: AtomicBool,
+    auth: Option<String>,
+    /// The bound listen address (what [`wake_accept`] dials on shutdown).
+    addr: String,
+}
+
+/// The `parccm serve` daemon: one accept loop, one handler thread per
+/// client connection, one runner thread per admitted job, all over a
+/// single warm pool that outlives every job. Start it, announce
+/// [`ServeDaemon::addr`], then [`ServeDaemon::wait`] until a client
+/// sends `shutdown` (or call [`ServeDaemon::shutdown`] directly); both
+/// drain queued and running jobs before returning, so no accepted work
+/// is silently dropped.
+pub struct ServeDaemon {
+    ctx: Arc<ServeCtx>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServeDaemon {
+    /// Bind `opts.listen` and start accepting job clients against
+    /// `pool`. Returns once the listener is live — the bound address is
+    /// [`ServeDaemon::addr`].
+    pub fn start<P: JobPool>(pool: P, opts: ServeOptions) -> io::Result<ServeDaemon> {
+        let listener = TcpListener::bind(&opts.listen)?;
+        let addr = listener.local_addr()?.to_string();
+        let ctx = Arc::new(ServeCtx {
+            pool: Arc::new(pool),
+            tracker: JobTracker::new(opts.max_concurrent_jobs),
+            stop: AtomicBool::new(false),
+            auth: opts.auth_token,
+            addr: addr.clone(),
+        });
+        let accept_ctx = Arc::clone(&ctx);
+        let accept = std::thread::Builder::new()
+            .name("parccm-serve-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_ctx.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let conn_ctx = Arc::clone(&accept_ctx);
+                    let _ = std::thread::Builder::new()
+                        .name("parccm-serve-conn".to_string())
+                        .spawn(move || {
+                            if let Err(e) = handle_client(stream, &conn_ctx) {
+                                // handshake rejects and client hangups are
+                                // routine; log and keep serving
+                                eprintln!("[serve] client connection ended: {e}");
+                            }
+                        });
+                }
+            })?;
+        Ok(ServeDaemon { ctx, accept: Some(accept) })
+    }
+
+    /// The bound listen address (resolved, even when `listen` asked for
+    /// port 0).
+    pub fn addr(&self) -> &str {
+        &self.ctx.addr
+    }
+
+    /// The daemon's job book (daemon-side inspection and tests; clients
+    /// go through `status`/`fetch`).
+    pub fn tracker(&self) -> &JobTracker {
+        &self.ctx.tracker
+    }
+
+    /// Whether a client has requested shutdown.
+    pub fn stop_requested(&self) -> bool {
+        self.ctx.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client sends `shutdown`, then drain and stop — the
+    /// body of `parccm serve`.
+    pub fn wait(&mut self) {
+        while !self.ctx.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown();
+    }
+
+    /// Stop accepting connections and drain: every admitted job (queued
+    /// or running) completes before this returns. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            wake_accept(&self.ctx.addr);
+            let _ = accept.join();
+        }
+        // queued jobs keep admitting as runners free slots; wait them out
+        while !self.ctx.tracker.idle() {
+            pump(&self.ctx);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Unblock an accept loop whose stop flag was just set: `incoming()`
+/// only observes the flag after a connection arrives, so dial one.
+fn wake_accept(addr: &str) {
+    if let Ok(mut resolved) = addr.to_socket_addrs() {
+        if let Some(a) = resolved.next() {
+            let _ = TcpStream::connect_timeout(&a, Duration::from_millis(500));
+        }
+    }
+}
+
+/// Fill every free admission slot with a runner thread. Called after
+/// every submit and at the tail of every runner, so the bound stays
+/// saturated whenever work is queued.
+fn pump(ctx: &Arc<ServeCtx>) {
+    while let Some((id, spec)) = ctx.tracker.admit() {
+        let run_ctx = Arc::clone(ctx);
+        let _ = std::thread::Builder::new()
+            .name(format!("parccm-serve-job-{}", id.0))
+            .spawn(move || run_job(run_ctx, id, spec));
+    }
+}
+
+fn run_job(ctx: Arc<ServeCtx>, id: JobId, spec: JobSpec) {
+    let backend = ctx.pool.backend_for(id.0);
+    // a panicking job (task exhaustion under --on-exhausted abort, a bad
+    // spec tripping an assert) must fail ITS job, not the daemon
+    let outcome =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| spec.run(backend)));
+    match outcome {
+        Ok(report) => ctx.tracker.finish(id, skills_to_json(&report.skills).to_string()),
+        Err(panic) => ctx.tracker.fail(id, panic_message(panic)),
+    }
+    pump(&ctx);
+}
+
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job runner panicked".to_string()
+    }
+}
+
+fn invalid_data(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Send a control message in the connection's negotiated wire mode:
+/// binary connections wrap the line in a `TAG_JSON` envelope frame.
+fn send_ctl(t: &mut dyn Transport, binary: bool, msg: &Json) -> io::Result<()> {
+    let line = msg.to_string();
+    if binary {
+        t.send_frame(&binwire::encode_json(&line))
+    } else {
+        t.send_line(&line)
+    }
+}
+
+/// Receive the next control message; `Ok(None)` is a clean hangup.
+fn recv_ctl(t: &mut dyn Transport, binary: bool) -> io::Result<Option<Json>> {
+    if binary {
+        match t.recv_frame()? {
+            None => Ok(None),
+            Some(frame) => binwire::decode(&frame)
+                .and_then(binwire::to_json)
+                .map(Some)
+                .map_err(invalid_data),
+        }
+    } else {
+        loop {
+            match t.recv_line()? {
+                None => return Ok(None),
+                Some(line) if line.trim().is_empty() => continue,
+                Some(line) => {
+                    return Json::parse(&line).map(Some).map_err(|e| invalid_data(e.to_string()))
+                }
+            }
+        }
+    }
+}
+
+fn error_reply(job: Option<u64>, msg: String) -> Json {
+    let mut fields = Vec::new();
+    if let Some(job) = job {
+        fields.push(("job", Json::Num(job as f64)));
+    }
+    fields.push(("msg", Json::Str(msg)));
+    fields.push(("type", Json::Str("error".into())));
+    Json::obj(fields)
+}
+
+fn job_field(msg: &Json) -> Option<u64> {
+    msg.get("job").and_then(Json::as_f64).map(|v| v as u64)
+}
+
+/// One client connection: handshake (role-gated), then a request/reply
+/// loop until the client hangs up or sends `shutdown`.
+fn handle_client(stream: TcpStream, ctx: &Arc<ServeCtx>) -> io::Result<()> {
+    let mut transport: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream)?);
+    transport.set_recv_deadline(Some(SERVE_CONNECT_TIMEOUT))?;
+    let msg = recv_json(transport.as_mut())?;
+    let hello = match negotiate_hello(&msg) {
+        Ok(h) => h,
+        Err(e) => {
+            let _ = transport.send_line(&reject_payload(&e));
+            return Err(invalid_data(e));
+        }
+    };
+    if hello.role.as_deref() != Some("client") {
+        let why = format!(
+            "this is a parccm serve job port: connections must present a \
+             v{SERVE_WIRE_VERSION}+ hello with role \"client\" (peer pid {} presented \
+             {:?}) — workers belong on the pool, not here",
+            hello.pid, hello.role
+        );
+        let _ = transport.send_line(&reject_payload(&why));
+        return Err(invalid_data(why));
+    }
+    // same auth + ack flow as a driver admitting a worker (sends the
+    // reject itself on an auth mismatch)
+    finish_handshake(transport.as_mut(), &hello, ctx.auth.as_deref())?;
+    transport.set_recv_deadline(None)?;
+    // same post-handshake layering as a worker link: v4+ checksummed,
+    // v6+ binary frames; the JSON-envelope control messages ride either
+    let mut transport: Box<dyn Transport> = if hello.version >= CHECKSUM_WIRE_VERSION {
+        Box::new(ChecksumTransport::new(transport, None))
+    } else {
+        transport
+    };
+    let binary = hello.version >= BINARY_WIRE_VERSION;
+    loop {
+        let Some(msg) = recv_ctl(transport.as_mut(), binary)? else {
+            return Ok(()); // client hung up
+        };
+        let reply = match msg.get("type").and_then(Json::as_str) {
+            Some("submit") => on_submit(ctx, &msg),
+            Some("status") => on_status(ctx, &msg),
+            Some("fetch") => on_fetch(ctx, &msg),
+            Some("cancel") => on_cancel(ctx, &msg),
+            Some("shutdown") => {
+                ctx.stop.store(true, Ordering::SeqCst);
+                wake_accept(&ctx.addr);
+                send_ctl(
+                    transport.as_mut(),
+                    binary,
+                    &Json::obj(vec![("type", Json::Str("shutdown_ack".into()))]),
+                )?;
+                return Ok(());
+            }
+            other => error_reply(None, format!("unknown control message type {other:?}")),
+        };
+        send_ctl(transport.as_mut(), binary, &reply)?;
+    }
+}
+
+fn on_submit(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
+    let Some(spec_json) = msg.get("spec") else {
+        return error_reply(None, "submit carries no `spec`".to_string());
+    };
+    match JobSpec::from_json(spec_json) {
+        Ok(spec) => {
+            let id = ctx.tracker.submit(spec);
+            pump(ctx);
+            Json::obj(vec![
+                ("job", Json::Num(id.0 as f64)),
+                ("state", Json::Str("queued".into())),
+                ("type", Json::Str("submitted".into())),
+            ])
+        }
+        Err(e) => error_reply(None, e),
+    }
+}
+
+fn on_status(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
+    let Some(job) = job_field(msg) else {
+        return error_reply(None, "status carries no `job`".to_string());
+    };
+    match ctx.tracker.status(JobId(job)) {
+        None => error_reply(Some(job), format!("unknown job {job}")),
+        Some((state, error)) => {
+            let tally = ctx.pool.tally_for(job);
+            let counters = Json::obj(
+                tally.to_pairs().into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect(),
+            );
+            let mut fields = vec![
+                ("counters", counters),
+                ("job", Json::Num(job as f64)),
+                ("state", Json::Str(state.name().into())),
+                ("type", Json::Str("status".into())),
+            ];
+            if let Some(e) = error {
+                fields.push(("error", Json::Str(e)));
+            }
+            Json::obj(fields)
+        }
+    }
+}
+
+fn on_fetch(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
+    let Some(job) = job_field(msg) else {
+        return error_reply(None, "fetch carries no `job`".to_string());
+    };
+    match ctx.tracker.fetch(JobId(job)) {
+        Ok(dump) => Json::obj(vec![
+            ("job", Json::Num(job as f64)),
+            ("skills", Json::Str(dump)),
+            ("state", Json::Str("done".into())),
+            ("type", Json::Str("result".into())),
+        ]),
+        Err(e) => error_reply(Some(job), e),
+    }
+}
+
+fn on_cancel(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
+    let Some(job) = job_field(msg) else {
+        return error_reply(None, "cancel carries no `job`".to_string());
+    };
+    match ctx.tracker.cancel(JobId(job)) {
+        Ok(state) => Json::obj(vec![
+            ("job", Json::Num(job as f64)),
+            ("state", Json::Str(state.name().into())),
+            ("type", Json::Str("cancelled".into())),
+        ]),
+        Err(e) => error_reply(Some(job), e),
+    }
+}
+
+/// A job client: one authenticated connection to a serve daemon, with
+/// typed wrappers over the v7 control messages. Not `Sync` — clone
+/// nothing, open one client per thread (CI's serve pass deliberately
+/// drives two jobs from two separate client processes).
+pub struct JobClient {
+    transport: Box<dyn Transport>,
+    binary: bool,
+}
+
+impl JobClient {
+    /// Dial `addr` and run the client-role handshake (presenting `auth`
+    /// when given). Fails with a named error on version mismatch, auth
+    /// mismatch, or a daemon that rejects the role.
+    pub fn connect(addr: &str, auth: Option<&str>) -> io::Result<JobClient> {
+        let resolved = addr
+            .to_socket_addrs()
+            .map_err(|e| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("cannot resolve serve daemon address '{addr}': {e}"),
+                )
+            })?
+            .next()
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("serve daemon address '{addr}' resolved to nothing"),
+                )
+            })?;
+        let stream = TcpStream::connect_timeout(&resolved, SERVE_CONNECT_TIMEOUT).map_err(|e| {
+            io::Error::new(
+                e.kind(),
+                format!("cannot reach serve daemon at {addr}: {e} — is `parccm serve` running?"),
+            )
+        })?;
+        let mut transport: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream)?);
+        transport.set_recv_deadline(Some(SERVE_CONNECT_TIMEOUT))?;
+        let mut fields = vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("pid", Json::Num(std::process::id() as f64)),
+            ("transport", Json::Str(TransportKind::Tcp.name().into())),
+            ("caps", Json::Arr(Vec::new())),
+            ("role", Json::Str("client".into())),
+        ];
+        if let Some(token) = auth {
+            fields.push(("auth", Json::Str(token.to_string())));
+        }
+        transport.send_line(&Json::obj(fields).to_string())?;
+        let ack = recv_json(transport.as_mut())?;
+        match ack.get("type").and_then(Json::as_str) {
+            Some("hello_ack") => {}
+            Some("reject") => {
+                let why = ack.get("msg").and_then(Json::as_str).unwrap_or("unspecified");
+                return Err(io::Error::new(
+                    io::ErrorKind::PermissionDenied,
+                    format!("serve daemon at {addr} rejected this client: {why}"),
+                ));
+            }
+            other => {
+                return Err(invalid_data(format!(
+                    "expected hello_ack from serve daemon at {addr}, got {other:?}"
+                )))
+            }
+        }
+        // mutual auth, exactly like a worker verifying its driver: the
+        // ack must echo the token this client presented
+        if auth.is_some() && ack.get("auth").and_then(Json::as_str) != auth {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                format!(
+                    "auth token mismatch: the hello_ack from {addr} does not echo this \
+                     client's token"
+                ),
+            ));
+        }
+        let negotiated =
+            ack.get("v").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(0).min(WIRE_VERSION);
+        transport.set_recv_deadline(None)?;
+        let transport: Box<dyn Transport> = if negotiated >= CHECKSUM_WIRE_VERSION {
+            Box::new(ChecksumTransport::new(transport, None))
+        } else {
+            transport
+        };
+        Ok(JobClient { transport, binary: negotiated >= BINARY_WIRE_VERSION })
+    }
+
+    /// Send one control message and return the daemon's reply verbatim
+    /// (including `error` replies — the typed wrappers below surface
+    /// those as `io::Error`s).
+    pub fn request(&mut self, msg: &Json) -> io::Result<Json> {
+        send_ctl(self.transport.as_mut(), self.binary, msg)?;
+        recv_ctl(self.transport.as_mut(), self.binary)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "serve daemon closed the connection")
+        })
+    }
+
+    fn expect(&mut self, msg: &Json, want: &str) -> io::Result<Json> {
+        let reply = self.request(msg)?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some(t) if t == want => Ok(reply),
+            Some("error") => {
+                let why = reply.get("msg").and_then(Json::as_str).unwrap_or("unspecified");
+                Err(io::Error::other(format!("serve daemon: {why}")))
+            }
+            other => Err(invalid_data(format!("expected {want} reply, got {other:?}: {reply}"))),
+        }
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, spec: &JobSpec) -> io::Result<u64> {
+        let reply = self.expect(
+            &Json::obj(vec![("spec", spec.to_json()), ("type", Json::Str("submit".into()))]),
+            "submitted",
+        )?;
+        job_field(&reply)
+            .ok_or_else(|| invalid_data(format!("submitted reply carries no job id: {reply}")))
+    }
+
+    /// The job's `status` reply (state, per-job counters, error if any).
+    pub fn status(&mut self, job: u64) -> io::Result<Json> {
+        self.expect(
+            &Json::obj(vec![("job", Json::Num(job as f64)), ("type", Json::Str("status".into()))]),
+            "status",
+        )
+    }
+
+    /// The canonical skills dump of a `done` job — byte-identical to the
+    /// batch `--dump-skills` output for the same spec.
+    pub fn fetch(&mut self, job: u64) -> io::Result<String> {
+        let reply = self.expect(
+            &Json::obj(vec![("job", Json::Num(job as f64)), ("type", Json::Str("fetch".into()))]),
+            "result",
+        )?;
+        reply
+            .get("skills")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| invalid_data(format!("result reply carries no skills: {reply}")))
+    }
+
+    /// Cancel a queued job; returns the resulting state name.
+    pub fn cancel(&mut self, job: u64) -> io::Result<String> {
+        let reply = self.expect(
+            &Json::obj(vec![("job", Json::Num(job as f64)), ("type", Json::Str("cancel".into()))]),
+            "cancelled",
+        )?;
+        Ok(reply.get("state").and_then(Json::as_str).unwrap_or("cancelled").to_string())
+    }
+
+    /// Ask the daemon to stop accepting jobs and drain.
+    pub fn shutdown_daemon(&mut self) -> io::Result<()> {
+        self.expect(&Json::obj(vec![("type", Json::Str("shutdown".into()))]), "shutdown_ack")
+            .map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccm::driver::Case;
+    use crate::ccm::params::Scenario;
+    use crate::native::NativeBackend;
+
+    /// An in-process pool: every job computes on the native backend. The
+    /// service half (tracker, protocol, threads) is identical to the
+    /// cluster deployment — exactly what these tests pin down.
+    struct NativePool;
+
+    impl JobPool for NativePool {
+        fn backend_for(&self, _job: u64) -> Arc<dyn ComputeBackend> {
+            Arc::new(NativeBackend)
+        }
+
+        fn tally_for(&self, _job: u64) -> JobTally {
+            JobTally::default()
+        }
+    }
+
+    fn spec(case: Case) -> JobSpec {
+        JobSpec::new(case, Scenario::smoke())
+    }
+
+    #[test]
+    fn tracker_admits_fifo_within_the_concurrency_bound() {
+        let tracker = JobTracker::new(1);
+        let a = tracker.submit(spec(Case::A1));
+        let b = tracker.submit(spec(Case::A2));
+        let c = tracker.submit(spec(Case::A4));
+        assert_eq!((a.0, b.0, c.0), (1, 2, 3), "ids start at 1 — job 0 is the batch path");
+        assert_eq!(tracker.queued(), 3);
+        let (first, _) = tracker.admit().expect("slot free");
+        assert_eq!(first, a, "FIFO admission");
+        assert!(tracker.admit().is_none(), "bound of 1 admits one job");
+        assert_eq!(tracker.state(a), Some(JobState::Running));
+        assert_eq!(tracker.state(b), Some(JobState::Queued));
+        assert_eq!(tracker.running(), 1);
+        assert_eq!(tracker.queued(), 2);
+        assert!(!tracker.idle());
+        tracker.finish(a, "{}".to_string());
+        assert_eq!(tracker.state(a), Some(JobState::Done));
+        assert_eq!(tracker.fetch(a).unwrap(), "{}");
+        let (second, _) = tracker.admit().expect("slot freed");
+        assert_eq!(second, b, "FIFO continues");
+        tracker.fail(b, "boom".to_string());
+        assert_eq!(tracker.state(b), Some(JobState::Failed));
+        let (state, err) = tracker.status(b).unwrap();
+        assert_eq!(state, JobState::Failed);
+        assert_eq!(err.as_deref(), Some("boom"));
+        assert!(tracker.fetch(b).unwrap_err().contains("boom"));
+        let (third, _) = tracker.admit().expect("last job");
+        assert_eq!(third, c);
+        tracker.finish(c, "{}".to_string());
+        assert!(tracker.idle());
+        assert_eq!(tracker.jobs_served(), 3);
+        // wider bounds admit in parallel
+        let wide = JobTracker::new(2);
+        wide.submit(spec(Case::A1));
+        wide.submit(spec(Case::A1));
+        wide.submit(spec(Case::A1));
+        assert!(wide.admit().is_some());
+        assert!(wide.admit().is_some());
+        assert!(wide.admit().is_none(), "bound of 2");
+        assert_eq!(wide.running(), 2);
+    }
+
+    #[test]
+    fn tracker_cancel_is_queued_only_and_idempotent() {
+        let tracker = JobTracker::new(1);
+        let a = tracker.submit(spec(Case::A1));
+        let b = tracker.submit(spec(Case::A2));
+        let (running, _) = tracker.admit().unwrap();
+        assert_eq!(running, a);
+        // running: refused by name
+        let err = tracker.cancel(a).unwrap_err();
+        assert!(err.contains("running"), "{err}");
+        // queued: cancelled, and admit skips it
+        assert_eq!(tracker.cancel(b), Ok(JobState::Cancelled));
+        assert_eq!(tracker.cancel(b), Ok(JobState::Cancelled), "idempotent");
+        assert_eq!(tracker.state(b), Some(JobState::Cancelled));
+        tracker.finish(a, "{}".to_string());
+        assert!(tracker.admit().is_none(), "cancelled jobs are never admitted");
+        assert!(tracker.idle());
+        // terminal states refuse
+        let err = tracker.cancel(a).unwrap_err();
+        assert!(err.contains("done"), "{err}");
+        assert!(tracker.cancel(JobId(99)).unwrap_err().contains("unknown job"));
+        // fetch of a cancelled job points at the state
+        assert!(tracker.fetch(b).unwrap_err().contains("cancelled"));
+        assert_eq!(tracker.jobs_served(), 1, "cancelled-in-queue never ran");
+    }
+
+    #[test]
+    fn job_state_names_are_stable() {
+        for (state, name) in [
+            (JobState::Queued, "queued"),
+            (JobState::Running, "running"),
+            (JobState::Done, "done"),
+            (JobState::Failed, "failed"),
+            (JobState::Cancelled, "cancelled"),
+        ] {
+            assert_eq!(state.name(), name);
+        }
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal() && JobState::Cancelled.is_terminal());
+    }
+
+    #[test]
+    fn daemon_serves_concurrent_jobs_byte_identical_to_batch() {
+        let mut daemon = ServeDaemon::start(
+            NativePool,
+            ServeOptions {
+                listen: "127.0.0.1:0".to_string(),
+                auth_token: Some("sesame".to_string()),
+                max_concurrent_jobs: 2,
+            },
+        )
+        .expect("daemon binds an ephemeral port");
+        let addr = daemon.addr().to_string();
+
+        // wrong auth is a named rejection, not a hang
+        let err = JobClient::connect(&addr, Some("wrong")).unwrap_err();
+        assert!(err.to_string().contains("auth token mismatch"), "{err}");
+        // a missing token against an auth-requiring daemon likewise
+        assert!(JobClient::connect(&addr, None).is_err());
+
+        // two tenants, two connections, overlapping jobs
+        let mut c1 = JobClient::connect(&addr, Some("sesame")).expect("client 1 handshake");
+        let mut c2 = JobClient::connect(&addr, Some("sesame")).expect("client 2 handshake");
+        let s1 = spec(Case::A1);
+        let s2 = spec(Case::A4);
+        let j1 = c1.submit(&s1).unwrap();
+        let j2 = c2.submit(&s2).unwrap();
+        assert_ne!(j1, j2);
+        assert!(j1 >= 1 && j2 >= 1, "job 0 is reserved for the batch path");
+
+        let wait_done = |c: &mut JobClient, job: u64| loop {
+            let st = c.status(job).expect("status reply");
+            match st.get("state").and_then(Json::as_str) {
+                Some("done") => {
+                    assert!(st.get("counters").is_some(), "status carries per-job counters");
+                    return;
+                }
+                Some("failed") => panic!("job {job} failed: {st}"),
+                _ => std::thread::sleep(Duration::from_millis(5)),
+            }
+        };
+        wait_done(&mut c1, j1);
+        wait_done(&mut c2, j2);
+
+        // each tenant's dump is byte-identical to the same spec run batch
+        let want1 = skills_to_json(&s1.run(Arc::new(NativeBackend)).skills).to_string();
+        let want2 = skills_to_json(&s2.run(Arc::new(NativeBackend)).skills).to_string();
+        assert_eq!(c1.fetch(j1).unwrap(), want1, "job {j1} dump != batch dump");
+        assert_eq!(c2.fetch(j2).unwrap(), want2, "job {j2} dump != batch dump");
+        // cross-tenant reads work too: the tracker is shared state
+        assert_eq!(c2.fetch(j1).unwrap(), want1);
+
+        // named errors for bad requests
+        let err = c1.fetch(9999).unwrap_err();
+        assert!(err.to_string().contains("unknown job"), "{err}");
+        let err = c1.cancel(j1).unwrap_err();
+        assert!(err.to_string().contains("done"), "{err}");
+
+        c1.shutdown_daemon().expect("shutdown ack");
+        daemon.shutdown();
+        assert_eq!(daemon.tracker().jobs_served(), 2);
+    }
+
+    #[test]
+    fn daemon_rejects_worker_style_hellos_by_name() {
+        let mut daemon =
+            ServeDaemon::start(NativePool, ServeOptions::default()).expect("daemon starts");
+        let addr = daemon.addr().to_string();
+        // a worker-style hello: right version, no role
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut t: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream).unwrap());
+        let hello = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("pid", Json::Num(1.0)),
+        ]);
+        t.send_line(&hello.to_string()).unwrap();
+        let reply = recv_json(t.as_mut()).unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("reject"));
+        let why = reply.get("msg").and_then(Json::as_str).unwrap_or("");
+        assert!(why.contains("role \"client\""), "{why}");
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn a_failing_job_reports_failed_without_killing_the_daemon() {
+        let mut daemon =
+            ServeDaemon::start(NativePool, ServeOptions::default()).expect("daemon starts");
+        let addr = daemon.addr().to_string();
+        let mut client = JobClient::connect(&addr, None).unwrap();
+        // L=3 < E+2: CcmParams::new panics inside the runner
+        let mut bad = spec(Case::A1);
+        bad.scenario.ls = vec![3];
+        let j = client.submit(&bad).unwrap();
+        let failed = loop {
+            let st = client.status(j).unwrap();
+            match st.get("state").and_then(Json::as_str) {
+                Some("failed") => break st,
+                Some("done") => panic!("bad spec unexpectedly succeeded"),
+                _ => std::thread::sleep(Duration::from_millis(5)),
+            }
+        };
+        assert!(
+            failed.get("error").and_then(Json::as_str).is_some(),
+            "status carries the failure: {failed}"
+        );
+        assert!(client.fetch(j).unwrap_err().to_string().contains("failed"));
+        // the daemon still serves: a good job after a failed one
+        let ok = client.submit(&spec(Case::A1)).unwrap();
+        loop {
+            let st = client.status(ok).unwrap();
+            if st.get("state").and_then(Json::as_str) == Some("done") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        daemon.shutdown();
+        assert_eq!(daemon.tracker().jobs_served(), 2, "failed jobs count as served");
+    }
+}

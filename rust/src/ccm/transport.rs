@@ -103,8 +103,11 @@ use crate::util::json::Json;
 /// added the worker-side-reduce task kinds `agg_chunk` and `merge_sums`
 /// (partial Pearson sums instead of raw predictions); v6 moved every
 /// post-handshake message onto length-prefixed binary frames (raw LE
-/// arrays for payloads, JSON-in-envelope for control).
-pub const WIRE_VERSION: u64 = 6;
+/// arrays for payloads, JSON-in-envelope for control); v7 added the
+/// client-role hello (`role` field) and the serve-mode control messages
+/// `submit`/`status`/`fetch`/`cancel` — plain JSON envelopes, so v6
+/// binary framing carries them unchanged.
+pub const WIRE_VERSION: u64 = 7;
 
 /// Oldest protocol version the driver still accepts. Older workers are
 /// served without newer-version traffic (no `evict`/`hello_ack`/`ping`).
@@ -135,6 +138,13 @@ pub const AGG_WIRE_VERSION: u64 = 5;
 /// byte as before — one legacy peer pins only its own connection, never
 /// the pool.
 pub const BINARY_WIRE_VERSION: u64 = 6;
+
+/// First wire version whose hello may carry a `role` field and whose
+/// connections may speak the serve-mode control messages (`submit` /
+/// `status` / `fetch` / `cancel`). Workers never see these: the role is
+/// declared at handshake time and a `parccm serve` daemon routes
+/// `role:"client"` connections to the job tracker instead of the pool.
+pub const SERVE_WIRE_VERSION: u64 = 7;
 
 /// Per-write deadline on every TCP connection. A *frozen* peer (SIGSTOP,
 /// livelocked host) keeps its sockets open while its kernel buffers fill;
@@ -712,6 +722,10 @@ pub struct Hello {
     /// the worker was configured with one — presenting a token also means
     /// the worker *requires* the driver to echo it in `hello_ack`).
     pub auth: Option<String>,
+    /// Declared peer role (v7 hellos): `"client"` for serve-mode job
+    /// clients, absent/anything else for workers. A daemon uses this to
+    /// route the connection; the batch driver ignores it.
+    pub role: Option<String>,
 }
 
 /// Validate a worker hello and negotiate the connection version.
@@ -748,6 +762,7 @@ pub fn negotiate_hello(msg: &Json) -> Result<Hello, String> {
         transport: msg.get("transport").and_then(Json::as_str).map(str::to_string),
         caps,
         auth: msg.get("auth").and_then(Json::as_str).map(str::to_string),
+        role: msg.get("role").and_then(Json::as_str).map(str::to_string),
     })
 }
 
@@ -1168,6 +1183,26 @@ mod tests {
         let h = negotiate_hello(&msg).unwrap();
         assert_eq!(h.transport.as_deref(), Some("tcp"));
         assert_eq!(h.caps, vec!["evict".to_string()]);
+        assert_eq!(h.role, None, "worker hellos carry no role");
+    }
+
+    #[test]
+    fn hello_parses_client_role() {
+        // the v7 serve-mode handshake: a job client declares itself via
+        // `role` and negotiates versions exactly like a worker would
+        let msg = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("v", Json::Num(SERVE_WIRE_VERSION as f64)),
+            ("pid", Json::Num(99.0)),
+            ("role", Json::Str("client".into())),
+        ]);
+        let h = negotiate_hello(&msg).unwrap();
+        assert_eq!(h.role.as_deref(), Some("client"));
+        assert_eq!(h.version, SERVE_WIRE_VERSION.min(WIRE_VERSION));
+        // a v6 hello without the field still parses, role simply absent
+        let h6 = negotiate_hello(&hello(6.0)).unwrap();
+        assert_eq!(h6.role, None);
+        assert_eq!(h6.version, 6);
     }
 
     #[test]
@@ -1205,6 +1240,7 @@ mod tests {
             transport: None,
             caps: Vec::new(),
             auth: auth.map(str::to_string),
+            role: None,
         }
     }
 
@@ -1267,6 +1303,7 @@ mod tests {
                 transport: None,
                 caps: Vec::new(),
                 auth: None,
+                role: None,
             };
             let err = finish_handshake(&mut t, &legacy, Some("tok")).unwrap_err();
             assert!(err.to_string().contains("auth token required"), "{err}");

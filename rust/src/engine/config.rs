@@ -129,6 +129,16 @@ pub struct EngineConfig {
     /// does not serialize the critical path). Clamped to the task count.
     /// 0 = no speculation priced.
     pub sim_speculative_tasks: usize,
+    /// Concurrent tenant jobs to price in the DES (the serve daemon's
+    /// `--max-concurrent-jobs` admission bound): the measured task log is
+    /// treated as one tenant's job and replayed as `n` identical jobs
+    /// sharing the same topology — task clones contend for the same
+    /// executor slots, but broadcast ships are **not** cloned, because
+    /// the warm pool's job-refcounted payload cache ships a shared
+    /// problem once no matter how many tenants pose it. Reported as
+    /// `sim_concurrent_jobs` beside the (now multi-tenant) makespan.
+    /// 1 = the batch baseline, a single job owning the pool.
+    pub sim_concurrent_jobs: usize,
     /// Wire encoding the DES prices broadcast/repair/rejoin traffic at.
     /// Defaults to [`WirePricing::Binary`] (the v6 wire); a driver running
     /// against a pool with pinned-JSON connections sets
@@ -161,6 +171,7 @@ impl EngineConfig {
             sim_worker_failures: 0,
             sim_worker_rejoins: 0,
             sim_speculative_tasks: 0,
+            sim_concurrent_jobs: 1,
             wire_pricing: WirePricing::Binary,
             real_threads,
             max_task_attempts: 4,
@@ -189,6 +200,11 @@ impl EngineConfig {
 
     pub fn with_sim_speculative_tasks(mut self, n: usize) -> Self {
         self.sim_speculative_tasks = n;
+        self
+    }
+
+    pub fn with_sim_concurrent_jobs(mut self, n: usize) -> Self {
+        self.sim_concurrent_jobs = n.max(1);
         self
     }
 

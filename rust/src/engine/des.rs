@@ -46,6 +46,15 @@
 //!   configured [`super::config::WirePricing`]: binary (v6 wire, identity
 //!   — the default) or JSON lines (~11/4 inflation per 4-byte lane,
 //!   matching a pool with pinned-JSON connections).
+//! * With `sim_concurrent_jobs > 1`, the measured log is replayed as that
+//!   many identical tenant jobs on the same topology — the cost model of
+//!   the serve daemon's multi-tenant warm pool. Task clones contend for
+//!   the same executor slots (job-dependency inference stays *within* a
+//!   tenant: one tenant's sync chain never gates another's), but
+//!   broadcast residency is shared: the clones carry the **same**
+//!   broadcast ids, so a second tenant posing the same problem ships
+//!   zero additional bytes — exactly what the pool's job-refcounted
+//!   payload cache does for two jobs with equal specs.
 
 use std::collections::{HashMap, HashSet};
 
@@ -68,6 +77,31 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         v.sort_by_key(|(p, _)| *p);
     }
 
+    // Multi-tenant expansion: replay the log as `tenants` identical jobs.
+    // Clones keep the measured submit/finish times (the sort above is
+    // stable, so tenants interleave FIFO-fairly) and the SAME broadcast
+    // ids — residency is per (id, node), so a shared problem ships once
+    // no matter how many tenants pose it, like the warm pool's cache.
+    let tenants = config.sim_concurrent_jobs.max(1);
+    let tenant_stride = jobs.iter().map(|j| j.job_id).max().unwrap_or(0) + 1;
+    if tenants > 1 {
+        let base_jobs = jobs.clone();
+        let base_tasks: Vec<(u64, Vec<(usize, f64)>)> =
+            tasks_by_job.iter().map(|(id, v)| (*id, v.clone())).collect();
+        for tenant in 1..tenants as u64 {
+            for job in &base_jobs {
+                let mut clone = job.clone();
+                clone.job_id += tenant_stride * tenant;
+                jobs.push(clone);
+            }
+            for (id, v) in &base_tasks {
+                tasks_by_job.insert(id + tenant_stride * tenant, v.clone());
+            }
+        }
+        jobs.sort_by(|a, b| a.submit_rel.partial_cmp(&b.submit_rel).unwrap());
+    }
+    let tenant_of = |job_id: u64| job_id / tenant_stride;
+
     let cores = config.deploy.total_cores();
     let nodes = config.deploy.nodes();
     let replicas = config.broadcast_replicas.clamp(1, nodes);
@@ -86,8 +120,13 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
     for (ji, job) in jobs.iter().enumerate() {
         // Inferred readiness: all jobs that measurably finished before this
         // one was submitted must complete first in the simulation, too.
+        // Only within the same tenant — tenants are independent clients
+        // of the pool, so one tenant's sync chain never gates another's.
         let mut ready = 0.0f64;
         for prev in &jobs[..ji] {
+            if tenant_of(prev.job_id) != tenant_of(job.job_id) {
+                continue;
+            }
             if prev.finish_rel.is_finite() && prev.finish_rel <= job.submit_rel + 1e-9 {
                 if let Some(&f) = des_finish.get(&prev.job_id) {
                     ready = ready.max(f);
@@ -262,6 +301,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         // the event log carries no result payload sizes; the driver
         // overrides this with its harvest tally (see `run_engine_case`)
         sim_result_ingress_bytes: 0,
+        sim_concurrent_jobs: tenants as u64,
         topology: match config.deploy {
             Deploy::SingleThread => "single-thread".to_string(),
             Deploy::Local { cores } => format!("local({cores})"),
@@ -731,6 +771,66 @@ mod tests {
         let rep = simulate(&log, &c);
         assert_eq!(rep.sim_broadcast_ship_bytes, 2000, "both nodes hold a copy");
         assert_eq!(rep.sim_repair_ship_bytes, 0, "no third node to repair onto");
+    }
+
+    #[test]
+    fn two_tenants_on_one_core_double_the_makespan() {
+        // the serve daemon admits a second identical job: same slots,
+        // twice the compute — on one core the makespan exactly doubles
+        let log = make_log(&[(1, 0.0, 4.0, 4, 1.0)]);
+        let one = simulate(&log, &config(Deploy::SingleThread));
+        let two =
+            simulate(&log, &config(Deploy::SingleThread).with_sim_concurrent_jobs(2));
+        assert_eq!(one.sim_concurrent_jobs, 1);
+        assert_eq!(two.sim_concurrent_jobs, 2);
+        assert!((two.sim_makespan_s - 2.0 * one.sim_makespan_s).abs() < 1e-9);
+        assert!(two.sim_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn tenants_share_broadcasts_like_the_warm_pool() {
+        // two tenants posing the same problem: the job-refcounted payload
+        // cache ships it once per node, so simulated broadcast bytes must
+        // not grow with the tenant count — only the compute contends
+        let bytes = 400_000_000usize; // 1s at 400 MB/s
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 2,
+            submit_rel: 0.0,
+            finish_rel: 2.0,
+            broadcast_deps: vec![(9, bytes)],
+        });
+        for p in 0..2 {
+            log.record_task(TaskRecord {
+                job_id: 1,
+                partition: p,
+                start_rel: 0.0,
+                duration: 1.0,
+                attempts: 1,
+            });
+        }
+        let c = config(Deploy::Cluster { workers: 2, cores_per_worker: 1 });
+        let one = simulate(&log, &c.clone());
+        let two = simulate(&log, &c.with_sim_concurrent_jobs(2));
+        assert_eq!(
+            two.sim_broadcast_ship_bytes, one.sim_broadcast_ship_bytes,
+            "a shared problem ships once, not once per tenant"
+        );
+        assert!(two.sim_makespan_s > one.sim_makespan_s, "tenants contend for cores");
+    }
+
+    #[test]
+    fn tenant_sync_chains_stay_independent() {
+        // a sync driver's j1 -> j2 chain must replicate per tenant without
+        // cross-tenant gating: two chains on enough cores finish in the
+        // single-tenant time
+        let log = make_log(&[(1, 0.0, 4.0, 4, 1.0), (2, 4.0, 8.0, 4, 1.0)]);
+        let one = simulate(&log, &config(Deploy::Local { cores: 4 }));
+        let two = simulate(&log, &config(Deploy::Local { cores: 8 }).with_sim_concurrent_jobs(2));
+        assert!((one.sim_makespan_s - 2.0).abs() < 1e-9);
+        assert!((two.sim_makespan_s - 2.0).abs() < 1e-9, "{}", two.sim_makespan_s);
     }
 
     #[test]

@@ -190,6 +190,12 @@ pub struct ExecutionReport {
     /// harvested result payloads; the real counterpart is
     /// `PoolCounters::result_ingress_bytes`.
     pub sim_result_ingress_bytes: u64,
+    /// Concurrent tenant jobs the DES priced
+    /// (`EngineConfig::sim_concurrent_jobs`): the measured log replayed
+    /// as this many identical jobs contending for the same executor
+    /// slots while sharing broadcast residency, the cost model of the
+    /// serve daemon's multi-tenant warm pool. 1 = batch baseline.
+    pub sim_concurrent_jobs: u64,
     /// Topology description, e.g. `cluster(5x4)`.
     pub topology: String,
 }
@@ -209,6 +215,7 @@ impl ExecutionReport {
             ("sim_rejoin_ship_bytes", Json::Num(self.sim_rejoin_ship_bytes as f64)),
             ("sim_speculative_task_s", Json::Num(self.sim_speculative_task_s)),
             ("sim_result_ingress_bytes", Json::Num(self.sim_result_ingress_bytes as f64)),
+            ("sim_concurrent_jobs", Json::Num(self.sim_concurrent_jobs as f64)),
             ("topology", Json::Str(self.topology.clone())),
         ])
     }

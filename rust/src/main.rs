@@ -1,16 +1,13 @@
 //! `parccm` — the coordinator binary.
 //!
-//! Subcommands (run `parccm help`):
-//!
-//! * `cases`        — print the paper's Table 1 (implementation levels).
-//! * `fig4`         — reproduce Fig. 4: cases A1–A5 in Local vs Cluster
-//!                    (Yarn) mode on the baseline scenario.
-//! * `elasticity`   — reproduce Table 2 / Fig. 5: runtime elasticity in
-//!                    L, E, tau for single-threaded vs parallel CCM.
-//! * `quickstart`   — small end-to-end convergence demo.
-//! * `sweep`        — run CCM over a CSV of your own series.
-//! * `validate`     — cross-check the XLA backend against native.
-//! * `significance` — surrogate significance test demo.
+//! Subcommands are rows of one [`SUBCOMMANDS`] table (run `parccm help`
+//! for the list, `parccm <sub> --help` for a subcommand's own usage).
+//! Batch analysis: `cases`, `fig4`, `elasticity`, `quickstart`, `sweep`,
+//! `validate`, `significance`, `select`, `forecast`, `lag`, `events`.
+//! Serve mode (one warm worker pool, many concurrent jobs — see
+//! [`parccm::ccm::serve`]): `serve` runs the daemon; `submit`, `status`,
+//! `fetch`, and `cancel` are its job clients. `worker` is the hidden
+//! cluster child entry point.
 
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -21,9 +18,10 @@ use parccm::ccm::backend::ComputeBackend;
 use parccm::ccm::convergence::assess;
 use parccm::ccm::chaos::chaos_from_env;
 use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, OnExhausted};
-use parccm::ccm::driver::{skills_to_json, Case, ReduceMode, RunSpec, TablePolicy};
+use parccm::ccm::driver::{skills_to_json, Case, JobSpec, ReduceMode, RunSpec, TablePolicy};
 use parccm::ccm::lifecycle::{parse_workers_at, workers_at_from_env};
 use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::serve::{JobClient, ServeDaemon, ServeOptions, DEFAULT_MAX_CONCURRENT_JOBS};
 use parccm::ccm::transport::{resolve_auth_token, TransportKind};
 use parccm::ccm::result::summarize;
 use parccm::ccm::surrogate::{significance_test, SurrogateKind};
@@ -35,30 +33,213 @@ use parccm::timeseries::io::read_csv;
 use parccm::util::cli::Args;
 use parccm::util::json::Json;
 
+/// One row of the dispatch table: name, one-line description for the
+/// global help, full usage text for `parccm <name> --help`, and the
+/// handler. Hidden rows dispatch but stay out of the global help.
+struct Subcommand {
+    name: &'static str,
+    about: &'static str,
+    usage: &'static str,
+    hidden: bool,
+    run: fn(&Args) -> ExitCode,
+}
+
+/// The dispatch table. `main` resolves the subcommand here; the
+/// help-coverage test pins every row to a non-empty about line and a
+/// usage block that leads with its own invocation.
+const SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "cases",
+        about: "print Table 1 (implementation levels A1-A5)",
+        usage: "USAGE: parccm cases",
+        hidden: false,
+        run: cmd_cases,
+    },
+    Subcommand {
+        name: "fig4",
+        about: "Fig. 4: A1-A5 x (Local|Cluster) on the baseline scenario",
+        usage: "USAGE: parccm fig4 [--full] [--case A1..A5] [--backend B] \
+                [--table full|trunc] [--shards N] [--reduce driver|worker] \
+                [--dump-skills FILE] [--seed N] [--workers N --cores N]\n\
+                \n\
+                Runs the paper's five implementation levels and reports the\n\
+                DES makespan for Local and Yarn topologies. --dump-skills\n\
+                writes the canonical skills JSON plus FILE.meta.json (v2\n\
+                sidecar: schema_version + a counters sub-object).",
+        hidden: false,
+        run: cmd_fig4,
+    },
+    Subcommand {
+        name: "elasticity",
+        about: "Table 2 / Fig. 5: runtime elasticity in L, E, tau",
+        usage: "USAGE: parccm elasticity [--full] [--backend B] [--seed N]",
+        hidden: false,
+        run: cmd_elasticity,
+    },
+    Subcommand {
+        name: "quickstart",
+        about: "end-to-end convergence demo on coupled logistic maps",
+        usage: "USAGE: parccm quickstart [--n N] [--r R] [--l L1,L2,...] [--backend B]",
+        hidden: false,
+        run: cmd_quickstart,
+    },
+    Subcommand {
+        name: "sweep",
+        about: "CCM over a CSV: --input f.csv --effect col --cause col",
+        usage: "USAGE: parccm sweep --input series.csv [--effect col] [--cause col] \
+                [--r R] [--l ...] [--e ...] [--tau ...] [--backend B]",
+        hidden: false,
+        run: cmd_sweep,
+    },
+    Subcommand {
+        name: "validate",
+        about: "cross-check XLA backend vs native backend",
+        usage: "USAGE: parccm validate [--artifacts DIR] [--seed N]",
+        hidden: false,
+        run: cmd_validate,
+    },
+    Subcommand {
+        name: "significance",
+        about: "surrogate significance test demo",
+        usage: "USAGE: parccm significance [--n N] [--l L] [--r R] [--surrogates K] [--seed N]",
+        hidden: false,
+        run: cmd_significance,
+    },
+    Subcommand {
+        name: "select",
+        about: "choose (E, tau): Cao / AMI / forecast-skill (--input csv --col name)",
+        usage: "USAGE: parccm select [--input series.csv --col name] [--max-e E] \
+                [--max-lag L] [--bins B] [--cao-tol T]",
+        hidden: false,
+        run: cmd_select,
+    },
+    Subcommand {
+        name: "forecast",
+        about: "simplex & S-map forecast skill (--input csv --col name)",
+        usage: "USAGE: parccm forecast [--input series.csv --col name] [--e E] \
+                [--tau T] [--theta X]",
+        hidden: false,
+        run: cmd_forecast,
+    },
+    Subcommand {
+        name: "lag",
+        about: "cross-map lag profile (delayed-causality analysis)",
+        usage: "USAGE: parccm lag [--n N] [--e E] [--tau T] [--l L] [--r R] \
+                [--max-lag K] [--backend B]",
+        hidden: false,
+        run: cmd_lag,
+    },
+    Subcommand {
+        name: "events",
+        about: "run a demo job set, dump the engine event log + DES reports",
+        usage: "USAGE: parccm events [--out FILE] [--replicas R] [--sim-failures N] \
+                [--sim-rejoins N] [--sim-speculative N] [--sim-concurrent-jobs N] \
+                [--backend B]\n\
+                \n\
+                --sim-concurrent-jobs N prices the measured log as N tenant\n\
+                jobs sharing the warm pool (broadcast bytes do not grow; the\n\
+                makespan reflects slot contention).",
+        hidden: false,
+        run: cmd_events,
+    },
+    Subcommand {
+        name: "serve",
+        about: "run the multi-tenant job daemon over one warm worker pool",
+        usage: "USAGE: parccm serve [--serve-at HOST:PORT] [--max-concurrent-jobs N] \
+                [--auth-token T] [--backend process ...cluster flags]\n\
+                \n\
+                Owns one warm pool for its whole life and admits many\n\
+                concurrent jobs over the v7 wire (submit/status/fetch/\n\
+                cancel). Announces `PARCCM_SERVE_LISTENING host:port` on\n\
+                stdout; runs until a client sends shutdown, then drains.\n\
+                --serve-at defaults to 127.0.0.1:0 (ephemeral). At most\n\
+                --max-concurrent-jobs run at once (default 4); excess\n\
+                submissions queue FIFO. With --backend process (or\n\
+                --workers-at) jobs share the cluster pool with per-job\n\
+                counters and fair round-robin dispatch; other backends\n\
+                serve without per-job attribution.",
+        hidden: false,
+        run: cmd_serve,
+    },
+    Subcommand {
+        name: "submit",
+        about: "submit a job to a serve daemon; prints the job id",
+        usage: "USAGE: parccm submit --at HOST:PORT [--case A1..A5] [--full] \
+                [--table full|trunc] [--shards N] [--reduce driver|worker] \
+                [--seed N] [--auth-token T]\n\
+                \n\
+                Builds the same spec `parccm fig4 --case ...` would run and\n\
+                submits it; prints the assigned job id on stdout. The\n\
+                daemon's result is byte-identical to the batch\n\
+                --dump-skills output for the same flags.",
+        hidden: false,
+        run: cmd_submit,
+    },
+    Subcommand {
+        name: "status",
+        about: "print a submitted job's state and per-job counters",
+        usage: "USAGE: parccm status --at HOST:PORT --job N [--auth-token T]\n\
+                \n\
+                Prints the daemon's status reply as JSON: state (queued|\n\
+                running|done|failed|cancelled), the job's live counter\n\
+                slice, and the failure message when failed.",
+        hidden: false,
+        run: cmd_status,
+    },
+    Subcommand {
+        name: "fetch",
+        about: "fetch a done job's canonical skills dump",
+        usage: "USAGE: parccm fetch --at HOST:PORT --job N [--out FILE] [--wait] \
+                [--auth-token T]\n\
+                \n\
+                Writes the canonical skills JSON to --out (exact bytes, no\n\
+                trailing newline — byte-comparable against a batch\n\
+                --dump-skills file) or stdout. --wait polls status until\n\
+                the job leaves the queue/running states first.",
+        hidden: false,
+        run: cmd_fetch,
+    },
+    Subcommand {
+        name: "cancel",
+        about: "cancel a still-queued job on a serve daemon (or --shutdown the daemon)",
+        usage: "USAGE: parccm cancel --at HOST:PORT (--job N | --shutdown) [--auth-token T]\n\
+                \n\
+                Only queued jobs can be cancelled; running or finished\n\
+                jobs are a named error. --shutdown instead asks the\n\
+                daemon to stop accepting jobs and drain.",
+        hidden: false,
+        run: cmd_cancel,
+    },
+    Subcommand {
+        name: "worker",
+        about: "cluster child entry point (JSON wire on stdio, or --listen/--connect TCP)",
+        usage: "USAGE: parccm worker [--listen HOST:PORT | --connect HOST:PORT] \
+                [--auth-token T]",
+        hidden: true,
+        run: parccm::ccm::cluster::worker_main,
+    },
+];
+
 fn main() -> ExitCode {
     let args = Args::from_env();
-    match args.subcommand.as_deref() {
-        Some("cases") => cmd_cases(),
-        Some("fig4") => cmd_fig4(&args),
-        Some("elasticity") => cmd_elasticity(&args),
-        Some("quickstart") => cmd_quickstart(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("validate") => cmd_validate(&args),
-        Some("significance") => cmd_significance(&args),
-        Some("select") => cmd_select(&args),
-        Some("events") => cmd_events(&args),
-        // hidden: the ClusterBackend child entry point (speaks the JSON
-        // wire protocol on stdio, or over TCP with --connect/--listen —
-        // see ccm::cluster and ccm::transport)
-        Some("worker") => parccm::ccm::cluster::worker_main(&args),
-        Some("forecast") => cmd_forecast(&args),
-        Some("lag") => cmd_lag(&args),
-        Some("help") | None => {
-            print_help();
-            ExitCode::SUCCESS
+    let Some(name) = args.subcommand.as_deref() else {
+        print_help();
+        return ExitCode::SUCCESS;
+    };
+    if name == "help" {
+        print_help();
+        return ExitCode::SUCCESS;
+    }
+    match SUBCOMMANDS.iter().find(|s| s.name == name) {
+        Some(sub) => {
+            if args.flag("help") {
+                println!("{}", sub.usage);
+                return ExitCode::SUCCESS;
+            }
+            (sub.run)(&args)
         }
-        Some(other) => {
-            eprintln!("unknown subcommand '{other}'\n");
+        None => {
+            eprintln!("unknown subcommand '{name}'\n");
             print_help();
             ExitCode::FAILURE
         }
@@ -69,21 +250,17 @@ fn print_help() {
     println!(
         "parccm — Parallelizing Convergent Cross Mapping (paper reproduction)\n\
          \n\
-         USAGE: parccm <subcommand> [options]\n\
+         USAGE: parccm <subcommand> [options]   (parccm <subcommand> --help for details)\n\
          \n\
-         SUBCOMMANDS\n\
-           cases          print Table 1 (implementation levels A1-A5)\n\
-           fig4           Fig. 4: A1-A5 x (Local|Cluster) on the baseline scenario\n\
-           elasticity     Table 2 / Fig. 5: runtime elasticity in L, E, tau\n\
-           quickstart     end-to-end convergence demo on coupled logistic maps\n\
-           sweep          CCM over a CSV: --input f.csv --effect col --cause col\n\
-           validate       cross-check XLA backend vs native backend\n\
-           significance   surrogate significance test demo\n\
-           select         choose (E, tau): Cao / AMI / forecast-skill (--input csv --col name)\n\
-           forecast       simplex & S-map forecast skill (--input csv --col name)\n\
-           lag            cross-map lag profile (delayed-causality analysis)\n\
-           events         run a demo job set, dump the engine event log + DES reports\n\
-         \n\
+         SUBCOMMANDS"
+    );
+    for sub in SUBCOMMANDS {
+        if !sub.hidden {
+            println!("  {:<14} {}", sub.name, sub.about);
+        }
+    }
+    println!(
+        "\n\
          COMMON OPTIONS\n\
            --full               paper-scale scenario (default: scaled for 1 core)\n\
            --backend native|xla|process\n\
@@ -148,6 +325,126 @@ fn print_help() {
     );
 }
 
+/// Parse the cluster-pool flags shared by every command that can own a
+/// worker pool (`fig4 --backend process`, `serve`, ...): transport,
+/// remote addresses, auth, keepalive/rejoin, straggler defense, chaos.
+/// Malformed values that would silently change semantics are fatal.
+fn cluster_options_from(args: &Args) -> ClusterOptions {
+    let workers = args.get_usize("proc-workers", 2);
+    let replicas = args.get_usize("replicas", 1);
+    let transport = match args.get("transport") {
+        None => TransportKind::Pipe,
+        Some(t) => match TransportKind::parse(t) {
+            Some(k) => k,
+            None => {
+                eprintln!("[parccm] unknown --transport '{t}', using pipe");
+                TransportKind::Pipe
+            }
+        },
+    };
+    // pre-started remote workers: --workers-at, else PARCCM_WORKERS
+    let workers_at = match args.get("workers-at") {
+        Some(list) => {
+            let addrs = parse_workers_at(list);
+            if addrs.is_empty() {
+                // asking for remote mode and getting local numbers
+                // would hide a dead cluster — refuse loudly
+                eprintln!(
+                    "[parccm] FATAL: --workers-at '{list}' names no host:port \
+                     (expected a comma-separated list like hostA:7001,hostB:7001)"
+                );
+                std::process::exit(2);
+            }
+            addrs
+        }
+        None => workers_at_from_env().unwrap_or_default(),
+    };
+    let explicit_pipe = args.get("transport").is_some() && transport == TransportKind::Pipe;
+    if !workers_at.is_empty() && explicit_pipe {
+        eprintln!("[parccm] --workers-at implies --transport tcp; ignoring 'pipe'");
+    }
+    let auth_token = resolve_auth_token(args.get("auth-token"));
+    // --keepalive-secs S (<= 0 disables); unset = automatic (on
+    // for remote pools, off for forked ones)
+    let keepalive = args.get("keepalive-secs").map(|_| {
+        let secs = args.get_f64("keepalive-secs", 0.0).max(0.0);
+        std::time::Duration::from_secs_f64(secs)
+    });
+    if keepalive.is_some_and(|d| !d.is_zero())
+        && workers_at.is_empty()
+        && transport == TransportKind::Pipe
+    {
+        eprintln!(
+            "[parccm] --keepalive-secs has no effect on the pipe transport \
+             (pipes cannot enforce read deadlines); use --transport tcp"
+        );
+    }
+    // --rejoin-backoff-secs S (0 = off): redial dead remote
+    // addresses so restarted listeners rejoin the pool
+    let rejoin_backoff = args.get("rejoin-backoff-secs").map(|_| {
+        let secs = args.get_f64("rejoin-backoff-secs", 0.0).max(0.0);
+        std::time::Duration::from_secs_f64(secs)
+    });
+    if rejoin_backoff.is_some_and(|d| !d.is_zero()) && workers_at.is_empty() {
+        eprintln!(
+            "[parccm] --rejoin-backoff-secs only applies to --workers-at pools \
+             (forked workers are respawned in place); ignoring it"
+        );
+    }
+    // straggler defense: a hard per-task deadline and/or speculative
+    // duplicates keyed to the running median duration per task kind
+    let task_deadline = args.get("task-deadline-secs").and_then(|_| {
+        let secs = args.get_f64("task-deadline-secs", 0.0);
+        (secs > 0.0).then(|| std::time::Duration::from_secs_f64(secs))
+    });
+    let speculate_factor = args.get("speculate-factor").and_then(|_| {
+        let x = args.get_f64("speculate-factor", 0.0);
+        (x > 0.0).then_some(x)
+    });
+    let on_exhausted = match args.get("on-exhausted") {
+        None => OnExhausted::Abort,
+        Some(p) => match OnExhausted::parse(p) {
+            Some(o) => o,
+            None => {
+                eprintln!(
+                    "[parccm] FATAL: unknown --on-exhausted '{p}' \
+                     (expected abort|fallback)"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+    // a malformed chaos spec must never silently run chaos-free:
+    // the whole point of PARCCM_CHAOS is a reproducible fault plan
+    let chaos = match chaos_from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("[parccm] FATAL: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some((seed, _)) = &chaos {
+        eprintln!(
+            "[parccm] chaos injection armed on driver-side connections \
+             (PARCCM_CHAOS, seed {seed})"
+        );
+    }
+    ClusterOptions {
+        transport,
+        workers,
+        replicas,
+        workers_at,
+        auth_token,
+        keepalive,
+        rejoin_backoff,
+        task_deadline,
+        speculate_factor,
+        on_exhausted,
+        chaos,
+        ..ClusterOptions::default()
+    }
+}
+
 /// Pick the compute backend: explicit `--backend`, else XLA when artifacts
 /// are present, else native.
 fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
@@ -186,121 +483,8 @@ fn make_backend(args: &Args) -> Arc<dyn ComputeBackend> {
             }
         }
         "process" => {
-            let workers = args.get_usize("proc-workers", 2);
-            let replicas = args.get_usize("replicas", 1);
-            let transport = match args.get("transport") {
-                None => TransportKind::Pipe,
-                Some(t) => match TransportKind::parse(t) {
-                    Some(k) => k,
-                    None => {
-                        eprintln!("[parccm] unknown --transport '{t}', using pipe");
-                        TransportKind::Pipe
-                    }
-                },
-            };
-            // pre-started remote workers: --workers-at, else PARCCM_WORKERS
-            let workers_at = match args.get("workers-at") {
-                Some(list) => {
-                    let addrs = parse_workers_at(list);
-                    if addrs.is_empty() {
-                        // asking for remote mode and getting local numbers
-                        // would hide a dead cluster — refuse loudly
-                        eprintln!(
-                            "[parccm] FATAL: --workers-at '{list}' names no host:port \
-                             (expected a comma-separated list like hostA:7001,hostB:7001)"
-                        );
-                        std::process::exit(2);
-                    }
-                    addrs
-                }
-                None => workers_at_from_env().unwrap_or_default(),
-            };
-            let explicit_pipe =
-                args.get("transport").is_some() && transport == TransportKind::Pipe;
-            if !workers_at.is_empty() && explicit_pipe {
-                eprintln!("[parccm] --workers-at implies --transport tcp; ignoring 'pipe'");
-            }
-            let auth_token = resolve_auth_token(args.get("auth-token"));
-            // --keepalive-secs S (<= 0 disables); unset = automatic (on
-            // for remote pools, off for forked ones)
-            let keepalive = args.get("keepalive-secs").map(|_| {
-                let secs = args.get_f64("keepalive-secs", 0.0).max(0.0);
-                std::time::Duration::from_secs_f64(secs)
-            });
-            if keepalive.is_some_and(|d| !d.is_zero())
-                && workers_at.is_empty()
-                && transport == TransportKind::Pipe
-            {
-                eprintln!(
-                    "[parccm] --keepalive-secs has no effect on the pipe transport \
-                     (pipes cannot enforce read deadlines); use --transport tcp"
-                );
-            }
-            // --rejoin-backoff-secs S (0 = off): redial dead remote
-            // addresses so restarted listeners rejoin the pool
-            let rejoin_backoff = args.get("rejoin-backoff-secs").map(|_| {
-                let secs = args.get_f64("rejoin-backoff-secs", 0.0).max(0.0);
-                std::time::Duration::from_secs_f64(secs)
-            });
-            if rejoin_backoff.is_some_and(|d| !d.is_zero()) && workers_at.is_empty() {
-                eprintln!(
-                    "[parccm] --rejoin-backoff-secs only applies to --workers-at pools \
-                     (forked workers are respawned in place); ignoring it"
-                );
-            }
-            // straggler defense: a hard per-task deadline and/or speculative
-            // duplicates keyed to the running median duration per task kind
-            let task_deadline = args.get("task-deadline-secs").and_then(|_| {
-                let secs = args.get_f64("task-deadline-secs", 0.0);
-                (secs > 0.0).then(|| std::time::Duration::from_secs_f64(secs))
-            });
-            let speculate_factor = args.get("speculate-factor").and_then(|_| {
-                let x = args.get_f64("speculate-factor", 0.0);
-                (x > 0.0).then_some(x)
-            });
-            let on_exhausted = match args.get("on-exhausted") {
-                None => OnExhausted::Abort,
-                Some(p) => match OnExhausted::parse(p) {
-                    Some(o) => o,
-                    None => {
-                        eprintln!(
-                            "[parccm] FATAL: unknown --on-exhausted '{p}' \
-                             (expected abort|fallback)"
-                        );
-                        std::process::exit(2);
-                    }
-                },
-            };
-            // a malformed chaos spec must never silently run chaos-free:
-            // the whole point of PARCCM_CHAOS is a reproducible fault plan
-            let chaos = match chaos_from_env() {
-                Ok(c) => c,
-                Err(e) => {
-                    eprintln!("[parccm] FATAL: {e}");
-                    std::process::exit(2);
-                }
-            };
-            if let Some((seed, _)) = &chaos {
-                eprintln!(
-                    "[parccm] chaos injection armed on driver-side connections \
-                     (PARCCM_CHAOS, seed {seed})"
-                );
-            }
-            let remote = !workers_at.is_empty();
-            let opts = ClusterOptions {
-                transport,
-                workers,
-                replicas,
-                workers_at,
-                auth_token,
-                keepalive,
-                rejoin_backoff,
-                task_deadline,
-                speculate_factor,
-                on_exhausted,
-                chaos,
-                ..ClusterOptions::default()
-            };
+            let opts = cluster_options_from(args);
+            let remote = !opts.workers_at.is_empty();
             let spawned = std::env::current_exe()
                 .and_then(|exe| ClusterBackend::with_options(exe, opts));
             match spawned {
@@ -415,7 +599,7 @@ fn run_case(
         .run(backend)
 }
 
-fn cmd_cases() -> ExitCode {
+fn cmd_cases(_args: &Args) -> ExitCode {
     println!("Table 1. Implementation Levels");
     for case in Case::ALL {
         println!("  Case {}  {}", case.name(), case.description());
@@ -482,16 +666,23 @@ fn cmd_fig4(args: &Args) -> ExitCode {
         // skills dump must stay byte-comparable across backends while the
         // counters (rejoins, repair ships, ...) legitimately differ — the
         // cluster-remote CI job asserts the rejoin counters from here
-        let counters: Vec<(&str, Json)> = backend
-            .run_counters()
-            .to_pairs()
-            .into_iter()
-            .map(|(k, v)| (k, Json::Num(v as f64)))
-            .collect();
-        let meta = Json::obj(vec![
+        let pairs = backend.run_counters().to_pairs();
+        let mut meta_fields: Vec<(&str, Json)> = vec![
             ("backend", Json::Str(backend.name().to_string())),
-            ("counters", Json::obj(counters)),
-        ]);
+            (
+                "counters",
+                Json::obj(pairs.iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect()),
+            ),
+            // sidecar schema v2: versioned shape with the counters nested;
+            // readers should branch on schema_version and prefer .counters
+            ("schema_version", Json::Num(2.0)),
+        ];
+        // legacy flat counter keys, kept for one release so pre-v2 sidecar
+        // readers keep working (remove when schema_version goes to 3)
+        for &(k, v) in &pairs {
+            meta_fields.push((k, Json::Num(v as f64)));
+        }
+        let meta = Json::obj(meta_fields);
         let meta_path = format!("{path}.meta.json");
         if let Err(e) = std::fs::write(&meta_path, meta.to_string()) {
             eprintln!("cannot write run metadata {meta_path}: {e}");
@@ -686,7 +877,8 @@ fn cmd_events(args: &Args) -> ExitCode {
             .with_broadcast_replicas(args.get_usize("replicas", 1))
             .with_sim_worker_failures(args.get_usize("sim-failures", 0))
             .with_sim_worker_rejoins(args.get_usize("sim-rejoins", 0))
-            .with_sim_speculative_tasks(args.get_usize("sim-speculative", 0)),
+            .with_sim_speculative_tasks(args.get_usize("sim-speculative", 0))
+            .with_sim_concurrent_jobs(args.get_usize("sim-concurrent-jobs", 1)),
     );
     let problem = parccm::ccm::pipeline::CcmProblem::new(&y, &x, 2, 1, 0.0);
     let n = problem.emb.n;
@@ -731,14 +923,15 @@ fn cmd_events(args: &Args) -> ExitCode {
     ] {
         let rep = ctx.report_for(deploy);
         println!(
-            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s  spec {:.4}s",
+            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s  spec {:.4}s  jobs x{}",
             rep.topology,
             rep.sim_makespan_s,
             rep.sim_utilization * 100.0,
             rep.sim_broadcast_ship_s,
             rep.sim_repair_ship_s,
             rep.sim_rejoin_ship_s,
-            rep.sim_speculative_task_s
+            rep.sim_speculative_task_s,
+            rep.sim_concurrent_jobs
         );
     }
     ExitCode::SUCCESS
@@ -855,4 +1048,263 @@ fn cmd_significance(args: &Args) -> ExitCode {
     );
     println!("(rEDM-baseline check: mean rho {:.4})", rows.iter().map(|r| r.rho as f64).sum::<f64>() / 5.0);
     ExitCode::SUCCESS
+}
+
+// ---------------------------------------------------------------------------
+// Serve mode: the daemon and its job clients.
+// ---------------------------------------------------------------------------
+
+/// Connection every serve client starts from: `--at HOST:PORT` (the
+/// address the daemon announced as `PARCCM_SERVE_LISTENING`) plus the
+/// usual auth-token resolution.
+fn connect_serve_client(args: &Args) -> Result<JobClient, ExitCode> {
+    let Some(at) = args.get("at") else {
+        eprintln!(
+            "this subcommand needs --at HOST:PORT (the daemon prints \
+             `PARCCM_SERVE_LISTENING host:port` on startup)"
+        );
+        return Err(ExitCode::FAILURE);
+    };
+    let auth = resolve_auth_token(args.get("auth-token"));
+    JobClient::connect(at, auth.as_deref()).map_err(|e| {
+        eprintln!("cannot connect to serve daemon at {at}: {e}");
+        ExitCode::FAILURE
+    })
+}
+
+/// `--job N`, required: the id `parccm submit` printed.
+fn job_arg(args: &Args) -> Result<u64, ExitCode> {
+    if args.get("job").is_none() {
+        eprintln!("this subcommand needs --job N (the id `parccm submit` printed)");
+        return Err(ExitCode::FAILURE);
+    }
+    Ok(args.get_u64("job", 0))
+}
+
+fn cmd_serve(args: &Args) -> ExitCode {
+    let max_concurrent = args.get_usize("max-concurrent-jobs", DEFAULT_MAX_CONCURRENT_JOBS);
+    let opts = ServeOptions {
+        listen: args.get("serve-at").unwrap_or("127.0.0.1:0").to_string(),
+        auth_token: resolve_auth_token(args.get("auth-token")),
+        max_concurrent_jobs: max_concurrent,
+    };
+    // The daemon owns ONE pool for its whole life; every job shares it.
+    // `--backend process` (or any `--workers-at`) gets the warm cluster
+    // pool with per-job counters and fair dispatch; native/xla serve the
+    // same protocol on a shared in-process backend.
+    let wants_cluster = args.get("backend") == Some("process") || args.get("workers-at").is_some();
+    let started = if wants_cluster {
+        let cluster_opts = cluster_options_from(args);
+        let remote = !cluster_opts.workers_at.is_empty();
+        match std::env::current_exe()
+            .and_then(|exe| ClusterBackend::with_options(exe, cluster_opts))
+        {
+            Ok(b) => {
+                eprintln!(
+                    "[serve] pool: {} {} workers, transport {}, replicas {}",
+                    b.num_workers(),
+                    if remote { "remote" } else { "forked" },
+                    b.transport_kind().name(),
+                    b.replicas()
+                );
+                ServeDaemon::start(Arc::new(b), opts)
+            }
+            Err(e) => {
+                eprintln!("[serve] FATAL: cannot start the worker pool: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        ServeDaemon::start(make_backend(args), opts)
+    };
+    let mut daemon = match started {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("[serve] FATAL: cannot bind the serve port: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    // Machine-readable announce, same contract as PARCCM_WORKER_LISTENING:
+    // scripts scrape this line to learn the bound port.
+    println!("PARCCM_SERVE_LISTENING {}", daemon.addr());
+    let _ = std::io::Write::flush(&mut std::io::stdout());
+    eprintln!(
+        "[serve] accepting jobs on {} (max {} concurrent; stop with \
+         `parccm cancel --at {} --shutdown`)",
+        daemon.addr(),
+        max_concurrent,
+        daemon.addr()
+    );
+    daemon.wait();
+    eprintln!("[serve] drained: {} job(s) served", daemon.tracker().jobs_served());
+    ExitCode::SUCCESS
+}
+
+fn cmd_submit(args: &Args) -> ExitCode {
+    let case_name = args.get("case").unwrap_or("A4");
+    let Some(case) = Case::parse(case_name) else {
+        eprintln!("unknown --case '{case_name}' (expected A1..A5)");
+        return ExitCode::FAILURE;
+    };
+    // Same flag surface as `fig4`, so a submitted job is the batch run's
+    // spec verbatim — that is what makes the dumps byte-identical.
+    let spec = JobSpec {
+        case,
+        scenario: scenario_from(args),
+        policy: table_policy_from(args),
+        shards: args.get_usize("shards", 1),
+        reduce: reduce_from(args),
+    };
+    let mut client = match connect_serve_client(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    match client.submit(&spec) {
+        Ok(job) => {
+            // Bare id on stdout: `JOB=$(parccm submit ...)` just works.
+            println!("{job}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("submit failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_status(args: &Args) -> ExitCode {
+    let job = match job_arg(args) {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
+    let mut client = match connect_serve_client(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    match client.status(job) {
+        Ok(reply) => {
+            println!("{reply}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("status failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_fetch(args: &Args) -> ExitCode {
+    let job = match job_arg(args) {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
+    let mut client = match connect_serve_client(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    if args.flag("wait") {
+        loop {
+            let reply = match client.status(job) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("status failed while waiting: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            match reply.get("state").and_then(Json::as_str) {
+                Some("queued") | Some("running") => {
+                    std::thread::sleep(std::time::Duration::from_millis(200))
+                }
+                _ => break,
+            }
+        }
+    }
+    match client.fetch(job) {
+        Ok(dump) => {
+            match args.get("out") {
+                Some(path) => {
+                    // Exact bytes, no trailing newline: the file must be
+                    // byte-comparable with a batch `--dump-skills` dump.
+                    if let Err(e) = std::fs::write(path, dump.as_bytes()) {
+                        eprintln!("cannot write {path}: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                    eprintln!("(job {job} skills -> {path})");
+                }
+                None => println!("{dump}"),
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("fetch failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_cancel(args: &Args) -> ExitCode {
+    let mut client = match connect_serve_client(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    if args.flag("shutdown") {
+        return match client.shutdown_daemon() {
+            Ok(()) => {
+                println!("shutdown acknowledged; daemon draining");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("shutdown failed: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    let job = match job_arg(args) {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
+    match client.cancel(job) {
+        Ok(state) => {
+            println!("job {job}: {state}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("cancel failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every dispatch-table row must carry coherent help: a unique name,
+    /// a one-liner for the global help, and a usage block that leads with
+    /// its own invocation. Guards satellite work on the subcommand table
+    /// from rows drifting out of sync with their docs.
+    #[test]
+    fn subcommand_table_covers_help_and_dispatch() {
+        let mut seen = std::collections::HashSet::new();
+        for sub in SUBCOMMANDS {
+            assert!(seen.insert(sub.name), "duplicate subcommand '{}'", sub.name);
+            assert!(!sub.about.is_empty(), "'{}' has an empty about line", sub.name);
+            assert!(
+                sub.usage.starts_with(&format!("USAGE: parccm {}", sub.name)),
+                "'{}' usage must lead with its own invocation, got: {}",
+                sub.name,
+                sub.usage
+            );
+        }
+        // The serve-mode family ships alongside the batch commands.
+        for name in ["serve", "submit", "status", "fetch", "cancel", "fig4", "events", "worker"] {
+            assert!(
+                SUBCOMMANDS.iter().any(|s| s.name == name),
+                "missing subcommand '{name}'"
+            );
+        }
+        // Exactly one hidden row: the worker child entry point.
+        let hidden: Vec<&str> = SUBCOMMANDS.iter().filter(|s| s.hidden).map(|s| s.name).collect();
+        assert_eq!(hidden, ["worker"]);
+    }
 }

@@ -1,0 +1,288 @@
+//! End-to-end tests of `parccm serve`: one daemon owning one warm remote
+//! worker pool, many concurrent jobs over the v7 wire. Covered here:
+//!
+//! - the ISSUE's acceptance chaos schedule — two overlapping jobs on a
+//!   3-listener pool, one worker killed with `kill -9` mid-run, both
+//!   results byte-identical to batch references and per-job counters
+//!   neither bleeding across jobs nor missing pool traffic;
+//! - broadcast sharing — two concurrent jobs posing the *same* problem
+//!   reuse the first tenant's resident table instead of re-shipping it
+//!   (the warm pool's whole point: a pair of identical tenants ships no
+//!   more broadcast traffic than one cold job).
+//!
+//! Worker processes are spawned exactly like `integration_remote.rs`
+//! does (and like the `cluster-remote` CI job does via
+//! `scripts/launch_local_cluster.sh`): `parccm worker --listen` children
+//! announcing `PARCCM_WORKER_LISTENING` on stdout. Every test arms a
+//! [`Watchdog`] so a hung socket fails CI fast.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parccm::ccm::backend::ComputeBackend; // `run_counters` is a trait method
+use parccm::ccm::cluster::{ClusterBackend, ClusterOptions};
+use parccm::ccm::driver::{skills_to_json, Case, JobSpec, TablePolicy};
+use parccm::ccm::params::Scenario;
+use parccm::ccm::serve::{JobClient, ServeDaemon, ServeOptions};
+use parccm::native::NativeBackend;
+use parccm::util::json::Json;
+use parccm::util::watchdog::Watchdog;
+
+const TEST_TIMEOUT: Duration = Duration::from_secs(180);
+
+fn kill9(pid: u32) {
+    let status = Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill -9 {pid}");
+}
+
+/// A pre-started listen-mode worker owned by the test (see
+/// `integration_remote.rs` for the full-featured variant). Killed on drop.
+struct ListenWorker {
+    child: Child,
+    addr: String,
+}
+
+impl ListenWorker {
+    fn start() -> ListenWorker {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_parccm"))
+            .args(["worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning listen worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let ready = BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("worker announces before exiting")
+            .expect("readable ready line");
+        let addr = ready
+            .strip_prefix("PARCCM_WORKER_LISTENING ")
+            .unwrap_or_else(|| panic!("unexpected ready line: {ready}"))
+            .trim()
+            .to_string();
+        ListenWorker { child, addr }
+    }
+
+    fn pid(&self) -> u32 {
+        self.child.id()
+    }
+}
+
+impl Drop for ListenWorker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn remote_pool(workers: &[ListenWorker], replicas: usize) -> Arc<ClusterBackend> {
+    Arc::new(
+        ClusterBackend::with_options(
+            env!("CARGO_BIN_EXE_parccm"),
+            ClusterOptions {
+                replicas,
+                workers_at: workers.iter().map(|w| w.addr.clone()).collect(),
+                keepalive: Some(Duration::from_millis(500)),
+                ..ClusterOptions::default()
+            },
+        )
+        .expect("connecting the remote worker pool"),
+    )
+}
+
+/// The canonical batch reference for a spec: the same `JobSpec::run` the
+/// daemon executes, on the in-process backend.
+fn batch_reference(spec: &JobSpec) -> String {
+    skills_to_json(&spec.run(Arc::new(NativeBackend)).skills).to_string()
+}
+
+/// Poll `status` until the job leaves queued/running, then fetch its
+/// dump; panics (with the daemon's error) if the job failed instead.
+fn wait_fetch(client: &mut JobClient, job: u64) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let reply = client.status(job).expect("status reply");
+        match reply.get("state").and_then(Json::as_str) {
+            Some("queued") | Some("running") => {
+                assert!(Instant::now() < deadline, "timed out waiting on job {job}");
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            Some("done") => return client.fetch(job).expect("fetching a done job"),
+            other => panic!("job {job} ended in {other:?}: {reply}"),
+        }
+    }
+}
+
+#[test]
+fn overlapping_jobs_survive_worker_kill_and_match_batch_dumps() {
+    // the acceptance chaos schedule: two different jobs overlapping on a
+    // 3-listener pool behind one authenticated daemon, one worker killed
+    // -9 mid-run. Both jobs must finish with dumps byte-identical to
+    // their batch references, and the per-job counter slices must
+    // account for ALL pool broadcast/result traffic without bleeding
+    // into each other (no third job id ever appears).
+    let _guard = Watchdog::arm("serve_chaos_two_jobs", TEST_TIMEOUT);
+    let workers = [ListenWorker::start(), ListenWorker::start(), ListenWorker::start()];
+    let pool = remote_pool(&workers, 2);
+    assert_eq!(pool.num_workers(), 3);
+
+    // two distinct problems: a sharded truncated A4 and a full-table A4
+    // on a different seed — different broadcasts, different task mixes
+    let spec_a = JobSpec {
+        case: Case::A4,
+        scenario: Scenario::smoke(),
+        policy: TablePolicy::TruncatedAuto,
+        shards: 3,
+        reduce: Default::default(),
+    };
+    let spec_b = JobSpec {
+        case: Case::A4,
+        scenario: Scenario { seed: 11, ..Scenario::smoke() },
+        policy: TablePolicy::Full,
+        shards: 1,
+        reduce: Default::default(),
+    };
+    let ref_a = batch_reference(&spec_a);
+    let ref_b = batch_reference(&spec_b);
+
+    let daemon = ServeDaemon::start(
+        Arc::clone(&pool),
+        ServeOptions {
+            auth_token: Some("serve-secret".to_string()),
+            max_concurrent_jobs: 2,
+            ..ServeOptions::default()
+        },
+    )
+    .expect("starting the serve daemon");
+
+    let mut c1 = JobClient::connect(daemon.addr(), Some("serve-secret")).expect("client 1");
+    let mut c2 = JobClient::connect(daemon.addr(), Some("serve-secret")).expect("client 2");
+    let job_a = c1.submit(&spec_a).expect("submitting job A");
+    let job_b = c2.submit(&spec_b).expect("submitting job B");
+    assert_ne!(job_a, job_b);
+
+    // kill one listener while the jobs are (very likely) mid-run; the
+    // dump assertions below hold either way — the pool requeues the
+    // victim's tasks onto the survivors (replicas 2 keeps sharded
+    // payloads resident somewhere)
+    let victim = workers[0].pid();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        kill9(victim);
+    });
+
+    let dump_a = wait_fetch(&mut c1, job_a);
+    let dump_b = wait_fetch(&mut c2, job_b);
+    killer.join().unwrap();
+
+    assert_eq!(dump_a, ref_a, "job A must be byte-identical to its batch reference");
+    assert_eq!(dump_b, ref_b, "job B must be byte-identical to its batch reference");
+
+    // counter attribution: each job saw its own traffic, nothing else
+    // did, and the slices sum to the pool totals exactly — repair
+    // traffic from the kill is pool-level and deliberately outside the
+    // per-job slices
+    let tallies = pool.job_tallies();
+    assert_eq!(
+        tallies.iter().map(|&(j, _)| j).collect::<Vec<_>>(),
+        vec![job_a, job_b],
+        "exactly the two submitted jobs carry tallies"
+    );
+    let ta = pool.job_tally(job_a);
+    let tb = pool.job_tally(job_b);
+    assert!(ta.tasks > 0 && tb.tasks > 0, "both jobs computed on the pool");
+    assert!(ta.broadcast_ship_bytes > 0 && tb.broadcast_ship_bytes > 0);
+    let counters = pool.run_counters();
+    assert_eq!(ta.broadcast_ships + tb.broadcast_ships, counters.broadcast_ships);
+    assert_eq!(
+        ta.broadcast_ship_bytes + tb.broadcast_ship_bytes,
+        counters.broadcast_ship_bytes
+    );
+    assert_eq!(
+        ta.result_ingress_bytes + tb.result_ingress_bytes,
+        counters.result_ingress_bytes
+    );
+    assert_eq!(counters.respawns, 0, "remote workers are never respawned");
+    assert!(pool.num_workers() >= 2, "at most the killed worker may be gone");
+
+    let mut daemon = daemon;
+    daemon.shutdown();
+    assert_eq!(daemon.tracker().jobs_served(), 2);
+}
+
+#[test]
+fn concurrent_identical_jobs_share_the_resident_broadcast() {
+    // the warm pool's multi-tenant dividend: two concurrent jobs posing
+    // the SAME problem reuse the driver payload cache and the workers'
+    // resident copies, so the pair ships no more broadcast traffic than
+    // one cold job. Phase 1 measures a solo job's ships; phase 2 runs
+    // two identical jobs overlapped (the solo job's eviction made the
+    // pool cold again in between) and must not exceed that solo budget.
+    let _guard = Watchdog::arm("serve_shared_broadcast", TEST_TIMEOUT);
+    let workers = [ListenWorker::start(), ListenWorker::start(), ListenWorker::start()];
+    let pool = remote_pool(&workers, 1);
+
+    // big enough that a job runs far longer than the ~ms it takes the
+    // second runner thread to reach its broadcast: the overlap the
+    // sharing depends on is structural, not a lucky race
+    let spec = JobSpec {
+        case: Case::A4,
+        scenario: Scenario {
+            series_len: 400,
+            r: 16,
+            ls: vec![60, 120, 180, 240],
+            es: vec![2],
+            taus: vec![1],
+            theiler: 0,
+            seed: 7,
+            partitions: 6,
+        },
+        policy: TablePolicy::TruncatedAuto,
+        shards: 1,
+        reduce: Default::default(),
+    };
+    let reference = batch_reference(&spec);
+
+    let daemon = ServeDaemon::start(
+        Arc::clone(&pool),
+        ServeOptions { max_concurrent_jobs: 2, ..ServeOptions::default() },
+    )
+    .expect("starting the serve daemon");
+    let mut client = JobClient::connect(daemon.addr(), None).expect("job client");
+
+    // phase 1: one cold job alone — its ship count is the budget
+    let solo = client.submit(&spec).expect("submitting the solo job");
+    assert_eq!(wait_fetch(&mut client, solo), reference);
+    let solo_ships = pool.run_counters().broadcast_ships;
+    assert!(solo_ships > 0, "a cold job must ship its table");
+    assert_eq!(pool.cached_payloads(), 0, "solo harvest evicts the cache");
+
+    // phase 2: two identical tenants overlapped on the (again cold) pool
+    let t1 = client.submit(&spec).expect("submitting tenant 1");
+    let t2 = client.submit(&spec).expect("submitting tenant 2");
+    let d1 = wait_fetch(&mut client, t1);
+    let d2 = wait_fetch(&mut client, t2);
+    assert_eq!(d1, reference, "tenant 1 byte-identical to batch");
+    assert_eq!(d2, reference, "tenant 2 byte-identical to batch");
+
+    let pair_ships = pool.run_counters().broadcast_ships - solo_ships;
+    assert!(
+        pair_ships <= solo_ships,
+        "two tenants sharing one problem must not ship more than one cold \
+         job did (pair {pair_ships} vs solo {solo_ships}); without the \
+         job-refcounted payload cache this would be ~2x"
+    );
+    let (ta, tb) = (pool.job_tally(t1), pool.job_tally(t2));
+    assert!(ta.tasks > 0 && tb.tasks > 0, "both tenants computed on the pool");
+    assert_eq!(pool.cached_payloads(), 0, "last tenant out frees the shared entry");
+
+    let mut daemon = daemon;
+    daemon.shutdown();
+    assert_eq!(daemon.tracker().jobs_served(), 3);
+}
