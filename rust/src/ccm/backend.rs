@@ -209,6 +209,13 @@ pub struct PoolCounters {
     /// result-movement cost the worker-side reduce (`--reduce worker`)
     /// exists to shrink.
     pub result_ingress_bytes: u64,
+    /// Grid cells stopped early by the `--partial eps,conf` bounded
+    /// evaluator (confidence interval tight, or the whole (E, tau) slice
+    /// statistically decided).
+    pub partial_stops: u64,
+    /// Subsample tasks never dispatched because their cell stopped early
+    /// — the work the partial evaluator saved.
+    pub partial_saved_tasks: u64,
 }
 
 impl PoolCounters {
@@ -240,6 +247,8 @@ impl PoolCounters {
             ("corrupt_frames_detected", self.corrupt_frames_detected),
             ("exhausted_fallbacks", self.exhausted_fallbacks),
             ("result_ingress_bytes", self.result_ingress_bytes),
+            ("partial_stops", self.partial_stops),
+            ("partial_saved_tasks", self.partial_saved_tasks),
         ]
     }
 }
@@ -372,6 +381,16 @@ pub trait ComputeBackend: Send + Sync {
     /// [`crate::ccm::table::TableShard::wire_id`].
     fn evict_broadcasts(&self, _ids: &[u64]) {}
 
+    /// Report a batch of partial-evaluation stop decisions: `stops` grid
+    /// cells terminated early, skipping `saved_tasks` subsample tasks that
+    /// were never dispatched. The driver calls this once per run so the
+    /// counters land in [`PoolCounters`] (`partial_stops` /
+    /// `partial_saved_tasks`) and the `--dump-skills` sidecar. In-process
+    /// backends keep no counters, hence the no-op default;
+    /// `ccm::cluster::ClusterBackend` accumulates pool-wide, and its
+    /// per-job `JobBackend` view also attributes to the job's tally.
+    fn record_partial(&self, _stops: u64, _saved_tasks: u64) {}
+
     /// Observability counters for run-metadata dumps. In-process backends
     /// report all zeros (the default); the cluster runtime snapshots its
     /// pool counters (ships, repairs, rejoins, result ingress, ...) so CLI
@@ -476,9 +495,14 @@ mod tests {
 
     #[test]
     fn pool_counters_pairs_are_stable() {
-        let c = PoolCounters { rejoins: 3, result_ingress_bytes: 42, ..Default::default() };
+        let c = PoolCounters {
+            rejoins: 3,
+            result_ingress_bytes: 42,
+            partial_saved_tasks: 17,
+            ..Default::default()
+        };
         let pairs = c.to_pairs();
-        assert_eq!(pairs.len(), 23);
+        assert_eq!(pairs.len(), 25);
         // the sidecar keys CI asserts on must exist under these exact names
         for key in [
             "rejoins",
@@ -490,6 +514,8 @@ mod tests {
             "result_ingress_bytes",
             "binary_connections",
             "json_connections",
+            "partial_stops",
+            "partial_saved_tasks",
         ] {
             assert!(pairs.iter().any(|&(k, _)| k == key), "missing sidecar key {key}");
         }
@@ -497,6 +523,10 @@ mod tests {
         assert_eq!(
             pairs.iter().find(|&&(k, _)| k == "result_ingress_bytes").unwrap().1,
             42
+        );
+        assert_eq!(
+            pairs.iter().find(|&&(k, _)| k == "partial_saved_tasks").unwrap().1,
+            17
         );
     }
 

@@ -1221,6 +1221,11 @@ pub struct JobTally {
     pub broadcast_ship_bytes: u64,
     /// Bytes of accepted task-result frames attributed to this job.
     pub result_ingress_bytes: u64,
+    /// Grid cells this job's driver stopped early under `--partial`
+    /// (CI-tight stops plus slice-pruned cells).
+    pub partial_stops: u64,
+    /// Subsample tasks this job never dispatched because of those stops.
+    pub partial_saved_tasks: u64,
 }
 
 impl JobTally {
@@ -1232,6 +1237,8 @@ impl JobTally {
             ("broadcast_ships", self.broadcast_ships),
             ("broadcast_ship_bytes", self.broadcast_ship_bytes),
             ("result_ingress_bytes", self.result_ingress_bytes),
+            ("partial_stops", self.partial_stops),
+            ("partial_saved_tasks", self.partial_saved_tasks),
         ]
     }
 }
@@ -1418,6 +1425,11 @@ struct ClusterCore {
     /// each accepted `result`, including its newline; stale/superseded
     /// replies are not counted).
     result_ingress_bytes: AtomicU64,
+    /// Grid cells a driver stopped early under `--partial` (reported via
+    /// [`ComputeBackend::record_partial`]).
+    partial_stops: AtomicU64,
+    /// Subsample tasks never dispatched because of those stops.
+    partial_saved_tasks: AtomicU64,
     /// Per-job counter slices (see [`JobTally`]); entries are created on a
     /// job's first attributed event and live for the pool's lifetime (a
     /// daemon's `status`/`fetch` replies read them after the job ends).
@@ -1481,6 +1493,21 @@ impl ClusterCore {
             self.lock_job_tallies().iter().map(|(&j, &t)| (j, t)).collect();
         all.sort_unstable_by_key(|&(j, _)| j);
         all
+    }
+
+    /// Credit a driver's partial-evaluation tally to the pool counters and
+    /// to `job`'s slice (the driver calls this once per run, after the
+    /// grid sweep).
+    fn record_partial_for(&self, job: u64, stops: u64, saved_tasks: u64) {
+        if stops == 0 && saved_tasks == 0 {
+            return;
+        }
+        self.partial_stops.fetch_add(stops, Ordering::Relaxed);
+        self.partial_saved_tasks.fetch_add(saved_tasks, Ordering::Relaxed);
+        let mut tallies = self.lock_job_tallies();
+        let t = tallies.entry(job).or_default();
+        t.partial_stops += stops;
+        t.partial_saved_tasks += saved_tasks;
     }
 
     /// Whether task leases are tracked at all (either liveness knob set).
@@ -2790,6 +2817,8 @@ impl ClusterBackend {
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
             result_ingress_bytes: AtomicU64::new(0),
+            partial_stops: AtomicU64::new(0),
+            partial_saved_tasks: AtomicU64::new(0),
             job_tallies: Mutex::new(HashMap::new()),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),
@@ -2968,6 +2997,10 @@ impl ComputeBackend for JobBackend {
         // release only THIS job's refs: a co-tenant still computing
         // against a shared broadcast keeps it cached and shipped
         self.backend.core.evict_broadcast_ids_for_job(self.job, ids);
+    }
+
+    fn record_partial(&self, stops: u64, saved_tasks: u64) {
+        self.backend.core.record_partial_for(self.job, stops, saved_tasks);
     }
 
     fn run_counters(&self) -> PoolCounters {
@@ -3235,6 +3268,11 @@ impl ComputeBackend for ClusterBackend {
         self.core.evict_broadcast_ids(ids);
     }
 
+    fn record_partial(&self, stops: u64, saved_tasks: u64) {
+        // batch path: job 0, like every other ComputeBackend method here
+        self.core.record_partial_for(0, stops, saved_tasks);
+    }
+
     fn run_counters(&self) -> PoolCounters {
         let st = self.core.lock_state();
         PoolCounters {
@@ -3261,6 +3299,8 @@ impl ComputeBackend for ClusterBackend {
             corrupt_frames_detected: self.core.corrupt_frames.load(Ordering::Relaxed),
             exhausted_fallbacks: self.core.exhausted_fallbacks.load(Ordering::Relaxed),
             result_ingress_bytes: self.core.result_ingress_bytes.load(Ordering::Relaxed),
+            partial_stops: self.core.partial_stops.load(Ordering::Relaxed),
+            partial_saved_tasks: self.core.partial_saved_tasks.load(Ordering::Relaxed),
         }
     }
 
@@ -3616,6 +3656,13 @@ mod tests {
         assert_eq!(core.job_tally(7), JobTally::default(), "unknown job reads zero");
         let snap = core.job_tallies_snapshot();
         assert_eq!(snap.iter().map(|&(j, _)| j).collect::<Vec<_>>(), vec![1, 2]);
+        // a driver's partial tally lands on the pool atomics AND the job's
+        // slice; the all-zero call is a no-op that creates no entry
+        core.record_partial_for(1, 2, 40);
+        core.record_partial_for(9, 0, 0);
+        assert_eq!(core.partial_stops.load(Ordering::Relaxed), 2);
+        assert_eq!(core.partial_saved_tasks.load(Ordering::Relaxed), 40);
+        assert_eq!(core.job_tally(9), JobTally::default(), "zero tally creates nothing");
         let pairs = core.job_tally(1).to_pairs();
         assert_eq!(
             pairs,
@@ -3624,6 +3671,8 @@ mod tests {
                 ("broadcast_ships", 2),
                 ("broadcast_ship_bytes", 128),
                 ("result_ingress_bytes", 64),
+                ("partial_stops", 2),
+                ("partial_saved_tasks", 40),
             ]
         );
     }
@@ -3782,6 +3831,8 @@ mod tests {
             deadline_kills: AtomicU64::new(0),
             exhausted_fallbacks: AtomicU64::new(0),
             result_ingress_bytes: AtomicU64::new(0),
+            partial_stops: AtomicU64::new(0),
+            partial_saved_tasks: AtomicU64::new(0),
             job_tallies: Mutex::new(HashMap::new()),
             next_task: AtomicU64::new(1),
             next_serial: AtomicU64::new(1),

@@ -28,8 +28,22 @@ pub struct ConvergenceVerdict {
 ///
 /// `min_rho` is the skill floor (default 0.1 in callers) and `min_delta`
 /// the required improvement from Lmin to Lmax.
+///
+/// An empty slice (an (E, tau) slice fully pruned by partial evaluation)
+/// yields the all-zero non-causal verdict rather than panicking. A
+/// single-L slice can show no convergence *trend*, so it is never causal:
+/// its `delta` is necessarily 0, which would vacuously satisfy any
+/// `min_delta <= 0` threshold a caller relaxes to.
 pub fn assess(summaries: &[SkillSummary], min_rho: f64, min_delta: f64) -> ConvergenceVerdict {
-    assert!(!summaries.is_empty(), "no summaries to assess");
+    if summaries.is_empty() {
+        return ConvergenceVerdict {
+            rho_min_l: 0.0,
+            rho_max_l: 0.0,
+            delta: 0.0,
+            increasing: false,
+            causal: false,
+        };
+    }
     let mut by_l: Vec<&SkillSummary> = summaries.iter().collect();
     by_l.sort_by_key(|s| s.params.l);
     let rho_min_l = by_l.first().unwrap().mean_rho;
@@ -38,12 +52,16 @@ pub fn assess(summaries: &[SkillSummary], min_rho: f64, min_delta: f64) -> Conve
     // allow small dips (half a std-dev of the noisier end) between steps
     let tol = by_l.iter().map(|s| s.std_rho).fold(0.0f64, f64::max) * 0.5 + 1e-9;
     let increasing = by_l.windows(2).all(|w| w[1].mean_rho >= w[0].mean_rho - tol);
+    // convergence is a trend across library sizes: with fewer than two L
+    // values there is no trend, so the verdict cannot be causal (delta is
+    // exactly 0 there and must not pass a min_delta of 0 by equality)
+    let has_sweep = by_l.len() >= 2;
     ConvergenceVerdict {
         rho_min_l,
         rho_max_l,
         delta,
         increasing,
-        causal: rho_max_l >= min_rho && delta >= min_delta && increasing,
+        causal: has_sweep && rho_max_l >= min_rho && delta >= min_delta && increasing,
     }
 }
 
@@ -101,8 +119,22 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no summaries")]
-    fn empty_panics() {
-        assess(&[], 0.1, 0.05);
+    fn empty_is_non_causal_not_a_panic() {
+        // a fully pruned (E, tau) slice reaches assess with no summaries
+        let v = assess(&[], 0.1, 0.05);
+        assert!(!v.causal);
+        assert!(!v.increasing);
+        assert_eq!(v.delta, 0.0);
+        assert_eq!(v.rho_min_l, 0.0);
+        assert_eq!(v.rho_max_l, 0.0);
+    }
+
+    #[test]
+    fn single_l_cannot_be_causal_even_with_zero_min_delta() {
+        // delta == 0 for one L; a min_delta of 0 must not make it causal
+        let v = assess(&[summary(200, 0.9, 0.01)], 0.1, 0.0);
+        assert_eq!(v.delta, 0.0);
+        assert!(v.increasing, "a single point is vacuously non-decreasing");
+        assert!(!v.causal, "no L sweep means no convergence evidence");
     }
 }

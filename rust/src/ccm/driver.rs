@@ -17,6 +17,7 @@
 //! table (bit-identical skills, smaller ship cost in the DES model);
 //! [`TablePolicy::Full`] keeps the paper's `O(n^2)` layout.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -26,9 +27,9 @@ use crate::ccm::params::Scenario;
 use crate::ccm::pipeline::{
     ccm_transform_rdd, combine_shard_chunks, combine_shard_sums, sharded_agg_rdds,
     sharded_table_pipeline_mode, sharded_transform_rdds, table_pipeline_mode, table_transform_rdd,
-    CcmProblem, TableMode,
+    BoundedRho, CcmProblem, PartialSpec, TableMode,
 };
-use crate::ccm::result::SkillRow;
+use crate::ccm::result::{summarize, SkillRow, SkillSummary};
 use crate::ccm::subsample::draw_samples;
 use crate::ccm::table::DistanceTable;
 use crate::engine::{Context, Deploy, EngineConfig, ExecutionReport};
@@ -199,6 +200,8 @@ pub struct RunSpec<'a> {
     policy: TablePolicy,
     shards: usize,
     reduce: ReduceMode,
+    partial: Option<PartialSpec>,
+    cancel: Option<&'a AtomicBool>,
 }
 
 impl<'a> RunSpec<'a> {
@@ -215,6 +218,8 @@ impl<'a> RunSpec<'a> {
             policy: TablePolicy::default(),
             shards: 1,
             reduce: ReduceMode::default(),
+            partial: None,
+            cancel: None,
         }
     }
 
@@ -244,14 +249,69 @@ impl<'a> RunSpec<'a> {
         self
     }
 
+    /// Partial-evaluation contract (`--partial eps,conf`): stop dispatching
+    /// a grid cell's remaining subsample tasks once the cell's mean-rho
+    /// confidence interval at level `conf` has radius `<= eps`, and prune a
+    /// whole (E, tau) slice once its completed cells are statistically
+    /// decided non-convergent (see [`slice_decided`]). `None` (the default)
+    /// is the exact seed path — bit-identical skills.
+    pub fn partial(mut self, partial: Option<PartialSpec>) -> Self {
+        self.partial = partial;
+        self
+    }
+
+    /// Best-effort cancellation flag, checked at the partial-evaluation
+    /// checkpoints (every dispatch wave / A1 task). When it reads `true`
+    /// the run stops dispatching, keeps the skills harvested so far, and
+    /// reports [`PartialOutcome::cancelled`]. A flag that never fires does
+    /// not change the skills.
+    pub fn cancel_flag(mut self, flag: &'a AtomicBool) -> Self {
+        self.cancel = Some(flag);
+        self
+    }
+
     /// Execute on `backend`, pricing the configured deploy.
     pub fn run(self, backend: Arc<dyn ComputeBackend>) -> CaseReport {
         let case = self.case;
+        // the knob-off contract is structural: with neither a partial spec
+        // nor a cancel flag the seed code paths run untouched
+        if self.partial.is_none() && self.cancel.is_none() {
+            return match case {
+                Case::A1 => run_a1(self.scenario, self.effect, self.cause, backend),
+                _ => {
+                    let deploys = [self.deploy.clone()];
+                    let (skills, mut reports) = run_engine_case(
+                        case,
+                        self.scenario,
+                        self.effect,
+                        self.cause,
+                        &deploys,
+                        backend,
+                        self.policy,
+                        self.shards,
+                        self.reduce,
+                    );
+                    CaseReport {
+                        case,
+                        skills,
+                        report: reports.remove(0),
+                        partial: PartialOutcome::default(),
+                    }
+                }
+            };
+        }
         match case {
-            Case::A1 => run_a1(self.scenario, self.effect, self.cause, backend),
+            Case::A1 => run_a1_partial(
+                self.scenario,
+                self.effect,
+                self.cause,
+                backend,
+                self.partial,
+                self.cancel,
+            ),
             _ => {
                 let deploys = [self.deploy.clone()];
-                let (skills, mut reports) = run_engine_case(
+                let (skills, mut reports, outcome) = run_engine_case_partial(
                     case,
                     self.scenario,
                     self.effect,
@@ -261,8 +321,10 @@ impl<'a> RunSpec<'a> {
                     self.policy,
                     self.shards,
                     self.reduce,
+                    self.partial,
+                    self.cancel,
                 );
-                CaseReport { case, skills, report: reports.remove(0) }
+                CaseReport { case, skills, report: reports.remove(0), partial: outcome }
             }
         }
     }
@@ -276,6 +338,38 @@ impl<'a> RunSpec<'a> {
         deploys: &[Deploy],
         backend: Arc<dyn ComputeBackend>,
     ) -> (Vec<SkillRow>, Vec<ExecutionReport>) {
+        if self.partial.is_some() || self.cancel.is_some() {
+            return match self.case {
+                Case::A1 => {
+                    let rep = run_a1_partial(
+                        self.scenario,
+                        self.effect,
+                        self.cause,
+                        backend,
+                        self.partial,
+                        self.cancel,
+                    );
+                    let reports = deploys.iter().map(|_| rep.report.clone()).collect();
+                    (rep.skills, reports)
+                }
+                _ => {
+                    let (skills, reports, _) = run_engine_case_partial(
+                        self.case,
+                        self.scenario,
+                        self.effect,
+                        self.cause,
+                        deploys,
+                        backend,
+                        self.policy,
+                        self.shards,
+                        self.reduce,
+                        self.partial,
+                        self.cancel,
+                    );
+                    (skills, reports)
+                }
+            };
+        }
         match self.case {
             Case::A1 => {
                 let rep = run_a1(self.scenario, self.effect, self.cause, backend);
@@ -300,10 +394,45 @@ impl<'a> RunSpec<'a> {
 /// Outcome of one case run.
 pub struct CaseReport {
     pub case: Case,
-    /// Per-realization skills for every (E, tau, L) combination.
+    /// Per-realization skills for every (E, tau, L) combination. Under
+    /// `--partial` (or after a mid-run cancel) stopped cells carry only
+    /// the realizations dispatched before the stop.
     pub skills: Vec<SkillRow>,
     /// Measured + DES-simulated costs (for A1 the two coincide).
     pub report: ExecutionReport,
+    /// What partial evaluation did (all-zero/false when the knob was off
+    /// and no cancel fired).
+    pub partial: PartialOutcome,
+}
+
+/// Tally of what the partial-evaluation driver decided during one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PartialOutcome {
+    /// Grid cells stopped before their full subsample budget (CI-tight
+    /// stops plus cells pruned with their whole (E, tau) slice).
+    pub stops: u64,
+    /// Subsample tasks never dispatched because of those stops.
+    pub saved_tasks: u64,
+    /// True when a [`RunSpec::cancel_flag`] fired mid-run and the run
+    /// returned early with the skills harvested so far.
+    pub cancelled: bool,
+}
+
+/// True when the completed cells of one (E, tau) slice already decide the
+/// convergence verdict against causality, so the slice's remaining
+/// (larger-L) cells cannot flip it: with at least two completed cells,
+/// [`crate::ccm::convergence::assess`] at zero thresholds must report a
+/// broken monotone trend (`!increasing`) *and* a net skill **drop** from
+/// the smallest to the largest completed library of at least `eps` — the
+/// resolution the `--partial eps,conf` contract says the caller cares
+/// about. Future cells can only widen the noise tolerance, not un-break a
+/// drop that size, so dispatching them cannot produce a causal verdict.
+pub fn slice_decided(cells: &[SkillSummary], eps: f64) -> bool {
+    if cells.len() < 2 {
+        return false;
+    }
+    let v = crate::ccm::convergence::assess(cells, 0.0, 0.0);
+    !v.increasing && v.delta <= -eps
 }
 
 /// Canonical JSON dump of a skill set: rows sorted by (E, tau, L, sample)
@@ -352,6 +481,9 @@ pub struct JobSpec {
     pub shards: usize,
     /// Where the Pearson reduction runs.
     pub reduce: ReduceMode,
+    /// Partial-evaluation contract (`--partial eps,conf`); `None` (the
+    /// default) runs the exact batch path.
+    pub partial: Option<PartialSpec>,
 }
 
 impl JobSpec {
@@ -363,6 +495,7 @@ impl JobSpec {
             policy: TablePolicy::default(),
             shards: 1,
             reduce: ReduceMode::default(),
+            partial: None,
         }
     }
 
@@ -377,7 +510,7 @@ impl JobSpec {
             TablePolicy::Truncated(p) => Json::Num(p as f64),
         };
         let nums = |xs: &[usize]| Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect());
-        Json::obj(vec![
+        let mut pairs = vec![
             ("case", Json::Str(self.case.name().into())),
             ("policy", policy),
             ("reduce", Json::Str(self.reduce.name().into())),
@@ -395,7 +528,13 @@ impl JobSpec {
                     ("partitions", Json::Num(self.scenario.partitions as f64)),
                 ]),
             ),
-        ])
+        ];
+        if let Some(spec) = &self.partial {
+            // the CLI grammar, round-trip exact through Rust's
+            // shortest-roundtrip float formatting
+            pairs.push(("partial", Json::Str(format!("{},{}", spec.eps, spec.conf))));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse a `submit` spec. Strict on the scenario (every field
@@ -443,6 +582,13 @@ impl JobSpec {
             Some(v) => v.as_f64().map(|v| v as usize).ok_or("spec: bad `shards`")?,
             None => 1,
         };
+        let partial = match j.get("partial") {
+            None => None,
+            Some(Json::Str(s)) => {
+                Some(PartialSpec::parse(s).ok_or("spec: bad `partial` (want \"eps,conf\")")?)
+            }
+            Some(_) => return Err("spec: bad `partial` (want \"eps,conf\")".into()),
+        };
         let sc = j.get("scenario").ok_or("spec: missing `scenario`")?;
         let seed = sc
             .get("seed")
@@ -459,7 +605,7 @@ impl JobSpec {
             seed,
             partitions: num(sc, "partitions")?,
         };
-        Ok(JobSpec { case, scenario, policy, shards, reduce })
+        Ok(JobSpec { case, scenario, policy, shards, reduce, partial })
     }
 
     /// Execute on `backend`, regenerating the input series exactly as
@@ -467,15 +613,32 @@ impl JobSpec {
     /// pair) — the skills, and therefore the canonical [`skills_to_json`]
     /// dump, are byte-identical to the batch path.
     pub fn run(&self, backend: Arc<dyn ComputeBackend>) -> CaseReport {
+        self.run_with_cancel(backend, None)
+    }
+
+    /// Like [`JobSpec::run`], threading a best-effort cancellation flag
+    /// into the driver: the serve daemon sets it when a `cancel` arrives
+    /// for a *running* job, and the run returns early (with
+    /// [`PartialOutcome::cancelled`] set) at the next partial-evaluation
+    /// checkpoint.
+    pub fn run_with_cancel(
+        &self,
+        backend: Arc<dyn ComputeBackend>,
+        cancel: Option<&AtomicBool>,
+    ) -> CaseReport {
         let (x, y) = crate::timeseries::generators::coupled_logistic(
             self.scenario.series_len,
             crate::timeseries::generators::CoupledLogisticParams::default(),
         );
-        RunSpec::new(self.case, &self.scenario, &y, &x)
+        let mut spec = RunSpec::new(self.case, &self.scenario, &y, &x)
             .policy(self.policy)
             .shards(self.shards)
             .reduce(self.reduce)
-            .run(backend)
+            .partial(self.partial);
+        if let Some(flag) = cancel {
+            spec = spec.cancel_flag(flag);
+        }
+        spec.run(backend)
     }
 }
 
@@ -521,10 +684,101 @@ fn run_a1(
             sim_rejoin_ship_s: 0.0,
             sim_rejoin_ship_bytes: 0,
             sim_speculative_task_s: 0.0,
+            sim_partial_saved_task_s: 0.0,
             sim_result_ingress_bytes: 0,
             sim_concurrent_jobs: 1,
             topology: "single-thread".to_string(),
         },
+        partial: PartialOutcome::default(),
+    }
+}
+
+/// Case A1 under `--partial` and/or a cancel flag: the same sequential
+/// loop as [`run_a1`], with the full subsample budget always *drawn* (the
+/// master Rng stream — and therefore every later cell's draws — must match
+/// the full run exactly whatever this cell decides) but evaluation stopping
+/// early per cell once the [`BoundedRho`] interval is tight, per slice once
+/// [`slice_decided`], and everywhere once the cancel flag fires.
+fn run_a1_partial(
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    backend: Arc<dyn ComputeBackend>,
+    partial: Option<PartialSpec>,
+    cancel: Option<&AtomicBool>,
+) -> CaseReport {
+    let t = Instant::now();
+    let master = Rng::new(scenario.seed);
+    let mut skills = Vec::new();
+    let mut arena = TaskArena::new();
+    let mut outcome = PartialOutcome::default();
+    'grid: for &e in &scenario.es {
+        for &tau in &scenario.taus {
+            let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
+            let mut slice_cells: Vec<SkillSummary> = Vec::new();
+            let mut pruned = false;
+            for &l in &scenario.ls {
+                let params = crate::ccm::params::CcmParams::new(e, tau, l);
+                let samples = draw_samples(&master, params, problem.emb.n, scenario.r);
+                if pruned {
+                    outcome.stops += 1;
+                    outcome.saved_tasks += samples.len() as u64;
+                    continue;
+                }
+                let mut ev = BoundedRho::new();
+                let mut cell_rows = Vec::new();
+                let mut done = 0usize;
+                for sample in &samples {
+                    if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+                        outcome.cancelled = true;
+                        skills.extend(cell_rows);
+                        break 'grid;
+                    }
+                    let rho = backend.cross_map_into(&problem.input_for(sample), &mut arena);
+                    cell_rows.push(SkillRow { params, sample_id: sample.sample_id, rho });
+                    ev.observe(rho);
+                    done += 1;
+                    if done < samples.len()
+                        && partial.as_ref().is_some_and(|spec| ev.decided(spec))
+                    {
+                        outcome.stops += 1;
+                        outcome.saved_tasks += (samples.len() - done) as u64;
+                        break;
+                    }
+                }
+                slice_cells.extend(summarize(&cell_rows));
+                skills.extend(cell_rows);
+                if let Some(spec) = &partial {
+                    if slice_decided(&slice_cells, spec.eps) {
+                        pruned = true;
+                    }
+                }
+            }
+        }
+    }
+    backend.record_partial(outcome.stops, outcome.saved_tasks);
+    let wall = t.elapsed().as_secs_f64();
+    CaseReport {
+        case: Case::A1,
+        skills,
+        report: ExecutionReport {
+            measured_wall_s: wall,
+            total_task_s: wall,
+            sim_makespan_s: wall,
+            sim_utilization: 1.0,
+            sim_broadcast_ship_s: 0.0,
+            sim_broadcast_ship_bytes: 0,
+            sim_repair_ship_s: 0.0,
+            sim_repair_ship_bytes: 0,
+            sim_rejoin_ship_s: 0.0,
+            sim_rejoin_ship_bytes: 0,
+            sim_speculative_task_s: 0.0,
+            sim_partial_saved_task_s: 0.0,
+            sim_result_ingress_bytes: 0,
+            sim_concurrent_jobs: 1,
+            topology: "single-thread".to_string(),
+        },
+        partial: outcome,
     }
 }
 
@@ -731,6 +985,208 @@ fn run_engine_case(
     (skills, reports)
 }
 
+/// Cases A2–A5 under `--partial` and/or a cancel flag. A separate driver
+/// from [`run_engine_case`] on purpose: the seed path stays untouched, so
+/// the knob-off bit-identity contract holds structurally.
+///
+/// Partial evaluation needs results *before* deciding whether to dispatch
+/// more, so each cell's subsample budget is dispatched synchronously in
+/// **waves** (one task per partition per wave) instead of one bulk job —
+/// the asynchronous cases (A3/A5) degrade to this wave-synchronous
+/// schedule too. The full budget is always *drawn* per cell so the master
+/// Rng stream matches the full run exactly; stopping only skips dispatch.
+/// Harvested rhos feed a per-cell [`BoundedRho`] in sample-id order (the
+/// stop decision is deterministic for a fixed seed), a tight interval
+/// stops the cell, and [`slice_decided`] prunes the remaining cells of an
+/// (E, tau) slice outright. The cancel flag is checked at every wave
+/// boundary. Saved tasks are priced into `sim_partial_saved_task_s` at the
+/// mean measured task duration — exactly the DES
+/// `sim_partial_saved_tasks` formula, applied post-hoc because the saved
+/// tasks are absent from the replayed log.
+#[allow(clippy::too_many_arguments)]
+fn run_engine_case_partial(
+    case: Case,
+    scenario: &Scenario,
+    effect: &[f32],
+    cause: &[f32],
+    deploys: &[Deploy],
+    backend: Arc<dyn ComputeBackend>,
+    policy: TablePolicy,
+    shards: usize,
+    reduce: ReduceMode,
+    partial: Option<PartialSpec>,
+    cancel: Option<&AtomicBool>,
+) -> (Vec<SkillRow>, Vec<ExecutionReport>, PartialOutcome) {
+    let pricing = backend.wire_pricing();
+    let ctx = Context::new(
+        EngineConfig::new(deploys[0].clone())
+            .with_default_parallelism(scenario.partitions)
+            .with_wire_pricing(pricing),
+    );
+    let master = Rng::new(scenario.seed);
+    let mut skills = Vec::new();
+    let mut ingress: u64 = 0;
+    let mut outcome = PartialOutcome::default();
+    let min_l = scenario.ls.iter().copied().min().unwrap_or(1);
+    // one decision checkpoint per wave: enough samples to fill every
+    // partition with one task
+    let wave = scenario.partitions.max(1);
+    'grid: for &e in &scenario.es {
+        for &tau in &scenario.taus {
+            let problem = CcmProblem::new(effect, cause, e, tau, scenario.theiler as f32);
+            let n_manifold = problem.emb.n;
+            let size = problem.size_bytes();
+            let problem_b = ctx.broadcast(problem, size);
+            let mode = policy.mode_for(n_manifold, min_l);
+            let sharded_b =
+                if case.uses_table() && (shards > 1 || reduce == ReduceMode::Worker) {
+                    Some(sharded_table_pipeline_mode(
+                        &ctx,
+                        &problem_b,
+                        scenario.partitions,
+                        mode,
+                        shards.max(1),
+                    ))
+                } else {
+                    None
+                };
+            let table_b = if case.uses_table() && sharded_b.is_none() {
+                Some(table_pipeline_mode(&ctx, &problem_b, scenario.partitions, mode))
+            } else {
+                None
+            };
+            let mut bcast_ids = {
+                let p = problem_b.value();
+                vec![problem_wire_id(&p.emb.vecs, &p.targets, &p.times)]
+            };
+            if let Some(sharded) = &sharded_b {
+                bcast_ids.push(targets_wire_id(&problem_b.value().targets));
+                bcast_ids.extend(sharded.shards().iter().map(|b| b.value().wire_id()));
+            }
+            let mut slice_cells: Vec<SkillSummary> = Vec::new();
+            let mut pruned = false;
+            for &l in &scenario.ls {
+                let params = crate::ccm::params::CcmParams::new(e, tau, l);
+                let samples = draw_samples(&master, params, n_manifold, scenario.r);
+                let total = samples.len();
+                if pruned {
+                    outcome.stops += 1;
+                    outcome.saved_tasks += total as u64;
+                    continue;
+                }
+                let mut ev = BoundedRho::new();
+                let mut cell_rows: Vec<SkillRow> = Vec::new();
+                let mut next = 0usize;
+                while next < total {
+                    if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+                        outcome.cancelled = true;
+                        skills.extend(cell_rows);
+                        backend.evict_broadcasts(&bcast_ids);
+                        break 'grid;
+                    }
+                    let hi = (next + wave).min(total);
+                    let batch = samples[next..hi].to_vec();
+                    let parts = scenario.partitions.min(hi - next).max(1);
+                    let rdd = ctx.parallelize_with(batch, parts);
+                    let mut wave_rows: Vec<SkillRow> = if let Some(sharded) = &sharded_b {
+                        if reduce == ReduceMode::Worker {
+                            let mut sums = Vec::new();
+                            for sums_rdd in
+                                sharded_agg_rdds(&ctx, &rdd, &problem_b, sharded, Arc::clone(&backend))
+                            {
+                                sums.extend(ctx.collect(&sums_rdd));
+                            }
+                            ingress += pricing.bytes(sums.len() as u64 * SUMS_WIRE_BYTES);
+                            combine_shard_sums(sums, problem_b.value(), backend.as_ref())
+                        } else {
+                            let mut chunks = Vec::new();
+                            for chunk_rdd in sharded_transform_rdds(
+                                &ctx,
+                                &rdd,
+                                &problem_b,
+                                sharded,
+                                Arc::clone(&backend),
+                            ) {
+                                chunks.extend(ctx.collect(&chunk_rdd));
+                            }
+                            ingress += pricing.bytes(
+                                chunks
+                                    .iter()
+                                    .map(|c| c.preds.len() as u64 * PRED_WIRE_BYTES)
+                                    .sum::<u64>(),
+                            );
+                            combine_shard_chunks(chunks, problem_b.value())
+                        }
+                    } else {
+                        let skill_rdd = match &table_b {
+                            Some(table) => table_transform_rdd(
+                                &ctx,
+                                rdd,
+                                &problem_b,
+                                table,
+                                Arc::clone(&backend),
+                            ),
+                            None => ccm_transform_rdd(&ctx, rdd, &problem_b, Arc::clone(&backend)),
+                        };
+                        let got = ctx.collect(&skill_rdd);
+                        ingress += pricing.bytes(got.len() as u64 * ROW_WIRE_BYTES);
+                        got
+                    };
+                    // the evaluator's observation order is pinned to
+                    // sample-id order within the wave, whatever order the
+                    // backend returned rows in
+                    wave_rows.sort_by_key(|r| r.sample_id);
+                    for row in &wave_rows {
+                        ev.observe(row.rho);
+                    }
+                    cell_rows.extend(wave_rows);
+                    next = hi;
+                    if next < total && partial.as_ref().is_some_and(|spec| ev.decided(spec)) {
+                        outcome.stops += 1;
+                        outcome.saved_tasks += (total - next) as u64;
+                        break;
+                    }
+                }
+                slice_cells.extend(summarize(&cell_rows));
+                skills.extend(cell_rows);
+                if let Some(spec) = &partial {
+                    if slice_decided(&slice_cells, spec.eps) {
+                        pruned = true;
+                    }
+                }
+            }
+            if !outcome.cancelled {
+                backend.evict_broadcasts(&bcast_ids);
+            }
+        }
+    }
+    backend.record_partial(outcome.stops, outcome.saved_tasks);
+    // saved tasks are absent from the replayed log, so their DES price is
+    // applied post-hoc: the mean measured task duration per saved task —
+    // the same formula as `EngineConfig::sim_partial_saved_tasks`
+    let saved_task_s = if outcome.saved_tasks > 0 {
+        let tasks = ctx.events().tasks();
+        if tasks.is_empty() {
+            0.0
+        } else {
+            let mean = tasks.iter().map(|t| t.duration).sum::<f64>() / tasks.len() as f64;
+            outcome.saved_tasks as f64 * mean
+        }
+    } else {
+        0.0
+    };
+    let reports = deploys
+        .iter()
+        .map(|d| {
+            let mut report = ctx.report_for(d.clone());
+            report.sim_result_ingress_bytes = ingress;
+            report.sim_partial_saved_task_s = saved_task_s;
+            report
+        })
+        .collect();
+    (skills, reports, outcome)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -892,6 +1348,20 @@ mod tests {
         assert_eq!(d.policy, TablePolicy::TruncatedAuto);
         assert_eq!(d.shards, 1);
         assert_eq!(d.reduce, ReduceMode::Driver);
+        assert_eq!(d.partial, None, "absent `partial` must default off");
+        // a partial contract round-trips through the CLI grammar
+        let mut p = JobSpec::new(Case::A2, Scenario::smoke());
+        p.partial = PartialSpec::parse("0.05,0.95");
+        assert!(p.partial.is_some());
+        let back = JobSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.partial, p.partial);
+        assert_eq!(back.to_json().to_string(), p.to_json().to_string());
+        let bad = Json::obj(vec![
+            ("case", Json::Str("A2".into())),
+            ("partial", Json::Str("nope".into())),
+            ("scenario", j.get("scenario").unwrap().clone()),
+        ]);
+        assert!(JobSpec::from_json(&bad).unwrap_err().contains("partial"));
         let err = JobSpec::from_json(&Json::obj(vec![("case", Json::Str("A4".into()))]))
             .unwrap_err();
         assert!(err.contains("scenario"), "{err}");
@@ -1102,5 +1572,181 @@ mod tests {
             json.report.sim_broadcast_ship_bytes > bin.report.sim_broadcast_ship_bytes,
             "DES broadcast bytes must inflate on a JSON-pinned pool"
         );
+    }
+
+    fn cell_summary(l: usize, mean: f64, std: f64) -> SkillSummary {
+        use crate::ccm::params::CcmParams;
+        SkillSummary {
+            params: CcmParams::new(2, 1, l),
+            n: 50,
+            mean_rho: mean,
+            std_rho: std,
+            q05: mean - std,
+            q95: mean + std,
+        }
+    }
+
+    #[test]
+    fn slice_decided_prunes_only_statistically_dead_slices() {
+        // too few cells: never decided
+        assert!(!slice_decided(&[], 0.05));
+        assert!(!slice_decided(&[cell_summary(50, 0.5, 0.01)], 0.05));
+        // a healthy increasing trend is not pruned
+        let rising = [cell_summary(50, 0.3, 0.01), cell_summary(100, 0.6, 0.01)];
+        assert!(!slice_decided(&rising, 0.05));
+        // a clear drop beyond eps is decided non-causal
+        let falling = [cell_summary(50, 0.6, 0.01), cell_summary(100, 0.3, 0.01)];
+        assert!(slice_decided(&falling, 0.05));
+        // the same drop inside eps is NOT decided — resolution matters
+        assert!(!slice_decided(&falling, 0.5));
+        // a flat trend (delta ~ 0) is not a decided drop
+        let flat = [cell_summary(50, 0.5, 0.05), cell_summary(100, 0.5, 0.05)];
+        assert!(!slice_decided(&flat, 0.05));
+    }
+
+    #[test]
+    fn unfired_cancel_flag_keeps_every_case_byte_identical() {
+        use std::sync::atomic::AtomicBool;
+        // a cancel flag that never fires routes every case through the
+        // partial-capable driver (wave dispatch for the engine cases) with
+        // no spec — the dump must stay byte-identical to the seed path
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let flag = AtomicBool::new(false);
+        for case in Case::ALL {
+            let plain = RunSpec::new(case, &scenario, &y, &x).run(Arc::clone(&backend));
+            let waved = RunSpec::new(case, &scenario, &y, &x)
+                .cancel_flag(&flag)
+                .run(Arc::clone(&backend));
+            assert_eq!(
+                skills_to_json(&waved.skills).to_string(),
+                skills_to_json(&plain.skills).to_string(),
+                "{case:?}: wave dispatch with no partial spec must be byte-identical"
+            );
+            assert_eq!(waved.partial, PartialOutcome::default(), "{case:?}: nothing to report");
+        }
+        // sharded + worker-reduce goes through the same wave machinery
+        let plain = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .shards(2)
+            .reduce(ReduceMode::Worker)
+            .run(Arc::clone(&backend));
+        let waved = RunSpec::new(Case::A4, &scenario, &y, &x)
+            .shards(2)
+            .reduce(ReduceMode::Worker)
+            .cancel_flag(&flag)
+            .run(Arc::clone(&backend));
+        assert_eq!(
+            skills_to_json(&waved.skills).to_string(),
+            skills_to_json(&plain.skills).to_string(),
+            "sharded worker-reduce wave dispatch must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn pre_fired_cancel_flag_stops_before_any_dispatch() {
+        use std::sync::atomic::AtomicBool;
+        let (x, y) = series();
+        let scenario = Scenario::smoke();
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let flag = AtomicBool::new(true);
+        for case in [Case::A1, Case::A2, Case::A4] {
+            let rep = RunSpec::new(case, &scenario, &y, &x)
+                .cancel_flag(&flag)
+                .run(Arc::clone(&backend));
+            assert!(rep.partial.cancelled, "{case:?}: cancel must be reported");
+            assert!(rep.skills.is_empty(), "{case:?}: nothing dispatched after cancel");
+        }
+    }
+
+    /// The weak-coupling scenario the partial tests share: the y -> x
+    /// direction of the coupled-logistic pair (bxy = 0.02, an order of
+    /// magnitude below the x -> y coupling), with a subsample budget big
+    /// enough that a tight confidence interval arrives well before the
+    /// budget runs out.
+    fn weak_scenario() -> Scenario {
+        Scenario {
+            series_len: 300,
+            r: 48,
+            ls: vec![50, 100],
+            es: vec![2],
+            taus: vec![1],
+            theiler: 0,
+            seed: 7,
+            partitions: 4,
+        }
+    }
+
+    fn mean_by_cell(rows: &[SkillRow]) -> std::collections::BTreeMap<(usize, usize, usize), f64> {
+        let mut acc: std::collections::BTreeMap<(usize, usize, usize), (f64, u64)> =
+            std::collections::BTreeMap::new();
+        for r in rows {
+            let e = acc.entry((r.params.e, r.params.tau, r.params.l)).or_insert((0.0, 0));
+            e.0 += r.rho as f64;
+            e.1 += 1;
+        }
+        acc.into_iter().map(|(k, (s, n))| (k, s / n as f64)).collect()
+    }
+
+    #[test]
+    fn weak_coupling_partial_saves_tasks_within_eps() {
+        let scenario = weak_scenario();
+        let (x, y) = coupled_logistic(scenario.series_len, CoupledLogisticParams::default());
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let spec = PartialSpec::parse("0.2,0.9").unwrap();
+        for case in [Case::A1, Case::A2, Case::A4] {
+            // weak direction: cross-map the cause y from effect x's manifold
+            let full = RunSpec::new(case, &scenario, &x, &y).run(Arc::clone(&backend));
+            let part = RunSpec::new(case, &scenario, &x, &y)
+                .partial(Some(spec))
+                .run(Arc::clone(&backend));
+            assert!(part.partial.stops >= 1, "{case:?}: expected at least one early stop");
+            assert!(part.partial.saved_tasks > 0, "{case:?}: expected saved tasks");
+            assert!(!part.partial.cancelled);
+            let total = (scenario.combos().len() * scenario.r) as u64;
+            assert_eq!(
+                part.skills.len() as u64 + part.partial.saved_tasks,
+                total,
+                "{case:?}: every budgeted task is either dispatched or saved"
+            );
+            // the bounded-error contract: every partially-evaluated cell's
+            // mean stays within eps of the full run's mean
+            let full_means = mean_by_cell(&full.skills);
+            for (cell, mean) in mean_by_cell(&part.skills) {
+                let full_mean = full_means[&cell];
+                assert!(
+                    (mean - full_mean).abs() <= spec.eps,
+                    "{case:?} {cell:?}: partial mean {mean} vs full {full_mean} exceeds eps"
+                );
+            }
+            if case != Case::A1 {
+                assert!(
+                    part.report.sim_partial_saved_task_s > 0.0,
+                    "{case:?}: saved tasks must be priced into the DES report"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_stop_decisions_are_deterministic() {
+        let scenario = weak_scenario();
+        let (x, y) = coupled_logistic(scenario.series_len, CoupledLogisticParams::default());
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let spec = PartialSpec::parse("0.2,0.9").unwrap();
+        for case in [Case::A1, Case::A4] {
+            let a = RunSpec::new(case, &scenario, &x, &y)
+                .partial(Some(spec))
+                .run(Arc::clone(&backend));
+            let b = RunSpec::new(case, &scenario, &x, &y)
+                .partial(Some(spec))
+                .run(Arc::clone(&backend));
+            assert_eq!(
+                skills_to_json(&a.skills).to_string(),
+                skills_to_json(&b.skills).to_string(),
+                "{case:?}: identical seeds must dispatch identical tasks"
+            );
+            assert_eq!(a.partial, b.partial, "{case:?}: identical stop decisions");
+        }
     }
 }

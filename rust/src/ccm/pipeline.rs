@@ -379,7 +379,7 @@ pub struct PearsonSums {
 
 /// Compensated (Kahan) f64 accumulator — private to [`PearsonSums`]; the
 /// compensation term never crosses an API boundary.
-#[derive(Clone, Copy, Default)]
+#[derive(Clone, Copy, Debug, Default)]
 struct Kahan {
     sum: f64,
     c: f64,
@@ -631,6 +631,173 @@ pub fn table_transform_rdd(
                 })
                 .collect()
         })
+}
+
+/// Minimum observed realizations before a [`BoundedRho`] interval may
+/// decide a cell — below this the normal approximation for the mean of
+/// per-subsample rho is not trustworthy, whatever the variance estimate
+/// says (and n=1 has no variance estimate at all).
+pub const MIN_PARTIAL_OBS: u64 = 8;
+
+/// The `--partial eps,conf` knob: stop dispatching a grid cell's remaining
+/// subsample tasks once the confidence interval around its mean rho is
+/// within `eps` half-width at confidence `conf`.
+///
+/// This is the CCM-shaped port of Spark's partial-result machinery
+/// (`ApproximateEvaluator` / `PartialResult` / `BoundedDouble`): the
+/// driver evaluates results as they arrive and trades a bounded error for
+/// skipped tasks. With the knob unset, the driver never consults an
+/// evaluator and results are bit-identical to the full run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartialSpec {
+    /// Maximum acceptable confidence-interval half-width on mean rho.
+    pub eps: f64,
+    /// Two-sided confidence level in (0, 1), e.g. 0.95.
+    pub conf: f64,
+}
+
+impl PartialSpec {
+    /// Parse the CLI grammar `eps,conf` (e.g. `0.05,0.95`). Both numbers
+    /// must be finite, `eps > 0`, and `conf` strictly inside (0, 1).
+    pub fn parse(text: &str) -> Option<PartialSpec> {
+        let (eps_s, conf_s) = text.split_once(',')?;
+        let eps: f64 = eps_s.trim().parse().ok()?;
+        let conf: f64 = conf_s.trim().parse().ok()?;
+        if !eps.is_finite() || eps <= 0.0 || !conf.is_finite() || conf <= 0.0 || conf >= 1.0 {
+            return None;
+        }
+        Some(PartialSpec { eps, conf })
+    }
+
+    /// Two-sided critical value: the standard-normal quantile at
+    /// `(1 + conf) / 2` (e.g. conf 0.95 -> z ~ 1.96).
+    pub fn z(&self) -> f64 {
+        normal_quantile((1.0 + self.conf) / 2.0)
+    }
+}
+
+/// Inverse standard-normal CDF (the quantile function), via Acklam's
+/// rational approximation — relative error below 1.15e-9 over (0, 1),
+/// far tighter than anything the rho-variance estimate feeding it can
+/// resolve. Hand-rolled because the build is dependency-free.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile needs p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        // lower tail
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        // central region
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        // upper tail, by symmetry
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+/// Streaming evaluator for one grid cell's mean rho — the `BoundedDouble`
+/// of this engine's partial-result machinery. Per-subsample rho values are
+/// folded in as their tasks are harvested (Kahan-compensated count / sum /
+/// sum-of-squares, same discipline as [`PearsonSums`]); the driver asks
+/// [`BoundedRho::decided`] between waves whether the confidence interval
+/// has tightened inside the [`PartialSpec`]'s eps.
+///
+/// Accumulation order is the driver's harvest order, which the partial
+/// driver fixes (sample-id order within each wave) — so identical seeds
+/// produce identical intervals and identical stop decisions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BoundedRho {
+    n: u64,
+    sum: Kahan,
+    sumsq: Kahan,
+}
+
+impl BoundedRho {
+    pub fn new() -> BoundedRho {
+        BoundedRho::default()
+    }
+
+    /// Fold in one realization's skill.
+    pub fn observe(&mut self, rho: f32) {
+        let x = rho as f64;
+        self.n += 1;
+        self.sum.add(x);
+        self.sumsq.add(x * x);
+    }
+
+    /// Realizations observed so far.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean rho (0 with no observations).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum.sum / self.n as f64
+        }
+    }
+
+    /// Standard error of the mean, from the sample (n-1) variance.
+    /// 0 until two observations exist.
+    pub fn stderr(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let var = (self.sumsq.sum - self.sum.sum * self.sum.sum / n) / (n - 1.0);
+        // compensated or not, cancellation can leave a tiny negative
+        (var.max(0.0) / n).sqrt()
+    }
+
+    /// Confidence-interval half-width at critical value `z`.
+    pub fn radius(&self, z: f64) -> f64 {
+        z * self.stderr()
+    }
+
+    /// Whether the interval is tight enough to stop the cell: at least
+    /// [`MIN_PARTIAL_OBS`] realizations observed and the half-width at the
+    /// spec's confidence level is within its eps.
+    pub fn decided(&self, spec: &PartialSpec) -> bool {
+        self.n >= MIN_PARTIAL_OBS && self.radius(spec.z()) <= spec.eps
+    }
 }
 
 #[cfg(test)]
@@ -1024,6 +1191,96 @@ mod tests {
             combine_shard_sums(vec![c0, c1, c1], prob, &backend)
         }));
         assert!(dup.is_err(), "duplicate shard partial must panic");
+    }
+
+    #[test]
+    fn partial_spec_parses_the_cli_grammar_and_rejects_garbage() {
+        assert_eq!(
+            PartialSpec::parse("0.05,0.95"),
+            Some(PartialSpec { eps: 0.05, conf: 0.95 })
+        );
+        assert_eq!(
+            PartialSpec::parse(" 0.1 , 0.9 "),
+            Some(PartialSpec { eps: 0.1, conf: 0.9 })
+        );
+        for bad in ["", "0.05", "0.05;0.95", "0,0.95", "-1,0.95", "0.05,0", "0.05,1", "0.05,1.5", "x,y", "0.05,0.95,3"] {
+            assert!(PartialSpec::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn normal_quantile_matches_known_critical_values() {
+        // the textbook two-sided critical values
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-5);
+        assert!((normal_quantile(0.95) - 1.644854).abs() < 1e-5);
+        assert!((normal_quantile(0.995) - 2.575829).abs() < 1e-5);
+        assert_eq!(normal_quantile(0.5), 0.0);
+        // symmetry, including through the tail branches
+        for p in [0.001, 0.01, 0.3, 0.7, 0.99, 0.999] {
+            assert!(
+                (normal_quantile(p) + normal_quantile(1.0 - p)).abs() < 1e-9,
+                "asymmetric at {p}"
+            );
+        }
+        // monotone across the branch joins
+        let mut last = f64::NEG_INFINITY;
+        for i in 1..1000 {
+            let q = normal_quantile(i as f64 / 1000.0);
+            assert!(q > last);
+            last = q;
+        }
+    }
+
+    #[test]
+    fn bounded_rho_tightens_and_decides() {
+        let spec = PartialSpec { eps: 0.05, conf: 0.95 };
+        let mut ev = BoundedRho::new();
+        assert_eq!(ev.mean(), 0.0);
+        assert_eq!(ev.stderr(), 0.0);
+        assert!(!ev.decided(&spec), "empty evaluator must not decide");
+        ev.observe(0.8);
+        assert!((ev.mean() - 0.8f32 as f64).abs() < 1e-12);
+        assert!(!ev.decided(&spec), "one observation has no variance estimate");
+        // identical low-variance observations: decided once past the floor
+        for i in 1..MIN_PARTIAL_OBS {
+            ev.observe(if i % 2 == 0 { 0.80 } else { 0.81 });
+            if i + 1 < MIN_PARTIAL_OBS {
+                assert!(!ev.decided(&spec), "below MIN_PARTIAL_OBS at n={}", i + 1);
+            }
+        }
+        assert_eq!(ev.n(), MIN_PARTIAL_OBS);
+        assert!(ev.decided(&spec), "tight cluster of rho must decide at the floor");
+        assert!(ev.radius(spec.z()) <= spec.eps);
+
+        // wildly scattered observations must NOT decide at the floor
+        let mut noisy = BoundedRho::new();
+        for i in 0..MIN_PARTIAL_OBS {
+            noisy.observe(if i % 2 == 0 { 0.1 } else { 0.9 });
+        }
+        assert!(!noisy.decided(&spec), "scattered rho must keep the cell running");
+        assert!(noisy.radius(spec.z()) > spec.eps);
+    }
+
+    #[test]
+    fn bounded_rho_mean_tracks_plain_mean() {
+        let rhos: Vec<f32> = (0..40).map(|i| 0.5 + 0.01 * (i % 7) as f32).collect();
+        let mut ev = BoundedRho::new();
+        for &r in &rhos {
+            ev.observe(r);
+        }
+        let plain: f64 = rhos.iter().map(|&r| r as f64).sum::<f64>() / rhos.len() as f64;
+        assert!((ev.mean() - plain).abs() < 1e-12);
+        // stderr agrees with the direct (n-1) formula
+        let var: f64 = rhos
+            .iter()
+            .map(|&r| {
+                let d = r as f64 - plain;
+                d * d
+            })
+            .sum::<f64>()
+            / (rhos.len() as f64 - 1.0);
+        let want = (var / rhos.len() as f64).sqrt();
+        assert!((ev.stderr() - want).abs() < 1e-12, "{} vs {}", ev.stderr(), want);
     }
 
     #[test]

@@ -33,15 +33,29 @@
 //! | client sends                         | daemon replies                                          |
 //! |--------------------------------------|---------------------------------------------------------|
 //! | `{"spec":{...},"type":"submit"}`     | `{"job":N,"state":"queued","type":"submitted"}`         |
-//! | `{"job":N,"type":"status"}`          | `{"counters":{...},"job":N,"state":S,"type":"status"}`  |
+//! | `{"job":N,"type":"status"}`          | `{"cancelled_running":B,"counters":{...},"job":N,"state":S,"type":"status"}` |
 //! | `{"job":N,"type":"fetch"}`           | `{"job":N,"skills":"...","state":"done","type":"result"}` |
-//! | `{"job":N,"type":"cancel"}`          | `{"job":N,"state":"cancelled","type":"cancelled"}`      |
+//! | `{"job":N,"type":"cancel"}`          | `{"job":N,"state":"cancelled"|"cancelling","type":"cancelled"}` |
 //! | `{"type":"shutdown"}`                | `{"type":"shutdown_ack"}`, then the daemon drains       |
 //!
 //! Any failure is `{"msg":"...","type":"error"}` (plus `"job"` when one
 //! was named). `status.counters` is the job's live [`JobTally`] slice —
 //! summed across jobs it equals the pool totals, so cross-tenant counter
 //! bleed is structurally visible to clients.
+//!
+//! # Cancel semantics
+//!
+//! Cancelling a **queued** job is immediate and exact: the entry flips to
+//! `cancelled` and is never admitted. Cancelling a **running** job is
+//! *best-effort*: the daemon sets the job's cancel flag and replies
+//! `"state":"cancelling"`; the driver observes the flag at its next
+//! partial-evaluation checkpoint (every dispatch wave / A1 task), stops
+//! dispatching, and the job settles `cancelled` with
+//! `"cancelled_running":true` in `status`. A run that completes before
+//! the flag is observed settles `done` — the cancel was simply too late,
+//! and the result is fetchable as normal. Cancelling a terminal job is an
+//! error (`done`/`failed`), except re-cancelling a cancelled job, which is
+//! an idempotent success.
 //!
 //! # Determinism
 //!
@@ -107,7 +121,9 @@ pub enum JobState {
     Done,
     /// The run panicked or errored; `status` carries the message.
     Failed,
-    /// Cancelled while still queued (running jobs cannot be cancelled).
+    /// Cancelled: immediately while still queued, or best-effort while
+    /// running (the driver stopped at a partial-evaluation checkpoint —
+    /// `status` reports `cancelled_running:true` for that flavour).
     Cancelled,
 }
 
@@ -129,6 +145,29 @@ impl JobState {
     }
 }
 
+/// Outcome of a `cancel` request (the `state` field of the wire reply).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was still queued (or already cancelled): terminally
+    /// `Cancelled` right now, exactly.
+    Cancelled,
+    /// The job was running: its cancel flag is set and the driver stops
+    /// best-effort at its next partial-evaluation checkpoint. The job
+    /// settles `Cancelled` (with `cancelled_running` in `status`) unless
+    /// the run finishes first, in which case it settles `Done`.
+    Cancelling,
+}
+
+impl CancelOutcome {
+    /// The wire name (`cancelled` reply's `state`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CancelOutcome::Cancelled => "cancelled",
+            CancelOutcome::Cancelling => "cancelling",
+        }
+    }
+}
+
 struct JobEntry {
     spec: JobSpec,
     state: JobState,
@@ -136,6 +175,12 @@ struct JobEntry {
     result: Option<String>,
     /// The failure message (set when `Failed`).
     error: Option<String>,
+    /// Best-effort cancel flag, shared with the job's runner thread; the
+    /// driver polls it at every partial-evaluation checkpoint.
+    cancel: Arc<AtomicBool>,
+    /// Whether this job was cancelled *while running* (as opposed to the
+    /// exact queued-cancel path) — surfaced in `status`.
+    cancelled_running: bool,
 }
 
 struct TrackerState {
@@ -187,7 +232,14 @@ impl JobTracker {
         st.next_id += 1;
         st.jobs.insert(
             id,
-            JobEntry { spec, state: JobState::Queued, result: None, error: None },
+            JobEntry {
+                spec,
+                state: JobState::Queued,
+                result: None,
+                error: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+                cancelled_running: false,
+            },
         );
         st.queue.push_back(id);
         JobId(id)
@@ -236,10 +288,14 @@ impl JobTracker {
         self.settle(id, JobState::Failed, None, Some(err));
     }
 
-    /// Cancel a still-queued job. Cancelling an already-cancelled job is
-    /// an idempotent success; a running or finished job is an error (the
-    /// pool gives no safe way to claw back in-flight tasks).
-    pub fn cancel(&self, id: JobId) -> Result<JobState, String> {
+    /// Cancel a job. A queued job flips to `Cancelled` immediately and is
+    /// never admitted. A running job cancels *best-effort*: its cancel
+    /// flag is set ([`CancelOutcome::Cancelling`]) and the driver stops
+    /// at its next partial-evaluation checkpoint — unless the run
+    /// finishes first, in which case the job settles `Done` as normal.
+    /// Cancelling an already-cancelled job is an idempotent success;
+    /// `Done`/`Failed` are errors (nothing left to stop).
+    pub fn cancel(&self, id: JobId) -> Result<CancelOutcome, String> {
         let mut st = self.lock();
         let Some(entry) = st.jobs.get_mut(&id.0) else {
             return Err(format!("unknown job {}", id.0));
@@ -247,11 +303,34 @@ impl JobTracker {
         match entry.state {
             JobState::Queued => {
                 entry.state = JobState::Cancelled;
-                Ok(JobState::Cancelled)
+                Ok(CancelOutcome::Cancelled)
             }
-            JobState::Cancelled => Ok(JobState::Cancelled),
-            state => Err(format!("{id} is {}; only queued jobs can be cancelled", state.name())),
+            JobState::Running => {
+                entry.cancel.store(true, Ordering::Relaxed);
+                Ok(CancelOutcome::Cancelling)
+            }
+            JobState::Cancelled => Ok(CancelOutcome::Cancelled),
+            state => Err(format!("{id} is {}; there is nothing left to cancel", state.name())),
         }
+    }
+
+    /// The job's shared cancel flag (what a runner threads into
+    /// [`JobSpec::run_with_cancel`]); `None` for an unknown job.
+    pub fn cancel_flag(&self, id: JobId) -> Option<Arc<AtomicBool>> {
+        self.lock().jobs.get(&id.0).map(|e| Arc::clone(&e.cancel))
+    }
+
+    /// A runner observed the cancel flag and returned early: the job
+    /// settles `Cancelled` with `cancelled_running` visible in `status`.
+    pub fn cancelled_while_running(&self, id: JobId) {
+        let mut st = self.lock();
+        if let Some(entry) = st.jobs.get_mut(&id.0) {
+            debug_assert_eq!(entry.state, JobState::Running, "{id} settled twice");
+            entry.state = JobState::Cancelled;
+            entry.cancelled_running = true;
+        }
+        st.running = st.running.saturating_sub(1);
+        st.lifecycle.note_job_end(Instant::now());
     }
 
     /// Current state of `id` (`None` for an unknown job).
@@ -259,9 +338,10 @@ impl JobTracker {
         self.lock().jobs.get(&id.0).map(|e| e.state)
     }
 
-    /// State plus the failure message, for the `status` reply.
-    pub fn status(&self, id: JobId) -> Option<(JobState, Option<String>)> {
-        self.lock().jobs.get(&id.0).map(|e| (e.state, e.error.clone()))
+    /// State, failure message, and the cancelled-while-running marker,
+    /// for the `status` reply.
+    pub fn status(&self, id: JobId) -> Option<(JobState, Option<String>, bool)> {
+        self.lock().jobs.get(&id.0).map(|e| (e.state, e.error.clone(), e.cancelled_running))
     }
 
     /// The canonical skills dump of a `Done` job; every other state is a
@@ -505,11 +585,14 @@ fn pump(ctx: &Arc<ServeCtx>) {
 
 fn run_job(ctx: Arc<ServeCtx>, id: JobId, spec: JobSpec) {
     let backend = ctx.pool.backend_for(id.0);
+    let cancel = ctx.tracker.cancel_flag(id);
     // a panicking job (task exhaustion under --on-exhausted abort, a bad
     // spec tripping an assert) must fail ITS job, not the daemon
-    let outcome =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| spec.run(backend)));
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        spec.run_with_cancel(backend, cancel.as_deref())
+    }));
     match outcome {
+        Ok(report) if report.partial.cancelled => ctx.tracker.cancelled_while_running(id),
         Ok(report) => ctx.tracker.finish(id, skills_to_json(&report.skills).to_string()),
         Err(panic) => ctx.tracker.fail(id, panic_message(panic)),
     }
@@ -662,12 +745,13 @@ fn on_status(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
     };
     match ctx.tracker.status(JobId(job)) {
         None => error_reply(Some(job), format!("unknown job {job}")),
-        Some((state, error)) => {
+        Some((state, error, cancelled_running)) => {
             let tally = ctx.pool.tally_for(job);
             let counters = Json::obj(
                 tally.to_pairs().into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect(),
             );
             let mut fields = vec![
+                ("cancelled_running", Json::Bool(cancelled_running)),
                 ("counters", counters),
                 ("job", Json::Num(job as f64)),
                 ("state", Json::Str(state.name().into())),
@@ -701,9 +785,9 @@ fn on_cancel(ctx: &Arc<ServeCtx>, msg: &Json) -> Json {
         return error_reply(None, "cancel carries no `job`".to_string());
     };
     match ctx.tracker.cancel(JobId(job)) {
-        Ok(state) => Json::obj(vec![
+        Ok(outcome) => Json::obj(vec![
             ("job", Json::Num(job as f64)),
-            ("state", Json::Str(state.name().into())),
+            ("state", Json::Str(outcome.name().into())),
             ("type", Json::Str("cancelled".into())),
         ]),
         Err(e) => error_reply(Some(job), e),
@@ -851,7 +935,10 @@ impl JobClient {
             .ok_or_else(|| invalid_data(format!("result reply carries no skills: {reply}")))
     }
 
-    /// Cancel a queued job; returns the resulting state name.
+    /// Cancel a job; returns the outcome name — `"cancelled"` for a
+    /// queued (or already-cancelled) job, `"cancelling"` for a running
+    /// one whose driver will stop best-effort at its next
+    /// partial-evaluation checkpoint.
     pub fn cancel(&mut self, job: u64) -> io::Result<String> {
         let reply = self.expect(
             &Json::obj(vec![("job", Json::Num(job as f64)), ("type", Json::Str("cancel".into()))]),
@@ -916,9 +1003,10 @@ mod tests {
         assert_eq!(second, b, "FIFO continues");
         tracker.fail(b, "boom".to_string());
         assert_eq!(tracker.state(b), Some(JobState::Failed));
-        let (state, err) = tracker.status(b).unwrap();
+        let (state, err, cancelled_running) = tracker.status(b).unwrap();
         assert_eq!(state, JobState::Failed);
         assert_eq!(err.as_deref(), Some("boom"));
+        assert!(!cancelled_running);
         assert!(tracker.fetch(b).unwrap_err().contains("boom"));
         let (third, _) = tracker.admit().expect("last job");
         assert_eq!(third, c);
@@ -937,29 +1025,50 @@ mod tests {
     }
 
     #[test]
-    fn tracker_cancel_is_queued_only_and_idempotent() {
+    fn tracker_cancels_queued_exactly_and_running_best_effort() {
         let tracker = JobTracker::new(1);
         let a = tracker.submit(spec(Case::A1));
         let b = tracker.submit(spec(Case::A2));
         let (running, _) = tracker.admit().unwrap();
         assert_eq!(running, a);
-        // running: refused by name
-        let err = tracker.cancel(a).unwrap_err();
-        assert!(err.contains("running"), "{err}");
-        // queued: cancelled, and admit skips it
-        assert_eq!(tracker.cancel(b), Ok(JobState::Cancelled));
-        assert_eq!(tracker.cancel(b), Ok(JobState::Cancelled), "idempotent");
+        // running: best-effort — the flag flips, the state stays Running
+        assert!(!tracker.cancel_flag(a).unwrap().load(Ordering::Relaxed));
+        assert_eq!(tracker.cancel(a), Ok(CancelOutcome::Cancelling));
+        assert!(tracker.cancel_flag(a).unwrap().load(Ordering::Relaxed));
+        assert_eq!(tracker.state(a), Some(JobState::Running));
+        assert_eq!(tracker.cancel(a), Ok(CancelOutcome::Cancelling), "re-cancel re-signals");
+        // queued: cancelled exactly, and admit skips it
+        assert_eq!(tracker.cancel(b), Ok(CancelOutcome::Cancelled));
+        assert_eq!(tracker.cancel(b), Ok(CancelOutcome::Cancelled), "idempotent");
         assert_eq!(tracker.state(b), Some(JobState::Cancelled));
-        tracker.finish(a, "{}".to_string());
+        let (_, _, b_running_cancel) = tracker.status(b).unwrap();
+        assert!(!b_running_cancel, "queued cancel is not a running cancel");
+        // the runner observes a's flag and settles it
+        tracker.cancelled_while_running(a);
+        assert_eq!(tracker.state(a), Some(JobState::Cancelled));
+        let (state, err, cancelled_running) = tracker.status(a).unwrap();
+        assert_eq!((state, err), (JobState::Cancelled, None));
+        assert!(cancelled_running, "status distinguishes the running-cancel flavour");
         assert!(tracker.admit().is_none(), "cancelled jobs are never admitted");
         assert!(tracker.idle());
-        // terminal states refuse
-        let err = tracker.cancel(a).unwrap_err();
+        // terminal cancels: cancelled is idempotent, done/failed refuse
+        assert_eq!(tracker.cancel(a), Ok(CancelOutcome::Cancelled));
+        let c = tracker.submit(spec(Case::A4));
+        let (admitted, _) = tracker.admit().unwrap();
+        assert_eq!(admitted, c);
+        tracker.finish(c, "{}".to_string());
+        let err = tracker.cancel(c).unwrap_err();
         assert!(err.contains("done"), "{err}");
         assert!(tracker.cancel(JobId(99)).unwrap_err().contains("unknown job"));
         // fetch of a cancelled job points at the state
+        assert!(tracker.fetch(a).unwrap_err().contains("cancelled"));
         assert!(tracker.fetch(b).unwrap_err().contains("cancelled"));
-        assert_eq!(tracker.jobs_served(), 1, "cancelled-in-queue never ran");
+        assert_eq!(
+            tracker.jobs_served(),
+            2,
+            "a ran (then cancelled) and c ran; cancelled-in-queue b never did"
+        );
+        assert_eq!(CancelOutcome::Cancelling.name(), "cancelling");
     }
 
     #[test]
@@ -1012,6 +1121,10 @@ mod tests {
             match st.get("state").and_then(Json::as_str) {
                 Some("done") => {
                     assert!(st.get("counters").is_some(), "status carries per-job counters");
+                    assert!(
+                        matches!(st.get("cancelled_running"), Some(Json::Bool(false))),
+                        "an uncancelled job reports cancelled_running:false: {st}"
+                    );
                     return;
                 }
                 Some("failed") => panic!("job {job} failed: {st}"),
@@ -1038,6 +1151,64 @@ mod tests {
         c1.shutdown_daemon().expect("shutdown ack");
         daemon.shutdown();
         assert_eq!(daemon.tracker().jobs_served(), 2);
+    }
+
+    #[test]
+    fn cancelling_a_running_job_stops_it_at_a_checkpoint() {
+        let mut daemon =
+            ServeDaemon::start(NativePool, ServeOptions::default()).expect("daemon starts");
+        let addr = daemon.addr().to_string();
+        let mut client = JobClient::connect(&addr, None).unwrap();
+        // a grid big enough that the cancel lands mid-run
+        let mut slow = spec(Case::A1);
+        slow.scenario.series_len = 500;
+        slow.scenario.r = 256;
+        slow.scenario.ls = vec![100, 200, 300, 400];
+        let j = client.submit(&slow).unwrap();
+        // wait until it is computing, then cancel; on a machine fast
+        // enough to finish the whole grid first, the cancel is simply
+        // too late — that is the documented best-effort contract, and
+        // the remaining assertions would not apply
+        loop {
+            let st = client.status(j).unwrap();
+            match st.get("state").and_then(Json::as_str) {
+                Some("running") => break,
+                Some("done") => {
+                    daemon.shutdown();
+                    return;
+                }
+                _ => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert_eq!(client.cancel(j).unwrap(), "cancelling", "running jobs cancel best-effort");
+        let settled = loop {
+            let st = client.status(j).unwrap();
+            match st.get("state").and_then(Json::as_str) {
+                Some("cancelled") | Some("done") => break st,
+                Some("failed") => panic!("cancelled job failed instead: {st}"),
+                _ => std::thread::sleep(Duration::from_millis(2)),
+            }
+        };
+        if settled.get("state").and_then(Json::as_str) == Some("cancelled") {
+            assert!(
+                matches!(settled.get("cancelled_running"), Some(Json::Bool(true))),
+                "status must mark the running-cancel: {settled}"
+            );
+            let err = client.fetch(j).unwrap_err();
+            assert!(err.to_string().contains("cancelled"), "{err}");
+            // re-cancelling the settled job is an idempotent success
+            assert_eq!(client.cancel(j).unwrap(), "cancelled");
+        }
+        // the daemon still serves after a cancelled job
+        let ok = client.submit(&spec(Case::A1)).unwrap();
+        loop {
+            let st = client.status(ok).unwrap();
+            if st.get("state").and_then(Json::as_str) == Some("done") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        daemon.shutdown();
     }
 
     #[test]

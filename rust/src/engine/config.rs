@@ -129,6 +129,15 @@ pub struct EngineConfig {
     /// does not serialize the critical path). Clamped to the task count.
     /// 0 = no speculation priced.
     pub sim_speculative_tasks: usize,
+    /// Tasks *saved* by partial evaluation to price in the DES (the
+    /// driver's `--partial eps,conf` early termination): each saved task
+    /// is priced at the mean measured task duration and reported as
+    /// `sim_partial_saved_task_s` — its own counter, **subtracted from
+    /// nothing**: it quantifies compute the run did not spend, beside the
+    /// makespan of the tasks it did. The driver sets this from its
+    /// harvest tally (`PoolCounters::partial_saved_tasks`).
+    /// 0 = nothing saved.
+    pub sim_partial_saved_tasks: usize,
     /// Concurrent tenant jobs to price in the DES (the serve daemon's
     /// `--max-concurrent-jobs` admission bound): the measured task log is
     /// treated as one tenant's job and replayed as `n` identical jobs
@@ -171,6 +180,7 @@ impl EngineConfig {
             sim_worker_failures: 0,
             sim_worker_rejoins: 0,
             sim_speculative_tasks: 0,
+            sim_partial_saved_tasks: 0,
             sim_concurrent_jobs: 1,
             wire_pricing: WirePricing::Binary,
             real_threads,
@@ -200,6 +210,11 @@ impl EngineConfig {
 
     pub fn with_sim_speculative_tasks(mut self, n: usize) -> Self {
         self.sim_speculative_tasks = n;
+        self
+    }
+
+    pub fn with_sim_partial_saved_tasks(mut self, n: usize) -> Self {
+        self.sim_partial_saved_tasks = n;
         self
     }
 

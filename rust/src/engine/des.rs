@@ -286,6 +286,22 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         speculative_task_s = durations[durations.len() - k..].iter().sum();
     }
 
+    // Partial-evaluation pricing: the driver's `--partial eps,conf` early
+    // termination skipped `sim_partial_saved_tasks` subsample tasks, none
+    // of which appear in the measured log — each is priced at the mean
+    // duration of the tasks that DID run, the best unbiased stand-in for
+    // work never performed. Compute avoided, so its own counter; nothing
+    // is subtracted from the makespan (the saved tasks were never on it).
+    let mut partial_saved_task_s = 0.0f64;
+    if config.sim_partial_saved_tasks > 0 {
+        let durations: Vec<f64> =
+            tasks_by_job.values().flatten().map(|&(_, d)| d).collect();
+        if !durations.is_empty() {
+            let mean = durations.iter().sum::<f64>() / durations.len() as f64;
+            partial_saved_task_s = config.sim_partial_saved_tasks as f64 * mean;
+        }
+    }
+
     ExecutionReport {
         measured_wall_s: log.wallclock_span(),
         total_task_s: log.total_task_seconds(),
@@ -298,6 +314,7 @@ pub fn simulate(log: &EventLog, config: &EngineConfig) -> ExecutionReport {
         sim_rejoin_ship_s: rejoin_ship_s,
         sim_rejoin_ship_bytes: rejoin_ship_bytes,
         sim_speculative_task_s: speculative_task_s,
+        sim_partial_saved_task_s: partial_saved_task_s,
         // the event log carries no result payload sizes; the driver
         // overrides this with its harvest tally (see `run_engine_case`)
         sim_result_ingress_bytes: 0,
@@ -831,6 +848,39 @@ mod tests {
         let two = simulate(&log, &config(Deploy::Local { cores: 8 }).with_sim_concurrent_jobs(2));
         assert!((one.sim_makespan_s - 2.0).abs() < 1e-9);
         assert!((two.sim_makespan_s - 2.0).abs() < 1e-9, "{}", two.sim_makespan_s);
+    }
+
+    #[test]
+    fn partial_saved_tasks_price_at_the_mean_duration() {
+        // 4 measured tasks of 1s and 3s mean 2s each; 6 saved tasks price
+        // at 12s — and the makespan is untouched (the saved tasks never
+        // ran, so there is nothing to subtract them from)
+        let log = EventLog::default();
+        log.record_job_submit(JobRecord {
+            job_id: 1,
+            name: "j".into(),
+            num_tasks: 4,
+            submit_rel: 0.0,
+            finish_rel: 8.0,
+            broadcast_deps: vec![],
+        });
+        for (p, dur) in [1.0, 3.0, 1.0, 3.0].into_iter().enumerate() {
+            log.record_task(TaskRecord {
+                job_id: 1,
+                partition: p,
+                start_rel: 0.0,
+                duration: dur,
+                attempts: 1,
+            });
+        }
+        let base = simulate(&log, &config(Deploy::SingleThread));
+        assert_eq!(base.sim_partial_saved_task_s, 0.0, "knob off prices nothing");
+        let rep = simulate(
+            &log,
+            &config(Deploy::SingleThread).with_sim_partial_saved_tasks(6),
+        );
+        assert!((rep.sim_partial_saved_task_s - 12.0).abs() < 1e-9);
+        assert_eq!(rep.sim_makespan_s, base.sim_makespan_s, "makespan unchanged");
     }
 
     #[test]

@@ -184,6 +184,13 @@ pub struct ExecutionReport {
     /// real counterparts are `ClusterBackend::speculative_launches` /
     /// `speculative_wins`.
     pub sim_speculative_task_s: f64,
+    /// Seconds of compute the run *avoided* through partial evaluation
+    /// (`EngineConfig::sim_partial_saved_tasks` saved tasks, each priced
+    /// at the mean measured task duration) — the DES price of the
+    /// `--partial eps,conf` early termination. Work not done, so a
+    /// standalone counter beside the makespan; the real counterpart is
+    /// `PoolCounters::partial_saved_tasks`.
+    pub sim_partial_saved_task_s: f64,
     /// Bytes of task results the driver would pull back over the wire —
     /// raw predictions under driver-side reduce, six-number partial sums
     /// under worker-side reduce (`--reduce worker`). Modeled from the
@@ -214,6 +221,7 @@ impl ExecutionReport {
             ("sim_rejoin_ship_s", Json::Num(self.sim_rejoin_ship_s)),
             ("sim_rejoin_ship_bytes", Json::Num(self.sim_rejoin_ship_bytes as f64)),
             ("sim_speculative_task_s", Json::Num(self.sim_speculative_task_s)),
+            ("sim_partial_saved_task_s", Json::Num(self.sim_partial_saved_task_s)),
             ("sim_result_ingress_bytes", Json::Num(self.sim_result_ingress_bytes as f64)),
             ("sim_concurrent_jobs", Json::Num(self.sim_concurrent_jobs as f64)),
             ("topology", Json::Str(self.topology.clone())),

@@ -21,6 +21,7 @@ use parccm::ccm::cluster::{ClusterBackend, ClusterOptions, OnExhausted};
 use parccm::ccm::driver::{skills_to_json, Case, JobSpec, ReduceMode, RunSpec, TablePolicy};
 use parccm::ccm::lifecycle::{parse_workers_at, workers_at_from_env};
 use parccm::ccm::params::{CcmParams, Scenario};
+use parccm::ccm::pipeline::PartialSpec;
 use parccm::ccm::serve::{JobClient, ServeDaemon, ServeOptions, DEFAULT_MAX_CONCURRENT_JOBS};
 use parccm::ccm::transport::{resolve_auth_token, TransportKind};
 use parccm::ccm::result::summarize;
@@ -60,12 +61,16 @@ const SUBCOMMANDS: &[Subcommand] = &[
         about: "Fig. 4: A1-A5 x (Local|Cluster) on the baseline scenario",
         usage: "USAGE: parccm fig4 [--full] [--case A1..A5] [--backend B] \
                 [--table full|trunc] [--shards N] [--reduce driver|worker] \
-                [--dump-skills FILE] [--seed N] [--workers N --cores N]\n\
+                [--partial EPS,CONF] [--dump-skills FILE] [--seed N] \
+                [--workers N --cores N]\n\
                 \n\
                 Runs the paper's five implementation levels and reports the\n\
                 DES makespan for Local and Yarn topologies. --dump-skills\n\
-                writes the canonical skills JSON plus FILE.meta.json (v2\n\
-                sidecar: schema_version + a counters sub-object).",
+                writes the canonical skills JSON plus FILE.meta.json (v3\n\
+                sidecar: schema_version + a counters sub-object; no flat\n\
+                counter keys). --partial stops dispatching a cell's\n\
+                remaining subsamples once its mean-rho CI at confidence\n\
+                CONF is within EPS (unset = exact full-budget run).",
         hidden: false,
         run: cmd_fig4,
     },
@@ -133,12 +138,14 @@ const SUBCOMMANDS: &[Subcommand] = &[
         name: "events",
         about: "run a demo job set, dump the engine event log + DES reports",
         usage: "USAGE: parccm events [--out FILE] [--replicas R] [--sim-failures N] \
-                [--sim-rejoins N] [--sim-speculative N] [--sim-concurrent-jobs N] \
-                [--backend B]\n\
+                [--sim-rejoins N] [--sim-speculative N] [--sim-partial-saved N] \
+                [--sim-concurrent-jobs N] [--backend B]\n\
                 \n\
                 --sim-concurrent-jobs N prices the measured log as N tenant\n\
                 jobs sharing the warm pool (broadcast bytes do not grow; the\n\
-                makespan reflects slot contention).",
+                makespan reflects slot contention). --sim-partial-saved N\n\
+                prices N tasks skipped by --partial early termination at\n\
+                the mean measured task duration.",
         hidden: false,
         run: cmd_events,
     },
@@ -166,7 +173,7 @@ const SUBCOMMANDS: &[Subcommand] = &[
         about: "submit a job to a serve daemon; prints the job id",
         usage: "USAGE: parccm submit --at HOST:PORT [--case A1..A5] [--full] \
                 [--table full|trunc] [--shards N] [--reduce driver|worker] \
-                [--seed N] [--auth-token T]\n\
+                [--partial EPS,CONF] [--seed N] [--auth-token T]\n\
                 \n\
                 Builds the same spec `parccm fig4 --case ...` would run and\n\
                 submits it; prints the assigned job id on stdout. The\n\
@@ -182,7 +189,9 @@ const SUBCOMMANDS: &[Subcommand] = &[
                 \n\
                 Prints the daemon's status reply as JSON: state (queued|\n\
                 running|done|failed|cancelled), the job's live counter\n\
-                slice, and the failure message when failed.",
+                slice (including partial_stops/partial_saved_tasks), the\n\
+                cancelled_running marker, and the failure message when\n\
+                failed.",
         hidden: false,
         run: cmd_status,
     },
@@ -201,12 +210,16 @@ const SUBCOMMANDS: &[Subcommand] = &[
     },
     Subcommand {
         name: "cancel",
-        about: "cancel a still-queued job on a serve daemon (or --shutdown the daemon)",
+        about: "cancel a queued or running job on a serve daemon (or --shutdown the daemon)",
         usage: "USAGE: parccm cancel --at HOST:PORT (--job N | --shutdown) [--auth-token T]\n\
                 \n\
-                Only queued jobs can be cancelled; running or finished\n\
-                jobs are a named error. --shutdown instead asks the\n\
-                daemon to stop accepting jobs and drain.",
+                A queued job cancels immediately (reply state `cancelled`).\n\
+                A running job cancels best-effort (reply `cancelling`): the\n\
+                driver stops at its next partial-evaluation checkpoint and\n\
+                the job settles cancelled with cancelled_running:true in\n\
+                status — unless the run finishes first, which settles done.\n\
+                Finished jobs are a named error. --shutdown instead asks\n\
+                the daemon to stop accepting jobs and drain.",
         hidden: false,
         run: cmd_cancel,
     },
@@ -315,6 +328,11 @@ fn print_help() {
                                 to six partial sums on the worker (v5 wire ops\n\
                                 agg_chunk/merge_sums) — same skills to within\n\
                                 1 ULP, result ingress O(shards) instead of O(rows)\n\
+           --partial EPS,CONF   early-terminating partial CCM: stop dispatching a\n\
+                                grid cell's remaining subsamples once its mean-rho\n\
+                                confidence interval at level CONF has radius <= EPS,\n\
+                                and prune statistically dead (E,tau) slices (unset:\n\
+                                exact full-budget run, bit-identical skills)\n\
            --case A1..A5        fig4: run a single implementation level\n\
            --dump-skills FILE   fig4: write skills as canonical JSON (two runs are\n\
                                 bit-identical iff the files are byte-identical);\n\
@@ -562,6 +580,23 @@ fn table_policy_from(args: &Args) -> TablePolicy {
     }
 }
 
+/// `--partial eps,conf`: early-terminating partial evaluation. Unset is
+/// the exact full-budget run (bit-identical skills); a malformed value is
+/// fatal — a typo must not silently run the full grid or a wrong bound.
+fn partial_from(args: &Args) -> Option<PartialSpec> {
+    let raw = args.get("partial")?;
+    match PartialSpec::parse(raw) {
+        Some(spec) => Some(spec),
+        None => {
+            eprintln!(
+                "[parccm] FATAL: bad --partial '{raw}' (want eps,conf with eps > 0 \
+                 and conf in (0,1), e.g. 0.05,0.95)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Pearson reduction placement for sharded table cases: `--reduce worker`
 /// keeps raw predictions on the workers and ships six partial sums per
 /// (skill, shard) instead; the default ships the rows.
@@ -596,6 +631,7 @@ fn run_case(
         .policy(table_policy_from(args))
         .shards(args.get_usize("shards", 1))
         .reduce(reduce_from(args))
+        .partial(partial_from(args))
         .run(backend)
 }
 
@@ -638,6 +674,7 @@ fn cmd_fig4(args: &Args) -> ExitCode {
             .policy(table_policy_from(args))
             .shards(args.get_usize("shards", 1))
             .reduce(reduce_from(args))
+            .partial(partial_from(args))
             .run_multi(&[local.clone(), cluster.clone()], Arc::clone(&backend));
         all_skills.extend(skills);
         table.push(
@@ -667,22 +704,17 @@ fn cmd_fig4(args: &Args) -> ExitCode {
         // counters (rejoins, repair ships, ...) legitimately differ — the
         // cluster-remote CI job asserts the rejoin counters from here
         let pairs = backend.run_counters().to_pairs();
-        let mut meta_fields: Vec<(&str, Json)> = vec![
+        // sidecar schema v3: every counter lives in the .counters
+        // sub-object and nowhere else (v2's legacy flat mirror of the
+        // counter keys at top level is gone)
+        let meta = Json::obj(vec![
             ("backend", Json::Str(backend.name().to_string())),
             (
                 "counters",
                 Json::obj(pairs.iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect()),
             ),
-            // sidecar schema v2: versioned shape with the counters nested;
-            // readers should branch on schema_version and prefer .counters
-            ("schema_version", Json::Num(2.0)),
-        ];
-        // legacy flat counter keys, kept for one release so pre-v2 sidecar
-        // readers keep working (remove when schema_version goes to 3)
-        for &(k, v) in &pairs {
-            meta_fields.push((k, Json::Num(v as f64)));
-        }
-        let meta = Json::obj(meta_fields);
+            ("schema_version", Json::Num(3.0)),
+        ]);
         let meta_path = format!("{path}.meta.json");
         if let Err(e) = std::fs::write(&meta_path, meta.to_string()) {
             eprintln!("cannot write run metadata {meta_path}: {e}");
@@ -878,6 +910,7 @@ fn cmd_events(args: &Args) -> ExitCode {
             .with_sim_worker_failures(args.get_usize("sim-failures", 0))
             .with_sim_worker_rejoins(args.get_usize("sim-rejoins", 0))
             .with_sim_speculative_tasks(args.get_usize("sim-speculative", 0))
+            .with_sim_partial_saved_tasks(args.get_usize("sim-partial-saved", 0))
             .with_sim_concurrent_jobs(args.get_usize("sim-concurrent-jobs", 1)),
     );
     let problem = parccm::ccm::pipeline::CcmProblem::new(&y, &x, 2, 1, 0.0);
@@ -923,7 +956,7 @@ fn cmd_events(args: &Args) -> ExitCode {
     ] {
         let rep = ctx.report_for(deploy);
         println!(
-            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s  spec {:.4}s  jobs x{}",
+            "  {:<15} makespan {:.4}s  util {:.0}%  ship {:.4}s  repair {:.4}s  rejoin {:.4}s  spec {:.4}s  saved {:.4}s  jobs x{}",
             rep.topology,
             rep.sim_makespan_s,
             rep.sim_utilization * 100.0,
@@ -931,6 +964,7 @@ fn cmd_events(args: &Args) -> ExitCode {
             rep.sim_repair_ship_s,
             rep.sim_rejoin_ship_s,
             rep.sim_speculative_task_s,
+            rep.sim_partial_saved_task_s,
             rep.sim_concurrent_jobs
         );
     }
@@ -1154,6 +1188,7 @@ fn cmd_submit(args: &Args) -> ExitCode {
         policy: table_policy_from(args),
         shards: args.get_usize("shards", 1),
         reduce: reduce_from(args),
+        partial: partial_from(args),
     };
     let mut client = match connect_serve_client(args) {
         Ok(c) => c,

@@ -140,6 +140,7 @@ fn overlapping_jobs_survive_worker_kill_and_match_batch_dumps() {
         policy: TablePolicy::TruncatedAuto,
         shards: 3,
         reduce: Default::default(),
+        partial: None,
     };
     let spec_b = JobSpec {
         case: Case::A4,
@@ -147,6 +148,7 @@ fn overlapping_jobs_survive_worker_kill_and_match_batch_dumps() {
         policy: TablePolicy::Full,
         shards: 1,
         reduce: Default::default(),
+        partial: None,
     };
     let ref_a = batch_reference(&spec_a);
     let ref_b = batch_reference(&spec_b);
@@ -246,6 +248,7 @@ fn concurrent_identical_jobs_share_the_resident_broadcast() {
         policy: TablePolicy::TruncatedAuto,
         shards: 1,
         reduce: Default::default(),
+        partial: None,
     };
     let reference = batch_reference(&spec);
 
